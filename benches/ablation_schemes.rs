@@ -1,0 +1,111 @@
+//! Ablation — the design choices behind the block-wise reuse switch:
+//! naive fixed-row (weights ×H), proposed all-row (weights once),
+//! all-frame, and the optimized block-wise switch, across the zoo; plus
+//! the ASIC-style unified-buffer instantiation (§V-B).
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::baselines::fixed_reuse::{fixed_policy, naive_row_baseline};
+use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::isa::ReuseMode;
+use shortcutfusion::optimizer::Optimizer;
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let mut t = Table::new(
+        "ablation — latency (ms) per reuse policy",
+        &["model", "naive row (wxH)", "all-row", "all-frame", "block-wise opt", "opt vs naive"],
+    );
+    for name in ["vgg16-conv", "yolov2", "yolov3", "resnet50", "resnet152", "efficientnet-b1", "mobilenetv3-large"] {
+        let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+        let gg = analyze(&g);
+        let naive = naive_row_baseline(&gg, &cfg);
+        let row = fixed_policy(&gg, &cfg, ReuseMode::Row);
+        let frame = fixed_policy(&gg, &cfg, ReuseMode::Frame);
+        let opt = Optimizer::new(&gg, &cfg);
+        let best = opt.optimize();
+        t.row(&[
+            name.into(),
+            format!("{:.2}", naive.latency_ms),
+            format!("{:.2}", row.timing.latency_ms),
+            format!("{:.2}", frame.timing.latency_ms),
+            format!("{:.2}{}", best.latency_ms, if best.feasible { "" } else { "*" }),
+            format!("x{:.2}", naive.latency_ms / best.latency_ms),
+        ]);
+    }
+    t.print();
+    println!("(* = infeasible under the SRAM budget; all-frame ignores feasibility)");
+
+    // DRAM ablation
+    let mut d = Table::new(
+        "ablation — total DRAM (MB) per reuse policy",
+        &["model", "all-row", "all-frame", "block-wise opt", "baseline-once"],
+    );
+    for name in ["yolov2", "resnet50", "efficientnet-b1"] {
+        let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+        let gg = analyze(&g);
+        let row = fixed_policy(&gg, &cfg, ReuseMode::Row);
+        let frame = fixed_policy(&gg, &cfg, ReuseMode::Frame);
+        let opt = Optimizer::new(&gg, &cfg);
+        let best = opt.optimize();
+        d.row(&[
+            name.into(),
+            format!("{:.1}", row.dram.total as f64 / 1e6),
+            format!("{:.1}", frame.dram.total as f64 / 1e6),
+            format!("{:.1}", best.dram.total as f64 / 1e6),
+            format!("{:.1}", best.dram.baseline_once as f64 / 1e6),
+        ]);
+    }
+    d.print();
+
+    // ASIC unified-buffer instantiation (§V-B)
+    let asic = AccelConfig::from_toml_file(std::path::Path::new("configs/asic_unified.toml"))
+        .unwrap_or_else(|_| {
+            let mut c = AccelConfig::kcu1500_int8();
+            c.name = "ASIC-unified".into();
+            c.freq_mhz = 800.0;
+            c.sram_budget = 24_000_000;
+            c.bram18k_total = 16_000;
+            c.dram_gbps = 25.6;
+            c
+        });
+    let mut a = Table::new(
+        "ASIC unified-buffer instantiation (§V-B) — same flow, bigger budget",
+        &["model", "FPGA latency ms", "ASIC latency ms", "FPGA DRAM MB", "ASIC DRAM MB"],
+    );
+    for name in ["resnet152", "efficientnet-b1", "yolov3"] {
+        let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+        let gg = analyze(&g);
+        let fpga = Optimizer::new(&gg, &cfg).optimize();
+        let asic_best = Optimizer::new(&gg, &asic).optimize();
+        a.row(&[
+            name.into(),
+            format!("{:.2}", fpga.latency_ms),
+            format!("{:.2}", asic_best.latency_ms),
+            format!("{:.1}", fpga.dram.total as f64 / 1e6),
+            format!("{:.1}", asic_best.dram.total as f64 / 1e6),
+        ]);
+    }
+    a.print();
+
+    // multi-cut-point extension: EfficientDet-D0 (BiFPN x3 -> ~7 cuts)
+    let g = zoo::efficientdet_d0(512);
+    let gg = analyze(&g);
+    let opt = Optimizer::new(&gg, &cfg);
+    let best = opt.optimize();
+    println!(
+        "\nEfficientDet-D0 (BiFPN x3): {} segments (paper rule 2r+1 = 7), cuts {:?}, \
+         latency {:.2} ms, feasible {}",
+        opt.segs.len(),
+        best.cuts.cuts,
+        best.latency_ms,
+        best.feasible
+    );
+
+    let g2 = zoo::resnet50(256);
+    let gg2 = analyze(&g2);
+    let opt2 = Optimizer::new(&gg2, &cfg);
+    let timing = time(5, || opt2.optimize());
+    report_timing("ablation optimize (resnet50@256)", &timing);
+}

@@ -1,0 +1,65 @@
+//! Fig. 16 — YOLOv2 cut-point sweep: buffer size, DRAM access and
+//! latency vs cut position, plus the headline claims: 2.17× speed-up and
+//! 5.73× smaller buffer than the fixed row-based baseline, minimum SRAM
+//! 0.76 MB.
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::baselines::fixed_reuse::naive_row_baseline;
+use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::optimizer::Optimizer;
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let gg = analyze(&zoo::yolov2(416));
+    let opt = Optimizer::new(&gg, &cfg);
+
+    // --- Fig 16(a)/(b): the sweep series --------------------------------
+    let sweep = opt.sweep_first_segment();
+    let mut t = Table::new(
+        "Fig 16 — YOLOv2@416 cut-point sweep (row-reuse before cut, frame-reuse after)",
+        &["cut", "SRAM MB", "BRAM18K", "DRAM MB", "FM MB", "latency ms"],
+    );
+    for p in &sweep {
+        t.row(&[
+            p.cut.to_string(),
+            format!("{:.3}", p.sram_mb),
+            p.bram18k.to_string(),
+            format!("{:.2}", p.dram_total_mb),
+            format!("{:.2}", p.dram_fm_mb),
+            format!("{:.3}", p.latency_ms),
+        ]);
+    }
+    t.print();
+
+    // --- headline numbers -------------------------------------------------
+    let best = opt.optimize();
+    let minbuf = opt.min_buffer();
+    let baseline = naive_row_baseline(&gg, &cfg);
+
+    let mut h = Table::new("Fig 16(c) — headline claims", &["metric", "paper", "measured"]);
+    h.row(&[
+        "min required SRAM (MB)".into(),
+        "0.762".into(),
+        format!("{:.3}", minbuf.sram.total as f64 / 1e6),
+    ]);
+    h.row(&[
+        "speed-up vs fixed row-based".into(),
+        "2.17x".into(),
+        format!("{:.2}x", baseline.latency_ms / best.latency_ms),
+    ]);
+    h.row(&[
+        "buffer reduction vs all-frame".into(),
+        "5.73x".into(),
+        format!(
+            "{:.2}x",
+            sweep.first().unwrap().sram_mb / (minbuf.sram.total as f64 / 1e6)
+        ),
+    ]);
+    h.print();
+
+    // --- harness timing ----------------------------------------------------
+    let timing = time(5, || opt.optimize());
+    report_timing("fig16_yolov2 full optimize", &timing);
+}

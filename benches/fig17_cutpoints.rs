@@ -1,0 +1,48 @@
+//! Fig. 17 — on/off-chip access and latency vs cut-point position for
+//! YOLOv3, ResNet152 and EfficientNet-B1 (weights always read once; the
+//! frame-based side wins latency whenever buffers fit).
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::optimizer::Optimizer;
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+    for (name, input) in [("yolov3", 416), ("resnet152", 256), ("efficientnet-b1", 256)] {
+        let gg = analyze(&zoo::by_name(name, input).unwrap());
+        let opt = Optimizer::new(&gg, &cfg);
+        let sweep = opt.sweep_first_segment();
+        let mut t = Table::new(
+            &format!("Fig 17 — {name}@{input}: cut-point sweep ({} segments)", opt.segs.len()),
+            &["cut", "SRAM MB", "DRAM MB", "FM MB", "latency ms", "feasible"],
+        );
+        // subsample long sweeps for readability
+        let step = (sweep.len() / 24).max(1);
+        for p in sweep.iter().step_by(step) {
+            t.row(&[
+                p.cut.to_string(),
+                format!("{:.3}", p.sram_mb),
+                format!("{:.2}", p.dram_total_mb),
+                format!("{:.2}", p.dram_fm_mb),
+                format!("{:.3}", p.latency_ms),
+                p.feasible.to_string(),
+            ]);
+        }
+        t.print();
+
+        // paper's qualitative claim: "the cut-point at the beginning
+        // achieves a better latency at the cost of a larger buffer size"
+        let first = sweep.first().unwrap();
+        let last = sweep.last().unwrap();
+        println!(
+            "shape check {name}: frame-heavy latency {:.2} ms vs row-heavy {:.2} ms; \
+             frame-heavy SRAM {:.2} MB vs row-heavy {:.2} MB",
+            first.latency_ms, last.latency_ms, first.sram_mb, last.sram_mb
+        );
+
+        let timing = time(3, || opt.sweep_first_segment());
+        report_timing(&format!("fig17 sweep {name}"), &timing);
+    }
+}

@@ -1,0 +1,89 @@
+//! Figs. 2 + 18 — EfficientNet-B1 vs modern GPUs (batch 1): latency per
+//! input size on Keras (Fig 2) and PyTorch (Fig 18a), and power
+//! efficiency (Fig 18b). GPUs are the analytical model of DESIGN.md §2.
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::baselines::gpu_model::{
+    estimate, estimate_keras, RTX_2080_TI, RTX_3090, TITAN_XP,
+};
+use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let sizes = [224usize, 256, 512, 768];
+
+    // ---- Fig 2: Keras latency ------------------------------------------
+    let mut f2 = Table::new(
+        "Fig 2 — EfficientNet-B1 Keras/TF latency (ms) per input size [analytical GPUs]",
+        &["input", "Titan Xp", "RTX 2080 Ti"],
+    );
+    for &s in &sizes {
+        let gg = analyze(&zoo::efficientnet_b1(s));
+        f2.row(&[
+            s.to_string(),
+            format!("{:.1}", estimate_keras(&gg, &TITAN_XP).latency_ms),
+            format!("{:.1}", estimate_keras(&gg, &RTX_2080_TI).latency_ms),
+        ]);
+    }
+    f2.print();
+
+    // ---- Fig 18a: PyTorch latency vs the proposed accelerator -----------
+    let mut f18 = Table::new(
+        "Fig 18a — EfficientNet-B1 PyTorch latency (ms) vs proposed",
+        &["input", "Titan Xp", "RTX 2080 Ti", "RTX 3090", "proposed", "2080Ti/ours"],
+    );
+    let mut speedup_256 = 0.0;
+    for &s in &sizes {
+        let graph = zoo::efficientnet_b1(s);
+        let gg = analyze(&graph);
+        let ours = compile_model(&graph, &cfg);
+        let g2080 = estimate(&gg, &RTX_2080_TI);
+        let ratio = g2080.latency_ms / ours.latency_ms();
+        if s == 256 {
+            speedup_256 = ratio;
+        }
+        f18.row(&[
+            s.to_string(),
+            format!("{:.1}", estimate(&gg, &TITAN_XP).latency_ms),
+            format!("{:.1}", g2080.latency_ms),
+            format!("{:.1}", estimate(&gg, &RTX_3090).latency_ms),
+            format!("{:.2}", ours.latency_ms()),
+            format!("x{:.2}", ratio),
+        ]);
+    }
+    f18.print();
+    println!(
+        "\npaper: proposed is 2.8x faster than RTX 2080 Ti at 256 (measured x{:.2}); \
+         GPUs overtake at larger inputs",
+        speedup_256
+    );
+
+    // ---- Fig 18b: power efficiency ---------------------------------------
+    let mut fp = Table::new(
+        "Fig 18b — power and efficiency (EfficientNet-B1)",
+        &["input", "2080Ti W", "2080Ti GOPS/W", "proposed W", "proposed GOPS/W", "eff ratio"],
+    );
+    for &s in &sizes[1..] {
+        let graph = zoo::efficientnet_b1(s);
+        let gg = analyze(&graph);
+        let ours = compile_model(&graph, &cfg);
+        let gpu = estimate(&gg, &RTX_2080_TI);
+        fp.row(&[
+            s.to_string(),
+            format!("{:.0}", gpu.power_w),
+            format!("{:.2}", gpu.gops_per_w),
+            format!("{:.1}", ours.power.total_w),
+            format!("{:.1}", ours.power.gops_per_w),
+            format!("x{:.1}", ours.power.gops_per_w / gpu.gops_per_w),
+        ]);
+    }
+    fp.print();
+    println!("\npaper: power efficiency 9.9x / 2.9x / 2.2x better at 256 / 512 / 768");
+
+    let gg = analyze(&zoo::efficientnet_b1(512));
+    let timing = time(10, || estimate(&gg, &RTX_2080_TI));
+    report_timing("fig18 gpu model", &timing);
+}

@@ -1,0 +1,52 @@
+//! §Perf harness: the three L3 hot paths — funcsim convolution, the
+//! optimizer's per-candidate evaluation, and the multi-segment descent.
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::bench::{report_timing, time};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::funcsim::{Executor, Params, Tensor};
+use shortcutfusion::graph::Shape;
+use shortcutfusion::optimizer::Optimizer;
+use shortcutfusion::testutil::Rng;
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+
+    // 1. funcsim: efficientnet-b0@64 with random params
+    let gg = analyze(&zoo::by_name("efficientnet-b0", 64).unwrap());
+    let params = Params::random(&gg, 7);
+    let mut rng = Rng::from_seed(8);
+    let input = Tensor::from_vec(Shape::new(64, 64, 3), rng.i8_vec(64 * 64 * 3));
+    let ex = Executor::new(&gg, &params);
+    let t = time(5, || ex.run(&input).unwrap());
+    report_timing("funcsim efficientnet-b0@64", &t);
+
+    // 2. funcsim: resnet18@64
+    let gg2 = analyze(&zoo::by_name("resnet18", 64).unwrap());
+    let params2 = Params::random(&gg2, 7);
+    let input2 = Tensor::from_vec(Shape::new(64, 64, 3), rng.i8_vec(64 * 64 * 3));
+    let ex2 = Executor::new(&gg2, &params2);
+    let t2 = time(5, || ex2.run(&input2).unwrap());
+    report_timing("funcsim resnet18@64", &t2);
+
+    // 3. optimizer single evaluation (resnet152)
+    let gg3 = analyze(&zoo::resnet152(256));
+    let opt3 = Optimizer::new(&gg3, &cfg);
+    let t3 = time(20, || opt3.evaluate(&[10]));
+    report_timing("optimizer evaluate resnet152", &t3);
+
+    // 4. full descent on efficientdet-d0 (8 segments)
+    let gg4 = analyze(&zoo::efficientdet_d0(512));
+    let opt4 = Optimizer::new(&gg4, &cfg);
+    println!("efficientdet space = {:.2e}", opt4.space());
+    let t4 = time(3, || opt4.optimize());
+    report_timing("optimizer descent efficientdet-d0", &t4);
+
+    // 5. full exhaustive on yolov3
+    let gg5 = analyze(&zoo::yolov3(416));
+    let opt5 = Optimizer::new(&gg5, &cfg);
+    println!("yolov3 space = {:.2e}", opt5.space());
+    let t5 = time(3, || opt5.optimize());
+    report_timing("optimizer exhaustive yolov3", &t5);
+}

@@ -1,0 +1,82 @@
+//! Table II — ResNet152 (16-bit, 224×224) vs ShortcutMining (HPCA'19):
+//! latency / GOPS / DSP efficiency / off-chip feature-map traffic under a
+//! ShortcutMining-class BRAM budget.
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::baselines::shortcut_mining::{
+    shortcut_mining_fm_traffic, shortcut_mining_weight_traffic,
+};
+use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::table2_int16();
+    let graph = zoo::resnet152(224);
+    let gg = analyze(&graph);
+    let r = compile_model(&graph, &cfg);
+
+    let sm_fm = shortcut_mining_fm_traffic(&gg, &cfg) as f64 / 1e6;
+    let sm_w = shortcut_mining_weight_traffic(&gg, &cfg) as f64 / 1e6;
+
+    let mut t = Table::new(
+        "Table II — ResNet152@224, 16-bit, ShortcutMining-class BRAM budget",
+        &["metric", "HPCA'19 [8] (paper)", "proposed (paper)", "proposed (measured)"],
+    );
+    t.row(&[
+        "CNN size (GOP)".into(),
+        "22.63".into(),
+        "23.86".into(),
+        format!("{:.2}", graph.total_gop()),
+    ]);
+    t.row(&[
+        "weights (MB)".into(),
+        "112.6".into(),
+        "112.6".into(),
+        format!("{:.1}", graph.total_weight_bytes(cfg.qw as u64) as f64 / 1e6),
+    ]);
+    t.row(&[
+        "latency (ms)".into(),
+        "35.24".into(),
+        "39.27".into(),
+        format!("{:.2}", r.latency_ms()),
+    ]);
+    t.row(&[
+        "throughput (GOPS)".into(),
+        "608.3".into(),
+        "607.5".into(),
+        format!("{:.1}", r.gops()),
+    ]);
+    t.row(&[
+        "DSP efficiency (%)".into(),
+        "72.4".into(),
+        "71.1".into(),
+        format!("{:.1}", r.mac_efficiency_pct()),
+    ]);
+    t.row(&[
+        "weight load".into(),
+        "multiple times".into(),
+        "once".into(),
+        "once (by construction)".into(),
+    ]);
+    t.row(&[
+        "off-chip FMs (MB)".into(),
+        "62.93".into(),
+        "11.97".into(),
+        format!("{:.2}", r.offchip_fm_mb()),
+    ]);
+    t.print();
+
+    let ours_fm = r.offchip_fm_mb();
+    println!(
+        "\nabstract claim: FM traffic reduction vs ShortcutMining = {:.2}x (paper 5.27x; \
+         SM modelled at {:.1} MB FM + {:.1} MB weights)",
+        sm_fm / ours_fm,
+        sm_fm,
+        sm_w
+    );
+
+    let timing = time(3, || compile_model(&graph, &cfg));
+    report_timing("table2 full pipeline (resnet152@224 int16)", &timing);
+}

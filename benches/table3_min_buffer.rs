@@ -1,0 +1,48 @@
+//! Table III — minimum required buffer size per CNN to meet the
+//! eq.-(10) DRAM-access constraints (weights once, feature maps ≤ once).
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::optimizer::Optimizer;
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+    // (model, input, paper MB); ResNet row lists 50/152 at one figure.
+    let rows: &[(&str, usize, f64)] = &[
+        ("yolov2", 416, 0.762),
+        ("vgg16-conv", 224, 0.712),
+        ("yolov3", 416, 1.682),
+        ("retinanet", 512, 2.392),
+        ("resnet50", 224, 1.039),
+        ("resnet152", 224, 1.039),
+        ("efficientnet-b1", 256, 0.43),
+    ];
+    let mut t = Table::new(
+        "Table III — minimum buffer size meeting the DRAM constraints",
+        &["model", "input", "layers", "paper MB", "measured MB", "ratio"],
+    );
+    for &(name, input, paper) in rows {
+        let graph = zoo::by_name(name, input).unwrap();
+        let gg = analyze(&graph);
+        let opt = Optimizer::new(&gg, &cfg);
+        let e = opt.min_buffer();
+        let mb = e.sram.total as f64 / 1e6;
+        t.row(&[
+            name.into(),
+            input.to_string(),
+            gg.graph.nodes.len().to_string(),
+            format!("{paper:.3}"),
+            format!("{mb:.3}"),
+            format!("x{:.2}", mb / paper),
+        ]);
+    }
+    t.print();
+
+    let graph = zoo::efficientnet_b1(256);
+    let gg = analyze(&graph);
+    let opt = Optimizer::new(&gg, &cfg);
+    let timing = time(3, || opt.min_buffer());
+    report_timing("table3 min-buffer search (efficientnet-b1)", &timing);
+}

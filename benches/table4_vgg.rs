@@ -1,0 +1,64 @@
+//! Table IV — buffer size vs DRAM access on VGG-CONV (8-bit):
+//! OLAccel [38] and SmartShuttle [12] vs the proposed adaptive switch.
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::baselines::olaccel::OLACCEL_VGG;
+use shortcutfusion::baselines::smartshuttle_dram;
+use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::optimizer::Optimizer;
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let graph = zoo::vgg16_conv(224);
+    let gg = analyze(&graph);
+
+    // SmartShuttle at its published 0.75 MB buffer.
+    let ss = smartshuttle_dram(&gg, &cfg, 750_000);
+
+    // Proposed: minimum-buffer policy (inputs/outputs once).
+    let opt = Optimizer::new(&gg, &cfg);
+    let min = opt.min_buffer();
+
+    let mut t = Table::new(
+        "Table IV — VGG-CONV buffer size vs DRAM access",
+        &["design", "precision", "SRAM MB (paper)", "SRAM MB (meas)", "DRAM MB (paper)", "DRAM MB (meas)"],
+    );
+    t.row(&[
+        "OLAccel [38]".into(),
+        OLACCEL_VGG.precision.into(),
+        format!("{:.2}", OLACCEL_VGG.sram_mb),
+        "- (literature)".into(),
+        format!("{:.1}", OLACCEL_VGG.dram_mb),
+        "- (literature)".into(),
+    ]);
+    t.row(&[
+        "SmartShuttle [12]".into(),
+        "8-bit".into(),
+        "0.75".into(),
+        "0.75 (given)".into(),
+        "58.1".into(),
+        format!("{:.1}", ss.dram_bytes as f64 / 1e6),
+    ]);
+    t.row(&[
+        "proposed".into(),
+        "8-bit".into(),
+        "0.712".into(),
+        format!("{:.3}", min.sram.total as f64 / 1e6),
+        "42.8".into(),
+        format!("{:.1}", min.dram.total as f64 / 1e6),
+    ]);
+    t.print();
+
+    println!(
+        "\nclaims: DRAM reduction vs SmartShuttle = {:.2}x (paper 1.36x); \
+         SmartShuttle split {} psum-oriented / {} weight-oriented layers",
+        ss.dram_bytes as f64 / min.dram.total as f64,
+        ss.psum_layers,
+        ss.weight_layers
+    );
+
+    let timing = time(5, || smartshuttle_dram(&gg, &cfg, 750_000));
+    report_timing("table4 smartshuttle model", &timing);
+}

@@ -1,0 +1,58 @@
+//! Table VI — end-to-end FPGA frameworks on ResNet50 inference:
+//! ML-Suite / FPL'19 / Cloud-DNN (published numbers) vs the proposed
+//! flexible-reuse design.
+
+use shortcutfusion::baselines::frameworks::TABLE6_FRAMEWORKS;
+use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let graph = zoo::resnet50(256);
+    let r = compile_model(&graph, &cfg);
+
+    let mut t = Table::new(
+        "Table VI — end-to-end frameworks, ResNet50 inference",
+        &["framework", "platform", "input", "latency ms", "GOPS", "SRAM MB", "DSP eff %", "flex reuse", "shortcut HW"],
+    );
+    for f in &TABLE6_FRAMEWORKS {
+        t.row(&[
+            f.name.into(),
+            f.platform.into(),
+            f.input.to_string(),
+            format!("{:.2}", f.latency_ms),
+            format!("{:.0}", f.gops),
+            format!("{:.1}", f.sram_mb),
+            format!("{:.2}", f.dsp_efficiency_pct),
+            f.flexible_reuse.to_string(),
+            f.shortcut_fusion_hw.to_string(),
+        ]);
+    }
+    t.row(&[
+        "proposed (measured)".into(),
+        "KCU1500 (20nm, simulated)".into(),
+        "256".into(),
+        format!("{:.2}", r.latency_ms()),
+        format!("{:.0}", r.gops()),
+        format!("{:.1}", r.sram_mb()),
+        format!("{:.2}", r.mac_efficiency_pct()),
+        "true".into(),
+        "true".into(),
+    ]);
+    t.print();
+
+    let cloud = &TABLE6_FRAMEWORKS[2];
+    let mls = &TABLE6_FRAMEWORKS[0];
+    println!(
+        "\nclaims: SRAM vs Cloud-DNN {:.1}x less (paper 7.4x); DSP efficiency vs ML-Suite \
+         {:.1}x higher (paper 2.4x); SRAM vs ML-Suite {:.1}x less (paper 6.0x)",
+        cloud.sram_mb / r.sram_mb(),
+        r.mac_efficiency_pct() / mls.dsp_efficiency_pct,
+        mls.sram_mb / r.sram_mb()
+    );
+
+    let timing = time(3, || compile_model(&graph, &cfg));
+    report_timing("table6 pipeline (resnet50@256)", &timing);
+}

@@ -1,0 +1,52 @@
+//! Table VII — EfficientNet-B1 scalability across 256/512/768 inputs:
+//! GOPS, DSP efficiency, off-chip traffic, reduction, power, GOPS/W.
+
+use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::zoo;
+
+struct PaperRow {
+    input: usize,
+    gops: f64,
+    eff_pct: f64,
+    offchip_fm_mb: f64,
+    total_once_mb: f64,
+    reduction_pct: f64,
+    power_w: f64,
+    gops_per_w: f64,
+}
+
+const PAPER: &[PaperRow] = &[
+    PaperRow { input: 256, gops: 317.1, eff_pct: 19.37, offchip_fm_mb: 0.19, total_once_mb: 60.7, reduction_pct: 84.81, power_w: 21.09, gops_per_w: 15.0 },
+    PaperRow { input: 512, gops: 267.4, eff_pct: 16.3, offchip_fm_mb: 144.0, total_once_mb: 216.0, reduction_pct: 29.2, power_w: 23.76, gops_per_w: 11.3 },
+    PaperRow { input: 768, gops: 274.4, eff_pct: 16.75, offchip_fm_mb: 344.0, total_once_mb: 475.0, reduction_pct: 27.6, power_w: 26.71, gops_per_w: 10.3 },
+];
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let mut t = Table::new(
+        "Table VII — EfficientNet-B1 scalability (paper -> measured)",
+        &["input", "GOPS", "MAC eff %", "off-chip FM MB", "baseline MB", "reduction %", "power W", "GOPS/W"],
+    );
+    for p in PAPER {
+        let graph = zoo::efficientnet_b1(p.input);
+        let r = compile_model(&graph, &cfg);
+        t.row(&[
+            p.input.to_string(),
+            format!("{:.0} -> {:.0}", p.gops, r.gops()),
+            format!("{:.1} -> {:.1}", p.eff_pct, r.mac_efficiency_pct()),
+            format!("{:.1} -> {:.1}", p.offchip_fm_mb, r.offchip_fm_mb()),
+            format!("{:.0} -> {:.0}", p.total_once_mb, r.baseline_once_mb()),
+            format!("{:.1} -> {:.1}", p.reduction_pct, r.reduction_pct()),
+            format!("{:.1} -> {:.1}", p.power_w, r.power.total_w),
+            format!("{:.1} -> {:.1}", p.gops_per_w, r.power.gops_per_w),
+        ]);
+    }
+    t.print();
+    println!("\nweights read from DRAM exactly once at every resolution (eq. 10 constraint)");
+
+    let graph = zoo::efficientnet_b1(512);
+    let timing = time(3, || compile_model(&graph, &cfg));
+    report_timing("table7 pipeline (efficientnet-b1@512)", &timing);
+}

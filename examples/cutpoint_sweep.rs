@@ -1,0 +1,81 @@
+//! Domain example: design-space exploration for a new FPGA target.
+//!
+//! The paper's §IV-B: "If different FPGA is selected, we can decide the
+//! parallelisms (i.e., MAC array size) of the accelerator and the
+//! switching points of the reuse schemes based on the optimization."
+//! This driver sweeps cut-points for one CNN across *three* accelerator
+//! configurations (small / KCU1500 / large) and reports how the optimal
+//! cut and the feasible region move with the SRAM budget.
+//!
+//! ```text
+//! cargo run --release --example cutpoint_sweep [model] [input]
+//! ```
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::bench::Table;
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::optimizer::Optimizer;
+use shortcutfusion::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("yolov3");
+    let input: usize = args
+        .get(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(|| zoo::default_input(model));
+    let graph = zoo::by_name(model, input)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+    let gg = analyze(&graph);
+
+    // three hypothetical targets
+    let mut small = AccelConfig::kcu1500_int8();
+    small.name = "small-FPGA".into();
+    small.bram18k_total = 1500;
+    small.sram_budget = 2_500_000;
+    let kcu = AccelConfig::kcu1500_int8();
+    let mut large = AccelConfig::kcu1500_int8();
+    large.name = "large-FPGA".into();
+    large.bram18k_total = 6800;
+    large.sram_budget = 14_000_000;
+
+    let mut t = Table::new(
+        &format!("{model}@{input}: optimum across accelerator targets"),
+        &["target", "SRAM budget MB", "cuts", "latency ms", "DRAM MB", "SRAM MB", "feasible"],
+    );
+    for cfg in [&small, &kcu, &large] {
+        let opt = Optimizer::new(&gg, cfg);
+        let best = opt.optimize();
+        t.row(&[
+            cfg.name.clone(),
+            format!("{:.1}", cfg.sram_budget as f64 / 1e6),
+            format!("{:?}", best.cuts.cuts),
+            format!("{:.3}", best.latency_ms),
+            format!("{:.2}", best.dram.total as f64 / 1e6),
+            format!("{:.3}", best.sram.total as f64 / 1e6),
+            best.feasible.to_string(),
+        ]);
+    }
+    t.print();
+
+    // detailed sweep on the main target
+    let opt = Optimizer::new(&gg, &kcu);
+    let mut s = Table::new(
+        &format!("{model}@{input}: first-segment sweep on {}", kcu.name),
+        &["cut", "SRAM MB", "DRAM MB", "latency ms", "feasible"],
+    );
+    let sweep = opt.sweep_first_segment();
+    let step = (sweep.len() / 20).max(1);
+    for p in sweep.iter().step_by(step) {
+        s.row(&[
+            p.cut.to_string(),
+            format!("{:.3}", p.sram_mb),
+            format!("{:.2}", p.dram_total_mb),
+            format!("{:.3}", p.latency_ms),
+            p.feasible.to_string(),
+        ]);
+    }
+    s.print();
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Quickstart: compile one CNN end-to-end and print the full report.
+//!
+//! ```text
+//! cargo run --release --example quickstart [model] [input]
+//! ```
+//! Walks the whole Fig.-4 pipeline — parse/build → analyzer fusion →
+//! reuse-aware cut-point optimization → static 3-buffer allocation →
+//! 11-word instruction stream → cycle-accurate timing simulation →
+//! power estimate — and shows the per-stage artifacts.
+
+use shortcutfusion::bench::Table;
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::isa::ReuseMode;
+use shortcutfusion::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("resnet50");
+    let input: usize = args
+        .get(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(|| zoo::default_input(model));
+
+    let graph = zoo::by_name(model, input)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}; try one of {:?}", zoo::MODEL_NAMES))?;
+    let cfg = AccelConfig::kcu1500_int8();
+
+    println!("ShortcutFusion quickstart — {model}@{input} on {}", cfg.name);
+    println!(
+        "graph: {} nodes, {} conv layers, {:.2} GOP, {:.2} M params",
+        graph.nodes.len(),
+        graph.conv_layer_count(),
+        graph.total_gop(),
+        graph.total_weight_bytes(1) as f64 / 1e6
+    );
+
+    let r = compile_model(&graph, &cfg);
+    println!(
+        "analyzer: {} groups ({} with fused shortcut, {} with fused SE squeeze)",
+        r.grouped.groups.len(),
+        r.grouped.groups.iter().filter(|g| g.shortcut_of.is_some()).count(),
+        r.grouped.groups.iter().filter(|g| g.se_squeeze).count(),
+    );
+    println!(
+        "optimizer: cuts {:?} -> {} row-reuse / {} frame-reuse groups ({})",
+        r.evaluation.cuts.cuts,
+        r.row_groups,
+        r.frame_groups,
+        if r.evaluation.feasible { "feasible" } else { "INFEASIBLE" }
+    );
+
+    let mut t = Table::new("compile report", &["metric", "value"]);
+    t.row(&["latency".into(), format!("{:.3} ms ({:.1} fps)", r.latency_ms(), r.fps())]);
+    t.row(&["throughput".into(), format!("{:.1} GOPS", r.gops())]);
+    t.row(&["MAC efficiency".into(), format!("{:.1} %", r.mac_efficiency_pct())]);
+    t.row(&["SRAM".into(), format!("{:.3} MB / {} BRAM18K", r.sram_mb(), r.bram18k())]);
+    t.row(&["DRAM total".into(), format!("{:.2} MB", r.offchip_total_mb())]);
+    t.row(&["DRAM feature maps".into(), format!("{:.2} MB", r.offchip_fm_mb())]);
+    t.row(&["baseline (once)".into(), format!("{:.2} MB", r.baseline_once_mb())]);
+    t.row(&["off-chip reduction".into(), format!("{:.1} %", r.reduction_pct())]);
+    t.row(&["power".into(), format!("{:.1} W ({:.1} GOPS/W)", r.power.total_w, r.power.gops_per_w)]);
+    t.row(&["instructions".into(), format!("{} x 11 words", r.stream.len())]);
+    t.print();
+
+    // first few instructions, decoded
+    println!("\nfirst instructions:");
+    for ins in r.stream.instrs.iter().take(6) {
+        println!(
+            "  g{:>3} {:?} {}x{}x{} -> {}x{}x{} k{} s{} {} {}",
+            ins.group,
+            ins.opcode,
+            ins.in_h,
+            ins.in_w,
+            ins.in_c,
+            ins.out_h,
+            ins.out_w,
+            ins.out_c,
+            ins.k,
+            ins.stride,
+            if ins.reuse == ReuseMode::Row { "row" } else { "frame" },
+            if ins.fused_eltwise { "+shortcut" } else { "" },
+        );
+    }
+    Ok(())
+}

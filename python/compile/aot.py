@@ -1,0 +1,103 @@
+"""AOT export: lower the golden model to HLO *text* + parameter JSON.
+
+Run once at build time (``make artifacts``); python never executes at
+inference time. The interchange format is HLO text, NOT a serialized
+``HloModuleProto`` — jax ≥ 0.5 emits protos with 64-bit instruction ids
+that the deployment XLA (xla_extension 0.5.1) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (in ``artifacts/``):
+  tinynet.hlo.txt        — golden TinyNet-SE (Pallas kernel path)
+  tinynet_params.json    — quantized weights/biases/shifts/LUTs
+  tinynet_input.json     — deterministic test input (int8)
+  tinynet_expected.json  — logits computed at export time (sanity anchor)
+  matmul64.hlo.txt       — bare Ti×To Pallas matmul (runtime smoke test)
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul_int8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default elides big
+    # weight literals as `constant({...})`, which the deployment XLA's
+    # text parser silently reads back as zeros/garbage.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_params_json(params) -> str:
+    """Serialize parameters with flattening that matches
+    ``funcsim::params`` (HWIO / IO row-major)."""
+    groups = {}
+    for name, p in params.items():
+        g = {}
+        if p.get("w") is not None:
+            g["weights"] = [int(v) for v in np.asarray(p["w"]).reshape(-1)]
+        if p.get("b") is not None:
+            g["bias"] = [int(v) for v in np.asarray(p["b"]).reshape(-1)]
+        g["shift"] = int(p["shift"])
+        if p.get("elt_shift"):
+            g["elt_shift"] = int(p["elt_shift"])
+        if p.get("lut") is not None:
+            g["lut"] = [int(v) for v in np.asarray(p["lut"]).reshape(-1)]
+        groups[name] = g
+    return json.dumps({"groups": groups})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = model.gen_params(args.seed)
+    x = model.gen_input()
+
+    # --- golden TinyNet (Pallas kernels inside) -------------------------
+    fn = model.tinynet_jit(params, use_pallas=True)
+    lowered = fn.lower(jax.ShapeDtypeStruct(model.TINY_INPUT, jnp.int8))
+    hlo = to_hlo_text(lowered)
+    with open(os.path.join(args.out_dir, "tinynet.hlo.txt"), "w") as f:
+        f.write(hlo)
+
+    with open(os.path.join(args.out_dir, "tinynet_params.json"), "w") as f:
+        f.write(export_params_json(params))
+
+    with open(os.path.join(args.out_dir, "tinynet_input.json"), "w") as f:
+        json.dump(
+            {"shape": list(model.TINY_INPUT), "data": [int(v) for v in x.reshape(-1)]}, f
+        )
+
+    (logits,) = fn(jnp.asarray(x))
+    with open(os.path.join(args.out_dir, "tinynet_expected.json"), "w") as f:
+        json.dump({"logits": [int(v) for v in np.asarray(logits).reshape(-1)]}, f)
+
+    # --- bare matmul kernel artifact (runtime smoke test) ----------------
+    mm = jax.jit(lambda a, b: (matmul_int8(a, b),))
+    spec = jax.ShapeDtypeStruct((64, 64), jnp.int8)
+    mm_hlo = to_hlo_text(mm.lower(spec, spec))
+    with open(os.path.join(args.out_dir, "matmul64.hlo.txt"), "w") as f:
+        f.write(mm_hlo)
+
+    print(
+        f"wrote artifacts to {args.out_dir}: tinynet.hlo.txt ({len(hlo)} chars), "
+        f"params/input/expected JSON, matmul64.hlo.txt ({len(mm_hlo)} chars)"
+    )
+
+
+if __name__ == "__main__":
+    main()

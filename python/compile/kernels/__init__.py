@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for the quantized datapath.
+
+The kernels mirror the paper's shared-MAC-array structure (Ti = To = 64
+tiles) re-expressed for a TPU-like memory hierarchy: operands are staged
+into VMEM blocks via ``BlockSpec`` and accumulated in int32, the MXU
+analogue of the DSP48E2 double-INT8 accumulate. ``interpret=True``
+everywhere — the CPU PJRT client cannot execute Mosaic custom-calls
+(see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .conv_int8 import matmul_int8, conv2d_int8, dwconv2d_int8, TILE_M, TILE_N, TILE_K
+from . import ref
+
+__all__ = [
+    "matmul_int8",
+    "conv2d_int8",
+    "dwconv2d_int8",
+    "ref",
+    "TILE_M",
+    "TILE_N",
+    "TILE_K",
+]

@@ -1,0 +1,180 @@
+"""Int8 convolution kernels (Pallas).
+
+Arithmetic contract — keep in sync with ``rust/src/funcsim`` (the e2e
+test enforces bit-exactness):
+
+* accumulate in int32 (operands widened *before* the dot so the lowered
+  HLO uses s32 dots — the image's XLA 0.5.1 CPU runtime predates s8 dot
+  support);
+* ``round_shift(acc, s) = (acc + (1 << (s-1))) >> s`` for ``s > 0``
+  (arithmetic shift), ``acc << -s`` otherwise;
+* saturate to ``[-128, 127]``.
+
+The matmul tiling is the hardware mapping: ``TILE_M×TILE_K`` activation
+and ``TILE_K×TILE_N`` weight blocks live in VMEM (the analogue of the
+row/weight buffers), the int32 accumulator tile is the psum buffer
+(eq. 4), and the grid's K-loop is the input-channel tiling of the MAC
+array (Ti), with N the output-kernel parallelism (To).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Ti/To/K tiles — mirror the accelerator's Ti = To = 64.
+TILE_M = 64
+TILE_N = 64
+TILE_K = 64
+
+
+def _round_shift(acc, shift: int):
+    """Round-to-nearest arithmetic shift (ties toward +inf), int32."""
+    if shift > 0:
+        return (acc + (1 << (shift - 1))) >> shift
+    return acc << (-shift)
+
+
+def _clamp_i8(v):
+    return jnp.clip(v, -128, 127).astype(jnp.int8)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Tiled int32-accumulate matmul.
+
+    The output tile doubles as the accumulator (psum buffer): the grid's
+    innermost K dimension revisits the same (M, N) block, so `o_ref`
+    persists across K steps — the standard Pallas reduction pattern.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.int32)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul_int8(x, w):
+    """``x:int8[M,K] @ w:int8[K,N] -> int32[M,N]`` via the Pallas kernel.
+
+    Inputs are zero-padded to tile multiples; the result is sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    xp = _pad_to(_pad_to(x, TILE_M, 0), TILE_K, 1)
+    wp = _pad_to(_pad_to(w, TILE_K, 0), TILE_N, 1)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    k_steps = kp // TILE_K
+    grid = (mp // TILE_M, np_ // TILE_N, k_steps)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_K, TILE_N), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def same_pads(size: int, k: int, s: int):
+    """TF SAME padding (low, high) for one spatial dim."""
+    out = -(-size // s)
+    total = max((out - 1) * s + k - size, 0)
+    lo = total // 2
+    return lo, total - lo
+
+
+def extract_patches(x, k: int, s: int):
+    """im2col: ``x:[H,W,C] -> [OH*OW, k*k*C]`` with (ky, kx, c) ordering —
+    exactly the rust funcsim / HWIO weight flattening order."""
+    h, w, c = x.shape
+    oh, ow = -(-h // s), -(-w // s)
+    (pt, pb), (pl_, pr) = same_pads(h, k, s), same_pads(w, k, s)
+    xp = jnp.pad(x, ((pt, pb), (pl_, pr), (0, 0)))
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            cols.append(xp[ky : ky + oh * s : s, kx : kx + ow * s : s, :])
+    return jnp.concatenate(cols, axis=-1).reshape(oh * ow, k * k * c), (oh, ow)
+
+
+def conv2d_int8(x, w, b, shift: int, stride: int = 1):
+    """SAME conv: ``x:[H,W,Cin] i8``, ``w:[k,k,Cin,Cout] i8``,
+    ``b:[Cout] i32`` → int8 ``[OH,OW,Cout]``."""
+    k = w.shape[0]
+    cout = w.shape[3]
+    patches, (oh, ow) = extract_patches(x, k, stride)
+    acc = matmul_int8(patches, w.reshape(-1, cout))
+    acc = acc + b[None, :].astype(jnp.int32)
+    return _clamp_i8(_round_shift(acc, shift)).reshape(oh, ow, cout)
+
+
+def _dwconv_kernel(taps_ref, w_ref, b_ref, o_ref, *, shift: int):
+    """Depthwise unit: per-channel weighted tap sum (single-mult mode,
+    Fig. 7b), bias + requant fused at the writeback like the datapath."""
+    taps = taps_ref[...].astype(jnp.int32)  # [kk, BH, W, BC]
+    w = w_ref[...].astype(jnp.int32)  # [kk, BC]
+    acc = jnp.einsum("khwc,kc->hwc", taps, w).astype(jnp.int32)
+    acc = acc + b_ref[...][None, None, :].astype(jnp.int32)
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    else:
+        acc = acc << (-shift)
+    o_ref[...] = jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+def dwconv2d_int8(x, w, b, shift: int, stride: int = 1):
+    """SAME depthwise conv: ``x:[H,W,C] i8``, ``w:[k,k,C] i8``,
+    ``b:[C] i32`` → int8 ``[OH,OW,C]`` (channels tiled over the grid)."""
+    h, wdim, c = x.shape
+    k = w.shape[0]
+    oh, ow = -(-h // stride), -(-wdim // stride)
+    (pt, pb), (pl_, pr) = same_pads(h, k, stride), same_pads(wdim, k, stride)
+    xp = jnp.pad(x, ((pt, pb), (pl_, pr), (0, 0)))
+    taps = jnp.stack(
+        [
+            xp[ky : ky + oh * stride : stride, kx : kx + ow * stride : stride, :]
+            for ky in range(k)
+            for kx in range(k)
+        ],
+        axis=0,
+    )  # [k*k, OH, OW, C]
+
+    bc = min(TILE_N, c) if c % min(TILE_N, c) == 0 else c
+    tapsp = _pad_to(taps, bc, 3)
+    wp = _pad_to(w.reshape(k * k, c), bc, 1)
+    bp = _pad_to(b, bc, 0)
+    cp = tapsp.shape[3]
+    grid = (cp // bc,)
+    out = pl.pallas_call(
+        functools.partial(_dwconv_kernel, shift=shift),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k * k, oh, ow, bc), lambda j: (0, 0, 0, j)),
+            pl.BlockSpec((k * k, bc), lambda j: (0, j)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((oh, ow, bc), lambda j: (0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, cp), jnp.int8),
+        interpret=True,
+    )(tapsp, wp, bp)
+    return out[:, :, :c]

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels (no pallas_call anywhere).
+
+These are the correctness references: pytest checks every kernel against
+them across shape/stride sweeps (hypothesis), and the quantized model can
+be built on either path (``use_pallas=False``) to localize bugs.
+"""
+
+import jax.numpy as jnp
+
+
+def round_shift(acc, shift: int):
+    """(acc + 2^(s-1)) >> s for s > 0; arithmetic shift; << for s <= 0."""
+    if shift > 0:
+        return (acc + (1 << (shift - 1))) >> shift
+    return acc << (-shift)
+
+
+def clamp_i8(v):
+    return jnp.clip(v, -128, 127).astype(jnp.int8)
+
+
+def same_pads(size: int, k: int, s: int):
+    out = -(-size // s)
+    total = max((out - 1) * s + k - size, 0)
+    lo = total // 2
+    return lo, total - lo
+
+
+def matmul_int8_ref(x, w):
+    """int8 @ int8 -> int32 (widen first — s8 dots don't exist in the
+    deployment XLA)."""
+    return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def conv2d_int8_ref(x, w, b, shift: int, stride: int = 1):
+    """SAME conv via explicit patch extraction + int32 matmul."""
+    h, wd, c = x.shape
+    k, _, cin, cout = w.shape
+    assert cin == c
+    oh, ow = -(-h // stride), -(-wd // stride)
+    (pt, pb), (pl_, pr) = same_pads(h, k, stride), same_pads(wd, k, stride)
+    xp = jnp.pad(x, ((pt, pb), (pl_, pr), (0, 0)))
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            cols.append(xp[ky : ky + oh * stride : stride, kx : kx + ow * stride : stride, :])
+    patches = jnp.concatenate(cols, axis=-1).reshape(oh * ow, k * k * c)
+    acc = matmul_int8_ref(patches, w.reshape(-1, cout)) + b[None, :].astype(jnp.int32)
+    return clamp_i8(round_shift(acc, shift)).reshape(oh, ow, cout)
+
+
+def dwconv2d_int8_ref(x, w, b, shift: int, stride: int = 1):
+    """SAME depthwise conv, per-channel taps."""
+    h, wd, c = x.shape
+    k = w.shape[0]
+    oh, ow = -(-h // stride), -(-wd // stride)
+    (pt, pb), (pl_, pr) = same_pads(h, k, stride), same_pads(wd, k, stride)
+    xp = jnp.pad(x, ((pt, pb), (pl_, pr), (0, 0)))
+    acc = jnp.zeros((oh, ow, c), jnp.int32)
+    for ky in range(k):
+        for kx in range(k):
+            tap = xp[ky : ky + oh * stride : stride, kx : kx + ow * stride : stride, :]
+            acc = acc + tap.astype(jnp.int32) * w[ky, kx, :].astype(jnp.int32)[None, None, :]
+    acc = acc + b[None, None, :].astype(jnp.int32)
+    return clamp_i8(round_shift(acc, shift))

@@ -1,0 +1,228 @@
+"""Layer-2: the quantized golden model (JAX, build-time only).
+
+Defines the accelerator's datapath semantics as composable quantized ops
+and builds **TinyNet-SE** — the same network, with the same node names,
+as ``rust/src/zoo/tinynet.rs``. The e2e test executes the AOT-exported
+HLO through the rust PJRT runtime and compares it bit-exactly against
+the rust functional simulator, closing the hardware-verification loop of
+Fig. 4 ("unified software reference code for hardware verification").
+
+Integer semantics are documented in ``rust/src/funcsim/mod.rs``; this
+file must stay in lock-step with it.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import conv2d_int8, dwconv2d_int8
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# quantized ops (int8 activations, int32 accumulators)
+# ---------------------------------------------------------------------------
+
+
+def qconv(x, p, stride=1, use_pallas=True):
+    """Conv + bias + requant. ``p = {"w": i8[k,k,ci,co], "b": i32, "shift"}``."""
+    f = conv2d_int8 if use_pallas else ref.conv2d_int8_ref
+    return f(x, p["w"], p["b"], int(p["shift"]), stride)
+
+
+def qdwconv(x, p, stride=1, use_pallas=True):
+    f = dwconv2d_int8 if use_pallas else ref.dwconv2d_int8_ref
+    return f(x, p["w"], p["b"], int(p["shift"]), stride)
+
+
+def qfc(v, p):
+    """FC over a 1×1×C vector: ``w: i8[ci,co]``."""
+    acc = jnp.dot(v.astype(jnp.int32), p["w"].astype(jnp.int32)) + p["b"].astype(jnp.int32)
+    return ref.clamp_i8(ref.round_shift(acc, int(p["shift"])))
+
+
+def qrelu(x):
+    return jnp.maximum(x, 0)
+
+
+def qleaky(x):
+    """Hardware leaky: negatives arithmetic-shifted right by 3."""
+    return jnp.where(x < 0, x >> 3, x)
+
+
+def qlut(x, lut):
+    """8-bit LUT activation: index = unsigned reinterpretation of int8."""
+    idx = x.view(jnp.uint8).astype(jnp.int32)
+    return jnp.take(lut, idx)
+
+
+def qadd(a, b, elt_shift=0):
+    acc = a.astype(jnp.int32) + b.astype(jnp.int32)
+    return ref.clamp_i8(ref.round_shift(acc, int(elt_shift)))
+
+
+def qscale(x, gate, shift):
+    """SE channel scale (1×1 depthwise-like multiply)."""
+    acc = x.astype(jnp.int32) * gate.astype(jnp.int32)[None, None, :]
+    return ref.clamp_i8(ref.round_shift(acc, int(shift)))
+
+
+def qmaxpool(x, k=2, s=2):
+    """SAME max-pool; border windows padded with -128 (= clipped)."""
+    return lax.reduce_window(
+        x, jnp.int8(-128), lax.max, (k, k, 1), (s, s, 1), "SAME"
+    )
+
+
+def qgap(x):
+    """Global average pool with round-half-away-from-zero division."""
+    n = x.shape[0] * x.shape[1]
+    acc = jnp.sum(x.astype(jnp.int32), axis=(0, 1))
+    return ref.clamp_i8(_div_round(acc, n))
+
+
+def _div_round(a, n: int):
+    pos = (a + n // 2) // n
+    neg = -((-a + n // 2) // n)
+    return jnp.where(a >= 0, pos, neg)
+
+
+def qupsample(x, f=2):
+    return jnp.repeat(jnp.repeat(x, f, axis=0), f, axis=1)
+
+
+def qconcat(a, b):
+    return jnp.concatenate([a, b], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# LUT generation (build-time float math; shipped as integers)
+# ---------------------------------------------------------------------------
+
+
+def make_lut(fn, in_exp: int, out_exp: int):
+    """256-entry int8 LUT for ``fn`` at dynamic-fixed-point scales
+    ``x = q / 2^in_exp``, ``q' = round(f(x) · 2^out_exp)``.
+
+    Index order is the unsigned reinterpretation of the int8 code (0..127,
+    then -128..-1) — matching ``funcsim::ops::lut_act``."""
+    codes = np.arange(256)
+    q = np.where(codes < 128, codes, codes - 256).astype(np.float64)
+    x = q / (1 << in_exp)
+    y = fn(x)
+    return np.clip(np.round(y * (1 << out_exp)), -128, 127).astype(np.int8)
+
+
+def swish_f(x):
+    return x / (1.0 + np.exp(-x))
+
+
+def sigmoid_f(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+# ---------------------------------------------------------------------------
+# TinyNet-SE (keep in lock-step with rust/src/zoo/tinynet.rs)
+# ---------------------------------------------------------------------------
+
+TINY_INPUT = (16, 16, 8)
+
+# activation scale exponent used by the LUTs
+ACT_EXP = 4
+
+
+def gen_params(seed: int = 1234):
+    """Deterministic quantized parameters for TinyNet-SE.
+
+    Returns ``{group_main_name: {"w","b","shift","lut","elt_shift"}}`` with
+    numpy arrays; keys are the rust group main-node names."""
+    rng = np.random.default_rng(seed)
+
+    def conv_p(k, ci, co, lut=None, elt_shift=0):
+        return {
+            "w": rng.integers(-7, 8, (k, k, ci, co), dtype=np.int8),
+            "b": rng.integers(-64, 64, (co,), dtype=np.int32),
+            "shift": 7,
+            "lut": lut,
+            "elt_shift": elt_shift,
+        }
+
+    def dw_p(k, c, lut=None):
+        return {
+            "w": rng.integers(-7, 8, (k, k, c), dtype=np.int8),
+            "b": rng.integers(-64, 64, (c,), dtype=np.int32),
+            "shift": 6,
+            "lut": lut,
+            "elt_shift": 0,
+        }
+
+    def fc_p(ci, co, lut=None):
+        return {
+            "w": rng.integers(-7, 8, (ci, co), dtype=np.int8),
+            "b": rng.integers(-64, 64, (co,), dtype=np.int32),
+            "shift": 5,
+            "lut": lut,
+            "elt_shift": 0,
+        }
+
+    swish_lut = make_lut(swish_f, ACT_EXP, ACT_EXP)
+    sigmoid_lut = make_lut(sigmoid_f, ACT_EXP, 7)  # gate in Q0.7
+
+    return {
+        "stem": conv_p(3, 8, 16),
+        "res1/a": conv_p(3, 16, 16),
+        # res1/b carries the fused shortcut add (relu applied after)
+        "res1/b": conv_p(3, 16, 16, elt_shift=1),
+        "mb1/expand": conv_p(1, 16, 32, lut=swish_lut),
+        "mb1/dw": dw_p(3, 32, lut=swish_lut),
+        "mb1/se/reduce": fc_p(32, 8, lut=swish_lut),
+        "mb1/se/expand": fc_p(8, 32, lut=sigmoid_lut),
+        # SE scale: x·gate with gate in Q0.7 → shift 7 restores the scale
+        "mb1/se/scale": {"w": None, "b": None, "shift": 7, "lut": None, "elt_shift": 0},
+        "mb1/project": conv_p(1, 32, 16, elt_shift=1),
+        "down": conv_p(3, 16, 24),
+        "head": conv_p(1, 40, 16),
+        "fc": fc_p(16, 10),
+    }
+
+
+def tinynet(x, params, use_pallas=True):
+    """Forward pass; mirrors the rust graph node-for-node."""
+    p = params
+
+    stem = qrelu(qconv(x, p["stem"], 1, use_pallas))
+    pool = qmaxpool(stem, 2, 2)
+
+    r1a = qrelu(qconv(pool, p["res1/a"], 1, use_pallas))
+    r1b = qconv(r1a, p["res1/b"], 1, use_pallas)
+    r1 = qrelu(qadd(r1b, pool, p["res1/b"]["elt_shift"]))
+
+    exp = qlut(qconv(r1, p["mb1/expand"], 1, use_pallas), p["mb1/expand"]["lut"])
+    dw = qlut(qdwconv(exp, p["mb1/dw"], 1, use_pallas), p["mb1/dw"]["lut"])
+    sq = qgap(dw)
+    se_r = qlut(qfc(sq, p["mb1/se/reduce"]), p["mb1/se/reduce"]["lut"])
+    se_e = qlut(qfc(se_r, p["mb1/se/expand"]), p["mb1/se/expand"]["lut"])
+    se = qscale(dw, se_e, p["mb1/se/scale"]["shift"])
+    proj = qconv(se, p["mb1/project"], 1, use_pallas)
+    mb1 = qadd(proj, r1, p["mb1/project"]["elt_shift"])
+
+    down = qrelu(qconv(mb1, p["down"], 2, use_pallas))
+    up = qupsample(down, 2)
+    cat = qconcat(mb1, up)
+
+    head = qrelu(qconv(cat, p["head"], 1, use_pallas))
+    g = qgap(head)
+    return qfc(g, p["fc"])
+
+
+def tinynet_jit(params, use_pallas=True):
+    """jit-compiled closure over constant (baked-in) parameters."""
+    jp = jax.tree_util.tree_map(
+        lambda a: jnp.asarray(a) if a is not None else None, params
+    )
+    return jax.jit(lambda x: (tinynet(x, jp, use_pallas),))
+
+
+def gen_input(seed: int = 99):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-128, 128, TINY_INPUT, dtype=np.int8)

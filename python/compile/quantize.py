@@ -1,0 +1,78 @@
+"""Quantization front-end: float model → dynamic-fixed-point integers.
+
+The paper's CNN parser "extract[s] the quantized parameters" from the
+frozen model (§III-A, 8-bit non-zero quantization with per-layer dynamic
+fixed-point). This module implements that step for the golden-model
+pipeline: power-of-two scale calibration from weight/activation ranges,
+batch-norm folding, bias quantization and requant-shift derivation.
+
+Scheme (symmetric, power-of-two — exactly representable by the
+accelerator's shift-based requantizer):
+
+* activations: ``x ≈ q_x · 2^-e_x`` with ``e_x = 7 - ceil(log2(max|x|))``
+* weights:     ``w ≈ q_w · 2^-e_w`` likewise
+* conv:        ``acc = Σ q_w q_x ≈ (Σ w x) · 2^(e_w+e_x)``; the int32
+  bias is pre-scaled by ``2^(e_w+e_x)``; the output shift is
+  ``s = e_w + e_x - e_y`` (always ≥ 0 when ranges are sane).
+"""
+
+import numpy as np
+
+
+def scale_exp(max_abs: float, bits: int = 8) -> int:
+    """Power-of-two exponent e such that values fit int8: q = v * 2^e."""
+    if max_abs <= 0:
+        return bits - 1
+    return int(bits - 1 - np.ceil(np.log2(max_abs)))
+
+
+def quantize_tensor(v, e: int):
+    """Symmetric int8 quantization at exponent ``e``."""
+    q = np.round(np.asarray(v, dtype=np.float64) * (1 << e) if e >= 0 else np.asarray(v) / (1 << -e))
+    return np.clip(q, -127, 127).astype(np.int8)
+
+
+def dequantize(q, e: int):
+    return np.asarray(q, dtype=np.float64) / (1 << e) if e >= 0 else np.asarray(q, dtype=np.float64) * (1 << -e)
+
+
+def fold_batchnorm(w, b, gamma, beta, mean, var, eps=1e-3):
+    """Fold BN(scale/shift) into conv weights+bias (HWIO weights)."""
+    w = np.asarray(w, dtype=np.float64)
+    std = np.sqrt(np.asarray(var, dtype=np.float64) + eps)
+    g = np.asarray(gamma, dtype=np.float64) / std
+    wf = w * g  # broadcast over the trailing (out-channel) axis
+    bf = (np.asarray(b, dtype=np.float64) - np.asarray(mean)) * g + np.asarray(beta)
+    return wf, bf
+
+
+def quantize_layer(w, b, in_exp: int, out_exp: int):
+    """Quantize one conv/fc layer given input/output activation exponents.
+
+    Returns ``(w_i8, b_i32, shift)`` such that
+    ``clamp(round_shift(Σ w_i8·x_i8 + b_i32, shift))`` approximates the
+    float layer at the output exponent."""
+    w = np.asarray(w, dtype=np.float64)
+    w_exp = scale_exp(float(np.abs(w).max()))
+    w_q = quantize_tensor(w, w_exp)
+    total = w_exp + in_exp
+    b_q = np.clip(np.round(np.asarray(b, dtype=np.float64) * (1 << total) if total >= 0
+                           else np.asarray(b) / (1 << -total)),
+                  -(2 ** 31), 2 ** 31 - 1).astype(np.int32)
+    shift = total - out_exp
+    return w_q, b_q, int(shift)
+
+
+def calibrate_activation(samples) -> int:
+    """Activation exponent from observed samples (max-abs calibration —
+    adequate for the power-of-two scheme; percentile calibration is a
+    drop-in replacement)."""
+    return scale_exp(float(np.max(np.abs(samples))))
+
+
+def quant_error(v, e: int) -> float:
+    """RMS relative quantization error at exponent e (diagnostics)."""
+    v = np.asarray(v, dtype=np.float64)
+    err = dequantize(quantize_tensor(v, e), e) - v
+    denom = np.sqrt(np.mean(v**2)) + 1e-12
+    return float(np.sqrt(np.mean(err**2)) / denom)

@@ -1,0 +1,65 @@
+"""AOT export regression tests."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.aot import export_params_json, to_hlo_text
+
+
+def test_hlo_text_does_not_elide_constants():
+    """Regression: the deployment XLA text parser silently reads elided
+    `constant({...})` literals as garbage — exports must print them."""
+    w = jnp.asarray(np.arange(2048, dtype=np.int8).reshape(-1) % 100)
+
+    def f(v):
+        return (w + v.reshape(-1)[:1].astype(jnp.int8) * 0,)
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((4, 4, 4), jnp.int8))
+    hlo = to_hlo_text(lowered)
+    assert "constant({...})" not in hlo, "large constants were elided"
+
+
+def test_export_params_layout_is_hwio():
+    """Weight flattening must match funcsim's ((ky*k+kx)*cin+ic)*cout+oc."""
+    w = np.arange(2 * 2 * 3 * 4, dtype=np.int8).reshape(2, 2, 3, 4)
+    params = {"g": {"w": w, "b": np.zeros(4, np.int32), "shift": 7, "lut": None, "elt_shift": 0}}
+    doc = json.loads(export_params_json(params))
+    flat = doc["groups"]["g"]["weights"]
+    k, cin, cout = 2, 3, 4
+    for ky in range(k):
+        for kx in range(k):
+            for ic in range(cin):
+                for oc in range(cout):
+                    assert flat[((ky * k + kx) * cin + ic) * cout + oc] == int(w[ky, kx, ic, oc])
+
+
+def test_params_json_includes_luts_and_shifts():
+    params = model.gen_params(1234)
+    doc = json.loads(export_params_json(params))
+    g = doc["groups"]
+    assert "lut" in g["mb1/expand"] and len(g["mb1/expand"]["lut"]) == 256
+    assert g["res1/b"]["elt_shift"] == 1
+    assert "weights" not in g["mb1/se/scale"]  # scale has no weights
+    assert g["mb1/se/scale"]["shift"] == 7
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/tinynet.hlo.txt")),
+    reason="artifacts not built",
+)
+def test_artifacts_consistent_with_model():
+    """The exported expectation must match a fresh forward pass."""
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "tinynet_expected.json")) as f:
+        expected = json.load(f)["logits"]
+    with open(os.path.join(root, "tinynet_input.json")) as f:
+        x = np.asarray(json.load(f)["data"], dtype=np.int8).reshape(model.TINY_INPUT)
+    fn = model.tinynet_jit(model.gen_params(1234))
+    (logits,) = fn(jnp.asarray(x))
+    assert [int(v) for v in np.asarray(logits)] == expected

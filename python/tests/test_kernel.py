@@ -1,0 +1,103 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes/strides/kernel sizes; every case must match the
+reference bit-exactly (integer arithmetic — no tolerance)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d_int8, dwconv2d_int8, matmul_int8
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+@given(
+    m=st.integers(1, 130),
+    k=st.integers(1, 130),
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = rng_for(seed)
+    x = rng.integers(-128, 128, (m, k), dtype=np.int8)
+    w = rng.integers(-128, 128, (k, n), dtype=np.int8)
+    got = matmul_int8(jnp.asarray(x), jnp.asarray(w))
+    want = ref.matmul_int8_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    h=st.integers(3, 20),
+    w=st.integers(3, 20),
+    cin=st.integers(1, 9),
+    cout=st.integers(1, 9),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    shift=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref(h, w, cin, cout, k, stride, shift, seed):
+    rng = rng_for(seed)
+    x = rng.integers(-128, 128, (h, w, cin), dtype=np.int8)
+    wt = rng.integers(-16, 16, (k, k, cin, cout), dtype=np.int8)
+    b = rng.integers(-1000, 1000, (cout,), dtype=np.int32)
+    got = conv2d_int8(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b), shift, stride)
+    want = ref.conv2d_int8_ref(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b), shift, stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    h=st.integers(3, 16),
+    w=st.integers(3, 16),
+    c=st.integers(1, 70),
+    k=st.sampled_from([1, 3, 5, 7]),
+    stride=st.sampled_from([1, 2]),
+    shift=st.integers(0, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dwconv_matches_ref(h, w, c, k, stride, shift, seed):
+    rng = rng_for(seed)
+    x = rng.integers(-128, 128, (h, w, c), dtype=np.int8)
+    wt = rng.integers(-16, 16, (k, k, c), dtype=np.int8)
+    b = rng.integers(-1000, 1000, (c,), dtype=np.int32)
+    got = dwconv2d_int8(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b), shift, stride)
+    want = ref.dwconv2d_int8_ref(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b), shift, stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul_exact_tile_boundary():
+    """64/128 boundaries exercise the un-padded fast path."""
+    rng = rng_for(7)
+    for m, k, n in [(64, 64, 64), (128, 64, 128), (64, 128, 64)]:
+        x = rng.integers(-128, 128, (m, k), dtype=np.int8)
+        w = rng.integers(-128, 128, (k, n), dtype=np.int8)
+        got = matmul_int8(jnp.asarray(x), jnp.asarray(w))
+        want = ref.matmul_int8_ref(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv_accumulator_no_overflow_at_worst_case():
+    """Worst-case int8 conv accumulation stays within int32."""
+    # 5x5 kernel, 64 channels, all extremes: |acc| <= 25*64*128*128 < 2^31
+    x = np.full((8, 8, 64), -128, dtype=np.int8)
+    w = np.full((5, 5, 64, 4), -128, dtype=np.int8)
+    b = np.zeros(4, dtype=np.int32)
+    got = conv2d_int8(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), 0, 1)
+    want = ref.conv2d_int8_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), 0, 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).max() == 127  # saturated as expected
+
+
+def test_round_shift_semantics():
+    acc = jnp.asarray([7, 5, 6, -5, 3], dtype=jnp.int32)
+    assert list(np.asarray(ref.round_shift(acc, 2))) == [2, 1, 2, -1, 1]
+    assert list(np.asarray(ref.round_shift(acc, 0))) == [7, 5, 6, -5, 3]
+    assert list(np.asarray(ref.round_shift(acc, -1))) == [14, 10, 12, -10, 6]

@@ -1,0 +1,106 @@
+"""L2 correctness: quantized model semantics + TinyNet-SE golden paths."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_pallas_and_ref_paths_agree():
+    """TinyNet on the Pallas kernels == TinyNet on the jnp references."""
+    params = model.gen_params(1234)
+    x = jnp.asarray(model.gen_input())
+    jp = {k: {kk: (jnp.asarray(v) if v is not None else None) for kk, v in p.items()} for k, p in params.items()}
+    a = model.tinynet(x, jp, use_pallas=True)
+    b = model.tinynet(x, jp, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tinynet_deterministic():
+    params = model.gen_params(1234)
+    fn = model.tinynet_jit(params)
+    x = jnp.asarray(model.gen_input())
+    (a,) = fn(x)
+    (b,) = fn(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.dtype == jnp.int8 and a.shape == (10,)
+
+
+def test_gen_params_deterministic():
+    p1 = model.gen_params(42)
+    p2 = model.gen_params(42)
+    np.testing.assert_array_equal(p1["stem"]["w"], p2["stem"]["w"])
+    p3 = model.gen_params(43)
+    assert (p1["stem"]["w"] != p3["stem"]["w"]).any()
+
+
+def test_lut_generation_matches_formula():
+    lut = model.make_lut(model.sigmoid_f, model.ACT_EXP, 7)
+    assert lut.shape == (256,)
+    # q = 0 -> sigmoid(0) = 0.5 -> 64 in Q0.7
+    assert lut[0] == 64
+    # large positive q -> ~1.0 -> clamps to 127
+    assert lut[127] == 127
+    # index 128 is q = -128 -> sigmoid(-8) ~ 0
+    assert lut[128] == 0
+
+
+def test_qmaxpool_matches_manual():
+    x = jnp.asarray(np.arange(16, dtype=np.int8).reshape(4, 4, 1))
+    out = np.asarray(model.qmaxpool(x, 2, 2))
+    np.testing.assert_array_equal(out.reshape(2, 2), [[5, 7], [13, 15]])
+
+
+def test_qgap_rounds_half_away():
+    x = jnp.asarray(np.array([[[1], [2]], [[3], [5]]], dtype=np.int8))
+    assert int(model.qgap(x)[0]) == 3  # 11/4 = 2.75 -> 3
+    xn = jnp.asarray(np.array([[[-1], [-2]], [[-3], [-5]]], dtype=np.int8))
+    assert int(model.qgap(xn)[0]) == -3
+
+
+def test_qadd_saturates():
+    a = jnp.asarray(np.array([100], dtype=np.int8))
+    assert int(model.qadd(a, a, 0)[0]) == 127
+    assert int(model.qadd(a, a, 1)[0]) == 100
+
+
+def test_qleaky_arithmetic_shift():
+    x = jnp.asarray(np.array([-64, -1, 5], dtype=np.int8))
+    np.testing.assert_array_equal(np.asarray(model.qleaky(x)), [-8, -1, 5])
+
+
+def test_qlut_unsigned_indexing():
+    lut = np.zeros(256, dtype=np.int8)
+    lut[5] = 50
+    lut[251] = -50
+    x = jnp.asarray(np.array([5, -5], dtype=np.int8))
+    np.testing.assert_array_equal(np.asarray(model.qlut(x, jnp.asarray(lut))), [50, -50])
+
+
+def test_qscale_gate_broadcast():
+    x = jnp.asarray(np.full((2, 2, 3), 64, dtype=np.int8))
+    gate = jnp.asarray(np.array([127, 64, 0], dtype=np.int8))  # ~1.0, 0.5, 0 in Q0.7
+    out = np.asarray(model.qscale(x, gate, 7))
+    assert (out[:, :, 0] == 64).all()  # 64*127/128 = 63.5 -> 64 (round)
+    assert (out[:, :, 1] == 32).all()
+    assert (out[:, :, 2] == 0).all()
+
+
+def test_shortcut_contributes():
+    """Zeroed res1/b weights make the residual pass the shortcut through
+    (matches the rust funcsim test of the same name)."""
+    params = model.gen_params(1234)
+    params["res1/b"]["w"] = np.zeros_like(params["res1/b"]["w"])
+    params["res1/b"]["b"] = np.zeros_like(params["res1/b"]["b"])
+    params["res1/b"]["elt_shift"] = 0
+    x = jnp.asarray(model.gen_input())
+    jp = {k: {kk: (jnp.asarray(v) if v is not None else None) for kk, v in p.items()} for k, p in params.items()}
+    # run the prefix manually
+    stem = model.qrelu(model.qconv(x, jp["stem"]))
+    pool = model.qmaxpool(stem)
+    r1a = model.qrelu(model.qconv(pool, jp["res1/a"]))
+    r1b = model.qconv(r1a, jp["res1/b"])
+    r1 = model.qrelu(model.qadd(r1b, pool, 0))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(model.qrelu(pool)))

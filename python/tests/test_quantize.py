@@ -1,0 +1,104 @@
+"""Quantization front-end tests: calibration, BN folding, end-to-end
+float-vs-int8 layer error."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+from compile.kernels import ref
+
+settings.register_profile("ci2", max_examples=25, deadline=None)
+settings.load_profile("ci2")
+
+
+def test_scale_exp_basics():
+    assert Q.scale_exp(1.0) == 7  # [-1,1] -> Q0.7
+    assert Q.scale_exp(127.0) == 0
+    assert Q.scale_exp(0.0) == 7
+    assert Q.scale_exp(0.5) == 8
+
+
+@given(st.floats(0.01, 100.0))
+def test_quantize_fits_int8(max_abs):
+    e = Q.scale_exp(max_abs)
+    v = np.linspace(-max_abs, max_abs, 101)
+    q = Q.quantize_tensor(v, e)
+    assert q.dtype == np.int8
+    assert np.abs(q).max() <= 127
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_round_trip_error_is_bounded(seed):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(0, 1.0, 256)
+    e = Q.scale_exp(float(np.abs(v).max()))
+    assert Q.quant_error(v, e) < 0.05, "8-bit symmetric quantization error"
+
+
+def test_fold_batchnorm_is_equivalent():
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.1, (3, 3, 4, 8))
+    b = rng.normal(0, 0.1, 8)
+    gamma = rng.uniform(0.5, 1.5, 8)
+    beta = rng.normal(0, 0.1, 8)
+    mean = rng.normal(0, 0.1, 8)
+    var = rng.uniform(0.5, 1.5, 8)
+    x = rng.normal(0, 1, (6, 6, 4))
+
+    # float reference: conv -> BN
+    import jax.lax as lax
+
+    y = lax.conv_general_dilated(
+        jnp.asarray(x)[None], jnp.asarray(w), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0] + b
+    bn = (np.asarray(y) - mean) / np.sqrt(var + 1e-3) * gamma + beta
+
+    wf, bf = Q.fold_batchnorm(w, b, gamma, beta, mean, var)
+    y2 = lax.conv_general_dilated(
+        jnp.asarray(x)[None], jnp.asarray(wf), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0] + bf
+    np.testing.assert_allclose(np.asarray(y2), bn, rtol=1e-6, atol=1e-6)
+
+
+def test_quantized_layer_tracks_float_layer():
+    """int8 conv with calibrated shifts stays within a few percent of the
+    float computation — the 'CNN is tolerant to errors' premise (§III-A)."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 0.2, (3, 3, 8, 16))
+    b = rng.normal(0, 0.2, 16)
+    x = rng.normal(0, 1.0, (8, 8, 8))
+
+    in_exp = Q.calibrate_activation(x)
+    x_q = Q.quantize_tensor(x, in_exp)
+
+    # float reference output and its exponent
+    import jax.lax as lax
+
+    y = np.asarray(
+        lax.conv_general_dilated(
+            jnp.asarray(x)[None], jnp.asarray(w), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )[0]
+    ) + b
+    out_exp = Q.calibrate_activation(y)
+
+    w_q, b_q, shift = Q.quantize_layer(w, b, in_exp, out_exp)
+    assert shift >= 0
+    y_q = ref.conv2d_int8_ref(jnp.asarray(x_q), jnp.asarray(w_q), jnp.asarray(b_q), shift, 1)
+    y_hat = Q.dequantize(np.asarray(y_q), out_exp)
+
+    rms = np.sqrt(np.mean((y_hat - y) ** 2)) / (np.sqrt(np.mean(y**2)) + 1e-12)
+    assert rms < 0.08, f"quantized layer error {rms:.3f}"
+
+
+def test_bias_scaling_matches_accumulator_domain():
+    w = np.ones((1, 1, 1, 1)) * 0.5
+    b = np.ones(1) * 0.25
+    w_q, b_q, shift = Q.quantize_layer(w, b, in_exp=7, out_exp=7)
+    # w_exp = 8 (max 0.5), total = 15, bias 0.25*2^15 = 8192
+    assert b_q[0] == 8192
+    assert shift == 8

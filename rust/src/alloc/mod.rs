@@ -1,0 +1,22 @@
+//! Reuse-aware static memory allocation (§IV-A, Fig. 13).
+//!
+//! Frame-reuse tensors are pinned to one of the three interchangeable
+//! physical buffers {0,1,2}; row-reuse tensors stream through DRAM. The
+//! allocator walks groups in program order, tracking tensor liveness, and
+//! assigns `{alloc_input, alloc_output, alloc_shortcut}` exactly as
+//! Algorithm 1's `buff_alloc` does — including the SE dataflow of
+//! Fig. 13(c)/(d) (FC outputs and SE gates live in a small auxiliary
+//! space, not the big buffers) and the long-path rule ("data of the
+//! long-path shortcut connection for concatenation is stored off-chip to
+//! avoid long lifetime data in the on-chip buffers").
+//!
+//! When all three buffers hold live tensors the allocator evicts the one
+//! with the farthest next use (Belady) to DRAM and records the spill —
+//! this is what keeps FPN-style graphs (RetinaNet, EfficientDet) legal
+//! under 3 physical buffers.
+
+mod static_alloc;
+mod offchip;
+
+pub use static_alloc::{allocate, AllocResult, BufAssign, Loc};
+pub use offchip::{layout, OffchipArena, OffchipLayout};

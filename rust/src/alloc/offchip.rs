@@ -1,0 +1,207 @@
+//! Off-chip (DRAM) address-space layout.
+//!
+//! The inference driver "packs parameters, input and all instructions and
+//! sends them at once" (§III-A); this module lays the packed arena out:
+//! instructions first, then all layer weights back-to-back, then the
+//! network input, then ping-pong regions for row-reuse feature-map
+//! streams and concat destinations.
+
+use crate::analyzer::{GroupKind, GroupedGraph};
+use crate::config::AccelConfig;
+use crate::isa::ReuseMode;
+
+use super::static_alloc::{AllocResult, Loc};
+
+/// A contiguous DRAM allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OffchipArena {
+    pub offset: u32,
+    pub bytes: u32,
+}
+
+/// Full DRAM layout for one compiled network.
+#[derive(Debug, Clone)]
+pub struct OffchipLayout {
+    /// Instruction stream region.
+    pub instrs: OffchipArena,
+    /// Per-group weight slices (zero-length for weight-less groups).
+    pub weights: Vec<OffchipArena>,
+    /// Network input image.
+    pub input: OffchipArena,
+    /// Per-group output regions for tensors that live in DRAM
+    /// (zero-length when the output is on-chip only).
+    pub fmaps: Vec<OffchipArena>,
+    /// One past the last allocated byte.
+    pub end: u32,
+}
+
+impl OffchipLayout {
+    /// Total DRAM footprint in bytes.
+    pub fn footprint(&self) -> u32 {
+        self.end
+    }
+}
+
+/// Lay out the DRAM arena. Feature-map regions are allocated for every
+/// group whose output (or long-path copy) reaches DRAM; ping-pong reuse
+/// of dead regions is applied so the footprint stays close to the live
+/// working set.
+pub fn layout(
+    gg: &GroupedGraph,
+    _policy: &[ReuseMode],
+    alloc: &AllocResult,
+    cfg: &AccelConfig,
+) -> OffchipLayout {
+    let qa = cfg.qa as u32;
+    let qw = cfg.qw as u64;
+    let mut cursor: u32;
+    let align = |c: u32| (c + 63) & !63;
+
+    // 1. instruction stream
+    let instr_bytes = (gg.groups.len() * crate::isa::WORDS_PER_INSTR * 4) as u32;
+    let instrs = OffchipArena { offset: 0, bytes: instr_bytes };
+    cursor = align(instr_bytes);
+
+    // 2. weights, packed in execution order
+    let mut weights = Vec::with_capacity(gg.groups.len());
+    for gr in &gg.groups {
+        let wb = gr.weight_bytes(&gg.graph, qw) as u32;
+        weights.push(OffchipArena { offset: cursor, bytes: wb });
+        cursor = align(cursor + wb);
+    }
+
+    // 3. network input
+    let in_bytes = gg.graph.input().out_shape.bytes(qa as usize) as u32;
+    let input = OffchipArena { offset: cursor, bytes: in_bytes };
+    cursor = align(cursor + in_bytes);
+
+    // 4. DRAM-resident feature maps with ping-pong region reuse.
+    let consumers = gg.consumers();
+    let mut fmaps = vec![OffchipArena { offset: 0, bytes: 0 }; gg.groups.len()];
+    // free list of (offset, bytes) regions whose tensor died
+    let mut free: Vec<(u32, u32)> = Vec::new();
+    let mut last_use: Vec<usize> = (0..gg.groups.len())
+        .map(|g| consumers[g].iter().map(|c| c.0).max().unwrap_or(g))
+        .collect();
+    // Network outputs must persist to the end.
+    for g in 0..gg.groups.len() {
+        if consumers[g].is_empty() {
+            last_use[g] = usize::MAX;
+        }
+    }
+    let mut expiry: Vec<(usize, usize)> = Vec::new(); // (dies_at, group)
+
+    for (gi, gr) in gg.groups.iter().enumerate() {
+        // release regions whose tensors are dead by now
+        expiry.retain(|&(dies, g)| {
+            if dies < gi {
+                free.push((fmaps[g].offset, fmaps[g].bytes));
+                false
+            } else {
+                true
+            }
+        });
+
+        let needs_dram = gi != 0
+            && (alloc.assigns[gi].out_loc == Loc::Dram || alloc.assigns[gi].also_dram)
+            && gr.kind != GroupKind::Input
+            && gr.out_shape.h * gr.out_shape.w > 1;
+        if !needs_dram {
+            continue;
+        }
+        let bytes = gr.out_shape.bytes(qa as usize) as u32;
+        // first-fit from the free list
+        let slot = free
+            .iter()
+            .position(|&(_, b)| b >= bytes)
+            .map(|i| free.remove(i));
+        let offset = match slot {
+            Some((off, b)) => {
+                if b > bytes {
+                    free.push((off + bytes, b - bytes));
+                }
+                off
+            }
+            None => {
+                let off = cursor;
+                cursor = align(cursor + bytes);
+                off
+            }
+        };
+        fmaps[gi] = OffchipArena { offset, bytes };
+        if last_use[gi] != usize::MAX {
+            expiry.push((last_use[gi], gi));
+        }
+    }
+
+    OffchipLayout { instrs, weights, input, fmaps, end: cursor }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::allocate;
+    use crate::analyzer::analyze;
+    use crate::zoo;
+
+    fn mk(model: &str, mode: ReuseMode) -> (GroupedGraph, Vec<ReuseMode>, AllocResult, AccelConfig) {
+        let gg = analyze(&zoo::by_name(model, zoo::default_input(model)).unwrap());
+        let cfg = AccelConfig::kcu1500_int8();
+        let policy = vec![mode; gg.groups.len()];
+        let alloc = allocate(&gg, &policy, &cfg);
+        (gg, policy, alloc, cfg)
+    }
+
+    #[test]
+    fn regions_do_not_overlap_live_ranges() {
+        let (gg, policy, alloc, cfg) = mk("yolov3", ReuseMode::Row);
+        let l = layout(&gg, &policy, &alloc, &cfg);
+        // weights are disjoint and ordered
+        for w in l.weights.windows(2) {
+            assert!(w[0].offset + w[0].bytes <= w[1].offset || w[1].bytes == 0 || w[0].bytes == 0);
+        }
+        // fmap regions of two simultaneously-live tensors never overlap
+        let consumers = gg.consumers();
+        let n = gg.groups.len();
+        for a in 0..n {
+            for b in (a + 1)..n {
+                let (fa, fb) = (l.fmaps[a], l.fmaps[b]);
+                if fa.bytes == 0 || fb.bytes == 0 {
+                    continue;
+                }
+                let a_dies = consumers[a].iter().map(|c| c.0).max().unwrap_or(usize::MAX);
+                // b is produced at index b; a live iff a_dies >= b
+                let overlap_time = a_dies >= b;
+                let overlap_space =
+                    fa.offset < fb.offset + fb.bytes && fb.offset < fa.offset + fa.bytes;
+                assert!(
+                    !(overlap_time && overlap_space),
+                    "regions overlap for live tensors {a} and {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn row_mode_footprint_is_modest() {
+        // Ping-pong reuse keeps the YOLOv2 row-mode arena below the
+        // "every tensor gets fresh DRAM" worst case.
+        let (gg, policy, alloc, cfg) = mk("yolov2", ReuseMode::Row);
+        let l = layout(&gg, &policy, &alloc, &cfg);
+        let naive: u64 = gg
+            .groups
+            .iter()
+            .map(|g| g.out_shape.bytes(cfg.qa) as u64)
+            .sum::<u64>()
+            + gg.graph.total_weight_bytes(cfg.qw as u64);
+        assert!((l.footprint() as u64) < naive, "no reuse achieved");
+    }
+
+    #[test]
+    fn weights_cover_model_size() {
+        let (gg, policy, alloc, cfg) = mk("resnet50", ReuseMode::Frame);
+        let l = layout(&gg, &policy, &alloc, &cfg);
+        let total_w: u64 = l.weights.iter().map(|w| w.bytes as u64).sum();
+        assert_eq!(total_w, gg.graph.total_weight_bytes(cfg.qw as u64));
+    }
+}

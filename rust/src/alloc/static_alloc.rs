@@ -1,0 +1,395 @@
+//! The static 3-buffer allocator.
+
+use crate::analyzer::{GroupKind, GroupedGraph};
+use crate::config::AccelConfig;
+use crate::isa::ReuseMode;
+
+/// Where a tensor lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loc {
+    /// One of the three physical buffers.
+    Buf(u8),
+    /// Off-chip.
+    Dram,
+    /// The small auxiliary SRAM for 1×1×C vectors (SE squeeze results,
+    /// FC activations, SE gates — Fig. 13c: "outputs from Global Average
+    /// Pooling and two FC layers are stored on-chip because their size is
+    /// small").
+    Aux,
+}
+
+/// Per-group placement decision.
+#[derive(Debug, Clone)]
+pub struct BufAssign {
+    pub in_loc: Loc,
+    pub out_loc: Loc,
+    /// Location of the fused-shortcut operand (for groups with
+    /// `shortcut_of`) or the second operand (scale gate, concat second).
+    pub aux_loc: Option<Loc>,
+    /// On-chip output additionally written to DRAM because a concat/route
+    /// consumer needs the long-path copy off-chip.
+    pub also_dram: bool,
+    /// Frame-reuse group whose DRAM-resident input was staged into a
+    /// buffer first (costs one DRAM read of the input).
+    pub staged_input: bool,
+}
+
+/// Allocation outcome: placements plus buffer occupancy statistics.
+#[derive(Debug, Clone)]
+pub struct AllocResult {
+    pub assigns: Vec<BufAssign>,
+    /// Peak bytes resident in each physical buffer — Algorithm 1's
+    /// `buff[0..2](L)`.
+    pub buf_peak: [usize; 3],
+    /// Peak bytes in the auxiliary vector SRAM.
+    pub aux_peak: usize,
+    /// Extra DRAM traffic caused by capacity evictions (bytes).
+    pub spill_bytes: u64,
+    pub spill_events: usize,
+}
+
+#[derive(Debug, Clone)]
+struct LiveTensor {
+    loc: Loc,
+    bytes: usize,
+    /// Group indices that still need to read this tensor, ascending.
+    pending_uses: Vec<usize>,
+}
+
+/// Run the reuse-aware static allocation for `policy` (one [`ReuseMode`]
+/// per group; non-compute groups follow their block's mode).
+pub fn allocate(gg: &GroupedGraph, policy: &[ReuseMode], cfg: &AccelConfig) -> AllocResult {
+    assert_eq!(policy.len(), gg.groups.len());
+    let qa = cfg.qa;
+    let consumers = gg.consumers();
+    let n = gg.groups.len();
+
+    let mut live: Vec<Option<LiveTensor>> = vec![None; n];
+    let mut assigns: Vec<BufAssign> = Vec::with_capacity(n);
+    let mut buf_peak = [0usize; 3];
+    let mut aux_peak = 0usize;
+    let mut aux_now = 0usize;
+    let mut spill_bytes = 0u64;
+    let mut spill_events = 0usize;
+
+    // Buffer occupancy: which producer's tensor sits in each buffer.
+    let mut buf_owner: [Option<usize>; 3] = [None; 3];
+
+    for gi in 0..n {
+        let gr = &gg.groups[gi];
+
+        if gr.kind == GroupKind::Input {
+            // The image arrives in DRAM.
+            live[gi] = Some(LiveTensor {
+                loc: Loc::Dram,
+                bytes: gr.out_shape.bytes(qa),
+                pending_uses: consumers[gi].iter().map(|c| c.0).collect(),
+            });
+            assigns.push(BufAssign {
+                in_loc: Loc::Dram,
+                out_loc: Loc::Dram,
+                aux_loc: None,
+                also_dram: false,
+                staged_input: false,
+            });
+            continue;
+        }
+
+        // ---- resolve operand locations -------------------------------
+        let vector_in = gr.in_shape.h * gr.in_shape.w == 1;
+        let main_src = gr.inputs.first().copied();
+        let mut in_loc = if vector_in {
+            Loc::Aux
+        } else {
+            main_src.map(|s| live[s.0].as_ref().map(|t| t.loc).unwrap_or(Loc::Dram)).unwrap_or(Loc::Dram)
+        };
+
+        // Second operand: fused shortcut, scale gate, or concat second.
+        let aux_src: Option<usize> = if let Some(s) = gr.shortcut_of {
+            Some(s.0)
+        } else if matches!(gr.kind, GroupKind::Scale | GroupKind::Concat | GroupKind::Eltwise) {
+            gr.inputs.get(1).map(|s| s.0)
+        } else {
+            None
+        };
+        let aux_loc = aux_src.map(|s| {
+            let t = live[s].as_ref();
+            let is_vec = gg.groups[s].out_shape.h * gg.groups[s].out_shape.w == 1;
+            if is_vec {
+                Loc::Aux
+            } else {
+                t.map(|t| t.loc).unwrap_or(Loc::Dram)
+            }
+        });
+
+        // Stage a DRAM-resident feature-map input into a buffer for
+        // frame-reuse compute (the frame schedule re-reads the input per
+        // weight block; a DRAM input is loaded on-chip exactly once).
+        let mut staged_input = false;
+        if policy[gi] == ReuseMode::Frame
+            && in_loc == Loc::Dram
+            && !vector_in
+            && !matches!(gr.kind, GroupKind::Concat)
+        {
+            if let Some(src) = main_src {
+                let pinned = pinned_bufs(&[aux_loc]);
+                let b = take_buffer(
+                    &mut buf_owner,
+                    &mut live,
+                    pinned,
+                    gi,
+                    &mut spill_bytes,
+                    &mut spill_events,
+                );
+                if let Some(t) = live[src.0].as_mut() {
+                    t.loc = Loc::Buf(b);
+                    buf_owner[b as usize] = Some(src.0);
+                    buf_peak[b as usize] = buf_peak[b as usize].max(t.bytes);
+                }
+                in_loc = Loc::Buf(b);
+                staged_input = true;
+            }
+        }
+
+        // ---- consume operands -----------------------------------------
+        for &src in gr.inputs.iter() {
+            consume(&mut live, &mut buf_owner, &mut aux_now, src.0, gi);
+        }
+        if let Some(s) = gr.shortcut_of {
+            consume(&mut live, &mut buf_owner, &mut aux_now, s.0, gi);
+        }
+
+        // ---- place the output ------------------------------------------
+        let out_bytes = gr.out_shape.bytes(qa);
+        let vector_out = gr.out_shape.h * gr.out_shape.w == 1;
+        let my_consumers: Vec<usize> = consumers[gi].iter().map(|c| c.0).collect();
+        let feeds_concat = my_consumers
+            .iter()
+            .any(|&c| gg.groups[c].kind == GroupKind::Concat);
+        let non_concat_frame = my_consumers
+            .iter()
+            .filter(|&&c| gg.groups[c].kind != GroupKind::Concat)
+            .all(|&c| policy[c] == ReuseMode::Frame);
+        let has_non_concat = my_consumers
+            .iter()
+            .any(|&c| gg.groups[c].kind != GroupKind::Concat);
+
+        let mut also_dram = false;
+        let out_loc = if vector_out {
+            aux_now += out_bytes;
+            aux_peak = aux_peak.max(aux_now);
+            Loc::Aux
+        } else if my_consumers.is_empty() || gr.kind == GroupKind::Concat {
+            // Final outputs and concat destinations live off-chip.
+            Loc::Dram
+        } else if !has_non_concat {
+            // Long-path concat feed only: straight to DRAM (§IV-A).
+            Loc::Dram
+        } else if policy[gi] == ReuseMode::Frame || non_concat_frame {
+            // Frame-reuse output, or a row-reuse group at the cut whose
+            // consumers are all frame-reuse: keep on-chip.
+            let pinned = pinned_bufs(&[Some(in_loc), aux_loc]);
+            let b = take_buffer(
+                &mut buf_owner,
+                &mut live,
+                pinned,
+                gi,
+                &mut spill_bytes,
+                &mut spill_events,
+            );
+            buf_owner[b as usize] = Some(gi);
+            buf_peak[b as usize] = buf_peak[b as usize].max(out_bytes);
+            also_dram = feeds_concat;
+            Loc::Buf(b)
+        } else {
+            Loc::Dram
+        };
+
+        live[gi] = Some(LiveTensor {
+            loc: out_loc,
+            bytes: out_bytes,
+            pending_uses: my_consumers,
+        });
+        assigns.push(BufAssign { in_loc, out_loc, aux_loc, also_dram, staged_input });
+    }
+
+    AllocResult { assigns, buf_peak, aux_peak, spill_bytes, spill_events }
+}
+
+fn pinned_bufs(locs: &[Option<Loc>]) -> [bool; 3] {
+    let mut pinned = [false; 3];
+    for l in locs.iter().flatten() {
+        if let Loc::Buf(b) = l {
+            pinned[*b as usize] = true;
+        }
+    }
+    pinned
+}
+
+/// Pop `user` from the tensor's pending uses; free its space when dead.
+fn consume(
+    live: &mut [Option<LiveTensor>],
+    buf_owner: &mut [Option<usize>; 3],
+    aux_now: &mut usize,
+    src: usize,
+    user: usize,
+) {
+    if let Some(t) = live[src].as_mut() {
+        t.pending_uses.retain(|&u| u != user);
+        if t.pending_uses.is_empty() {
+            match t.loc {
+                Loc::Buf(b) => {
+                    if buf_owner[b as usize] == Some(src) {
+                        buf_owner[b as usize] = None;
+                    }
+                }
+                Loc::Aux => *aux_now = aux_now.saturating_sub(t.bytes),
+                Loc::Dram => {}
+            }
+            live[src] = None;
+        }
+    }
+}
+
+/// Return a free buffer, evicting the live tensor with the farthest next
+/// use to DRAM when all three are occupied (never evicting pinned ones).
+fn take_buffer(
+    buf_owner: &mut [Option<usize>; 3],
+    live: &mut [Option<LiveTensor>],
+    pinned: [bool; 3],
+    _for_group: usize,
+    spill_bytes: &mut u64,
+    spill_events: &mut usize,
+) -> u8 {
+    for b in 0..3u8 {
+        if buf_owner[b as usize].is_none() && !pinned[b as usize] {
+            return b;
+        }
+    }
+    // Belady eviction among un-pinned buffers.
+    let victim = (0..3u8)
+        .filter(|&b| !pinned[b as usize])
+        .max_by_key(|&b| {
+            buf_owner[b as usize]
+                .and_then(|owner| live[owner].as_ref())
+                .and_then(|t| t.pending_uses.first().copied())
+                .unwrap_or(usize::MAX)
+        })
+        .expect("at most 2 of 3 buffers can be pinned");
+    let owner = buf_owner[victim as usize].expect("victim buffer has an owner");
+    if let Some(t) = live[owner].as_mut() {
+        // write back + one read per remaining use
+        *spill_bytes += (t.bytes * (1 + t.pending_uses.len())) as u64;
+        *spill_events += 1;
+        t.loc = Loc::Dram;
+    }
+    buf_owner[victim as usize] = None;
+    victim
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::zoo;
+
+    fn frame_policy(n: usize) -> Vec<ReuseMode> {
+        vec![ReuseMode::Frame; n]
+    }
+
+    fn row_policy(n: usize) -> Vec<ReuseMode> {
+        vec![ReuseMode::Row; n]
+    }
+
+    #[test]
+    fn resnet50_frame_fits_three_buffers() {
+        let gg = analyze(&zoo::resnet50(224));
+        let cfg = AccelConfig::kcu1500_int8();
+        let r = allocate(&gg, &frame_policy(gg.groups.len()), &cfg);
+        // Plain residual chains never need more than 3 live buffers.
+        assert_eq!(r.spill_events, 0, "unexpected spills: {}", r.spill_events);
+        // Largest tensor: conv1 output 112*112*64.
+        let max_peak = *r.buf_peak.iter().max().unwrap();
+        assert_eq!(max_peak, 112 * 112 * 64);
+    }
+
+    #[test]
+    fn efficientnet_se_blocks_fit_three_buffers() {
+        let gg = analyze(&zoo::efficientnet_b1(256));
+        let cfg = AccelConfig::kcu1500_int8();
+        let r = allocate(&gg, &frame_policy(gg.groups.len()), &cfg);
+        assert_eq!(r.spill_events, 0, "MBConv+SE must fit 3 buffers (Fig 13d)");
+        // SE vectors stay in aux, not the big buffers.
+        assert!(r.aux_peak > 0 && r.aux_peak < 32 * 1024);
+    }
+
+    #[test]
+    fn row_policy_streams_everything() {
+        let gg = analyze(&zoo::vgg16_conv(224));
+        let cfg = AccelConfig::kcu1500_int8();
+        let r = allocate(&gg, &row_policy(gg.groups.len()), &cfg);
+        assert_eq!(r.buf_peak, [0, 0, 0]);
+        for a in &r.assigns[1..] {
+            assert_eq!(a.out_loc, Loc::Dram);
+        }
+    }
+
+    #[test]
+    fn shortcut_operand_resolved_on_chip_in_frame_mode() {
+        let gg = analyze(&zoo::resnet50(224));
+        let cfg = AccelConfig::kcu1500_int8();
+        let r = allocate(&gg, &frame_policy(gg.groups.len()), &cfg);
+        let mut checked = 0;
+        for (gi, gr) in gg.groups.iter().enumerate() {
+            if gr.shortcut_of.is_some() {
+                match r.assigns[gi].aux_loc {
+                    Some(Loc::Buf(_)) => checked += 1,
+                    other => panic!("shortcut operand off-chip: {other:?}"),
+                }
+            }
+        }
+        assert_eq!(checked, 16);
+    }
+
+    #[test]
+    fn concat_feeds_go_offchip() {
+        let gg = analyze(&zoo::yolov3(416));
+        let cfg = AccelConfig::kcu1500_int8();
+        let r = allocate(&gg, &frame_policy(gg.groups.len()), &cfg);
+        for (gi, gr) in gg.groups.iter().enumerate() {
+            if gr.kind == GroupKind::Concat {
+                assert_eq!(r.assigns[gi].out_loc, Loc::Dram, "concat dest off-chip");
+                for &src in &gr.inputs {
+                    let sa = &r.assigns[src.0];
+                    let off = sa.also_dram || sa.out_loc == Loc::Dram;
+                    assert!(off, "concat operand {} must reach DRAM", src.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn retinanet_spills_are_bounded() {
+        // FPN keeps C3/C4/C5 + laterals alive concurrently; Belady
+        // eviction must keep the design legal with bounded extra traffic.
+        let gg = analyze(&zoo::retinanet(512));
+        let cfg = AccelConfig::kcu1500_int8();
+        let r = allocate(&gg, &frame_policy(gg.groups.len()), &cfg);
+        assert!(r.spill_events > 0, "expected long-lifetime evictions in FPN");
+        assert!(
+            r.spill_bytes < 64 * 1024 * 1024,
+            "spill traffic blew up: {} bytes",
+            r.spill_bytes
+        );
+    }
+
+    #[test]
+    fn input_group_is_dram() {
+        let gg = analyze(&zoo::vgg16_conv(224));
+        let cfg = AccelConfig::kcu1500_int8();
+        let r = allocate(&gg, &frame_policy(gg.groups.len()), &cfg);
+        assert_eq!(r.assigns[0].out_loc, Loc::Dram);
+        // first conv stages the image on-chip in frame mode
+        assert!(r.assigns[1].staged_input);
+    }
+}

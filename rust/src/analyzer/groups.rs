@@ -1,0 +1,132 @@
+//! Group data model produced by the analyzer.
+
+use crate::graph::{Activation, Graph, NodeId, Shape};
+
+/// Index of a group within a [`GroupedGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GroupId(pub usize);
+
+/// The main compute class of a group — selects the datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GroupKind {
+    /// Normal convolution (shared-MAC double-multiplication mode).
+    Conv,
+    /// Depthwise convolution (single-multiplication mode).
+    DwConv,
+    /// Fully-connected (SE reduce/expand, classifier).
+    Fc,
+    /// SE excitation scale (1×1 depthwise-like multiply, §IV-A).
+    Scale,
+    /// Standalone pooling (not fused behind a conv).
+    Pool,
+    /// Standalone element-wise addition (when the producer could not
+    /// absorb it, e.g. both operands come from concat/route data).
+    Eltwise,
+    /// Channel concatenation — pure memory redirection ("feature-merging
+    /// ... redirecting the output to the eventual destination", §III-A).
+    Concat,
+    /// Standalone upsampling.
+    Upsample,
+    /// Standalone activation / affine / copy (a producer with multiple
+    /// consumers could not absorb it, e.g. RetinaNet's P6→ReLU→P7).
+    Act,
+    /// The graph input feed.
+    Input,
+}
+
+/// Fused trailing pooling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Max,
+    Avg,
+    /// Global average pooling (SE squeeze / classifier head).
+    Global,
+}
+
+/// One accelerator invocation: the main op plus fused pre/post ops.
+#[derive(Debug, Clone)]
+pub struct Group {
+    pub id: GroupId,
+    pub kind: GroupKind,
+    /// All graph nodes folded into this group, in topological order.
+    pub nodes: Vec<NodeId>,
+    /// The main compute node (conv/fc/pool/…).
+    pub main: NodeId,
+    /// Data-producing groups this group reads, in operand order.
+    pub inputs: Vec<GroupId>,
+    /// Activation applied at the datapath output.
+    pub act: Activation,
+    /// Fused trailing pooling `(kind, k, stride)`; `Global` uses k=s=0.
+    pub pool: Option<(PoolKind, usize, usize)>,
+    /// Fused element-wise shortcut: the group whose output is added.
+    pub shortcut_of: Option<GroupId>,
+    /// Fused nearest-neighbour upsampling factor.
+    pub upsample: Option<usize>,
+    /// A parallel SE-squeeze output (GAP computed during writeback,
+    /// Fig. 13d): the consuming FC reads a 1×1×C vector.
+    pub se_squeeze: bool,
+    /// Input feature-map shape (main operand).
+    pub in_shape: Shape,
+    /// Output feature-map shape after all fused ops.
+    pub out_shape: Shape,
+}
+
+impl Group {
+    /// MAC count of the group's compute nodes.
+    pub fn macs(&self, g: &Graph) -> u64 {
+        self.nodes.iter().map(|&n| g.node(n).macs()).sum()
+    }
+
+    /// Weight bytes this group streams from DRAM.
+    pub fn weight_bytes(&self, g: &Graph, bytes_per_weight: u64) -> u64 {
+        self.nodes.iter().map(|&n| g.node(n).weight_count() * bytes_per_weight).sum()
+    }
+
+    /// True when the group's main op carries weights.
+    pub fn has_weights(&self, g: &Graph) -> bool {
+        self.nodes.iter().any(|&n| g.node(n).op.has_weights())
+    }
+
+    /// Kernel size / stride / depthwise of the main conv (1,1,false for
+    /// non-conv groups).
+    pub fn conv_geometry(&self, g: &Graph) -> (usize, usize, bool) {
+        match g.node(self.main).op {
+            crate::graph::OpKind::Conv { k, stride, depthwise, .. } => (k, stride, depthwise),
+            _ => (1, 1, false),
+        }
+    }
+}
+
+/// The analyzer output: the original graph plus its group partition.
+#[derive(Debug, Clone)]
+pub struct GroupedGraph {
+    pub graph: Graph,
+    pub groups: Vec<Group>,
+    /// For each graph node, the group that contains it.
+    pub node_group: Vec<GroupId>,
+}
+
+impl GroupedGraph {
+    pub fn group(&self, id: GroupId) -> &Group {
+        &self.groups[id.0]
+    }
+
+    /// Groups that carry compute (conv/dwconv/fc/scale) — the paper's
+    /// "CONV layer" count at group granularity.
+    pub fn compute_groups(&self) -> impl Iterator<Item = &Group> {
+        self.groups.iter().filter(|gr| {
+            matches!(gr.kind, GroupKind::Conv | GroupKind::DwConv | GroupKind::Fc | GroupKind::Scale)
+        })
+    }
+
+    /// Group-level consumer map.
+    pub fn consumers(&self) -> Vec<Vec<GroupId>> {
+        let mut out = vec![Vec::new(); self.groups.len()];
+        for gr in &self.groups {
+            for &i in &gr.inputs {
+                out[i.0].push(gr.id);
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,19 @@
+//! CNN analyzer: reorganizes the fine-grained frozen graph into
+//! accelerator-executable *groups* (Fig. 5a — e.g. EfficientNet's 418
+//! protobuf nodes → 139 groups).
+//!
+//! A group is one invocation of the accelerator datapath: a main compute
+//! op (convolution / depthwise convolution / FC) plus everything the
+//! hardware chains behind the MAC arrays without a memory round-trip —
+//! batch-norm/bias (folded into the MAC output), activation, pooling,
+//! element-wise shortcut addition, SE squeeze (global average pooling,
+//! computed in parallel with the conv writeback, Fig. 13d) and
+//! upsampling ("Convolution, Activation, Normalization, Pooling,
+//! Elementwise (shortcut pass), and/or Up-sampling layers are fused
+//! together", §III-A).
+
+mod groups;
+mod fusion;
+
+pub use groups::{Group, GroupId, GroupKind, GroupedGraph, PoolKind};
+pub use fusion::analyze;

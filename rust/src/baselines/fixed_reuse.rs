@@ -1,0 +1,51 @@
+//! Fixed single-scheme baselines (no block-wise switching).
+
+use crate::alloc::allocate;
+use crate::analyzer::GroupedGraph;
+use crate::config::AccelConfig;
+use crate::isa::ReuseMode;
+use crate::optimizer::{dram_access, sram_size, DramBreakdown, SramBreakdown};
+use crate::sim::{simulate, simulate_fixed_row_baseline, NetworkTiming};
+
+/// Metrics of a fixed-policy run.
+pub struct FixedResult {
+    pub timing: NetworkTiming,
+    pub dram: DramBreakdown,
+    pub sram: SramBreakdown,
+}
+
+/// The proposed hardware running a *uniform* policy (all-row or
+/// all-frame) — the single-scheme ablation of the block-wise switch.
+pub fn fixed_policy(gg: &GroupedGraph, cfg: &AccelConfig, mode: ReuseMode) -> FixedResult {
+    let policy = vec![mode; gg.groups.len()];
+    let alloc = allocate(gg, &policy, cfg);
+    FixedResult {
+        timing: simulate(gg, &policy, &alloc, cfg),
+        dram: dram_access(gg, &policy, &alloc, cfg),
+        sram: sram_size(gg, &policy, &alloc, cfg),
+    }
+}
+
+/// The *naive* fixed row-based scheme of Fig. 16's baseline: weights
+/// re-fetched per output row (Table I), everything streamed off-chip.
+pub fn naive_row_baseline(gg: &GroupedGraph, cfg: &AccelConfig) -> NetworkTiming {
+    simulate_fixed_row_baseline(gg, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::zoo;
+
+    #[test]
+    fn naive_row_is_slowest() {
+        let gg = analyze(&zoo::yolov2(416));
+        let cfg = AccelConfig::kcu1500_int8();
+        let naive = naive_row_baseline(&gg, &cfg);
+        let row = fixed_policy(&gg, &cfg, ReuseMode::Row);
+        let frame = fixed_policy(&gg, &cfg, ReuseMode::Frame);
+        assert!(naive.latency_ms >= row.timing.latency_ms);
+        assert!(row.timing.latency_ms >= frame.timing.latency_ms * 0.99);
+    }
+}

@@ -1,0 +1,88 @@
+//! End-to-end FPGA framework baselines (Table VI) — published numbers
+//! for ML-Suite [44], FPL'19 [33] and Cloud-DNN [17] on ResNet50
+//! inference (closed systems; compared by their reported figures).
+
+/// One Table VI column.
+#[derive(Debug, Clone, Copy)]
+pub struct Framework {
+    pub name: &'static str,
+    pub platform: &'static str,
+    pub freq_mhz: f64,
+    pub input: usize,
+    pub precision_bits: usize,
+    pub latency_ms: f64,
+    pub luts_k: f64,
+    pub dsps: usize,
+    pub gops: f64,
+    pub flexible_reuse: bool,
+    pub shortcut_fusion_hw: bool,
+    pub sram_mb: f64,
+    pub dsp_efficiency_pct: f64,
+}
+
+/// Table VI literature rows.
+pub const TABLE6_FRAMEWORKS: [Framework; 3] = [
+    Framework {
+        name: "ML-Suite",
+        platform: "VU9P (16nm)",
+        freq_mhz: 500.0,
+        input: 224,
+        precision_bits: 8,
+        latency_ms: 7.77,
+        luts_k: 612.0,
+        dsps: 5493,
+        gops: 1290.0,
+        flexible_reuse: false,
+        shortcut_fusion_hw: false,
+        sram_mb: 31.2,
+        dsp_efficiency_pct: 23.47,
+    },
+    Framework {
+        name: "FPL'19",
+        platform: "VU9P (16nm)",
+        freq_mhz: 125.0,
+        input: 224,
+        precision_bits: 8,
+        latency_ms: 23.8,
+        luts_k: 605.0,
+        dsps: 6005,
+        gops: 328.0,
+        flexible_reuse: false,
+        shortcut_fusion_hw: false,
+        sram_mb: 18.8,
+        dsp_efficiency_pct: 21.85,
+    },
+    Framework {
+        name: "Cloud-DNN",
+        platform: "VU9P (16nm)",
+        freq_mhz: 214.0,
+        input: 224,
+        precision_bits: 16,
+        latency_ms: 8.12,
+        luts_k: 696.0,
+        dsps: 5489,
+        gops: 1235.0,
+        flexible_reuse: false,
+        shortcut_fusion_hw: false,
+        sram_mb: 38.3,
+        dsp_efficiency_pct: 52.58,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claims_hold_against_constants() {
+        // §V-B: "7.4× less SRAM than Cloud-DNN", "2.4× higher DSP
+        // efficiency than ML-Suite", "6.0× less SRAM than ML-Suite".
+        let ours_sram = 5.2;
+        let ours_eff = 56.14;
+        let cloud = &TABLE6_FRAMEWORKS[2];
+        let mls = &TABLE6_FRAMEWORKS[0];
+        assert!((cloud.sram_mb / ours_sram - 7.4).abs() < 0.3);
+        assert!((ours_eff / mls.dsp_efficiency_pct - 2.4).abs() < 0.1);
+        assert!((mls.sram_mb / ours_sram - 6.0).abs() < 0.1);
+    }
+}

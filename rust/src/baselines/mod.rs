@@ -1,0 +1,21 @@
+//! Comparison baselines for the paper's evaluation tables.
+//!
+//! | module | reproduces |
+//! |---|---|
+//! | [`fixed_reuse`] | Fig 16's "fixed row-based" baseline + fixed-frame |
+//! | [`shortcut_mining`] | ShortcutMining (HPCA'19 [8]) — Table II |
+//! | [`smartshuttle`] | SmartShuttle (DATE'18 [12]) — Table IV |
+//! | [`olaccel`] | OLAccel (ISCA'18 [38]) constants — Table IV |
+//! | [`frameworks`] | ML-Suite / FPL'19 / Cloud-DNN constants — Table VI |
+//! | [`gpu_model`] | analytical GPU latency/power — Figs 2/18 |
+
+pub mod fixed_reuse;
+pub mod shortcut_mining;
+pub mod smartshuttle;
+pub mod olaccel;
+pub mod frameworks;
+pub mod gpu_model;
+
+pub use gpu_model::{Gpu, GpuEstimate};
+pub use shortcut_mining::shortcut_mining_fm_traffic;
+pub use smartshuttle::{smartshuttle_dram, SmartShuttleResult};

@@ -1,0 +1,24 @@
+//! OLAccel (Park, Kim & Yoo, ISCA'18 [38]) — literature constants for
+//! the Table IV row (a closed design; the paper compares against its
+//! published numbers, as do we).
+
+/// OLAccel on VGG-CONV as reported in Table IV.
+#[derive(Debug, Clone, Copy)]
+pub struct OlAccel {
+    pub precision: &'static str,
+    pub sram_mb: f64,
+    pub dram_mb: f64,
+}
+
+/// Table IV row.
+pub const OLACCEL_VGG: OlAccel =
+    OlAccel { precision: "mixed (4,8)", sram_mb: 2.4, dram_mb: 42.8 };
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn constants_match_table4() {
+        assert_eq!(super::OLACCEL_VGG.sram_mb, 2.4);
+        assert_eq!(super::OLACCEL_VGG.dram_mb, 42.8);
+    }
+}

@@ -1,0 +1,80 @@
+//! ShortcutMining (Azizimazreah & Chen, HPCA'19 [8]) baseline model —
+//! the Table II comparison.
+//!
+//! ShortcutMining "mines" cross-layer shortcut reuse by reserving
+//! untouched buffer space for shortcut tensors, but keeps a **fixed**
+//! data-reuse scheme for the main path: every layer's input and output
+//! feature-maps still stream through DRAM once (its large banked buffer
+//! holds tiles + shortcuts, not whole inter-layer tensors). Weights are
+//! re-fetched per tile pass in [8]'s weight-stationary flavour; Table II
+//! lists "Weight Load: Multiple times" — we model the dominant fmap term
+//! and a 2× weight factor.
+
+use crate::analyzer::{GroupKind, GroupedGraph};
+use crate::config::AccelConfig;
+
+/// Feature-map DRAM traffic under the ShortcutMining policy: in + out of
+/// every compute layer streams once; *shortcut second operands are free*
+/// (the mined on-chip reuse — the 40 % saving the paper cites), as are
+/// fused-pool intermediates.
+pub fn shortcut_mining_fm_traffic(gg: &GroupedGraph, cfg: &AccelConfig) -> u64 {
+    let qa = cfg.qa;
+    let mut bytes = 0u64;
+    for gr in &gg.groups {
+        match gr.kind {
+            GroupKind::Input | GroupKind::Concat => continue,
+            GroupKind::Fc => continue, // vectors, negligible
+            _ => {}
+        }
+        if gr.out_shape.h * gr.out_shape.w <= 1 {
+            continue;
+        }
+        bytes += gr.in_shape.bytes(qa) as u64;
+        bytes += gr.out_shape.bytes(qa) as u64;
+        // shortcut operand: mined on-chip -> no traffic
+    }
+    bytes
+}
+
+/// Total weight traffic under [8]: loaded "multiple times" — modelled as
+/// twice (once per reuse pass over the large banked buffer).
+pub fn shortcut_mining_weight_traffic(gg: &GroupedGraph, cfg: &AccelConfig) -> u64 {
+    2 * gg.graph.total_weight_bytes(cfg.qw as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::allocate;
+    use crate::analyzer::analyze;
+    use crate::isa::ReuseMode;
+    use crate::optimizer::dram_access;
+    use crate::zoo;
+
+    #[test]
+    fn table2_resnet152_fm_traffic_scale() {
+        // Table II (16-bit, 224×224): ShortcutMining off-chip FMs
+        // = 62.93 MB; proposed = 11.97 MB.
+        let gg = analyze(&zoo::resnet152(224));
+        let cfg = AccelConfig::table2_int16();
+        let sm = shortcut_mining_fm_traffic(&gg, &cfg) as f64 / 1e6;
+        assert!(
+            (40.0..95.0).contains(&sm),
+            "ShortcutMining FM {sm:.1} MB vs paper 62.93"
+        );
+    }
+
+    #[test]
+    fn proposed_beats_shortcut_mining_5x() {
+        // Abstract: "the proposed work reduces off-chip access for
+        // feature-maps 5.27×" given a similar buffer size.
+        let gg = analyze(&zoo::resnet152(224));
+        let cfg = AccelConfig::table2_int16();
+        let sm = shortcut_mining_fm_traffic(&gg, &cfg);
+        let policy = vec![ReuseMode::Frame; gg.groups.len()];
+        let alloc = allocate(&gg, &policy, &cfg);
+        let ours = dram_access(&gg, &policy, &alloc, &cfg).fm_bytes;
+        let factor = sm as f64 / ours as f64;
+        assert!(factor > 3.0, "only {factor:.2}× better (sm {sm}, ours {ours})");
+    }
+}

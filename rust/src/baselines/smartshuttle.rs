@@ -1,0 +1,117 @@
+//! SmartShuttle (Li et al., DATE'18 [12]) baseline — the Table IV
+//! comparison on VGG-CONV.
+//!
+//! SmartShuttle switches *per layer* between a partial-sum-oriented
+//! scheme (outputs resident, inputs/weights re-streamed) and a
+//! weight-oriented scheme (weights resident per tile, inputs re-read per
+//! output-channel tile), under a global buffer capacity. We reproduce
+//! its published cost model at tile granularity and pick the per-layer
+//! minimum — enough to land at its reported ~58 MB for VGG16-CONV with a
+//! 512 KB buffer ("the buffer size, which is larger than 512 KB, does
+//! not help to reduce the DRAM access").
+
+use crate::analyzer::{GroupKind, GroupedGraph};
+use crate::config::AccelConfig;
+use crate::graph::OpKind;
+
+/// Per-network result of the SmartShuttle model.
+#[derive(Debug, Clone, Copy)]
+pub struct SmartShuttleResult {
+    pub dram_bytes: u64,
+    /// Layers that chose the psum-oriented scheme.
+    pub psum_layers: usize,
+    /// Layers that chose the weight-oriented scheme.
+    pub weight_layers: usize,
+}
+
+/// Evaluate SmartShuttle's DRAM traffic with `buffer_bytes` of on-chip
+/// SRAM.
+pub fn smartshuttle_dram(gg: &GroupedGraph, cfg: &AccelConfig, buffer_bytes: usize) -> SmartShuttleResult {
+    let qa = cfg.qa as u64;
+    let qw = cfg.qw as u64;
+    let qs = 4u64; // psum width
+    let mut dram = 0u64;
+    let (mut psum_layers, mut weight_layers) = (0usize, 0usize);
+
+    for gr in &gg.groups {
+        let node = gg.graph.node(gr.main);
+        let (k, in_c, out_c, oh, ow) = match node.op {
+            OpKind::Conv { k, out_c, depthwise: false, .. } => (
+                k as u64,
+                node.in_shapes[0].c as u64,
+                out_c as u64,
+                node.out_shape.h as u64,
+                node.out_shape.w as u64,
+            ),
+            _ => {
+                // non-conv groups stream once (pool/eltwise handled by the
+                // conv they fuse with in [12]'s model)
+                if matches!(gr.kind, GroupKind::Pool | GroupKind::Eltwise | GroupKind::Upsample) {
+                    dram += (gr.in_shape.bytes(qa as usize) + gr.out_shape.bytes(qa as usize)) as u64;
+                }
+                continue;
+            }
+        };
+        let in_size = gr.in_shape.bytes(qa as usize) as u64;
+        let out_size = (oh * ow * out_c) * qa;
+        let w_size = k * k * in_c * out_c * qw;
+        let buf = buffer_bytes as u64;
+
+        // --- psum-oriented: output tile resident in Q_S; weights stream
+        // once; inputs re-read once per output-channel pass.
+        // passes_po = ceil(out_c / oc_tile) where oc_tile fills the buffer
+        // with an oh×ow×oc_tile psum block.
+        let oc_tile = (buf / (oh * ow * qs)).clamp(1, out_c);
+        let passes_po = out_c.div_ceil(oc_tile);
+        let cost_po = passes_po * in_size + out_size + w_size;
+
+        // --- weight-oriented: weight tile resident; inputs stream once
+        // per input-channel pass; partial sums spill to DRAM between
+        // passes (read+write per extra pass) and the final pass writes
+        // the quantized output.
+        let ic_tile = (buf / (k * k * out_c * qw).max(1)).clamp(1, in_c);
+        let passes_wo = in_c.div_ceil(ic_tile);
+        let cost_wo = in_size + w_size + (passes_wo - 1) * 2 * (oh * ow * out_c) * qs + out_size;
+
+        if cost_po <= cost_wo {
+            psum_layers += 1;
+            dram += cost_po;
+        } else {
+            weight_layers += 1;
+            dram += cost_wo;
+        }
+    }
+    SmartShuttleResult { dram_bytes: dram, psum_layers, weight_layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::zoo;
+
+    #[test]
+    fn table4_vgg_traffic_scale() {
+        // Table IV: SmartShuttle on VGG-CONV (8-bit, 0.75 MB buffer):
+        // 58.1 MB DRAM.
+        let gg = analyze(&zoo::vgg16_conv(224));
+        let cfg = AccelConfig::kcu1500_int8();
+        let r = smartshuttle_dram(&gg, &cfg, 750_000);
+        let mb = r.dram_bytes as f64 / 1e6;
+        assert!((35.0..85.0).contains(&mb), "SmartShuttle {mb:.1} MB vs paper 58.1");
+        assert!(r.psum_layers + r.weight_layers == 13);
+    }
+
+    #[test]
+    fn bigger_buffer_saturates() {
+        // [12]: ">512 KB does not help" — traffic must plateau.
+        let gg = analyze(&zoo::vgg16_conv(224));
+        let cfg = AccelConfig::kcu1500_int8();
+        let small = smartshuttle_dram(&gg, &cfg, 256_000).dram_bytes;
+        let mid = smartshuttle_dram(&gg, &cfg, 1_000_000).dram_bytes;
+        let big = smartshuttle_dram(&gg, &cfg, 8_000_000).dram_bytes;
+        assert!(small >= mid && mid >= big);
+        let plateau = (mid - big) as f64 / mid as f64;
+        assert!(plateau < 0.35, "still improving by {plateau}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Bench harness (criterion is unavailable offline — DESIGN.md §9).
+//!
+//! Provides wall-clock measurement with warmup + median/mean reporting,
+//! aligned text tables, and the *paper-vs-measured* row format every
+//! `benches/*.rs` target uses to regenerate its table or figure.
+
+use std::time::Instant;
+
+/// Result of timing a closure.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: usize,
+    pub median_ms: f64,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Time `f` for `iters` iterations after one warmup run.
+pub fn time<R>(iters: usize, mut f: impl FnMut() -> R) -> Timing {
+    assert!(iters > 0);
+    std::hint::black_box(f()); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        iters,
+        median_ms: samples[samples.len() / 2],
+        mean_ms: samples.iter().sum::<f64>() / samples.len() as f64,
+        min_ms: samples[0],
+        max_ms: *samples.last().unwrap(),
+    }
+}
+
+/// Print a harness-timing line in a stable, grep-friendly format.
+pub fn report_timing(name: &str, t: &Timing) {
+    println!(
+        "bench {name}: median {:.3} ms, mean {:.3} ms (min {:.3}, max {:.3}, n={})",
+        t.median_ms, t.mean_ms, t.min_ms, t.max_ms, t.iters
+    );
+}
+
+/// Aligned text table builder.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Format a paper-vs-measured comparison cell: `measured (paper X, ×r)`.
+pub fn vs_paper(measured: f64, paper: f64, unit: &str) -> String {
+    let ratio = if paper != 0.0 { measured / paper } else { f64::NAN };
+    format!("{measured:.2} {unit} (paper {paper:.2}, x{ratio:.2})")
+}
+
+/// Two-column number formatting helpers used across benches.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn i0(v: usize) -> String {
+    format!("{v}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let t = time(5, || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(t.median_ms >= 0.0 && t.min_ms <= t.median_ms && t.median_ms <= t.max_ms);
+    }
+
+    #[test]
+    fn table_roundtrips() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // shouldn't panic
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_checks_columns() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn vs_paper_format() {
+        let s = vs_paper(10.0, 20.0, "ms");
+        assert!(s.contains("x0.50"), "{s}");
+    }
+}

@@ -1,0 +1,219 @@
+//! Accelerator configuration (the hardware the compiler targets).
+//!
+//! Mirrors the paper's two instantiations: the KCU1500 8-bit design of
+//! Table V (Ti = To = 64, 200 MHz, shared-MAC double-INT8) and the 16-bit
+//! VC707-class comparison configuration of Table II (one multiply per
+//! DSP, ShortcutMining-equivalent BRAM budget). A TOML-subset parser
+//! loads overrides from `configs/*.toml` (serde/toml are unavailable
+//! offline — DESIGN.md §9).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Hardware description consumed by the optimizer, the timing simulator
+/// and the power model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccelConfig {
+    /// Human-readable name for reports.
+    pub name: String,
+    /// Input-channel parallelism (buffer banks).
+    pub ti: usize,
+    /// Output-channel parallelism (MAC array pairs).
+    pub to: usize,
+    /// Clock frequency in MHz.
+    pub freq_mhz: f64,
+    /// DSP slices used by the MAC arrays.
+    pub dsp_mac: usize,
+    /// Total DSPs reported for utilization rows (MAC + datapath misc).
+    pub dsp_total: usize,
+    /// Multiplications per DSP per cycle for *normal* conv (2 with the
+    /// shared-MAC double-INT8 trick, 1 in 16-bit mode — Fig. 7).
+    pub mults_per_dsp: usize,
+    /// BRAM18K blocks available on the device.
+    pub bram18k_total: usize,
+    /// Feature-map precision in bytes (`Q_A`).
+    pub qa: usize,
+    /// Weight precision in bytes.
+    pub qw: usize,
+    /// Partial-sum precision in bytes (`Q_S`, 4-byte accumulators).
+    pub qs: usize,
+    /// Effective DRAM bandwidth in GB/s (one DDR4-2400 x64 channel
+    /// de-rated to 85 % efficiency on the KCU1500).
+    pub dram_gbps: f64,
+    /// SRAM budget for the three physical buffers + fixed buffers, bytes.
+    /// The optimizer's eq-10 constraint.
+    pub sram_budget: usize,
+}
+
+impl AccelConfig {
+    /// The paper's main 8-bit KCU1500 configuration (Table V).
+    pub fn kcu1500_int8() -> Self {
+        AccelConfig {
+            name: "KCU1500-int8".into(),
+            ti: 64,
+            to: 64,
+            freq_mhz: 200.0,
+            // 2048 shared MACs ("the shared MAC array contains 2048 MACs,
+            // which supports 4096 multiplications per [cycle]").
+            dsp_mac: 2048,
+            dsp_total: 2240,
+            mults_per_dsp: 2,
+            bram18k_total: 4320,
+            qa: 1,
+            qw: 1,
+            qs: 4,
+            dram_gbps: 19.2 * 0.85,
+            // Bounded by the device BRAM (4320 x 18 Kb ~ 9 MB raw); Table VI
+            // reports 5.2 MB for the paper instance — per-network BRAM
+            // utilization varies 50-87 % in Tables V/VII.
+            sram_budget: 8_000_000,
+        }
+    }
+
+    /// 16-bit configuration used for the ShortcutMining comparison
+    /// (Table II): one multiplication per DSP, BRAM constrained to the
+    /// VC707's 2040 × 18 Kb budget.
+    pub fn table2_int16() -> Self {
+        AccelConfig {
+            name: "KCU1500-int16-T2".into(),
+            ti: 32,
+            to: 32,
+            freq_mhz: 200.0,
+            dsp_mac: 2048,
+            dsp_total: 2240,
+            mults_per_dsp: 1,
+            bram18k_total: 2040,
+            qa: 2,
+            qw: 2,
+            qs: 4,
+            dram_gbps: 19.2 * 0.85,
+            // ShortcutMining's 2040 BRAM18K ≈ 4.48 MB of raw SRAM.
+            sram_budget: 4_480_000,
+        }
+    }
+
+    /// Peak GOPS of the MAC arrays (the denominator of the paper's DSP
+    /// efficiency metric: `4 × freq × N_DSP` in INT8 mode).
+    pub fn peak_gops(&self) -> f64 {
+        // mults/cycle × 2 ops (mul+acc) × freq
+        (self.dsp_mac * self.mults_per_dsp) as f64 * 2.0 * self.freq_mhz / 1e3
+    }
+
+    /// Multiplications per cycle for normal convolution.
+    pub fn mults_per_cycle_normal(&self) -> usize {
+        self.dsp_mac * self.mults_per_dsp
+    }
+
+    /// Multiplications per cycle for depthwise convolution (no input
+    /// sharing — single-mult mode, Fig. 7b).
+    pub fn mults_per_cycle_depthwise(&self) -> usize {
+        self.dsp_mac
+    }
+
+    /// DRAM bytes transferable per accelerator clock cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_gbps * 1e9 / (self.freq_mhz * 1e6)
+    }
+
+    /// Load from a TOML-subset file, starting from the named preset and
+    /// applying overrides.
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse the TOML subset: `key = value` lines, `#` comments, one
+    /// optional `[accelerator]` section header, string/number/bool values.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let kv = parse_toml_subset(text)?;
+        let preset = kv.get("preset").map(String::as_str).unwrap_or("kcu1500_int8");
+        let mut cfg = match preset {
+            "kcu1500_int8" => Self::kcu1500_int8(),
+            "table2_int16" => Self::table2_int16(),
+            other => bail!("unknown preset {other:?}"),
+        };
+        for (k, v) in &kv {
+            match k.as_str() {
+                "preset" => {}
+                "name" => cfg.name = v.clone(),
+                "ti" => cfg.ti = parse_num(k, v)? as usize,
+                "to" => cfg.to = parse_num(k, v)? as usize,
+                "freq_mhz" => cfg.freq_mhz = parse_num(k, v)?,
+                "dsp_mac" => cfg.dsp_mac = parse_num(k, v)? as usize,
+                "dsp_total" => cfg.dsp_total = parse_num(k, v)? as usize,
+                "mults_per_dsp" => cfg.mults_per_dsp = parse_num(k, v)? as usize,
+                "bram18k_total" => cfg.bram18k_total = parse_num(k, v)? as usize,
+                "qa" => cfg.qa = parse_num(k, v)? as usize,
+                "qw" => cfg.qw = parse_num(k, v)? as usize,
+                "qs" => cfg.qs = parse_num(k, v)? as usize,
+                "dram_gbps" => cfg.dram_gbps = parse_num(k, v)?,
+                "sram_budget" => cfg.sram_budget = parse_num(k, v)? as usize,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+fn parse_num(key: &str, v: &str) -> Result<f64> {
+    v.parse::<f64>().map_err(|_| anyhow!("config key {key}: bad number {v:?}"))
+}
+
+/// `key = value` lines with comments and an optional section header.
+fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", ln + 1))?;
+        let v = v.trim().trim_matches('"').to_string();
+        out.insert(k.trim().to_string(), v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_gops_matches_paper() {
+        // 2048 DSPs × 2 mult × 2 op × 0.2 GHz = 1638.4 GOPS — the
+        // denominator behind Table V's 71 % MAC efficiency at 1163 GOPS.
+        let c = AccelConfig::kcu1500_int8();
+        assert!((c.peak_gops() - 1638.4).abs() < 0.1);
+        // Table II (16-bit): 2048 × 1 × 2 × 0.2 = 819.2 GOPS peak.
+        let c16 = AccelConfig::table2_int16();
+        assert!((c16.peak_gops() - 819.2).abs() < 0.1);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = AccelConfig::from_toml(
+            "# comment\n[accelerator]\npreset = \"kcu1500_int8\"\nfreq_mhz = 300\nti = 32\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.freq_mhz, 300.0);
+        assert_eq!(cfg.ti, 32);
+        assert_eq!(cfg.to, 64); // untouched
+    }
+
+    #[test]
+    fn toml_rejects_unknown_keys() {
+        assert!(AccelConfig::from_toml("bogus = 1\n").is_err());
+        assert!(AccelConfig::from_toml("preset = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn dram_bytes_per_cycle_sane() {
+        let c = AccelConfig::kcu1500_int8();
+        // 16.3 GB/s at 200 MHz ≈ 81 B/cycle.
+        assert!((c.dram_bytes_per_cycle() - 81.6).abs() < 1.0);
+    }
+}

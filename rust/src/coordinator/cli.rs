@@ -1,0 +1,293 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §9).
+//!
+//! ```text
+//! shortcutfusion list
+//! shortcutfusion compile <model> [--input N] [--config FILE]
+//! shortcutfusion sweep   <model> [--input N]
+//! shortcutfusion minbuf  [<model> ...]
+//! shortcutfusion export  <model> [--input N] --out FILE
+//! shortcutfusion load    FILE
+//! shortcutfusion help
+//! ```
+
+use crate::bench::Table;
+use crate::config::AccelConfig;
+use crate::coordinator::pipeline::compile_model;
+use crate::optimizer::Optimizer;
+use crate::serialize::{load_frozen, save_frozen};
+use crate::zoo;
+use anyhow::{anyhow, bail, Result};
+
+const HELP: &str = "\
+ShortcutFusion — reuse-aware CNN compiler for a shared-MAC accelerator
+
+USAGE:
+    shortcutfusion <command> [args]
+
+COMMANDS:
+    list                         list zoo models
+    compile <model> [--input N] [--config FILE]
+                                 run the full pipeline and print the report
+    sweep <model> [--input N] [--csv FILE]
+                                 cut-point sweep (Fig 16/17 series)
+    minbuf [<model> ...]         minimum buffer search (Table III)
+    export <model> [--input N] --out FILE
+                                 write the frozen-graph JSON
+    load FILE                    parse a frozen-graph JSON and report stats
+    report [--threads N]         compile the whole zoo in parallel (summary table)
+    help                         this text
+";
+
+/// CLI entry point.
+pub fn run(args: Vec<String>) -> Result<()> {
+    let mut it = args.into_iter();
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = it.collect();
+    match cmd.as_str() {
+        "list" => {
+            for &m in zoo::MODEL_NAMES {
+                println!("{m} (default input {})", zoo::default_input(m));
+            }
+            Ok(())
+        }
+        "compile" => cmd_compile(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "minbuf" => cmd_minbuf(&rest),
+        "export" => cmd_export(&rest),
+        "load" => cmd_load(&rest),
+        "report" => cmd_report(&rest),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} — try `shortcutfusion help`"),
+    }
+}
+
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn parse_model(args: &[String]) -> Result<(crate::graph::Graph, AccelConfig)> {
+    let name = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .ok_or_else(|| anyhow!("expected a model name — see `shortcutfusion list`"))?;
+    let input = match flag_value(args, "--input") {
+        Some(v) => v.parse::<usize>().map_err(|_| anyhow!("bad --input {v:?}"))?,
+        None => zoo::default_input(name),
+    };
+    let cfg = match flag_value(args, "--config") {
+        Some(p) => AccelConfig::from_toml_file(std::path::Path::new(&p))?,
+        None => AccelConfig::kcu1500_int8(),
+    };
+    let graph = zoo::by_name(name, input)
+        .ok_or_else(|| anyhow!("unknown model {name:?} — see `shortcutfusion list`"))?;
+    Ok((graph, cfg))
+}
+
+fn cmd_compile(args: &[String]) -> Result<()> {
+    let (graph, cfg) = parse_model(args)?;
+    let r = compile_model(&graph, &cfg);
+    println!("model: {} ({} nodes, {} groups)", r.model, r.grouped.graph.nodes.len(), r.grouped.groups.len());
+    println!("target: {} ({} MHz, Ti=To={}, {} DSP MACs)", cfg.name, cfg.freq_mhz, cfg.ti, cfg.dsp_mac);
+    println!("cuts: {:?} ({} row / {} frame groups)", r.evaluation.cuts.cuts, r.row_groups, r.frame_groups);
+    println!("instruction stream: {} x 11 words = {} bytes", r.stream.len(), r.stream.byte_size());
+    println!("latency: {:.3} ms ({:.1} fps)", r.latency_ms(), r.fps());
+    println!("throughput: {:.1} GOPS, MAC efficiency {:.1} %", r.gops(), r.mac_efficiency_pct());
+    println!("SRAM: {:.3} MB ({} BRAM18K)", r.sram_mb(), r.bram18k());
+    println!(
+        "DRAM: {:.2} MB total ({:.2} MB feature maps); baseline-once {:.2} MB -> reduction {:.1} %",
+        r.offchip_total_mb(),
+        r.offchip_fm_mb(),
+        r.baseline_once_mb(),
+        r.reduction_pct()
+    );
+    println!(
+        "power: {:.1} W (chip {:.1} + DRAM {:.1}) -> {:.1} GOPS/W",
+        r.power.total_w, r.power.chip_w, r.power.dram_w, r.power.gops_per_w
+    );
+    if !r.evaluation.feasible {
+        println!("WARNING: no feasible policy under the configured SRAM budget");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let (graph, cfg) = parse_model(args)?;
+    let gg = crate::analyzer::analyze(&graph);
+    let opt = Optimizer::new(&gg, &cfg);
+    let sweep = opt.sweep_first_segment();
+    // figure-regeneration output: --csv FILE writes the raw series
+    if let Some(csv) = flag_value(args, "--csv") {
+        let mut out = String::from("cut,sram_mb,bram18k,dram_total_mb,dram_fm_mb,latency_ms,feasible\n");
+        for p in &sweep {
+            out.push_str(&format!(
+                "{},{:.6},{},{:.6},{:.6},{:.6},{}\n",
+                p.cut, p.sram_mb, p.bram18k, p.dram_total_mb, p.dram_fm_mb, p.latency_ms, p.feasible
+            ));
+        }
+        std::fs::write(&csv, out)?;
+        println!("wrote {csv}");
+    }
+    let mut t = Table::new(
+        &format!("cut-point sweep: {} (first of {} segments)", graph.name, opt.segs.len()),
+        &["cut", "SRAM MB", "BRAM18K", "DRAM MB", "FM MB", "latency ms", "feasible"],
+    );
+    for p in sweep {
+        t.row(&[
+            p.cut.to_string(),
+            format!("{:.3}", p.sram_mb),
+            p.bram18k.to_string(),
+            format!("{:.2}", p.dram_total_mb),
+            format!("{:.2}", p.dram_fm_mb),
+            format!("{:.3}", p.latency_ms),
+            p.feasible.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_minbuf(args: &[String]) -> Result<()> {
+    let models: Vec<&str> = if args.is_empty() {
+        zoo::MODEL_NAMES.to_vec()
+    } else {
+        args.iter().map(String::as_str).collect()
+    };
+    let cfg = AccelConfig::kcu1500_int8();
+    let mut t = Table::new(
+        "minimum buffer size meeting the DRAM constraints (Table III)",
+        &["model", "input", "min SRAM MB", "BRAM18K", "latency ms"],
+    );
+    for name in models {
+        let input = zoo::default_input(name);
+        let graph = zoo::by_name(name, input)
+            .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+        let gg = crate::analyzer::analyze(&graph);
+        let opt = Optimizer::new(&gg, &cfg);
+        let e = opt.min_buffer();
+        t.row(&[
+            name.to_string(),
+            input.to_string(),
+            format!("{:.3}", e.sram.total as f64 / 1e6),
+            e.sram.bram18k.to_string(),
+            format!("{:.3}", e.latency_ms),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_export(args: &[String]) -> Result<()> {
+    let (graph, _cfg) = parse_model(args)?;
+    let out = flag_value(args, "--out").ok_or_else(|| anyhow!("--out FILE required"))?;
+    save_frozen(&graph, std::path::Path::new(&out))?;
+    println!("wrote {} ({} nodes)", out, graph.nodes.len());
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> Result<()> {
+    let threads = flag_value(args, "--threads")
+        .map(|v| v.parse::<usize>().unwrap_or(4))
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    let cfg = AccelConfig::kcu1500_int8();
+    let results = crate::coordinator::sweep::sweep_zoo(&cfg, threads);
+    let mut t = Table::new(
+        &format!("zoo report on {} ({} threads)", cfg.name, threads),
+        &["model", "latency ms", "GOPS", "eff %", "DRAM MB", "reduction %", "SRAM MB", "feasible"],
+    );
+    for r in results {
+        match r {
+            Ok(r) => t.row(&[
+                r.model.clone(),
+                format!("{:.2}", r.latency_ms()),
+                format!("{:.0}", r.gops()),
+                format!("{:.1}", r.mac_efficiency_pct()),
+                format!("{:.1}", r.offchip_total_mb()),
+                format!("{:.1}", r.reduction_pct()),
+                format!("{:.2}", r.sram_mb()),
+                r.evaluation.feasible.to_string(),
+            ]),
+            Err(e) => t.row(&[e, "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()]),
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_load(args: &[String]) -> Result<()> {
+    let path = args.first().ok_or_else(|| anyhow!("expected a file path"))?;
+    let g = load_frozen(std::path::Path::new(path))?;
+    println!(
+        "{}: {} nodes, {} conv layers, {:.2} GOP, {:.2} M params",
+        g.name,
+        g.nodes.len(),
+        g.conv_layer_count(),
+        g.total_gop(),
+        g.total_weight_bytes(1) as f64 / 1e6
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_and_list_run() {
+        run(vec!["help".into()]).unwrap();
+        run(vec!["list".into()]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn compile_small_model() {
+        run(vec!["compile".into(), "resnet18".into(), "--input".into(), "64".into()]).unwrap();
+    }
+
+    #[test]
+    fn export_load_roundtrip() {
+        let dir = std::env::temp_dir().join("sf_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.json");
+        run(vec![
+            "export".into(),
+            "resnet18".into(),
+            "--input".into(),
+            "64".into(),
+            "--out".into(),
+            p.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        run(vec!["load".into(), p.to_string_lossy().into_owned()]).unwrap();
+    }
+
+    #[test]
+    fn sweep_writes_csv() {
+        let dir = std::env::temp_dir().join("sf_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sweep.csv");
+        run(vec![
+            "sweep".into(),
+            "resnet18".into(),
+            "--input".into(),
+            "64".into(),
+            "--csv".into(),
+            p.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("cut,sram_mb"));
+        assert!(text.lines().count() > 2);
+    }
+
+    #[test]
+    fn bad_model_errors() {
+        assert!(run(vec!["compile".into(), "alexnet".into()]).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Coordinator: the end-to-end pipeline driver (Fig. 4) and the CLI.
+
+pub mod pipeline;
+pub mod sweep;
+pub mod cli;
+
+pub use pipeline::{compile_model, CompileReport};
+pub use sweep::{run_jobs, sweep_zoo, Job};

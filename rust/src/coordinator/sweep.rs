@@ -1,0 +1,97 @@
+//! Multi-threaded sweep executor: compile many (model, input, config)
+//! jobs in parallel with `std::thread` (the pipeline is CPU-bound search;
+//! tokio would add nothing — DESIGN.md §9).
+
+use crate::config::AccelConfig;
+use crate::coordinator::pipeline::{compile_model, CompileReport};
+use crate::zoo;
+use std::sync::mpsc;
+
+/// One sweep job.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub model: String,
+    pub input: usize,
+    pub cfg: AccelConfig,
+}
+
+/// Compile all jobs across `threads` workers; results come back in job
+/// order. Unknown models yield `Err` entries instead of poisoning the
+/// batch.
+pub fn run_jobs(jobs: Vec<Job>, threads: usize) -> Vec<Result<CompileReport, String>> {
+    assert!(threads > 0);
+    let n = jobs.len();
+    let (tx, rx) = mpsc::channel::<(usize, Result<CompileReport, String>)>();
+    let jobs = std::sync::Arc::new(jobs);
+    let next = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n.max(1)) {
+            let tx = tx.clone();
+            let jobs = jobs.clone();
+            let next = next.clone();
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= jobs.len() {
+                    return;
+                }
+                let job = &jobs[i];
+                let result = match zoo::by_name(&job.model, job.input) {
+                    Some(g) => Ok(compile_model(&g, &job.cfg)),
+                    None => Err(format!("unknown model {:?}", job.model)),
+                };
+                let _ = tx.send((i, result));
+            });
+        }
+    });
+    drop(tx);
+
+    let mut out: Vec<Option<Result<CompileReport, String>>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|r| r.expect("worker delivered every job")).collect()
+}
+
+/// Compile every zoo model at its default input on `cfg`.
+pub fn sweep_zoo(cfg: &AccelConfig, threads: usize) -> Vec<Result<CompileReport, String>> {
+    let jobs = zoo::MODEL_NAMES
+        .iter()
+        .map(|&m| Job { model: m.to_string(), input: zoo::default_input(m), cfg: cfg.clone() })
+        .collect();
+    run_jobs(jobs, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let cfg = AccelConfig::kcu1500_int8();
+        let jobs: Vec<Job> = ["resnet18", "vgg16-conv", "yolov2"]
+            .iter()
+            .map(|&m| Job { model: m.into(), input: 64, cfg: cfg.clone() })
+            .collect();
+        let par = run_jobs(jobs.clone(), 3);
+        let ser = run_jobs(jobs, 1);
+        for (p, s) in par.iter().zip(&ser) {
+            let (p, s) = (p.as_ref().unwrap(), s.as_ref().unwrap());
+            assert_eq!(p.model, s.model);
+            assert_eq!(p.timing.total_cycles, s.timing.total_cycles);
+            assert_eq!(p.evaluation.dram.total, s.evaluation.dram.total);
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_isolated() {
+        let cfg = AccelConfig::kcu1500_int8();
+        let jobs = vec![
+            Job { model: "resnet18".into(), input: 64, cfg: cfg.clone() },
+            Job { model: "alexnet".into(), input: 64, cfg: cfg.clone() },
+        ];
+        let out = run_jobs(jobs, 2);
+        assert!(out[0].is_ok());
+        assert!(out[1].is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! Graph execution with the fused-datapath semantics.
+//!
+//! Values are computed node-by-node in topological order; each node's
+//! arithmetic matches what the accelerator's fused group applies at the
+//! corresponding pipeline stage (fusion is order-preserving, so the
+//! node-level walk is bit-identical to group-level execution). The
+//! executor cross-checks the lowered instruction stream's geometry
+//! against the graph as it goes — decode errors or mismatched shapes
+//! fail the run.
+
+use super::ops;
+use super::params::Params;
+use super::tensor::Tensor;
+use crate::analyzer::GroupedGraph;
+use crate::graph::{Activation, NodeId, OpKind};
+use crate::isa::InstructionStream;
+use std::fmt;
+
+/// Execution failure.
+#[derive(Debug, Clone)]
+pub struct ExecError(pub String);
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "funcsim: {}", self.0)
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// The functional simulator.
+pub struct Executor<'a> {
+    pub gg: &'a GroupedGraph,
+    pub params: &'a Params,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(gg: &'a GroupedGraph, params: &'a Params) -> Self {
+        Executor { gg, params }
+    }
+
+    /// Parameters of the group containing `node`, looked up by the
+    /// group's main-node name.
+    fn group_params(&self, node: NodeId) -> Option<&super::params::GroupParams> {
+        let gid = self.gg.node_group[node.0];
+        let main = self.gg.groups[gid.0].main;
+        self.params.get(&self.gg.graph.node(main).name)
+    }
+
+    /// Run the network on `input`; returns one value slot per graph node.
+    pub fn run(&self, input: &Tensor) -> Result<Vec<Tensor>, ExecError> {
+        let g = &self.gg.graph;
+        if input.shape != g.input().out_shape {
+            return Err(ExecError(format!(
+                "input shape {} != graph input {}",
+                input.shape,
+                g.input().out_shape
+            )));
+        }
+        let mut values: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+        for (ni, node) in g.nodes.iter().enumerate() {
+            let val = |id: NodeId| -> Result<&Tensor, ExecError> {
+                values[id.0]
+                    .as_ref()
+                    .ok_or_else(|| ExecError(format!("value of node {} missing", id.0)))
+            };
+            let out = match node.op {
+                OpKind::Input => input.clone(),
+                OpKind::Conv { k, stride, depthwise, .. } => {
+                    let gp = self
+                        .group_params(node.id)
+                        .ok_or_else(|| ExecError(format!("no params for {}", node.name)))?;
+                    let x = val(node.inputs[0])?;
+                    if depthwise {
+                        ops::dwconv2d(x, node.out_shape, k, stride, &gp.weights, &gp.bias, gp.shift)
+                    } else {
+                        ops::conv2d(x, node.out_shape, k, stride, &gp.weights, &gp.bias, gp.shift)
+                    }
+                }
+                OpKind::Fc { out_c } => {
+                    let gp = self
+                        .group_params(node.id)
+                        .ok_or_else(|| ExecError(format!("no params for {}", node.name)))?;
+                    ops::fc(val(node.inputs[0])?, out_c, &gp.weights, &gp.bias, gp.shift)
+                }
+                // Batch-norm / bias are folded into the conv's int32 bias
+                // and requant shift at quantization time.
+                OpKind::BatchNorm | OpKind::BiasAdd | OpKind::Identity => val(node.inputs[0])?.clone(),
+                OpKind::Act(a) => {
+                    let mut t = val(node.inputs[0])?.clone();
+                    self.apply_act(&mut t, a, node.id)?;
+                    t
+                }
+                OpKind::MaxPool { k, stride } => ops::maxpool(val(node.inputs[0])?, k, stride),
+                OpKind::AvgPool { k, stride } => ops::avgpool(val(node.inputs[0])?, k, stride),
+                OpKind::GlobalAvgPool => ops::global_avgpool(val(node.inputs[0])?),
+                OpKind::EltwiseAdd => {
+                    let shift = self.group_params(node.id).map(|p| p.elt_shift).unwrap_or(0);
+                    ops::eltwise_add(val(node.inputs[0])?, val(node.inputs[1])?, shift)
+                }
+                OpKind::ScaleMul => {
+                    let shift = self.group_params(node.id).map(|p| p.shift).unwrap_or(7);
+                    ops::scale_mul(val(node.inputs[0])?, val(node.inputs[1])?, shift)
+                }
+                OpKind::Concat => ops::concat(val(node.inputs[0])?, val(node.inputs[1])?),
+                OpKind::Upsample { factor } => ops::upsample(val(node.inputs[0])?, factor),
+            };
+            if out.shape != node.out_shape {
+                return Err(ExecError(format!(
+                    "node {} produced {} expected {}",
+                    node.name, out.shape, node.out_shape
+                )));
+            }
+            values[ni] = Some(out);
+        }
+        Ok(values.into_iter().map(Option::unwrap).collect())
+    }
+
+    fn apply_act(&self, t: &mut Tensor, a: Activation, node: NodeId) -> Result<(), ExecError> {
+        match a {
+            Activation::Linear => {}
+            Activation::Relu => ops::relu(t),
+            Activation::Leaky => ops::leaky(t),
+            Activation::Relu6
+            | Activation::Swish
+            | Activation::Sigmoid
+            | Activation::HardSwish
+            | Activation::HardSigmoid => {
+                let gp = self
+                    .group_params(node)
+                    .and_then(|p| p.lut.as_ref())
+                    .ok_or_else(|| {
+                        ExecError(format!(
+                            "activation {a:?} at node {} requires a LUT",
+                            node.0
+                        ))
+                    })?;
+                ops::lut_act(t, gp);
+            }
+        }
+        Ok(())
+    }
+
+    /// Output tensor of a group (its last node's value).
+    pub fn group_output<'v>(&self, values: &'v [Tensor], gid: crate::analyzer::GroupId) -> &'v Tensor {
+        let last = *self.gg.groups[gid.0].nodes.last().unwrap();
+        &values[last.0]
+    }
+}
+
+/// Convenience: validate the lowered stream against the graph, then run.
+pub fn execute(
+    gg: &GroupedGraph,
+    stream: &InstructionStream,
+    params: &Params,
+    input: &Tensor,
+) -> Result<Vec<Tensor>, ExecError> {
+    // geometry cross-check: every instruction matches its group
+    if stream.instrs.len() != gg.groups.len() {
+        return Err(ExecError("instruction count != group count".into()));
+    }
+    for (ins, gr) in stream.instrs.iter().zip(&gg.groups) {
+        let (k, s, _) = gr.conv_geometry(&gg.graph);
+        if ins.group as usize != gr.id.0
+            || ins.k as usize != k
+            || ins.stride as usize != s
+            || ins.in_h as usize != gr.in_shape.h
+            || ins.in_c as usize != gr.in_shape.c
+            || ins.out_h as usize != gr.out_shape.h
+            || ins.out_c as usize != gr.out_shape.c
+        {
+            return Err(ExecError(format!("instruction {} disagrees with group", gr.id.0)));
+        }
+    }
+    Executor::new(gg, params).run(input)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::graph::{GraphBuilder, PadMode, Shape};
+    use crate::isa::{lower, MemAssign};
+    use crate::testutil::Rng;
+
+    fn tiny_resnet_like() -> GroupedGraph {
+        let mut b = GraphBuilder::new("tiny", Shape::new(8, 8, 4));
+        let x = b.input_id();
+        let c1 = b.conv("c1", x, 3, 1, 8, PadMode::Same);
+        let r1 = b.activation("c1/relu", c1, crate::graph::Activation::Relu);
+        let c2 = b.conv("c2", r1, 3, 1, 8, PadMode::Same);
+        let add = b.add("add", c2, r1);
+        let r2 = b.activation("add/relu", add, crate::graph::Activation::Relu);
+        let g1 = b.gap("gap", r2);
+        let _f = b.fc("fc", g1, 10);
+        analyze(&b.finish())
+    }
+
+    #[test]
+    fn runs_tiny_network_end_to_end() {
+        let gg = tiny_resnet_like();
+        let params = Params::random(&gg, 1);
+        let mut rng = Rng::from_seed(2);
+        let input = Tensor::from_vec(Shape::new(8, 8, 4), rng.i8_vec(8 * 8 * 4));
+        let assigns = vec![MemAssign::default(); gg.groups.len()];
+        let stream = lower(&gg, &assigns);
+        let values = execute(&gg, &stream, &params, &input).unwrap();
+        let out = &values[gg.graph.find("fc").unwrap().0];
+        assert_eq!(out.shape, Shape::vec(10));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let gg = tiny_resnet_like();
+        let params = Params::random(&gg, 3);
+        let mut rng = Rng::from_seed(4);
+        let input = Tensor::from_vec(Shape::new(8, 8, 4), rng.i8_vec(8 * 8 * 4));
+        let e = Executor::new(&gg, &params);
+        let a = e.run(&input).unwrap();
+        let b = e.run(&input).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn missing_params_is_an_error() {
+        let gg = tiny_resnet_like();
+        let params = Params::default();
+        let input = Tensor::zeros(Shape::new(8, 8, 4));
+        let err = Executor::new(&gg, &params).run(&input).unwrap_err();
+        assert!(err.0.contains("no params"), "{err}");
+    }
+
+    #[test]
+    fn wrong_input_shape_is_an_error() {
+        let gg = tiny_resnet_like();
+        let params = Params::random(&gg, 1);
+        let input = Tensor::zeros(Shape::new(4, 4, 4));
+        assert!(Executor::new(&gg, &params).run(&input).is_err());
+    }
+
+    #[test]
+    fn shortcut_actually_contributes() {
+        // Zeroing c2's weights must make the residual output equal the
+        // ReLU'd shortcut branch.
+        let gg = tiny_resnet_like();
+        let mut params = Params::random(&gg, 5);
+        {
+            let c2 = params.groups.get_mut("c2").unwrap();
+            c2.weights.iter_mut().for_each(|w| *w = 0);
+            c2.bias.iter_mut().for_each(|b| *b = 0);
+        }
+        let mut rng = Rng::from_seed(6);
+        let input = Tensor::from_vec(Shape::new(8, 8, 4), rng.i8_vec(8 * 8 * 4));
+        let e = Executor::new(&gg, &params);
+        let values = e.run(&input).unwrap();
+        let r1 = &values[gg.graph.find("c1/relu").unwrap().0];
+        let r2 = &values[gg.graph.find("add/relu").unwrap().0];
+        assert_eq!(r1.data, r2.data);
+    }
+
+    #[test]
+    fn zoo_models_execute_with_random_params() {
+        // Robustness: small-input EfficientNet-B0 (SE path, LUTs, dw) and
+        // ResNet18 run end to end.
+        for (name, input) in [("efficientnet-b0", 64), ("resnet18", 64)] {
+            let gg = analyze(&crate::zoo::by_name(name, input).unwrap());
+            let params = Params::random(&gg, 7);
+            let mut rng = Rng::from_seed(8);
+            let t = Tensor::from_vec(Shape::new(input, input, 3), rng.i8_vec(input * input * 3));
+            let values = Executor::new(&gg, &params).run(&t).unwrap();
+            assert_eq!(values.len(), gg.graph.nodes.len(), "{name}");
+        }
+    }
+}

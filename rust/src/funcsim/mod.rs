@@ -1,0 +1,69 @@
+//! Functional instruction-stream simulator.
+//!
+//! Executes a compiled [`crate::isa::InstructionStream`] over int8
+//! tensors with the accelerator's exact datapath semantics: int32
+//! accumulation, per-group dynamic-fixed-point requantization shifts
+//! (§III-B: "the proposed design supports a dynamic fixed point format"),
+//! and 8-bit look-up tables for swish/sigmoid ("implemented using an
+//! 8-bit look-up table"). This is the "unified software reference code
+//! for hardware verification" of Fig. 4 — the e2e example checks it
+//! bit-exactly against the JAX golden model executed through PJRT.
+//!
+//! Arithmetic contract (shared with `python/compile/model.py` — keep in
+//! sync, the e2e test enforces it):
+//! * conv/fc: `acc_i32 = Σ w_i8 · x_i8 + bias_i32`, then
+//!   `out = clamp(round_shift(acc, shift))` with
+//!   `round_shift(a, s) = (a + (1 << (s-1))) >> s` for `s > 0`;
+//! * ReLU family acts on the int8 domain; swish/sigmoid index a
+//!   256-entry LUT with the unsigned reinterpretation of the int8 value;
+//! * eltwise add: int32 sum of same-scale operands, round-shifted;
+//! * SE scale: `x_i8 · gate_i8` per channel, round-shifted;
+//! * avg/global pooling: int32 sum, rounded division by the window size.
+
+mod tensor;
+mod params;
+mod ops;
+mod exec;
+
+pub use exec::{execute, ExecError, Executor};
+pub use params::{GroupParams, Params};
+pub use tensor::Tensor;
+
+/// Round-to-nearest (ties away from zero for non-negative accumulators)
+/// arithmetic right shift; negative shifts are left shifts.
+#[inline]
+pub fn round_shift(acc: i64, shift: i32) -> i64 {
+    if shift > 0 {
+        (acc + (1i64 << (shift - 1))) >> shift
+    } else {
+        acc << (-shift)
+    }
+}
+
+/// Saturate an accumulator into int8.
+#[inline]
+pub fn clamp_i8(v: i64) -> i8 {
+    v.clamp(-128, 127) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_shift_rounds_to_nearest() {
+        assert_eq!(round_shift(7, 2), 2); // 1.75 -> 2
+        assert_eq!(round_shift(5, 2), 1); // 1.25 -> 1
+        assert_eq!(round_shift(6, 2), 2); // 1.5  -> 2 (ties up)
+        assert_eq!(round_shift(-5, 2), -1); // -1.25 -> -1
+        assert_eq!(round_shift(3, 0), 3);
+        assert_eq!(round_shift(3, -2), 12);
+    }
+
+    #[test]
+    fn clamp_saturates() {
+        assert_eq!(clamp_i8(300), 127);
+        assert_eq!(clamp_i8(-300), -128);
+        assert_eq!(clamp_i8(-5), -5);
+    }
+}

@@ -1,0 +1,190 @@
+//! Quantized parameter store (weights / biases / shifts / LUTs).
+//!
+//! The compile path (python `aot.py`) exports a JSON parameter file next
+//! to the HLO artifact; the same file drives the functional simulator so
+//! both sides compute from identical integers.
+//!
+//! Format:
+//! ```json
+//! { "groups": { "<group name>": {
+//!     "weights": [..int8..],      // HWIO for conv, IO for fc
+//!     "bias":    [..int32..],     // per output channel
+//!     "shift":   7,               // requant shift after accumulate
+//!     "lut":     [..256 x int8..] // optional, for swish/sigmoid
+//! }}}
+//! ```
+
+use crate::serialize::{parse, Json};
+use crate::testutil::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// Per-group quantized parameters.
+#[derive(Debug, Clone, Default)]
+pub struct GroupParams {
+    /// Conv: `[kh][kw][cin][cout]` flattened (HWIO); FC: `[cin][cout]`.
+    pub weights: Vec<i8>,
+    /// Per-output-channel int32 bias added to the accumulator.
+    pub bias: Vec<i32>,
+    /// Requantization shift applied to the accumulator.
+    pub shift: i32,
+    /// Shift applied to a fused element-wise addition (usually 0).
+    pub elt_shift: i32,
+    /// 256-entry activation LUT (swish / sigmoid).
+    pub lut: Option<Vec<i8>>,
+}
+
+/// All parameters for one compiled network, keyed by the *main node
+/// name* of each group (stable across the rust/python graph builders).
+#[derive(Debug, Clone, Default)]
+pub struct Params {
+    pub groups: HashMap<String, GroupParams>,
+}
+
+impl Params {
+    pub fn get(&self, name: &str) -> Option<&GroupParams> {
+        self.groups.get(name)
+    }
+
+    /// Parse from the JSON interchange format.
+    pub fn from_json(doc: &Json) -> Result<Params> {
+        let obj = doc
+            .get("groups")
+            .ok_or_else(|| anyhow!("params: missing groups"))?;
+        let Json::Obj(map) = obj else {
+            return Err(anyhow!("params: groups must be an object"));
+        };
+        let mut groups = HashMap::new();
+        for (name, g) in map {
+            let ints = |key: &str| -> Result<Vec<i64>> {
+                match g.get(key) {
+                    None => Ok(Vec::new()),
+                    Some(Json::Arr(a)) => a
+                        .iter()
+                        .map(|v| {
+                            v.as_f64()
+                                .filter(|f| f.fract() == 0.0)
+                                .map(|f| f as i64)
+                                .ok_or_else(|| anyhow!("params {name}.{key}: non-integer"))
+                        })
+                        .collect(),
+                    Some(_) => Err(anyhow!("params {name}.{key}: expected array")),
+                }
+            };
+            let weights: Vec<i8> = ints("weights")?
+                .into_iter()
+                .map(|v| i8::try_from(v).map_err(|_| anyhow!("{name}: weight out of i8")))
+                .collect::<Result<_>>()?;
+            let bias: Vec<i32> = ints("bias")?
+                .into_iter()
+                .map(|v| i32::try_from(v).map_err(|_| anyhow!("{name}: bias out of i32")))
+                .collect::<Result<_>>()?;
+            let lut_raw = ints("lut")?;
+            let lut = if lut_raw.is_empty() {
+                None
+            } else {
+                if lut_raw.len() != 256 {
+                    return Err(anyhow!("{name}: LUT must have 256 entries"));
+                }
+                Some(
+                    lut_raw
+                        .into_iter()
+                        .map(|v| i8::try_from(v).map_err(|_| anyhow!("{name}: lut out of i8")))
+                        .collect::<Result<_>>()?,
+                )
+            };
+            let shift = g.get("shift").and_then(Json::as_f64).unwrap_or(0.0) as i32;
+            let elt_shift = g.get("elt_shift").and_then(Json::as_f64).unwrap_or(0.0) as i32;
+            groups.insert(
+                name.clone(),
+                GroupParams { weights, bias, shift, elt_shift, lut },
+            );
+        }
+        Ok(Params { groups })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Params> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&doc)
+    }
+
+    /// Deterministic random parameters for a grouped graph (robustness
+    /// and property tests; real runs use python-exported parameters).
+    pub fn random(gg: &crate::analyzer::GroupedGraph, seed: u64) -> Params {
+        let mut rng = Rng::from_seed(seed);
+        let mut groups = HashMap::new();
+        for gr in &gg.groups {
+            let wcount: u64 = gr
+                .nodes
+                .iter()
+                .map(|&n| gg.graph.node(n).weight_count())
+                .sum();
+            if wcount == 0 && gr.shortcut_of.is_none() && !gr.act.needs_lut() {
+                continue;
+            }
+            // small weights keep accumulators informative but bounded
+            let weights: Vec<i8> = (0..wcount).map(|_| (rng.below(15) as i8) - 7).collect();
+            let out_c = gr.out_shape.c;
+            let bias: Vec<i32> = (0..out_c).map(|_| (rng.below(64) as i32) - 32).collect();
+            let lut = if gr.act.needs_lut() {
+                Some((0..256).map(|i| ((i as i64 * 7 + seed as i64) % 255 - 127) as i8).collect())
+            } else {
+                None
+            };
+            let name = gg.graph.node(gr.main).name.clone();
+            groups.insert(
+                name,
+                GroupParams { weights, bias, shift: 7, elt_shift: 0, lut },
+            );
+        }
+        Params { groups }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip() {
+        let doc = parse(
+            r#"{"groups":{"conv1":{"weights":[1,-2,3],"bias":[10,-10],"shift":7},
+                          "act1":{"lut":[0],"shift":0}}}"#,
+        )
+        .unwrap();
+        // act1 has a 1-entry LUT -> error
+        assert!(Params::from_json(&doc).is_err());
+
+        let lut: Vec<String> = (0..256).map(|i| (i % 127).to_string()).collect();
+        let text = format!(
+            r#"{{"groups":{{"conv1":{{"weights":[1,-2,3],"bias":[10,-10],"shift":7}},
+                 "act1":{{"lut":[{}],"shift":0}}}}}}"#,
+            lut.join(",")
+        );
+        let p = Params::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(p.get("conv1").unwrap().weights, vec![1, -2, 3]);
+        assert_eq!(p.get("conv1").unwrap().shift, 7);
+        assert_eq!(p.get("act1").unwrap().lut.as_ref().unwrap().len(), 256);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let doc = parse(r#"{"groups":{"c":{"weights":[200]}}}"#).unwrap();
+        assert!(Params::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn random_params_cover_weighted_groups() {
+        let gg = crate::analyzer::analyze(&crate::zoo::resnet18(32));
+        let p = Params::random(&gg, 42);
+        for gr in gg.compute_groups() {
+            if gr.weight_bytes(&gg.graph, 1) > 0 {
+                let name = &gg.graph.node(gr.main).name;
+                let gp = p.get(name).unwrap_or_else(|| panic!("missing {name}"));
+                assert_eq!(gp.weights.len() as u64, gr.weight_bytes(&gg.graph, 1));
+            }
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Int8 HWC tensors.
+
+use crate::graph::Shape;
+
+/// A dense int8 tensor in HWC layout (batch 1, like the accelerator's
+/// feature-map memory).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<i8>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: Shape) -> Self {
+        Tensor { shape, data: vec![0; shape.numel()] }
+    }
+
+    pub fn from_vec(shape: Shape, data: Vec<i8>) -> Self {
+        assert_eq!(shape.numel(), data.len(), "tensor size mismatch");
+        Tensor { shape, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, y: usize, x: usize, c: usize) -> usize {
+        (y * self.shape.w + x) * self.shape.c + c
+    }
+
+    /// Value at (y, x, c); 0 outside the spatial bounds (zero padding).
+    #[inline]
+    pub fn at_padded(&self, y: isize, x: isize, c: usize) -> i8 {
+        if y < 0 || x < 0 || y as usize >= self.shape.h || x as usize >= self.shape.w {
+            0
+        } else {
+            self.data[self.idx(y as usize, x as usize, c)]
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, c: usize) -> i8 {
+        self.data[self.idx(y, x, c)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, c: usize, v: i8) {
+        let i = self.idx(y, x, c);
+        self.data[i] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_hwc() {
+        let mut t = Tensor::zeros(Shape::new(2, 3, 4));
+        t.set(1, 2, 3, 7);
+        assert_eq!(t.data[(1 * 3 + 2) * 4 + 3], 7);
+        assert_eq!(t.at(1, 2, 3), 7);
+    }
+
+    #[test]
+    fn padding_returns_zero() {
+        let t = Tensor::from_vec(Shape::new(1, 1, 1), vec![5]);
+        assert_eq!(t.at_padded(-1, 0, 0), 0);
+        assert_eq!(t.at_padded(0, 1, 0), 0);
+        assert_eq!(t.at_padded(0, 0, 0), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(Shape::new(2, 2, 2), vec![0; 7]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Fluent graph construction used by the model zoo and the JSON parser.
+
+use super::{Activation, Graph, Node, NodeId, OpKind, PadMode, Shape};
+
+/// Builds a [`Graph`] in topological order with automatic shape inference.
+///
+/// All `add_*` helpers return the new node's id so builders read like the
+/// network definitions they mirror:
+///
+/// ```
+/// use shortcutfusion::graph::{GraphBuilder, Shape, PadMode, Activation};
+/// let mut b = GraphBuilder::new("demo", Shape::new(32, 32, 3));
+/// let c = b.conv("conv1", b.input_id(), 3, 1, 16, PadMode::Same);
+/// let r = b.activation("conv1_relu", c, Activation::Relu);
+/// let g = b.finish();
+/// assert_eq!(g.nodes.len(), 3);
+/// ```
+pub struct GraphBuilder {
+    name: String,
+    nodes: Vec<Node>,
+}
+
+impl GraphBuilder {
+    /// Start a graph with a single input of the given shape.
+    pub fn new(name: &str, input: Shape) -> Self {
+        let mut b = GraphBuilder { name: name.to_string(), nodes: Vec::new() };
+        b.push("input", OpKind::Input, vec![], input);
+        b
+    }
+
+    /// Id of the input node (always 0).
+    pub fn input_id(&self) -> NodeId {
+        NodeId(0)
+    }
+
+    /// Shape of an already-added node.
+    pub fn shape(&self, id: NodeId) -> Shape {
+        self.nodes[id.0].out_shape
+    }
+
+    fn push(&mut self, name: &str, op: OpKind, inputs: Vec<NodeId>, out: Shape) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        debug_assert!(
+            self.nodes.iter().all(|n| n.name != name),
+            "duplicate node name {name}"
+        );
+        let in_shapes = inputs.iter().map(|i| self.nodes[i.0].out_shape).collect();
+        self.nodes.push(Node { id, name: name.to_string(), op, inputs, in_shapes, out_shape: out });
+        id
+    }
+
+    /// Normal convolution.
+    pub fn conv(&mut self, name: &str, from: NodeId, k: usize, stride: usize, out_c: usize, pad: PadMode) -> NodeId {
+        let s = self.shape(from);
+        let out = match pad {
+            PadMode::Same => s.conv_same(stride, out_c),
+            PadMode::Valid => s.conv_valid(k, stride, out_c),
+        };
+        self.push(name, OpKind::Conv { k, stride, out_c, pad, depthwise: false }, vec![from], out)
+    }
+
+    /// Depthwise convolution (out channels = in channels).
+    pub fn dwconv(&mut self, name: &str, from: NodeId, k: usize, stride: usize, pad: PadMode) -> NodeId {
+        let s = self.shape(from);
+        let out_c = s.c;
+        let out = match pad {
+            PadMode::Same => s.conv_same(stride, out_c),
+            PadMode::Valid => s.conv_valid(k, stride, out_c),
+        };
+        self.push(name, OpKind::Conv { k, stride, out_c, pad, depthwise: true }, vec![from], out)
+    }
+
+    /// Fully-connected layer over a 1×1×C activation.
+    pub fn fc(&mut self, name: &str, from: NodeId, out_c: usize) -> NodeId {
+        self.push(name, OpKind::Fc { out_c }, vec![from], Shape::vec(out_c))
+    }
+
+    /// Folded batch-norm (per-channel affine).
+    pub fn batchnorm(&mut self, name: &str, from: NodeId) -> NodeId {
+        let s = self.shape(from);
+        self.push(name, OpKind::BatchNorm, vec![from], s)
+    }
+
+    /// Bias add.
+    pub fn bias(&mut self, name: &str, from: NodeId) -> NodeId {
+        let s = self.shape(from);
+        self.push(name, OpKind::BiasAdd, vec![from], s)
+    }
+
+    /// Activation node.
+    pub fn activation(&mut self, name: &str, from: NodeId, a: Activation) -> NodeId {
+        let s = self.shape(from);
+        self.push(name, OpKind::Act(a), vec![from], s)
+    }
+
+    pub fn maxpool(&mut self, name: &str, from: NodeId, k: usize, stride: usize) -> NodeId {
+        let s = self.shape(from);
+        let out = s.conv_same(stride, s.c);
+        self.push(name, OpKind::MaxPool { k, stride }, vec![from], out)
+    }
+
+    pub fn avgpool(&mut self, name: &str, from: NodeId, k: usize, stride: usize) -> NodeId {
+        let s = self.shape(from);
+        let out = s.conv_same(stride, s.c);
+        self.push(name, OpKind::AvgPool { k, stride }, vec![from], out)
+    }
+
+    /// Global average pool to 1×1×C.
+    pub fn gap(&mut self, name: &str, from: NodeId) -> NodeId {
+        let s = self.shape(from);
+        self.push(name, OpKind::GlobalAvgPool, vec![from], Shape::vec(s.c))
+    }
+
+    /// Element-wise shortcut addition. Operand order is `[main, shortcut]`.
+    pub fn add(&mut self, name: &str, main: NodeId, shortcut: NodeId) -> NodeId {
+        let s = self.shape(main);
+        debug_assert_eq!(s, self.shape(shortcut), "eltwise-add shape mismatch at {name}");
+        self.push(name, OpKind::EltwiseAdd, vec![main, shortcut], s)
+    }
+
+    /// Channel-wise SE scale: `fmap * gate` with gate of shape 1×1×C.
+    pub fn scale(&mut self, name: &str, fmap: NodeId, gate: NodeId) -> NodeId {
+        let s = self.shape(fmap);
+        debug_assert_eq!(self.shape(gate).c, s.c, "SE gate channel mismatch at {name}");
+        self.push(name, OpKind::ScaleMul, vec![fmap, gate], s)
+    }
+
+    /// Channel concatenation.
+    pub fn concat(&mut self, name: &str, a: NodeId, b_: NodeId) -> NodeId {
+        let (sa, sb) = (self.shape(a), self.shape(b_));
+        debug_assert_eq!((sa.h, sa.w), (sb.h, sb.w), "concat spatial mismatch at {name}");
+        self.push(name, OpKind::Concat, vec![a, b_], Shape::new(sa.h, sa.w, sa.c + sb.c))
+    }
+
+    /// Nearest-neighbour upsample.
+    pub fn upsample(&mut self, name: &str, from: NodeId, factor: usize) -> NodeId {
+        let s = self.shape(from).upsample(factor);
+        self.push(name, OpKind::Upsample { factor }, vec![from], s)
+    }
+
+    /// No-op marker node (detection heads / named outputs).
+    pub fn identity(&mut self, name: &str, from: NodeId) -> NodeId {
+        let s = self.shape(from);
+        self.push(name, OpKind::Identity, vec![from], s)
+    }
+
+    /// Convenience: conv → batch-norm → activation, the most common
+    /// frozen-graph triplet.
+    pub fn conv_bn_act(&mut self, base: &str, from: NodeId, k: usize, stride: usize, out_c: usize, act: Activation) -> NodeId {
+        let c = self.conv(&format!("{base}"), from, k, stride, out_c, PadMode::Same);
+        let b = self.batchnorm(&format!("{base}/bn"), c);
+        self.activation(&format!("{base}/{}", act_name(act)), b, act)
+    }
+
+    /// Convenience: depthwise conv → batch-norm → activation.
+    pub fn dw_bn_act(&mut self, base: &str, from: NodeId, k: usize, stride: usize, act: Activation) -> NodeId {
+        let c = self.dwconv(&format!("{base}"), from, k, stride, PadMode::Same);
+        let b = self.batchnorm(&format!("{base}/bn"), c);
+        self.activation(&format!("{base}/{}", act_name(act)), b, act)
+    }
+
+    /// Finalize. Panics (debug) if the graph is empty.
+    pub fn finish(self) -> Graph {
+        Graph { name: self.name, nodes: self.nodes }
+    }
+}
+
+fn act_name(a: Activation) -> &'static str {
+    match a {
+        Activation::Linear => "linear",
+        Activation::Relu => "relu",
+        Activation::Leaky => "leaky",
+        Activation::Relu6 => "relu6",
+        Activation::Swish => "swish",
+        Activation::Sigmoid => "sigmoid",
+        Activation::HardSwish => "hswish",
+        Activation::HardSigmoid => "hsigmoid",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate;
+
+    #[test]
+    fn residual_block_shapes() {
+        let mut b = GraphBuilder::new("res", Shape::new(56, 56, 64));
+        let x = b.input_id();
+        let c1 = b.conv_bn_act("c1", x, 3, 1, 64, Activation::Relu);
+        let c2 = b.conv("c2", c1, 3, 1, 64, PadMode::Same);
+        let bn2 = b.batchnorm("c2/bn", c2);
+        let add = b.add("add", bn2, x);
+        let out = b.activation("out", add, Activation::Relu);
+        let g = b.finish();
+        validate(&g).unwrap();
+        assert_eq!(g.node(out).out_shape, Shape::new(56, 56, 64));
+        assert_eq!(g.node(add).inputs.len(), 2);
+    }
+
+    #[test]
+    fn se_block_shapes() {
+        let mut b = GraphBuilder::new("se", Shape::new(28, 28, 96));
+        let x = b.input_id();
+        let g1 = b.gap("gap", x);
+        let f1 = b.fc("fc1", g1, 4);
+        let a1 = b.activation("fc1/swish", f1, Activation::Swish);
+        let f2 = b.fc("fc2", a1, 96);
+        let a2 = b.activation("fc2/sigmoid", f2, Activation::Sigmoid);
+        let s = b.scale("scale", x, a2);
+        let g = b.finish();
+        validate(&g).unwrap();
+        assert_eq!(g.node(s).out_shape, Shape::new(28, 28, 96));
+        assert_eq!(g.node(f1).out_shape, Shape::vec(4));
+    }
+
+    #[test]
+    fn concat_adds_channels() {
+        let mut b = GraphBuilder::new("cat", Shape::new(13, 13, 256));
+        let x = b.input_id();
+        let c1 = b.conv("a", x, 1, 1, 128, PadMode::Same);
+        let c2 = b.conv("b", x, 1, 1, 64, PadMode::Same);
+        let cat = b.concat("cat", c1, c2);
+        let g = b.finish();
+        assert_eq!(g.node(cat).out_shape.c, 192);
+    }
+}

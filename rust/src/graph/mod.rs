@@ -1,0 +1,166 @@
+//! CNN graph intermediate representation.
+//!
+//! This IR plays the role of the parsed TensorFlow frozen graph in the
+//! paper's front-end (Fig. 4, "CNN parser & analyzer"). Nodes are
+//! *fine-grained* — convolution, bias, batch-norm, activation, pooling,
+//! element-wise addition (shortcut), concatenation, upsampling, SE-block
+//! pieces are each separate nodes, exactly as a frozen protobuf presents
+//! them — so that the [`crate::analyzer`] has real fusion work to do
+//! (e.g. EfficientNet-B1's 418 nodes → 139 executable groups, Fig. 5a).
+//!
+//! Shapes are `HWC` with an implicit batch of 1: the paper optimizes
+//! single-image latency ("this work optimizes the latency with batch size
+//! of 1", §II).
+
+mod shape;
+mod op;
+mod node;
+mod build;
+mod validate;
+
+pub use shape::Shape;
+pub use op::{Activation, OpKind, PadMode};
+pub use node::{Node, NodeId};
+pub use build::GraphBuilder;
+pub use validate::{validate, ValidateError};
+
+use std::collections::HashMap;
+
+/// A CNN compute graph: nodes in topological order.
+///
+/// Invariants (checked by [`validate`]):
+/// * node inputs always refer to earlier nodes (builder emits topo order),
+/// * shapes are consistent with each op's shape function,
+/// * exactly one `Input` node, at least one output (no consumers).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Human-readable model name, e.g. `"ResNet50"`.
+    pub name: String,
+    /// Nodes in topological order; `NodeId` indexes into this vector.
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    /// Node lookup by id.
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    /// The single `Input` node of the graph.
+    pub fn input(&self) -> &Node {
+        self.nodes
+            .iter()
+            .find(|n| matches!(n.op, OpKind::Input))
+            .expect("graph has an Input node")
+    }
+
+    /// Ids of nodes with no consumers (the network outputs).
+    pub fn outputs(&self) -> Vec<NodeId> {
+        let mut consumed = vec![false; self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                consumed[i.0] = true;
+            }
+        }
+        (0..self.nodes.len())
+            .filter(|&i| !consumed[i])
+            .map(NodeId)
+            .collect()
+    }
+
+    /// Consumer map: for every node, the ids of nodes that read it.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &inp in &n.inputs {
+                out[inp.0].push(NodeId(i));
+            }
+        }
+        out
+    }
+
+    /// Number of convolution-like nodes (Conv + FC), the paper's
+    /// "CONV layers" count.
+    pub fn conv_layer_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Conv { .. } | OpKind::Fc { .. }))
+            .count()
+    }
+
+    /// Total multiply-accumulate count of the network (for GOP figures).
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.macs()).sum()
+    }
+
+    /// Total GOP (2 ops per MAC), the "CNN size (GOP)" rows of Tables II/V.
+    pub fn total_gop(&self) -> f64 {
+        2.0 * self.total_macs() as f64 / 1e9
+    }
+
+    /// Total weight bytes at the given weight precision.
+    pub fn total_weight_bytes(&self, bytes_per_weight: u64) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| n.weight_count() * bytes_per_weight)
+            .sum()
+    }
+
+    /// Find a node id by name (used by tests and the JSON round-trip).
+    pub fn find(&self, name: &str) -> Option<NodeId> {
+        self.nodes.iter().position(|n| n.name == name).map(NodeId)
+    }
+
+    /// Map from node name to id for bulk lookups.
+    pub fn name_index(&self) -> HashMap<&str, NodeId> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.name.as_str(), NodeId(i)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::new("tiny", Shape::new(8, 8, 3));
+        let c = b.conv("c1", b.input_id(), 3, 1, 16, PadMode::Same);
+        let r = b.activation("r1", c, Activation::Relu);
+        let _p = b.maxpool("p1", r, 2, 2);
+        b.finish()
+    }
+
+    #[test]
+    fn topo_order_and_outputs() {
+        let g = tiny();
+        validate(&g).unwrap();
+        assert_eq!(g.outputs().len(), 1);
+        assert_eq!(g.node(g.outputs()[0]).name, "p1");
+    }
+
+    #[test]
+    fn conv_count_and_macs() {
+        let g = tiny();
+        assert_eq!(g.conv_layer_count(), 1);
+        // 3x3x3x16 kernel over an 8x8 output frame
+        assert_eq!(g.total_macs(), 3 * 3 * 3 * 16 * 8 * 8);
+    }
+
+    #[test]
+    fn consumers_map() {
+        let g = tiny();
+        let cons = g.consumers();
+        let c1 = g.find("c1").unwrap();
+        assert_eq!(cons[c1.0].len(), 1);
+        assert_eq!(g.node(cons[c1.0][0]).name, "r1");
+    }
+
+    #[test]
+    fn gop_matches_macs() {
+        let g = tiny();
+        assert!((g.total_gop() - 2.0 * g.total_macs() as f64 / 1e9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,121 @@
+//! Graph nodes.
+
+use super::{OpKind, Shape};
+
+/// Index of a node within its [`super::Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// One operator instance in the graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    /// Unique name (protobuf node name in the TF front-end).
+    pub name: String,
+    pub op: OpKind,
+    /// Producers, in operand order. `EltwiseAdd`: `[main, shortcut]`;
+    /// `ScaleMul`: `[fmap, gate]`; `Concat`: `[a, b]`.
+    pub inputs: Vec<NodeId>,
+    /// Shape of each input (cached at build time, same order as `inputs`).
+    pub in_shapes: Vec<Shape>,
+    /// Output feature-map shape.
+    pub out_shape: Shape,
+}
+
+impl Node {
+    /// Input channel count of the (first) operand.
+    pub fn in_c(&self) -> usize {
+        self.in_shapes.first().map(|s| s.c).unwrap_or(0)
+    }
+
+    /// Weight element count (0 for weight-less ops).
+    ///
+    /// Depthwise conv: `k·k·C`; normal conv: `k·k·Cin·Cout`; FC:
+    /// `Cin·Cout` (an FC is a 1×1 conv on a 1×1 frame).
+    pub fn weight_count(&self) -> u64 {
+        match self.op {
+            OpKind::Conv { k, out_c, depthwise, .. } => {
+                let k = (k * k) as u64;
+                if depthwise {
+                    k * self.in_c() as u64
+                } else {
+                    k * self.in_c() as u64 * out_c as u64
+                }
+            }
+            OpKind::Fc { out_c } => self.in_c() as u64 * out_c as u64,
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        match self.op {
+            OpKind::Conv { k, depthwise, .. } => {
+                let per_pix = if depthwise {
+                    (k * k) as u64 * self.out_shape.c as u64
+                } else {
+                    (k * k) as u64 * self.in_c() as u64 * self.out_shape.c as u64
+                };
+                per_pix * (self.out_shape.h * self.out_shape.w) as u64
+            }
+            OpKind::Fc { out_c } => self.in_c() as u64 * out_c as u64,
+            // ScaleMul is C·H·W multiplications; counted like the paper's
+            // "1x1 depthwise conv without BN".
+            OpKind::ScaleMul => self.out_shape.numel() as u64,
+            _ => 0,
+        }
+    }
+
+    /// Bytes of the output feature-map at `qa` bytes/element.
+    pub fn out_bytes(&self, qa: usize) -> usize {
+        self.out_shape.bytes(qa)
+    }
+
+    /// Bytes of the first-operand input feature-map at `qa` bytes/element.
+    pub fn in_bytes(&self, qa: usize) -> usize {
+        self.in_shapes.first().map(|s| s.bytes(qa)).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PadMode;
+
+    fn conv_node(depthwise: bool) -> Node {
+        Node {
+            id: NodeId(0),
+            name: "c".into(),
+            op: OpKind::Conv { k: 3, stride: 1, out_c: if depthwise { 16 } else { 32 }, pad: PadMode::Same, depthwise },
+            inputs: vec![],
+            in_shapes: vec![Shape::new(10, 10, 16)],
+            out_shape: Shape::new(10, 10, if depthwise { 16 } else { 32 }),
+        }
+    }
+
+    #[test]
+    fn weight_count_normal_vs_depthwise() {
+        assert_eq!(conv_node(false).weight_count(), 9 * 16 * 32);
+        assert_eq!(conv_node(true).weight_count(), 9 * 16);
+    }
+
+    #[test]
+    fn macs_normal_vs_depthwise() {
+        assert_eq!(conv_node(false).macs(), 9 * 16 * 32 * 100);
+        assert_eq!(conv_node(true).macs(), 9 * 16 * 100);
+    }
+
+    #[test]
+    fn fc_weights_and_macs() {
+        let n = Node {
+            id: NodeId(1),
+            name: "fc".into(),
+            op: OpKind::Fc { out_c: 1000 },
+            inputs: vec![],
+            in_shapes: vec![Shape::vec(1280)],
+            out_shape: Shape::vec(1000),
+        };
+        assert_eq!(n.weight_count(), 1280 * 1000);
+        assert_eq!(n.macs(), 1280 * 1000);
+    }
+}

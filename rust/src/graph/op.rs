@@ -1,0 +1,147 @@
+//! Operator kinds and attributes.
+
+/// Padding convention (TensorFlow naming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PadMode {
+    /// Output spatial = ceil(input / stride).
+    Same,
+    /// No padding.
+    Valid,
+}
+
+/// Activation functions supported by the accelerator datapath.
+///
+/// ReLU-family activations run in dynamic fixed-point; `Swish` and
+/// `Sigmoid` go through the 8-bit LUT (one 18 Kb BRAM per two LUTs,
+/// §III-B) and therefore support a single fixed-point format only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    Linear,
+    Relu,
+    /// Leaky ReLU with slope 1/8 as in the YOLO accelerator line of work
+    /// (hardware-friendly shift implementation).
+    Leaky,
+    Relu6,
+    /// x * sigmoid(x) — EfficientNet/MobileNetV3; 8-bit LUT in hardware.
+    Swish,
+    /// SE-block gate; 8-bit LUT in hardware.
+    Sigmoid,
+    /// MobileNetV3 hard-swish: x * relu6(x + 3) / 6.
+    HardSwish,
+    /// MobileNetV3 / SE hard gate: relu6(x + 3) / 6.
+    HardSigmoid,
+}
+
+impl Activation {
+    /// True when the activation needs the 8-bit LUT path.
+    pub fn needs_lut(&self) -> bool {
+        matches!(self, Activation::Swish | Activation::Sigmoid)
+    }
+}
+
+/// Operator kind with static attributes.
+///
+/// Weight-carrying ops (`Conv`, `Fc`) know their kernel geometry; the
+/// actual weight values live outside the IR (the compiler only needs
+/// geometry; the functional simulator materializes values from the
+/// quantized parameter store).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Graph input placeholder.
+    Input,
+    /// Convolution. `depthwise` selects the per-channel form (groups ==
+    /// channels); then `out_c` must equal the input channel count.
+    Conv {
+        k: usize,
+        stride: usize,
+        out_c: usize,
+        pad: PadMode,
+        depthwise: bool,
+    },
+    /// Fully-connected layer (SE reduce/expand, classifier heads).
+    Fc { out_c: usize },
+    /// Per-channel affine (folded batch-norm). Fuses into the preceding conv.
+    BatchNorm,
+    /// Per-element bias add (TF BiasAdd). Fuses into the preceding conv.
+    BiasAdd,
+    /// Standalone activation node.
+    Act(Activation),
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    /// Global average pool → 1×1×C (SE squeeze, classifier pre-FC).
+    GlobalAvgPool,
+    /// Element-wise addition of two inputs — the *shortcut* layer.
+    EltwiseAdd,
+    /// Channel-wise scale: input 0 (H×W×C) × input 1 (1×1×C) — the SE
+    /// excitation multiply ("works in the same way as the 1x1 depthwise
+    /// CONV layer without batch normalization", §IV-A).
+    ScaleMul,
+    /// Channel concatenation of two inputs (YOLO route layers, FPN).
+    Concat,
+    /// Nearest-neighbour upsampling by an integer factor.
+    Upsample { factor: usize },
+    /// Detection / output head marker (kept for graph fidelity; no compute).
+    Identity,
+}
+
+impl OpKind {
+    /// Does this op carry weights read from DRAM?
+    pub fn has_weights(&self) -> bool {
+        matches!(self, OpKind::Conv { .. } | OpKind::Fc { .. })
+    }
+
+    /// Is this an element-wise shortcut addition?
+    pub fn is_shortcut(&self) -> bool {
+        matches!(self, OpKind::EltwiseAdd)
+    }
+
+    /// Is this a concat/route op (long-lifetime data kept off-chip,
+    /// §IV-A)?
+    pub fn is_concat(&self) -> bool {
+        matches!(self, OpKind::Concat)
+    }
+
+    /// Short mnemonic for reports.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::Conv { depthwise: true, .. } => "dwconv",
+            OpKind::Conv { .. } => "conv",
+            OpKind::Fc { .. } => "fc",
+            OpKind::BatchNorm => "bn",
+            OpKind::BiasAdd => "bias",
+            OpKind::Act(_) => "act",
+            OpKind::MaxPool { .. } => "maxpool",
+            OpKind::AvgPool { .. } => "avgpool",
+            OpKind::GlobalAvgPool => "gap",
+            OpKind::EltwiseAdd => "add",
+            OpKind::ScaleMul => "scale",
+            OpKind::Concat => "concat",
+            OpKind::Upsample { .. } => "upsample",
+            OpKind::Identity => "id",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_activations() {
+        assert!(Activation::Swish.needs_lut());
+        assert!(Activation::Sigmoid.needs_lut());
+        assert!(!Activation::Relu.needs_lut());
+        assert!(!Activation::HardSwish.needs_lut());
+    }
+
+    #[test]
+    fn op_classification() {
+        assert!(OpKind::Conv { k: 3, stride: 1, out_c: 8, pad: PadMode::Same, depthwise: false }
+            .has_weights());
+        assert!(OpKind::Fc { out_c: 10 }.has_weights());
+        assert!(OpKind::EltwiseAdd.is_shortcut());
+        assert!(OpKind::Concat.is_concat());
+        assert!(!OpKind::MaxPool { k: 2, stride: 2 }.has_weights());
+    }
+}

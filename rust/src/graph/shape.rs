@@ -1,0 +1,83 @@
+//! Feature-map shapes (`H × W × C`, batch 1).
+
+use std::fmt;
+
+/// Shape of a feature-map tensor: height, width, channels (batch = 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub const fn new(h: usize, w: usize, c: usize) -> Self {
+        Shape { h, w, c }
+    }
+
+    /// 1×1×c shape (SE-block squeeze outputs, FC activations).
+    pub const fn vec(c: usize) -> Self {
+        Shape { h: 1, w: 1, c }
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Size in bytes at `bytes_per_elem` precision (the paper's `Q_A`).
+    pub fn bytes(&self, bytes_per_elem: usize) -> usize {
+        self.numel() * bytes_per_elem
+    }
+
+    /// Output spatial size after a `k`-kernel, stride-`s` op with SAME
+    /// padding (TF convention: `ceil(in / s)`).
+    pub fn conv_same(&self, s: usize, out_c: usize) -> Shape {
+        Shape::new(self.h.div_ceil(s), self.w.div_ceil(s), out_c)
+    }
+
+    /// Output spatial size with VALID padding: `floor((in - k)/s) + 1`.
+    pub fn conv_valid(&self, k: usize, s: usize, out_c: usize) -> Shape {
+        Shape::new((self.h - k) / s + 1, (self.w - k) / s + 1, out_c)
+    }
+
+    /// Nearest-neighbour upsample by `f`.
+    pub fn upsample(&self, f: usize) -> Shape {
+        Shape::new(self.h * f, self.w * f, self.c)
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.h, self.w, self.c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_ceil() {
+        // 416 -> stride 2 -> 208; odd input 13 -> stride 2 -> 7
+        assert_eq!(Shape::new(416, 416, 3).conv_same(2, 32), Shape::new(208, 208, 32));
+        assert_eq!(Shape::new(13, 13, 8).conv_same(2, 8), Shape::new(7, 7, 8));
+    }
+
+    #[test]
+    fn valid_padding() {
+        assert_eq!(Shape::new(7, 7, 64).conv_valid(7, 1, 10), Shape::new(1, 1, 10));
+    }
+
+    #[test]
+    fn bytes_and_numel() {
+        let s = Shape::new(4, 4, 2);
+        assert_eq!(s.numel(), 32);
+        assert_eq!(s.bytes(2), 64);
+    }
+
+    #[test]
+    fn upsample_doubles_spatial() {
+        assert_eq!(Shape::new(13, 13, 256).upsample(2), Shape::new(26, 26, 256));
+    }
+}

@@ -1,0 +1,165 @@
+//! Structural validation of a [`Graph`].
+
+use super::{Graph, OpKind};
+use std::fmt;
+
+/// Validation failure with the offending node index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValidateError {
+    pub node: usize,
+    pub reason: String,
+}
+
+impl fmt::Display for ValidateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "graph invalid at node {}: {}", self.node, self.reason)
+    }
+}
+
+impl std::error::Error for ValidateError {}
+
+/// Check the graph invariants documented on [`Graph`].
+pub fn validate(g: &Graph) -> Result<(), ValidateError> {
+    let err = |node: usize, reason: String| Err(ValidateError { node, reason });
+
+    if g.nodes.is_empty() {
+        return err(0, "empty graph".into());
+    }
+    let n_inputs = g.nodes.iter().filter(|n| matches!(n.op, OpKind::Input)).count();
+    if n_inputs != 1 {
+        return err(0, format!("expected exactly 1 Input node, found {n_inputs}"));
+    }
+    if !matches!(g.nodes[0].op, OpKind::Input) {
+        return err(0, "node 0 must be the Input".into());
+    }
+
+    let mut seen_names = std::collections::HashSet::new();
+    for (i, n) in g.nodes.iter().enumerate() {
+        if n.id.0 != i {
+            return err(i, format!("id {} != position {}", n.id.0, i));
+        }
+        if !seen_names.insert(n.name.as_str()) {
+            return err(i, format!("duplicate name {:?}", n.name));
+        }
+        // topological order
+        for &inp in &n.inputs {
+            if inp.0 >= i {
+                return err(i, format!("input {} not before node", inp.0));
+            }
+        }
+        // arity
+        let arity = n.inputs.len();
+        let want: std::ops::RangeInclusive<usize> = match n.op {
+            OpKind::Input => 0..=0,
+            OpKind::EltwiseAdd | OpKind::ScaleMul | OpKind::Concat => 2..=2,
+            _ => 1..=1,
+        };
+        if !want.contains(&arity) {
+            return err(i, format!("{} has arity {arity}, expected {want:?}", n.op.mnemonic()));
+        }
+        // cached input shapes in sync
+        for (j, &inp) in n.inputs.iter().enumerate() {
+            if g.nodes[inp.0].out_shape != n.in_shapes[j] {
+                return err(i, format!("cached in_shape[{j}] stale"));
+            }
+        }
+        // shape functions
+        match n.op {
+            OpKind::EltwiseAdd => {
+                if n.in_shapes[0] != n.in_shapes[1] || n.out_shape != n.in_shapes[0] {
+                    return err(i, "eltwise-add shape mismatch".into());
+                }
+            }
+            OpKind::ScaleMul => {
+                let (f, gate) = (n.in_shapes[0], n.in_shapes[1]);
+                if gate.h != 1 || gate.w != 1 || gate.c != f.c || n.out_shape != f {
+                    return err(i, "scale-mul gate must be 1x1xC".into());
+                }
+            }
+            OpKind::Concat => {
+                let (a, b) = (n.in_shapes[0], n.in_shapes[1]);
+                if (a.h, a.w) != (b.h, b.w) || n.out_shape.c != a.c + b.c {
+                    return err(i, "concat shape mismatch".into());
+                }
+            }
+            OpKind::Conv { depthwise: true, out_c, .. } => {
+                if out_c != n.in_shapes[0].c {
+                    return err(i, "depthwise conv must preserve channels".into());
+                }
+            }
+            OpKind::Upsample { factor } => {
+                if n.out_shape != n.in_shapes[0].upsample(factor) {
+                    return err(i, "upsample shape mismatch".into());
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, GraphBuilder, Node, NodeId, Shape};
+
+    #[test]
+    fn valid_graph_passes() {
+        let mut b = GraphBuilder::new("ok", Shape::new(8, 8, 4));
+        let c = b.conv("c", b.input_id(), 3, 1, 8, crate::graph::PadMode::Same);
+        let _ = b.activation("a", c, Activation::Relu);
+        assert!(validate(&b.finish()).is_ok());
+    }
+
+    #[test]
+    fn rejects_forward_reference() {
+        let mut b = GraphBuilder::new("bad", Shape::new(8, 8, 4));
+        let c = b.conv("c", b.input_id(), 3, 1, 8, crate::graph::PadMode::Same);
+        let mut g = b.finish();
+        // corrupt: make conv depend on a later node
+        g.nodes[c.0].inputs = vec![NodeId(2)];
+        g.nodes.push(Node {
+            id: NodeId(2),
+            name: "x".into(),
+            op: crate::graph::OpKind::Identity,
+            inputs: vec![NodeId(1)],
+            in_shapes: vec![g.nodes[1].out_shape],
+            out_shape: g.nodes[1].out_shape,
+        });
+        assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let mut b = GraphBuilder::new("dup", Shape::new(8, 8, 4));
+        let c = b.conv("c", b.input_id(), 3, 1, 8, crate::graph::PadMode::Same);
+        let mut g = b.finish();
+        let shape = g.nodes[c.0].out_shape;
+        g.nodes.push(Node {
+            id: NodeId(2),
+            name: "c".into(),
+            op: crate::graph::OpKind::Identity,
+            inputs: vec![c],
+            in_shapes: vec![shape],
+            out_shape: shape,
+        });
+        assert!(validate(&g).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_arity() {
+        let mut b = GraphBuilder::new("arity", Shape::new(8, 8, 4));
+        let c = b.conv("c", b.input_id(), 3, 1, 8, crate::graph::PadMode::Same);
+        let mut g = b.finish();
+        let shape = g.nodes[c.0].out_shape;
+        g.nodes.push(Node {
+            id: NodeId(2),
+            name: "add".into(),
+            op: crate::graph::OpKind::EltwiseAdd,
+            inputs: vec![c], // needs two
+            in_shapes: vec![shape],
+            out_shape: shape,
+        });
+        assert!(validate(&g).is_err());
+    }
+}

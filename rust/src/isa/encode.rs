@@ -1,0 +1,366 @@
+//! Instruction word format: encode / decode.
+
+use crate::analyzer::PoolKind;
+use crate::graph::Activation;
+use std::fmt;
+
+/// Words per group instruction (Fig. 5b: "11 words").
+pub const WORDS_PER_INSTR: usize = 11;
+
+/// Magic tag in word 10 for stream-integrity checking.
+const MAGIC: u32 = 0x5C;
+
+/// Weight-reuse scheme of a group (§II): `Row` streams feature-maps
+/// through DRAM with the whole layer weights resident on-chip; `Frame`
+/// keeps feature-maps in the physical buffers and streams weight blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReuseMode {
+    Row,
+    Frame,
+}
+
+/// Datapath opcode (4 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Opcode {
+    Input = 0,
+    Conv = 1,
+    DwConv = 2,
+    Fc = 3,
+    Scale = 4,
+    Pool = 5,
+    Eltwise = 6,
+    Concat = 7,
+    Upsample = 8,
+    /// Standalone activation / copy.
+    Copy = 9,
+}
+
+impl Opcode {
+    fn from_u32(v: u32) -> Option<Opcode> {
+        Some(match v {
+            0 => Opcode::Input,
+            1 => Opcode::Conv,
+            2 => Opcode::DwConv,
+            3 => Opcode::Fc,
+            4 => Opcode::Scale,
+            5 => Opcode::Pool,
+            6 => Opcode::Eltwise,
+            7 => Opcode::Concat,
+            8 => Opcode::Upsample,
+            9 => Opcode::Copy,
+            _ => return None,
+        })
+    }
+}
+
+/// A fully-specified group instruction (decoded form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instruction {
+    pub group: u32,
+    pub opcode: Opcode,
+    pub act: Activation,
+    pub reuse: ReuseMode,
+    /// Convolution geometry (1/1/same for non-conv groups).
+    pub k: u8,
+    pub stride: u8,
+    pub pad_same: bool,
+    pub in_h: u16,
+    pub in_w: u16,
+    pub in_c: u16,
+    pub out_h: u16,
+    pub out_w: u16,
+    pub out_c: u16,
+    /// Fused trailing pooling.
+    pub pool: Option<(PoolKind, u8, u8)>,
+    /// Fused nearest-neighbour upsampling factor (0 = none).
+    pub upsample: u8,
+    /// Fused element-wise shortcut addition.
+    pub fused_eltwise: bool,
+    /// Parallel SE squeeze output (GAP during writeback, Fig. 13d).
+    pub se_squeeze: bool,
+    /// Dynamic fixed-point output shift (§III-B).
+    pub quant_shift: i8,
+    /// Buffer selectors (2 bits each; 3 = DRAM) + DRAM byte offsets.
+    pub in_sel: u8,
+    pub out_sel: u8,
+    /// Second-operand selector (shortcut / concat's second input /
+    /// SE-scale gate).
+    pub aux_sel: u8,
+    pub in_addr: u32,
+    pub out_addr: u32,
+    pub aux_addr: u32,
+    pub weight_addr: u32,
+    pub weight_bytes: u32,
+}
+
+impl Default for Instruction {
+    fn default() -> Self {
+        Instruction {
+            group: 0,
+            opcode: Opcode::Copy,
+            act: Activation::Linear,
+            reuse: ReuseMode::Row,
+            k: 1,
+            stride: 1,
+            pad_same: true,
+            in_h: 0,
+            in_w: 0,
+            in_c: 0,
+            out_h: 0,
+            out_w: 0,
+            out_c: 0,
+            pool: None,
+            upsample: 0,
+            fused_eltwise: false,
+            se_squeeze: false,
+            quant_shift: 0,
+            in_sel: 3,
+            out_sel: 3,
+            aux_sel: 3,
+            in_addr: 0,
+            out_addr: 0,
+            aux_addr: 0,
+            weight_addr: 0,
+            weight_bytes: 0,
+        }
+    }
+}
+
+fn act_code(a: Activation) -> u32 {
+    match a {
+        Activation::Linear => 0,
+        Activation::Relu => 1,
+        Activation::Leaky => 2,
+        Activation::Relu6 => 3,
+        Activation::Swish => 4,
+        Activation::Sigmoid => 5,
+        Activation::HardSwish => 6,
+        Activation::HardSigmoid => 7,
+    }
+}
+
+fn act_from(code: u32) -> Option<Activation> {
+    Some(match code {
+        0 => Activation::Linear,
+        1 => Activation::Relu,
+        2 => Activation::Leaky,
+        3 => Activation::Relu6,
+        4 => Activation::Swish,
+        5 => Activation::Sigmoid,
+        6 => Activation::HardSwish,
+        7 => Activation::HardSigmoid,
+        _ => return None,
+    })
+}
+
+fn pool_code(p: Option<(PoolKind, u8, u8)>) -> (u32, u32, u32) {
+    match p {
+        None => (0, 0, 0),
+        Some((PoolKind::Max, k, s)) => (1, k as u32, s as u32),
+        Some((PoolKind::Avg, k, s)) => (2, k as u32, s as u32),
+        Some((PoolKind::Global, _, _)) => (3, 0, 0),
+    }
+}
+
+/// Encode to the 11-word wire format.
+///
+/// ```text
+/// w0  opcode[3:0] act[7:4] reuse[8] pad[9] elt[10] se[11]
+///     pool_kind[13:12] k[19:16] stride[23:20] upsample[27:24]
+/// w1  in_h[31:16] in_w[15:0]
+/// w2  in_c[31:16] out_c[15:0]
+/// w3  out_h[31:16] out_w[15:0]
+/// w4  pool_k[7:0] pool_s[15:8] in_sel[17:16] out_sel[19:18]
+///     aux_sel[21:20] quant_shift[31:24]
+/// w5  in_addr    w6 out_addr   w7 aux_addr
+/// w8  weight_addr  w9 weight_bytes
+/// w10 group[23:0] magic[31:24]
+/// ```
+pub fn encode(i: &Instruction) -> [u32; WORDS_PER_INSTR] {
+    let (pk, pool_k, pool_s) = pool_code(i.pool);
+    let w0 = (i.opcode as u32)
+        | (act_code(i.act) << 4)
+        | (((i.reuse == ReuseMode::Frame) as u32) << 8)
+        | ((i.pad_same as u32) << 9)
+        | ((i.fused_eltwise as u32) << 10)
+        | ((i.se_squeeze as u32) << 11)
+        | (pk << 12)
+        | ((i.k as u32 & 0xF) << 16)
+        | ((i.stride as u32 & 0xF) << 20)
+        | ((i.upsample as u32 & 0xF) << 24);
+    let w4 = pool_k
+        | (pool_s << 8)
+        | ((i.in_sel as u32 & 3) << 16)
+        | ((i.out_sel as u32 & 3) << 18)
+        | ((i.aux_sel as u32 & 3) << 20)
+        | (((i.quant_shift as u8) as u32) << 24);
+    [
+        w0,
+        ((i.in_h as u32) << 16) | i.in_w as u32,
+        ((i.in_c as u32) << 16) | i.out_c as u32,
+        ((i.out_h as u32) << 16) | i.out_w as u32,
+        w4,
+        i.in_addr,
+        i.out_addr,
+        i.aux_addr,
+        i.weight_addr,
+        i.weight_bytes,
+        (i.group & 0x00FF_FFFF) | (MAGIC << 24),
+    ]
+}
+
+/// Decode failure (bad magic / invalid field).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeError(pub String);
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "instruction decode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Decode an 11-word instruction; validates the magic tag and enums.
+pub fn decode(w: &[u32; WORDS_PER_INSTR]) -> Result<Instruction, DecodeError> {
+    if w[10] >> 24 != MAGIC {
+        return Err(DecodeError(format!("bad magic {:#x}", w[10] >> 24)));
+    }
+    let opcode = Opcode::from_u32(w[0] & 0xF).ok_or_else(|| DecodeError("bad opcode".into()))?;
+    let act = act_from((w[0] >> 4) & 0xF).ok_or_else(|| DecodeError("bad activation".into()))?;
+    let pool = match (w[0] >> 12) & 0x3 {
+        0 => None,
+        1 => Some((PoolKind::Max, (w[4] & 0xFF) as u8, ((w[4] >> 8) & 0xFF) as u8)),
+        2 => Some((PoolKind::Avg, (w[4] & 0xFF) as u8, ((w[4] >> 8) & 0xFF) as u8)),
+        _ => Some((PoolKind::Global, 0, 0)),
+    };
+    Ok(Instruction {
+        group: w[10] & 0x00FF_FFFF,
+        opcode,
+        act,
+        reuse: if (w[0] >> 8) & 1 == 1 { ReuseMode::Frame } else { ReuseMode::Row },
+        k: ((w[0] >> 16) & 0xF) as u8,
+        stride: ((w[0] >> 20) & 0xF) as u8,
+        pad_same: (w[0] >> 9) & 1 == 1,
+        in_h: (w[1] >> 16) as u16,
+        in_w: (w[1] & 0xFFFF) as u16,
+        in_c: (w[2] >> 16) as u16,
+        out_c: (w[2] & 0xFFFF) as u16,
+        out_h: (w[3] >> 16) as u16,
+        out_w: (w[3] & 0xFFFF) as u16,
+        pool,
+        upsample: ((w[0] >> 24) & 0xF) as u8,
+        fused_eltwise: (w[0] >> 10) & 1 == 1,
+        se_squeeze: (w[0] >> 11) & 1 == 1,
+        quant_shift: ((w[4] >> 24) & 0xFF) as u8 as i8,
+        in_sel: ((w[4] >> 16) & 3) as u8,
+        out_sel: ((w[4] >> 18) & 3) as u8,
+        aux_sel: ((w[4] >> 20) & 3) as u8,
+        in_addr: w[5],
+        out_addr: w[6],
+        aux_addr: w[7],
+        weight_addr: w[8],
+        weight_bytes: w[9],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    fn random_instr(rng: &mut crate::testutil::Rng) -> Instruction {
+        let acts = [
+            Activation::Linear,
+            Activation::Relu,
+            Activation::Leaky,
+            Activation::Relu6,
+            Activation::Swish,
+            Activation::Sigmoid,
+            Activation::HardSwish,
+            Activation::HardSigmoid,
+        ];
+        let ops = [
+            Opcode::Input,
+            Opcode::Conv,
+            Opcode::DwConv,
+            Opcode::Fc,
+            Opcode::Scale,
+            Opcode::Pool,
+            Opcode::Eltwise,
+            Opcode::Concat,
+            Opcode::Upsample,
+            Opcode::Copy,
+        ];
+        Instruction {
+            group: rng.below(1 << 24) as u32,
+            opcode: *rng.choose(&ops),
+            act: *rng.choose(&acts),
+            reuse: if rng.coin() { ReuseMode::Frame } else { ReuseMode::Row },
+            k: rng.range(1, 15) as u8,
+            stride: rng.range(1, 4) as u8,
+            pad_same: rng.coin(),
+            in_h: rng.below(2048) as u16,
+            in_w: rng.below(2048) as u16,
+            in_c: rng.below(4096) as u16,
+            out_h: rng.below(2048) as u16,
+            out_w: rng.below(2048) as u16,
+            out_c: rng.below(4096) as u16,
+            pool: match rng.below(4) {
+                0 => None,
+                1 => Some((PoolKind::Max, rng.range(2, 3) as u8, 2)),
+                2 => Some((PoolKind::Avg, 2, 2)),
+                _ => Some((PoolKind::Global, 0, 0)),
+            },
+            upsample: rng.below(4) as u8 * 2,
+            fused_eltwise: rng.coin(),
+            se_squeeze: rng.coin(),
+            quant_shift: rng.next_u64() as i8,
+            in_sel: rng.below(4) as u8,
+            out_sel: rng.below(4) as u8,
+            aux_sel: rng.below(4) as u8,
+            in_addr: rng.next_u64() as u32,
+            out_addr: rng.next_u64() as u32,
+            aux_addr: rng.next_u64() as u32,
+            weight_addr: rng.next_u64() as u32,
+            weight_bytes: rng.next_u64() as u32,
+        }
+    }
+
+    #[test]
+    fn round_trip_random_instructions() {
+        forall("encode∘decode = id", 500, |rng| {
+            let i = random_instr(rng);
+            let words = encode(&i);
+            let j = decode(&words).unwrap();
+            assert_eq!(i, j);
+        });
+    }
+
+    #[test]
+    fn eleven_words() {
+        assert_eq!(WORDS_PER_INSTR, 11);
+        assert_eq!(encode(&Instruction::default()).len(), 11);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut w = encode(&Instruction::default());
+        w[10] = 0;
+        assert!(decode(&w).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_opcode() {
+        let mut w = encode(&Instruction::default());
+        w[0] = (w[0] & !0xF) | 0xE;
+        assert!(decode(&w).is_err());
+    }
+
+    #[test]
+    fn quant_shift_sign_preserved() {
+        let mut i = Instruction::default();
+        i.quant_shift = -5;
+        assert_eq!(decode(&encode(&i)).unwrap().quant_shift, -5);
+    }
+}

@@ -1,0 +1,153 @@
+//! Lowering: grouped graph + memory assignment → instruction stream.
+
+use super::encode::{encode, Instruction, Opcode, ReuseMode, WORDS_PER_INSTR};
+use super::MemLoc;
+use crate::analyzer::{GroupKind, GroupedGraph};
+
+/// Per-group memory assignment produced by the reuse-aware allocator
+/// ([`crate::alloc`]): the reuse scheme, where each operand lives, and the
+/// weight arena slice.
+#[derive(Debug, Clone)]
+pub struct MemAssign {
+    pub reuse: ReuseMode,
+    pub in_loc: MemLoc,
+    pub out_loc: MemLoc,
+    /// Second operand (shortcut / concat second input / SE gate).
+    pub aux_loc: Option<MemLoc>,
+    pub weight_addr: u32,
+    pub weight_bytes: u32,
+    /// Dynamic fixed-point output shift.
+    pub quant_shift: i8,
+}
+
+impl Default for MemAssign {
+    fn default() -> Self {
+        MemAssign {
+            reuse: ReuseMode::Row,
+            in_loc: MemLoc::Dram(0),
+            out_loc: MemLoc::Dram(0),
+            aux_loc: None,
+            weight_addr: 0,
+            weight_bytes: 0,
+            quant_shift: 0,
+        }
+    }
+}
+
+/// The packed program for one network: decoded instructions plus the raw
+/// word stream that would be DMA'd to the accelerator.
+#[derive(Debug, Clone)]
+pub struct InstructionStream {
+    pub instrs: Vec<Instruction>,
+    pub words: Vec<u32>,
+}
+
+impl InstructionStream {
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Total byte size of the packed stream.
+    pub fn byte_size(&self) -> usize {
+        self.words.len() * 4
+    }
+}
+
+/// Lower every group to its 11-word instruction. `assigns` must be
+/// parallel to `gg.groups`.
+pub fn lower(gg: &GroupedGraph, assigns: &[MemAssign]) -> InstructionStream {
+    assert_eq!(gg.groups.len(), assigns.len(), "one MemAssign per group");
+    let mut instrs = Vec::with_capacity(gg.groups.len());
+    let mut words = Vec::with_capacity(gg.groups.len() * WORDS_PER_INSTR);
+    for (gr, asg) in gg.groups.iter().zip(assigns) {
+        let (k, stride, _dw) = gr.conv_geometry(&gg.graph);
+        let opcode = match gr.kind {
+            GroupKind::Input => Opcode::Input,
+            GroupKind::Conv => Opcode::Conv,
+            GroupKind::DwConv => Opcode::DwConv,
+            GroupKind::Fc => Opcode::Fc,
+            GroupKind::Scale => Opcode::Scale,
+            GroupKind::Pool => Opcode::Pool,
+            GroupKind::Eltwise => Opcode::Eltwise,
+            GroupKind::Concat => Opcode::Concat,
+            GroupKind::Upsample => Opcode::Upsample,
+            GroupKind::Act => Opcode::Copy,
+        };
+        let instr = Instruction {
+            group: gr.id.0 as u32,
+            opcode,
+            act: gr.act,
+            reuse: asg.reuse,
+            k: k as u8,
+            stride: stride as u8,
+            pad_same: true,
+            in_h: gr.in_shape.h as u16,
+            in_w: gr.in_shape.w as u16,
+            in_c: gr.in_shape.c as u16,
+            out_h: gr.out_shape.h as u16,
+            out_w: gr.out_shape.w as u16,
+            out_c: gr.out_shape.c as u16,
+            pool: gr.pool.map(|(pk, k, s)| (pk, k as u8, s as u8)),
+            upsample: gr.upsample.unwrap_or(0) as u8,
+            fused_eltwise: gr.shortcut_of.is_some(),
+            se_squeeze: gr.se_squeeze,
+            quant_shift: asg.quant_shift,
+            in_sel: asg.in_loc.selector() as u8,
+            out_sel: asg.out_loc.selector() as u8,
+            aux_sel: asg.aux_loc.map(|l| l.selector() as u8).unwrap_or(3),
+            in_addr: asg.in_loc.dram_addr(),
+            out_addr: asg.out_loc.dram_addr(),
+            aux_addr: asg.aux_loc.map(|l| l.dram_addr()).unwrap_or(0),
+            weight_addr: asg.weight_addr,
+            weight_bytes: asg.weight_bytes,
+        };
+        words.extend_from_slice(&encode(&instr));
+        instrs.push(instr);
+    }
+    InstructionStream { instrs, words }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::isa::decode;
+    use crate::zoo;
+
+    #[test]
+    fn lower_resnet50_round_trips() {
+        let gg = analyze(&zoo::resnet50(224));
+        let assigns = vec![MemAssign::default(); gg.groups.len()];
+        let stream = lower(&gg, &assigns);
+        assert_eq!(stream.len(), gg.groups.len());
+        assert_eq!(stream.words.len(), gg.groups.len() * WORDS_PER_INSTR);
+        // every encoded instruction decodes back to the stored one
+        for (i, ins) in stream.instrs.iter().enumerate() {
+            let chunk: [u32; WORDS_PER_INSTR] =
+                stream.words[i * WORDS_PER_INSTR..(i + 1) * WORDS_PER_INSTR].try_into().unwrap();
+            assert_eq!(&decode(&chunk).unwrap(), ins);
+        }
+    }
+
+    #[test]
+    fn fused_flags_survive_lowering() {
+        let gg = analyze(&zoo::efficientnet_b1(256));
+        let assigns = vec![MemAssign::default(); gg.groups.len()];
+        let stream = lower(&gg, &assigns);
+        let fused_elt = stream.instrs.iter().filter(|i| i.fused_eltwise).count();
+        let se = stream.instrs.iter().filter(|i| i.se_squeeze).count();
+        assert_eq!(fused_elt, 16);
+        assert_eq!(se, 23);
+    }
+
+    #[test]
+    #[should_panic(expected = "one MemAssign per group")]
+    fn mismatched_assign_len_panics() {
+        let gg = analyze(&zoo::vgg16_conv(224));
+        lower(&gg, &[]);
+    }
+}

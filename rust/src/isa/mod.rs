@@ -1,0 +1,47 @@
+//! Group-wise instruction set (Fig. 5b).
+//!
+//! Each node group compiles to an 11-word (32-bit) instruction "describing
+//! convolution size, activation type, pooling/upsampling option, fused
+//! element-wise, etc." plus the static memory assignment produced by the
+//! reuse-aware allocator (on-chip buffer ids + off-chip addresses). The
+//! inference driver packs parameters, input, and *all* instructions and
+//! ships them to the accelerator at once (§III-A).
+
+mod encode;
+mod lower;
+
+pub use encode::{decode, encode, DecodeError, Instruction, Opcode, ReuseMode, WORDS_PER_INSTR};
+pub use lower::{lower, InstructionStream, MemAssign};
+
+/// On-chip physical buffer id {0,1,2} or DRAM.
+///
+/// The accelerator has three interchangeable SRAM buffers used for the
+/// input / output / shortcut tensors of frame-reuse layers (§III-B);
+/// row-reuse tensors live in DRAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemLoc {
+    /// One of the three on-chip physical buffers.
+    Buf(u8),
+    /// Off-chip, at a byte offset in the accelerator's DRAM arena.
+    Dram(u32),
+}
+
+impl MemLoc {
+    /// 2-bit buffer selector for the instruction word; 3 = DRAM.
+    pub fn selector(&self) -> u32 {
+        match self {
+            MemLoc::Buf(b) => {
+                debug_assert!(*b < 3);
+                *b as u32
+            }
+            MemLoc::Dram(_) => 3,
+        }
+    }
+
+    pub fn dram_addr(&self) -> u32 {
+        match self {
+            MemLoc::Dram(a) => *a,
+            MemLoc::Buf(_) => 0,
+        }
+    }
+}

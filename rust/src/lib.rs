@@ -1,0 +1,46 @@
+//! # ShortcutFusion
+//!
+//! Reproduction of *"ShortcutFusion: From Tensorflow to FPGA-based
+//! accelerator with a reuse-aware memory allocation for shortcut data"*
+//! (Nguyen et al., IEEE TCSI 2022).
+//!
+//! ShortcutFusion is an end-to-end CNN compiler + accelerator co-design:
+//! a frozen CNN graph is parsed, fused into accelerator groups, assigned a
+//! per-block weight-reuse scheme (row-based vs frame-based) by a
+//! *reuse-aware shortcut optimizer* with static 3-buffer memory
+//! allocation, lowered to an 11-word instruction stream, and executed on a
+//! (here: simulated) shared-MAC-array accelerator.
+//!
+//! The pipeline mirrors Fig. 4 of the paper:
+//!
+//! ```text
+//! frozen graph ──> analyzer (fusion) ──> reuse-aware optimizer ──┐
+//!                                                                ▼
+//!  funcsim  <── isa instruction stream <── static memory allocation
+//!     │                                        │
+//!     ▼                                        ▼
+//!  verify vs JAX golden (PJRT)          cycle-accurate timing sim
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the hardware
+//! substitutions (FPGA → cycle-accurate simulator, GPU → analytical model).
+
+pub mod config;
+pub mod graph;
+pub mod serialize;
+pub mod zoo;
+pub mod analyzer;
+pub mod isa;
+pub mod optimizer;
+pub mod alloc;
+pub mod sim;
+pub mod funcsim;
+pub mod power;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

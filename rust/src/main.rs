@@ -1,0 +1,4 @@
+//! ShortcutFusion CLI — see `shortcutfusion help`.
+fn main() -> anyhow::Result<()> {
+    shortcutfusion::coordinator::cli::run(std::env::args().skip(1).collect())
+}

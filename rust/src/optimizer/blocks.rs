@@ -1,0 +1,147 @@
+//! Basic-block partition (Fig. 10): "a block of layers is defined as a
+//! residual block or a single CNN layer which does not belong to any
+//! residual blocks."
+
+use crate::analyzer::{GroupKind, GroupedGraph};
+
+/// A contiguous run of groups sharing one reuse decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BasicBlock {
+    /// First group index (inclusive).
+    pub start: usize,
+    /// Last group index (inclusive).
+    pub end: usize,
+    /// True when the block closes with a fused shortcut addition.
+    pub is_residual: bool,
+}
+
+impl BasicBlock {
+    pub fn groups(&self) -> std::ops::RangeInclusive<usize> {
+        self.start..=self.end
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+/// Partition all groups (except the input feed) into basic blocks.
+///
+/// Residual spans come from fused shortcuts: a group `g` with
+/// `shortcut_of = s` closes the block `[s+1, g]` (both branches of the
+/// residual live inside). Long FPN skips that would swallow previously
+/// closed blocks are clamped — the paper stores those shortcut tensors
+/// off-chip anyway (§IV-A), so they do not bind reuse decisions together.
+pub fn basic_blocks(gg: &GroupedGraph) -> Vec<BasicBlock> {
+    let n = gg.groups.len();
+    // Collect residual spans (clamped later), ordered by end.
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for (gi, gr) in gg.groups.iter().enumerate() {
+        if let Some(s) = gr.shortcut_of {
+            spans.push((s.0 + 1, gi));
+        }
+    }
+    spans.sort_by_key(|&(_, e)| e);
+
+    let mut blocks = Vec::new();
+    let mut cur = 1usize; // group 0 is the Input feed
+    for (s, e) in spans {
+        if e < cur {
+            continue; // nested within an already-closed block
+        }
+        let s = s.max(cur);
+        // groups before the span are single-layer blocks
+        for g in cur..s {
+            blocks.push(BasicBlock { start: g, end: g, is_residual: false });
+        }
+        blocks.push(BasicBlock { start: s, end: e, is_residual: true });
+        cur = e + 1;
+    }
+    for g in cur..n {
+        blocks.push(BasicBlock { start: g, end: g, is_residual: false });
+    }
+    blocks
+}
+
+/// Representative feature-map pixel count of a block (used for the
+/// monotone-size segmentation): the largest *spatial* fmap its groups
+/// produce. Vector tensors (SE gates, FC activations) are scale-neutral
+/// and return 0 — the segmentation carries the surrounding scale across
+/// them.
+pub fn block_scale(gg: &GroupedGraph, b: &BasicBlock) -> u64 {
+    b.groups()
+        .map(|g| {
+            let s = gg.groups[g].out_shape;
+            if s.h * s.w <= 1 {
+                0
+            } else {
+                (s.h * s.w) as u64
+            }
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// True when the block contains any compute group.
+pub fn block_has_compute(gg: &GroupedGraph, b: &BasicBlock) -> bool {
+    b.groups().any(|g| {
+        matches!(
+            gg.groups[g].kind,
+            GroupKind::Conv | GroupKind::DwConv | GroupKind::Fc | GroupKind::Scale
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::zoo;
+
+    #[test]
+    fn blocks_tile_all_groups() {
+        for &name in zoo::MODEL_NAMES {
+            let gg = analyze(&zoo::by_name(name, zoo::default_input(name)).unwrap());
+            let blocks = basic_blocks(&gg);
+            let mut next = 1usize;
+            for b in &blocks {
+                assert_eq!(b.start, next, "{name}: gap before block");
+                assert!(b.end >= b.start, "{name}");
+                next = b.end + 1;
+            }
+            assert_eq!(next, gg.groups.len(), "{name}: trailing gap");
+        }
+    }
+
+    #[test]
+    fn resnet50_residual_block_count() {
+        let gg = analyze(&zoo::resnet50(224));
+        let blocks = basic_blocks(&gg);
+        let residual = blocks.iter().filter(|b| b.is_residual).count();
+        assert_eq!(residual, 16);
+    }
+
+    #[test]
+    fn vgg_is_all_single_blocks() {
+        let gg = analyze(&zoo::vgg16_conv(224));
+        let blocks = basic_blocks(&gg);
+        assert!(blocks.iter().all(|b| !b.is_residual));
+        assert_eq!(blocks.len(), gg.groups.len() - 1);
+    }
+
+    #[test]
+    fn efficientnet_blocks() {
+        let gg = analyze(&zoo::efficientnet_b1(256));
+        let blocks = basic_blocks(&gg);
+        // 16 identity-shortcut MBConv blocks are residual.
+        assert_eq!(blocks.iter().filter(|b| b.is_residual).count(), 16);
+        // residual MBConv blocks span the whole expand→project chain
+        for b in blocks.iter().filter(|b| b.is_residual) {
+            assert!(b.len() >= 5, "MBConv block too small: {}", b.len());
+        }
+    }
+}

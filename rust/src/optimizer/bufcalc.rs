@@ -1,0 +1,216 @@
+//! On-chip buffer sizing: Algorithm 1 and equations (1)–(7).
+
+use crate::alloc::AllocResult;
+use crate::analyzer::{GroupKind, GroupedGraph};
+use crate::config::AccelConfig;
+use crate::graph::OpKind;
+use crate::isa::ReuseMode;
+
+/// SRAM requirement of a reuse policy, itemized as in §IV-B.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SramBreakdown {
+    /// Algorithm 1's `buff[0..2](L)` — the three physical buffers
+    /// (buffer 1 already merged with the weight buffer per eq. 2).
+    pub buff: [usize; 3],
+    /// eq. (1): largest whole-layer weight preload among row-reuse layers.
+    pub weight_buff: usize,
+    /// eq. (3): six-row circular input buffer.
+    pub row_buff: usize,
+    /// eq. (4): whole-frame partial-sum buffer for frame-reuse layers.
+    pub out_buff: usize,
+    /// eq. (5): write-back buffer.
+    pub write_buff: usize,
+    /// SE / FC vector SRAM (Fig. 13c).
+    pub aux: usize,
+    /// eq. (6): total raw SRAM bytes.
+    pub total: usize,
+    /// eq. (7): BRAM18K blocks.
+    pub bram18k: usize,
+}
+
+/// Compute the SRAM breakdown for `policy` given the allocator's
+/// placement result.
+pub fn sram_size(
+    gg: &GroupedGraph,
+    policy: &[ReuseMode],
+    alloc: &AllocResult,
+    cfg: &AccelConfig,
+) -> SramBreakdown {
+    let qa = cfg.qa;
+    let qs = cfg.qs;
+    let to = cfg.to;
+
+    // Algorithm 1: the physical-buffer peaks come from the allocator's
+    // liveness walk (same max() recurrences, machine-checked there).
+    let mut buff = alloc.buf_peak;
+
+    // eq. (1): in row-reuse mode the entire layer weights are preloaded.
+    let weight_buff = gg
+        .groups
+        .iter()
+        .enumerate()
+        .filter(|(gi, _)| policy[*gi] == ReuseMode::Row)
+        .map(|(_, gr)| gr.weight_bytes(&gg.graph, cfg.qw as u64) as usize)
+        .max()
+        .unwrap_or(0);
+
+    // eq. (2): buffer 1 is shared between feature maps and weights.
+    buff[1] = buff[1].max(weight_buff);
+
+    // eq. (3): six rows (one for prefetch) of `w × N` input pixels.
+    let row_buff = gg
+        .groups
+        .iter()
+        .filter(|gr| is_conv_like(gg, gr))
+        .map(|gr| 6 * gr.in_shape.w * gr.in_shape.c * qa)
+        .max()
+        .unwrap_or(0);
+
+    // eq. (4): frame-reuse layers accumulate To channels of the whole
+    // output frame in Q_S-wide partial sums. The frame is the *conv*
+    // output (pre-pooling).
+    let out_buff = gg
+        .groups
+        .iter()
+        .enumerate()
+        .filter(|(gi, gr)| policy[*gi] == ReuseMode::Frame && is_conv_like(gg, gr))
+        .map(|(_, gr)| {
+            let conv_out = gg.graph.node(gr.main).out_shape;
+            conv_out.w * conv_out.h * to.min(conv_out.c.max(1)) * qs
+        })
+        .max()
+        .unwrap_or(0);
+
+    // eq. (5): write buffer — one row (row-reuse) vs one frame slice
+    // (frame-reuse final layers).
+    let consumers = gg.consumers();
+    let write_row = gg
+        .groups
+        .iter()
+        .enumerate()
+        .filter(|(gi, _)| policy[*gi] == ReuseMode::Row)
+        .map(|(_, gr)| gr.out_shape.w * to * qa)
+        .max()
+        .unwrap_or(0);
+    let write_frame_final = gg
+        .groups
+        .iter()
+        .enumerate()
+        .filter(|(gi, _)| policy[*gi] == ReuseMode::Frame && consumers[*gi].is_empty())
+        .map(|(_, gr)| gr.out_shape.w * gr.out_shape.h * to * qa)
+        .max()
+        .unwrap_or(0);
+    let write_buff = write_row.max(write_frame_final);
+
+    // eq. (6)
+    let aux = alloc.aux_peak;
+    let total = row_buff + out_buff + write_buff + buff[0] + buff[1] + buff[2] + aux;
+
+    // eq. (7): BRAM18K per buffer with To banks of 18-bit-wide ports
+    // (16 data bits): depth_per_bank = bytes / (banks × 2).
+    let bram = |bytes: usize, width_bytes: usize| -> usize {
+        if bytes == 0 {
+            return 0;
+        }
+        let banks = to;
+        let depth = (bytes / width_bytes).div_ceil(banks);
+        banks * depth.div_ceil(1024) * (width_bytes * 8).div_ceil(18)
+    };
+    let bram18k = bram(buff[0], 2)
+        + bram(buff[1], 2)
+        + bram(buff[2], 2)
+        + bram(row_buff, 2)
+        + bram(out_buff, 4)
+        + bram(write_buff, 2)
+        + bram(aux.max(1), 2)
+        // swish/sigmoid LUTs: two per 18 Kb BRAM, To of each (§III-B).
+        + to;
+
+    SramBreakdown { buff, weight_buff, row_buff, out_buff, write_buff, aux, total, bram18k }
+}
+
+fn is_conv_like(gg: &GroupedGraph, gr: &crate::analyzer::Group) -> bool {
+    matches!(gr.kind, GroupKind::Conv | GroupKind::DwConv)
+        && matches!(gg.graph.node(gr.main).op, OpKind::Conv { .. })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::allocate;
+    use crate::analyzer::analyze;
+    use crate::zoo;
+
+    fn eval(name: &str, mode: ReuseMode) -> SramBreakdown {
+        let gg = analyze(&zoo::by_name(name, zoo::default_input(name)).unwrap());
+        let cfg = AccelConfig::kcu1500_int8();
+        let policy = vec![mode; gg.groups.len()];
+        let alloc = allocate(&gg, &policy, &cfg);
+        sram_size(&gg, &policy, &alloc, &cfg)
+    }
+
+    #[test]
+    fn all_row_needs_weight_buffer_not_fmap_buffers() {
+        let s = eval("vgg16-conv", ReuseMode::Row);
+        assert_eq!(s.buff[0], 0);
+        assert_eq!(s.buff[2], 0);
+        // largest VGG conv layer: 3x3x512x512 = 2.36 MB
+        assert_eq!(s.weight_buff, 3 * 3 * 512 * 512);
+        assert_eq!(s.buff[1], s.weight_buff);
+        assert_eq!(s.out_buff, 0);
+    }
+
+    #[test]
+    fn all_frame_needs_fmap_buffers_not_weight_buffer() {
+        let s = eval("vgg16-conv", ReuseMode::Frame);
+        assert_eq!(s.weight_buff, 0);
+        // conv1_1/conv1_2 frames: 224*224*64 output, input staged 224*224*3
+        assert!(s.buff.iter().any(|&b| b == 224 * 224 * 64));
+        // eq 4: psum frame 224*224*64ch*4B
+        assert_eq!(s.out_buff, 224 * 224 * 64 * 4);
+    }
+
+    #[test]
+    fn row_buffer_is_six_rows() {
+        let s = eval("vgg16-conv", ReuseMode::Row);
+        // widest w×N among convs: 224 wide, 64 channels = 14336 per row
+        assert_eq!(s.row_buff, 6 * 224 * 64);
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        for mode in [ReuseMode::Row, ReuseMode::Frame] {
+            let s = eval("resnet50", mode);
+            assert_eq!(
+                s.total,
+                s.row_buff + s.out_buff + s.write_buff + s.buff[0] + s.buff[1] + s.buff[2] + s.aux
+            );
+        }
+    }
+
+    #[test]
+    fn bram_estimate_tracks_bytes() {
+        let s8 = eval("resnet50", ReuseMode::Frame);
+        // BRAM capacity must cover the raw bytes (2 KB data per BRAM18K
+        // at 16 usable bits) within bank-quantization slack.
+        let capacity = s8.bram18k * 2048;
+        assert!(capacity >= s8.total, "{} < {}", capacity, s8.total);
+        assert!(s8.bram18k < 4320 * 3, "absurd BRAM count {}", s8.bram18k);
+    }
+
+    #[test]
+    fn sixteen_bit_doubles_fmap_sram() {
+        let gg = analyze(&zoo::resnet152(224));
+        let mut cfg = AccelConfig::table2_int16();
+        cfg.to = 64; // isolate the qa effect from bank count
+        let policy = vec![ReuseMode::Frame; gg.groups.len()];
+        let alloc16 = allocate(&gg, &policy, &cfg);
+        let s16 = sram_size(&gg, &policy, &alloc16, &cfg);
+
+        let cfg8 = AccelConfig::kcu1500_int8();
+        let alloc8 = allocate(&gg, &policy, &cfg8);
+        let s8 = sram_size(&gg, &policy, &alloc8, &cfg8);
+        assert!(s16.buff[0] >= 2 * s8.buff[0].min(1).max(s8.buff[0] / 2));
+        assert!(s16.total > s8.total);
+    }
+}

@@ -1,0 +1,28 @@
+//! The reuse-aware shortcut optimizer (§IV).
+//!
+//! Pipeline:
+//! 1. [`blocks::basic_blocks`] — partition groups into *basic blocks*
+//!    (a residual block, or a single layer outside any residual block,
+//!    Fig. 10); all layers of a block share one reuse scheme.
+//! 2. [`segments::segments`] — split the block sequence into maximal
+//!    monotone feature-map-size runs; each run carries exactly one
+//!    cut-point (the paper's relaxation, Fig. 11/12: classifier = 1 cut,
+//!    FPN = 2, PANet = 3, BiFPN×r = 2r+1).
+//! 3. [`bufcalc`] — Algorithm 1 + equations (1)–(7): required SRAM and
+//!    BRAM18K for a candidate policy.
+//! 4. [`dram`] — equations (8)–(9): DRAM traffic for a candidate policy.
+//! 5. [`cutpoint`] — exhaustive O(N^k) search (coordinate descent beyond
+//!    k = 4) for the latency-optimal policy under the eq-(10) buffer and
+//!    DRAM constraints.
+
+pub mod blocks;
+pub mod segments;
+pub mod bufcalc;
+pub mod dram;
+pub mod cutpoint;
+
+pub use blocks::{basic_blocks, BasicBlock};
+pub use bufcalc::{sram_size, SramBreakdown};
+pub use cutpoint::{CutPolicy, Evaluation, LatencyFn, Optimizer, SweepPoint};
+pub use dram::{dram_access, DramBreakdown};
+pub use segments::{segments, Direction, Segment};

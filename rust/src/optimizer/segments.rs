@@ -1,0 +1,172 @@
+//! Monotone feature-map-size segmentation (§IV, Fig. 11/12).
+//!
+//! "In all the recent CNNs, the feature-map size monotonically increases
+//! or decreases in a certain sequence of blocks. [...] a sequence of
+//! increasing or decreasing size blocks is assumed to have exactly one
+//! cut-point."
+
+use super::blocks::{block_scale, BasicBlock};
+use crate::analyzer::GroupedGraph;
+
+/// Direction of a monotone run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Feature maps shrink (classifier backbones): row-reuse first,
+    /// frame-reuse after the cut.
+    Dec,
+    /// Feature maps grow (decoder / top-down FPN paths): frame-reuse
+    /// first, row-reuse after the cut.
+    Inc,
+}
+
+/// One monotone run of basic blocks carrying a single cut-point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    /// Index of the first block (into the `basic_blocks` vector).
+    pub first_block: usize,
+    /// Number of blocks.
+    pub len: usize,
+    pub dir: Direction,
+}
+
+impl Segment {
+    /// Valid cut positions: 0..=len.
+    pub fn cut_candidates(&self) -> usize {
+        self.len + 1
+    }
+}
+
+/// Oscillations whose peak stays below this pixel count never open a new
+/// segment: fmaps this small are frame-reuse material under any policy,
+/// so a cut-point inside them cannot pay off (keeps deep head stacks from
+/// fragmenting the search space).
+const SMALL_PIXELS: u64 = 1024; // 32×32
+
+/// Split the block sequence into maximal monotone segments.
+///
+/// Ties (equal sizes) extend the current run; vector-only blocks inherit
+/// the preceding scale. A new segment opens only on a strict direction
+/// reversal above [`SMALL_PIXELS`], so a classifier yields 1 segment, an
+/// FPN detector 2–3, and BiFPN×r networks `2r+1`-ish — matching the
+/// paper's cut-point counts (Fig. 12).
+pub fn segments(gg: &GroupedGraph, blocks: &[BasicBlock]) -> Vec<Segment> {
+    assert!(!blocks.is_empty());
+    let mut sizes: Vec<u64> = blocks.iter().map(|b| block_scale(gg, b)).collect();
+    // carry the surrounding scale across vector-only blocks
+    let first_nz = sizes.iter().copied().find(|&s| s > 0).unwrap_or(1);
+    let mut prev = first_nz;
+    for s in sizes.iter_mut() {
+        if *s == 0 {
+            *s = prev;
+        } else {
+            prev = *s;
+        }
+    }
+    let small = SMALL_PIXELS;
+
+    let mut segs: Vec<Segment> = Vec::new();
+    let mut start = 0usize;
+    let mut dir: Option<Direction> = None;
+    for i in 1..sizes.len() {
+        let step = if sizes[i] > sizes[i - 1] {
+            Some(Direction::Inc)
+        } else if sizes[i] < sizes[i - 1] {
+            Some(Direction::Dec)
+        } else {
+            None
+        };
+        // Oscillations entirely below the "small" threshold do not open
+        // new segments — those blocks are frame-reuse material regardless.
+        let negligible = sizes[i].max(sizes[i - 1]) <= small;
+        match (dir, step) {
+            (_, None) => {}
+            (None, Some(d)) => dir = Some(d),
+            (Some(d), Some(s)) if d == s || negligible => {}
+            (Some(d), Some(s)) => {
+                segs.push(Segment { first_block: start, len: i - start, dir: d });
+                start = i;
+                // the reversal step i-1 → i seeds the new run's direction
+                dir = Some(s);
+            }
+        }
+    }
+    segs.push(Segment {
+        first_block: start,
+        len: sizes.len() - start,
+        dir: dir.unwrap_or(Direction::Dec),
+    });
+    segs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::optimizer::basic_blocks;
+    use crate::zoo;
+
+    fn segs_of(name: &str) -> Vec<Segment> {
+        let gg = analyze(&zoo::by_name(name, zoo::default_input(name)).unwrap());
+        let blocks = basic_blocks(&gg);
+        segments(&gg, &blocks)
+    }
+
+    #[test]
+    fn classifiers_have_one_segment() {
+        // Fig 11 (left): "a classification CNN has a single cut-point".
+        for name in ["vgg16-conv", "resnet50", "resnet152", "efficientnet-b1", "mobilenetv3-large"] {
+            let s = segs_of(name);
+            assert_eq!(s.len(), 1, "{name}: {s:?}");
+            assert_eq!(s[0].dir, Direction::Dec, "{name}");
+        }
+    }
+
+    #[test]
+    fn yolov2_single_segment() {
+        // Plain trunk ending at 13×13 (the reorg branch stays small).
+        let s = segs_of("yolov2");
+        assert_eq!(s.len(), 1, "{s:?}");
+    }
+
+    #[test]
+    fn yolov3_has_fpn_cut_structure() {
+        // Fig 12(a): FPN detectors need two cut-points — a decreasing
+        // backbone segment and an increasing top-down segment.
+        let s = segs_of("yolov3");
+        assert!(s.len() >= 2 && s.len() <= 3, "{s:?}");
+        assert_eq!(s[0].dir, Direction::Dec);
+        assert!(s.iter().any(|seg| seg.dir == Direction::Inc));
+    }
+
+    #[test]
+    fn segments_tile_blocks() {
+        for &name in zoo::MODEL_NAMES {
+            let gg = analyze(&zoo::by_name(name, zoo::default_input(name)).unwrap());
+            let blocks = basic_blocks(&gg);
+            let segs = segments(&gg, &blocks);
+            let mut next = 0usize;
+            for s in &segs {
+                assert_eq!(s.first_block, next, "{name}");
+                next += s.len;
+            }
+            assert_eq!(next, blocks.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn cut_point_counts_match_fig12() {
+        // Classifier = 1, FPN = 2–3, BiFPN×3 ≈ 7 (paper: 2r+1). Anything
+        // beyond the exhaustive cap is handled by coordinate descent, but
+        // the segment count itself must stay architectural (≤ 10).
+        for &name in zoo::MODEL_NAMES {
+            let gg = analyze(&zoo::by_name(name, zoo::default_input(name)).unwrap());
+            let blocks = basic_blocks(&gg);
+            let segs = segments(&gg, &blocks);
+            assert!(
+                (1..=10).contains(&segs.len()),
+                "{name}: {} segments",
+                segs.len()
+            );
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Power / energy model (§V-C).
+//!
+//! "The power of the accelerator is estimated as the sum of FPGA-chip
+//! power plus the DRAM power. The FPGA-chip power is calculated by
+//! Xilinx Power Estimator with the signal switching frequency from RTL
+//! simulation. The DRAM access energy is estimated from the total DRAM
+//! access and the energy per access from [56]."
+//!
+//! We reproduce the same structure: a parametric chip-power model
+//! (static + per-resource dynamic terms, calibrated against Table VII's
+//! 21.09 W at 256×256) plus DRAM energy at the per-bit figure from
+//! Malladi et al. [56].
+
+use crate::config::AccelConfig;
+
+/// DRAM energy per bit transferred (DDR3-class, [56]): ~70 pJ/bit.
+pub const DRAM_PJ_PER_BIT: f64 = 70.0;
+
+/// On-chip SRAM energy per bit (~45nm-class global buffer, Han et al.
+/// [37]: SRAM access ≈ 1/100 of a DRAM access): ~0.7 pJ/bit.
+pub const SRAM_PJ_PER_BIT: f64 = 0.7;
+
+/// Energy-per-inference breakdown from the instruction-level traffic
+/// replay (the [37] argument: off-chip access dominates energy, which is
+/// why eq. 10 constrains DRAM traffic).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyBreakdown {
+    pub dram_mj: f64,
+    pub sram_mj: f64,
+    /// DRAM energy / total memory energy.
+    pub dram_fraction: f64,
+}
+
+/// Compute the memory-system energy of one inference from replayed
+/// traffic counts ([`crate::sim::TrafficCount`]).
+pub fn memory_energy(t: &crate::sim::TrafficCount) -> EnergyBreakdown {
+    let dram_bits = (t.dram_total() * 8) as f64;
+    let sram_bits = ((t.buf_read + t.buf_write) * 8) as f64;
+    let dram_mj = dram_bits * DRAM_PJ_PER_BIT * 1e-9;
+    let sram_mj = sram_bits * SRAM_PJ_PER_BIT * 1e-9;
+    EnergyBreakdown {
+        dram_mj,
+        sram_mj,
+        dram_fraction: dram_mj / (dram_mj + sram_mj).max(1e-12),
+    }
+}
+
+/// Calibrated chip-power coefficients (XPE-style decomposition).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    /// Static + infrastructure watts (clocking, I/O, uncore).
+    pub static_w: f64,
+    /// Dynamic watts of the fully-utilized MAC arrays.
+    pub mac_w: f64,
+    /// Dynamic watts per active BRAM18K.
+    pub bram_w: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        // Calibration anchor: EfficientNet-B1@256 on the KCU1500 design
+        // (Table VII): 2594 BRAM, 19.4 % MAC utilization, 60.7 MB / 4.69 ms
+        // DRAM traffic → 21.09 W total. The three Table VII points fit to
+        // within ~13 % with these coefficients.
+        PowerModel { static_w: 4.0, mac_w: 8.0, bram_w: 0.0035 }
+    }
+}
+
+/// Power estimate for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerEstimate {
+    pub chip_w: f64,
+    pub dram_w: f64,
+    pub total_w: f64,
+    /// Energy per frame in millijoules.
+    pub frame_mj: f64,
+    pub gops_per_w: f64,
+}
+
+/// Estimate power for a simulated run.
+///
+/// * `mac_utilization` — the timing simulator's MAC efficiency;
+/// * `bram18k` — allocated BRAM count (eq. 7);
+/// * `dram_bytes` — total DRAM traffic per frame (eq. 9);
+/// * `latency_ms` — per-frame latency;
+/// * `gops` — achieved average GOPS.
+pub fn estimate(
+    model: &PowerModel,
+    _cfg: &AccelConfig,
+    mac_utilization: f64,
+    bram18k: usize,
+    dram_bytes: u64,
+    latency_ms: f64,
+    gops: f64,
+) -> PowerEstimate {
+    let chip_w = model.static_w + model.mac_w * mac_utilization + model.bram_w * bram18k as f64;
+    let dram_j = dram_bytes as f64 * 8.0 * DRAM_PJ_PER_BIT * 1e-12;
+    let dram_w = dram_j / (latency_ms * 1e-3);
+    let total_w = chip_w + dram_w;
+    PowerEstimate {
+        chip_w,
+        dram_w,
+        total_w,
+        frame_mj: total_w * latency_ms,
+        gops_per_w: gops / total_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_anchor_table7_256() {
+        // EfficientNet-B1@256: 19.37 % util, 2594 BRAM, 60.7 MB, 4.69 ms,
+        // 317.1 GOPS → paper: 21.09 W, 15.0 GOPS/W.
+        let cfg = AccelConfig::kcu1500_int8();
+        let p = estimate(
+            &PowerModel::default(),
+            &cfg,
+            0.1937,
+            2594,
+            60_700_000,
+            4.69,
+            317.1,
+        );
+        assert!(
+            (p.total_w - 21.09).abs() < 3.0,
+            "total {} vs paper 21.09",
+            p.total_w
+        );
+        assert!((p.gops_per_w - 15.0).abs() < 3.0, "{} vs 15.0", p.gops_per_w);
+    }
+
+    #[test]
+    fn table7_points_within_25pct() {
+        // Table VII: 21.09 / 23.76 / 26.71 W across 256/512/768.
+        let cfg = AccelConfig::kcu1500_int8();
+        let m = PowerModel::default();
+        let cases = [
+            (0.1937, 2594, 60_700_000u64, 4.69, 21.09),
+            (0.163, 2723, 216_000_000, 20.6, 23.76),
+            (0.1675, 3845, 475_000_000, 45.3, 26.71),
+        ];
+        for (util, bram, bytes, lat, want) in cases {
+            let p = estimate(&m, &cfg, util, bram, bytes, lat, 300.0);
+            let err = (p.total_w - want).abs() / want;
+            assert!(err < 0.25, "{} W vs paper {want} ({:.0} % off)", p.total_w, err * 100.0);
+        }
+        // and the largest resolution draws the most power
+        let p256 = estimate(&m, &cfg, 0.1937, 2594, 60_700_000, 4.69, 317.1);
+        let p768 = estimate(&m, &cfg, 0.1675, 3845, 475_000_000, 45.3, 274.4);
+        assert!(p768.total_w > p256.total_w);
+    }
+
+    #[test]
+    fn energy_breakdown_from_replay() {
+        // off-chip access must dominate memory energy even at 100:1
+        // traffic ratio in favour of SRAM — the [37] premise.
+        let t = crate::sim::TrafficCount {
+            fm_read: 1_000_000,
+            fm_write: 1_000_000,
+            weight_read: 8_000_000,
+            buf_read: 500_000_000,
+            buf_write: 500_000_000,
+        };
+        let e = memory_energy(&t);
+        assert!(e.dram_fraction > 0.4, "dram fraction {}", e.dram_fraction);
+        assert!(e.dram_mj > 0.0 && e.sram_mj > 0.0);
+    }
+
+    #[test]
+    fn dram_energy_per_bit() {
+        let cfg = AccelConfig::kcu1500_int8();
+        // 1 GB in 1 s at 70 pJ/bit = 0.56 W
+        let p = estimate(&PowerModel::default(), &cfg, 0.0, 0, 1_000_000_000, 1000.0, 0.0);
+        assert!((p.dram_w - 0.56).abs() < 0.01);
+    }
+}

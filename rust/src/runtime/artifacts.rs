@@ -1,0 +1,84 @@
+//! Artifact-directory helpers (input / expected-output JSON loaders).
+
+use crate::funcsim::Tensor;
+use crate::graph::Shape;
+use crate::serialize::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Locate `artifacts/`: `$SHORTCUTFUSION_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("SHORTCUTFUSION_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Load `tinynet_input.json`: `{"shape":[h,w,c],"data":[...]}`.
+pub fn load_input_tensor(path: &Path) -> Result<Tensor> {
+    let doc = read_json(path)?;
+    let shape = doc
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing shape"))?;
+    if shape.len() != 3 {
+        return Err(anyhow!("input shape must be [h,w,c]"));
+    }
+    let dim = |i: usize| shape[i].as_usize().ok_or_else(|| anyhow!("bad dim"));
+    let s = Shape::new(dim(0)?, dim(1)?, dim(2)?);
+    let data = i8_array(&doc, "data")?;
+    if data.len() != s.numel() {
+        return Err(anyhow!("data length {} != {}", data.len(), s.numel()));
+    }
+    Ok(Tensor::from_vec(s, data))
+}
+
+/// Load `tinynet_expected.json`: `{"logits":[...]}`.
+pub fn load_expected_logits(path: &Path) -> Result<Vec<i8>> {
+    let doc = read_json(path)?;
+    i8_array(&doc, "logits")
+}
+
+fn read_json(path: &Path) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))
+}
+
+fn i8_array(doc: &Json, key: &str) -> Result<Vec<i8>> {
+    doc.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing {key}"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .filter(|f| f.fract() == 0.0 && (-128.0..=127.0).contains(f))
+                .map(|f| f as i8)
+                .ok_or_else(|| anyhow!("bad i8 in {key}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_input_json() {
+        let dir = std::env::temp_dir().join("sf_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("in.json");
+        std::fs::write(&p, r#"{"shape":[1,2,2],"data":[1,-2,3,-4]}"#).unwrap();
+        let t = load_input_tensor(&p).unwrap();
+        assert_eq!(t.shape, Shape::new(1, 2, 2));
+        assert_eq!(t.data, vec![1, -2, 3, -4]);
+    }
+
+    #[test]
+    fn rejects_wrong_length() {
+        let dir = std::env::temp_dir().join("sf_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, r#"{"shape":[1,2,2],"data":[1]}"#).unwrap();
+        assert!(load_input_tensor(&p).is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! Frozen-graph JSON interchange (the repo's stand-in for the TensorFlow
+//! protobuf the paper's CNN parser consumes, Fig. 4).
+//!
+//! Schema:
+//! ```json
+//! {
+//!   "name": "ResNet50",
+//!   "nodes": [
+//!     {"name":"input","op":"input","inputs":[],"shape":[224,224,3]},
+//!     {"name":"conv1","op":"conv","inputs":["input"],
+//!      "k":7,"stride":2,"out_c":64,"pad":"same","depthwise":false},
+//!     {"name":"conv1/relu","op":"act","inputs":["conv1"],"act":"relu"},
+//!     ...
+//!   ]
+//! }
+//! ```
+//! Shapes are re-inferred on load; only the input shape is stored.
+
+use super::json::{parse, Json};
+use crate::graph::{Activation, Graph, GraphBuilder, NodeId, OpKind, PadMode, Shape};
+use anyhow::{anyhow, bail, Context, Result};
+
+fn act_to_str(a: Activation) -> &'static str {
+    match a {
+        Activation::Linear => "linear",
+        Activation::Relu => "relu",
+        Activation::Leaky => "leaky",
+        Activation::Relu6 => "relu6",
+        Activation::Swish => "swish",
+        Activation::Sigmoid => "sigmoid",
+        Activation::HardSwish => "hardswish",
+        Activation::HardSigmoid => "hardsigmoid",
+    }
+}
+
+fn act_from_str(s: &str) -> Result<Activation> {
+    Ok(match s {
+        "linear" => Activation::Linear,
+        "relu" => Activation::Relu,
+        "leaky" => Activation::Leaky,
+        "relu6" => Activation::Relu6,
+        "swish" => Activation::Swish,
+        "sigmoid" => Activation::Sigmoid,
+        "hardswish" => Activation::HardSwish,
+        "hardsigmoid" => Activation::HardSigmoid,
+        _ => bail!("unknown activation {s:?}"),
+    })
+}
+
+/// Serialize a graph to the frozen JSON format.
+pub fn graph_to_json(g: &Graph) -> Json {
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut pairs: Vec<(&str, Json)> = vec![
+                ("name", Json::str(&n.name)),
+                (
+                    "inputs",
+                    Json::Arr(
+                        n.inputs
+                            .iter()
+                            .map(|&i| Json::str(&g.node(i).name))
+                            .collect(),
+                    ),
+                ),
+            ];
+            match n.op {
+                OpKind::Input => {
+                    pairs.push(("op", Json::str("input")));
+                    pairs.push((
+                        "shape",
+                        Json::Arr(vec![
+                            Json::num(n.out_shape.h as f64),
+                            Json::num(n.out_shape.w as f64),
+                            Json::num(n.out_shape.c as f64),
+                        ]),
+                    ));
+                }
+                OpKind::Conv { k, stride, out_c, pad, depthwise } => {
+                    pairs.push(("op", Json::str("conv")));
+                    pairs.push(("k", Json::num(k as f64)));
+                    pairs.push(("stride", Json::num(stride as f64)));
+                    pairs.push(("out_c", Json::num(out_c as f64)));
+                    pairs.push(("pad", Json::str(match pad {
+                        PadMode::Same => "same",
+                        PadMode::Valid => "valid",
+                    })));
+                    pairs.push(("depthwise", Json::Bool(depthwise)));
+                }
+                OpKind::Fc { out_c } => {
+                    pairs.push(("op", Json::str("fc")));
+                    pairs.push(("out_c", Json::num(out_c as f64)));
+                }
+                OpKind::BatchNorm => pairs.push(("op", Json::str("bn"))),
+                OpKind::BiasAdd => pairs.push(("op", Json::str("bias"))),
+                OpKind::Act(a) => {
+                    pairs.push(("op", Json::str("act")));
+                    pairs.push(("act", Json::str(act_to_str(a))));
+                }
+                OpKind::MaxPool { k, stride } => {
+                    pairs.push(("op", Json::str("maxpool")));
+                    pairs.push(("k", Json::num(k as f64)));
+                    pairs.push(("stride", Json::num(stride as f64)));
+                }
+                OpKind::AvgPool { k, stride } => {
+                    pairs.push(("op", Json::str("avgpool")));
+                    pairs.push(("k", Json::num(k as f64)));
+                    pairs.push(("stride", Json::num(stride as f64)));
+                }
+                OpKind::GlobalAvgPool => pairs.push(("op", Json::str("gap"))),
+                OpKind::EltwiseAdd => pairs.push(("op", Json::str("add"))),
+                OpKind::ScaleMul => pairs.push(("op", Json::str("scale"))),
+                OpKind::Concat => pairs.push(("op", Json::str("concat"))),
+                OpKind::Upsample { factor } => {
+                    pairs.push(("op", Json::str("upsample")));
+                    pairs.push(("factor", Json::num(factor as f64)));
+                }
+                OpKind::Identity => pairs.push(("op", Json::str("identity"))),
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![("name", Json::str(&g.name)), ("nodes", Json::Arr(nodes))])
+}
+
+/// Deserialize a frozen JSON document into a validated graph.
+pub fn graph_from_json(doc: &Json) -> Result<Graph> {
+    let name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing model name"))?;
+    let nodes = doc
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing nodes array"))?;
+    if nodes.is_empty() {
+        bail!("empty node list");
+    }
+
+    // First node must be the input with an explicit shape.
+    let first = &nodes[0];
+    if first.get("op").and_then(Json::as_str) != Some("input") {
+        bail!("first node must be the input");
+    }
+    let shape_arr = first
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("input node lacks shape"))?;
+    if shape_arr.len() != 3 {
+        bail!("input shape must be [h,w,c]");
+    }
+    let dim = |i: usize| -> Result<usize> {
+        shape_arr[i].as_usize().ok_or_else(|| anyhow!("bad input dim {i}"))
+    };
+    let mut b = GraphBuilder::new(name, Shape::new(dim(0)?, dim(1)?, dim(2)?));
+
+    let mut ids: std::collections::HashMap<String, NodeId> = std::collections::HashMap::new();
+    let input_name = first
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("input lacks name"))?;
+    ids.insert(input_name.to_string(), b.input_id());
+
+    for nd in &nodes[1..] {
+        let nname = nd
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("node lacks name"))?;
+        let op = nd
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("node {nname} lacks op"))?;
+        let inputs: Vec<NodeId> = nd
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("node {nname} lacks inputs"))?
+            .iter()
+            .map(|j| {
+                let s = j.as_str().ok_or_else(|| anyhow!("bad input ref in {nname}"))?;
+                ids.get(s).copied().ok_or_else(|| anyhow!("unknown input {s:?} in {nname}"))
+            })
+            .collect::<Result<_>>()?;
+        let one = || -> Result<NodeId> {
+            inputs.first().copied().ok_or_else(|| anyhow!("{nname}: missing operand"))
+        };
+        let two = || -> Result<(NodeId, NodeId)> {
+            if inputs.len() == 2 {
+                Ok((inputs[0], inputs[1]))
+            } else {
+                bail!("{nname}: expected 2 operands")
+            }
+        };
+        let get_usize = |key: &str| -> Result<usize> {
+            nd.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{nname}: missing {key}"))
+        };
+        let id = match op {
+            "conv" => {
+                let pad = match nd.get("pad").and_then(Json::as_str).unwrap_or("same") {
+                    "same" => PadMode::Same,
+                    "valid" => PadMode::Valid,
+                    p => bail!("{nname}: bad pad {p:?}"),
+                };
+                let depthwise = nd.get("depthwise").and_then(Json::as_bool).unwrap_or(false);
+                if depthwise {
+                    b.dwconv(nname, one()?, get_usize("k")?, get_usize("stride")?, pad)
+                } else {
+                    b.conv(nname, one()?, get_usize("k")?, get_usize("stride")?, get_usize("out_c")?, pad)
+                }
+            }
+            "fc" => b.fc(nname, one()?, get_usize("out_c")?),
+            "bn" => b.batchnorm(nname, one()?),
+            "bias" => b.bias(nname, one()?),
+            "act" => {
+                let a = act_from_str(
+                    nd.get("act").and_then(Json::as_str).ok_or_else(|| anyhow!("{nname}: missing act"))?,
+                )?;
+                b.activation(nname, one()?, a)
+            }
+            "maxpool" => b.maxpool(nname, one()?, get_usize("k")?, get_usize("stride")?),
+            "avgpool" => b.avgpool(nname, one()?, get_usize("k")?, get_usize("stride")?),
+            "gap" => b.gap(nname, one()?),
+            "add" => {
+                let (x, y) = two()?;
+                b.add(nname, x, y)
+            }
+            "scale" => {
+                let (x, y) = two()?;
+                b.scale(nname, x, y)
+            }
+            "concat" => {
+                let (x, y) = two()?;
+                b.concat(nname, x, y)
+            }
+            "upsample" => b.upsample(nname, one()?, get_usize("factor")?),
+            "identity" => b.identity(nname, one()?),
+            _ => bail!("unknown op {op:?} at node {nname}"),
+        };
+        ids.insert(nname.to_string(), id);
+    }
+    let g = b.finish();
+    crate::graph::validate(&g).map_err(|e| anyhow!("{e}"))?;
+    Ok(g)
+}
+
+/// Save a graph as pretty-printed frozen JSON.
+pub fn save_frozen(g: &Graph, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, graph_to_json(g).to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load a frozen JSON model file.
+pub fn load_frozen(path: &std::path::Path) -> Result<Graph> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let doc = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    graph_from_json(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn round_trip_all_zoo_models() {
+        for &name in zoo::MODEL_NAMES {
+            let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+            let j = graph_to_json(&g);
+            let g2 = graph_from_json(&j).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(g.nodes.len(), g2.nodes.len(), "{name}");
+            assert_eq!(g.total_macs(), g2.total_macs(), "{name}");
+            for (a, b) in g.nodes.iter().zip(&g2.nodes) {
+                assert_eq!(a.op, b.op, "{name}/{}", a.name);
+                assert_eq!(a.out_shape, b.out_shape, "{name}/{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("sf_frozen_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("resnet18.json");
+        let g = zoo::resnet18(224);
+        save_frozen(&g, &p).unwrap();
+        let g2 = load_frozen(&p).unwrap();
+        assert_eq!(g.total_macs(), g2.total_macs());
+    }
+
+    #[test]
+    fn rejects_unknown_input_ref() {
+        let doc = parse(
+            r#"{"name":"x","nodes":[
+              {"name":"input","op":"input","inputs":[],"shape":[8,8,3]},
+              {"name":"c","op":"conv","inputs":["nope"],"k":3,"stride":1,"out_c":8,"pad":"same","depthwise":false}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(graph_from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_attrs() {
+        let doc = parse(
+            r#"{"name":"x","nodes":[
+              {"name":"input","op":"input","inputs":[],"shape":[8,8,3]},
+              {"name":"c","op":"conv","inputs":["input"],"stride":1,"out_c":8}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(graph_from_json(&doc).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Serialization substrate.
+//!
+//! The offline crate registry has no `serde`, so the repo carries its own
+//! minimal JSON implementation: a [`Json`] value model, a recursive-descent
+//! [`parse`](json::parse) and a writer. On top of it,
+//! [`frozen`] defines the *frozen-graph* interchange format — the role the
+//! TensorFlow protobuf plays in the paper's front-end (Fig. 4): the model
+//! zoo can export graphs to JSON and the parser re-imports them, so the
+//! compiler genuinely consumes a serialized model file.
+
+pub mod json;
+pub mod frozen;
+
+pub use json::{parse, Json, JsonError};
+pub use frozen::{graph_from_json, graph_to_json, load_frozen, save_frozen};

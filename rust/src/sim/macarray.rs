@@ -1,0 +1,181 @@
+//! Shared-MAC-array compute model (Fig. 7/8).
+//!
+//! The array processes, per cycle:
+//! * **normal conv** — one kernel tap for `Ti` input channels ×
+//!   `To × mults_per_dsp` output kernels (the DSP48E2 double-INT8 trick
+//!   shares each input activation between two weights, Fig. 7a);
+//! * **depthwise conv** — `To` channels × up to 32 kernel taps on the two
+//!   split arrays (Fig. 8a: "the MAC array is able to process a
+//!   [≤ 5×5] kernel in one cycle"), with no input sharing (single-mult
+//!   mode, Fig. 7b);
+//! * **FC** — a 1×1 conv on a 1×1 frame (tiny tiles ⇒ the ceil losses
+//!   that make SE blocks expensive on this datapath);
+//! * **SE scale** — a 1×1 depthwise multiply (§IV-A).
+
+use crate::analyzer::{Group, GroupKind, GroupedGraph};
+use crate::config::AccelConfig;
+use crate::graph::OpKind;
+
+/// Compute-array geometry derived from the configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MacGeometry {
+    pub ti: usize,
+    pub to: usize,
+    /// Output kernels evaluated concurrently (To × mults_per_dsp shares).
+    pub normal_kernels_per_cycle: usize,
+    /// Kernel taps per depthwise unit per cycle (32 on the split array).
+    pub dw_taps: usize,
+}
+
+impl MacGeometry {
+    pub fn from_config(cfg: &AccelConfig) -> Self {
+        MacGeometry {
+            ti: cfg.ti,
+            to: cfg.to,
+            normal_kernels_per_cycle: cfg.to * cfg.mults_per_dsp,
+            dw_taps: dw_taps_per_unit(cfg),
+        }
+    }
+}
+
+/// Taps a depthwise MAC unit covers per cycle: the 2048-MAC array splits
+/// into `To` per-channel units (Fig. 8b), each `dsp_mac / To` MACs wide.
+pub fn dw_taps_per_unit(cfg: &AccelConfig) -> usize {
+    (cfg.dsp_mac / cfg.to).max(1)
+}
+
+/// Cycles the MAC arrays + post-chain need for one group's compute,
+/// independent of memory stalls.
+///
+/// The post-processing chain (pooling, element-wise, upsampling) runs in
+/// lock-step with the writeback and "does not incur an additional timing
+/// overhead" (§III-B-2) — fused post-ops are free; standalone
+/// pool/eltwise/upsample/copy groups stream at `To` elements/cycle.
+pub fn compute_cycles(gg: &GroupedGraph, gr: &Group, cfg: &AccelConfig) -> u64 {
+    let ti = cfg.ti as u64;
+    let to = cfg.to as u64;
+    match gr.kind {
+        GroupKind::Conv | GroupKind::DwConv => {
+            let node = gg.graph.node(gr.main);
+            let (k, depthwise) = match node.op {
+                OpKind::Conv { k, depthwise, .. } => (k as u64, depthwise),
+                _ => (1, false),
+            };
+            let out = node.out_shape;
+            let pixels = (out.h * out.w) as u64;
+            let n = node.in_shapes[0].c as u64;
+            let m = out.c as u64;
+            if depthwise {
+                // To channels in parallel; ceil(k²/taps) cycles per pixel.
+                let taps = dw_taps_per_unit(cfg) as u64;
+                let kernel_cycles = (k * k).div_ceil(taps);
+                pixels * m.div_ceil(to) * kernel_cycles
+            } else {
+                // one tap × Ti inputs × `kernels` outputs per cycle, with
+                // Ti × kernels = dsp_mac × mults_per_dsp total mults
+                // (4096 INT8 mults/cycle on 2048 shared MACs, §III-B-1).
+                let kernels = (cfg.dsp_mac * cfg.mults_per_dsp / cfg.ti) as u64;
+                pixels * (k * k) * n.div_ceil(ti) * m.div_ceil(kernels)
+            }
+        }
+        GroupKind::Fc => {
+            let node = gg.graph.node(gr.main);
+            let n = node.in_shapes[0].c as u64;
+            let m = node.out_shape.c as u64;
+            let kernels = (cfg.dsp_mac * cfg.mults_per_dsp / cfg.ti) as u64;
+            n.div_ceil(ti) * m.div_ceil(kernels)
+        }
+        GroupKind::Scale => {
+            // 1×1 depthwise multiply: To channels per cycle.
+            let s = gr.out_shape;
+            (s.h * s.w) as u64 * (s.c as u64).div_ceil(to)
+        }
+        GroupKind::Pool | GroupKind::Eltwise | GroupKind::Upsample | GroupKind::Act => {
+            // standalone post-chain op: streams To elements per cycle
+            let s = gr.in_shape;
+            (s.h * s.w) as u64 * (s.c as u64).div_ceil(to)
+        }
+        GroupKind::Concat | GroupKind::Input => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::graph::{Activation, GraphBuilder, PadMode, Shape};
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::kcu1500_int8()
+    }
+
+    fn single_conv(k: usize, in_c: usize, out_c: usize, hw: usize, depthwise: bool) -> (GroupedGraph, usize) {
+        let mut b = GraphBuilder::new("t", Shape::new(hw, hw, in_c));
+        let x = b.input_id();
+        if depthwise {
+            b.dwconv("c", x, k, 1, PadMode::Same);
+        } else {
+            b.conv("c", x, k, 1, out_c, PadMode::Same);
+        }
+        let gg = analyze(&b.finish());
+        let gi = gg
+            .groups
+            .iter()
+            .position(|g| matches!(g.kind, GroupKind::Conv | GroupKind::DwConv))
+            .unwrap();
+        (gg, gi)
+    }
+
+    #[test]
+    fn normal_conv_hits_4096_mults_per_cycle() {
+        // 3x3, 64→128 channels over 16x16: macs = 16²·9·64·128.
+        let (gg, gi) = single_conv(3, 64, 128, 16, false);
+        let cycles = compute_cycles(&gg, &gg.groups[gi], &cfg());
+        // 64 inputs × 64 kernels = 4096 mults/cycle ⇒ 256·9·1·2 cycles.
+        assert_eq!(cycles, 256 * 9 * 2);
+        let macs = gg.groups[gi].macs(&gg.graph);
+        assert_eq!(macs / cycles, 4096); // full MXU-equivalent utilization
+    }
+
+    #[test]
+    fn ceil_losses_show_up_for_small_channel_counts() {
+        // 3 input channels still burn a full Ti=64 slot (first layers).
+        let (gg, gi) = single_conv(3, 3, 64, 16, false);
+        let cycles = compute_cycles(&gg, &gg.groups[gi], &cfg());
+        let macs = gg.groups[gi].macs(&gg.graph);
+        let eff = macs as f64 / (cycles as f64 * 4096.0);
+        assert!(eff < 0.06, "eff {eff}"); // 3/64 ≈ 4.7 %
+    }
+
+    #[test]
+    fn depthwise_3x3_one_cycle_per_pixel_per_64ch() {
+        let (gg, gi) = single_conv(3, 64, 64, 16, true);
+        let cycles = compute_cycles(&gg, &gg.groups[gi], &cfg());
+        // 9 taps ≤ 32 ⇒ 1 cycle per pixel per 64-channel tile
+        assert_eq!(cycles, 256);
+        // utilization 9·64 / 2048 = 28 % — the EfficientNet story
+        let macs = gg.groups[gi].macs(&gg.graph);
+        let eff = macs as f64 / (cycles as f64 * 2048.0);
+        assert!((eff - 0.28125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn depthwise_7x7_needs_two_cycles() {
+        let (gg, gi) = single_conv(7, 64, 64, 16, true);
+        let cycles = compute_cycles(&gg, &gg.groups[gi], &cfg());
+        assert_eq!(cycles, 256 * 2); // 49 taps / 32 = 2 cycles
+    }
+
+    #[test]
+    fn fc_pays_tile_quantization() {
+        // SE reduce: 96 → 4 channels.
+        let mut b = GraphBuilder::new("fc", Shape::vec(96));
+        let x = b.input_id();
+        let f = b.fc("f", x, 4);
+        let _a = b.activation("a", f, Activation::Swish);
+        let gg = analyze(&b.finish());
+        let gi = gg.groups.iter().position(|g| g.kind == GroupKind::Fc).unwrap();
+        let cycles = compute_cycles(&gg, &gg.groups[gi], &cfg());
+        assert_eq!(cycles, 2); // ceil(96/64)·ceil(4/128) = 2·1
+    }
+}

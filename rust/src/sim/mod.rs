@@ -1,0 +1,18 @@
+//! Cycle-accurate timing simulator.
+//!
+//! "A problem is raised such that the latency estimation by running the
+//! RTL simulation for each candidate takes a very long time. [...]
+//! Therefore, this work built a cycle-accurate timing simulator to
+//! estimate the latency of a CNN layer running different reuse schemes"
+//! (§IV-B). This module *is* that simulator: a per-group cycle model of
+//! the shared-MAC-array datapath (Fig. 8) and the DRAM channel, walked
+//! sequentially with weight-preload overlap, exactly the tool the
+//! authors used to drive the optimizer and verify against RTL.
+
+mod macarray;
+mod timing;
+mod traffic;
+
+pub use macarray::{compute_cycles, dw_taps_per_unit, MacGeometry};
+pub use timing::{simulate, simulate_fixed_row_baseline, GroupTiming, NetworkTiming};
+pub use traffic::{replay, TrafficCount};

@@ -1,0 +1,304 @@
+//! Sequential network walk: per-group latency with memory overlap.
+
+use super::macarray::compute_cycles;
+use crate::alloc::{AllocResult, Loc};
+use crate::analyzer::{GroupKind, GroupedGraph};
+use crate::config::AccelConfig;
+use crate::isa::ReuseMode;
+
+/// Cycle breakdown for one group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupTiming {
+    pub compute_cycles: u64,
+    /// Feature-map DRAM stream cycles (reads + writes during compute).
+    pub stream_cycles: u64,
+    /// Weight-fetch cycles (row-reuse preload / frame-reuse stream).
+    pub weight_cycles: u64,
+    /// Pipeline fill (row-buffer warm-up before the first window).
+    pub fill_cycles: u64,
+    /// Resulting group latency after overlap.
+    pub latency_cycles: u64,
+}
+
+/// Whole-network timing result.
+#[derive(Debug, Clone)]
+pub struct NetworkTiming {
+    pub per_group: Vec<GroupTiming>,
+    pub total_cycles: u64,
+    pub latency_ms: f64,
+    /// Average GOPS (the paper's Tables II/V/VII row).
+    pub gops: f64,
+    /// DSP / MAC efficiency = average GOPS / peak GOPS.
+    pub mac_efficiency: f64,
+}
+
+/// Simulate the instruction stream timing for one policy.
+///
+/// Model (per group, in program order):
+/// * compute = MAC-array cycles ([`compute_cycles`]);
+/// * streaming feature-map DRAM traffic overlaps compute (the wide
+///   circular row buffer / write buffer decouple the two) — a group's
+///   latency is `max(compute, stream)`;
+/// * **frame-reuse** weights stream during compute and are "hidden by the
+///   computation of the sub-frame input" (§II) — folded into the max;
+/// * **row-reuse** whole-layer weight preloads overlap the *previous*
+///   group's execution (double weight buffer); any preload not covered
+///   by the previous group's latency stalls the pipeline;
+/// * a pipeline-fill term charges the `K+1`-row warm-up of the circular
+///   row buffer at DRAM speed for row-reuse groups whose input streams
+///   from DRAM.
+pub fn simulate(
+    gg: &GroupedGraph,
+    policy: &[ReuseMode],
+    alloc: &AllocResult,
+    cfg: &AccelConfig,
+) -> NetworkTiming {
+    assert_eq!(policy.len(), gg.groups.len());
+    let bpc = cfg.dram_bytes_per_cycle();
+    let qa = cfg.qa;
+    let mut per_group = Vec::with_capacity(gg.groups.len());
+    let mut total: u64 = 0;
+    // Row-reuse weight preload that must overlap the previous group.
+    let mut pending_preload: u64 = 0;
+
+    for (gi, gr) in gg.groups.iter().enumerate() {
+        if gr.kind == GroupKind::Input {
+            per_group.push(GroupTiming {
+                compute_cycles: 0,
+                stream_cycles: 0,
+                weight_cycles: 0,
+                fill_cycles: 0,
+                latency_cycles: 0,
+            });
+            continue;
+        }
+        let a = &alloc.assigns[gi];
+        let compute = compute_cycles(gg, gr, cfg);
+
+        // ---- feature-map DRAM streaming --------------------------------
+        let mut stream_bytes: u64 = 0;
+        if gr.kind != GroupKind::Concat {
+            if a.in_loc == Loc::Dram || a.staged_input {
+                stream_bytes += gr.in_shape.bytes(qa) as u64;
+            }
+            if let Some(Loc::Dram) = a.aux_loc {
+                let src = gr.shortcut_of.or_else(|| gr.inputs.get(1).copied());
+                if let Some(src) = src {
+                    stream_bytes += gg.groups[src.0].out_shape.bytes(qa) as u64;
+                }
+            }
+            if a.out_loc == Loc::Dram {
+                stream_bytes += gr.out_shape.bytes(qa) as u64;
+            }
+        }
+        if a.also_dram {
+            stream_bytes += gr.out_shape.bytes(qa) as u64;
+        }
+        let stream = (stream_bytes as f64 / bpc).ceil() as u64;
+
+        // ---- weights ----------------------------------------------------
+        let weight_bytes = gr.weight_bytes(&gg.graph, cfg.qw as u64);
+        let weight_cycles = (weight_bytes as f64 / bpc).ceil() as u64;
+
+        // ---- pipeline fill ----------------------------------------------
+        let (k, _s, _dw) = gr.conv_geometry(&gg.graph);
+        let fill = if policy[gi] == ReuseMode::Row
+            && (a.in_loc == Loc::Dram)
+            && matches!(gr.kind, GroupKind::Conv | GroupKind::DwConv)
+        {
+            let row_bytes = (gr.in_shape.w * gr.in_shape.c * qa) as u64;
+            ((k as u64 + 1) * row_bytes) as u64 / bpc as u64
+        } else {
+            0
+        };
+
+        let latency = match policy[gi] {
+            ReuseMode::Frame => {
+                // weights stream during compute (double weight-block buffer)
+                compute.max(stream).max(weight_cycles) + fill
+            }
+            ReuseMode::Row => {
+                // whole-layer preload overlapped with the previous group
+                let body = compute.max(stream);
+                let stall = pending_preload; // set by the previous group
+                pending_preload = 0;
+                body + stall + fill
+            }
+        };
+
+        // This group's weights (if row-reuse) preload during the previous
+        // group; compute the *next* pending amount: what didn't fit.
+        if policy[gi] == ReuseMode::Row {
+            // the preload we just consumed belonged to this group;
+            // compute how much of the NEXT row group's preload this
+            // group's execution hides (done in the next iteration via
+            // `latency` bookkeeping below).
+        }
+        // Look ahead: if the next group is row-reuse, its preload overlaps
+        // this group's latency.
+        if let Some(next) = gg.groups.get(gi + 1) {
+            if policy[gi + 1] == ReuseMode::Row {
+                let next_w = next.weight_bytes(&gg.graph, cfg.qw as u64);
+                let next_cycles = (next_w as f64 / bpc).ceil() as u64;
+                pending_preload = next_cycles.saturating_sub(latency);
+            }
+        }
+
+        total += latency;
+        per_group.push(GroupTiming {
+            compute_cycles: compute,
+            stream_cycles: stream,
+            weight_cycles,
+            fill_cycles: fill,
+            latency_cycles: latency,
+        });
+    }
+
+    let latency_ms = total as f64 / (cfg.freq_mhz * 1e3);
+    let gop = gg.graph.total_gop();
+    let gops = gop / (latency_ms / 1e3);
+    NetworkTiming {
+        per_group,
+        total_cycles: total,
+        latency_ms,
+        gops,
+        mac_efficiency: gops / cfg.peak_gops(),
+    }
+}
+
+/// The *naive fixed row-based* baseline of Fig. 16: the scheme of Fig.
+/// 3(b) without the whole-layer weight buffer — each weight block is
+/// re-fetched per output row (Table I: "Weight reads: H"), and all
+/// feature maps stream through DRAM. This is the comparison line for the
+/// 2.17× speed-up claim, NOT the proposed design's row-reuse mode (which
+/// preloads weights once, eq. 1).
+pub fn simulate_fixed_row_baseline(gg: &GroupedGraph, cfg: &AccelConfig) -> NetworkTiming {
+    let bpc = cfg.dram_bytes_per_cycle();
+    let qa = cfg.qa;
+    let mut per_group = Vec::with_capacity(gg.groups.len());
+    let mut total: u64 = 0;
+    for gr in &gg.groups {
+        if gr.kind == GroupKind::Input || gr.kind == GroupKind::Concat {
+            per_group.push(GroupTiming {
+                compute_cycles: 0,
+                stream_cycles: 0,
+                weight_cycles: 0,
+                fill_cycles: 0,
+                latency_cycles: 0,
+            });
+            continue;
+        }
+        let compute = compute_cycles(gg, gr, cfg);
+        let mut stream_bytes = gr.in_shape.bytes(qa) as u64 + gr.out_shape.bytes(qa) as u64;
+        if let Some(src) = gr.shortcut_of {
+            stream_bytes += gg.groups[src.0].out_shape.bytes(qa) as u64;
+        }
+        let h = gr.out_shape.h as u64;
+        let weight_bytes = gr.weight_bytes(&gg.graph, cfg.qw as u64) * h.max(1);
+        let mem = ((stream_bytes + weight_bytes) as f64 / bpc).ceil() as u64;
+        let stream = (stream_bytes as f64 / bpc).ceil() as u64;
+        let weight_cycles = (weight_bytes as f64 / bpc).ceil() as u64;
+        let latency = compute.max(mem);
+        total += latency;
+        per_group.push(GroupTiming {
+            compute_cycles: compute,
+            stream_cycles: stream,
+            weight_cycles,
+            fill_cycles: 0,
+            latency_cycles: latency,
+        });
+    }
+    let latency_ms = total as f64 / (cfg.freq_mhz * 1e3);
+    let gop = gg.graph.total_gop();
+    let gops = gop / (latency_ms / 1e3);
+    NetworkTiming {
+        per_group,
+        total_cycles: total,
+        latency_ms,
+        gops,
+        mac_efficiency: gops / cfg.peak_gops(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::allocate;
+    use crate::analyzer::analyze;
+    use crate::zoo;
+
+    fn run(name: &str, input: usize, mode: ReuseMode) -> NetworkTiming {
+        let gg = analyze(&zoo::by_name(name, input).unwrap());
+        let cfg = AccelConfig::kcu1500_int8();
+        let policy = vec![mode; gg.groups.len()];
+        let alloc = allocate(&gg, &policy, &cfg);
+        simulate(&gg, &policy, &alloc, &cfg)
+    }
+
+    #[test]
+    fn resnet152_latency_matches_table5_scale() {
+        // Table V: ResNet152@256 → 26.78 ms, 1163 GOPS, 71 % efficiency.
+        let t = run("resnet152", 256, ReuseMode::Frame);
+        assert!(
+            (15.0..40.0).contains(&t.latency_ms),
+            "latency {} ms vs paper 26.78",
+            t.latency_ms
+        );
+        assert!(
+            (0.50..0.95).contains(&t.mac_efficiency),
+            "eff {} vs paper 0.71",
+            t.mac_efficiency
+        );
+    }
+
+    #[test]
+    fn efficientnet_efficiency_is_low() {
+        // Table V: EfficientNet-B1@256 → 4.69 ms, 19.4 % MAC efficiency —
+        // depthwise + SE structurally underuse the array.
+        let t = run("efficientnet-b1", 256, ReuseMode::Frame);
+        assert!(
+            (0.05..0.35).contains(&t.mac_efficiency),
+            "eff {} vs paper 0.19",
+            t.mac_efficiency
+        );
+        assert!((1.0..15.0).contains(&t.latency_ms), "latency {}", t.latency_ms);
+    }
+
+    #[test]
+    fn frame_mode_beats_row_mode_when_buffers_fit() {
+        // Fig 16(c): 2.17× speed-up over fixed row-based reuse (YOLOv2).
+        let row = run("yolov2", 416, ReuseMode::Row);
+        let frame = run("yolov2", 416, ReuseMode::Frame);
+        assert!(
+            frame.latency_ms < row.latency_ms,
+            "frame {} !< row {}",
+            frame.latency_ms,
+            row.latency_ms
+        );
+    }
+
+    #[test]
+    fn yolov3_scale() {
+        // Table V: YOLOv3@416 → 57.57 ms.
+        let t = run("yolov3", 416, ReuseMode::Frame);
+        assert!((30.0..90.0).contains(&t.latency_ms), "latency {}", t.latency_ms);
+    }
+
+    #[test]
+    fn total_is_sum_of_groups() {
+        let t = run("resnet50", 256, ReuseMode::Frame);
+        let sum: u64 = t.per_group.iter().map(|g| g.latency_cycles).sum();
+        assert_eq!(sum, t.total_cycles);
+    }
+
+    #[test]
+    fn latency_positive_and_finite_for_all_models() {
+        for &name in zoo::MODEL_NAMES {
+            for mode in [ReuseMode::Row, ReuseMode::Frame] {
+                let t = run(name, zoo::default_input(name), mode);
+                assert!(t.latency_ms.is_finite() && t.latency_ms > 0.0, "{name}");
+                assert!(t.mac_efficiency <= 1.0, "{name} {mode:?}: eff {}", t.mac_efficiency);
+            }
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Instruction-level traffic replay.
+//!
+//! Walks the *lowered instruction stream* (not the graph) against a
+//! modeled memory system — three physical buffers + the DRAM arena —
+//! counting every byte that crosses the chip boundary. This closes the
+//! verification loop between the optimizer's analytical DRAM model
+//! (eqs. 8–9, computed from the graph) and what the accelerator would
+//! actually issue when executing the packed program: the two must agree
+//! exactly (`traffic_matches_analytical_model` below is run for every
+//! zoo network in the test suite).
+
+use crate::analyzer::{GroupKind, GroupedGraph};
+use crate::config::AccelConfig;
+use crate::isa::{Instruction, InstructionStream, Opcode};
+
+/// Byte counters from a replay.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrafficCount {
+    /// Feature-map bytes read from DRAM.
+    pub fm_read: u64,
+    /// Feature-map bytes written to DRAM.
+    pub fm_write: u64,
+    /// Weight bytes fetched.
+    pub weight_read: u64,
+    /// On-chip buffer traffic (for the energy model's SRAM term).
+    pub buf_read: u64,
+    pub buf_write: u64,
+}
+
+impl TrafficCount {
+    pub fn fm_total(&self) -> u64 {
+        self.fm_read + self.fm_write
+    }
+
+    pub fn dram_total(&self) -> u64 {
+        self.fm_total() + self.weight_read
+    }
+}
+
+/// Replay one instruction's memory behaviour.
+fn replay_instr(ins: &Instruction, gg: &GroupedGraph, gi: usize, cfg: &AccelConfig, t: &mut TrafficCount) {
+    let qa = cfg.qa as u64;
+    let gr = &gg.groups[gi];
+    let in_bytes = gr.in_shape.bytes(cfg.qa) as u64;
+    let out_bytes = gr.out_shape.bytes(cfg.qa) as u64;
+
+    if matches!(ins.opcode, Opcode::Input) {
+        return;
+    }
+    // Concat is pure redirection: producers already placed the data.
+    if matches!(ins.opcode, Opcode::Concat) {
+        return;
+    }
+
+    // weights stream exactly once per instruction
+    t.weight_read += ins.weight_bytes as u64;
+
+    // main operand
+    let vector_in = gr.in_shape.h * gr.in_shape.w == 1;
+    if !vector_in {
+        if ins.in_sel == 3 {
+            t.fm_read += in_bytes;
+        } else {
+            t.buf_read += in_bytes;
+        }
+    }
+    // second operand (fused shortcut / scale gate / eltwise second)
+    if ins.fused_eltwise || matches!(ins.opcode, Opcode::Scale | Opcode::Eltwise) {
+        if let Some(src) = gr.shortcut_of.or_else(|| gr.inputs.get(1).copied()) {
+            let src_gr = &gg.groups[src.0];
+            let aux_bytes = src_gr.out_shape.bytes(cfg.qa) as u64;
+            let aux_vec = src_gr.out_shape.h * src_gr.out_shape.w == 1;
+            if !aux_vec {
+                if ins.aux_sel == 3 {
+                    t.fm_read += aux_bytes;
+                } else {
+                    t.buf_read += aux_bytes;
+                }
+            }
+        }
+    }
+    // output
+    let vector_out = gr.out_shape.h * gr.out_shape.w == 1;
+    if !vector_out {
+        if ins.out_sel == 3 {
+            t.fm_write += out_bytes;
+        } else {
+            t.buf_write += out_bytes;
+        }
+    }
+    let _ = qa;
+}
+
+/// Replay a whole program.
+///
+/// `staged_inputs[i]` / `also_dram[i]` mirror the allocator flags that are
+/// not encoded in the 11 instruction words (the hardware performs the
+/// staging DMA as part of the group prologue; the flags travel in the
+/// packed header in a real deployment).
+pub fn replay(
+    gg: &GroupedGraph,
+    stream: &InstructionStream,
+    staged_inputs: &[bool],
+    also_dram: &[bool],
+    cfg: &AccelConfig,
+) -> TrafficCount {
+    assert_eq!(stream.instrs.len(), gg.groups.len());
+    let mut t = TrafficCount::default();
+    for (gi, ins) in stream.instrs.iter().enumerate() {
+        replay_instr(ins, gg, gi, cfg, &mut t);
+        let gr = &gg.groups[gi];
+        if staged_inputs[gi] {
+            // the staging DMA: one DRAM read of the input into a buffer
+            t.fm_read += gr.in_shape.bytes(cfg.qa) as u64;
+            // the streamed buffer read was already counted as buf_read;
+            // undo the double-counted DRAM read if in_sel was on-chip
+            if ins.in_sel != 3 {
+                t.buf_write += gr.in_shape.bytes(cfg.qa) as u64;
+            }
+        }
+        if also_dram[gi] {
+            t.fm_write += gr.out_shape.bytes(cfg.qa) as u64;
+        }
+        if gr.kind == GroupKind::Input {
+            continue;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::allocate;
+    use crate::analyzer::analyze;
+    use crate::coordinator::compile_model;
+    use crate::optimizer::dram_access;
+    use crate::zoo;
+
+    /// The keystone cross-check: instruction-level replay must reproduce
+    /// the analytical eq-8/9 model byte-for-byte (minus spill traffic,
+    /// which the analytical model accounts separately).
+    #[test]
+    fn traffic_matches_analytical_model() {
+        let cfg = crate::config::AccelConfig::kcu1500_int8();
+        for &name in zoo::MODEL_NAMES {
+            let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+            let r = compile_model(&g, &cfg);
+            let alloc = allocate(&r.grouped, &r.evaluation.policy, &cfg);
+            let staged: Vec<bool> = alloc.assigns.iter().map(|a| a.staged_input).collect();
+            let also: Vec<bool> = alloc.assigns.iter().map(|a| a.also_dram).collect();
+            let replayed = replay(&r.grouped, &r.stream, &staged, &also, &cfg);
+            let analytical = dram_access(&r.grouped, &r.evaluation.policy, &alloc, &cfg);
+            assert_eq!(
+                replayed.fm_total() + analytical.spill_bytes,
+                analytical.fm_bytes,
+                "{name}: replayed {} + spills {} != analytical {}",
+                replayed.fm_total(),
+                analytical.spill_bytes,
+                analytical.fm_bytes
+            );
+            assert_eq!(replayed.weight_read, analytical.weight_bytes, "{name}: weights");
+        }
+    }
+
+    #[test]
+    fn weights_counted_exactly_once() {
+        let cfg = crate::config::AccelConfig::kcu1500_int8();
+        let g = zoo::resnet50(224);
+        let r = compile_model(&g, &cfg);
+        let alloc = allocate(&r.grouped, &r.evaluation.policy, &cfg);
+        let staged: Vec<bool> = alloc.assigns.iter().map(|a| a.staged_input).collect();
+        let also: Vec<bool> = alloc.assigns.iter().map(|a| a.also_dram).collect();
+        let t = replay(&r.grouped, &r.stream, &staged, &also, &cfg);
+        assert_eq!(t.weight_read, g.total_weight_bytes(cfg.qw as u64));
+    }
+
+    #[test]
+    fn buffer_traffic_dominates_for_frame_policies() {
+        // in an all-frame run, on-chip traffic must dwarf DRAM traffic —
+        // the energy argument of [37]
+        let cfg = crate::config::AccelConfig::kcu1500_int8();
+        let g = zoo::resnet50(224);
+        let gg = analyze(&g);
+        let policy = vec![crate::isa::ReuseMode::Frame; gg.groups.len()];
+        let alloc = allocate(&gg, &policy, &cfg);
+        let layout = crate::alloc::layout(&gg, &policy, &alloc, &cfg);
+        let assigns: Vec<crate::isa::MemAssign> = gg
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(gi, gr)| crate::isa::MemAssign {
+                reuse: policy[gi],
+                in_loc: match alloc.assigns[gi].in_loc {
+                    crate::alloc::Loc::Buf(b) => crate::isa::MemLoc::Buf(b),
+                    _ => crate::isa::MemLoc::Dram(layout.fmaps[gi].offset),
+                },
+                out_loc: match alloc.assigns[gi].out_loc {
+                    crate::alloc::Loc::Buf(b) => crate::isa::MemLoc::Buf(b),
+                    _ => crate::isa::MemLoc::Dram(layout.fmaps[gi].offset),
+                },
+                aux_loc: alloc.assigns[gi].aux_loc.map(|l| match l {
+                    crate::alloc::Loc::Buf(b) => crate::isa::MemLoc::Buf(b),
+                    _ => crate::isa::MemLoc::Dram(0),
+                }),
+                weight_addr: 0,
+                weight_bytes: gr.weight_bytes(&gg.graph, cfg.qw as u64) as u32,
+                quant_shift: 0,
+            })
+            .collect();
+        let stream = crate::isa::lower(&gg, &assigns);
+        let staged: Vec<bool> = alloc.assigns.iter().map(|a| a.staged_input).collect();
+        let also: Vec<bool> = alloc.assigns.iter().map(|a| a.also_dram).collect();
+        let t = replay(&gg, &stream, &staged, &also, &cfg);
+        assert!(
+            t.buf_read + t.buf_write > 10 * t.fm_total(),
+            "on-chip {} vs DRAM {}",
+            t.buf_read + t.buf_write,
+            t.fm_total()
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Test utilities: a miniature property-testing driver (the offline
+//! registry has no `proptest`; see DESIGN.md §9).
+
+pub mod prop;
+
+pub use prop::{Rng, forall};

@@ -1,0 +1,144 @@
+//! Miniature property-testing driver over a deterministic xorshift64*
+//! PRNG. Usage:
+//!
+//! ```
+//! use shortcutfusion::testutil::forall;
+//! forall("addition commutes", 100, |rng| {
+//!     let (a, b) = (rng.below(1000) as i64, rng.below(1000) as i64);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Failures re-raise the inner panic annotated with the case's seed so the
+//! exact input can be replayed with [`Rng::from_seed`].
+
+/// xorshift64* PRNG — deterministic, seedable, no external crates.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn from_seed(seed: u64) -> Self {
+        // avoid the all-zero fixed point
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Fair coin.
+    pub fn coin(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Random i8 (for quantized tensor generation).
+    pub fn i8(&mut self) -> i8 {
+        self.next_u64() as i8
+    }
+
+    /// Vector of random i8 values.
+    pub fn i8_vec(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.i8()).collect()
+    }
+}
+
+/// Run `cases` property checks with per-case seeded RNGs. On panic, the
+/// failing seed is reported for replay.
+pub fn forall(name: &str, cases: u64, mut property: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0x5F00u64
+            .wrapping_mul(31)
+            .wrapping_add(case)
+            .wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::from_seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::from_seed(42);
+        let mut b = Rng::from_seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Rng::from_seed(7);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+            let v = r.range(5, 9);
+            assert!((5..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn unit_in_01() {
+        let mut r = Rng::from_seed(3);
+        for _ in 0..1000 {
+            let u = r.unit();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 50, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_seed_on_failure() {
+        forall("fails", 10, |rng| {
+            assert!(rng.below(10) < 5, "too big");
+        });
+    }
+}

@@ -1,0 +1,176 @@
+//! EfficientDet-D0 (EfficientNet-B0 backbone + BiFPN) — exercises the
+//! multi-cut-point rule of §IV: cut-points = 2 × repeated BiFPN blocks + 1
+//! (Fig 12c).
+
+use crate::graph::{Activation, Graph, GraphBuilder, NodeId, PadMode, Shape};
+
+/// Depthwise-separable conv (EfficientDet's BiFPN/head conv flavour).
+fn sepconv(b: &mut GraphBuilder, base: &str, x: NodeId, out_c: usize) -> NodeId {
+    let dw = b.dw_bn_act(&format!("{base}/dw"), x, 3, 1, Activation::Swish);
+    let pw = b.conv(&format!("{base}/pw"), dw, 1, 1, out_c, PadMode::Same);
+    b.batchnorm(&format!("{base}/pw/bn"), pw)
+}
+
+/// EfficientNet-B0 backbone tapped at P3/P4/P5 (stride 8/16/32).
+fn backbone(b: &mut GraphBuilder, inp: NodeId) -> (NodeId, NodeId, NodeId) {
+    // Condensed B0 trunk: geometry-faithful MBConv stages with SE,
+    // re-using the stage plan of `efficientnet.rs` but tapping stride
+    // milestones. (Kept separate to avoid cross-module private APIs.)
+    let stem = b.conv_bn_act("stem", inp, 3, 2, 32, Activation::Swish);
+    let mut x = stem;
+    let mut taps: Vec<NodeId> = Vec::new();
+    let plan: [(usize, usize, usize, usize, usize); 7] = [
+        // expand, out_c, repeats, stride, k
+        (1, 16, 1, 1, 3),
+        (6, 24, 2, 2, 3),
+        (6, 40, 2, 2, 5),
+        (6, 80, 3, 2, 3),
+        (6, 112, 3, 1, 5),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    for (si, &(e, c, r, s, k)) in plan.iter().enumerate() {
+        for bi in 0..r {
+            let stride = if bi == 0 { s } else { 1 };
+            x = mbconv(b, &format!("block{}_{}", si + 1, bi + 1), x, e, c, k, stride);
+        }
+        // P3 after stage 3 (stride 8), P4 after stage 5 (stride 16),
+        // P5 after stage 7 (stride 32).
+        if si == 2 || si == 4 || si == 6 {
+            taps.push(x);
+        }
+    }
+    (taps[0], taps[1], taps[2])
+}
+
+fn mbconv(b: &mut GraphBuilder, base: &str, x: NodeId, expand: usize, out_c: usize, k: usize, stride: usize) -> NodeId {
+    let in_c = b.shape(x).c;
+    let exp_c = in_c * expand;
+    let se_c = (in_c / 4).max(1);
+    let expanded = if expand != 1 {
+        b.conv_bn_act(&format!("{base}/expand"), x, 1, 1, exp_c, Activation::Swish)
+    } else {
+        x
+    };
+    let dw = b.dw_bn_act(&format!("{base}/dw"), expanded, k, stride, Activation::Swish);
+    let sq = b.gap(&format!("{base}/se/gap"), dw);
+    let f1 = b.fc(&format!("{base}/se/reduce"), sq, se_c);
+    let a1 = b.activation(&format!("{base}/se/swish"), f1, Activation::Swish);
+    let f2 = b.fc(&format!("{base}/se/expand"), a1, exp_c);
+    let a2 = b.activation(&format!("{base}/se/sig"), f2, Activation::Sigmoid);
+    let sc = b.scale(&format!("{base}/se/scale"), dw, a2);
+    let pj = b.conv(&format!("{base}/project"), sc, 1, 1, out_c, PadMode::Same);
+    let pb = b.batchnorm(&format!("{base}/project/bn"), pj);
+    if stride == 1 && in_c == out_c {
+        b.add(&format!("{base}/add"), pb, x)
+    } else {
+        pb
+    }
+}
+
+/// One BiFPN layer over levels P3..P7 (64 channels for D0).
+/// Feature fusion is modelled as eltwise-add merges (fast-normalized
+/// fusion is an element-wise weighted sum — identical memory behaviour).
+fn bifpn_layer(b: &mut GraphBuilder, tag: &str, p: [NodeId; 5]) -> [NodeId; 5] {
+    let c = 64usize;
+    let [p3, p4, p5, p6, p7] = p;
+
+    // Top-down path
+    let p7u = b.upsample(&format!("{tag}/p7_up"), p7, 2);
+    let p6m = b.add(&format!("{tag}/p6_td_add"), p6, p7u);
+    let p6td = sepconv(b, &format!("{tag}/p6_td"), p6m, c);
+    let p6u = b.upsample(&format!("{tag}/p6_up"), p6td, 2);
+    let p5m = b.add(&format!("{tag}/p5_td_add"), p5, p6u);
+    let p5td = sepconv(b, &format!("{tag}/p5_td"), p5m, c);
+    let p5u = b.upsample(&format!("{tag}/p5_up"), p5td, 2);
+    let p4m = b.add(&format!("{tag}/p4_td_add"), p4, p5u);
+    let p4td = sepconv(b, &format!("{tag}/p4_td"), p4m, c);
+    let p4u = b.upsample(&format!("{tag}/p4_up"), p4td, 2);
+    let p3m = b.add(&format!("{tag}/p3_add"), p3, p4u);
+    let p3o = sepconv(b, &format!("{tag}/p3_out"), p3m, c);
+
+    // Bottom-up path
+    let p3d = b.maxpool(&format!("{tag}/p3_down"), p3o, 3, 2);
+    let p4m2 = b.add(&format!("{tag}/p4_bu_add"), p4td, p3d);
+    let p4o = sepconv(b, &format!("{tag}/p4_out"), p4m2, c);
+    let p4d = b.maxpool(&format!("{tag}/p4_down"), p4o, 3, 2);
+    let p5m2 = b.add(&format!("{tag}/p5_bu_add"), p5td, p4d);
+    let p5o = sepconv(b, &format!("{tag}/p5_out"), p5m2, c);
+    let p5d = b.maxpool(&format!("{tag}/p5_down"), p5o, 3, 2);
+    let p6m2 = b.add(&format!("{tag}/p6_bu_add"), p6td, p5d);
+    let p6o = sepconv(b, &format!("{tag}/p6_out"), p6m2, c);
+    let p6d = b.maxpool(&format!("{tag}/p6_down"), p6o, 3, 2);
+    let p7m2 = b.add(&format!("{tag}/p7_bu_add"), p7, p6d);
+    let p7o = sepconv(b, &format!("{tag}/p7_out"), p7m2, c);
+
+    [p3o, p4o, p5o, p6o, p7o]
+}
+
+/// EfficientDet-D0 at the given input size (512 canonical), with
+/// `repeats` BiFPN layers (3 for D0).
+pub fn efficientdet_d0(input: usize) -> Graph {
+    let repeats = 3;
+    let c = 64usize;
+    let mut b = GraphBuilder::new("EfficientDet-D0", Shape::new(input, input, 3));
+    let inp = b.input_id();
+    let (c3, c4, c5) = backbone(&mut b, inp);
+
+    // Resample backbone taps into the BiFPN width.
+    let p3 = b.conv("bifpn_in/p3", c3, 1, 1, c, PadMode::Same);
+    let p4 = b.conv("bifpn_in/p4", c4, 1, 1, c, PadMode::Same);
+    let p5 = b.conv("bifpn_in/p5", c5, 1, 1, c, PadMode::Same);
+    let p6 = b.conv("bifpn_in/p6", c5, 3, 2, c, PadMode::Same);
+    let p7 = b.maxpool("bifpn_in/p7", p6, 3, 2);
+
+    let mut levels = [p3, p4, p5, p6, p7];
+    for r in 0..repeats {
+        levels = bifpn_layer(&mut b, &format!("bifpn{}", r + 1), levels);
+    }
+
+    // Class/box heads (3 sepconv layers for D0) per level.
+    for (li, &p) in levels.iter().enumerate() {
+        let tag = format!("head_p{}", li + 3);
+        let mut x = p;
+        for i in 0..3 {
+            x = sepconv(&mut b, &format!("{tag}/cls{i}"), x, c);
+        }
+        let cls = b.conv(&format!("{tag}/cls_pred"), x, 3, 1, 9 * 90, PadMode::Same);
+        b.identity(&format!("{tag}/cls_out"), cls);
+        let mut y = p;
+        for i in 0..3 {
+            y = sepconv(&mut b, &format!("{tag}/box{i}"), y, c);
+        }
+        let bx = b.conv(&format!("{tag}/box_pred"), y, 3, 1, 9 * 4, PadMode::Same);
+        b.identity(&format!("{tag}/box_out"), bx);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_has_bifpn_adds() {
+        let g = efficientdet_d0(512);
+        let adds = g
+            .nodes
+            .iter()
+            .filter(|n| n.op.is_shortcut() && n.name.contains("bifpn"))
+            .count();
+        // 8 fusion adds per BiFPN layer × 3 layers.
+        assert_eq!(adds, 24);
+    }
+
+    #[test]
+    fn ten_head_outputs() {
+        assert_eq!(efficientdet_d0(512).outputs().len(), 10);
+    }
+
+    #[test]
+    fn gop_small() {
+        // EfficientDet-D0: ~2.5 BFLOPs per the paper's Fig 12 family.
+        let gop = efficientdet_d0(512).total_gop();
+        assert!(gop > 1.0 && gop < 12.0, "got {gop}");
+    }
+}

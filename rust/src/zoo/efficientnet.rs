@@ -1,0 +1,164 @@
+//! EfficientNet-B0/B1 (MBConv + Squeeze-and-Excitation) — the paper's
+//! headline compact-CNN workload (Fig 17, Tables III/V/VII, Fig 18).
+
+use crate::graph::{Activation, Graph, GraphBuilder, NodeId, Shape};
+
+/// One stage of the EfficientNet block plan.
+struct Stage {
+    expand: usize,
+    out_c: usize,
+    repeats: usize,
+    stride: usize,
+    k: usize,
+}
+
+/// B0 baseline plan (Tan & Le 2019, Table 1).
+fn b0_plan() -> Vec<Stage> {
+    vec![
+        Stage { expand: 1, out_c: 16, repeats: 1, stride: 1, k: 3 },
+        Stage { expand: 6, out_c: 24, repeats: 2, stride: 2, k: 3 },
+        Stage { expand: 6, out_c: 40, repeats: 2, stride: 2, k: 5 },
+        Stage { expand: 6, out_c: 80, repeats: 3, stride: 2, k: 3 },
+        Stage { expand: 6, out_c: 112, repeats: 3, stride: 1, k: 5 },
+        Stage { expand: 6, out_c: 192, repeats: 4, stride: 2, k: 5 },
+        Stage { expand: 6, out_c: 320, repeats: 1, stride: 1, k: 3 },
+    ]
+}
+
+/// Depth scaling: ceil(repeats × depth_mult), per the compound-scaling rule.
+fn scale_depth(r: usize, depth_mult: f64) -> usize {
+    (r as f64 * depth_mult).ceil() as usize
+}
+
+/// MBConv block with SE: expand 1×1 (skip when ratio 1) → depthwise k×k →
+/// SE (squeeze → FC/4 → swish → FC → sigmoid → scale) → project 1×1,
+/// with an identity shortcut when stride == 1 and channels match.
+///
+/// Node granularity mirrors the TF frozen graph (conv / bn / act / gap /
+/// fc / scale / add all separate nodes) so the analyzer's grouping is
+/// exercised exactly as in Fig. 5(a).
+fn mbconv(b: &mut GraphBuilder, base: &str, x: NodeId, st: &Stage, stride: usize) -> NodeId {
+    let in_c = b.shape(x).c;
+    let exp_c = in_c * st.expand;
+    // SE squeeze channels derive from the *block input* channels (ratio 0.25).
+    let se_c = (in_c / 4).max(1);
+
+    let expanded = if st.expand != 1 {
+        b.conv_bn_act(&format!("{base}/expand"), x, 1, 1, exp_c, Activation::Swish)
+    } else {
+        x
+    };
+    let dw = b.dw_bn_act(&format!("{base}/dw"), expanded, st.k, stride, Activation::Swish);
+
+    // Squeeze-and-Excitation (Fig 1 / Fig 13c-d of the paper).
+    let sq = b.gap(&format!("{base}/se/gap"), dw);
+    let r1 = b.fc(&format!("{base}/se/reduce"), sq, se_c);
+    let a1 = b.activation(&format!("{base}/se/swish"), r1, Activation::Swish);
+    let r2 = b.fc(&format!("{base}/se/expand"), a1, exp_c);
+    let a2 = b.activation(&format!("{base}/se/sigmoid"), r2, Activation::Sigmoid);
+    let scaled = b.scale(&format!("{base}/se/scale"), dw, a2);
+
+    let proj = b.conv(&format!("{base}/project"), scaled, 1, 1, st.out_c, crate::graph::PadMode::Same);
+    let proj_bn = b.batchnorm(&format!("{base}/project/bn"), proj);
+
+    if stride == 1 && in_c == st.out_c {
+        b.add(&format!("{base}/add"), proj_bn, x)
+    } else {
+        proj_bn
+    }
+}
+
+fn efficientnet(name: &str, input: usize, depth_mult: f64) -> Graph {
+    let mut b = GraphBuilder::new(name, Shape::new(input, input, 3));
+    let x = b.input_id();
+    let mut x = b.conv_bn_act("stem", x, 3, 2, 32, Activation::Swish);
+
+    for (si, st) in b0_plan().iter().enumerate() {
+        let reps = scale_depth(st.repeats, depth_mult);
+        for r in 0..reps {
+            let stride = if r == 0 { st.stride } else { 1 };
+            let base = format!("block{}_{}", si + 1, r + 1);
+            x = mbconv(&mut b, &base, x, st, stride);
+        }
+    }
+
+    let head = b.conv_bn_act("head", x, 1, 1, 1280, Activation::Swish);
+    let g = b.gap("gap", head);
+    let fc = b.fc("fc1000", g, 1000);
+    b.identity("prob", fc);
+    b.finish()
+}
+
+/// EfficientNet-B0 (16 MBConv blocks).
+pub fn efficientnet_b0(input: usize) -> Graph {
+    efficientnet("EfficientNet-B0", input, 1.0)
+}
+
+/// EfficientNet-B1 (23 MBConv blocks, depth ×1.1) — Table VII's workload.
+pub fn efficientnet_b1(input: usize) -> Graph {
+    efficientnet("EfficientNet-B1", input, 1.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn b1_block_count() {
+        let g = efficientnet_b1(256);
+        let adds = g.nodes.iter().filter(|n| n.op.is_shortcut()).count();
+        // B1 repeats [2,3,3,4,4,5,2] = 23 blocks, identity-shortcut blocks
+        // are the non-first block of each stage: 23 - 7 = 16.
+        assert_eq!(adds, 16);
+    }
+
+    #[test]
+    fn b1_conv_layer_count() {
+        // stem + head + fc + per-block convs (expand/dw/2 SE FCs/project).
+        let g = efficientnet_b1(256);
+        let n = g.conv_layer_count();
+        // 23 blocks: 2 without expand (stage1) ⇒ 2*4 + 21*5 = 113, +3 = 116.
+        assert_eq!(n, 116);
+    }
+
+    #[test]
+    fn b1_params_about_7_8m() {
+        // EfficientNet-B1: 7.8M parameters ("9 MB" 8-bit model, §I).
+        let m = efficientnet_b1(256).total_weight_bytes(1) as f64 / 1e6;
+        assert!((m - 7.8).abs() < 0.9, "got {m}M");
+    }
+
+    #[test]
+    fn b1_gop_matches_table5() {
+        // Table V: 1.38 GOP at 256×256 (0.69 GMAC).
+        let gop = efficientnet_b1(256).total_gop();
+        assert!((gop - 1.38).abs() < 0.25, "got {gop}");
+    }
+
+    #[test]
+    fn b1_gop_scales_to_768() {
+        // §I: 13.34 BFLOPS at 768×768 ⇒ ~(768/256)^2 × the 256 figure.
+        let gop = efficientnet_b1(768).total_gop();
+        assert!((gop - 13.34).abs() < 2.5, "got {gop}");
+    }
+
+    #[test]
+    fn node_count_is_tf_like() {
+        // Fig 5(a): 418 protobuf nodes for EfficientNet. Our granularity
+        // (conv/bn/act separate) lands in the same regime.
+        let g = efficientnet_b1(256);
+        assert!(g.nodes.len() > 300, "got {}", g.nodes.len());
+    }
+
+    #[test]
+    fn b0_has_16_blocks() {
+        let g = efficientnet_b0(224);
+        let dws = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Conv { depthwise: true, .. }))
+            .count();
+        assert_eq!(dws, 16);
+    }
+}

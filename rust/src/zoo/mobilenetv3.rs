@@ -1,0 +1,111 @@
+//! MobileNetV3-Large (Howard et al. 2019) — SE-based compact CNN from the
+//! paper's motivation (Fig 1 mentions MobileNet v3 alongside EfficientNet).
+
+use crate::graph::{Activation, Graph, GraphBuilder, NodeId, PadMode, Shape};
+
+/// One bneck row of the MobileNetV3-Large table.
+struct Bneck {
+    k: usize,
+    exp: usize,
+    out: usize,
+    se: bool,
+    act: Activation,
+    stride: usize,
+}
+
+fn large_plan() -> Vec<Bneck> {
+    use Activation::{HardSwish as HS, Relu as RE};
+    vec![
+        Bneck { k: 3, exp: 16, out: 16, se: false, act: RE, stride: 1 },
+        Bneck { k: 3, exp: 64, out: 24, se: false, act: RE, stride: 2 },
+        Bneck { k: 3, exp: 72, out: 24, se: false, act: RE, stride: 1 },
+        Bneck { k: 5, exp: 72, out: 40, se: true, act: RE, stride: 2 },
+        Bneck { k: 5, exp: 120, out: 40, se: true, act: RE, stride: 1 },
+        Bneck { k: 5, exp: 120, out: 40, se: true, act: RE, stride: 1 },
+        Bneck { k: 3, exp: 240, out: 80, se: false, act: HS, stride: 2 },
+        Bneck { k: 3, exp: 200, out: 80, se: false, act: HS, stride: 1 },
+        Bneck { k: 3, exp: 184, out: 80, se: false, act: HS, stride: 1 },
+        Bneck { k: 3, exp: 184, out: 80, se: false, act: HS, stride: 1 },
+        Bneck { k: 3, exp: 480, out: 112, se: true, act: HS, stride: 1 },
+        Bneck { k: 3, exp: 672, out: 112, se: true, act: HS, stride: 1 },
+        Bneck { k: 5, exp: 672, out: 160, se: true, act: HS, stride: 2 },
+        Bneck { k: 5, exp: 960, out: 160, se: true, act: HS, stride: 1 },
+        Bneck { k: 5, exp: 960, out: 160, se: true, act: HS, stride: 1 },
+    ]
+}
+
+fn bneck(b: &mut GraphBuilder, base: &str, x: NodeId, r: &Bneck) -> NodeId {
+    let in_c = b.shape(x).c;
+    let expanded = if r.exp != in_c {
+        b.conv_bn_act(&format!("{base}/expand"), x, 1, 1, r.exp, r.act)
+    } else {
+        x
+    };
+    let dw = b.dw_bn_act(&format!("{base}/dw"), expanded, r.k, r.stride, r.act);
+
+    let gated = if r.se {
+        // MobileNetV3 SE: squeeze channels = expanded/4, hard-sigmoid gate.
+        let sq = b.gap(&format!("{base}/se/gap"), dw);
+        let f1 = b.fc(&format!("{base}/se/reduce"), sq, (r.exp / 4).max(1));
+        let a1 = b.activation(&format!("{base}/se/relu"), f1, Activation::Relu);
+        let f2 = b.fc(&format!("{base}/se/expand"), a1, r.exp);
+        let a2 = b.activation(&format!("{base}/se/hsig"), f2, Activation::HardSigmoid);
+        b.scale(&format!("{base}/se/scale"), dw, a2)
+    } else {
+        dw
+    };
+
+    let proj = b.conv(&format!("{base}/project"), gated, 1, 1, r.out, PadMode::Same);
+    let proj_bn = b.batchnorm(&format!("{base}/project/bn"), proj);
+    if r.stride == 1 && in_c == r.out {
+        b.add(&format!("{base}/add"), proj_bn, x)
+    } else {
+        proj_bn
+    }
+}
+
+/// MobileNetV3-Large classifier.
+pub fn mobilenet_v3_large(input: usize) -> Graph {
+    let mut b = GraphBuilder::new("MobileNetV3-Large", Shape::new(input, input, 3));
+    let x = b.input_id();
+    let mut x = b.conv_bn_act("stem", x, 3, 2, 16, Activation::HardSwish);
+    for (i, r) in large_plan().iter().enumerate() {
+        x = bneck(&mut b, &format!("bneck{}", i + 1), x, r);
+    }
+    let c_last = b.conv_bn_act("conv_last", x, 1, 1, 960, Activation::HardSwish);
+    let g = b.gap("gap", c_last);
+    let f1 = b.fc("fc1", g, 1280);
+    let a1 = b.activation("fc1/hswish", f1, Activation::HardSwish);
+    let fc = b.fc("fc1000", a1, 1000);
+    b.identity("prob", fc);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifteen_bnecks() {
+        let g = mobilenet_v3_large(224);
+        let dws = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, crate::graph::OpKind::Conv { depthwise: true, .. }))
+            .count();
+        assert_eq!(dws, 15);
+    }
+
+    #[test]
+    fn params_about_5_4m() {
+        let m = mobilenet_v3_large(224).total_weight_bytes(1) as f64 / 1e6;
+        assert!((m - 5.4).abs() < 0.6, "got {m}M");
+    }
+
+    #[test]
+    fn gmacs_about_0_22() {
+        // Published: 219 MMAC at 224x224 → 0.44 GOP.
+        let gop = mobilenet_v3_large(224).total_gop();
+        assert!((gop - 0.44).abs() < 0.1, "got {gop}");
+    }
+}

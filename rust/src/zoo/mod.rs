@@ -1,0 +1,113 @@
+//! Model zoo: in-repo builders for every CNN the paper evaluates.
+//!
+//! The paper's front-end parses TensorFlow frozen protobufs; the graphs
+//! below reproduce the *architectures* those protobufs describe (layer
+//! geometry, shortcut/concat topology, SE blocks) at TF-node granularity,
+//! which is everything the compiler/optimizer observes. See DESIGN.md §2
+//! for the substitution rationale.
+//!
+//! | builder | paper usage |
+//! |---|---|
+//! | [`vgg16_conv`] | Table IV (vs OLAccel / SmartShuttle), Table III |
+//! | [`yolov2`] | Fig 16, Table III, Table V |
+//! | [`yolov3`] | Fig 17, Table III, Table V |
+//! | [`resnet50`] / [`resnet152`] | Tables II/III/V/VI, Fig 17 |
+//! | [`retinanet`] | Tables III/V |
+//! | [`efficientnet_b1`] | Fig 17, Tables III/V/VII, Fig 18 |
+//! | [`mobilenet_v3_large`] | §I motivation (SE-based compact CNN) |
+//! | [`efficientdet_d0`] | multi-cut-point extension (Fig 12c) |
+
+mod vgg;
+mod yolov2;
+mod yolov3;
+mod resnet;
+mod retinanet;
+mod efficientnet;
+mod mobilenetv3;
+mod efficientdet;
+mod tinynet;
+mod unet;
+
+pub use vgg::vgg16_conv;
+pub use yolov2::yolov2;
+pub use yolov3::yolov3;
+pub use resnet::{resnet101, resnet152, resnet18, resnet34, resnet50};
+pub use retinanet::retinanet;
+pub use efficientnet::{efficientnet_b0, efficientnet_b1};
+pub use mobilenetv3::mobilenet_v3_large;
+pub use efficientdet::efficientdet_d0;
+pub use tinynet::{tinynet, TINYNET_INPUT};
+pub use unet::unet;
+
+use crate::graph::Graph;
+
+/// All zoo model names, for CLI listings and sweep drivers.
+pub const MODEL_NAMES: &[&str] = &[
+    "vgg16-conv",
+    "yolov2",
+    "yolov3",
+    "resnet18",
+    "resnet34",
+    "resnet50",
+    "resnet101",
+    "resnet152",
+    "retinanet",
+    "efficientnet-b0",
+    "efficientnet-b1",
+    "mobilenetv3-large",
+    "efficientdet-d0",
+    "unet",
+];
+
+/// Build a zoo model by name at the given square input size.
+pub fn by_name(name: &str, input: usize) -> Option<Graph> {
+    Some(match name {
+        "vgg16-conv" => vgg16_conv(input),
+        "yolov2" => yolov2(input),
+        "yolov3" => yolov3(input),
+        "resnet18" => resnet18(input),
+        "resnet34" => resnet34(input),
+        "resnet50" => resnet50(input),
+        "resnet101" => resnet101(input),
+        "resnet152" => resnet152(input),
+        "retinanet" => retinanet(input),
+        "efficientnet-b0" => efficientnet_b0(input),
+        "efficientnet-b1" => efficientnet_b1(input),
+        "mobilenetv3-large" => mobilenet_v3_large(input),
+        "efficientdet-d0" => efficientdet_d0(input),
+        "unet" => unet(input),
+        _ => return None,
+    })
+}
+
+/// Default input size used by the paper for each model (Tables III/V).
+pub fn default_input(name: &str) -> usize {
+    match name {
+        "vgg16-conv" | "resnet18" | "resnet34" => 224,
+        "resnet50" | "resnet101" | "resnet152" => 256,
+        "yolov2" | "yolov3" => 416,
+        "retinanet" | "efficientdet-d0" => 512,
+        "unet" => 256,
+        _ => 256,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate;
+
+    #[test]
+    fn all_models_build_and_validate() {
+        for &name in MODEL_NAMES {
+            let g = by_name(name, default_input(name)).unwrap();
+            validate(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(g.conv_layer_count() > 5, "{name} too small");
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(by_name("alexnet", 224).is_none());
+    }
+}

@@ -1,0 +1,138 @@
+//! ResNet family (He et al.) — Tables II/III/V/VI and Fig 17 workloads.
+
+use crate::graph::{Activation, Graph, GraphBuilder, NodeId, PadMode, Shape};
+
+/// Stage plan: (blocks per stage) for each depth.
+fn plan(depth: usize) -> [usize; 4] {
+    match depth {
+        18 => [2, 2, 2, 2],
+        34 => [3, 4, 6, 3],
+        50 => [3, 4, 6, 3],
+        101 => [3, 4, 23, 3],
+        152 => [3, 8, 36, 3],
+        _ => panic!("unsupported ResNet depth {depth}"),
+    }
+}
+
+fn resnet(depth: usize, input: usize) -> Graph {
+    let bottleneck = depth >= 50;
+    let mut b = GraphBuilder::new(&format!("ResNet{depth}"), Shape::new(input, input, 3));
+    let x = b.input_id();
+    let c1 = b.conv_bn_act("conv1", x, 7, 2, 64, Activation::Relu);
+    let mut x = b.maxpool("pool1", c1, 3, 2);
+
+    let stage_c = [64usize, 128, 256, 512];
+    for (si, &blocks) in plan(depth).iter().enumerate() {
+        let c = stage_c[si];
+        for bi in 0..blocks {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let base = format!("res{}_{}", si + 2, bi + 1);
+            x = if bottleneck {
+                bottleneck_block(&mut b, &base, x, c, stride)
+            } else {
+                basic_block(&mut b, &base, x, c, stride)
+            };
+        }
+    }
+    let g = b.gap("gap", x);
+    let fc = b.fc("fc1000", g, 1000);
+    b.identity("prob", fc);
+    b.finish()
+}
+
+/// 1x1 → 3x3 → 1x1(4c) bottleneck with projection shortcut on stage entry.
+fn bottleneck_block(b: &mut GraphBuilder, base: &str, x: NodeId, c: usize, stride: usize) -> NodeId {
+    let in_c = b.shape(x).c;
+    let out_c = 4 * c;
+    let c1 = b.conv_bn_act(&format!("{base}/a"), x, 1, 1, c, Activation::Relu);
+    let c2 = b.conv_bn_act(&format!("{base}/b"), c1, 3, stride, c, Activation::Relu);
+    let c3 = b.conv(&format!("{base}/c"), c2, 1, 1, out_c, PadMode::Same);
+    let bn3 = b.batchnorm(&format!("{base}/c/bn"), c3);
+    let shortcut = if in_c != out_c || stride != 1 {
+        let p = b.conv(&format!("{base}/proj"), x, 1, stride, out_c, PadMode::Same);
+        b.batchnorm(&format!("{base}/proj/bn"), p)
+    } else {
+        x
+    };
+    let add = b.add(&format!("{base}/add"), bn3, shortcut);
+    b.activation(&format!("{base}/relu"), add, Activation::Relu)
+}
+
+/// 3x3 → 3x3 basic block (ResNet-18/34).
+fn basic_block(b: &mut GraphBuilder, base: &str, x: NodeId, c: usize, stride: usize) -> NodeId {
+    let in_c = b.shape(x).c;
+    let c1 = b.conv_bn_act(&format!("{base}/a"), x, 3, stride, c, Activation::Relu);
+    let c2 = b.conv(&format!("{base}/b"), c1, 3, 1, c, PadMode::Same);
+    let bn2 = b.batchnorm(&format!("{base}/b/bn"), c2);
+    let shortcut = if in_c != c || stride != 1 {
+        let p = b.conv(&format!("{base}/proj"), x, 1, stride, c, PadMode::Same);
+        b.batchnorm(&format!("{base}/proj/bn"), p)
+    } else {
+        x
+    };
+    let add = b.add(&format!("{base}/add"), bn2, shortcut);
+    b.activation(&format!("{base}/relu"), add, Activation::Relu)
+}
+
+pub fn resnet18(input: usize) -> Graph {
+    resnet(18, input)
+}
+pub fn resnet34(input: usize) -> Graph {
+    resnet(34, input)
+}
+pub fn resnet50(input: usize) -> Graph {
+    resnet(50, input)
+}
+pub fn resnet101(input: usize) -> Graph {
+    resnet(101, input)
+}
+pub fn resnet152(input: usize) -> Graph {
+    resnet(152, input)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_counts() {
+        // 53 weighted conv layers in ResNet50 (incl. projections) + FC.
+        assert_eq!(resnet50(224).conv_layer_count(), 54);
+        // ResNet152: 1 + (3+8+36+3)*3 + 4 proj = 155 convs + FC.
+        assert_eq!(resnet152(224).conv_layer_count(), 156);
+    }
+
+    #[test]
+    fn resnet50_gop_at_224() {
+        // Published: ~3.86 GMAC = 7.7 GOP at 224; Table V lists 11.76 GOP
+        // at 256 (scaling ~ (256/224)^2 = 1.306 → 10.1; theirs includes
+        // extra head ops). Accept the canonical 224 figure.
+        let gop = resnet50(224).total_gop();
+        assert!((gop - 7.7).abs() < 0.7, "got {gop}");
+    }
+
+    #[test]
+    fn resnet152_gop_scales() {
+        let gop224 = resnet152(224).total_gop();
+        // Published ResNet152: ~11.3 GMAC = 22.6 GOP (Table II: 22.63 GOP).
+        assert!((gop224 - 22.6).abs() < 1.5, "got {gop224}");
+        let gop256 = resnet152(256).total_gop();
+        assert!(gop256 > gop224 * 1.2 && gop256 < gop224 * 1.45);
+    }
+
+    #[test]
+    fn resnet152_weights_match_table2() {
+        // Table II: 112.6 MB at 16-bit ⇒ ~56.3 M params ⇒ ~60.2 M with FC.
+        let params = resnet152(224).total_weight_bytes(1) as f64 / 1e6;
+        assert!((params - 60.2).abs() < 2.0, "got {params}M");
+    }
+
+    #[test]
+    fn shortcut_fraction_is_large() {
+        // [8]: shortcut data ≈ 40% of feature-map accesses in ResNet152.
+        // Sanity: at least a third of blocks' outputs feed EltwiseAdd.
+        let g = resnet152(224);
+        let adds = g.nodes.iter().filter(|n| n.op.is_shortcut()).count();
+        assert_eq!(adds, 3 + 8 + 36 + 3);
+    }
+}

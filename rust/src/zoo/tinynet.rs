@@ -1,0 +1,118 @@
+//! TinyNet-SE: the end-to-end hardware-verification network.
+//!
+//! A deliberately small CNN that exercises *every* datapath feature the
+//! accelerator supports — normal conv, fused max-pool, residual shortcut
+//! (both act-after-add and linear-add), MBConv with squeeze-and-
+//! excitation (GAP, FC, swish/sigmoid LUTs, channel scale), stride-2
+//! downsampling, nearest-neighbour upsampling and concatenation.
+//!
+//! `python/compile/model.py` defines the *same* network with the *same
+//! node names*; the AOT pipeline exports its HLO + quantized parameters,
+//! and `examples/e2e_verify.rs` checks the rust functional simulator
+//! against the PJRT-executed golden model **bit-exactly**. Keep the two
+//! definitions in lock-step.
+
+use crate::graph::{Activation, Graph, GraphBuilder, PadMode, Shape};
+
+/// Canonical input: 16×16×8.
+pub const TINYNET_INPUT: Shape = Shape::new(16, 16, 8);
+
+/// Build TinyNet-SE.
+pub fn tinynet() -> Graph {
+    let mut b = GraphBuilder::new("TinyNet-SE", TINYNET_INPUT);
+    let x = b.input_id();
+
+    // stem: conv3x3-16 + bias + relu, then 2x2 max-pool (fuses)
+    let stem = b.conv("stem", x, 3, 1, 16, PadMode::Same);
+    let stem_b = b.bias("stem/bias", stem);
+    let stem_r = b.activation("stem/relu", stem_b, Activation::Relu);
+    let pool = b.maxpool("pool1", stem_r, 2, 2); // 8x8x16
+
+    // res1: classic residual block, ReLU after the addition
+    let r1a = b.conv("res1/a", pool, 3, 1, 16, PadMode::Same);
+    let r1a_b = b.bias("res1/a/bias", r1a);
+    let r1a_r = b.activation("res1/a/relu", r1a_b, Activation::Relu);
+    let r1b = b.conv("res1/b", r1a_r, 3, 1, 16, PadMode::Same);
+    let r1b_b = b.bias("res1/b/bias", r1b);
+    let r1_add = b.add("res1/add", r1b_b, pool);
+    let r1 = b.activation("res1/relu", r1_add, Activation::Relu);
+
+    // mb1: MBConv with SE (Fig. 1 / Fig. 13c-d), linear projection + add
+    let exp = b.conv("mb1/expand", r1, 1, 1, 32, PadMode::Same);
+    let exp_b = b.bias("mb1/expand/bias", exp);
+    let exp_a = b.activation("mb1/expand/swish", exp_b, Activation::Swish);
+    let dw = b.dwconv("mb1/dw", exp_a, 3, 1, PadMode::Same);
+    let dw_b = b.bias("mb1/dw/bias", dw);
+    let dw_a = b.activation("mb1/dw/swish", dw_b, Activation::Swish);
+    let sq = b.gap("mb1/se/gap", dw_a);
+    let se_r = b.fc("mb1/se/reduce", sq, 8);
+    let se_ra = b.activation("mb1/se/reduce/swish", se_r, Activation::Swish);
+    let se_e = b.fc("mb1/se/expand", se_ra, 32);
+    let se_ea = b.activation("mb1/se/expand/sigmoid", se_e, Activation::Sigmoid);
+    let se_s = b.scale("mb1/se/scale", dw_a, se_ea);
+    let proj = b.conv("mb1/project", se_s, 1, 1, 16, PadMode::Same);
+    let proj_b = b.bias("mb1/project/bias", proj);
+    let mb1 = b.add("mb1/add", proj_b, r1); // linear add (no act)
+
+    // multi-scale branch: stride-2 conv, upsample back, concat
+    let down = b.conv("down", mb1, 3, 2, 24, PadMode::Same);
+    let down_b = b.bias("down/bias", down);
+    let down_r = b.activation("down/relu", down_b, Activation::Relu); // 4x4x24
+    let up = b.upsample("up", down_r, 2); // 8x8x24
+    let cat = b.concat("cat", mb1, up); // 8x8x40
+
+    // head: 1x1 conv, GAP, classifier
+    let head = b.conv("head", cat, 1, 1, 16, PadMode::Same);
+    let head_b = b.bias("head/bias", head);
+    let head_r = b.activation("head/relu", head_b, Activation::Relu);
+    let g = b.gap("gap", head_r);
+    let fc = b.fc("fc", g, 10);
+    b.identity("logits", fc);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::{analyze, GroupKind};
+    use crate::graph::validate;
+
+    #[test]
+    fn valid_and_small() {
+        let g = tinynet();
+        validate(&g).unwrap();
+        assert!(g.nodes.len() < 40);
+        // 6 normal convs + 1 dwconv + 2 SE FCs + head FC + fc = 11
+        assert_eq!(g.conv_layer_count(), 11);
+    }
+
+    #[test]
+    fn exercises_every_group_kind() {
+        let gg = analyze(&tinynet());
+        use GroupKind::*;
+        for kind in [Conv, DwConv, Fc, Scale, Concat, Input] {
+            assert!(
+                gg.groups.iter().any(|g| g.kind == kind),
+                "missing group kind {kind:?}"
+            );
+        }
+        // the stem's max-pool fuses behind the conv (Algorithm 1 step 4)
+        assert!(gg.groups.iter().any(|g| g.pool.is_some()));
+        // both fused-shortcut flavours present
+        let fused: Vec<_> = gg.groups.iter().filter(|g| g.shortcut_of.is_some()).collect();
+        assert_eq!(fused.len(), 2);
+        assert!(fused.iter().any(|g| g.act == Activation::Relu)); // res1
+        assert!(fused.iter().any(|g| g.act == Activation::Linear)); // mb1
+        // SE squeeze fused into the dw group
+        assert!(gg.groups.iter().any(|g| g.se_squeeze && g.kind == DwConv));
+        // upsample fused into `down`'s group
+        assert!(gg.groups.iter().any(|g| g.upsample == Some(2)));
+    }
+
+    #[test]
+    fn output_is_ten_logits() {
+        let g = tinynet();
+        let out = g.outputs()[0];
+        assert_eq!(g.node(out).out_shape, Shape::vec(10));
+    }
+}

@@ -1,0 +1,90 @@
+//! U-Net style auto-encoder — the paper's *double cut-point* example
+//! (Fig. 11 right: "an auto-encoder CNN has two cut-points": feature
+//! maps shrink along the encoder, then grow along the decoder).
+
+use crate::graph::{Activation, Graph, GraphBuilder, NodeId, PadMode, Shape};
+
+fn enc_block(b: &mut GraphBuilder, base: &str, x: NodeId, c: usize) -> (NodeId, NodeId) {
+    let c1 = b.conv_bn_act(&format!("{base}/conv1"), x, 3, 1, c, Activation::Relu);
+    let c2 = b.conv_bn_act(&format!("{base}/conv2"), c1, 3, 1, c, Activation::Relu);
+    let p = b.maxpool(&format!("{base}/pool"), c2, 2, 2);
+    (c2, p) // (skip tap, downsampled)
+}
+
+fn dec_block(b: &mut GraphBuilder, base: &str, x: NodeId, skip: NodeId, c: usize) -> NodeId {
+    let up = b.upsample(&format!("{base}/up"), x, 2);
+    let uc = b.conv_bn_act(&format!("{base}/upconv"), up, 3, 1, c, Activation::Relu);
+    let cat = b.concat(&format!("{base}/cat"), uc, skip);
+    let c1 = b.conv_bn_act(&format!("{base}/conv1"), cat, 3, 1, c, Activation::Relu);
+    b.conv_bn_act(&format!("{base}/conv2"), c1, 3, 1, c, Activation::Relu)
+}
+
+/// 4-level U-Net segmenter (skip connections via concat — the long-path
+/// data the allocator keeps off-chip per §IV-A).
+pub fn unet(input: usize) -> Graph {
+    let mut b = GraphBuilder::new("U-Net", Shape::new(input, input, 3));
+    let x = b.input_id();
+    let (s1, p1) = enc_block(&mut b, "enc1", x, 32);
+    let (s2, p2) = enc_block(&mut b, "enc2", p1, 64);
+    let (s3, p3) = enc_block(&mut b, "enc3", p2, 128);
+    let (s4, p4) = enc_block(&mut b, "enc4", p3, 256);
+
+    let m1 = b.conv_bn_act("mid/conv1", p4, 3, 1, 512, Activation::Relu);
+    let mid = b.conv_bn_act("mid/conv2", m1, 3, 1, 512, Activation::Relu);
+
+    let d4 = dec_block(&mut b, "dec4", mid, s4, 256);
+    let d3 = dec_block(&mut b, "dec3", d4, s3, 128);
+    let d2 = dec_block(&mut b, "dec2", d3, s2, 64);
+    let d1 = dec_block(&mut b, "dec1", d2, s1, 32);
+
+    let seg = b.conv("head", d1, 1, 1, 2, PadMode::Same);
+    b.identity("mask", seg);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::config::AccelConfig;
+    use crate::optimizer::{basic_blocks, segments, Direction, Optimizer};
+
+    #[test]
+    fn builds_and_validates() {
+        let g = unet(256);
+        crate::graph::validate(&g).unwrap();
+        assert_eq!(g.conv_layer_count(), 23);
+        // output at full resolution
+        let out = g.outputs()[0];
+        assert_eq!(g.node(out).out_shape, Shape::new(256, 256, 2));
+    }
+
+    #[test]
+    fn autoencoder_has_two_cut_points() {
+        // Fig 11 (right): encoder (Dec) + decoder (Inc) = 2 segments.
+        let gg = analyze(&unet(256));
+        let blocks = basic_blocks(&gg);
+        let segs = segments(&gg, &blocks);
+        assert_eq!(segs.len(), 2, "{segs:?}");
+        assert_eq!(segs[0].dir, Direction::Dec);
+        assert_eq!(segs[1].dir, Direction::Inc);
+    }
+
+    #[test]
+    fn optimizer_puts_frame_reuse_in_the_valley() {
+        // frame-reuse belongs to the small-fmap middle; both ends of the
+        // hourglass stream row-wise.
+        let gg = analyze(&unet(256));
+        let cfg = AccelConfig::kcu1500_int8();
+        let opt = Optimizer::new(&gg, &cfg);
+        let best = opt.optimize();
+        assert!(best.feasible);
+        use crate::isa::ReuseMode;
+        let first_conv = 1; // enc1/conv1 group
+        let mid = gg.groups.iter().position(|gr| {
+            gg.graph.node(gr.main).name.starts_with("mid/")
+        }).unwrap();
+        assert_eq!(best.policy[first_conv], ReuseMode::Row, "encoder entry must stream");
+        assert_eq!(best.policy[mid], ReuseMode::Frame, "bottleneck must stay on-chip");
+    }
+}

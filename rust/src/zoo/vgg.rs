@@ -1,0 +1,54 @@
+//! VGG16 convolutional layers (the "VGG-CONV" workload of Table IV).
+
+use crate::graph::{Activation, Graph, GraphBuilder, PadMode, Shape};
+
+/// VGG16 CONV layers only (13 convolutions, 5 max-pools) — the workload
+/// SmartShuttle and OLAccel report DRAM traffic for (Table IV). The three
+/// FC layers are excluded, as in the paper's "VGG-CONV".
+pub fn vgg16_conv(input: usize) -> Graph {
+    let mut b = GraphBuilder::new("VGG16-CONV", Shape::new(input, input, 3));
+    let mut x = b.input_id();
+    let cfg: &[(usize, usize)] = &[(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    for (si, &(c, reps)) in cfg.iter().enumerate() {
+        for r in 0..reps {
+            let name = format!("conv{}_{}", si + 1, r + 1);
+            let conv = b.conv(&name, x, 3, 1, c, PadMode::Same);
+            let bias = b.bias(&format!("{name}/bias"), conv);
+            x = b.activation(&format!("{name}/relu"), bias, Activation::Relu);
+        }
+        x = b.maxpool(&format!("pool{}", si + 1), x, 2, 2);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_convs() {
+        let g = vgg16_conv(224);
+        assert_eq!(g.conv_layer_count(), 13);
+    }
+
+    #[test]
+    fn gop_matches_published() {
+        // VGG16 CONV layers are ~30.7 GOP at 224x224 (15.3 GMAC).
+        let gop = vgg16_conv(224).total_gop();
+        assert!((gop - 30.7).abs() < 0.5, "got {gop}");
+    }
+
+    #[test]
+    fn weights_match_published() {
+        // VGG16 conv weights: 14.71 M parameters.
+        let w = vgg16_conv(224).total_weight_bytes(1) as f64 / 1e6;
+        assert!((w - 14.7).abs() < 0.2, "got {w} MB");
+    }
+
+    #[test]
+    fn final_shape() {
+        let g = vgg16_conv(224);
+        let out = g.outputs()[0];
+        assert_eq!(g.node(out).out_shape, Shape::new(7, 7, 512));
+    }
+}

@@ -1,0 +1,97 @@
+//! YOLOv2 (Darknet19 backbone + passthrough detector) — Fig 16 workload.
+
+use crate::graph::{Activation, Graph, GraphBuilder, NodeId, PadMode, Shape};
+
+/// YOLOv2 at the given input size (paper uses 416×416).
+///
+/// 23 convolution layers: Darknet19's 18 backbone convs + 2×3×3-1024,
+/// the 64-channel passthrough conv, the post-concat 3×3-1024 and the
+/// 1×1 detection conv. Leaky-ReLU activations, batch-norm everywhere
+/// except the detection layer — mirroring the Darknet cfg the TF frozen
+/// model is converted from.
+pub fn yolov2(input: usize) -> Graph {
+    let mut b = GraphBuilder::new("YOLOv2", Shape::new(input, input, 3));
+    let mut idx = 0usize;
+    let mut cba = |b: &mut GraphBuilder, from: NodeId, k: usize, c: usize| -> NodeId {
+        idx += 1;
+        b.conv_bn_act(&format!("conv{idx}"), from, k, 1, c, Activation::Leaky)
+    };
+
+    let x = b.input_id();
+    let c1 = cba(&mut b, x, 3, 32);
+    let p1 = b.maxpool("pool1", c1, 2, 2);
+    let c2 = cba(&mut b, p1, 3, 64);
+    let p2 = b.maxpool("pool2", c2, 2, 2);
+    let c3 = cba(&mut b, p2, 3, 128);
+    let c4 = cba(&mut b, c3, 1, 64);
+    let c5 = cba(&mut b, c4, 3, 128);
+    let p3 = b.maxpool("pool3", c5, 2, 2);
+    let c6 = cba(&mut b, p3, 3, 256);
+    let c7 = cba(&mut b, c6, 1, 128);
+    let c8 = cba(&mut b, c7, 3, 256);
+    let p4 = b.maxpool("pool4", c8, 2, 2);
+    let c9 = cba(&mut b, p4, 3, 512);
+    let c10 = cba(&mut b, c9, 1, 256);
+    let c11 = cba(&mut b, c10, 3, 512);
+    let c12 = cba(&mut b, c11, 1, 256);
+    let c13 = cba(&mut b, c12, 3, 512); // passthrough source (26x26x512)
+    let p5 = b.maxpool("pool5", c13, 2, 2);
+    let c14 = cba(&mut b, p5, 3, 1024);
+    let c15 = cba(&mut b, c14, 1, 512);
+    let c16 = cba(&mut b, c15, 3, 1024);
+    let c17 = cba(&mut b, c16, 1, 512);
+    let c18 = cba(&mut b, c17, 3, 1024);
+    let c19 = cba(&mut b, c18, 3, 1024);
+    let c20 = cba(&mut b, c19, 3, 1024);
+    // Passthrough branch: 1x1-64 on conv13, then space-to-depth
+    // (26x26x64 -> 13x13x256). The reorg is pure data movement; we model
+    // its geometry as four stride-2 window picks concatenated channel-wise,
+    // which moves exactly the same 26·26·64 elements through the memory
+    // system as the Darknet reorg layer.
+    let c21 = cba(&mut b, c13, 1, 64); // 26x26x64
+    let r1 = b.maxpool("reorg/s2a", c21, 2, 2); // 13x13x64 (quadrant a)
+    let r2 = b.maxpool("reorg/s2b", c21, 2, 2); // 13x13x64 (quadrant b)
+    let r3 = b.maxpool("reorg/s2c", c21, 2, 2);
+    let r4 = b.maxpool("reorg/s2d", c21, 2, 2);
+    let rc1 = b.concat("reorg/cat1", r1, r2); // 13x13x128
+    let rc2 = b.concat("reorg/cat2", r3, r4); // 13x13x128
+    let reorg = b.concat("reorg/cat3", rc1, rc2); // 13x13x256
+    let cat = b.concat("route", reorg, c20); // 13x13x1280
+    let c22 = cba(&mut b, cat, 3, 1024);
+    idx += 1;
+    let det = b.conv(&format!("conv{idx}"), c22, 1, 1, 425, PadMode::Same);
+    b.identity("detect", det);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_count() {
+        assert_eq!(yolov2(416).conv_layer_count(), 23);
+    }
+
+    #[test]
+    fn gop_matches_darknet() {
+        // Darknet reports ~29.4 BFLOPs for YOLOv2@416 ⇒ ~14.7 GMAC.
+        // Paper Table V lists 17.18 GOP for their converted model at 416.
+        let gop = yolov2(416).total_gop();
+        assert!(gop > 25.0 && gop < 35.0, "got {gop}");
+    }
+
+    #[test]
+    fn detect_is_13x13() {
+        let g = yolov2(416);
+        let out = g.outputs()[0];
+        assert_eq!(g.node(out).out_shape, Shape::new(13, 13, 425));
+    }
+
+    #[test]
+    fn weights_about_50mb() {
+        // YOLOv2 has ~50.6M parameters.
+        let mb = yolov2(416).total_weight_bytes(1) as f64 / 1e6;
+        assert!((mb - 50.5).abs() < 2.0, "got {mb}");
+    }
+}

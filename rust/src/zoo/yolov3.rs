@@ -1,0 +1,106 @@
+//! YOLOv3 (Darknet53 backbone + FPN-style multi-scale heads) — Fig 17.
+
+use crate::graph::{Activation, Graph, GraphBuilder, NodeId, PadMode, Shape};
+
+/// Numbered conv+bn+leaky helper shared by the builder functions below.
+fn cba(b: &mut GraphBuilder, idx: &mut usize, from: NodeId, k: usize, s: usize, c: usize) -> NodeId {
+    *idx += 1;
+    b.conv_bn_act(&format!("conv{idx}"), from, k, s, c, Activation::Leaky)
+}
+
+/// Darknet53 residual stage: stride-2 downsample conv + `n` residual blocks.
+fn stage(b: &mut GraphBuilder, idx: &mut usize, res_idx: &mut usize, from: NodeId, c: usize, n: usize) -> NodeId {
+    let mut x = cba(b, idx, from, 3, 2, c);
+    for _ in 0..n {
+        let c1 = cba(b, idx, x, 1, 1, c / 2);
+        let c2 = cba(b, idx, c1, 3, 1, c);
+        *res_idx += 1;
+        x = b.add(&format!("res{res_idx}"), c2, x);
+    }
+    x
+}
+
+/// YOLO head: 5-conv block, then 3x3 + 1x1 detection conv.
+/// Returns `(branch_point, detect_output)`.
+fn head(b: &mut GraphBuilder, idx: &mut usize, from: NodeId, c: usize, tag: &str) -> (NodeId, NodeId) {
+    let h1 = cba(b, idx, from, 1, 1, c);
+    let h2 = cba(b, idx, h1, 3, 1, 2 * c);
+    let h3 = cba(b, idx, h2, 1, 1, c);
+    let h4 = cba(b, idx, h3, 3, 1, 2 * c);
+    let h5 = cba(b, idx, h4, 1, 1, c); // branch point toward upsample
+    let h6 = cba(b, idx, h5, 3, 1, 2 * c);
+    *idx += 1;
+    let det = b.conv(&format!("conv{idx}"), h6, 1, 1, 255, PadMode::Same);
+    let out = b.identity(&format!("detect_{tag}"), det);
+    (h5, out)
+}
+
+/// YOLOv3 at the given input size (paper uses 416×416; 75 conv layers,
+/// 106 total layers counting shortcut/route/upsample, matching the
+/// Darknet layer numbering referenced by Table III).
+pub fn yolov3(input: usize) -> Graph {
+    let mut b = GraphBuilder::new("YOLOv3", Shape::new(input, input, 3));
+    let mut idx = 0usize;
+    let mut res_idx = 0usize;
+
+    let x0 = b.input_id();
+    let c1 = cba(&mut b, &mut idx, x0, 3, 1, 32);
+    let s1 = stage(&mut b, &mut idx, &mut res_idx, c1, 64, 1);
+    let s2 = stage(&mut b, &mut idx, &mut res_idx, s1, 128, 2);
+    let s3 = stage(&mut b, &mut idx, &mut res_idx, s2, 256, 8); // route 36 (52x52)
+    let s4 = stage(&mut b, &mut idx, &mut res_idx, s3, 512, 8); // route 61 (26x26)
+    let s5 = stage(&mut b, &mut idx, &mut res_idx, s4, 1024, 4); // 13x13
+
+    let (h5a, _det1) = head(&mut b, &mut idx, s5, 512, "13");
+    let u1c = cba(&mut b, &mut idx, h5a, 1, 1, 256);
+    let u1 = b.upsample("upsample1", u1c, 2);
+    let cat1 = b.concat("route1", u1, s4); // 26x26x768
+
+    let (h5b, _det2) = head(&mut b, &mut idx, cat1, 256, "26");
+    let u2c = cba(&mut b, &mut idx, h5b, 1, 1, 128);
+    let u2 = b.upsample("upsample2", u2c, 2);
+    let cat2 = b.concat("route2", u2, s3); // 52x52x384
+
+    let (_h5c, _det3) = head(&mut b, &mut idx, cat2, 128, "52");
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_count_is_75() {
+        assert_eq!(yolov3(416).conv_layer_count(), 75);
+    }
+
+    #[test]
+    fn gop_matches_darknet() {
+        // Darknet reports 65.86 BFLOPs for YOLOv3@416 — Table V's figure.
+        let gop = yolov3(416).total_gop();
+        assert!((gop - 65.86).abs() < 2.0, "got {gop}");
+    }
+
+    #[test]
+    fn three_detection_scales() {
+        let g = yolov3(416);
+        let outs = g.outputs();
+        assert_eq!(outs.len(), 3);
+        let mut sizes: Vec<usize> = outs.iter().map(|&o| g.node(o).out_shape.h).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![13, 26, 52]);
+    }
+
+    #[test]
+    fn weights_about_62m() {
+        let m = yolov3(416).total_weight_bytes(1) as f64 / 1e6;
+        assert!((m - 61.9).abs() < 2.0, "got {m}M");
+    }
+
+    #[test]
+    fn residual_count() {
+        let g = yolov3(416);
+        let adds = g.nodes.iter().filter(|n| n.op.is_shortcut()).count();
+        assert_eq!(adds, 1 + 2 + 8 + 8 + 4);
+    }
+}

@@ -1,0 +1,125 @@
+//! Integration tests: cross-module flows (graph → analyzer → optimizer →
+//! alloc → ISA → funcsim) without the PJRT runtime (that path is covered
+//! by `pipeline_e2e.rs` and `examples/e2e_verify.rs`).
+
+use shortcutfusion::alloc::{allocate, layout};
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::funcsim::{execute, Params, Tensor};
+use shortcutfusion::graph::Shape;
+use shortcutfusion::isa::{decode, ReuseMode, WORDS_PER_INSTR};
+use shortcutfusion::optimizer::Optimizer;
+use shortcutfusion::serialize::{graph_from_json, graph_to_json};
+use shortcutfusion::testutil::Rng;
+use shortcutfusion::zoo;
+
+#[test]
+fn frozen_json_through_full_pipeline() {
+    // export → reimport → compile must equal compiling the original
+    let g = zoo::resnet50(224);
+    let g2 = graph_from_json(&graph_to_json(&g)).unwrap();
+    let cfg = AccelConfig::kcu1500_int8();
+    let r1 = compile_model(&g, &cfg);
+    let r2 = compile_model(&g2, &cfg);
+    assert_eq!(r1.timing.total_cycles, r2.timing.total_cycles);
+    assert_eq!(r1.evaluation.dram.total, r2.evaluation.dram.total);
+    assert_eq!(r1.stream.words, r2.stream.words);
+}
+
+#[test]
+fn instruction_stream_decodes_and_matches_groups() {
+    let cfg = AccelConfig::kcu1500_int8();
+    for name in ["yolov3", "efficientnet-b1"] {
+        let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+        let r = compile_model(&g, &cfg);
+        for (i, gr) in r.grouped.groups.iter().enumerate() {
+            let chunk: [u32; WORDS_PER_INSTR] = r.stream.words
+                [i * WORDS_PER_INSTR..(i + 1) * WORDS_PER_INSTR]
+                .try_into()
+                .unwrap();
+            let ins = decode(&chunk).unwrap();
+            assert_eq!(ins.group as usize, gr.id.0, "{name}");
+            assert_eq!(ins.out_c as usize, gr.out_shape.c, "{name}");
+            assert_eq!(ins.fused_eltwise, gr.shortcut_of.is_some(), "{name}");
+        }
+    }
+}
+
+#[test]
+fn optimized_policy_respects_block_boundaries() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let g = zoo::resnet152(256);
+    let gg = analyze(&g);
+    let opt = Optimizer::new(&gg, &cfg);
+    let best = opt.optimize();
+    for b in &opt.blocks {
+        let first = best.policy[b.start];
+        for gi in b.groups() {
+            assert_eq!(best.policy[gi], first, "block {}..{} mixes modes", b.start, b.end);
+        }
+    }
+}
+
+#[test]
+fn funcsim_runs_the_optimized_tinynet_stream() {
+    // full compile of TinyNet + funcsim execution over random params
+    let cfg = AccelConfig::kcu1500_int8();
+    let g = zoo::tinynet();
+    let r = compile_model(&g, &cfg);
+    let params = Params::random(&r.grouped, 11);
+    let mut rng = Rng::from_seed(12);
+    let input = Tensor::from_vec(zoo::TINYNET_INPUT, rng.i8_vec(zoo::TINYNET_INPUT.numel()));
+    let values = execute(&r.grouped, &r.stream, &params, &input).unwrap();
+    let fc = r.grouped.graph.find("fc").unwrap();
+    assert_eq!(values[fc.0].shape, Shape::vec(10));
+}
+
+#[test]
+fn dram_layout_consistent_with_placements() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let g = zoo::yolov3(416);
+    let gg = analyze(&g);
+    let policy = vec![ReuseMode::Row; gg.groups.len()];
+    let alloc = allocate(&gg, &policy, &cfg);
+    let lay = layout(&gg, &policy, &alloc, &cfg);
+    // every DRAM-resident fmap got a region
+    for (gi, a) in alloc.assigns.iter().enumerate().skip(1) {
+        let is_fmap = gg.groups[gi].out_shape.h * gg.groups[gi].out_shape.w > 1;
+        if is_fmap
+            && (a.out_loc == shortcutfusion::alloc::Loc::Dram || a.also_dram)
+            && gg.groups[gi].kind != shortcutfusion::analyzer::GroupKind::Input
+        {
+            assert!(lay.fmaps[gi].bytes > 0, "group {gi} lacks a DRAM region");
+        }
+    }
+    // regions sit after the weight arena
+    let w_end = lay.input.offset;
+    for f in lay.fmaps.iter().filter(|f| f.bytes > 0) {
+        assert!(f.offset >= w_end);
+    }
+}
+
+#[test]
+fn sixteen_bit_mode_consistency() {
+    // Table II config must flow end to end as well.
+    let cfg = AccelConfig::table2_int16();
+    let r = compile_model(&zoo::resnet152(224), &cfg);
+    assert!(r.evaluation.feasible);
+    assert!(r.latency_ms() > 10.0 && r.latency_ms() < 80.0, "{}", r.latency_ms());
+    // weights at 2 bytes
+    let wmb = r.grouped.graph.total_weight_bytes(2) as f64 / 1e6;
+    assert!((wmb - 120.0).abs() < 8.0, "{wmb}");
+}
+
+#[test]
+fn concat_only_and_plain_networks_compile() {
+    // plain (no shortcut at all) and concat-heavy nets must not trip the
+    // allocator or the segmenter
+    let cfg = AccelConfig::kcu1500_int8();
+    for name in ["vgg16-conv", "yolov2", "efficientdet-d0"] {
+        let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+        let r = compile_model(&g, &cfg);
+        assert!(r.latency_ms() > 0.0, "{name}");
+    }
+}

@@ -1,0 +1,99 @@
+//! End-to-end test over the real artifacts: funcsim vs the PJRT-executed
+//! golden model (the same check as `examples/e2e_verify.rs`, as a test).
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent
+//! so plain `cargo test` works in a fresh checkout).
+
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::funcsim::{execute, Params};
+use shortcutfusion::runtime::{load_expected_logits, load_input_tensor, Runtime};
+use shortcutfusion::zoo;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    for dir in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(dir);
+        if p.join("tinynet.hlo.txt").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[test]
+fn funcsim_matches_pjrt_bit_exactly() {
+    let Some(dir) = artifacts() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let cfg = AccelConfig::kcu1500_int8();
+    let r = compile_model(&zoo::tinynet(), &cfg);
+    let params = Params::from_file(&dir.join("tinynet_params.json")).unwrap();
+    let input = load_input_tensor(&dir.join("tinynet_input.json")).unwrap();
+
+    let values = execute(&r.grouped, &r.stream, &params, &input).unwrap();
+    let fc = r.grouped.graph.find("fc").unwrap();
+    let funcsim_logits = values[fc.0].data.clone();
+
+    let mut rt = Runtime::cpu().unwrap();
+    let id = rt.load(&dir.join("tinynet.hlo.txt")).unwrap();
+    let pjrt_logits = rt.run_i8(id, &[&input]).unwrap();
+
+    let expected = load_expected_logits(&dir.join("tinynet_expected.json")).unwrap();
+    assert_eq!(pjrt_logits, expected, "PJRT vs export-time expectation");
+    assert_eq!(funcsim_logits, pjrt_logits, "funcsim vs PJRT bit-exactness");
+}
+
+#[test]
+fn matmul_artifact_matches_naive_reference() {
+    let Some(dir) = artifacts() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    use shortcutfusion::funcsim::Tensor;
+    use shortcutfusion::graph::Shape;
+    use shortcutfusion::testutil::Rng;
+
+    let mut rt = Runtime::cpu().unwrap();
+    let id = rt.load(&dir.join("matmul64.hlo.txt")).unwrap();
+    let mut rng = Rng::from_seed(77);
+    let a = rng.i8_vec(64 * 64);
+    let b = rng.i8_vec(64 * 64);
+    let got = rt
+        .run_i8_to_i32(
+            id,
+            &[
+                &Tensor::from_vec(Shape::new(64, 64, 1), a.clone()),
+                &Tensor::from_vec(Shape::new(64, 64, 1), b.clone()),
+            ],
+        )
+        .unwrap();
+    for i in 0..64 {
+        for j in 0..64 {
+            let mut s = 0i32;
+            for k in 0..64 {
+                s += a[i * 64 + k] as i32 * b[k * 64 + j] as i32;
+            }
+            assert_eq!(got[i * 64 + j], s, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn runtime_compile_cache_hits() {
+    let Some(dir) = artifacts() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let mut rt = Runtime::cpu().unwrap();
+    let a = rt.load(&dir.join("matmul64.hlo.txt")).unwrap();
+    let b = rt.load(&dir.join("matmul64.hlo.txt")).unwrap();
+    assert_eq!(a, b, "same artifact must hit the compile cache");
+}
+
+#[test]
+fn runtime_reports_missing_artifact() {
+    let mut rt = Runtime::cpu().unwrap();
+    assert!(rt.load(std::path::Path::new("artifacts/nope.hlo.txt")).is_err());
+}

@@ -1,0 +1,241 @@
+//! Property-based invariants over randomized graphs and policies
+//! (in-repo `testutil::prop` driver — proptest is unavailable offline).
+
+use shortcutfusion::alloc::{allocate, Loc};
+use shortcutfusion::analyzer::{analyze, GroupKind};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::graph::{validate, Activation, Graph, GraphBuilder, PadMode, Shape};
+use shortcutfusion::isa::ReuseMode;
+use shortcutfusion::optimizer::{basic_blocks, dram_access, segments, Optimizer};
+use shortcutfusion::sim::simulate;
+use shortcutfusion::testutil::{forall, Rng};
+
+/// Generate a random but well-formed CNN: alternating conv stages with
+/// optional residual blocks, SE blocks, pools and a classifier.
+fn random_cnn(rng: &mut Rng) -> Graph {
+    let size = *rng.choose(&[32usize, 48, 64]);
+    let mut b = GraphBuilder::new("rand", Shape::new(size, size, 3));
+    let mut x = b.input_id();
+    let mut c = *rng.choose(&[8usize, 16]);
+    x = b.conv_bn_act("stem", x, 3, 1, c, Activation::Relu);
+    let stages = rng.range(1, 3);
+    let mut id = 0usize;
+    for s in 0..stages {
+        let blocks = rng.range(1, 3);
+        for _ in 0..blocks {
+            id += 1;
+            if rng.coin() {
+                // residual block
+                let base = format!("res{id}");
+                let c1 = b.conv_bn_act(&format!("{base}/a"), x, 3, 1, c, Activation::Relu);
+                let c2 = b.conv(&format!("{base}/b"), c1, 3, 1, c, PadMode::Same);
+                let bn = b.batchnorm(&format!("{base}/b/bn"), c2);
+                let add = b.add(&format!("{base}/add"), bn, x);
+                x = b.activation(&format!("{base}/relu"), add, Activation::Relu);
+            } else if rng.coin() {
+                // SE block on a fresh conv
+                let base = format!("se{id}");
+                let cv = b.conv_bn_act(&format!("{base}/conv"), x, 3, 1, c, Activation::Swish);
+                let g = b.gap(&format!("{base}/gap"), cv);
+                let f1 = b.fc(&format!("{base}/fc1"), g, (c / 4).max(1));
+                let a1 = b.activation(&format!("{base}/sw"), f1, Activation::Swish);
+                let f2 = b.fc(&format!("{base}/fc2"), a1, c);
+                let a2 = b.activation(&format!("{base}/sig"), f2, Activation::Sigmoid);
+                x = b.scale(&format!("{base}/scale"), cv, a2);
+            } else {
+                x = b.conv_bn_act(&format!("conv{id}"), x, *rng.choose(&[1usize, 3]), 1, c, Activation::Relu);
+            }
+        }
+        if s + 1 < stages {
+            c *= 2;
+            id += 1;
+            x = b.conv_bn_act(&format!("down{id}"), x, 3, 2, c, Activation::Relu);
+        }
+    }
+    let g = b.gap("gap", x);
+    let _ = b.fc("fc", g, 10);
+    b.finish()
+}
+
+#[test]
+fn random_graphs_validate_and_analyze() {
+    forall("random CNNs are well-formed", 60, |rng| {
+        let g = random_cnn(rng);
+        validate(&g).unwrap();
+        let gg = analyze(&g);
+        // grouping conserves nodes and MACs
+        let n: usize = gg.groups.iter().map(|gr| gr.nodes.len()).sum();
+        assert_eq!(n, g.nodes.len());
+        let macs: u64 = gg.groups.iter().map(|gr| gr.macs(&gg.graph)).sum();
+        assert_eq!(macs, g.total_macs());
+    });
+}
+
+#[test]
+fn allocator_never_aliases_live_buffers() {
+    forall("no two live tensors share a physical buffer", 40, |rng| {
+        let g = random_cnn(rng);
+        let gg = analyze(&g);
+        let cfg = AccelConfig::kcu1500_int8();
+        let policy: Vec<ReuseMode> = (0..gg.groups.len())
+            .map(|_| if rng.coin() { ReuseMode::Frame } else { ReuseMode::Row })
+            .collect();
+        let alloc = allocate(&gg, &policy, &cfg);
+        // replay liveness: at each step, on-chip tensors in same buffer
+        let consumers = gg.consumers();
+        let mut owner: [Option<usize>; 3] = [None; 3];
+        let mut last_use: Vec<usize> = (0..gg.groups.len())
+            .map(|gi| consumers[gi].iter().map(|c| c.0).max().unwrap_or(gi))
+            .collect();
+        for gi in 0..gg.groups.len() {
+            // free dead
+            for b in owner.iter_mut() {
+                if let Some(o) = *b {
+                    if last_use[o] < gi {
+                        *b = None;
+                    }
+                }
+            }
+            if let Loc::Buf(bu) = alloc.assigns[gi].out_loc {
+                let b = bu as usize;
+                if let Some(prev) = owner[b] {
+                    // allowed only if prev is dead by now or was evicted
+                    assert!(
+                        last_use[prev] <= gi,
+                        "buffer {b} reused while group {prev} still live at {gi}"
+                    );
+                }
+                owner[b] = Some(gi);
+            }
+            // evicted tensors moved to DRAM — remove from owners
+            let _ = &mut last_use;
+        }
+    });
+}
+
+#[test]
+fn dram_total_is_bounded_by_baseline_plus_spills() {
+    forall("dram(policy) <= baseline + spills", 40, |rng| {
+        let g = random_cnn(rng);
+        let gg = analyze(&g);
+        let cfg = AccelConfig::kcu1500_int8();
+        let policy: Vec<ReuseMode> = (0..gg.groups.len())
+            .map(|_| if rng.coin() { ReuseMode::Frame } else { ReuseMode::Row })
+            .collect();
+        let alloc = allocate(&gg, &policy, &cfg);
+        let d = dram_access(&gg, &policy, &alloc, &cfg);
+        assert!(d.total <= d.baseline_once + d.spill_bytes);
+        assert!(d.weight_bytes == gg.graph.total_weight_bytes(cfg.qw as u64));
+    });
+}
+
+#[test]
+fn more_frame_blocks_never_increase_fm_traffic() {
+    // monotonicity along a single-segment sweep: moving the cut later
+    // (more row blocks) cannot reduce feature-map DRAM traffic
+    forall("fm traffic monotone in cut", 25, |rng| {
+        let g = random_cnn(rng);
+        let gg = analyze(&g);
+        let cfg = AccelConfig::kcu1500_int8();
+        let opt = Optimizer::new(&gg, &cfg);
+        if opt.segs.len() != 1 {
+            return; // only meaningful single-segment
+        }
+        let mut prev = None;
+        for cut in 0..=opt.segs[0].len {
+            let e = opt.evaluate(&[cut]);
+            if let Some(p) = prev {
+                assert!(
+                    e.dram.fm_bytes + 1 >= p,
+                    "cut {cut}: fm dropped from {p} to {}",
+                    e.dram.fm_bytes
+                );
+            }
+            prev = Some(e.dram.fm_bytes);
+        }
+    });
+}
+
+#[test]
+fn latency_is_finite_positive_for_random_policies() {
+    forall("sim latency sane", 40, |rng| {
+        let g = random_cnn(rng);
+        let gg = analyze(&g);
+        let cfg = AccelConfig::kcu1500_int8();
+        let policy: Vec<ReuseMode> = (0..gg.groups.len())
+            .map(|_| if rng.coin() { ReuseMode::Frame } else { ReuseMode::Row })
+            .collect();
+        let alloc = allocate(&gg, &policy, &cfg);
+        let t = simulate(&gg, &policy, &alloc, &cfg);
+        assert!(t.latency_ms.is_finite() && t.latency_ms > 0.0);
+        assert!(t.mac_efficiency > 0.0 && t.mac_efficiency <= 1.0);
+    });
+}
+
+#[test]
+fn optimizer_beats_or_matches_both_corners() {
+    forall("optimum <= min(all-row, all-frame) when feasible", 20, |rng| {
+        let g = random_cnn(rng);
+        let gg = analyze(&g);
+        let cfg = AccelConfig::kcu1500_int8();
+        let opt = Optimizer::new(&gg, &cfg);
+        let best = opt.optimize();
+        if !best.feasible {
+            return;
+        }
+        for corner in [
+            opt.segs.iter().map(|s| match s.dir {
+                shortcutfusion::optimizer::Direction::Dec => s.len,
+                shortcutfusion::optimizer::Direction::Inc => 0,
+            }).collect::<Vec<_>>(),
+            opt.segs.iter().map(|s| match s.dir {
+                shortcutfusion::optimizer::Direction::Dec => 0,
+                shortcutfusion::optimizer::Direction::Inc => s.len,
+            }).collect::<Vec<_>>(),
+        ] {
+            let e = opt.evaluate(&corner);
+            if e.feasible {
+                assert!(
+                    best.latency_ms <= e.latency_ms * 1.0001,
+                    "optimum {} > corner {}",
+                    best.latency_ms,
+                    e.latency_ms
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn blocks_and_segments_tile_for_random_graphs() {
+    forall("blocks/segments tile", 40, |rng| {
+        let g = random_cnn(rng);
+        let gg = analyze(&g);
+        let blocks = basic_blocks(&gg);
+        let mut next = 1;
+        for b in &blocks {
+            assert_eq!(b.start, next);
+            next = b.end + 1;
+        }
+        assert_eq!(next, gg.groups.len());
+        let segs = segments(&gg, &blocks);
+        let total: usize = segs.iter().map(|s| s.len).sum();
+        assert_eq!(total, blocks.len());
+    });
+}
+
+#[test]
+fn se_groups_always_fit_three_buffers() {
+    forall("SE blocks never spill", 30, |rng| {
+        let g = random_cnn(rng);
+        let gg = analyze(&g);
+        let cfg = AccelConfig::kcu1500_int8();
+        let policy = vec![ReuseMode::Frame; gg.groups.len()];
+        let alloc = allocate(&gg, &policy, &cfg);
+        // linear chains with residual/SE blocks must fit {0,1,2}
+        let has_concat = gg.groups.iter().any(|gr| gr.kind == GroupKind::Concat);
+        if !has_concat {
+            assert_eq!(alloc.spill_events, 0, "spilled a plain residual/SE net");
+        }
+    });
+}
