@@ -8,7 +8,7 @@ use shortcutfusion::baselines::gpu_model::{
 };
 use shortcutfusion::bench::{report_timing, time, Table};
 use shortcutfusion::config::AccelConfig;
-use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::compiler::Compiler;
 use shortcutfusion::zoo;
 
 fn main() {
@@ -38,18 +38,18 @@ fn main() {
     let mut speedup_256 = 0.0;
     for &s in &sizes {
         let graph = zoo::efficientnet_b1(s);
-        let gg = analyze(&graph);
-        let ours = compile_model(&graph, &cfg);
-        let g2080 = estimate(&gg, &RTX_2080_TI);
+        let ours = Compiler::new(cfg.clone()).compile(&graph).unwrap();
+        let gg = &ours.grouped;
+        let g2080 = estimate(gg, &RTX_2080_TI);
         let ratio = g2080.latency_ms / ours.latency_ms();
         if s == 256 {
             speedup_256 = ratio;
         }
         f18.row(&[
             s.to_string(),
-            format!("{:.1}", estimate(&gg, &TITAN_XP).latency_ms),
+            format!("{:.1}", estimate(gg, &TITAN_XP).latency_ms),
             format!("{:.1}", g2080.latency_ms),
-            format!("{:.1}", estimate(&gg, &RTX_3090).latency_ms),
+            format!("{:.1}", estimate(gg, &RTX_3090).latency_ms),
             format!("{:.2}", ours.latency_ms()),
             format!("x{:.2}", ratio),
         ]);
@@ -68,9 +68,8 @@ fn main() {
     );
     for &s in &sizes[1..] {
         let graph = zoo::efficientnet_b1(s);
-        let gg = analyze(&graph);
-        let ours = compile_model(&graph, &cfg);
-        let gpu = estimate(&gg, &RTX_2080_TI);
+        let ours = Compiler::new(cfg.clone()).compile(&graph).unwrap();
+        let gpu = estimate(&ours.grouped, &RTX_2080_TI);
         fp.row(&[
             s.to_string(),
             format!("{:.0}", gpu.power_w),

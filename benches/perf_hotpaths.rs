@@ -1,8 +1,10 @@
-//! §Perf harness: the three L3 hot paths — funcsim convolution, the
-//! optimizer's per-candidate evaluation, and the multi-segment descent.
+//! §Perf harness: the L3 hot paths — funcsim convolution, the
+//! optimizer's per-candidate evaluation, the multi-segment descent, and
+//! the parallel compile `Session` vs the serial baseline.
 
 use shortcutfusion::analyzer::analyze;
 use shortcutfusion::bench::{report_timing, time};
+use shortcutfusion::compiler::{Session, SweepJob};
 use shortcutfusion::config::AccelConfig;
 use shortcutfusion::funcsim::{Executor, Params, Tensor};
 use shortcutfusion::graph::Shape;
@@ -49,4 +51,48 @@ fn main() {
     println!("yolov3 space = {:.2e}", opt5.space());
     let t5 = time(3, || opt5.optimize());
     report_timing("optimizer exhaustive yolov3", &t5);
+
+    // 6. Session sweep: the whole zoo × 3 configs, serial vs parallel.
+    //    A fresh Session per run keeps every compile cold, so this times
+    //    the thread scaling, not the memoization.
+    let mut cfg_small = cfg.clone();
+    cfg_small.name = "small".into();
+    cfg_small.sram_budget = 4_000_000;
+    let mut cfg_large = cfg.clone();
+    cfg_large.name = "large".into();
+    cfg_large.sram_budget = 14_000_000;
+    cfg_large.bram18k_total = 6800;
+    let cfgs = [cfg.clone(), cfg_small, cfg_large];
+    let jobs: Vec<SweepJob> = zoo::MODEL_NAMES
+        .iter()
+        .flat_map(|&m| cfgs.iter().map(move |c| SweepJob::zoo_default(m, c)))
+        .collect();
+    println!("sweep grid: {} jobs (zoo x {} configs)", jobs.len(), cfgs.len());
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    let t_serial = time(1, || {
+        Session::new().run_jobs(&jobs, 1).iter().filter(|r| r.is_ok()).count()
+    });
+    report_timing("session sweep serial (1 thread)", &t_serial);
+
+    let t_par = time(1, || {
+        Session::new().run_jobs(&jobs, threads).iter().filter(|r| r.is_ok()).count()
+    });
+    report_timing(&format!("session sweep parallel ({threads} threads)"), &t_par);
+    println!(
+        "session sweep speedup: x{:.2} on {} threads",
+        t_serial.median_ms / t_par.median_ms,
+        threads
+    );
+
+    // 7. Session memoization: the same grid again on a warm session.
+    let warm = Session::new();
+    let _ = warm.run_jobs(&jobs, threads);
+    let t_hot = time(3, || warm.run_jobs(&jobs, threads).len());
+    report_timing("session sweep warm (all cache hits)", &t_hot);
+    let stats = warm.stats();
+    println!(
+        "warm session: {} report hits / {} misses, {} analysis hits",
+        stats.report_hits, stats.report_misses, stats.analysis_hits
+    );
 }

@@ -2,23 +2,23 @@
 //! latency / GOPS / DSP efficiency / off-chip feature-map traffic under a
 //! ShortcutMining-class BRAM budget.
 
-use shortcutfusion::analyzer::analyze;
-use shortcutfusion::baselines::shortcut_mining::{
-    shortcut_mining_fm_traffic, shortcut_mining_weight_traffic,
-};
 use shortcutfusion::bench::{report_timing, time, Table};
+use shortcutfusion::compiler::{Compiler, ShortcutMiningStrategy};
 use shortcutfusion::config::AccelConfig;
-use shortcutfusion::coordinator::compile_model;
 use shortcutfusion::zoo;
 
 fn main() {
     let cfg = AccelConfig::table2_int16();
     let graph = zoo::resnet152(224);
-    let gg = analyze(&graph);
-    let r = compile_model(&graph, &cfg);
+    let r = Compiler::new(cfg.clone()).compile(&graph).unwrap();
 
-    let sm_fm = shortcut_mining_fm_traffic(&gg, &cfg) as f64 / 1e6;
-    let sm_w = shortcut_mining_weight_traffic(&gg, &cfg) as f64 / 1e6;
+    // The HPCA'19 baseline runs through the same staged pipeline via its
+    // ReuseStrategy port — one code path for both Table II columns.
+    let sm = Compiler::with_strategy(cfg.clone(), std::sync::Arc::new(ShortcutMiningStrategy))
+        .compile(&graph)
+        .unwrap();
+    let sm_fm = sm.offchip_fm_mb();
+    let sm_w = sm.evaluation.dram.weight_bytes as f64 / 1e6;
 
     let mut t = Table::new(
         "Table II — ResNet152@224, 16-bit, ShortcutMining-class BRAM budget",
@@ -77,6 +77,6 @@ fn main() {
         sm_w
     );
 
-    let timing = time(3, || compile_model(&graph, &cfg));
+    let timing = time(3, || Compiler::new(cfg.clone()).compile(&graph).unwrap());
     report_timing("table2 full pipeline (resnet152@224 int16)", &timing);
 }

@@ -4,7 +4,7 @@
 
 use shortcutfusion::bench::{report_timing, time, Table};
 use shortcutfusion::config::AccelConfig;
-use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::compiler::Compiler;
 use shortcutfusion::zoo;
 
 struct PaperRow {
@@ -36,7 +36,7 @@ fn main() {
     );
     for p in PAPER {
         let graph = zoo::by_name(p.model, p.input).unwrap();
-        let r = compile_model(&graph, &cfg);
+        let r = Compiler::new(cfg.clone()).compile(&graph).unwrap();
         t.row(&[
             format!("{}@{}", p.model, p.input),
             format!("{:.2} -> {:.2}", p.gop, graph.total_gop()),
@@ -52,6 +52,6 @@ fn main() {
     println!("\npaper claim: total DRAM reduction spans 47.8–84.8 % across the six CNNs");
 
     let graph = zoo::resnet50(256);
-    let timing = time(3, || compile_model(&graph, &cfg));
+    let timing = time(3, || Compiler::new(cfg.clone()).compile(&graph).unwrap());
     report_timing("table5 pipeline (resnet50@256)", &timing);
 }

@@ -5,13 +5,13 @@
 use shortcutfusion::baselines::frameworks::TABLE6_FRAMEWORKS;
 use shortcutfusion::bench::{report_timing, time, Table};
 use shortcutfusion::config::AccelConfig;
-use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::compiler::Compiler;
 use shortcutfusion::zoo;
 
 fn main() {
     let cfg = AccelConfig::kcu1500_int8();
     let graph = zoo::resnet50(256);
-    let r = compile_model(&graph, &cfg);
+    let r = Compiler::new(cfg.clone()).compile(&graph).unwrap();
 
     let mut t = Table::new(
         "Table VI — end-to-end frameworks, ResNet50 inference",
@@ -53,6 +53,6 @@ fn main() {
         mls.sram_mb / r.sram_mb()
     );
 
-    let timing = time(3, || compile_model(&graph, &cfg));
+    let timing = time(3, || Compiler::new(cfg.clone()).compile(&graph).unwrap());
     report_timing("table6 pipeline (resnet50@256)", &timing);
 }

@@ -3,7 +3,7 @@
 
 use shortcutfusion::bench::{report_timing, time, Table};
 use shortcutfusion::config::AccelConfig;
-use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::compiler::Compiler;
 use shortcutfusion::zoo;
 
 struct PaperRow {
@@ -31,7 +31,7 @@ fn main() {
     );
     for p in PAPER {
         let graph = zoo::efficientnet_b1(p.input);
-        let r = compile_model(&graph, &cfg);
+        let r = Compiler::new(cfg.clone()).compile(&graph).unwrap();
         t.row(&[
             p.input.to_string(),
             format!("{:.0} -> {:.0}", p.gops, r.gops()),
@@ -47,6 +47,6 @@ fn main() {
     println!("\nweights read from DRAM exactly once at every resolution (eq. 10 constraint)");
 
     let graph = zoo::efficientnet_b1(512);
-    let timing = time(3, || compile_model(&graph, &cfg));
+    let timing = time(3, || Compiler::new(cfg.clone()).compile(&graph).unwrap());
     report_timing("table7 pipeline (efficientnet-b1@512)", &timing);
 }

@@ -4,8 +4,10 @@
 //! parallelisms (i.e., MAC array size) of the accelerator and the
 //! switching points of the reuse schemes based on the optimization."
 //! This driver sweeps cut-points for one CNN across *three* accelerator
-//! configurations (small / KCU1500 / large) and reports how the optimal
-//! cut and the feasible region move with the SRAM budget.
+//! configurations (small / KCU1500 / large) through a parallel
+//! [`Session`] — the fusion analysis runs once and is shared across all
+//! targets — and reports how the optimal cut and the feasible region
+//! move with the SRAM budget.
 //!
 //! ```text
 //! cargo run --release --example cutpoint_sweep [model] [input]
@@ -13,21 +15,22 @@
 
 use shortcutfusion::analyzer::analyze;
 use shortcutfusion::bench::Table;
+use shortcutfusion::compiler::{CompileError, Session, SweepJob};
 use shortcutfusion::config::AccelConfig;
 use shortcutfusion::optimizer::Optimizer;
 use shortcutfusion::zoo;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> shortcutfusion::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let model = args.first().map(String::as_str).unwrap_or("yolov3");
     let input: usize = args
         .get(1)
         .map(|s| s.parse())
-        .transpose()?
+        .transpose()
+        .map_err(|_| CompileError::config("input must be a number"))?
         .unwrap_or_else(|| zoo::default_input(model));
     let graph = zoo::by_name(model, input)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
-    let gg = analyze(&graph);
+        .ok_or_else(|| CompileError::UnknownModel(model.to_string()))?;
 
     // three hypothetical targets
     let mut small = AccelConfig::kcu1500_int8();
@@ -40,16 +43,23 @@ fn main() -> anyhow::Result<()> {
     large.bram18k_total = 6800;
     large.sram_budget = 14_000_000;
 
+    let session = Session::new();
+    let jobs: Vec<SweepJob> = [&small, &kcu, &large]
+        .iter()
+        .map(|cfg| SweepJob { model: model.to_string(), input, cfg: (*cfg).clone() })
+        .collect();
+    let results = session.run_jobs(&jobs, jobs.len());
+
     let mut t = Table::new(
         &format!("{model}@{input}: optimum across accelerator targets"),
         &["target", "SRAM budget MB", "cuts", "latency ms", "DRAM MB", "SRAM MB", "feasible"],
     );
-    for cfg in [&small, &kcu, &large] {
-        let opt = Optimizer::new(&gg, cfg);
-        let best = opt.optimize();
+    for (job, r) in jobs.iter().zip(results) {
+        let r = r?;
+        let best = &r.evaluation;
         t.row(&[
-            cfg.name.clone(),
-            format!("{:.1}", cfg.sram_budget as f64 / 1e6),
+            job.cfg.name.clone(),
+            format!("{:.1}", job.cfg.sram_budget as f64 / 1e6),
             format!("{:?}", best.cuts.cuts),
             format!("{:.3}", best.latency_ms),
             format!("{:.2}", best.dram.total as f64 / 1e6),
@@ -58,8 +68,16 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    let stats = session.stats();
+    println!(
+        "(session: {} compile misses, fusion analysis shared {} of {} times)",
+        stats.report_misses,
+        stats.analysis_hits,
+        stats.analysis_hits + stats.analysis_misses
+    );
 
     // detailed sweep on the main target
+    let gg = analyze(&graph);
     let opt = Optimizer::new(&gg, &kcu);
     let mut s = Table::new(
         &format!("{model}@{input}: first-segment sweep on {}", kcu.name),

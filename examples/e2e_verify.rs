@@ -1,8 +1,9 @@
 //! END-TO-END verification driver (the Fig. 4 hardware-verification loop).
 //!
 //! Proves all three layers compose:
-//!  1. L3 compiles TinyNet-SE: analyze → reuse-aware optimize → static
-//!     memory allocation → 11-word instruction stream;
+//!  1. L3 compiles TinyNet-SE through the staged API: analyze →
+//!     reuse-aware optimize → static memory allocation → 11-word
+//!     instruction stream;
 //!  2. the functional simulator executes that instruction stream over the
 //!     quantized parameters exported by the build-time python;
 //!  3. the rust PJRT runtime loads the AOT HLO artifact (L2 JAX model
@@ -10,115 +11,101 @@
 //!  4. the two logits vectors must match **bit-exactly** (and both must
 //!     match the expectation recorded at export time).
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_verify`
+//! Run: `make artifacts && cargo run --release --features pjrt --example e2e_verify`
+//! (without the `pjrt` feature, step 3 is skipped with a notice).
 
-use anyhow::{bail, Context, Result};
-use shortcutfusion::alloc::{allocate, layout};
-use shortcutfusion::analyzer::analyze;
+use shortcutfusion::compiler::{CompileError, Compiler};
 use shortcutfusion::config::AccelConfig;
 use shortcutfusion::funcsim::{execute, Params};
-use shortcutfusion::isa::{lower, MemAssign, MemLoc};
-use shortcutfusion::optimizer::Optimizer;
 use shortcutfusion::runtime::{artifacts_dir, load_expected_logits, load_input_tensor, Runtime};
-use shortcutfusion::sim::simulate;
 use shortcutfusion::zoo;
+use shortcutfusion::Result;
 
 fn main() -> Result<()> {
     let dir = artifacts_dir();
     println!("== ShortcutFusion end-to-end verification ==");
     println!("artifacts: {}", dir.display());
 
-    // ---- L3: compile the network ---------------------------------------
-    let graph = zoo::tinynet();
-    let gg = analyze(&graph);
+    // ---- L3: compile the network through the staged API -----------------
     let cfg = AccelConfig::kcu1500_int8();
-    let opt = Optimizer::new(&gg, &cfg);
-    let best = opt.optimize();
+    let compiler = Compiler::new(cfg);
+    let analyzed = compiler.analyze(&zoo::tinynet())?;
+    let optimized = compiler.optimize(&analyzed)?;
     println!(
         "compiled {}: {} nodes -> {} groups, cuts {:?}, policy {} ",
-        graph.name,
-        gg.graph.nodes.len(),
-        gg.groups.len(),
-        best.cuts.cuts,
-        if best.feasible { "feasible" } else { "INFEASIBLE" }
+        analyzed.model,
+        analyzed.node_count(),
+        analyzed.group_count(),
+        optimized.evaluation.cuts.cuts,
+        if optimized.evaluation.feasible { "feasible" } else { "INFEASIBLE" }
     );
-    let alloc = allocate(&gg, &best.policy, &cfg);
-    let dram_layout = layout(&gg, &best.policy, &alloc, &cfg);
-    let assigns: Vec<MemAssign> = gg
-        .groups
-        .iter()
-        .enumerate()
-        .map(|(gi, gr)| MemAssign {
-            reuse: best.policy[gi],
-            in_loc: loc_of(&alloc.assigns[gi].in_loc, &dram_layout, gi),
-            out_loc: loc_of(&alloc.assigns[gi].out_loc, &dram_layout, gi),
-            aux_loc: alloc.assigns[gi].aux_loc.as_ref().map(|l| loc_of(l, &dram_layout, gi)),
-            weight_addr: dram_layout.weights[gi].offset,
-            weight_bytes: gr.weight_bytes(&gg.graph, cfg.qw as u64) as u32,
-            quant_shift: 0,
-        })
-        .collect();
-    let stream = lower(&gg, &assigns);
+    let lowered = compiler.lower(&compiler.allocate(&optimized)?)?;
     println!(
         "instruction stream: {} instructions, {} bytes; DRAM arena {} KB",
-        stream.len(),
-        stream.byte_size(),
-        dram_layout.footprint() / 1024
+        lowered.stream.len(),
+        lowered.stream.byte_size(),
+        lowered.dram_layout.footprint() / 1024
     );
-    let timing = simulate(&gg, &best.policy, &alloc, &cfg);
+    let simulated = compiler.simulate(&lowered)?;
     println!(
         "timing sim: {:.3} ms, {:.1} GOPS ({:.1}% MAC efficiency); DRAM {:.2} MB (baseline {:.2} MB, -{:.1}%)",
-        timing.latency_ms,
-        timing.gops,
-        100.0 * timing.mac_efficiency,
-        best.dram.total as f64 / 1e6,
-        best.dram.baseline_once as f64 / 1e6,
-        best.dram.reduction_pct()
+        simulated.timing.latency_ms,
+        simulated.timing.gops,
+        100.0 * simulated.timing.mac_efficiency,
+        simulated.evaluation.dram.total as f64 / 1e6,
+        simulated.evaluation.dram.baseline_once as f64 / 1e6,
+        simulated.evaluation.dram.reduction_pct()
     );
 
     // ---- funcsim over python-exported parameters ------------------------
-    let params = Params::from_file(&dir.join("tinynet_params.json"))
-        .context("tinynet_params.json (run `make artifacts`)")?;
+    let params = Params::from_file(&dir.join("tinynet_params.json")).map_err(|e| {
+        CompileError::params(format!("tinynet_params.json (run `make artifacts`): {e}"))
+    })?;
     let input = load_input_tensor(&dir.join("tinynet_input.json"))?;
-    let values = execute(&gg, &stream, &params, &input)?;
-    let fc = gg.graph.find("fc").expect("fc node");
+    let values = execute(&simulated.grouped, &simulated.stream, &params, &input)?;
+    let fc = simulated.grouped.graph.find("fc").expect("fc node");
     let funcsim_logits: Vec<i8> = values[fc.0].data.clone();
     println!("funcsim logits:  {funcsim_logits:?}");
 
+    let expected = load_expected_logits(&dir.join("tinynet_expected.json"))?;
+    println!("export expected: {expected:?}");
+
     // ---- PJRT: run the AOT golden model ---------------------------------
-    let mut rt = Runtime::cpu()?;
+    let mut rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        // Only the feature-off stub is skippable; a real backend that
+        // fails to initialize is an error.
+        Err(e @ CompileError::Unsupported(_)) => {
+            println!("SKIP PJRT half ({e})");
+            if funcsim_logits != expected {
+                return Err(CompileError::Exec(format!(
+                    "BIT-EXACTNESS FAILURE: funcsim {funcsim_logits:?} != expected {expected:?}"
+                )));
+            }
+            println!(
+                "OK: funcsim == export-time expectation, bit-exact ({} logits)",
+                funcsim_logits.len()
+            );
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
     println!("PJRT platform: {}", rt.platform());
     let model = rt.load(&dir.join("tinynet.hlo.txt"))?;
     let pjrt_logits = rt.run_i8(model, &[&input])?;
     println!("PJRT logits:     {pjrt_logits:?}");
 
-    let expected = load_expected_logits(&dir.join("tinynet_expected.json"))?;
-    println!("export expected: {expected:?}");
-
     // ---- the verdict -----------------------------------------------------
     if pjrt_logits != expected {
-        bail!("PJRT output diverges from export-time expectation — artifact mismatch");
+        return Err(CompileError::Exec(
+            "PJRT output diverges from export-time expectation — artifact mismatch".into(),
+        ));
     }
     if funcsim_logits != pjrt_logits {
-        bail!(
-            "BIT-EXACTNESS FAILURE: funcsim {:?} != PJRT {:?}",
-            funcsim_logits,
-            pjrt_logits
-        );
+        return Err(CompileError::Exec(format!(
+            "BIT-EXACTNESS FAILURE: funcsim {funcsim_logits:?} != PJRT {pjrt_logits:?}"
+        )));
     }
     println!("OK: funcsim == PJRT golden model, bit-exact ({} logits)", pjrt_logits.len());
     Ok(())
-}
-
-fn loc_of(
-    l: &shortcutfusion::alloc::Loc,
-    lay: &shortcutfusion::alloc::OffchipLayout,
-    gi: usize,
-) -> MemLoc {
-    match l {
-        shortcutfusion::alloc::Loc::Buf(b) => MemLoc::Buf(*b),
-        // aux vectors ride in the small SRAM; encode as buffer 0 offset 0
-        shortcutfusion::alloc::Loc::Aux => MemLoc::Buf(0),
-        shortcutfusion::alloc::Loc::Dram => MemLoc::Dram(lay.fmaps[gi].offset),
-    }
 }

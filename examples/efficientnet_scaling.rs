@@ -1,20 +1,21 @@
 //! Domain example: the §V-C scalability study — EfficientNet-B1 (and
 //! MobileNetV3) across input resolutions, with the GPU comparison of
-//! Fig. 18 and the power breakdown of Table VII.
+//! Fig. 18 and the power breakdown of Table VII. The resolution grid is
+//! compiled in parallel through a [`Session`].
 //!
 //! ```text
 //! cargo run --release --example efficientnet_scaling
 //! ```
 
-use shortcutfusion::analyzer::analyze;
 use shortcutfusion::baselines::gpu_model::{estimate, RTX_2080_TI};
 use shortcutfusion::bench::Table;
+use shortcutfusion::compiler::{Session, SweepJob};
 use shortcutfusion::config::AccelConfig;
-use shortcutfusion::coordinator::compile_model;
-use shortcutfusion::zoo;
 
 fn main() {
     let cfg = AccelConfig::kcu1500_int8();
+    let inputs = [224usize, 256, 384, 512, 768];
+    let session = Session::new();
     for model in ["efficientnet-b1", "mobilenetv3-large"] {
         let mut t = Table::new(
             &format!("{model}: resolution scaling on {}", cfg.name),
@@ -33,14 +34,16 @@ fn main() {
                 "speedup",
             ],
         );
-        for input in [224usize, 256, 384, 512, 768] {
-            let graph = zoo::by_name(model, input).unwrap();
-            let gg = analyze(&graph);
-            let r = compile_model(&graph, &cfg);
-            let gpu = estimate(&gg, &RTX_2080_TI);
+        let jobs: Vec<SweepJob> = inputs
+            .iter()
+            .map(|&input| SweepJob { model: model.to_string(), input, cfg: cfg.clone() })
+            .collect();
+        for (input, r) in inputs.iter().zip(session.run_jobs(&jobs, jobs.len())) {
+            let r = r.unwrap();
+            let gpu = estimate(&r.grouped, &RTX_2080_TI);
             t.row(&[
                 input.to_string(),
-                format!("{:.2}", graph.total_gop()),
+                format!("{:.2}", r.grouped.graph.total_gop()),
                 format!("{:.2}", r.latency_ms()),
                 format!("{:.1}", r.fps()),
                 format!("{:.0}", r.gops()),

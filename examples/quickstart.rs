@@ -3,28 +3,29 @@
 //! ```text
 //! cargo run --release --example quickstart [model] [input]
 //! ```
-//! Walks the whole Fig.-4 pipeline — parse/build → analyzer fusion →
-//! reuse-aware cut-point optimization → static 3-buffer allocation →
-//! 11-word instruction stream → cycle-accurate timing simulation →
-//! power estimate — and shows the per-stage artifacts.
+//! Walks the whole Fig.-4 pipeline through the staged API — parse/build →
+//! analyzer fusion → reuse-aware cut-point optimization → static 3-buffer
+//! allocation → 11-word instruction stream → cycle-accurate timing
+//! simulation → power estimate — and shows the per-stage artifacts.
 
 use shortcutfusion::bench::Table;
+use shortcutfusion::compiler::{CompileError, Compiler};
 use shortcutfusion::config::AccelConfig;
-use shortcutfusion::coordinator::compile_model;
 use shortcutfusion::isa::ReuseMode;
 use shortcutfusion::zoo;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> shortcutfusion::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let model = args.first().map(String::as_str).unwrap_or("resnet50");
     let input: usize = args
         .get(1)
         .map(|s| s.parse())
-        .transpose()?
+        .transpose()
+        .map_err(|_| CompileError::config("input must be a number"))?
         .unwrap_or_else(|| zoo::default_input(model));
 
     let graph = zoo::by_name(model, input)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}; try one of {:?}", zoo::MODEL_NAMES))?;
+        .ok_or_else(|| CompileError::UnknownModel(model.to_string()))?;
     let cfg = AccelConfig::kcu1500_int8();
 
     println!("ShortcutFusion quickstart — {model}@{input} on {}", cfg.name);
@@ -36,20 +37,26 @@ fn main() -> anyhow::Result<()> {
         graph.total_weight_bytes(1) as f64 / 1e6
     );
 
-    let r = compile_model(&graph, &cfg);
+    // Each stage is an owned artifact — inspect them as they appear.
+    let compiler = Compiler::new(cfg);
+    let analyzed = compiler.analyze(&graph)?;
     println!(
         "analyzer: {} groups ({} with fused shortcut, {} with fused SE squeeze)",
-        r.grouped.groups.len(),
-        r.grouped.groups.iter().filter(|g| g.shortcut_of.is_some()).count(),
-        r.grouped.groups.iter().filter(|g| g.se_squeeze).count(),
+        analyzed.group_count(),
+        analyzed.grouped.groups.iter().filter(|g| g.shortcut_of.is_some()).count(),
+        analyzed.grouped.groups.iter().filter(|g| g.se_squeeze).count(),
     );
+    let optimized = compiler.optimize(&analyzed)?;
     println!(
         "optimizer: cuts {:?} -> {} row-reuse / {} frame-reuse groups ({})",
-        r.evaluation.cuts.cuts,
-        r.row_groups,
-        r.frame_groups,
-        if r.evaluation.feasible { "feasible" } else { "INFEASIBLE" }
+        optimized.evaluation.cuts.cuts,
+        optimized.row_groups(),
+        optimized.frame_groups(),
+        if optimized.evaluation.feasible { "feasible" } else { "INFEASIBLE" }
     );
+    let allocated = compiler.allocate(&optimized)?;
+    let lowered = compiler.lower(&allocated)?;
+    let r = compiler.simulate(&lowered)?.into_report();
 
     let mut t = Table::new("compile report", &["metric", "value"]);
     t.row(&["latency".into(), format!("{:.3} ms ({:.1} fps)", r.latency_ms(), r.fps())]);

@@ -24,6 +24,23 @@ pub struct SmartShuttleResult {
     pub weight_layers: usize,
 }
 
+/// Weight traffic charged by [`smartshuttle_dram`]'s cost model: every
+/// standard convolution streams its weights exactly once under either
+/// per-layer scheme; depthwise and FC layers fall outside [12]'s model
+/// and are not charged.
+pub fn smartshuttle_weight_traffic(gg: &GroupedGraph, cfg: &AccelConfig) -> u64 {
+    let qw = cfg.qw as u64;
+    let mut bytes = 0u64;
+    for gr in &gg.groups {
+        let node = gg.graph.node(gr.main);
+        if let OpKind::Conv { k, out_c, depthwise: false, .. } = node.op {
+            let in_c = node.in_shapes[0].c as u64;
+            bytes += (k as u64) * (k as u64) * in_c * (out_c as u64) * qw;
+        }
+    }
+    bytes
+}
+
 /// Evaluate SmartShuttle's DRAM traffic with `buffer_bytes` of on-chip
 /// SRAM.
 pub fn smartshuttle_dram(gg: &GroupedGraph, cfg: &AccelConfig, buffer_bytes: usize) -> SmartShuttleResult {

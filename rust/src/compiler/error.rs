@@ -1,0 +1,150 @@
+//! Typed compile errors.
+//!
+//! The staged API reports failures through one exhaustive enum instead of
+//! the seed's mix of `anyhow` strings and hot-path panics, so callers can
+//! match on the failure class (CLI: exit codes; `Session`: per-job error
+//! isolation; tests: precise assertions).
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Every way the compile pipeline (and its serialization front-end) can
+/// fail.
+#[derive(Debug)]
+pub enum CompileError {
+    /// Filesystem failure, with the path that was being accessed.
+    Io { path: PathBuf, source: std::io::Error },
+    /// JSON / frozen-graph / parameter-file syntax or schema violation.
+    Parse(String),
+    /// Accelerator-config (TOML subset) problem: unknown preset/key, bad
+    /// number.
+    Config(String),
+    /// Model name not in the zoo (and not loadable from a file).
+    UnknownModel(String),
+    /// The input graph failed structural validation.
+    Graph(String),
+    /// Quantized parameter store inconsistent with the graph.
+    Params(String),
+    /// No reuse policy satisfies the eq-(10) buffer constraint and the
+    /// caller asked for strict feasibility.
+    Infeasible {
+        model: String,
+        sram_required: usize,
+        sram_budget: usize,
+    },
+    /// Stage artifacts passed out of order or with mismatched shapes
+    /// (e.g. a policy vector whose length differs from the group count).
+    StageMismatch(String),
+    /// Functional simulation of a lowered stream failed.
+    Exec(String),
+    /// Functionality compiled out of this build (e.g. the PJRT runtime
+    /// without the `pjrt` feature).
+    Unsupported(String),
+}
+
+impl CompileError {
+    pub fn parse(msg: impl Into<String>) -> Self {
+        CompileError::Parse(msg.into())
+    }
+
+    pub fn config(msg: impl Into<String>) -> Self {
+        CompileError::Config(msg.into())
+    }
+
+    pub fn params(msg: impl Into<String>) -> Self {
+        CompileError::Params(msg.into())
+    }
+
+    pub fn stage(msg: impl Into<String>) -> Self {
+        CompileError::StageMismatch(msg.into())
+    }
+
+    pub fn unsupported(msg: impl Into<String>) -> Self {
+        CompileError::Unsupported(msg.into())
+    }
+
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        CompileError::Io { path: path.into(), source }
+    }
+}
+
+impl fmt::Display for CompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CompileError::Io { path, source } => {
+                write!(f, "{}: {source}", path.display())
+            }
+            CompileError::Parse(m) => write!(f, "parse error: {m}"),
+            CompileError::Config(m) => write!(f, "config error: {m}"),
+            CompileError::UnknownModel(m) => {
+                write!(f, "unknown model {m:?} — see `shortcutfusion list`")
+            }
+            CompileError::Graph(m) => write!(f, "invalid graph: {m}"),
+            CompileError::Params(m) => write!(f, "parameter error: {m}"),
+            CompileError::Infeasible { model, sram_required, sram_budget } => write!(
+                f,
+                "{model}: no feasible reuse policy (needs {sram_required} B of SRAM, \
+                 budget {sram_budget} B)"
+            ),
+            CompileError::StageMismatch(m) => write!(f, "stage mismatch: {m}"),
+            CompileError::Exec(m) => write!(f, "execution error: {m}"),
+            CompileError::Unsupported(m) => write!(f, "unsupported: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CompileError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::graph::ValidateError> for CompileError {
+    fn from(e: crate::graph::ValidateError) -> Self {
+        CompileError::Graph(e.to_string())
+    }
+}
+
+impl From<crate::serialize::JsonError> for CompileError {
+    fn from(e: crate::serialize::JsonError) -> Self {
+        CompileError::Parse(e.to_string())
+    }
+}
+
+impl From<crate::funcsim::ExecError> for CompileError {
+    fn from(e: crate::funcsim::ExecError) -> Self {
+        CompileError::Exec(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = CompileError::UnknownModel("alexnet".into());
+        assert!(e.to_string().contains("alexnet"));
+        let e = CompileError::Infeasible {
+            model: "yolov2".into(),
+            sram_required: 10,
+            sram_budget: 5,
+        };
+        assert!(e.to_string().contains("yolov2"));
+        assert!(e.to_string().contains("10"));
+    }
+
+    #[test]
+    fn io_preserves_source() {
+        use std::error::Error as _;
+        let e = CompileError::io(
+            "/nope",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("/nope"));
+    }
+}

@@ -1,0 +1,357 @@
+//! The staged compile API (the redesign of the one-shot `compile_model`).
+//!
+//! The paper's Fig.-4 pipeline is exposed as five typed stages, each an
+//! owned artifact that can be inspected, serialized, or cached on its
+//! own:
+//!
+//! ```text
+//! Graph ──analyze──> Analyzed ──optimize──> Optimized ──allocate──>
+//!     Allocated ──lower──> Lowered ──simulate──> Simulated ──> CompileReport
+//! ```
+//!
+//! * [`Compiler`] holds the target [`AccelConfig`], the pluggable
+//!   [`ReuseStrategy`] (the paper's cut-point optimizer by default), and
+//!   optional quantized [`Params`] whose per-group shifts are encoded
+//!   into the instruction stream.
+//! * [`Session`] memoizes stage artifacts per `(model, input, config,
+//!   strategy)` and runs multi-model / multi-config sweeps across scoped
+//!   threads.
+//! * [`CompileError`] is the typed error for the whole path — no
+//!   `anyhow`, no hot-path panics.
+//!
+//! ```no_run
+//! use shortcutfusion::compiler::Compiler;
+//! use shortcutfusion::config::AccelConfig;
+//! use shortcutfusion::zoo;
+//!
+//! let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+//! let analyzed = compiler.analyze(&zoo::resnet50(256)).unwrap();
+//! let optimized = compiler.optimize(&analyzed).unwrap();
+//! println!("cuts: {:?}", optimized.evaluation.cuts.cuts);
+//! let allocated = compiler.allocate(&optimized).unwrap();
+//! let lowered = compiler.lower(&allocated).unwrap();
+//! let simulated = compiler.simulate(&lowered).unwrap();
+//! let report = simulated.into_report();
+//! println!("{}: {:.2} ms", report.model, report.latency_ms());
+//! ```
+
+mod error;
+mod session;
+mod stages;
+pub mod strategy;
+
+pub use error::CompileError;
+pub use session::{Session, SessionStats, SweepJob};
+pub use stages::{Allocated, Analyzed, CompileReport, Lowered, Optimized, Simulated};
+pub use strategy::{
+    CutPointStrategy, FixedReuseStrategy, MinBufferStrategy, ReuseStrategy,
+    ShortcutMiningStrategy, SmartShuttleStrategy,
+};
+
+use std::sync::Arc;
+
+use crate::analyzer::analyze;
+use crate::config::AccelConfig;
+use crate::funcsim::Params;
+use crate::graph::{validate, Graph};
+use crate::isa::{lower, MemAssign};
+use crate::power::{estimate as power_estimate, PowerModel};
+use crate::sim::simulate;
+
+use stages::{quant_shift_for, to_memloc};
+
+/// The staged compiler: one target configuration + one reuse strategy.
+///
+/// Cheap to clone (the strategy is shared); every stage method borrows
+/// its input artifact, so artifacts can be cached and re-fed freely.
+#[derive(Clone)]
+pub struct Compiler {
+    cfg: AccelConfig,
+    strategy: Arc<dyn ReuseStrategy>,
+    params: Option<Arc<Params>>,
+    strict_feasibility: bool,
+}
+
+impl Compiler {
+    /// A compiler using the paper's reuse-aware cut-point optimizer.
+    pub fn new(cfg: AccelConfig) -> Compiler {
+        Compiler::with_strategy(cfg, Arc::new(CutPointStrategy))
+    }
+
+    /// A compiler with an explicit reuse strategy (baselines plug in
+    /// here — see [`strategy`]).
+    pub fn with_strategy(cfg: AccelConfig, strategy: Arc<dyn ReuseStrategy>) -> Compiler {
+        Compiler { cfg, strategy, params: None, strict_feasibility: false }
+    }
+
+    /// Attach quantized parameters; their per-group shifts are encoded
+    /// into the lowered instruction stream (`quant_shift`).
+    pub fn with_params(mut self, params: Params) -> Compiler {
+        self.params = Some(Arc::new(params));
+        self
+    }
+
+    /// Fail [`Compiler::optimize`] with [`CompileError::Infeasible`] when
+    /// no policy meets the eq-(10) buffer constraint (default: report the
+    /// best-effort policy with `feasible = false`, like the seed API).
+    pub fn strict_feasibility(mut self, strict: bool) -> Compiler {
+        self.strict_feasibility = strict;
+        self
+    }
+
+    pub fn cfg(&self) -> &AccelConfig {
+        &self.cfg
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// Stage 1: validate the graph and fuse it into accelerator groups.
+    /// Config-independent — one `Analyzed` serves any number of configs.
+    pub fn analyze(&self, graph: &Graph) -> Result<Analyzed, CompileError> {
+        validate(graph)?;
+        Ok(Analyzed { model: graph.name.clone(), grouped: Arc::new(analyze(graph)) })
+    }
+
+    /// Stage 2: choose the per-group reuse policy via the strategy.
+    pub fn optimize(&self, analyzed: &Analyzed) -> Result<Optimized, CompileError> {
+        let evaluation = self.strategy.decide(&analyzed.grouped, &self.cfg)?;
+        if evaluation.policy.len() != analyzed.grouped.groups.len() {
+            return Err(CompileError::stage(format!(
+                "strategy {:?} produced {} policy entries for {} groups",
+                self.strategy.name(),
+                evaluation.policy.len(),
+                analyzed.grouped.groups.len()
+            )));
+        }
+        if self.strict_feasibility && !evaluation.feasible {
+            return Err(CompileError::Infeasible {
+                model: analyzed.model.clone(),
+                sram_required: evaluation.sram.total,
+                sram_budget: self.cfg.sram_budget,
+            });
+        }
+        Ok(Optimized {
+            model: analyzed.model.clone(),
+            grouped: analyzed.grouped.clone(),
+            strategy: self.strategy.name(),
+            cfg: self.cfg.clone(),
+            evaluation,
+        })
+    }
+
+    /// Reject artifacts computed under a different configuration — mixing
+    /// them would yield an internally inconsistent report.
+    fn check_cfg(&self, stage: &str, cfg: &AccelConfig) -> Result<(), CompileError> {
+        if *cfg != self.cfg {
+            // Full Debug forms: configs often differ only in one tweaked
+            // field while sharing a name, so names alone can't diagnose.
+            return Err(CompileError::stage(format!(
+                "{stage} artifact was produced under a different config \
+                 (artifact: {cfg:?}; compiler: {:?})",
+                self.cfg
+            )));
+        }
+        Ok(())
+    }
+
+    /// Stage 3: static 3-buffer allocation + off-chip arena layout.
+    pub fn allocate(&self, optimized: &Optimized) -> Result<Allocated, CompileError> {
+        self.check_cfg("Optimized", &optimized.cfg)?;
+        let gg = &optimized.grouped;
+        let policy = &optimized.evaluation.policy;
+        let alloc = crate::alloc::allocate(gg, policy, &self.cfg);
+        let dram_layout = crate::alloc::layout(gg, policy, &alloc, &self.cfg);
+        Ok(Allocated {
+            model: optimized.model.clone(),
+            grouped: optimized.grouped.clone(),
+            strategy: optimized.strategy,
+            cfg: optimized.cfg.clone(),
+            evaluation: optimized.evaluation.clone(),
+            alloc,
+            dram_layout,
+        })
+    }
+
+    /// Stage 4: lower every group to its 11-word instruction.
+    pub fn lower(&self, allocated: &Allocated) -> Result<Lowered, CompileError> {
+        self.check_cfg("Allocated", &allocated.cfg)?;
+        let gg = &allocated.grouped;
+        if allocated.alloc.assigns.len() != gg.groups.len() {
+            return Err(CompileError::stage(format!(
+                "{} buffer assignments for {} groups",
+                allocated.alloc.assigns.len(),
+                gg.groups.len()
+            )));
+        }
+        let params = self.params.as_deref();
+        let mut assigns: Vec<MemAssign> = Vec::with_capacity(gg.groups.len());
+        for (gi, gr) in gg.groups.iter().enumerate() {
+            assigns.push(MemAssign {
+                reuse: allocated.evaluation.policy[gi],
+                in_loc: to_memloc(&allocated.alloc.assigns[gi].in_loc, &allocated.dram_layout, gi),
+                out_loc: to_memloc(&allocated.alloc.assigns[gi].out_loc, &allocated.dram_layout, gi),
+                aux_loc: allocated.alloc.assigns[gi]
+                    .aux_loc
+                    .as_ref()
+                    .map(|l| to_memloc(l, &allocated.dram_layout, gi)),
+                weight_addr: allocated.dram_layout.weights[gi].offset,
+                weight_bytes: gr.weight_bytes(&gg.graph, self.cfg.qw as u64) as u32,
+                quant_shift: quant_shift_for(gg, gi, params)?,
+            });
+        }
+        let stream = lower(gg, &assigns);
+        Ok(Lowered {
+            model: allocated.model.clone(),
+            grouped: allocated.grouped.clone(),
+            strategy: allocated.strategy,
+            cfg: allocated.cfg.clone(),
+            evaluation: allocated.evaluation.clone(),
+            alloc: allocated.alloc.clone(),
+            dram_layout: allocated.dram_layout.clone(),
+            assigns,
+            stream,
+        })
+    }
+
+    /// Stage 5: cycle-accurate timing + power estimate.
+    pub fn simulate(&self, lowered: &Lowered) -> Result<Simulated, CompileError> {
+        self.check_cfg("Lowered", &lowered.cfg)?;
+        let gg = &lowered.grouped;
+        let timing = simulate(gg, &lowered.evaluation.policy, &lowered.alloc, &self.cfg);
+        let power = power_estimate(
+            &PowerModel::default(),
+            &self.cfg,
+            timing.mac_efficiency,
+            lowered.evaluation.sram.bram18k,
+            lowered.evaluation.dram.total,
+            timing.latency_ms,
+            timing.gops,
+        );
+        Ok(Simulated {
+            model: lowered.model.clone(),
+            grouped: lowered.grouped.clone(),
+            strategy: lowered.strategy,
+            cfg: lowered.cfg.clone(),
+            evaluation: lowered.evaluation.clone(),
+            alloc: lowered.alloc.clone(),
+            dram_layout: lowered.dram_layout.clone(),
+            assigns: lowered.assigns.clone(),
+            stream: lowered.stream.clone(),
+            timing,
+            power,
+        })
+    }
+
+    /// All five stages in sequence.
+    pub fn compile(&self, graph: &Graph) -> Result<CompileReport, CompileError> {
+        let analyzed = self.analyze(graph)?;
+        self.compile_analyzed(&analyzed)
+    }
+
+    /// Stages 2–5 over a cached analysis (what [`Session`] uses to share
+    /// one `Analyzed` across configs).
+    pub fn compile_analyzed(&self, analyzed: &Analyzed) -> Result<CompileReport, CompileError> {
+        let optimized = self.optimize(analyzed)?;
+        let allocated = self.allocate(&optimized)?;
+        let lowered = self.lower(&allocated)?;
+        Ok(self.simulate(&lowered)?.into_report())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn staged_chain_produces_consistent_artifacts() {
+        let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+        let g = zoo::resnet18(64);
+        let analyzed = compiler.analyze(&g).unwrap();
+        let optimized = compiler.optimize(&analyzed).unwrap();
+        assert_eq!(optimized.strategy, "cutpoint");
+        assert_eq!(optimized.evaluation.policy.len(), analyzed.group_count());
+        let allocated = compiler.allocate(&optimized).unwrap();
+        assert_eq!(allocated.alloc.assigns.len(), analyzed.group_count());
+        let lowered = compiler.lower(&allocated).unwrap();
+        assert_eq!(lowered.stream.len(), analyzed.group_count());
+        assert_eq!(lowered.stream_bytes().len(), lowered.stream.byte_size());
+        let simulated = compiler.simulate(&lowered).unwrap();
+        assert!(simulated.timing.latency_ms > 0.0);
+        let report = simulated.into_report();
+        assert_eq!(report.row_groups + report.frame_groups, analyzed.group_count());
+    }
+
+    #[test]
+    fn artifacts_are_reusable_across_stages() {
+        // The same Analyzed feeds two different configs; the same
+        // Optimized feeds allocate twice — artifacts are plain values.
+        let g = zoo::resnet18(64);
+        let a = Compiler::new(AccelConfig::kcu1500_int8());
+        let b = Compiler::new(AccelConfig::table2_int16());
+        let analyzed = a.analyze(&g).unwrap();
+        let ra = a.compile_analyzed(&analyzed).unwrap();
+        let rb = b.compile_analyzed(&analyzed).unwrap();
+        assert_ne!(ra.evaluation.sram.total, rb.evaluation.sram.total);
+        let optimized = a.optimize(&analyzed).unwrap();
+        let l1 = a.lower(&a.allocate(&optimized).unwrap()).unwrap();
+        let l2 = a.lower(&a.allocate(&optimized).unwrap()).unwrap();
+        assert_eq!(l1.stream.words, l2.stream.words);
+    }
+
+    #[test]
+    fn cross_config_artifacts_are_rejected() {
+        // Feeding a stage artifact to a compiler with a different config
+        // must fail typed, not produce an inconsistent report.
+        let g = zoo::resnet18(64);
+        let a = Compiler::new(AccelConfig::kcu1500_int8());
+        let b = Compiler::new(AccelConfig::table2_int16());
+        let optimized = a.optimize(&a.analyze(&g).unwrap()).unwrap();
+        assert!(matches!(b.allocate(&optimized), Err(CompileError::StageMismatch(_))));
+        let allocated = a.allocate(&optimized).unwrap();
+        assert!(matches!(b.lower(&allocated), Err(CompileError::StageMismatch(_))));
+        let lowered = a.lower(&allocated).unwrap();
+        assert!(matches!(b.simulate(&lowered), Err(CompileError::StageMismatch(_))));
+    }
+
+    #[test]
+    fn strict_feasibility_reports_typed_error() {
+        let mut cfg = AccelConfig::kcu1500_int8();
+        cfg.sram_budget = 1; // nothing fits
+        let compiler = Compiler::new(cfg).strict_feasibility(true);
+        match compiler.compile(&zoo::resnet18(64)) {
+            Err(CompileError::Infeasible { model, sram_budget, .. }) => {
+                assert_eq!(model, "ResNet18");
+                assert_eq!(sram_budget, 1);
+            }
+            other => panic!("expected Infeasible, got {:?}", other.map(|r| r.model)),
+        }
+    }
+
+    #[test]
+    fn params_shifts_reach_the_stream() {
+        let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+        let g = zoo::tinynet();
+        let analyzed = compiler.analyze(&g).unwrap();
+        let params = Params::random(&analyzed.grouped, 3);
+        let with = Compiler::new(AccelConfig::kcu1500_int8()).with_params(params.clone());
+        let lowered = with.lower(&with.allocate(&with.optimize(&analyzed).unwrap()).unwrap()).unwrap();
+        // Params::random sets shift = 7 on every weighted group.
+        let shifted = lowered.assigns.iter().filter(|a| a.quant_shift == 7).count();
+        assert!(shifted > 0, "no group picked up a parameter shift");
+        // and the encoded words carry it
+        let any = lowered
+            .stream
+            .instrs
+            .iter()
+            .any(|i| i.quant_shift == 7);
+        assert!(any);
+        // without params every shift is the documented identity 0
+        let bare = compiler
+            .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+            .unwrap();
+        assert!(bare.assigns.iter().all(|a| a.quant_shift == 0));
+    }
+}

@@ -1,0 +1,293 @@
+//! The parallel compile session: memoized stage artifacts + scoped-thread
+//! sweeps.
+//!
+//! A [`Session`] serves many `(model, input, config)` compile jobs:
+//!
+//! * the **analysis cache** shares one [`Analyzed`] artifact per
+//!   `(model, input)` across every configuration (fusion analysis is
+//!   config-independent);
+//! * the **report cache** memoizes the finished [`CompileReport`] per
+//!   `(model, input, config, strategy)`, so repeated jobs — sweeps that
+//!   revisit a point, dashboards, A/B strategy comparisons — are O(1);
+//! * [`Session::run_jobs`] fans a job list out over `std::thread::scope`
+//!   workers, replacing the seed's serial per-model loops.
+//!
+//! Cached results are shared through `Arc`, so a cache hit is a pointer
+//! clone and two hits for the same key return bit-identical artifacts
+//! (the property test in `rust/tests/staged_api.rs` pins this down).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::AccelConfig;
+use crate::zoo;
+
+use super::error::CompileError;
+use super::stages::{Analyzed, CompileReport};
+use super::strategy::{CutPointStrategy, ReuseStrategy};
+use super::Compiler;
+
+/// One compile job of a sweep.
+#[derive(Debug, Clone)]
+pub struct SweepJob {
+    pub model: String,
+    pub input: usize,
+    pub cfg: AccelConfig,
+}
+
+impl SweepJob {
+    /// A zoo model at its paper-default input size.
+    pub fn zoo_default(model: &str, cfg: &AccelConfig) -> SweepJob {
+        SweepJob { model: model.to_string(), input: zoo::default_input(model), cfg: cfg.clone() }
+    }
+}
+
+/// Cache-effectiveness counters (reads are racy snapshots, which is fine
+/// for reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionStats {
+    pub report_hits: usize,
+    pub report_misses: usize,
+    pub analysis_hits: usize,
+    pub analysis_misses: usize,
+}
+
+/// A memoizing, thread-safe compile service over one reuse strategy.
+pub struct Session {
+    strategy: Arc<dyn ReuseStrategy>,
+    analyzed: Mutex<HashMap<(String, usize), Arc<Analyzed>>>,
+    reports: Mutex<HashMap<ReportKey, Arc<CompileReport>>>,
+    report_hits: AtomicUsize,
+    report_misses: AtomicUsize,
+    analysis_hits: AtomicUsize,
+    analysis_misses: AtomicUsize,
+}
+
+/// `(model, input, config fingerprint, strategy name)`. The strategy
+/// component is constant within one `Session` (a session runs exactly one
+/// strategy); it is kept in the key so cache entries stay self-describing
+/// and the invariant survives if sessions ever take per-call strategies.
+type ReportKey = (String, usize, String, &'static str);
+
+/// `AccelConfig` carries floats, so it fingerprints through its `Debug`
+/// form (deterministic: derived, field order is fixed).
+fn cfg_key(cfg: &AccelConfig) -> String {
+    format!("{cfg:?}")
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session::new()
+    }
+}
+
+impl Session {
+    /// A session running the paper's cut-point optimizer.
+    pub fn new() -> Session {
+        Session::with_strategy(Arc::new(CutPointStrategy))
+    }
+
+    /// A session running an explicit strategy (e.g. a baseline).
+    pub fn with_strategy(strategy: Arc<dyn ReuseStrategy>) -> Session {
+        Session {
+            strategy,
+            analyzed: Mutex::new(HashMap::new()),
+            reports: Mutex::new(HashMap::new()),
+            report_hits: AtomicUsize::new(0),
+            report_misses: AtomicUsize::new(0),
+            analysis_hits: AtomicUsize::new(0),
+            analysis_misses: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            report_hits: self.report_hits.load(Ordering::Relaxed),
+            report_misses: self.report_misses.load(Ordering::Relaxed),
+            analysis_hits: self.analysis_hits.load(Ordering::Relaxed),
+            analysis_misses: self.analysis_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The shared analysis artifact for a zoo model (config-independent).
+    ///
+    /// The cache lock is held across the analysis itself: fusion analysis
+    /// is O(nodes) and cheap, and holding it guarantees one analysis per
+    /// `(model, input)` even when parallel workers hit the same model
+    /// with different configs at once (sweep grids are model-major).
+    pub fn analyzed(&self, model: &str, input: usize) -> Result<Arc<Analyzed>, CompileError> {
+        let key = (model.to_string(), input);
+        let mut cache = self.analyzed.lock().unwrap();
+        if let Some(a) = cache.get(&key) {
+            self.analysis_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(a.clone());
+        }
+        self.analysis_misses.fetch_add(1, Ordering::Relaxed);
+        let graph = zoo::by_name(model, input)
+            .ok_or_else(|| CompileError::UnknownModel(model.to_string()))?;
+        // Any config works for stage 1; analysis never reads it.
+        let compiler =
+            Compiler::with_strategy(AccelConfig::kcu1500_int8(), self.strategy.clone());
+        let analyzed = Arc::new(compiler.analyze(&graph)?);
+        cache.insert(key, analyzed.clone());
+        Ok(analyzed)
+    }
+
+    /// Compile one `(model, input, config)` point, memoized.
+    pub fn compile(
+        &self,
+        model: &str,
+        input: usize,
+        cfg: &AccelConfig,
+    ) -> Result<Arc<CompileReport>, CompileError> {
+        let key: ReportKey =
+            (model.to_string(), input, cfg_key(cfg), self.strategy.name());
+        if let Some(r) = self.reports.lock().unwrap().get(&key) {
+            self.report_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(r.clone());
+        }
+        self.report_misses.fetch_add(1, Ordering::Relaxed);
+        let analyzed = self.analyzed(model, input)?;
+        let compiler = Compiler::with_strategy(cfg.clone(), self.strategy.clone());
+        let report = Arc::new(compiler.compile_analyzed(&analyzed)?);
+        // Two threads may race to the same miss; both compute identical
+        // reports and the first insert wins, keeping hits bit-stable.
+        let mut cache = self.reports.lock().unwrap();
+        Ok(cache.entry(key).or_insert(report).clone())
+    }
+
+    /// Compile every job across `threads` scoped workers; results come
+    /// back in job order, with per-job errors isolated.
+    pub fn run_jobs(
+        &self,
+        jobs: &[SweepJob],
+        threads: usize,
+    ) -> Vec<Result<Arc<CompileReport>, CompileError>> {
+        assert!(threads > 0, "need at least one worker");
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<Arc<CompileReport>, CompileError>>>> =
+            jobs.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..threads.min(jobs.len().max(1)) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        return;
+                    }
+                    let job = &jobs[i];
+                    let result = self.compile(&job.model, job.input, &job.cfg);
+                    *slots[i].lock().unwrap() = Some(result);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
+            .collect()
+    }
+
+    /// The full grid `models × configs`, in row-major job order.
+    pub fn sweep_grid(
+        &self,
+        models: &[&str],
+        cfgs: &[AccelConfig],
+        threads: usize,
+    ) -> Vec<Result<Arc<CompileReport>, CompileError>> {
+        let jobs: Vec<SweepJob> = models
+            .iter()
+            .flat_map(|&m| cfgs.iter().map(move |c| SweepJob::zoo_default(m, c)))
+            .collect();
+        self.run_jobs(&jobs, threads)
+    }
+
+    /// Every zoo model at its default input on one config.
+    pub fn sweep_zoo(
+        &self,
+        cfg: &AccelConfig,
+        threads: usize,
+    ) -> Vec<Result<Arc<CompileReport>, CompileError>> {
+        self.sweep_grid(zoo::MODEL_NAMES, std::slice::from_ref(cfg), threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_hit_returns_same_artifact() {
+        let s = Session::new();
+        let cfg = AccelConfig::kcu1500_int8();
+        let a = s.compile("resnet18", 64, &cfg).unwrap();
+        let b = s.compile("resnet18", 64, &cfg).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second compile must be a cache hit");
+        let st = s.stats();
+        assert_eq!(st.report_hits, 1);
+        assert_eq!(st.report_misses, 1);
+    }
+
+    #[test]
+    fn analysis_is_shared_across_configs() {
+        let s = Session::new();
+        let mut cfg2 = AccelConfig::kcu1500_int8();
+        cfg2.sram_budget /= 2;
+        cfg2.name = "half-budget".into();
+        s.compile("resnet18", 64, &AccelConfig::kcu1500_int8()).unwrap();
+        s.compile("resnet18", 64, &cfg2).unwrap();
+        let st = s.stats();
+        assert_eq!(st.report_misses, 2, "different configs are different points");
+        assert_eq!(st.analysis_misses, 1, "fusion analysis runs once");
+        assert_eq!(st.analysis_hits, 1);
+    }
+
+    #[test]
+    fn parallel_jobs_match_serial_and_keep_order() {
+        let cfg = AccelConfig::kcu1500_int8();
+        let jobs: Vec<SweepJob> = ["resnet18", "vgg16-conv", "yolov2"]
+            .iter()
+            .map(|&m| SweepJob { model: m.into(), input: 64, cfg: cfg.clone() })
+            .collect();
+        let par = Session::new().run_jobs(&jobs, 3);
+        let ser = Session::new().run_jobs(&jobs, 1);
+        for ((p, s), job) in par.iter().zip(&ser).zip(&jobs) {
+            let (p, s) = (p.as_ref().unwrap(), s.as_ref().unwrap());
+            assert_eq!(p.model, s.model);
+            assert_eq!(p.model, zoo::by_name(&job.model, job.input).unwrap().name);
+            assert_eq!(p.timing.total_cycles, s.timing.total_cycles);
+            assert_eq!(p.stream.words, s.stream.words);
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_isolated_and_typed() {
+        let cfg = AccelConfig::kcu1500_int8();
+        let jobs = vec![
+            SweepJob { model: "resnet18".into(), input: 64, cfg: cfg.clone() },
+            SweepJob { model: "alexnet".into(), input: 64, cfg: cfg.clone() },
+        ];
+        let out = Session::new().run_jobs(&jobs, 2);
+        assert!(out[0].is_ok());
+        assert!(matches!(out[1], Err(CompileError::UnknownModel(_))));
+    }
+
+    #[test]
+    fn per_strategy_sessions_compile_independently() {
+        // (Each Session runs one strategy, so this exercises strategy
+        // isolation across sessions, not key separation within one.)
+        let cfg = AccelConfig::kcu1500_int8();
+        let cut = Session::new();
+        let fixed = Session::with_strategy(Arc::new(
+            super::super::FixedReuseStrategy(crate::isa::ReuseMode::Row),
+        ));
+        let a = cut.compile("resnet18", 64, &cfg).unwrap();
+        let b = fixed.compile("resnet18", 64, &cfg).unwrap();
+        assert_eq!(a.strategy, "cutpoint");
+        assert_eq!(b.strategy, "fixed-row");
+        assert!(b.evaluation.policy.iter().all(|m| *m == crate::isa::ReuseMode::Row));
+    }
+}

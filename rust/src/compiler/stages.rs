@@ -1,0 +1,284 @@
+//! Owned stage artifacts of the staged compile pipeline.
+//!
+//! Each struct is the output of exactly one Fig.-4 stage. They own their
+//! data (the grouped graph is shared through an `Arc`, so chaining stages
+//! never copies the model), can be inspected or serialized on their own,
+//! and are what [`super::Session`] memoizes.
+//!
+//! Chaining clones the smaller per-stage products (policy vector, buffer
+//! assignments, packed stream — all O(groups)) rather than `Arc`-wrapping
+//! every field: those clones are noise next to the cut-point search,
+//! which simulates the whole network per candidate. Revisit if profiles
+//! ever say otherwise.
+
+use std::sync::Arc;
+
+use crate::alloc::{AllocResult, Loc, OffchipLayout};
+use crate::analyzer::GroupedGraph;
+use crate::funcsim::Params;
+use crate::isa::{InstructionStream, MemAssign, MemLoc, ReuseMode};
+use crate::optimizer::Evaluation;
+use crate::power::PowerEstimate;
+use crate::serialize::Json;
+use crate::sim::NetworkTiming;
+
+/// Stage 1 — fusion analysis (config-independent): the frozen graph
+/// reorganized into accelerator groups.
+#[derive(Debug, Clone)]
+pub struct Analyzed {
+    pub model: String,
+    pub grouped: Arc<GroupedGraph>,
+}
+
+impl Analyzed {
+    pub fn node_count(&self) -> usize {
+        self.grouped.graph.nodes.len()
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.grouped.groups.len()
+    }
+
+    /// Compact inspection record.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("stage", Json::str("analyzed")),
+            ("model", Json::str(&self.model)),
+            ("nodes", Json::num(self.node_count() as f64)),
+            ("groups", Json::num(self.group_count() as f64)),
+        ])
+    }
+}
+
+/// Stage 2 — reuse-policy selection: the chosen per-group policy with its
+/// SRAM / DRAM / latency evaluation, tagged with the strategy that
+/// produced it.
+#[derive(Debug, Clone)]
+pub struct Optimized {
+    pub model: String,
+    pub grouped: Arc<GroupedGraph>,
+    /// [`super::ReuseStrategy::name`] of the deciding strategy.
+    pub strategy: &'static str,
+    /// The config this evaluation was computed under; downstream stages
+    /// refuse artifacts from a different config (`StageMismatch`).
+    pub cfg: crate::config::AccelConfig,
+    pub evaluation: Evaluation,
+}
+
+impl Optimized {
+    pub fn row_groups(&self) -> usize {
+        self.evaluation.policy.iter().filter(|m| **m == ReuseMode::Row).count()
+    }
+
+    pub fn frame_groups(&self) -> usize {
+        self.evaluation.policy.len() - self.row_groups()
+    }
+
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("stage", Json::str("optimized")),
+            ("model", Json::str(&self.model)),
+            ("strategy", Json::str(self.strategy)),
+            (
+                "cuts",
+                Json::Arr(self.evaluation.cuts.cuts.iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+            ("row_groups", Json::num(self.row_groups() as f64)),
+            ("frame_groups", Json::num(self.frame_groups() as f64)),
+            ("sram_bytes", Json::num(self.evaluation.sram.total as f64)),
+            ("dram_bytes", Json::num(self.evaluation.dram.total as f64)),
+            ("latency_ms", Json::num(self.evaluation.latency_ms)),
+            ("feasible", Json::Bool(self.evaluation.feasible)),
+        ])
+    }
+}
+
+/// Stage 3 — static memory allocation: on-chip buffer assignments
+/// (Algorithm 1) plus the off-chip arena layout.
+#[derive(Debug, Clone)]
+pub struct Allocated {
+    pub model: String,
+    pub grouped: Arc<GroupedGraph>,
+    pub strategy: &'static str,
+    pub cfg: crate::config::AccelConfig,
+    pub evaluation: Evaluation,
+    pub alloc: AllocResult,
+    pub dram_layout: OffchipLayout,
+}
+
+impl Allocated {
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("stage", Json::str("allocated")),
+            ("model", Json::str(&self.model)),
+            ("spill_events", Json::num(self.alloc.spill_events as f64)),
+            ("dram_footprint", Json::num(self.dram_layout.footprint() as f64)),
+        ])
+    }
+}
+
+/// Stage 4 — ISA lowering: the per-group memory assignments and the
+/// packed 11-word instruction stream.
+#[derive(Debug, Clone)]
+pub struct Lowered {
+    pub model: String,
+    pub grouped: Arc<GroupedGraph>,
+    pub strategy: &'static str,
+    pub cfg: crate::config::AccelConfig,
+    pub evaluation: Evaluation,
+    pub alloc: AllocResult,
+    pub dram_layout: OffchipLayout,
+    pub assigns: Vec<MemAssign>,
+    pub stream: InstructionStream,
+}
+
+impl Lowered {
+    /// The packed stream as little-endian bytes — exactly what the
+    /// inference driver would DMA to the accelerator.
+    pub fn stream_bytes(&self) -> Vec<u8> {
+        self.stream.words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("stage", Json::str("lowered")),
+            ("model", Json::str(&self.model)),
+            ("instructions", Json::num(self.stream.len() as f64)),
+            ("stream_bytes", Json::num(self.stream.byte_size() as f64)),
+        ])
+    }
+}
+
+/// Stage 5 — simulation: cycle-accurate timing and the power estimate.
+#[derive(Debug, Clone)]
+pub struct Simulated {
+    pub model: String,
+    pub grouped: Arc<GroupedGraph>,
+    pub strategy: &'static str,
+    pub cfg: crate::config::AccelConfig,
+    pub evaluation: Evaluation,
+    pub alloc: AllocResult,
+    pub dram_layout: OffchipLayout,
+    pub assigns: Vec<MemAssign>,
+    pub stream: InstructionStream,
+    pub timing: NetworkTiming,
+    pub power: PowerEstimate,
+}
+
+impl Simulated {
+    /// Collapse the chain into the classic flat report.
+    pub fn into_report(self) -> CompileReport {
+        let row_groups =
+            self.evaluation.policy.iter().filter(|m| **m == ReuseMode::Row).count();
+        let frame_groups = self.evaluation.policy.len() - row_groups;
+        CompileReport {
+            model: self.model,
+            strategy: self.strategy,
+            grouped: self.grouped,
+            evaluation: self.evaluation,
+            timing: self.timing,
+            power: self.power,
+            stream: self.stream,
+            row_groups,
+            frame_groups,
+        }
+    }
+}
+
+/// Everything the pipeline produces for one network (the seed API's
+/// report shape, now produced by [`Simulated::into_report`]; the grouped
+/// graph is shared, so cloning a report is cheap).
+#[derive(Debug, Clone)]
+pub struct CompileReport {
+    pub model: String,
+    /// Which [`super::ReuseStrategy`] chose the policy.
+    pub strategy: &'static str,
+    pub grouped: Arc<GroupedGraph>,
+    pub evaluation: Evaluation,
+    pub timing: NetworkTiming,
+    pub power: PowerEstimate,
+    pub stream: InstructionStream,
+    /// Row-reuse / frame-reuse group counts.
+    pub row_groups: usize,
+    pub frame_groups: usize,
+}
+
+impl CompileReport {
+    pub fn latency_ms(&self) -> f64 {
+        self.timing.latency_ms
+    }
+
+    pub fn fps(&self) -> f64 {
+        1000.0 / self.timing.latency_ms
+    }
+
+    pub fn gops(&self) -> f64 {
+        self.timing.gops
+    }
+
+    pub fn mac_efficiency_pct(&self) -> f64 {
+        100.0 * self.timing.mac_efficiency
+    }
+
+    pub fn offchip_fm_mb(&self) -> f64 {
+        self.evaluation.dram.fm_bytes as f64 / 1e6
+    }
+
+    pub fn offchip_total_mb(&self) -> f64 {
+        self.evaluation.dram.total as f64 / 1e6
+    }
+
+    pub fn baseline_once_mb(&self) -> f64 {
+        self.evaluation.dram.baseline_once as f64 / 1e6
+    }
+
+    pub fn reduction_pct(&self) -> f64 {
+        self.evaluation.dram.reduction_pct()
+    }
+
+    pub fn sram_mb(&self) -> f64 {
+        self.evaluation.sram.total as f64 / 1e6
+    }
+
+    pub fn bram18k(&self) -> usize {
+        self.evaluation.sram.bram18k
+    }
+}
+
+/// Map an allocator placement to the ISA's memory-location encoding.
+pub(super) fn to_memloc(l: &Loc, lay: &OffchipLayout, gi: usize) -> MemLoc {
+    match l {
+        Loc::Buf(b) => MemLoc::Buf(*b),
+        Loc::Aux => MemLoc::Buf(0),
+        Loc::Dram => MemLoc::Dram(lay.fmaps[gi].offset),
+    }
+}
+
+/// Per-group dynamic-fixed-point output shift for the instruction word.
+///
+/// When quantized parameters are attached (`Compiler::with_params`), the
+/// shift comes from the export-time quantization of the group's main node
+/// (`python/compile/quantize.py` derives it from the weight/activation
+/// exponents); a shift outside the instruction field's `i8` range is a
+/// typed error, not a silent clamp. Without parameters the shift is
+/// **0 — the identity**: the dynamic-fixed-point shift is a property of
+/// the exported integer parameters, not of the architecture, so an
+/// unparameterized compile has nothing principled to encode, and the
+/// functional simulator reads the real shifts from the parameter file at
+/// execution time either way.
+pub(super) fn quant_shift_for(
+    gg: &GroupedGraph,
+    gi: usize,
+    params: Option<&Params>,
+) -> Result<i8, super::CompileError> {
+    let name = &gg.graph.node(gg.groups[gi].main).name;
+    match params.and_then(|p| p.get(name)) {
+        None => Ok(0),
+        Some(gp) => i8::try_from(gp.shift).map_err(|_| {
+            super::CompileError::params(format!(
+                "{name}: quantization shift {} does not fit the instruction's i8 field",
+                gp.shift
+            ))
+        }),
+    }
+}

@@ -7,7 +7,8 @@
 //! loads overrides from `configs/*.toml` (serde/toml are unavailable
 //! offline — DESIGN.md §9).
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::compiler::CompileError;
+use crate::Result;
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -119,8 +120,7 @@ impl AccelConfig {
     /// Load from a TOML-subset file, starting from the named preset and
     /// applying overrides.
     pub fn from_toml_file(path: &Path) -> Result<Self> {
-        let text =
-            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let text = std::fs::read_to_string(path).map_err(|e| CompileError::io(path, e))?;
         Self::from_toml(&text)
     }
 
@@ -132,7 +132,7 @@ impl AccelConfig {
         let mut cfg = match preset {
             "kcu1500_int8" => Self::kcu1500_int8(),
             "table2_int16" => Self::table2_int16(),
-            other => bail!("unknown preset {other:?}"),
+            other => return Err(CompileError::config(format!("unknown preset {other:?}"))),
         };
         for (k, v) in &kv {
             match k.as_str() {
@@ -150,7 +150,7 @@ impl AccelConfig {
                 "qs" => cfg.qs = parse_num(k, v)? as usize,
                 "dram_gbps" => cfg.dram_gbps = parse_num(k, v)?,
                 "sram_budget" => cfg.sram_budget = parse_num(k, v)? as usize,
-                other => bail!("unknown config key {other:?}"),
+                other => return Err(CompileError::config(format!("unknown config key {other:?}"))),
             }
         }
         Ok(cfg)
@@ -158,7 +158,8 @@ impl AccelConfig {
 }
 
 fn parse_num(key: &str, v: &str) -> Result<f64> {
-    v.parse::<f64>().map_err(|_| anyhow!("config key {key}: bad number {v:?}"))
+    v.parse::<f64>()
+        .map_err(|_| CompileError::config(format!("config key {key}: bad number {v:?}")))
 }
 
 /// `key = value` lines with comments and an optional section header.
@@ -171,7 +172,7 @@ fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, String>> {
         }
         let (k, v) = line
             .split_once('=')
-            .ok_or_else(|| anyhow!("line {}: expected key = value", ln + 1))?;
+            .ok_or_else(|| CompileError::config(format!("line {}: expected key = value", ln + 1)))?;
         let v = v.trim().trim_matches('"').to_string();
         out.insert(k.trim().to_string(), v);
     }

@@ -1,22 +1,24 @@
-//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §9).
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §9), driving
+//! the staged [`crate::compiler`] API.
 //!
 //! ```text
 //! shortcutfusion list
-//! shortcutfusion compile <model> [--input N] [--config FILE]
+//! shortcutfusion compile <model> [--input N] [--config FILE] [--strategy S]
 //! shortcutfusion sweep   <model> [--input N]
 //! shortcutfusion minbuf  [<model> ...]
 //! shortcutfusion export  <model> [--input N] --out FILE
 //! shortcutfusion load    FILE
+//! shortcutfusion report  [--threads N] [--strategy S]
 //! shortcutfusion help
 //! ```
 
 use crate::bench::Table;
+use crate::compiler::{strategy, CompileError, Compiler, Session};
 use crate::config::AccelConfig;
-use crate::coordinator::pipeline::compile_model;
 use crate::optimizer::Optimizer;
 use crate::serialize::{load_frozen, save_frozen};
 use crate::zoo;
-use anyhow::{anyhow, bail, Result};
+use crate::Result;
 
 const HELP: &str = "\
 ShortcutFusion — reuse-aware CNN compiler for a shared-MAC accelerator
@@ -25,17 +27,22 @@ USAGE:
     shortcutfusion <command> [args]
 
 COMMANDS:
-    list                         list zoo models
-    compile <model> [--input N] [--config FILE]
-                                 run the full pipeline and print the report
+    list                         list zoo models and reuse strategies
+    compile <model> [--input N] [--config FILE] [--strategy S]
+                                 run the staged pipeline and print the report
     sweep <model> [--input N] [--csv FILE]
                                  cut-point sweep (Fig 16/17 series)
     minbuf [<model> ...]         minimum buffer search (Table III)
     export <model> [--input N] --out FILE
                                  write the frozen-graph JSON
     load FILE                    parse a frozen-graph JSON and report stats
-    report [--threads N]         compile the whole zoo in parallel (summary table)
+    report [--threads N] [--strategy S]
+                                 compile the whole zoo in parallel (summary table)
     help                         this text
+
+STRATEGIES (for --strategy):
+    cutpoint (default), min-buffer, fixed-row, fixed-frame,
+    shortcut-mining, smartshuttle
 ";
 
 /// CLI entry point.
@@ -48,6 +55,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             for &m in zoo::MODEL_NAMES {
                 println!("{m} (default input {})", zoo::default_input(m));
             }
+            println!("strategies: {}", strategy::STRATEGY_NAMES.join(", "));
             Ok(())
         }
         "compile" => cmd_compile(&rest),
@@ -60,7 +68,9 @@ pub fn run(args: Vec<String>) -> Result<()> {
             print!("{HELP}");
             Ok(())
         }
-        other => bail!("unknown command {other:?} — try `shortcutfusion help`"),
+        other => Err(CompileError::config(format!(
+            "unknown command {other:?} — try `shortcutfusion help`"
+        ))),
     }
 }
 
@@ -68,33 +78,65 @@ fn flag_value(args: &[String], flag: &str) -> Option<String> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
 }
 
+fn parse_strategy(args: &[String]) -> Result<Box<dyn crate::compiler::ReuseStrategy>> {
+    let name = flag_value(args, "--strategy").unwrap_or_else(|| "cutpoint".into());
+    strategy::by_name(&name).ok_or_else(|| {
+        CompileError::config(format!(
+            "unknown strategy {name:?} — one of {:?}",
+            strategy::STRATEGY_NAMES
+        ))
+    })
+}
+
 fn parse_model(args: &[String]) -> Result<(crate::graph::Graph, AccelConfig)> {
     let name = args
         .first()
         .filter(|a| !a.starts_with("--"))
-        .ok_or_else(|| anyhow!("expected a model name — see `shortcutfusion list`"))?;
+        .ok_or_else(|| CompileError::config("expected a model name — see `shortcutfusion list`"))?;
     let input = match flag_value(args, "--input") {
-        Some(v) => v.parse::<usize>().map_err(|_| anyhow!("bad --input {v:?}"))?,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| CompileError::config(format!("bad --input {v:?}")))?,
         None => zoo::default_input(name),
     };
     let cfg = match flag_value(args, "--config") {
         Some(p) => AccelConfig::from_toml_file(std::path::Path::new(&p))?,
         None => AccelConfig::kcu1500_int8(),
     };
-    let graph = zoo::by_name(name, input)
-        .ok_or_else(|| anyhow!("unknown model {name:?} — see `shortcutfusion list`"))?;
+    let graph =
+        zoo::by_name(name, input).ok_or_else(|| CompileError::UnknownModel(name.clone()))?;
     Ok((graph, cfg))
 }
 
 fn cmd_compile(args: &[String]) -> Result<()> {
     let (graph, cfg) = parse_model(args)?;
-    let r = compile_model(&graph, &cfg);
-    println!("model: {} ({} nodes, {} groups)", r.model, r.grouped.graph.nodes.len(), r.grouped.groups.len());
-    println!("target: {} ({} MHz, Ti=To={}, {} DSP MACs)", cfg.name, cfg.freq_mhz, cfg.ti, cfg.dsp_mac);
-    println!("cuts: {:?} ({} row / {} frame groups)", r.evaluation.cuts.cuts, r.row_groups, r.frame_groups);
-    println!("instruction stream: {} x 11 words = {} bytes", r.stream.len(), r.stream.byte_size());
+    let compiler = Compiler::with_strategy(cfg.clone(), parse_strategy(args)?.into());
+    let r = compiler.compile(&graph)?;
+    println!(
+        "model: {} ({} nodes, {} groups)",
+        r.model,
+        r.grouped.graph.nodes.len(),
+        r.grouped.groups.len()
+    );
+    println!(
+        "target: {} ({} MHz, Ti=To={}, {} DSP MACs)",
+        cfg.name, cfg.freq_mhz, cfg.ti, cfg.dsp_mac
+    );
+    println!(
+        "strategy: {} — cuts {:?} ({} row / {} frame groups)",
+        r.strategy, r.evaluation.cuts.cuts, r.row_groups, r.frame_groups
+    );
+    println!(
+        "instruction stream: {} x 11 words = {} bytes",
+        r.stream.len(),
+        r.stream.byte_size()
+    );
     println!("latency: {:.3} ms ({:.1} fps)", r.latency_ms(), r.fps());
-    println!("throughput: {:.1} GOPS, MAC efficiency {:.1} %", r.gops(), r.mac_efficiency_pct());
+    println!(
+        "throughput: {:.1} GOPS, MAC efficiency {:.1} %",
+        r.gops(),
+        r.mac_efficiency_pct()
+    );
     println!("SRAM: {:.3} MB ({} BRAM18K)", r.sram_mb(), r.bram18k());
     println!(
         "DRAM: {:.2} MB total ({:.2} MB feature maps); baseline-once {:.2} MB -> reduction {:.1} %",
@@ -127,7 +169,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
                 p.cut, p.sram_mb, p.bram18k, p.dram_total_mb, p.dram_fm_mb, p.latency_ms, p.feasible
             ));
         }
-        std::fs::write(&csv, out)?;
+        std::fs::write(&csv, out).map_err(|e| CompileError::io(&csv, e))?;
         println!("wrote {csv}");
     }
     let mut t = Table::new(
@@ -156,6 +198,10 @@ fn cmd_minbuf(args: &[String]) -> Result<()> {
         args.iter().map(String::as_str).collect()
     };
     let cfg = AccelConfig::kcu1500_int8();
+    let compiler = Compiler::with_strategy(
+        cfg.clone(),
+        std::sync::Arc::new(crate::compiler::MinBufferStrategy),
+    );
     let mut t = Table::new(
         "minimum buffer size meeting the DRAM constraints (Table III)",
         &["model", "input", "min SRAM MB", "BRAM18K", "latency ms"],
@@ -163,10 +209,9 @@ fn cmd_minbuf(args: &[String]) -> Result<()> {
     for name in models {
         let input = zoo::default_input(name);
         let graph = zoo::by_name(name, input)
-            .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
-        let gg = crate::analyzer::analyze(&graph);
-        let opt = Optimizer::new(&gg, &cfg);
-        let e = opt.min_buffer();
+            .ok_or_else(|| CompileError::UnknownModel(name.to_string()))?;
+        let analyzed = compiler.analyze(&graph)?;
+        let e = compiler.optimize(&analyzed)?.evaluation;
         t.row(&[
             name.to_string(),
             input.to_string(),
@@ -181,20 +226,35 @@ fn cmd_minbuf(args: &[String]) -> Result<()> {
 
 fn cmd_export(args: &[String]) -> Result<()> {
     let (graph, _cfg) = parse_model(args)?;
-    let out = flag_value(args, "--out").ok_or_else(|| anyhow!("--out FILE required"))?;
+    let out = flag_value(args, "--out")
+        .ok_or_else(|| CompileError::config("--out FILE required"))?;
     save_frozen(&graph, std::path::Path::new(&out))?;
     println!("wrote {} ({} nodes)", out, graph.nodes.len());
     Ok(())
 }
 
 fn cmd_report(args: &[String]) -> Result<()> {
-    let threads = flag_value(args, "--threads")
-        .map(|v| v.parse::<usize>().unwrap_or(4))
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    let threads = match flag_value(args, "--threads") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => {
+                return Err(CompileError::config(format!(
+                    "bad --threads {v:?} (need a positive integer)"
+                )))
+            }
+        },
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
     let cfg = AccelConfig::kcu1500_int8();
-    let results = crate::coordinator::sweep::sweep_zoo(&cfg, threads);
+    let session = Session::with_strategy(parse_strategy(args)?.into());
+    let results = session.sweep_zoo(&cfg, threads);
     let mut t = Table::new(
-        &format!("zoo report on {} ({} threads)", cfg.name, threads),
+        &format!(
+            "zoo report on {} ({} threads, strategy {})",
+            cfg.name,
+            threads,
+            session.strategy_name()
+        ),
         &["model", "latency ms", "GOPS", "eff %", "DRAM MB", "reduction %", "SRAM MB", "feasible"],
     );
     for r in results {
@@ -209,7 +269,16 @@ fn cmd_report(args: &[String]) -> Result<()> {
                 format!("{:.2}", r.sram_mb()),
                 r.evaluation.feasible.to_string(),
             ]),
-            Err(e) => t.row(&[e, "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()]),
+            Err(e) => t.row(&[
+                e.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
         }
     }
     t.print();
@@ -217,7 +286,9 @@ fn cmd_report(args: &[String]) -> Result<()> {
 }
 
 fn cmd_load(args: &[String]) -> Result<()> {
-    let path = args.first().ok_or_else(|| anyhow!("expected a file path"))?;
+    let path = args
+        .first()
+        .ok_or_else(|| CompileError::config("expected a file path"))?;
     let g = load_frozen(std::path::Path::new(path))?;
     println!(
         "{}: {} nodes, {} conv layers, {:.2} GOP, {:.2} M params",
@@ -248,6 +319,26 @@ mod tests {
     #[test]
     fn compile_small_model() {
         run(vec!["compile".into(), "resnet18".into(), "--input".into(), "64".into()]).unwrap();
+    }
+
+    #[test]
+    fn compile_with_baseline_strategy() {
+        run(vec![
+            "compile".into(),
+            "resnet18".into(),
+            "--input".into(),
+            "64".into(),
+            "--strategy".into(),
+            "fixed-frame".into(),
+        ])
+        .unwrap();
+        let err = run(vec![
+            "compile".into(),
+            "resnet18".into(),
+            "--strategy".into(),
+            "bogus".into(),
+        ]);
+        assert!(matches!(err, Err(CompileError::Config(_))));
     }
 
     #[test]
@@ -288,6 +379,9 @@ mod tests {
 
     #[test]
     fn bad_model_errors() {
-        assert!(run(vec!["compile".into(), "alexnet".into()]).is_err());
+        assert!(matches!(
+            run(vec!["compile".into(), "alexnet".into()]),
+            Err(CompileError::UnknownModel(_))
+        ));
     }
 }

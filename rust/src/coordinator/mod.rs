@@ -1,8 +1,13 @@
-//! Coordinator: the end-to-end pipeline driver (Fig. 4) and the CLI.
+//! Coordinator: the CLI plus deprecated one-shot wrappers over the
+//! staged [`crate::compiler`] API (Fig. 4's end-to-end driver).
 
 pub mod pipeline;
 pub mod sweep;
 pub mod cli;
 
-pub use pipeline::{compile_model, CompileReport};
-pub use sweep::{run_jobs, sweep_zoo, Job};
+#[allow(deprecated)]
+pub use pipeline::compile_model;
+pub use pipeline::CompileReport;
+#[allow(deprecated)]
+pub use sweep::{run_jobs, sweep_zoo};
+pub use sweep::Job;

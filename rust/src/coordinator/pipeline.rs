@@ -1,130 +1,45 @@
-//! The full compile pipeline: graph → analyze → optimize → allocate →
-//! lower → simulate → report.
+//! The one-shot compile entry point, kept as a thin compatibility
+//! wrapper over the staged [`crate::compiler`] API.
+//!
+//! New code should drive the stages directly:
+//!
+//! ```no_run
+//! use shortcutfusion::compiler::Compiler;
+//! use shortcutfusion::config::AccelConfig;
+//! use shortcutfusion::zoo;
+//!
+//! let report = Compiler::new(AccelConfig::kcu1500_int8())
+//!     .compile(&zoo::yolov2(416))
+//!     .unwrap();
+//! ```
+//!
+//! See `MIGRATION.md` for the full porting guide. The equivalence test in
+//! `rust/tests/staged_api.rs` pins this wrapper to the staged pipeline
+//! bit-for-bit.
 
-use crate::alloc::{allocate, layout};
-use crate::analyzer::{analyze, GroupedGraph};
+pub use crate::compiler::CompileReport;
+
+use crate::compiler::Compiler;
 use crate::config::AccelConfig;
 use crate::graph::Graph;
-use crate::isa::{lower, InstructionStream, MemAssign, MemLoc, ReuseMode};
-use crate::optimizer::{Evaluation, Optimizer};
-use crate::power::{estimate as power_estimate, PowerEstimate, PowerModel};
-use crate::sim::{simulate, NetworkTiming};
-
-/// Everything the pipeline produces for one network.
-pub struct CompileReport {
-    pub model: String,
-    pub grouped: GroupedGraph,
-    pub evaluation: Evaluation,
-    pub timing: NetworkTiming,
-    pub power: PowerEstimate,
-    pub stream: InstructionStream,
-    /// Row-reuse / frame-reuse group counts.
-    pub row_groups: usize,
-    pub frame_groups: usize,
-}
-
-impl CompileReport {
-    pub fn latency_ms(&self) -> f64 {
-        self.timing.latency_ms
-    }
-
-    pub fn fps(&self) -> f64 {
-        1000.0 / self.timing.latency_ms
-    }
-
-    pub fn gops(&self) -> f64 {
-        self.timing.gops
-    }
-
-    pub fn mac_efficiency_pct(&self) -> f64 {
-        100.0 * self.timing.mac_efficiency
-    }
-
-    pub fn offchip_fm_mb(&self) -> f64 {
-        self.evaluation.dram.fm_bytes as f64 / 1e6
-    }
-
-    pub fn offchip_total_mb(&self) -> f64 {
-        self.evaluation.dram.total as f64 / 1e6
-    }
-
-    pub fn baseline_once_mb(&self) -> f64 {
-        self.evaluation.dram.baseline_once as f64 / 1e6
-    }
-
-    pub fn reduction_pct(&self) -> f64 {
-        self.evaluation.dram.reduction_pct()
-    }
-
-    pub fn sram_mb(&self) -> f64 {
-        self.evaluation.sram.total as f64 / 1e6
-    }
-
-    pub fn bram18k(&self) -> usize {
-        self.evaluation.sram.bram18k
-    }
-}
 
 /// Run the whole pipeline on a graph.
+///
+/// Panics on graphs that fail [`crate::graph::validate`] — a check the
+/// staged path added (the seed wrapper fed unvalidated graphs straight
+/// to the analyzer). Use [`Compiler::compile`] for typed errors.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `compiler::Compiler::compile` (staged API); see MIGRATION.md"
+)]
 pub fn compile_model(graph: &Graph, cfg: &AccelConfig) -> CompileReport {
-    let grouped = analyze(graph);
-    let opt = Optimizer::new(&grouped, cfg);
-    let evaluation = opt.optimize();
-    drop(opt); // releases the &grouped borrow (Box<dyn Fn> has drop glue)
-    let alloc = allocate(&grouped, &evaluation.policy, cfg);
-    let timing = simulate(&grouped, &evaluation.policy, &alloc, cfg);
-    let dram_layout = layout(&grouped, &evaluation.policy, &alloc, cfg);
-
-    let assigns: Vec<MemAssign> = grouped
-        .groups
-        .iter()
-        .enumerate()
-        .map(|(gi, gr)| MemAssign {
-            reuse: evaluation.policy[gi],
-            in_loc: to_memloc(&alloc.assigns[gi].in_loc, &dram_layout, gi),
-            out_loc: to_memloc(&alloc.assigns[gi].out_loc, &dram_layout, gi),
-            aux_loc: alloc.assigns[gi].aux_loc.as_ref().map(|l| to_memloc(l, &dram_layout, gi)),
-            weight_addr: dram_layout.weights[gi].offset,
-            weight_bytes: gr.weight_bytes(&grouped.graph, cfg.qw as u64) as u32,
-            quant_shift: 0,
-        })
-        .collect();
-    let stream = lower(&grouped, &assigns);
-
-    let power = power_estimate(
-        &PowerModel::default(),
-        cfg,
-        timing.mac_efficiency,
-        evaluation.sram.bram18k,
-        evaluation.dram.total,
-        timing.latency_ms,
-        timing.gops,
-    );
-
-    let row_groups = evaluation.policy.iter().filter(|m| **m == ReuseMode::Row).count();
-    let frame_groups = evaluation.policy.len() - row_groups;
-
-    CompileReport {
-        model: graph.name.clone(),
-        grouped,
-        evaluation,
-        timing,
-        power,
-        stream,
-        row_groups,
-        frame_groups,
-    }
-}
-
-fn to_memloc(l: &crate::alloc::Loc, lay: &crate::alloc::OffchipLayout, gi: usize) -> MemLoc {
-    match l {
-        crate::alloc::Loc::Buf(b) => MemLoc::Buf(*b),
-        crate::alloc::Loc::Aux => MemLoc::Buf(0),
-        crate::alloc::Loc::Dram => MemLoc::Dram(lay.fmaps[gi].offset),
-    }
+    Compiler::new(cfg.clone())
+        .compile(graph)
+        .unwrap_or_else(|e| panic!("compile_model({}): {e}", graph.name))
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::zoo;

@@ -1,13 +1,12 @@
-//! Multi-threaded sweep executor: compile many (model, input, config)
-//! jobs in parallel with `std::thread` (the pipeline is CPU-bound search;
-//! tokio would add nothing — DESIGN.md §9).
+//! Compatibility sweep entry points, now thin wrappers over
+//! [`crate::compiler::Session`] (which adds per-`(model, config,
+//! strategy)` memoization on top of the same scoped-thread worker pool).
 
+use crate::compiler::{CompileReport, Session, SweepJob};
 use crate::config::AccelConfig;
-use crate::coordinator::pipeline::{compile_model, CompileReport};
 use crate::zoo;
-use std::sync::mpsc;
 
-/// One sweep job.
+/// One sweep job (legacy shape; [`SweepJob`] is the staged-API form).
 #[derive(Debug, Clone)]
 pub struct Job {
     pub model: String,
@@ -18,51 +17,43 @@ pub struct Job {
 /// Compile all jobs across `threads` workers; results come back in job
 /// order. Unknown models yield `Err` entries instead of poisoning the
 /// batch.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `compiler::Session::run_jobs`; see MIGRATION.md"
+)]
 pub fn run_jobs(jobs: Vec<Job>, threads: usize) -> Vec<Result<CompileReport, String>> {
-    assert!(threads > 0);
-    let n = jobs.len();
-    let (tx, rx) = mpsc::channel::<(usize, Result<CompileReport, String>)>();
-    let jobs = std::sync::Arc::new(jobs);
-    let next = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
-
-    std::thread::scope(|s| {
-        for _ in 0..threads.min(n.max(1)) {
-            let tx = tx.clone();
-            let jobs = jobs.clone();
-            let next = next.clone();
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= jobs.len() {
-                    return;
-                }
-                let job = &jobs[i];
-                let result = match zoo::by_name(&job.model, job.input) {
-                    Some(g) => Ok(compile_model(&g, &job.cfg)),
-                    None => Err(format!("unknown model {:?}", job.model)),
-                };
-                let _ = tx.send((i, result));
-            });
-        }
-    });
-    drop(tx);
-
-    let mut out: Vec<Option<Result<CompileReport, String>>> = (0..n).map(|_| None).collect();
-    for (i, r) in rx {
-        out[i] = Some(r);
-    }
-    out.into_iter().map(|r| r.expect("worker delivered every job")).collect()
+    let session = Session::new();
+    let staged: Vec<SweepJob> = jobs
+        .into_iter()
+        .map(|j| SweepJob { model: j.model, input: j.input, cfg: j.cfg })
+        .collect();
+    session
+        .run_jobs(&staged, threads)
+        .into_iter()
+        .map(|r| match r {
+            Ok(report) => Ok((*report).clone()),
+            Err(e) => Err(e.to_string()),
+        })
+        .collect()
 }
 
 /// Compile every zoo model at its default input on `cfg`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `compiler::Session::sweep_zoo`; see MIGRATION.md"
+)]
 pub fn sweep_zoo(cfg: &AccelConfig, threads: usize) -> Vec<Result<CompileReport, String>> {
     let jobs = zoo::MODEL_NAMES
         .iter()
         .map(|&m| Job { model: m.to_string(), input: zoo::default_input(m), cfg: cfg.clone() })
         .collect();
-    run_jobs(jobs, threads)
+    #[allow(deprecated)]
+    let out = run_jobs(jobs, threads);
+    out
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 

@@ -16,7 +16,8 @@
 
 use crate::serialize::{parse, Json};
 use crate::testutil::Rng;
-use anyhow::{anyhow, Context, Result};
+use crate::compiler::CompileError;
+use crate::Result;
 use std::collections::HashMap;
 
 /// Per-group quantized parameters.
@@ -50,9 +51,9 @@ impl Params {
     pub fn from_json(doc: &Json) -> Result<Params> {
         let obj = doc
             .get("groups")
-            .ok_or_else(|| anyhow!("params: missing groups"))?;
+            .ok_or_else(|| CompileError::params("params: missing groups"))?;
         let Json::Obj(map) = obj else {
-            return Err(anyhow!("params: groups must be an object"));
+            return Err(CompileError::params("params: groups must be an object"));
         };
         let mut groups = HashMap::new();
         for (name, g) in map {
@@ -65,31 +66,31 @@ impl Params {
                             v.as_f64()
                                 .filter(|f| f.fract() == 0.0)
                                 .map(|f| f as i64)
-                                .ok_or_else(|| anyhow!("params {name}.{key}: non-integer"))
+                                .ok_or_else(|| CompileError::params(format!("params {name}.{key}: non-integer")))
                         })
                         .collect(),
-                    Some(_) => Err(anyhow!("params {name}.{key}: expected array")),
+                    Some(_) => Err(CompileError::params(format!("params {name}.{key}: expected array"))),
                 }
             };
             let weights: Vec<i8> = ints("weights")?
                 .into_iter()
-                .map(|v| i8::try_from(v).map_err(|_| anyhow!("{name}: weight out of i8")))
+                .map(|v| i8::try_from(v).map_err(|_| CompileError::params(format!("{name}: weight out of i8"))))
                 .collect::<Result<_>>()?;
             let bias: Vec<i32> = ints("bias")?
                 .into_iter()
-                .map(|v| i32::try_from(v).map_err(|_| anyhow!("{name}: bias out of i32")))
+                .map(|v| i32::try_from(v).map_err(|_| CompileError::params(format!("{name}: bias out of i32"))))
                 .collect::<Result<_>>()?;
             let lut_raw = ints("lut")?;
             let lut = if lut_raw.is_empty() {
                 None
             } else {
                 if lut_raw.len() != 256 {
-                    return Err(anyhow!("{name}: LUT must have 256 entries"));
+                    return Err(CompileError::params(format!("{name}: LUT must have 256 entries")));
                 }
                 Some(
                     lut_raw
                         .into_iter()
-                        .map(|v| i8::try_from(v).map_err(|_| anyhow!("{name}: lut out of i8")))
+                        .map(|v| i8::try_from(v).map_err(|_| CompileError::params(format!("{name}: lut out of i8"))))
                         .collect::<Result<_>>()?,
                 )
             };
@@ -104,9 +105,10 @@ impl Params {
     }
 
     pub fn from_file(path: &std::path::Path) -> Result<Params> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let doc = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let text =
+            std::fs::read_to_string(path).map_err(|e| CompileError::io(path, e))?;
+        let doc = parse(&text)
+            .map_err(|e| CompileError::parse(format!("{}: {e}", path.display())))?;
         Self::from_json(&doc)
     }
 

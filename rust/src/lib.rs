@@ -11,19 +11,69 @@
 //! allocation, lowered to an 11-word instruction stream, and executed on a
 //! (here: simulated) shared-MAC-array accelerator.
 //!
-//! The pipeline mirrors Fig. 4 of the paper:
+//! ## The staged compile API
+//!
+//! The paper's Fig.-4 pipeline is exposed by [`compiler`] as five typed
+//! stages, each an owned, cacheable artifact:
 //!
 //! ```text
-//! frozen graph ──> analyzer (fusion) ──> reuse-aware optimizer ──┐
-//!                                                                ▼
-//!  funcsim  <── isa instruction stream <── static memory allocation
-//!     │                                        │
-//!     ▼                                        ▼
-//!  verify vs JAX golden (PJRT)          cycle-accurate timing sim
+//! Graph ─analyze→ Analyzed ─optimize→ Optimized ─allocate→ Allocated
+//!                                        ─lower→ Lowered ─simulate→ Simulated
 //! ```
 //!
-//! See `DESIGN.md` for the full system inventory and the hardware
-//! substitutions (FPGA → cycle-accurate simulator, GPU → analytical model).
+//! ```no_run
+//! use shortcutfusion::compiler::Compiler;
+//! use shortcutfusion::config::AccelConfig;
+//! use shortcutfusion::zoo;
+//!
+//! let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+//! let report = compiler.compile(&zoo::yolov2(416)).unwrap();
+//! println!("{}: {:.2} ms, {:.1} % off-chip reduction",
+//!          report.model, report.latency_ms(), report.reduction_pct());
+//! ```
+//!
+//! Reuse-policy selection is pluggable through
+//! [`compiler::ReuseStrategy`]: the paper's cut-point optimizer is the
+//! default, and the evaluation baselines (fixed row/frame,
+//! ShortcutMining [8], SmartShuttle [12]) implement the same trait, so
+//! every Table II/IV/VI comparison runs through one compile path.
+//!
+//! Multi-model / multi-config sweeps go through [`compiler::Session`],
+//! which memoizes stage artifacts per `(model, input, config, strategy)`
+//! and fans jobs out over scoped threads:
+//!
+//! ```no_run
+//! use shortcutfusion::compiler::Session;
+//! use shortcutfusion::config::AccelConfig;
+//!
+//! let session = Session::new();
+//! for r in session.sweep_zoo(&AccelConfig::kcu1500_int8(), 8) {
+//!     let r = r.unwrap();
+//!     println!("{}: {:.2} ms", r.model, r.latency_ms());
+//! }
+//! ```
+//!
+//! Failures are typed ([`compiler::CompileError`]); the deprecated
+//! one-shot `coordinator::compile_model` remains as a thin wrapper over
+//! the stages (see `MIGRATION.md` for the porting guide).
+//!
+//! ## Layout
+//!
+//! | module | role |
+//! |---|---|
+//! | [`graph`], [`serialize`], [`zoo`] | frozen-graph model + JSON interchange + paper model zoo |
+//! | [`analyzer`] | fusion into accelerator groups (Fig. 5a) |
+//! | [`optimizer`] | reuse-aware cut-point search (§IV, Algorithm 1, eq. 1–10) |
+//! | [`alloc`] | static 3-buffer + off-chip arena allocation (Fig. 13) |
+//! | [`isa`] | 11-word instruction encode/decode + lowering (Fig. 5b) |
+//! | [`compiler`] | **the staged API**: stages, strategies, session, errors |
+//! | [`sim`], [`funcsim`], [`power`] | cycle-accurate timing, bit-exact functional sim, power model |
+//! | [`baselines`], [`bench`] | comparison models + offline bench harness |
+//! | [`coordinator`] | CLI and deprecated one-shot wrappers |
+//! | [`runtime`] | PJRT artifact runtime (stubbed unless the `pjrt` feature is on) |
+//!
+//! See `DESIGN.md` for the hardware substitutions (FPGA → cycle-accurate
+//! simulator, GPU → analytical model).
 
 pub mod config;
 pub mod graph;
@@ -33,6 +83,7 @@ pub mod analyzer;
 pub mod isa;
 pub mod optimizer;
 pub mod alloc;
+pub mod compiler;
 pub mod sim;
 pub mod funcsim;
 pub mod power;
@@ -42,5 +93,7 @@ pub mod coordinator;
 pub mod bench;
 pub mod testutil;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub use compiler::CompileError;
+
+/// Crate-wide result alias over the typed compile error.
+pub type Result<T> = std::result::Result<T, CompileError>;

@@ -1,4 +1,7 @@
 //! ShortcutFusion CLI — see `shortcutfusion help`.
-fn main() -> anyhow::Result<()> {
-    shortcutfusion::coordinator::cli::run(std::env::args().skip(1).collect())
+fn main() {
+    if let Err(e) = shortcutfusion::coordinator::cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
 }

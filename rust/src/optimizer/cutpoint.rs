@@ -18,9 +18,11 @@ pub struct CutPolicy {
 }
 
 /// Pluggable latency estimator. The default is the crate's cycle-accurate
-/// simulator; tests may supply a proxy.
-pub type LatencyFn<'a> =
-    Box<dyn Fn(&GroupedGraph, &[ReuseMode], &AllocResult, &AccelConfig) -> f64 + 'a>;
+/// simulator; tests may supply a proxy. A plain (non-capturing) function
+/// pointer: the optimizer stays `Copy`-free of drop glue, `Send + Sync`,
+/// and borrowing it never extends the grouped graph's borrow (the seed's
+/// `Box<dyn Fn>` forced a `drop(opt)` workaround in the pipeline).
+pub type LatencyFn = fn(&GroupedGraph, &[ReuseMode], &AllocResult, &AccelConfig) -> f64;
 
 /// Full evaluation of one candidate policy.
 #[derive(Debug, Clone)]
@@ -48,12 +50,13 @@ pub struct SweepPoint {
 }
 
 /// The reuse-aware shortcut optimizer.
+#[derive(Clone)]
 pub struct Optimizer<'a> {
     pub gg: &'a GroupedGraph,
     pub cfg: &'a AccelConfig,
     pub blocks: Vec<BasicBlock>,
     pub segs: Vec<Segment>,
-    latency: LatencyFn<'a>,
+    latency: LatencyFn,
 }
 
 /// Exhaustive-search cap; larger spaces fall back to coordinate descent.
@@ -62,15 +65,13 @@ const EXHAUSTIVE_CAP: f64 = 200_000.0;
 impl<'a> Optimizer<'a> {
     /// Build with the cycle-accurate simulator as the latency oracle.
     pub fn new(gg: &'a GroupedGraph, cfg: &'a AccelConfig) -> Self {
-        Self::with_latency(
-            gg,
-            cfg,
-            Box::new(|gg, policy, alloc, cfg| simulate(gg, policy, alloc, cfg).latency_ms),
-        )
+        Self::with_latency(gg, cfg, |gg, policy, alloc, cfg| {
+            simulate(gg, policy, alloc, cfg).latency_ms
+        })
     }
 
     /// Build with a custom latency oracle.
-    pub fn with_latency(gg: &'a GroupedGraph, cfg: &'a AccelConfig, latency: LatencyFn<'a>) -> Self {
+    pub fn with_latency(gg: &'a GroupedGraph, cfg: &'a AccelConfig, latency: LatencyFn) -> Self {
         let blocks = basic_blocks(gg);
         let segs = segments(gg, &blocks);
         Optimizer { gg, cfg, blocks, segs, latency }

@@ -3,7 +3,8 @@
 use crate::funcsim::Tensor;
 use crate::graph::Shape;
 use crate::serialize::{parse, Json};
-use anyhow::{anyhow, Context, Result};
+use crate::compiler::CompileError;
+use crate::Result;
 use std::path::{Path, PathBuf};
 
 /// Locate `artifacts/`: `$SHORTCUTFUSION_ARTIFACTS` or `./artifacts`.
@@ -19,15 +20,15 @@ pub fn load_input_tensor(path: &Path) -> Result<Tensor> {
     let shape = doc
         .get("shape")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing shape"))?;
+        .ok_or_else(|| CompileError::parse("missing shape"))?;
     if shape.len() != 3 {
-        return Err(anyhow!("input shape must be [h,w,c]"));
+        return Err(CompileError::parse("input shape must be [h,w,c]"));
     }
-    let dim = |i: usize| shape[i].as_usize().ok_or_else(|| anyhow!("bad dim"));
+    let dim = |i: usize| shape[i].as_usize().ok_or_else(|| CompileError::parse("bad dim"));
     let s = Shape::new(dim(0)?, dim(1)?, dim(2)?);
     let data = i8_array(&doc, "data")?;
     if data.len() != s.numel() {
-        return Err(anyhow!("data length {} != {}", data.len(), s.numel()));
+        return Err(CompileError::parse(format!("data length {} != {}", data.len(), s.numel())));
     }
     Ok(Tensor::from_vec(s, data))
 }
@@ -39,21 +40,20 @@ pub fn load_expected_logits(path: &Path) -> Result<Vec<i8>> {
 }
 
 fn read_json(path: &Path) -> Result<Json> {
-    let text =
-        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
-    parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))
+    let text = std::fs::read_to_string(path).map_err(|e| CompileError::io(path, e))?;
+    parse(&text).map_err(|e| CompileError::parse(format!("{}: {e}", path.display())))
 }
 
 fn i8_array(doc: &Json, key: &str) -> Result<Vec<i8>> {
     doc.get(key)
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing {key}"))?
+        .ok_or_else(|| CompileError::parse(format!("missing {key}")))?
         .iter()
         .map(|v| {
             v.as_f64()
                 .filter(|f| f.fract() == 0.0 && (-128.0..=127.0).contains(f))
                 .map(|f| f as i8)
-                .ok_or_else(|| anyhow!("bad i8 in {key}"))
+                .ok_or_else(|| CompileError::parse(format!("bad i8 in {key}")))
         })
         .collect()
 }

@@ -1,0 +1,55 @@
+//! Stub runtime used when the `pjrt` feature is off: constructing the
+//! client reports a typed [`CompileError::Unsupported`], so callers can
+//! probe availability with `Runtime::cpu().is_ok()` and skip.
+
+use crate::compiler::CompileError;
+use crate::funcsim::Tensor;
+use crate::Result;
+use std::path::Path;
+
+const MSG: &str = "PJRT runtime not available: rebuild with `--features pjrt` \
+                   and a vendored `xla` crate (see MIGRATION.md)";
+
+/// PJRT CPU runtime (stub: the `pjrt` feature is disabled).
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails in this build; the real client needs the `pjrt`
+    /// feature.
+    pub fn cpu() -> Result<Runtime> {
+        Err(CompileError::unsupported(MSG))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Unreachable in practice (`cpu()` never yields a stub instance),
+    /// but kept so the API matches the real backend.
+    pub fn load(&mut self, _path: &Path) -> Result<usize> {
+        Err(CompileError::unsupported(MSG))
+    }
+
+    pub fn run_i8(&self, _id: usize, _inputs: &[&Tensor]) -> Result<Vec<i8>> {
+        Err(CompileError::unsupported(MSG))
+    }
+
+    pub fn run_i8_to_i32(&self, _id: usize, _inputs: &[&Tensor]) -> Result<Vec<i32>> {
+        Err(CompileError::unsupported(MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unsupported() {
+        match Runtime::cpu() {
+            Err(CompileError::Unsupported(m)) => assert!(m.contains("pjrt")),
+            _ => panic!("stub must fail with Unsupported"),
+        }
+    }
+}

@@ -18,7 +18,8 @@
 
 use super::json::{parse, Json};
 use crate::graph::{Activation, Graph, GraphBuilder, NodeId, OpKind, PadMode, Shape};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::compiler::CompileError;
+use crate::Result;
 
 fn act_to_str(a: Activation) -> &'static str {
     match a {
@@ -43,7 +44,7 @@ fn act_from_str(s: &str) -> Result<Activation> {
         "sigmoid" => Activation::Sigmoid,
         "hardswish" => Activation::HardSwish,
         "hardsigmoid" => Activation::HardSigmoid,
-        _ => bail!("unknown activation {s:?}"),
+        _ => return Err(CompileError::parse(format!("unknown activation {s:?}"))),
     })
 }
 
@@ -129,29 +130,29 @@ pub fn graph_from_json(doc: &Json) -> Result<Graph> {
     let name = doc
         .get("name")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("missing model name"))?;
+        .ok_or_else(|| CompileError::parse("missing model name"))?;
     let nodes = doc
         .get("nodes")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing nodes array"))?;
+        .ok_or_else(|| CompileError::parse("missing nodes array"))?;
     if nodes.is_empty() {
-        bail!("empty node list");
+        return Err(CompileError::parse("empty node list"));
     }
 
     // First node must be the input with an explicit shape.
     let first = &nodes[0];
     if first.get("op").and_then(Json::as_str) != Some("input") {
-        bail!("first node must be the input");
+        return Err(CompileError::parse("first node must be the input"));
     }
     let shape_arr = first
         .get("shape")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("input node lacks shape"))?;
+        .ok_or_else(|| CompileError::parse("input node lacks shape"))?;
     if shape_arr.len() != 3 {
-        bail!("input shape must be [h,w,c]");
+        return Err(CompileError::parse("input shape must be [h,w,c]"));
     }
     let dim = |i: usize| -> Result<usize> {
-        shape_arr[i].as_usize().ok_or_else(|| anyhow!("bad input dim {i}"))
+        shape_arr[i].as_usize().ok_or_else(|| CompileError::parse(format!("bad input dim {i}")))
     };
     let mut b = GraphBuilder::new(name, Shape::new(dim(0)?, dim(1)?, dim(2)?));
 
@@ -159,49 +160,49 @@ pub fn graph_from_json(doc: &Json) -> Result<Graph> {
     let input_name = first
         .get("name")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("input lacks name"))?;
+        .ok_or_else(|| CompileError::parse("input lacks name"))?;
     ids.insert(input_name.to_string(), b.input_id());
 
     for nd in &nodes[1..] {
         let nname = nd
             .get("name")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("node lacks name"))?;
+            .ok_or_else(|| CompileError::parse("node lacks name"))?;
         let op = nd
             .get("op")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("node {nname} lacks op"))?;
+            .ok_or_else(|| CompileError::parse(format!("node {nname} lacks op")))?;
         let inputs: Vec<NodeId> = nd
             .get("inputs")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("node {nname} lacks inputs"))?
+            .ok_or_else(|| CompileError::parse(format!("node {nname} lacks inputs")))?
             .iter()
             .map(|j| {
-                let s = j.as_str().ok_or_else(|| anyhow!("bad input ref in {nname}"))?;
-                ids.get(s).copied().ok_or_else(|| anyhow!("unknown input {s:?} in {nname}"))
+                let s = j.as_str().ok_or_else(|| CompileError::parse(format!("bad input ref in {nname}")))?;
+                ids.get(s).copied().ok_or_else(|| CompileError::parse(format!("unknown input {s:?} in {nname}")))
             })
             .collect::<Result<_>>()?;
         let one = || -> Result<NodeId> {
-            inputs.first().copied().ok_or_else(|| anyhow!("{nname}: missing operand"))
+            inputs.first().copied().ok_or_else(|| CompileError::parse(format!("{nname}: missing operand")))
         };
         let two = || -> Result<(NodeId, NodeId)> {
             if inputs.len() == 2 {
                 Ok((inputs[0], inputs[1]))
             } else {
-                bail!("{nname}: expected 2 operands")
+                Err(CompileError::parse(format!("{nname}: expected 2 operands")))
             }
         };
         let get_usize = |key: &str| -> Result<usize> {
             nd.get(key)
                 .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow!("{nname}: missing {key}"))
+                .ok_or_else(|| CompileError::parse(format!("{nname}: missing {key}")))
         };
         let id = match op {
             "conv" => {
                 let pad = match nd.get("pad").and_then(Json::as_str).unwrap_or("same") {
                     "same" => PadMode::Same,
                     "valid" => PadMode::Valid,
-                    p => bail!("{nname}: bad pad {p:?}"),
+                    p => return Err(CompileError::parse(format!("{nname}: bad pad {p:?}"))),
                 };
                 let depthwise = nd.get("depthwise").and_then(Json::as_bool).unwrap_or(false);
                 if depthwise {
@@ -215,7 +216,7 @@ pub fn graph_from_json(doc: &Json) -> Result<Graph> {
             "bias" => b.bias(nname, one()?),
             "act" => {
                 let a = act_from_str(
-                    nd.get("act").and_then(Json::as_str).ok_or_else(|| anyhow!("{nname}: missing act"))?,
+                    nd.get("act").and_then(Json::as_str).ok_or_else(|| CompileError::parse(format!("{nname}: missing act")))?,
                 )?;
                 b.activation(nname, one()?, a)
             }
@@ -236,25 +237,26 @@ pub fn graph_from_json(doc: &Json) -> Result<Graph> {
             }
             "upsample" => b.upsample(nname, one()?, get_usize("factor")?),
             "identity" => b.identity(nname, one()?),
-            _ => bail!("unknown op {op:?} at node {nname}"),
+            _ => return Err(CompileError::parse(format!("unknown op {op:?} at node {nname}"))),
         };
         ids.insert(nname.to_string(), id);
     }
     let g = b.finish();
-    crate::graph::validate(&g).map_err(|e| anyhow!("{e}"))?;
+    crate::graph::validate(&g)?;
     Ok(g)
 }
 
 /// Save a graph as pretty-printed frozen JSON.
 pub fn save_frozen(g: &Graph, path: &std::path::Path) -> Result<()> {
     std::fs::write(path, graph_to_json(g).to_string_pretty())
-        .with_context(|| format!("writing {}", path.display()))
+        .map_err(|e| CompileError::io(path, e))
 }
 
 /// Load a frozen JSON model file.
 pub fn load_frozen(path: &std::path::Path) -> Result<Graph> {
-    let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
-    let doc = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let text = std::fs::read_to_string(path).map_err(|e| CompileError::io(path, e))?;
+    let doc = parse(&text)
+        .map_err(|e| CompileError::parse(format!("{}: {e}", path.display())))?;
     graph_from_json(&doc)
 }
 

@@ -133,7 +133,7 @@ mod tests {
     use super::*;
     use crate::alloc::allocate;
     use crate::analyzer::analyze;
-    use crate::coordinator::compile_model;
+    use crate::compiler::Compiler;
     use crate::optimizer::dram_access;
     use crate::zoo;
 
@@ -145,7 +145,7 @@ mod tests {
         let cfg = crate::config::AccelConfig::kcu1500_int8();
         for &name in zoo::MODEL_NAMES {
             let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
-            let r = compile_model(&g, &cfg);
+            let r = Compiler::new(cfg.clone()).compile(&g).unwrap();
             let alloc = allocate(&r.grouped, &r.evaluation.policy, &cfg);
             let staged: Vec<bool> = alloc.assigns.iter().map(|a| a.staged_input).collect();
             let also: Vec<bool> = alloc.assigns.iter().map(|a| a.also_dram).collect();
@@ -167,7 +167,7 @@ mod tests {
     fn weights_counted_exactly_once() {
         let cfg = crate::config::AccelConfig::kcu1500_int8();
         let g = zoo::resnet50(224);
-        let r = compile_model(&g, &cfg);
+        let r = Compiler::new(cfg.clone()).compile(&g).unwrap();
         let alloc = allocate(&r.grouped, &r.evaluation.policy, &cfg);
         let staged: Vec<bool> = alloc.assigns.iter().map(|a| a.staged_input).collect();
         let also: Vec<bool> = alloc.assigns.iter().map(|a| a.also_dram).collect();

@@ -5,7 +5,7 @@
 use shortcutfusion::alloc::{allocate, layout};
 use shortcutfusion::analyzer::analyze;
 use shortcutfusion::config::AccelConfig;
-use shortcutfusion::coordinator::compile_model;
+use shortcutfusion::compiler::Compiler;
 use shortcutfusion::funcsim::{execute, Params, Tensor};
 use shortcutfusion::graph::Shape;
 use shortcutfusion::isa::{decode, ReuseMode, WORDS_PER_INSTR};
@@ -20,8 +20,9 @@ fn frozen_json_through_full_pipeline() {
     let g = zoo::resnet50(224);
     let g2 = graph_from_json(&graph_to_json(&g)).unwrap();
     let cfg = AccelConfig::kcu1500_int8();
-    let r1 = compile_model(&g, &cfg);
-    let r2 = compile_model(&g2, &cfg);
+    let compiler = Compiler::new(cfg);
+    let r1 = compiler.compile(&g).unwrap();
+    let r2 = compiler.compile(&g2).unwrap();
     assert_eq!(r1.timing.total_cycles, r2.timing.total_cycles);
     assert_eq!(r1.evaluation.dram.total, r2.evaluation.dram.total);
     assert_eq!(r1.stream.words, r2.stream.words);
@@ -32,7 +33,7 @@ fn instruction_stream_decodes_and_matches_groups() {
     let cfg = AccelConfig::kcu1500_int8();
     for name in ["yolov3", "efficientnet-b1"] {
         let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
-        let r = compile_model(&g, &cfg);
+        let r = Compiler::new(cfg.clone()).compile(&g).unwrap();
         for (i, gr) in r.grouped.groups.iter().enumerate() {
             let chunk: [u32; WORDS_PER_INSTR] = r.stream.words
                 [i * WORDS_PER_INSTR..(i + 1) * WORDS_PER_INSTR]
@@ -66,7 +67,7 @@ fn funcsim_runs_the_optimized_tinynet_stream() {
     // full compile of TinyNet + funcsim execution over random params
     let cfg = AccelConfig::kcu1500_int8();
     let g = zoo::tinynet();
-    let r = compile_model(&g, &cfg);
+    let r = Compiler::new(cfg.clone()).compile(&g).unwrap();
     let params = Params::random(&r.grouped, 11);
     let mut rng = Rng::from_seed(12);
     let input = Tensor::from_vec(zoo::TINYNET_INPUT, rng.i8_vec(zoo::TINYNET_INPUT.numel()));
@@ -104,7 +105,7 @@ fn dram_layout_consistent_with_placements() {
 fn sixteen_bit_mode_consistency() {
     // Table II config must flow end to end as well.
     let cfg = AccelConfig::table2_int16();
-    let r = compile_model(&zoo::resnet152(224), &cfg);
+    let r = Compiler::new(cfg.clone()).compile(&zoo::resnet152(224)).unwrap();
     assert!(r.evaluation.feasible);
     assert!(r.latency_ms() > 10.0 && r.latency_ms() < 80.0, "{}", r.latency_ms());
     // weights at 2 bytes
@@ -119,7 +120,7 @@ fn concat_only_and_plain_networks_compile() {
     let cfg = AccelConfig::kcu1500_int8();
     for name in ["vgg16-conv", "yolov2", "efficientdet-d0"] {
         let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
-        let r = compile_model(&g, &cfg);
+        let r = Compiler::new(cfg.clone()).compile(&g).unwrap();
         assert!(r.latency_ms() > 0.0, "{name}");
     }
 }

@@ -1,0 +1,154 @@
+//! The staged-API contract tests:
+//!
+//! 1. the deprecated `compile_model` wrapper is bit-identical to driving
+//!    the stages by hand, for every zoo model;
+//! 2. `Session` cache hits return byte-identical instruction streams
+//!    (property-tested over random job orders and thread counts);
+//! 3. baseline strategies produce well-formed reports through the same
+//!    pipeline.
+
+use std::sync::Arc;
+
+use shortcutfusion::compiler::{
+    CompileError, Compiler, FixedReuseStrategy, Session, ShortcutMiningStrategy,
+    SmartShuttleStrategy, SweepJob,
+};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::isa::ReuseMode;
+use shortcutfusion::testutil::forall;
+use shortcutfusion::zoo;
+
+#[test]
+#[allow(deprecated)]
+fn wrapper_is_equivalent_to_staged_api_for_all_models() {
+    let cfg = AccelConfig::kcu1500_int8();
+    for &name in zoo::MODEL_NAMES {
+        let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+
+        // old one-shot entry point
+        let old = shortcutfusion::coordinator::compile_model(&g, &cfg);
+
+        // the staged pipeline, driven stage by stage
+        let compiler = Compiler::new(cfg.clone());
+        let analyzed = compiler.analyze(&g).unwrap();
+        let optimized = compiler.optimize(&analyzed).unwrap();
+        let allocated = compiler.allocate(&optimized).unwrap();
+        let lowered = compiler.lower(&allocated).unwrap();
+        let new = compiler.simulate(&lowered).unwrap().into_report();
+
+        assert_eq!(old.model, new.model, "{name}");
+        assert_eq!(old.evaluation.cuts.cuts, new.evaluation.cuts.cuts, "{name}");
+        assert_eq!(old.evaluation.policy, new.evaluation.policy, "{name}");
+        assert_eq!(old.evaluation.sram.total, new.evaluation.sram.total, "{name}");
+        assert_eq!(old.evaluation.dram.total, new.evaluation.dram.total, "{name}");
+        assert_eq!(old.timing.total_cycles, new.timing.total_cycles, "{name}");
+        assert_eq!(old.stream.words, new.stream.words, "{name}: streams must be bit-identical");
+        assert_eq!(old.row_groups, new.row_groups, "{name}");
+        assert_eq!(old.frame_groups, new.frame_groups, "{name}");
+        assert!((old.power.total_w - new.power.total_w).abs() < 1e-12, "{name}");
+    }
+}
+
+#[test]
+fn session_cache_hits_return_byte_identical_streams() {
+    // Property: for random (model, input, config) jobs in random order
+    // with random thread counts, every repeat compile of the same key
+    // yields the same Arc (pointer-equal) and, byte-compared anyway, the
+    // identical packed instruction stream.
+    let models = ["resnet18", "vgg16-conv", "yolov2", "efficientnet-b0"];
+    forall("session cache hits are byte-identical", 8, |rng| {
+        let session = Session::new();
+        let mut cfg_a = AccelConfig::kcu1500_int8();
+        cfg_a.sram_budget = 6_000_000 + rng.below(4) * 1_000_000;
+        let cfg_b = AccelConfig::kcu1500_int8();
+        let cfgs = [cfg_a, cfg_b];
+
+        // a job list with deliberate duplicates
+        let mut jobs = Vec::new();
+        for _ in 0..rng.range(4, 10) {
+            let m = *rng.choose(&models);
+            let input = [64usize, 96][rng.below(2)];
+            let cfg = cfgs[rng.below(2)].clone();
+            jobs.push(SweepJob { model: m.to_string(), input, cfg });
+        }
+        let threads = rng.range(1, 4);
+        let first = session.run_jobs(&jobs, threads);
+        let second = session.run_jobs(&jobs, threads);
+        for (i, (a, b)) in first.iter().zip(&second).enumerate() {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert!(Arc::ptr_eq(a, b), "job {i}: rerun must hit the cache");
+            let bytes_a: Vec<u8> =
+                a.stream.words.iter().flat_map(|w| w.to_le_bytes()).collect();
+            let bytes_b: Vec<u8> =
+                b.stream.words.iter().flat_map(|w| w.to_le_bytes()).collect();
+            assert_eq!(bytes_a, bytes_b, "job {i}: streams must be byte-identical");
+        }
+        let stats = session.stats();
+        assert_eq!(
+            stats.report_hits + stats.report_misses,
+            2 * jobs.len(),
+            "every job is either a hit or a miss"
+        );
+        assert!(stats.report_hits >= jobs.len(), "second pass must be all hits");
+    });
+}
+
+#[test]
+fn session_parallel_sweep_matches_fresh_compiles() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let session = Session::new();
+    let names = ["resnet18", "yolov2"];
+    let results = session.sweep_grid(&names, std::slice::from_ref(&cfg), 4);
+    for (&name, r) in names.iter().zip(results) {
+        let r = r.unwrap();
+        let direct = Compiler::new(cfg.clone())
+            .compile(&zoo::by_name(name, zoo::default_input(name)).unwrap())
+            .unwrap();
+        assert_eq!(direct.model, r.model);
+        assert_eq!(direct.stream.words, r.stream.words);
+        assert_eq!(direct.timing.total_cycles, r.timing.total_cycles);
+    }
+}
+
+#[test]
+fn baseline_strategies_flow_through_the_same_pipeline() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let g = zoo::resnet50(224);
+    for strategy in [
+        Arc::new(FixedReuseStrategy(ReuseMode::Row)) as Arc<dyn shortcutfusion::compiler::ReuseStrategy>,
+        Arc::new(FixedReuseStrategy(ReuseMode::Frame)),
+        Arc::new(ShortcutMiningStrategy),
+        Arc::new(SmartShuttleStrategy::default()),
+    ] {
+        let name = strategy.name();
+        let r = Compiler::with_strategy(cfg.clone(), strategy).compile(&g).unwrap();
+        assert_eq!(r.strategy, name);
+        assert_eq!(r.stream.len(), r.grouped.groups.len(), "{name}");
+        assert!(r.latency_ms() > 0.0, "{name}");
+        assert!(r.evaluation.dram.total > 0, "{name}");
+    }
+    // ordering sanity: the cut-point optimum never loses to the fixed
+    // ablations on DRAM-bound yolov2
+    let gy = zoo::yolov2(416);
+    let best = Compiler::new(cfg.clone()).compile(&gy).unwrap();
+    let row = Compiler::with_strategy(cfg.clone(), Arc::new(FixedReuseStrategy(ReuseMode::Row)))
+        .compile(&gy)
+        .unwrap();
+    assert!(best.latency_ms() <= row.latency_ms() * 1.0001);
+}
+
+#[test]
+fn unknown_models_and_infeasible_configs_are_typed() {
+    let session = Session::new();
+    match session.compile("alexnet", 224, &AccelConfig::kcu1500_int8()) {
+        Err(CompileError::UnknownModel(m)) => assert_eq!(m, "alexnet"),
+        other => panic!("expected UnknownModel, got {:?}", other.map(|r| r.model.clone())),
+    }
+    let mut tiny = AccelConfig::kcu1500_int8();
+    tiny.sram_budget = 1;
+    let strict = Compiler::new(tiny).strict_feasibility(true);
+    assert!(matches!(
+        strict.compile(&zoo::resnet18(64)),
+        Err(CompileError::Infeasible { .. })
+    ));
+}
