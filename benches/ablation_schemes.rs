@@ -17,7 +17,15 @@ fn main() {
         "ablation — latency (ms) per reuse policy",
         &["model", "naive row (wxH)", "all-row", "all-frame", "block-wise opt", "opt vs naive"],
     );
-    for name in ["vgg16-conv", "yolov2", "yolov3", "resnet50", "resnet152", "efficientnet-b1", "mobilenetv3-large"] {
+    for name in [
+        "vgg16-conv",
+        "yolov2",
+        "yolov3",
+        "resnet50",
+        "resnet152",
+        "efficientnet-b1",
+        "mobilenetv3-large",
+    ] {
         let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
         let gg = analyze(&g);
         let naive = naive_row_baseline(&gg, &cfg);

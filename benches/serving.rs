@@ -1,0 +1,92 @@
+//! Batched serving throughput of the `InferenceEngine`.
+//!
+//! Packs ResNet18@64 once, then serves waves of requests through the
+//! virtual-accelerator backend while sweeping the worker count and batch
+//! size. Reported numbers: wall-clock request throughput of the serving
+//! stack itself, plus the timing model's per-request latency percentiles
+//! (which are worker-independent — the hardware model prices a single
+//! accelerator instance per worker).
+//!
+//! Run: `cargo bench --bench serving` (or `cargo run --release --bin ...`
+//! style via the harness-free bench target).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use shortcutfusion::bench::Table;
+use shortcutfusion::compiler::Compiler;
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::engine::{EngineConfig, InferenceEngine, VirtualAccelBackend};
+use shortcutfusion::funcsim::Tensor;
+use shortcutfusion::program::Program;
+use shortcutfusion::testutil::Rng;
+use shortcutfusion::zoo;
+
+fn pack_model() -> Arc<Program> {
+    let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+    let analyzed = compiler.analyze(&zoo::resnet18(64)).expect("analyze");
+    let optimized = compiler.optimize(&analyzed).expect("optimize");
+    let allocated = compiler.allocate(&optimized).expect("allocate");
+    let lowered = compiler.lower(&allocated).expect("lower");
+    Arc::new(compiler.pack(&lowered).expect("pack"))
+}
+
+fn main() {
+    let program = pack_model();
+    // exercise the on-disk path too: serve what was loaded, not what was packed
+    let program = Arc::new(Program::from_bytes(&program.to_bytes()).expect("load"));
+    let shape = program.input_shape();
+    let requests = 64usize;
+
+    let mut inputs = Vec::with_capacity(requests);
+    let mut rng = Rng::from_seed(42);
+    for _ in 0..requests {
+        inputs.push(Tensor::from_vec(shape, rng.i8_vec(shape.numel())));
+    }
+
+    let mut t = Table::new(
+        &format!("serving {} ({} requests, virtual accelerator)", program.model(), requests),
+        &[
+            "workers",
+            "batch",
+            "wall ms",
+            "req/s",
+            "p50 ms",
+            "p95 ms",
+            "peak in-flight",
+            "batches",
+        ],
+    );
+
+    for &workers in &[1usize, 2, 4] {
+        for &batch in &[1usize, 4, 8] {
+            let engine = InferenceEngine::new(
+                program.clone(),
+                Arc::new(VirtualAccelBackend),
+                EngineConfig { workers, queue_capacity: 32, max_batch: batch },
+            );
+            let t0 = Instant::now();
+            let pending: Vec<_> = inputs
+                .iter()
+                .map(|i| engine.submit(i.clone()).expect("submit"))
+                .collect();
+            for p in pending {
+                p.wait().expect("wait");
+            }
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let stats = engine.shutdown();
+            assert_eq!(stats.completed, requests as u64);
+            t.row(&[
+                workers.to_string(),
+                batch.to_string(),
+                format!("{wall_ms:.2}"),
+                format!("{:.0}", requests as f64 / (wall_ms / 1e3)),
+                format!("{:.3}", stats.p50_ms),
+                format!("{:.3}", stats.p95_ms),
+                stats.peak_in_flight.to_string(),
+                stats.batches.to_string(),
+            ]);
+        }
+    }
+    t.print();
+}

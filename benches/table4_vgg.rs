@@ -34,7 +34,14 @@ fn main() {
 
     let mut t = Table::new(
         "Table IV — VGG-CONV buffer size vs DRAM access",
-        &["design", "precision", "SRAM MB (paper)", "SRAM MB (meas)", "DRAM MB (paper)", "DRAM MB (meas)"],
+        &[
+            "design",
+            "precision",
+            "SRAM MB (paper)",
+            "SRAM MB (meas)",
+            "DRAM MB (paper)",
+            "DRAM MB (meas)",
+        ],
     );
     t.row(&[
         "OLAccel [38]".into(),

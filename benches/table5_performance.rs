@@ -20,19 +20,88 @@ struct PaperRow {
 }
 
 const PAPER: &[PaperRow] = &[
-    PaperRow { model: "resnet50", input: 256, gop: 11.76, latency_ms: 11.69, gops: 1006.0, eff_pct: 61.4, offchip_fm_mb: 0.19, total_once_mb: 59.09, reduction_pct: 60.62 },
-    PaperRow { model: "resnet152", input: 256, gop: 31.16, latency_ms: 26.78, gops: 1163.0, eff_pct: 71.0, offchip_fm_mb: 0.19, total_once_mb: 130.2, reduction_pct: 56.7 },
-    PaperRow { model: "yolov2", input: 416, gop: 17.18, latency_ms: 14.73, gops: 1166.0, eff_pct: 71.2, offchip_fm_mb: 0.66, total_once_mb: 48.9, reduction_pct: 70.31 },
-    PaperRow { model: "yolov3", input: 416, gop: 65.86, latency_ms: 57.57, gops: 1142.0, eff_pct: 69.7, offchip_fm_mb: 90.6, total_once_mb: 153.5, reduction_pct: 60.34 },
-    PaperRow { model: "retinanet", input: 512, gop: 102.2, latency_ms: 93.16, gops: 1097.0, eff_pct: 67.0, offchip_fm_mb: 136.4, total_once_mb: 261.34, reduction_pct: 47.81 },
-    PaperRow { model: "efficientnet-b1", input: 256, gop: 1.38, latency_ms: 4.69, gops: 317.1, eff_pct: 19.37, offchip_fm_mb: 0.19, total_once_mb: 60.7, reduction_pct: 84.81 },
+    PaperRow {
+        model: "resnet50",
+        input: 256,
+        gop: 11.76,
+        latency_ms: 11.69,
+        gops: 1006.0,
+        eff_pct: 61.4,
+        offchip_fm_mb: 0.19,
+        total_once_mb: 59.09,
+        reduction_pct: 60.62,
+    },
+    PaperRow {
+        model: "resnet152",
+        input: 256,
+        gop: 31.16,
+        latency_ms: 26.78,
+        gops: 1163.0,
+        eff_pct: 71.0,
+        offchip_fm_mb: 0.19,
+        total_once_mb: 130.2,
+        reduction_pct: 56.7,
+    },
+    PaperRow {
+        model: "yolov2",
+        input: 416,
+        gop: 17.18,
+        latency_ms: 14.73,
+        gops: 1166.0,
+        eff_pct: 71.2,
+        offchip_fm_mb: 0.66,
+        total_once_mb: 48.9,
+        reduction_pct: 70.31,
+    },
+    PaperRow {
+        model: "yolov3",
+        input: 416,
+        gop: 65.86,
+        latency_ms: 57.57,
+        gops: 1142.0,
+        eff_pct: 69.7,
+        offchip_fm_mb: 90.6,
+        total_once_mb: 153.5,
+        reduction_pct: 60.34,
+    },
+    PaperRow {
+        model: "retinanet",
+        input: 512,
+        gop: 102.2,
+        latency_ms: 93.16,
+        gops: 1097.0,
+        eff_pct: 67.0,
+        offchip_fm_mb: 136.4,
+        total_once_mb: 261.34,
+        reduction_pct: 47.81,
+    },
+    PaperRow {
+        model: "efficientnet-b1",
+        input: 256,
+        gop: 1.38,
+        latency_ms: 4.69,
+        gops: 317.1,
+        eff_pct: 19.37,
+        offchip_fm_mb: 0.19,
+        total_once_mb: 60.7,
+        reduction_pct: 84.81,
+    },
 ];
 
 fn main() {
     let cfg = AccelConfig::kcu1500_int8();
     let mut t = Table::new(
         "Table V — proposed scheme on the 8-bit KCU1500 config (paper -> measured)",
-        &["model", "GOP", "latency ms", "GOPS", "MAC eff %", "off-chip FM MB", "baseline MB", "reduction %"],
+        &[
+            "model",
+            "GOP",
+            "latency ms",
+            "GOPS",
+            "MAC eff %",
+            "off-chip FM MB",
+            "baseline MB",
+            "reduction %",
+        ],
     );
     for p in PAPER {
         let graph = zoo::by_name(p.model, p.input).unwrap();

@@ -15,7 +15,17 @@ fn main() {
 
     let mut t = Table::new(
         "Table VI — end-to-end frameworks, ResNet50 inference",
-        &["framework", "platform", "input", "latency ms", "GOPS", "SRAM MB", "DSP eff %", "flex reuse", "shortcut HW"],
+        &[
+            "framework",
+            "platform",
+            "input",
+            "latency ms",
+            "GOPS",
+            "SRAM MB",
+            "DSP eff %",
+            "flex reuse",
+            "shortcut HW",
+        ],
     );
     for f in &TABLE6_FRAMEWORKS {
         t.row(&[

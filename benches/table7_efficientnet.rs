@@ -18,16 +18,52 @@ struct PaperRow {
 }
 
 const PAPER: &[PaperRow] = &[
-    PaperRow { input: 256, gops: 317.1, eff_pct: 19.37, offchip_fm_mb: 0.19, total_once_mb: 60.7, reduction_pct: 84.81, power_w: 21.09, gops_per_w: 15.0 },
-    PaperRow { input: 512, gops: 267.4, eff_pct: 16.3, offchip_fm_mb: 144.0, total_once_mb: 216.0, reduction_pct: 29.2, power_w: 23.76, gops_per_w: 11.3 },
-    PaperRow { input: 768, gops: 274.4, eff_pct: 16.75, offchip_fm_mb: 344.0, total_once_mb: 475.0, reduction_pct: 27.6, power_w: 26.71, gops_per_w: 10.3 },
+    PaperRow {
+        input: 256,
+        gops: 317.1,
+        eff_pct: 19.37,
+        offchip_fm_mb: 0.19,
+        total_once_mb: 60.7,
+        reduction_pct: 84.81,
+        power_w: 21.09,
+        gops_per_w: 15.0,
+    },
+    PaperRow {
+        input: 512,
+        gops: 267.4,
+        eff_pct: 16.3,
+        offchip_fm_mb: 144.0,
+        total_once_mb: 216.0,
+        reduction_pct: 29.2,
+        power_w: 23.76,
+        gops_per_w: 11.3,
+    },
+    PaperRow {
+        input: 768,
+        gops: 274.4,
+        eff_pct: 16.75,
+        offchip_fm_mb: 344.0,
+        total_once_mb: 475.0,
+        reduction_pct: 27.6,
+        power_w: 26.71,
+        gops_per_w: 10.3,
+    },
 ];
 
 fn main() {
     let cfg = AccelConfig::kcu1500_int8();
     let mut t = Table::new(
         "Table VII — EfficientNet-B1 scalability (paper -> measured)",
-        &["input", "GOPS", "MAC eff %", "off-chip FM MB", "baseline MB", "reduction %", "power W", "GOPS/W"],
+        &[
+            "input",
+            "GOPS",
+            "MAC eff %",
+            "off-chip FM MB",
+            "baseline MB",
+            "reduction %",
+            "power W",
+            "GOPS/W",
+        ],
     );
     for p in PAPER {
         let graph = zoo::efficientnet_b1(p.input);

@@ -1,4 +1,5 @@
-//! Quickstart: compile one CNN end-to-end and print the full report.
+//! Quickstart: compile one CNN end-to-end, print the full report, then
+//! pack + serve a deployable program.
 //!
 //! ```text
 //! cargo run --release --example quickstart [model] [input]
@@ -7,11 +8,23 @@
 //! analyzer fusion → reuse-aware cut-point optimization → static 3-buffer
 //! allocation → 11-word instruction stream → cycle-accurate timing
 //! simulation → power estimate — and shows the per-stage artifacts.
+//! Afterwards it packs TinyNet-SE into a `Program` artifact, round-trips
+//! it through disk, executes it on the reference and virtual-accelerator
+//! backends, and serves a burst of requests through the
+//! `InferenceEngine` (this half doubles as the CI serving smoke test).
+
+use std::sync::Arc;
 
 use shortcutfusion::bench::Table;
 use shortcutfusion::compiler::{CompileError, Compiler};
 use shortcutfusion::config::AccelConfig;
+use shortcutfusion::engine::{
+    EngineConfig, ExecutionBackend, InferenceEngine, ReferenceBackend, VirtualAccelBackend,
+};
+use shortcutfusion::funcsim::{Params, Tensor};
 use shortcutfusion::isa::ReuseMode;
+use shortcutfusion::program::Program;
+use shortcutfusion::testutil::Rng;
 use shortcutfusion::zoo;
 
 fn main() -> shortcutfusion::Result<()> {
@@ -67,7 +80,10 @@ fn main() -> shortcutfusion::Result<()> {
     t.row(&["DRAM feature maps".into(), format!("{:.2} MB", r.offchip_fm_mb())]);
     t.row(&["baseline (once)".into(), format!("{:.2} MB", r.baseline_once_mb())]);
     t.row(&["off-chip reduction".into(), format!("{:.1} %", r.reduction_pct())]);
-    t.row(&["power".into(), format!("{:.1} W ({:.1} GOPS/W)", r.power.total_w, r.power.gops_per_w)]);
+    t.row(&[
+        "power".into(),
+        format!("{:.1} W ({:.1} GOPS/W)", r.power.total_w, r.power.gops_per_w),
+    ]);
     t.row(&["instructions".into(), format!("{} x 11 words", r.stream.len())]);
     t.print();
 
@@ -90,5 +106,74 @@ fn main() -> shortcutfusion::Result<()> {
             if ins.fused_eltwise { "+shortcut" } else { "" },
         );
     }
+
+    serve_demo()
+}
+
+/// Pack TinyNet-SE into a deployable `Program`, round-trip it through
+/// disk, execute on both simulation backends, and serve a burst through
+/// the batching engine.
+fn serve_demo() -> shortcutfusion::Result<()> {
+    println!("\n== deployable program + serving demo (TinyNet-SE) ==");
+    let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+    let analyzed = compiler.analyze(&zoo::tinynet())?;
+    let compiler = compiler.with_params(Params::random(&analyzed.grouped, 7));
+    let lowered = compiler.lower(&compiler.allocate(&compiler.optimize(&analyzed)?)?)?;
+    let program = compiler.pack(&lowered)?;
+
+    let dir = std::env::temp_dir().join("sf_quickstart");
+    std::fs::create_dir_all(&dir).map_err(|e| CompileError::io(&dir, e))?;
+    let path = dir.join("tinynet.sfp");
+    program.save(&path)?;
+    let program = Arc::new(Program::load(&path)?);
+    println!(
+        "packed {} -> {} ({} instructions, params included: {})",
+        program.model(),
+        path.display(),
+        program.stream().len(),
+        program.params().is_some()
+    );
+
+    let shape = program.input_shape();
+    let mut rng = Rng::from_seed(1);
+    let input = Tensor::from_vec(shape, rng.i8_vec(shape.numel()));
+
+    let bit_exact = ReferenceBackend.run(&program, &input)?;
+    let out = bit_exact.output.expect("reference backend returns tensors");
+    let head = &out.data[..out.data.len().min(6)];
+    println!("reference backend: output {} ({head:?} ...)", out.shape);
+
+    let cost = VirtualAccelBackend.run(&program, &input)?;
+    println!(
+        "virtual accelerator: {:.4} ms/inference, {:.3} MB DRAM traffic",
+        cost.model_latency_ms.unwrap(),
+        cost.dram_bytes.unwrap() as f64 / 1e6
+    );
+
+    let engine = InferenceEngine::new(
+        program.clone(),
+        Arc::new(VirtualAccelBackend),
+        EngineConfig { workers: 2, queue_capacity: 16, max_batch: 4 },
+    );
+    let pending: Vec<_> = (0..16)
+        .map(|i| {
+            let mut rng = Rng::from_seed(i as u64);
+            engine.submit(Tensor::from_vec(shape, rng.i8_vec(shape.numel())))
+        })
+        .collect::<shortcutfusion::Result<_>>()?;
+    for p in pending {
+        p.wait()?;
+    }
+    let stats = engine.shutdown();
+    println!(
+        "engine: {} requests served by {} workers, {:.0} req/s, p50 {:.4} ms, p95 {:.4} ms, peak in-flight {}",
+        stats.completed,
+        stats.per_worker.len(),
+        stats.throughput_rps,
+        stats.p50_ms,
+        stats.p95_ms,
+        stats.peak_in_flight
+    );
+    assert_eq!(stats.completed, 16, "serving smoke: every request must complete");
     Ok(())
 }

@@ -144,7 +144,10 @@ mod tests {
     use crate::analyzer::analyze;
     use crate::zoo;
 
-    fn mk(model: &str, mode: ReuseMode) -> (GroupedGraph, Vec<ReuseMode>, AllocResult, AccelConfig) {
+    fn mk(
+        model: &str,
+        mode: ReuseMode,
+    ) -> (GroupedGraph, Vec<ReuseMode>, AllocResult, AccelConfig) {
         let gg = analyze(&zoo::by_name(model, zoo::default_input(model)).unwrap());
         let cfg = AccelConfig::kcu1500_int8();
         let policy = vec![mode; gg.groups.len()];

@@ -101,7 +101,9 @@ pub fn allocate(gg: &GroupedGraph, policy: &[ReuseMode], cfg: &AccelConfig) -> A
         let mut in_loc = if vector_in {
             Loc::Aux
         } else {
-            main_src.map(|s| live[s.0].as_ref().map(|t| t.loc).unwrap_or(Loc::Dram)).unwrap_or(Loc::Dram)
+            main_src
+                .map(|s| live[s.0].as_ref().map(|t| t.loc).unwrap_or(Loc::Dram))
+                .unwrap_or(Loc::Dram)
         };
 
         // Second operand: fused shortcut, scale gate, or concat second.

@@ -39,10 +39,14 @@ pub fn analyze(graph: &Graph) -> GroupedGraph {
             OpKind::Fc { .. } => GroupKind::Fc,
             OpKind::ScaleMul => GroupKind::Scale,
             OpKind::EltwiseAdd => GroupKind::Eltwise,
-            OpKind::MaxPool { .. } | OpKind::AvgPool { .. } | OpKind::GlobalAvgPool => GroupKind::Pool,
+            OpKind::MaxPool { .. } | OpKind::AvgPool { .. } | OpKind::GlobalAvgPool => {
+                GroupKind::Pool
+            }
             OpKind::Concat => GroupKind::Concat,
             OpKind::Upsample { .. } => GroupKind::Upsample,
-            OpKind::Act(_) | OpKind::BatchNorm | OpKind::BiasAdd | OpKind::Identity => GroupKind::Act,
+            OpKind::Act(_) | OpKind::BatchNorm | OpKind::BiasAdd | OpKind::Identity => {
+                GroupKind::Act
+            }
         };
         let mut group = Group {
             id: gid,

@@ -115,7 +115,10 @@ impl GroupedGraph {
     /// "CONV layer" count at group granularity.
     pub fn compute_groups(&self) -> impl Iterator<Item = &Group> {
         self.groups.iter().filter(|gr| {
-            matches!(gr.kind, GroupKind::Conv | GroupKind::DwConv | GroupKind::Fc | GroupKind::Scale)
+            matches!(
+                gr.kind,
+                GroupKind::Conv | GroupKind::DwConv | GroupKind::Fc | GroupKind::Scale
+            )
         })
     }
 

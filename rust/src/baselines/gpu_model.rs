@@ -31,8 +31,13 @@ pub struct Gpu {
 }
 
 /// The GPUs of Fig 18.
-pub const RTX_2080_TI: Gpu =
-    Gpu { name: "RTX 2080 Ti", peak_tflops: 13.45, mem_gbps: 616.0, launch_us: 55.0, board_w: 120.0 };
+pub const RTX_2080_TI: Gpu = Gpu {
+    name: "RTX 2080 Ti",
+    peak_tflops: 13.45,
+    mem_gbps: 616.0,
+    launch_us: 55.0,
+    board_w: 120.0,
+};
 pub const RTX_3090: Gpu =
     Gpu { name: "RTX 3090", peak_tflops: 35.6, mem_gbps: 936.0, launch_us: 50.0, board_w: 160.0 };
 pub const TITAN_XP: Gpu =
@@ -115,7 +120,8 @@ mod tests {
         // grows sub-quadratically thanks to rising utilization.
         let l256 = estimate(&b1(256), &RTX_2080_TI).latency_ms;
         let l768 = estimate(&b1(768), &RTX_2080_TI).latency_ms;
-        let work_ratio = zoo::efficientnet_b1(768).total_gop() / zoo::efficientnet_b1(256).total_gop();
+        let work_ratio =
+            zoo::efficientnet_b1(768).total_gop() / zoo::efficientnet_b1(256).total_gop();
         assert!(l768 / l256 < work_ratio * 0.6, "{} -> {}", l256, l768);
     }
 

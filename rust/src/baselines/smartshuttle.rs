@@ -43,7 +43,11 @@ pub fn smartshuttle_weight_traffic(gg: &GroupedGraph, cfg: &AccelConfig) -> u64 
 
 /// Evaluate SmartShuttle's DRAM traffic with `buffer_bytes` of on-chip
 /// SRAM.
-pub fn smartshuttle_dram(gg: &GroupedGraph, cfg: &AccelConfig, buffer_bytes: usize) -> SmartShuttleResult {
+pub fn smartshuttle_dram(
+    gg: &GroupedGraph,
+    cfg: &AccelConfig,
+    buffer_bytes: usize,
+) -> SmartShuttleResult {
     let qa = cfg.qa as u64;
     let qw = cfg.qw as u64;
     let qs = 4u64; // psum width
@@ -64,7 +68,8 @@ pub fn smartshuttle_dram(gg: &GroupedGraph, cfg: &AccelConfig, buffer_bytes: usi
                 // non-conv groups stream once (pool/eltwise handled by the
                 // conv they fuse with in [12]'s model)
                 if matches!(gr.kind, GroupKind::Pool | GroupKind::Eltwise | GroupKind::Upsample) {
-                    dram += (gr.in_shape.bytes(qa as usize) + gr.out_shape.bytes(qa as usize)) as u64;
+                    dram +=
+                        (gr.in_shape.bytes(qa as usize) + gr.out_shape.bytes(qa as usize)) as u64;
                 }
                 continue;
             }

@@ -37,6 +37,10 @@ pub enum CompileError {
     StageMismatch(String),
     /// Functional simulation of a lowered stream failed.
     Exec(String),
+    /// A packed [`crate::program::Program`] artifact is malformed:
+    /// bad magic/version, checksum mismatch, truncated section, or
+    /// contents inconsistent with the embedded graph.
+    Artifact(String),
     /// Functionality compiled out of this build (e.g. the PJRT runtime
     /// without the `pjrt` feature).
     Unsupported(String),
@@ -61,6 +65,10 @@ impl CompileError {
 
     pub fn unsupported(msg: impl Into<String>) -> Self {
         CompileError::Unsupported(msg.into())
+    }
+
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        CompileError::Artifact(msg.into())
     }
 
     pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
@@ -88,6 +96,7 @@ impl fmt::Display for CompileError {
             ),
             CompileError::StageMismatch(m) => write!(f, "stage mismatch: {m}"),
             CompileError::Exec(m) => write!(f, "execution error: {m}"),
+            CompileError::Artifact(m) => write!(f, "program artifact error: {m}"),
             CompileError::Unsupported(m) => write!(f, "unsupported: {m}"),
         }
     }

@@ -58,7 +58,8 @@ use crate::isa::{lower, MemAssign};
 use crate::power::{estimate as power_estimate, PowerModel};
 use crate::sim::simulate;
 
-use stages::{quant_shift_for, to_memloc};
+use stages::to_memloc;
+pub(crate) use stages::quant_shift_for;
 
 /// The staged compiler: one target configuration + one reuse strategy.
 ///
@@ -191,7 +192,11 @@ impl Compiler {
             assigns.push(MemAssign {
                 reuse: allocated.evaluation.policy[gi],
                 in_loc: to_memloc(&allocated.alloc.assigns[gi].in_loc, &allocated.dram_layout, gi),
-                out_loc: to_memloc(&allocated.alloc.assigns[gi].out_loc, &allocated.dram_layout, gi),
+                out_loc: to_memloc(
+                    &allocated.alloc.assigns[gi].out_loc,
+                    &allocated.dram_layout,
+                    gi,
+                ),
                 aux_loc: allocated.alloc.assigns[gi]
                     .aux_loc
                     .as_ref()
@@ -242,6 +247,24 @@ impl Compiler {
             timing,
             power,
         })
+    }
+
+    /// Stage 6 — packing: collapse a lowered artifact into a deployable
+    /// [`crate::program::Program`], the §III-A driver payload
+    /// (instructions + memory assignment + target config + the attached
+    /// quantized parameters, if any) that the [`crate::engine`] backends
+    /// execute and [`crate::program::Program::save`] writes to disk.
+    pub fn pack(&self, lowered: &Lowered) -> Result<crate::program::Program, CompileError> {
+        self.check_cfg("Lowered", &lowered.cfg)?;
+        crate::program::Program::from_parts(
+            lowered.model.clone(),
+            lowered.strategy.to_string(),
+            lowered.cfg.clone(),
+            lowered.grouped.clone(),
+            lowered.alloc.assigns.clone(),
+            lowered.stream.words.clone(),
+            self.params.as_deref().cloned(),
+        )
     }
 
     /// All five stages in sequence.
@@ -337,7 +360,8 @@ mod tests {
         let analyzed = compiler.analyze(&g).unwrap();
         let params = Params::random(&analyzed.grouped, 3);
         let with = Compiler::new(AccelConfig::kcu1500_int8()).with_params(params.clone());
-        let lowered = with.lower(&with.allocate(&with.optimize(&analyzed).unwrap()).unwrap()).unwrap();
+        let lowered =
+            with.lower(&with.allocate(&with.optimize(&analyzed).unwrap()).unwrap()).unwrap();
         // Params::random sets shift = 7 on every weighted group.
         let shifted = lowered.assigns.iter().filter(|a| a.quant_shift == 7).count();
         assert!(shifted > 0, "no group picked up a parameter shift");

@@ -266,7 +266,7 @@ pub(super) fn to_memloc(l: &Loc, lay: &OffchipLayout, gi: usize) -> MemLoc {
 /// unparameterized compile has nothing principled to encode, and the
 /// functional simulator reads the real shifts from the parameter file at
 /// execution time either way.
-pub(super) fn quant_shift_for(
+pub(crate) fn quant_shift_for(
     gg: &GroupedGraph,
     gi: usize,
     params: Option<&Params>,

@@ -8,6 +8,7 @@
 //! offline — DESIGN.md §9).
 
 use crate::compiler::CompileError;
+use crate::serialize::Json;
 use crate::Result;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -117,6 +118,63 @@ impl AccelConfig {
         self.dram_gbps * 1e9 / (self.freq_mhz * 1e6)
     }
 
+    /// Serialize every field to JSON (the packed [`crate::program`]
+    /// artifact embeds the full target description, so a loaded program
+    /// never depends on a preset being available).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("ti", Json::num(self.ti as f64)),
+            ("to", Json::num(self.to as f64)),
+            ("freq_mhz", Json::num(self.freq_mhz)),
+            ("dsp_mac", Json::num(self.dsp_mac as f64)),
+            ("dsp_total", Json::num(self.dsp_total as f64)),
+            ("mults_per_dsp", Json::num(self.mults_per_dsp as f64)),
+            ("bram18k_total", Json::num(self.bram18k_total as f64)),
+            ("qa", Json::num(self.qa as f64)),
+            ("qw", Json::num(self.qw as f64)),
+            ("qs", Json::num(self.qs as f64)),
+            ("dram_gbps", Json::num(self.dram_gbps)),
+            ("sram_budget", Json::num(self.sram_budget as f64)),
+        ])
+    }
+
+    /// Exact inverse of [`AccelConfig::to_json`]; every field must be
+    /// present (a partial config would silently change the target).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let text = |key: &str| -> Result<String> {
+            doc.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| CompileError::config(format!("config json: missing string {key:?}")))
+        };
+        let float = |key: &str| -> Result<f64> {
+            doc.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| CompileError::config(format!("config json: missing number {key:?}")))
+        };
+        let uint = |key: &str| -> Result<usize> {
+            doc.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                CompileError::config(format!("config json: missing integer {key:?}"))
+            })
+        };
+        Ok(AccelConfig {
+            name: text("name")?,
+            ti: uint("ti")?,
+            to: uint("to")?,
+            freq_mhz: float("freq_mhz")?,
+            dsp_mac: uint("dsp_mac")?,
+            dsp_total: uint("dsp_total")?,
+            mults_per_dsp: uint("mults_per_dsp")?,
+            bram18k_total: uint("bram18k_total")?,
+            qa: uint("qa")?,
+            qw: uint("qw")?,
+            qs: uint("qs")?,
+            dram_gbps: float("dram_gbps")?,
+            sram_budget: uint("sram_budget")?,
+        })
+    }
+
     /// Load from a TOML-subset file, starting from the named preset and
     /// applying overrides.
     pub fn from_toml_file(path: &Path) -> Result<Self> {
@@ -209,6 +267,28 @@ mod tests {
     fn toml_rejects_unknown_keys() {
         assert!(AccelConfig::from_toml("bogus = 1\n").is_err());
         assert!(AccelConfig::from_toml("preset = \"nope\"\n").is_err());
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        for cfg in [AccelConfig::kcu1500_int8(), AccelConfig::table2_int16()] {
+            let j = cfg.to_json();
+            let back = AccelConfig::from_json(&j).unwrap();
+            assert_eq!(cfg, back);
+            // and the serialized text is stable across a reparse
+            let text = j.to_string_compact();
+            let j2 = crate::serialize::parse(&text).unwrap();
+            assert_eq!(AccelConfig::from_json(&j2).unwrap().to_json().to_string_compact(), text);
+        }
+    }
+
+    #[test]
+    fn json_rejects_missing_fields() {
+        let mut j = AccelConfig::kcu1500_int8().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("freq_mhz");
+        }
+        assert!(AccelConfig::from_json(&j).is_err());
     }
 
     #[test]

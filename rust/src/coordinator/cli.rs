@@ -4,6 +4,11 @@
 //! ```text
 //! shortcutfusion list
 //! shortcutfusion compile <model> [--input N] [--config FILE] [--strategy S]
+//! shortcutfusion pack    <model> [--input N] [--config FILE] [--strategy S]
+//!                        [--params FILE | --random-params] --out FILE
+//! shortcutfusion run     FILE [--backend B] [--seed N]
+//! shortcutfusion serve-bench FILE [--backend B] [--requests N] [--workers N]
+//!                        [--batch N] [--queue N]
 //! shortcutfusion sweep   <model> [--input N]
 //! shortcutfusion minbuf  [<model> ...]
 //! shortcutfusion export  <model> [--input N] --out FILE
@@ -12,11 +17,19 @@
 //! shortcutfusion help
 //! ```
 
+use std::sync::Arc;
+
 use crate::bench::Table;
 use crate::compiler::{strategy, CompileError, Compiler, Session};
 use crate::config::AccelConfig;
+use crate::engine::{
+    backend_by_name, EngineConfig, ExecutionBackend, InferenceEngine, BACKEND_NAMES,
+};
+use crate::funcsim::{Params, Tensor};
 use crate::optimizer::Optimizer;
+use crate::program::Program;
 use crate::serialize::{load_frozen, save_frozen};
+use crate::testutil::Rng;
 use crate::zoo;
 use crate::Result;
 
@@ -30,6 +43,14 @@ COMMANDS:
     list                         list zoo models and reuse strategies
     compile <model> [--input N] [--config FILE] [--strategy S]
                                  run the staged pipeline and print the report
+    pack <model> [--input N] [--config FILE] [--strategy S]
+         [--params FILE | --random-params] --out FILE
+                                 compile and pack a deployable program artifact
+    run FILE [--backend B] [--seed N]
+                                 execute a packed program once
+    serve-bench FILE [--backend B] [--requests N] [--workers N] [--batch N] [--queue N]
+                                 serve a packed program through the inference
+                                 engine and print the serving stats
     sweep <model> [--input N] [--csv FILE]
                                  cut-point sweep (Fig 16/17 series)
     minbuf [<model> ...]         minimum buffer search (Table III)
@@ -43,6 +64,12 @@ COMMANDS:
 STRATEGIES (for --strategy):
     cutpoint (default), min-buffer, fixed-row, fixed-frame,
     shortcut-mining, smartshuttle
+
+BACKENDS (for --backend):
+    virtual (default: timing + DRAM traffic of the virtual accelerator),
+    reference (bit-exact funcsim; the program must carry parameters),
+    pjrt (stub: packed programs do not embed HLO artifacts yet — always
+          reports Unsupported; see MIGRATION.md)
 ";
 
 /// CLI entry point.
@@ -59,6 +86,9 @@ pub fn run(args: Vec<String>) -> Result<()> {
             Ok(())
         }
         "compile" => cmd_compile(&rest),
+        "pack" => cmd_pack(&rest),
+        "run" => cmd_run(&rest),
+        "serve-bench" => cmd_serve_bench(&rest),
         "sweep" => cmd_sweep(&rest),
         "minbuf" => cmd_minbuf(&rest),
         "export" => cmd_export(&rest),
@@ -92,7 +122,9 @@ fn parse_model(args: &[String]) -> Result<(crate::graph::Graph, AccelConfig)> {
     let name = args
         .first()
         .filter(|a| !a.starts_with("--"))
-        .ok_or_else(|| CompileError::config("expected a model name — see `shortcutfusion list`"))?;
+        .ok_or_else(|| {
+            CompileError::config("expected a model name — see `shortcutfusion list`")
+        })?;
     let input = match flag_value(args, "--input") {
         Some(v) => v
             .parse::<usize>()
@@ -155,6 +187,150 @@ fn cmd_compile(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_pack(args: &[String]) -> Result<()> {
+    let (graph, cfg) = parse_model(args)?;
+    let out = flag_value(args, "--out")
+        .ok_or_else(|| CompileError::config("--out FILE required"))?;
+    let mut compiler = Compiler::with_strategy(cfg, parse_strategy(args)?.into());
+    let analyzed = compiler.analyze(&graph)?;
+    if let Some(p) = flag_value(args, "--params") {
+        compiler = compiler.with_params(Params::from_file(std::path::Path::new(&p))?);
+    } else if args.iter().any(|a| a == "--random-params") {
+        // deterministic synthetic parameters, for demos and CI smoke runs
+        compiler = compiler.with_params(Params::random(&analyzed.grouped, 7));
+    }
+    let lowered = compiler.lower(&compiler.allocate(&compiler.optimize(&analyzed)?)?)?;
+    let program = compiler.pack(&lowered)?;
+    let bytes = program.to_bytes();
+    std::fs::write(&out, &bytes).map_err(|e| CompileError::io(&out, e))?;
+    println!(
+        "packed {} [{}] for {}: {} instructions, {} artifact bytes{} -> {}",
+        program.model(),
+        program.strategy(),
+        program.cfg().name,
+        program.stream().len(),
+        bytes.len(),
+        if program.params().is_some() { " (params included)" } else { "" },
+        out
+    );
+    Ok(())
+}
+
+fn parse_backend(args: &[String]) -> Result<Arc<dyn ExecutionBackend>> {
+    let name = flag_value(args, "--backend").unwrap_or_else(|| "virtual".into());
+    backend_by_name(&name).ok_or_else(|| {
+        CompileError::config(format!("unknown backend {name:?} — one of {BACKEND_NAMES:?}"))
+    })
+}
+
+fn parse_count(args: &[String], flag: &str, default: usize) -> Result<usize> {
+    match flag_value(args, flag) {
+        None => Ok(default),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n > 0 => Ok(n),
+            _ => Err(CompileError::config(format!(
+                "bad {flag} {v:?} (need a positive integer)"
+            ))),
+        },
+    }
+}
+
+/// Deterministic random input for a loaded program.
+fn program_input(program: &Program, seed: u64) -> Tensor {
+    let shape = program.input_shape();
+    let mut rng = Rng::from_seed(seed);
+    Tensor::from_vec(shape, rng.i8_vec(shape.numel()))
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let path = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .ok_or_else(|| CompileError::config("expected a packed program file"))?;
+    let program = Program::load(std::path::Path::new(path))?;
+    let backend = parse_backend(args)?;
+    let seed = flag_value(args, "--seed")
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| CompileError::config(format!("bad --seed {v:?}")))
+        })
+        .transpose()?
+        .unwrap_or(1);
+    println!(
+        "{} [{}] on {} via {} (input {}, seed {seed})",
+        program.model(),
+        program.strategy(),
+        program.cfg().name,
+        backend.name(),
+        program.input_shape(),
+    );
+    let input = program_input(&program, seed);
+    let r = backend.run(&program, &input)?;
+    if let Some(out) = &r.output {
+        let preview: Vec<i8> = out.data.iter().copied().take(8).collect();
+        println!("output: shape {}, first values {preview:?}", out.shape);
+    }
+    if let Some(lat) = r.model_latency_ms {
+        println!("latency: {:.3} ms ({:.1} fps)", lat, 1000.0 / lat);
+    }
+    if let Some(bytes) = r.dram_bytes {
+        println!("DRAM traffic: {:.2} MB per inference", bytes as f64 / 1e6);
+    }
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &[String]) -> Result<()> {
+    let path = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .ok_or_else(|| CompileError::config("expected a packed program file"))?;
+    let program = Arc::new(Program::load(std::path::Path::new(path))?);
+    let backend = parse_backend(args)?;
+    let requests = parse_count(args, "--requests", 32)?;
+    let workers = parse_count(args, "--workers", 2)?;
+    let max_batch = parse_count(args, "--batch", 4)?;
+    let queue_capacity = parse_count(args, "--queue", workers * max_batch * 2)?;
+
+    let engine = InferenceEngine::new(
+        program.clone(),
+        backend,
+        EngineConfig { workers, queue_capacity, max_batch },
+    );
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        pending.push(engine.submit(program_input(&program, i as u64))?);
+    }
+    for p in pending {
+        p.wait()?;
+    }
+    let stats = engine.shutdown();
+
+    let mut t = Table::new(
+        &format!(
+            "serving {} via {} ({} workers, batch {}, queue {})",
+            program.model(),
+            stats.backend,
+            workers,
+            max_batch,
+            queue_capacity
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["requests completed".into(), stats.completed.to_string()]);
+    t.row(&["throughput".into(), format!("{:.1} req/s", stats.throughput_rps)]);
+    t.row(&["p50 latency".into(), format!("{:.3} ms", stats.p50_ms)]);
+    t.row(&["p95 latency".into(), format!("{:.3} ms", stats.p95_ms)]);
+    t.row(&["mean queue wait".into(), format!("{:.3} ms", stats.mean_wait_ms)]);
+    t.row(&["peak in-flight".into(), stats.peak_in_flight.to_string()]);
+    t.row(&["batches".into(), format!("{} (largest {})", stats.batches, stats.max_batch_seen)]);
+    t.row(&[
+        "per-worker completions".into(),
+        format!("{:?}", stats.per_worker),
+    ]);
+    t.print();
+    Ok(())
+}
+
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let (graph, cfg) = parse_model(args)?;
     let gg = crate::analyzer::analyze(&graph);
@@ -162,7 +338,8 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let sweep = opt.sweep_first_segment();
     // figure-regeneration output: --csv FILE writes the raw series
     if let Some(csv) = flag_value(args, "--csv") {
-        let mut out = String::from("cut,sram_mb,bram18k,dram_total_mb,dram_fm_mb,latency_ms,feasible\n");
+        let mut out =
+            String::from("cut,sram_mb,bram18k,dram_total_mb,dram_fm_mb,latency_ms,feasible\n");
         for p in &sweep {
             out.push_str(&format!(
                 "{},{:.6},{},{:.6},{:.6},{:.6},{}\n",
@@ -382,6 +559,77 @@ mod tests {
         assert!(matches!(
             run(vec!["compile".into(), "alexnet".into()]),
             Err(CompileError::UnknownModel(_))
+        ));
+    }
+
+    #[test]
+    fn pack_run_serve_round_trip() {
+        // the acceptance path: compile -> pack -> save -> load -> execute
+        // through both backends -> serve, all via the CLI
+        let dir = std::env::temp_dir().join("sf_cli_pack_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("resnet18_32.sfp");
+        let path = p.to_string_lossy().into_owned();
+        run(vec![
+            "pack".into(),
+            "resnet18".into(),
+            "--input".into(),
+            "32".into(),
+            "--random-params".into(),
+            "--out".into(),
+            path.clone(),
+        ])
+        .unwrap();
+        run(vec!["run".into(), path.clone(), "--backend".into(), "virtual".into()]).unwrap();
+        run(vec!["run".into(), path.clone(), "--backend".into(), "reference".into()]).unwrap();
+        run(vec![
+            "serve-bench".into(),
+            path,
+            "--requests".into(),
+            "8".into(),
+            "--workers".into(),
+            "2".into(),
+            "--batch".into(),
+            "2".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn pack_requires_out_flag() {
+        assert!(matches!(
+            run(vec!["pack".into(), "resnet18".into(), "--input".into(), "32".into()]),
+            Err(CompileError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn run_rejects_unknown_backend_and_missing_file() {
+        let dir = std::env::temp_dir().join("sf_cli_pack_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tiny.sfp");
+        let path = p.to_string_lossy().into_owned();
+        run(vec![
+            "pack".into(),
+            "resnet18".into(),
+            "--input".into(),
+            "32".into(),
+            "--out".into(),
+            path.clone(),
+        ])
+        .unwrap();
+        assert!(matches!(
+            run(vec!["run".into(), path.clone(), "--backend".into(), "gpu".into()]),
+            Err(CompileError::Config(_))
+        ));
+        assert!(matches!(
+            run(vec!["run".into(), "/nonexistent/x.sfp".into()]),
+            Err(CompileError::Io { .. })
+        ));
+        // reference needs packed params; this artifact has none
+        assert!(matches!(
+            run(vec!["run".into(), path, "--backend".into(), "reference".into()]),
+            Err(CompileError::Artifact(_))
         ));
     }
 }

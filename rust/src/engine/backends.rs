@@ -1,0 +1,187 @@
+//! The three [`ExecutionBackend`] implementations.
+
+use std::sync::Arc;
+
+use super::{ExecutionBackend, RunResult};
+use crate::compiler::CompileError;
+use crate::funcsim::{execute, Tensor};
+use crate::program::Program;
+use crate::sim;
+use crate::Result;
+
+/// Bit-exact execution through the functional instruction-stream
+/// simulator. Requires the program to carry packed quantized parameters
+/// (`Compiler::with_params` before `pack`, or the CLI's `--params` /
+/// `--random-params`).
+pub struct ReferenceBackend;
+
+impl ExecutionBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn run(&self, program: &Program, input: &Tensor) -> Result<RunResult> {
+        let params = program.params().ok_or_else(|| {
+            CompileError::artifact(
+                "program carries no quantized parameters — the reference backend needs \
+                 them (pack with `Compiler::with_params`, `--params` or `--random-params`)",
+            )
+        })?;
+        let values = execute(program.grouped(), program.stream(), params, input)?;
+        let output = values
+            .last()
+            .cloned()
+            .ok_or_else(|| CompileError::Exec("empty graph produced no output".into()))?;
+        Ok(RunResult {
+            backend: self.name(),
+            output: Some(output),
+            model_latency_ms: None,
+            dram_bytes: None,
+        })
+    }
+}
+
+/// The virtual accelerator: replays the *packed* instruction stream
+/// against the cycle-accurate timing model and the instruction-level
+/// traffic model, reporting per-request latency and DRAM bytes. No
+/// tensor arithmetic — this is the serving-cost oracle.
+pub struct VirtualAccelBackend;
+
+impl ExecutionBackend for VirtualAccelBackend {
+    fn name(&self) -> &'static str {
+        "virtual-accel"
+    }
+
+    fn run(&self, program: &Program, input: &Tensor) -> Result<RunResult> {
+        let gg = program.grouped();
+        let expected = program.input_shape();
+        if input.shape != expected {
+            return Err(CompileError::Exec(format!(
+                "input shape {} != program input {}",
+                input.shape, expected
+            )));
+        }
+        // Policy and flags come from the artifact itself: the reuse bit of
+        // every decoded instruction and the packed-header assignment flags.
+        let policy = program.policy();
+        let alloc = program.alloc_view();
+        let timing = sim::simulate(gg, &policy, &alloc, program.cfg());
+        let staged: Vec<bool> = program.assigns().iter().map(|a| a.staged_input).collect();
+        let also: Vec<bool> = program.assigns().iter().map(|a| a.also_dram).collect();
+        let traffic = sim::replay(gg, program.stream(), &staged, &also, program.cfg());
+        Ok(RunResult {
+            backend: self.name(),
+            output: None,
+            model_latency_ms: Some(timing.latency_ms),
+            dram_bytes: Some(traffic.dram_total()),
+        })
+    }
+}
+
+/// PJRT-backed execution of the AOT HLO artifact. Without the `pjrt`
+/// cargo feature the underlying [`crate::runtime::Runtime`] is a stub and
+/// every run reports [`CompileError::Unsupported`]; with the feature the
+/// client initializes, but per-program HLO dispatch still goes through
+/// `runtime::Runtime::load` directly (see MIGRATION.md).
+pub struct PjrtBackend;
+
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(&self, _program: &Program, _input: &Tensor) -> Result<RunResult> {
+        let _rt = crate::runtime::Runtime::cpu()?;
+        Err(CompileError::unsupported(
+            "pjrt backend: packed programs do not embed HLO artifacts; load the \
+             exported .hlo.txt through runtime::Runtime::load (see MIGRATION.md)",
+        ))
+    }
+}
+
+/// Backend registry names accepted by [`backend_by_name`] (and the CLI's
+/// `--backend` flag).
+pub const BACKEND_NAMES: &[&str] = &["reference", "virtual", "pjrt"];
+
+/// Construct a backend from its registry name (`"virtual-accel"` is
+/// accepted as an alias for `"virtual"`).
+pub fn backend_by_name(name: &str) -> Option<Arc<dyn ExecutionBackend>> {
+    Some(match name {
+        "reference" => Arc::new(ReferenceBackend),
+        "virtual" | "virtual-accel" => Arc::new(VirtualAccelBackend),
+        "pjrt" => Arc::new(PjrtBackend),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+    use crate::zoo;
+
+    fn program(with_params: bool) -> Program {
+        crate::testutil::pack_program(&zoo::tinynet(), with_params.then_some(5))
+    }
+
+    #[test]
+    fn reference_backend_produces_output() {
+        let p = program(true);
+        let shape = p.input_shape();
+        let mut rng = Rng::from_seed(2);
+        let input = Tensor::from_vec(shape, rng.i8_vec(shape.numel()));
+        let r = ReferenceBackend.run(&p, &input).unwrap();
+        assert_eq!(r.backend, "reference");
+        assert!(r.output.is_some());
+        assert!(r.model_latency_ms.is_none());
+    }
+
+    #[test]
+    fn reference_backend_requires_params() {
+        let p = program(false);
+        let input = Tensor::zeros(p.input_shape());
+        assert!(matches!(
+            ReferenceBackend.run(&p, &input),
+            Err(CompileError::Artifact(_))
+        ));
+    }
+
+    #[test]
+    fn virtual_backend_reports_costs() {
+        let p = program(false);
+        let input = Tensor::zeros(p.input_shape());
+        let r = VirtualAccelBackend.run(&p, &input).unwrap();
+        assert!(r.model_latency_ms.unwrap() > 0.0);
+        assert!(r.dram_bytes.unwrap() > 0);
+        assert!(r.output.is_none());
+    }
+
+    #[test]
+    fn virtual_backend_checks_input_shape() {
+        let p = program(false);
+        let bad = Tensor::zeros(crate::graph::Shape::new(4, 4, 4));
+        assert!(VirtualAccelBackend.run(&p, &bad).is_err());
+    }
+
+    #[test]
+    fn pjrt_backend_is_gated() {
+        if cfg!(feature = "pjrt") {
+            return; // with a real client the error text differs
+        }
+        let p = program(false);
+        let input = Tensor::zeros(p.input_shape());
+        assert!(matches!(
+            PjrtBackend.run(&p, &input),
+            Err(CompileError::Unsupported(_))
+        ));
+    }
+
+    #[test]
+    fn registry_resolves_names() {
+        for &n in BACKEND_NAMES {
+            assert!(backend_by_name(n).is_some(), "{n}");
+        }
+        assert!(backend_by_name("virtual-accel").is_some());
+        assert!(backend_by_name("bogus").is_none());
+    }
+}

@@ -1,0 +1,90 @@
+//! Unified execution: one [`ExecutionBackend`] trait over every way the
+//! repo can run a packed [`Program`], plus a batch-serving
+//! [`InferenceEngine`] on top.
+//!
+//! Before this subsystem the run side was three disconnected code paths
+//! with incompatible APIs: the bit-exact functional simulator
+//! ([`crate::funcsim`]), the cycle/traffic simulators ([`crate::sim`]),
+//! and the feature-gated PJRT runtime ([`crate::runtime`]). They are now
+//! the three implementations of one trait, all consuming the same
+//! deployable artifact:
+//!
+//! | backend | computes | reports |
+//! |---|---|---|
+//! | [`ReferenceBackend`] | bit-exact int8 outputs via funcsim | `output` |
+//! | [`VirtualAccelBackend`] | timing + traffic replay of the *packed* instructions | `model_latency_ms`, `dram_bytes` |
+//! | [`PjrtBackend`] | AOT HLO artifacts via PJRT (needs the `pjrt` feature) | `output` |
+//!
+//! ```no_run
+//! use shortcutfusion::compiler::Compiler;
+//! use shortcutfusion::config::AccelConfig;
+//! use shortcutfusion::engine::{ExecutionBackend, VirtualAccelBackend};
+//! use shortcutfusion::funcsim::Tensor;
+//! use shortcutfusion::zoo;
+//!
+//! let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+//! let analyzed = compiler.analyze(&zoo::resnet18(224)).unwrap();
+//! let lowered = compiler
+//!     .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+//!     .unwrap();
+//! let program = compiler.pack(&lowered).unwrap();
+//! let input = Tensor::zeros(program.input_shape());
+//! let r = VirtualAccelBackend.run(&program, &input).unwrap();
+//! println!("{:.3} ms, {} DRAM bytes", r.model_latency_ms.unwrap(), r.dram_bytes.unwrap());
+//! ```
+//!
+//! [`InferenceEngine`] serves concurrent requests against one program:
+//! bounded submission queue, per-program request batching, worker threads
+//! per backend instance, and [`EngineStats`] (throughput, p50/p95 latency
+//! from the timing model, queue depth).
+
+mod backends;
+mod serving;
+
+pub use backends::{
+    backend_by_name, PjrtBackend, ReferenceBackend, VirtualAccelBackend, BACKEND_NAMES,
+};
+pub use serving::{Completion, EngineConfig, EngineStats, InferenceEngine, PendingRequest};
+
+use crate::funcsim::Tensor;
+use crate::program::Program;
+use crate::Result;
+
+/// One inference outcome. Which fields are populated depends on what the
+/// backend models: the reference simulator produces real tensors, the
+/// virtual accelerator produces hardware cost numbers.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// [`ExecutionBackend::name`] of the producing backend.
+    pub backend: &'static str,
+    /// The network output tensor (the last node's value), when the
+    /// backend computes real values.
+    pub output: Option<Tensor>,
+    /// Single-request latency predicted by the cycle-accurate timing
+    /// model, when the backend models hardware time.
+    pub model_latency_ms: Option<f64>,
+    /// Bytes crossing the chip boundary for this request (instruction
+    /// traffic replay), when the backend models the memory system.
+    pub dram_bytes: Option<u64>,
+}
+
+/// Anything that can execute a packed [`Program`] on one input.
+///
+/// Implementations must be `Send + Sync`: the [`InferenceEngine`] shares
+/// one backend instance across its worker threads.
+pub trait ExecutionBackend: Send + Sync {
+    /// Stable identifier (`"reference"`, `"virtual-accel"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Execute one request.
+    fn run(&self, program: &Program, input: &Tensor) -> Result<RunResult>;
+
+    /// Execute a batch claimed from the serving queue. The default runs
+    /// requests sequentially; backends with per-batch setup amortization
+    /// can override. Overrides must return exactly one result per input,
+    /// in order — the engine answers any missing tail entries with typed
+    /// errors rather than dropping their requests.
+    fn run_batch(&self, program: &Program, inputs: &[Tensor]) -> Vec<Result<RunResult>> {
+        inputs.iter().map(|t| self.run(program, t)).collect()
+    }
+}

@@ -1,0 +1,520 @@
+//! Batch-serving inference engine.
+//!
+//! One [`InferenceEngine`] serves one packed [`Program`] through one
+//! [`ExecutionBackend`]: requests enter a *bounded* submission queue,
+//! worker threads claim batches of up to `max_batch` requests (the
+//! per-program batching — every claimed batch shares the already-resident
+//! program, mirroring how the accelerator driver reuses the shipped
+//! instruction/parameter payload across inputs), and each completion is
+//! delivered back through a per-request channel. [`EngineStats`] reports
+//! throughput, p50/p95 latency from the timing model, queue depth and the
+//! observed cross-worker overlap.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::{ExecutionBackend, RunResult};
+use crate::compiler::CompileError;
+use crate::funcsim::Tensor;
+use crate::program::Program;
+use crate::Result;
+
+/// Serving knobs. Zero values are clamped to 1.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads (backend instances executing concurrently).
+    pub workers: usize,
+    /// Bound of the submission queue: [`InferenceEngine::submit`] blocks
+    /// and [`InferenceEngine::try_submit`] rejects beyond it.
+    pub queue_capacity: usize,
+    /// Most requests one worker claims per queue visit.
+    pub max_batch: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { workers: 2, queue_capacity: 64, max_batch: 8 }
+    }
+}
+
+/// A finished request: the backend result plus serving-side timing.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub result: RunResult,
+    /// Time spent waiting in the submission queue.
+    pub wait_ms: f64,
+    /// Wall-clock share of the batch execution attributed to this
+    /// request.
+    pub wall_ms: f64,
+    /// Which worker ran it.
+    pub worker: usize,
+}
+
+/// Handle returned by `submit`; resolves to the completion.
+pub struct PendingRequest {
+    rx: mpsc::Receiver<Result<Completion>>,
+}
+
+impl PendingRequest {
+    /// Block until the request finishes (or the engine shuts down).
+    pub fn wait(self) -> Result<Completion> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(CompileError::Exec(
+                "request dropped: engine shut down before it ran".into(),
+            )),
+        }
+    }
+}
+
+struct Job {
+    input: Tensor,
+    tx: mpsc::Sender<Result<Completion>>,
+    enqueued: Instant,
+}
+
+/// Latency samples kept for the percentile estimates: a sliding window
+/// of the most recent completions, so a long-lived engine's stats stay
+/// O(1) per request instead of growing one f64 per request forever.
+const LATENCY_WINDOW: usize = 4096;
+
+#[derive(Default)]
+struct StatsInner {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    rejected: u64,
+    peak_in_flight: usize,
+    per_worker: Vec<u64>,
+    /// Per-request service latency: the timing model's prediction when
+    /// the backend reports one, otherwise the measured wall share.
+    /// Bounded ring of the last [`LATENCY_WINDOW`] completions.
+    latencies_ms: Vec<f64>,
+    /// Next overwrite index once the latency ring is full.
+    lat_next: usize,
+    wait_ms_total: f64,
+    batches: u64,
+    max_batch_seen: usize,
+}
+
+impl StatsInner {
+    fn record_latency(&mut self, ms: f64) {
+        if self.latencies_ms.len() < LATENCY_WINDOW {
+            self.latencies_ms.push(ms);
+        } else {
+            let i = self.lat_next;
+            self.latencies_ms[i] = ms;
+            self.lat_next = (i + 1) % LATENCY_WINDOW;
+        }
+    }
+}
+
+struct Shared {
+    program: Arc<Program>,
+    backend: Arc<dyn ExecutionBackend>,
+    queue: Mutex<VecDeque<Job>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    stats: Mutex<StatsInner>,
+    in_flight: AtomicUsize,
+    shutdown: AtomicBool,
+    capacity: usize,
+    max_batch: usize,
+    /// Stamped at construction and re-stamped when the workers start, so
+    /// a paused engine's queue-filling time never deflates throughput.
+    started: Mutex<Instant>,
+}
+
+/// Snapshot of an engine's counters (see [`InferenceEngine::stats`]).
+#[derive(Debug, Clone)]
+pub struct EngineStats {
+    pub backend: &'static str,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// `try_submit` calls bounced off the full queue.
+    pub rejected: u64,
+    pub queue_depth: usize,
+    pub in_flight: usize,
+    /// Most requests ever claimed by workers simultaneously — the
+    /// observable overlap across backend instances.
+    pub peak_in_flight: usize,
+    pub per_worker: Vec<u64>,
+    pub batches: u64,
+    pub max_batch_seen: usize,
+    pub elapsed_s: f64,
+    /// Completed requests per wall-clock second since engine start.
+    pub throughput_rps: f64,
+    /// Median per-request latency (timing model when available),
+    /// over a sliding window of the most recent completions.
+    pub p50_ms: f64,
+    /// 95th-percentile per-request latency over the same window.
+    pub p95_ms: f64,
+    pub mean_wait_ms: f64,
+}
+
+/// Serves concurrent inference requests against one packed program.
+///
+/// ```no_run
+/// use shortcutfusion::engine::{EngineConfig, InferenceEngine, VirtualAccelBackend};
+/// use shortcutfusion::funcsim::Tensor;
+/// use shortcutfusion::program::Program;
+/// use std::sync::Arc;
+///
+/// let program = Arc::new(Program::load(std::path::Path::new("resnet18.sfp")).unwrap());
+/// let engine = InferenceEngine::new(
+///     program.clone(),
+///     Arc::new(VirtualAccelBackend),
+///     EngineConfig::default(),
+/// );
+/// let pending = engine.submit(Tensor::zeros(program.input_shape())).unwrap();
+/// let done = pending.wait().unwrap();
+/// println!("{:.3} ms", done.result.model_latency_ms.unwrap());
+/// println!("{:#?}", engine.shutdown());
+/// ```
+pub struct InferenceEngine {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    worker_count: usize,
+}
+
+impl InferenceEngine {
+    /// Create the engine and start its workers.
+    pub fn new(
+        program: Arc<Program>,
+        backend: Arc<dyn ExecutionBackend>,
+        cfg: EngineConfig,
+    ) -> InferenceEngine {
+        let mut engine = InferenceEngine::new_paused(program, backend, cfg);
+        engine.start();
+        engine
+    }
+
+    /// Create the engine without starting workers: requests can be
+    /// pre-queued (up to the capacity bound) and begin executing at
+    /// [`InferenceEngine::start`]. Used for deterministic tests and
+    /// cold-start benchmarks.
+    pub fn new_paused(
+        program: Arc<Program>,
+        backend: Arc<dyn ExecutionBackend>,
+        cfg: EngineConfig,
+    ) -> InferenceEngine {
+        let worker_count = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            program,
+            backend,
+            queue: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            stats: Mutex::new(StatsInner {
+                per_worker: vec![0; worker_count],
+                ..StatsInner::default()
+            }),
+            in_flight: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            capacity: cfg.queue_capacity.max(1),
+            max_batch: cfg.max_batch.max(1),
+            started: Mutex::new(Instant::now()),
+        });
+        InferenceEngine { shared, workers: Vec::new(), worker_count }
+    }
+
+    /// Spawn the worker threads (no-op if already running).
+    pub fn start(&mut self) {
+        if !self.workers.is_empty() {
+            return;
+        }
+        *self.shared.started.lock().unwrap() = Instant::now();
+        let mut handles = Vec::with_capacity(self.worker_count);
+        for wid in 0..self.worker_count {
+            let shared = self.shared.clone();
+            handles.push(std::thread::spawn(move || worker_loop(shared, wid)));
+        }
+        self.workers = handles;
+    }
+
+    /// Enqueue one request, blocking while the queue is at capacity.
+    pub fn submit(&self, input: Tensor) -> Result<PendingRequest> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job { input, tx, enqueued: Instant::now() };
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            while q.len() >= self.shared.capacity {
+                if self.shared.shutdown.load(Ordering::SeqCst) {
+                    return Err(CompileError::Exec("engine is shut down".into()));
+                }
+                q = self.shared.not_full.wait(q).unwrap();
+            }
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                return Err(CompileError::Exec("engine is shut down".into()));
+            }
+            // count before the job becomes claimable, so a snapshot can
+            // never observe completed > submitted (lock order is always
+            // queue -> stats, matching the workers)
+            self.shared.stats.lock().unwrap().submitted += 1;
+            q.push_back(job);
+        }
+        self.shared.not_empty.notify_one();
+        Ok(PendingRequest { rx })
+    }
+
+    /// Enqueue without blocking; a full queue is a typed rejection
+    /// (counted in [`EngineStats::rejected`]).
+    pub fn try_submit(&self, input: Tensor) -> Result<PendingRequest> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job { input, tx, enqueued: Instant::now() };
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                return Err(CompileError::Exec("engine is shut down".into()));
+            }
+            if q.len() >= self.shared.capacity {
+                drop(q);
+                self.shared.stats.lock().unwrap().rejected += 1;
+                return Err(CompileError::Exec(format!(
+                    "submission queue full ({} requests)",
+                    self.shared.capacity
+                )));
+            }
+            self.shared.stats.lock().unwrap().submitted += 1;
+            q.push_back(job);
+        }
+        self.shared.not_empty.notify_one();
+        Ok(PendingRequest { rx })
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        snapshot(&self.shared)
+    }
+
+    /// Drain the queue, stop the workers and return the final stats.
+    pub fn shutdown(mut self) -> EngineStats {
+        self.stop();
+        snapshot(&self.shared)
+    }
+
+    fn stop(&mut self) {
+        // Always flag shutdown and wake both condvars — even a paused
+        // engine (no workers ever started) can have submitters blocked
+        // on a full queue who must observe the shutdown.
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.not_empty.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.shared.not_full.notify_all();
+    }
+}
+
+impl Drop for InferenceEngine {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, wid: usize) {
+    loop {
+        // ---- claim a batch (or exit once drained + shut down) -----------
+        let (batch, claimed_at) = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.not_empty.wait(q).unwrap();
+            }
+            let n = q.len().min(shared.max_batch);
+            let batch: Vec<Job> = q.drain(..n).collect();
+            shared.in_flight.fetch_add(batch.len(), Ordering::SeqCst);
+            shared.not_full.notify_all();
+            (batch, Instant::now())
+        };
+        let now_in_flight = shared.in_flight.load(Ordering::SeqCst);
+        {
+            let mut s = shared.stats.lock().unwrap();
+            s.peak_in_flight = s.peak_in_flight.max(now_in_flight);
+            s.batches += 1;
+            s.max_batch_seen = s.max_batch_seen.max(batch.len());
+        }
+
+        // ---- execute -----------------------------------------------------
+        // move the tensors out of the jobs rather than cloning them: the
+        // input copy would otherwise dominate the virtual backend's cost
+        let mut inputs = Vec::with_capacity(batch.len());
+        let mut replies = Vec::with_capacity(batch.len());
+        for job in batch {
+            inputs.push(job.input);
+            replies.push((job.tx, job.enqueued));
+        }
+        let t0 = Instant::now();
+        let mut results = shared.backend.run_batch(&shared.program, &inputs).into_iter();
+        let wall_each = t0.elapsed().as_secs_f64() * 1e3 / inputs.len() as f64;
+
+        // ---- complete ----------------------------------------------------
+        // walk the replies (not a zip) so a misbehaving run_batch override
+        // that returns too few results still answers every waiter and
+        // keeps the in-flight counter balanced
+        for (tx, enqueued) in replies {
+            shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+            let res = results.next().unwrap_or_else(|| {
+                Err(CompileError::Exec(
+                    "backend returned fewer results than batch inputs".into(),
+                ))
+            });
+            let wait_ms = claimed_at.saturating_duration_since(enqueued).as_secs_f64() * 1e3;
+            let outcome = match res {
+                Ok(result) => {
+                    let service_ms = result.model_latency_ms.unwrap_or(wall_each);
+                    {
+                        let mut s = shared.stats.lock().unwrap();
+                        s.completed += 1;
+                        s.per_worker[wid] += 1;
+                        s.record_latency(service_ms);
+                        s.wait_ms_total += wait_ms;
+                    }
+                    Ok(Completion { result, wait_ms, wall_ms: wall_each, worker: wid })
+                }
+                Err(e) => {
+                    shared.stats.lock().unwrap().failed += 1;
+                    Err(e)
+                }
+            };
+            // receiver may have been dropped — not the engine's problem
+            let _ = tx.send(outcome);
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn snapshot(shared: &Shared) -> EngineStats {
+    let queue_depth = shared.queue.lock().unwrap().len();
+    let s = shared.stats.lock().unwrap();
+    let mut lat = s.latencies_ms.clone();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let elapsed_s = shared.started.lock().unwrap().elapsed().as_secs_f64();
+    EngineStats {
+        backend: shared.backend.name(),
+        submitted: s.submitted,
+        completed: s.completed,
+        failed: s.failed,
+        rejected: s.rejected,
+        queue_depth,
+        in_flight: shared.in_flight.load(Ordering::SeqCst),
+        peak_in_flight: s.peak_in_flight,
+        per_worker: s.per_worker.clone(),
+        batches: s.batches,
+        max_batch_seen: s.max_batch_seen,
+        elapsed_s,
+        throughput_rps: if elapsed_s > 0.0 { s.completed as f64 / elapsed_s } else { 0.0 },
+        p50_ms: percentile(&lat, 0.50),
+        p95_ms: percentile(&lat, 0.95),
+        mean_wait_ms: if s.completed > 0 { s.wait_ms_total / s.completed as f64 } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::VirtualAccelBackend;
+    use crate::zoo;
+
+    fn tinynet_program() -> Arc<Program> {
+        Arc::new(crate::testutil::pack_program(&zoo::tinynet(), None))
+    }
+
+    #[test]
+    fn serves_requests_and_reports_stats() {
+        let program = tinynet_program();
+        let engine = InferenceEngine::new(
+            program.clone(),
+            Arc::new(VirtualAccelBackend),
+            EngineConfig { workers: 3, queue_capacity: 8, max_batch: 2 },
+        );
+        let shape = program.input_shape();
+        let pending: Vec<PendingRequest> =
+            (0..12).map(|_| engine.submit(Tensor::zeros(shape)).unwrap()).collect();
+        for p in pending {
+            let done = p.wait().unwrap();
+            assert!(done.result.model_latency_ms.unwrap() > 0.0);
+        }
+        let stats = engine.shutdown();
+        assert_eq!(stats.completed, 12);
+        assert_eq!(stats.submitted, 12);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.queue_depth, 0);
+        assert!(stats.p50_ms > 0.0);
+        assert!(stats.p95_ms >= stats.p50_ms);
+        assert!(stats.throughput_rps > 0.0);
+        assert_eq!(stats.per_worker.iter().sum::<u64>(), 12);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let program = tinynet_program();
+        // paused: nothing drains the queue while we fill it
+        let engine = InferenceEngine::new_paused(
+            program.clone(),
+            Arc::new(VirtualAccelBackend),
+            EngineConfig { workers: 1, queue_capacity: 2, max_batch: 1 },
+        );
+        let shape = program.input_shape();
+        let a = engine.try_submit(Tensor::zeros(shape)).unwrap();
+        let b = engine.try_submit(Tensor::zeros(shape)).unwrap();
+        assert!(engine.try_submit(Tensor::zeros(shape)).is_err());
+        assert_eq!(engine.stats().rejected, 1);
+        assert_eq!(engine.queue_depth(), 2);
+        let mut engine = engine;
+        engine.start();
+        a.wait().unwrap();
+        b.wait().unwrap();
+        let stats = engine.shutdown();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests() {
+        let program = tinynet_program();
+        let engine = InferenceEngine::new_paused(
+            program.clone(),
+            Arc::new(VirtualAccelBackend),
+            EngineConfig { workers: 2, queue_capacity: 16, max_batch: 4 },
+        );
+        let shape = program.input_shape();
+        let pending: Vec<PendingRequest> =
+            (0..6).map(|_| engine.submit(Tensor::zeros(shape)).unwrap()).collect();
+        let mut engine = engine;
+        engine.start();
+        let stats = engine.shutdown(); // must wait for the 6 queued requests
+        assert_eq!(stats.completed, 6);
+        for p in pending {
+            assert!(p.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn percentile_edges() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0], 0.95), 3.0);
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+    }
+}

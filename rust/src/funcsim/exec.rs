@@ -85,7 +85,9 @@ impl<'a> Executor<'a> {
                 }
                 // Batch-norm / bias are folded into the conv's int32 bias
                 // and requant shift at quantization time.
-                OpKind::BatchNorm | OpKind::BiasAdd | OpKind::Identity => val(node.inputs[0])?.clone(),
+                OpKind::BatchNorm | OpKind::BiasAdd | OpKind::Identity => {
+                    val(node.inputs[0])?.clone()
+                }
                 OpKind::Act(a) => {
                     let mut t = val(node.inputs[0])?.clone();
                     self.apply_act(&mut t, a, node.id)?;
@@ -142,7 +144,11 @@ impl<'a> Executor<'a> {
     }
 
     /// Output tensor of a group (its last node's value).
-    pub fn group_output<'v>(&self, values: &'v [Tensor], gid: crate::analyzer::GroupId) -> &'v Tensor {
+    pub fn group_output<'v>(
+        &self,
+        values: &'v [Tensor],
+        gid: crate::analyzer::GroupId,
+    ) -> &'v Tensor {
         let last = *self.gg.groups[gid.0].nodes.last().unwrap();
         &values[last.0]
     }

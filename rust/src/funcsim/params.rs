@@ -63,22 +63,33 @@ impl Params {
                     Some(Json::Arr(a)) => a
                         .iter()
                         .map(|v| {
-                            v.as_f64()
-                                .filter(|f| f.fract() == 0.0)
-                                .map(|f| f as i64)
-                                .ok_or_else(|| CompileError::params(format!("params {name}.{key}: non-integer")))
+                            v.as_f64().filter(|f| f.fract() == 0.0).map(|f| f as i64).ok_or_else(
+                                || {
+                                    CompileError::params(format!(
+                                        "params {name}.{key}: non-integer"
+                                    ))
+                                },
+                            )
                         })
                         .collect(),
-                    Some(_) => Err(CompileError::params(format!("params {name}.{key}: expected array"))),
+                    Some(_) => {
+                        Err(CompileError::params(format!("params {name}.{key}: expected array")))
+                    }
                 }
             };
             let weights: Vec<i8> = ints("weights")?
                 .into_iter()
-                .map(|v| i8::try_from(v).map_err(|_| CompileError::params(format!("{name}: weight out of i8"))))
+                .map(|v| {
+                    i8::try_from(v)
+                        .map_err(|_| CompileError::params(format!("{name}: weight out of i8")))
+                })
                 .collect::<Result<_>>()?;
             let bias: Vec<i32> = ints("bias")?
                 .into_iter()
-                .map(|v| i32::try_from(v).map_err(|_| CompileError::params(format!("{name}: bias out of i32"))))
+                .map(|v| {
+                    i32::try_from(v)
+                        .map_err(|_| CompileError::params(format!("{name}: bias out of i32")))
+                })
                 .collect::<Result<_>>()?;
             let lut_raw = ints("lut")?;
             let lut = if lut_raw.is_empty() {
@@ -90,7 +101,10 @@ impl Params {
                 Some(
                     lut_raw
                         .into_iter()
-                        .map(|v| i8::try_from(v).map_err(|_| CompileError::params(format!("{name}: lut out of i8"))))
+                        .map(|v| {
+                            i8::try_from(v)
+                                .map_err(|_| CompileError::params(format!("{name}: lut out of i8")))
+                        })
                         .collect::<Result<_>>()?,
                 )
             };

@@ -50,7 +50,15 @@ impl GraphBuilder {
     }
 
     /// Normal convolution.
-    pub fn conv(&mut self, name: &str, from: NodeId, k: usize, stride: usize, out_c: usize, pad: PadMode) -> NodeId {
+    pub fn conv(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        k: usize,
+        stride: usize,
+        out_c: usize,
+        pad: PadMode,
+    ) -> NodeId {
         let s = self.shape(from);
         let out = match pad {
             PadMode::Same => s.conv_same(stride, out_c),
@@ -60,7 +68,14 @@ impl GraphBuilder {
     }
 
     /// Depthwise convolution (out channels = in channels).
-    pub fn dwconv(&mut self, name: &str, from: NodeId, k: usize, stride: usize, pad: PadMode) -> NodeId {
+    pub fn dwconv(
+        &mut self,
+        name: &str,
+        from: NodeId,
+        k: usize,
+        stride: usize,
+        pad: PadMode,
+    ) -> NodeId {
         let s = self.shape(from);
         let out_c = s.c;
         let out = match pad {
@@ -146,14 +161,29 @@ impl GraphBuilder {
 
     /// Convenience: conv → batch-norm → activation, the most common
     /// frozen-graph triplet.
-    pub fn conv_bn_act(&mut self, base: &str, from: NodeId, k: usize, stride: usize, out_c: usize, act: Activation) -> NodeId {
+    pub fn conv_bn_act(
+        &mut self,
+        base: &str,
+        from: NodeId,
+        k: usize,
+        stride: usize,
+        out_c: usize,
+        act: Activation,
+    ) -> NodeId {
         let c = self.conv(&format!("{base}"), from, k, stride, out_c, PadMode::Same);
         let b = self.batchnorm(&format!("{base}/bn"), c);
         self.activation(&format!("{base}/{}", act_name(act)), b, act)
     }
 
     /// Convenience: depthwise conv → batch-norm → activation.
-    pub fn dw_bn_act(&mut self, base: &str, from: NodeId, k: usize, stride: usize, act: Activation) -> NodeId {
+    pub fn dw_bn_act(
+        &mut self,
+        base: &str,
+        from: NodeId,
+        k: usize,
+        stride: usize,
+        act: Activation,
+    ) -> NodeId {
         let c = self.dwconv(&format!("{base}"), from, k, stride, PadMode::Same);
         let b = self.batchnorm(&format!("{base}/bn"), c);
         self.activation(&format!("{base}/{}", act_name(act)), b, act)

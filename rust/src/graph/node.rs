@@ -86,7 +86,13 @@ mod tests {
         Node {
             id: NodeId(0),
             name: "c".into(),
-            op: OpKind::Conv { k: 3, stride: 1, out_c: if depthwise { 16 } else { 32 }, pad: PadMode::Same, depthwise },
+            op: OpKind::Conv {
+                k: 3,
+                stride: 1,
+                out_c: if depthwise { 16 } else { 32 },
+                pad: PadMode::Same,
+                depthwise,
+            },
             inputs: vec![],
             in_shapes: vec![Shape::new(10, 10, 16)],
             out_shape: Shape::new(10, 10, if depthwise { 16 } else { 32 }),

@@ -267,70 +267,12 @@ pub fn decode(w: &[u32; WORDS_PER_INSTR]) -> Result<Instruction, DecodeError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testutil::forall;
-
-    fn random_instr(rng: &mut crate::testutil::Rng) -> Instruction {
-        let acts = [
-            Activation::Linear,
-            Activation::Relu,
-            Activation::Leaky,
-            Activation::Relu6,
-            Activation::Swish,
-            Activation::Sigmoid,
-            Activation::HardSwish,
-            Activation::HardSigmoid,
-        ];
-        let ops = [
-            Opcode::Input,
-            Opcode::Conv,
-            Opcode::DwConv,
-            Opcode::Fc,
-            Opcode::Scale,
-            Opcode::Pool,
-            Opcode::Eltwise,
-            Opcode::Concat,
-            Opcode::Upsample,
-            Opcode::Copy,
-        ];
-        Instruction {
-            group: rng.below(1 << 24) as u32,
-            opcode: *rng.choose(&ops),
-            act: *rng.choose(&acts),
-            reuse: if rng.coin() { ReuseMode::Frame } else { ReuseMode::Row },
-            k: rng.range(1, 15) as u8,
-            stride: rng.range(1, 4) as u8,
-            pad_same: rng.coin(),
-            in_h: rng.below(2048) as u16,
-            in_w: rng.below(2048) as u16,
-            in_c: rng.below(4096) as u16,
-            out_h: rng.below(2048) as u16,
-            out_w: rng.below(2048) as u16,
-            out_c: rng.below(4096) as u16,
-            pool: match rng.below(4) {
-                0 => None,
-                1 => Some((PoolKind::Max, rng.range(2, 3) as u8, 2)),
-                2 => Some((PoolKind::Avg, 2, 2)),
-                _ => Some((PoolKind::Global, 0, 0)),
-            },
-            upsample: rng.below(4) as u8 * 2,
-            fused_eltwise: rng.coin(),
-            se_squeeze: rng.coin(),
-            quant_shift: rng.next_u64() as i8,
-            in_sel: rng.below(4) as u8,
-            out_sel: rng.below(4) as u8,
-            aux_sel: rng.below(4) as u8,
-            in_addr: rng.next_u64() as u32,
-            out_addr: rng.next_u64() as u32,
-            aux_addr: rng.next_u64() as u32,
-            weight_addr: rng.next_u64() as u32,
-            weight_bytes: rng.next_u64() as u32,
-        }
-    }
+    use crate::testutil::{forall, random_instruction};
 
     #[test]
     fn round_trip_random_instructions() {
         forall("encode∘decode = id", 500, |rng| {
-            let i = random_instr(rng);
+            let i = random_instruction(rng);
             let words = encode(&i);
             let j = decode(&words).unwrap();
             assert_eq!(i, j);

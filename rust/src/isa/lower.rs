@@ -99,9 +99,11 @@ pub fn lower(gg: &GroupedGraph, assigns: &[MemAssign]) -> InstructionStream {
             in_sel: asg.in_loc.selector() as u8,
             out_sel: asg.out_loc.selector() as u8,
             aux_sel: asg.aux_loc.map(|l| l.selector() as u8).unwrap_or(3),
-            in_addr: asg.in_loc.dram_addr(),
-            out_addr: asg.out_loc.dram_addr(),
-            aux_addr: asg.aux_loc.map(|l| l.dram_addr()).unwrap_or(0),
+            // On-chip operands carry 0 in the address word; the 2-bit
+            // selector (not the address) is what marks them as buffers.
+            in_addr: asg.in_loc.dram_addr().unwrap_or(0),
+            out_addr: asg.out_loc.dram_addr().unwrap_or(0),
+            aux_addr: asg.aux_loc.and_then(|l| l.dram_addr()).unwrap_or(0),
             weight_addr: asg.weight_addr,
             weight_bytes: asg.weight_bytes,
         };

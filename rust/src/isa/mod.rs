@@ -38,10 +38,34 @@ impl MemLoc {
         }
     }
 
-    pub fn dram_addr(&self) -> u32 {
+    /// DRAM byte offset of an off-chip operand; `None` for on-chip
+    /// buffers, so a mis-lowered buffer operand can never silently alias
+    /// DRAM address 0 (callers must decide what a missing address means —
+    /// the lowerer writes 0 into the word *because* the selector field
+    /// already marks the operand as on-chip).
+    pub fn dram_addr(&self) -> Option<u32> {
         match self {
-            MemLoc::Dram(a) => *a,
-            MemLoc::Buf(_) => 0,
+            MemLoc::Dram(a) => Some(*a),
+            MemLoc::Buf(_) => None,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_addr_is_none_for_buffers() {
+        assert_eq!(MemLoc::Buf(0).dram_addr(), None);
+        assert_eq!(MemLoc::Buf(2).dram_addr(), None);
+        assert_eq!(MemLoc::Dram(0).dram_addr(), Some(0));
+        assert_eq!(MemLoc::Dram(4096).dram_addr(), Some(4096));
+    }
+
+    #[test]
+    fn selector_distinguishes_buf_from_dram() {
+        assert_eq!(MemLoc::Buf(1).selector(), 1);
+        assert_eq!(MemLoc::Dram(0).selector(), 3);
     }
 }

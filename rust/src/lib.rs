@@ -57,6 +57,20 @@
 //! one-shot `coordinator::compile_model` remains as a thin wrapper over
 //! the stages (see `MIGRATION.md` for the porting guide).
 //!
+//! ## The run side: `Program` + `ExecutionBackend` + `InferenceEngine`
+//!
+//! `Compiler::pack` collapses a [`compiler::Lowered`] artifact into a
+//! deployable [`program::Program`] — the §III-A driver payload
+//! (instruction stream, memory assignment, target config, optional
+//! quantized parameters) with a versioned, checksummed binary
+//! `save`/`load`. Execution is unified behind
+//! [`engine::ExecutionBackend`] with three implementations —
+//! bit-exact [`engine::ReferenceBackend`], cost-modeling
+//! [`engine::VirtualAccelBackend`], and the feature-gated
+//! [`engine::PjrtBackend`] — and [`engine::InferenceEngine`] serves
+//! concurrent batched requests on top (see the `pack`, `run`, and
+//! `serve-bench` CLI commands and `benches/serving.rs`).
+//!
 //! ## Layout
 //!
 //! | module | role |
@@ -67,10 +81,12 @@
 //! | [`alloc`] | static 3-buffer + off-chip arena allocation (Fig. 13) |
 //! | [`isa`] | 11-word instruction encode/decode + lowering (Fig. 5b) |
 //! | [`compiler`] | **the staged API**: stages, strategies, session, errors |
+//! | [`program`] | **the deployable artifact**: packed program, binary container |
+//! | [`engine`] | **unified execution**: backends + batch-serving engine |
 //! | [`sim`], [`funcsim`], [`power`] | cycle-accurate timing, bit-exact functional sim, power model |
 //! | [`baselines`], [`bench`] | comparison models + offline bench harness |
 //! | [`coordinator`] | CLI and deprecated one-shot wrappers |
-//! | [`runtime`] | PJRT artifact runtime (stubbed unless the `pjrt` feature is on) |
+//! | [`runtime`] | PJRT artifact loaders (deprecated entry point — use [`engine::PjrtBackend`]; stubbed unless the `pjrt` feature is on) |
 //!
 //! See `DESIGN.md` for the hardware substitutions (FPGA → cycle-accurate
 //! simulator, GPU → analytical model).
@@ -84,6 +100,8 @@ pub mod isa;
 pub mod optimizer;
 pub mod alloc;
 pub mod compiler;
+pub mod program;
+pub mod engine;
 pub mod sim;
 pub mod funcsim;
 pub mod power;

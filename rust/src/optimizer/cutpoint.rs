@@ -124,7 +124,14 @@ impl<'a> Optimizer<'a> {
         let latency_ms = (self.latency)(self.gg, &policy, &alloc, self.cfg);
         let feasible =
             sram.total <= self.cfg.sram_budget && sram.bram18k <= self.cfg.bram18k_total;
-        Evaluation { cuts: CutPolicy { cuts: cuts.to_vec() }, policy, sram, dram, latency_ms, feasible }
+        Evaluation {
+            cuts: CutPolicy { cuts: cuts.to_vec() },
+            policy,
+            sram,
+            dram,
+            latency_ms,
+            feasible,
+        }
     }
 
     /// Search space size.

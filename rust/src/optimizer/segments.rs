@@ -114,7 +114,8 @@ mod tests {
     #[test]
     fn classifiers_have_one_segment() {
         // Fig 11 (left): "a classification CNN has a single cut-point".
-        for name in ["vgg16-conv", "resnet50", "resnet152", "efficientnet-b1", "mobilenetv3-large"] {
+        for name in ["vgg16-conv", "resnet50", "resnet152", "efficientnet-b1", "mobilenetv3-large"]
+        {
             let s = segs_of(name);
             assert_eq!(s.len(), 1, "{name}: {s:?}");
             assert_eq!(s[0].dir, Direction::Dec, "{name}");

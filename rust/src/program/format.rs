@@ -1,0 +1,209 @@
+//! Binary envelope of the packed [`super::Program`] artifact.
+//!
+//! ```text
+//! bytes 0..8    magic  "SFPROG01"
+//! bytes 8..12   format version (u32 LE)
+//! bytes 12..16  FNV-1a checksum of the payload (u32 LE)
+//! bytes 16..24  payload length (u64 LE)
+//! bytes 24..    payload: a sequence of u64-length-prefixed sections
+//! ```
+//!
+//! The writer is fully deterministic (section order is fixed, the JSON
+//! sections use the `BTreeMap`-backed writer, parameters are emitted in
+//! sorted group order), so `save → load → save` is byte-identical — the
+//! property `rust/tests/program_roundtrip.rs` checks for every zoo model.
+
+use crate::compiler::CompileError;
+use crate::Result;
+
+/// Envelope magic: "ShortcutFusion PROGram", format generation 01.
+pub const MAGIC: [u8; 8] = *b"SFPROG01";
+
+/// Bump on any incompatible change to the payload layout.
+pub const FORMAT_VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 24;
+
+/// 32-bit FNV-1a over a byte slice — the artifact's integrity checksum.
+/// Not cryptographic; it guards against truncation and bit-rot, exactly
+/// like the magic tag in instruction word 10 guards single instructions.
+pub fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Prepend the header (magic, version, checksum, length) to a payload.
+pub fn wrap(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&fnv1a32(payload).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Validate the header and return the checksummed payload.
+pub fn unwrap(bytes: &[u8]) -> Result<&[u8]> {
+    if bytes.len() < HEADER_LEN {
+        return Err(CompileError::artifact(format!(
+            "{} bytes is too short for a program header",
+            bytes.len()
+        )));
+    }
+    if bytes[0..8] != MAGIC {
+        return Err(CompileError::artifact("bad magic — not a packed program"));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        return Err(CompileError::artifact(format!(
+            "format version {version} (this build reads {FORMAT_VERSION})"
+        )));
+    }
+    let checksum = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let payload = &bytes[HEADER_LEN..];
+    if len != payload.len() as u64 {
+        return Err(CompileError::artifact(format!(
+            "payload length {} does not match header ({len})",
+            payload.len()
+        )));
+    }
+    let actual = fnv1a32(payload);
+    if actual != checksum {
+        return Err(CompileError::artifact(format!(
+            "checksum mismatch: stored {checksum:#010x}, computed {actual:#010x}"
+        )));
+    }
+    Ok(payload)
+}
+
+/// Appends u64-length-prefixed sections to a payload buffer.
+#[derive(Default)]
+pub struct SectionWriter {
+    buf: Vec<u8>,
+}
+
+impl SectionWriter {
+    pub fn new() -> Self {
+        SectionWriter { buf: Vec::new() }
+    }
+
+    pub fn section(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Append unframed bytes (fixed-width fields; the read-side mirror is
+    /// [`SectionReader::raw`]).
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Sequential reader over a [`SectionWriter`] payload; every read is
+/// bounds-checked so a truncated or corrupted artifact fails typed.
+pub struct SectionReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SectionReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        SectionReader { bytes, pos: 0 }
+    }
+
+    /// Read exactly `n` raw bytes.
+    pub fn raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| CompileError::artifact("truncated artifact"))?;
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    /// Read one u64-length-prefixed section.
+    pub fn section(&mut self) -> Result<&'a [u8]> {
+        let len = u64::from_le_bytes(self.raw(8)?.try_into().unwrap());
+        let len = usize::try_from(len)
+            .map_err(|_| CompileError::artifact("section length overflows usize"))?;
+        self.raw(len)
+    }
+
+    /// True once every payload byte has been consumed.
+    pub fn done(&self) -> bool {
+        self.pos == self.bytes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap_unwrap_round_trip() {
+        let payload = b"hello sections".to_vec();
+        let bytes = wrap(&payload);
+        assert_eq!(unwrap(&bytes).unwrap(), payload.as_slice());
+    }
+
+    #[test]
+    fn every_corrupted_byte_is_detected() {
+        let mut w = SectionWriter::new();
+        w.section(b"abc");
+        w.section(b"defgh");
+        let bytes = wrap(&w.finish());
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(unwrap(&bad).is_err(), "flip at byte {i} went unnoticed");
+        }
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let bytes = wrap(b"payload");
+        assert!(unwrap(&bytes[..bytes.len() - 1]).is_err());
+        assert!(unwrap(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn sections_read_back_in_order() {
+        let mut w = SectionWriter::new();
+        w.section(b"one");
+        w.section(b"");
+        w.section(&[1, 2, 3, 4]);
+        let payload = w.finish();
+        let mut r = SectionReader::new(&payload);
+        assert_eq!(r.section().unwrap(), b"one");
+        assert_eq!(r.section().unwrap(), b"");
+        assert_eq!(r.section().unwrap(), &[1, 2, 3, 4]);
+        assert!(r.done());
+    }
+
+    #[test]
+    fn reader_rejects_overlong_section() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut r = SectionReader::new(&payload);
+        assert!(r.section().is_err());
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // reference vectors for the 32-bit FNV-1a parameters
+        assert_eq!(fnv1a32(b""), 0x811C_9DC5);
+        assert_eq!(fnv1a32(b"a"), 0xE40C_292C);
+    }
+}

@@ -1,0 +1,612 @@
+//! The deployable program artifact (§III-A).
+//!
+//! The paper's inference driver "packs parameters, input, and *all*
+//! instructions and ships them to the accelerator at once". [`Program`] is
+//! that payload as a first-class, savable artifact: the encoded 11-word
+//! instruction stream, the per-group memory assignment flags that ride in
+//! the packed header (buffer placements, staging / long-path DMA bits),
+//! the full target [`AccelConfig`], the frozen model graph, and — when the
+//! compile attached them — the quantized parameters. A program is
+//! *self-contained*: loading one requires no zoo builder, no preset and no
+//! re-run of the optimizer, which is what lets the [`crate::engine`]
+//! backends execute it as-is.
+//!
+//! Producing one is the sixth pipeline stage:
+//!
+//! ```no_run
+//! use shortcutfusion::compiler::Compiler;
+//! use shortcutfusion::config::AccelConfig;
+//! use shortcutfusion::program::Program;
+//! use shortcutfusion::zoo;
+//!
+//! let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+//! let analyzed = compiler.analyze(&zoo::resnet18(224)).unwrap();
+//! let lowered = compiler
+//!     .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+//!     .unwrap();
+//! let program = compiler.pack(&lowered).unwrap();
+//! program.save(std::path::Path::new("resnet18.sfp")).unwrap();
+//! let again = Program::load(std::path::Path::new("resnet18.sfp")).unwrap();
+//! assert_eq!(again.stream().words, program.stream().words);
+//! ```
+//!
+//! On disk a program is a versioned, checksummed binary container
+//! ([`format`]); save → load → save is byte-identical.
+
+pub mod format;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::alloc::{AllocResult, BufAssign, Loc};
+use crate::analyzer::{analyze, GroupedGraph};
+use crate::compiler::CompileError;
+use crate::config::AccelConfig;
+use crate::funcsim::{GroupParams, Params};
+use crate::graph::{validate, Shape};
+use crate::isa::{decode, InstructionStream, ReuseMode, WORDS_PER_INSTR};
+use crate::serialize::{graph_from_json, graph_to_json, parse, Json};
+use crate::Result;
+
+use format::{SectionReader, SectionWriter};
+
+/// Identifies the meta section of the container.
+const PROGRAM_FORMAT: &str = "shortcutfusion-program";
+
+/// A packed, deployable program: everything the accelerator-side driver
+/// needs to run one network, plus the derived views the simulation
+/// backends execute against.
+///
+/// The serialized state is `(model, strategy, config, graph, assigns,
+/// words, params)`; the grouped graph and decoded instruction stream are
+/// rebuilt deterministically at load/pack time and never stored.
+#[derive(Debug, Clone)]
+pub struct Program {
+    model: String,
+    strategy: String,
+    cfg: AccelConfig,
+    /// Per-group buffer placements + header flags (staging DMA,
+    /// long-path DRAM copy) — the allocator decisions that are not
+    /// encoded inside the 11 instruction words.
+    assigns: Vec<BufAssign>,
+    params: Option<Params>,
+    /// Decoded view of the packed words (validated at construction).
+    stream: InstructionStream,
+    grouped: Arc<GroupedGraph>,
+}
+
+impl Program {
+    /// Assemble a program from compile products that share one grouped
+    /// graph (what [`crate::compiler::Compiler::pack`] and
+    /// [`crate::compiler::Lowered::into_program`] call). Validates that
+    /// the words decode and that instruction / assignment counts match
+    /// the graph's groups.
+    pub fn from_parts(
+        model: String,
+        strategy: String,
+        cfg: AccelConfig,
+        grouped: Arc<GroupedGraph>,
+        assigns: Vec<BufAssign>,
+        words: Vec<u32>,
+        params: Option<Params>,
+    ) -> Result<Program> {
+        if model != grouped.graph.name {
+            return Err(CompileError::artifact(format!(
+                "model name {:?} does not match the embedded graph {:?}",
+                model, grouped.graph.name
+            )));
+        }
+        if words.len() % WORDS_PER_INSTR != 0 {
+            return Err(CompileError::artifact(format!(
+                "{} stream words is not a multiple of {WORDS_PER_INSTR}",
+                words.len()
+            )));
+        }
+        let n = words.len() / WORDS_PER_INSTR;
+        if n != grouped.groups.len() {
+            return Err(CompileError::artifact(format!(
+                "{n} instructions for {} groups",
+                grouped.groups.len()
+            )));
+        }
+        if assigns.len() != grouped.groups.len() {
+            return Err(CompileError::artifact(format!(
+                "{} memory assignments for {} groups",
+                assigns.len(),
+                grouped.groups.len()
+            )));
+        }
+        let mut instrs = Vec::with_capacity(n);
+        for i in 0..n {
+            let chunk: [u32; WORDS_PER_INSTR] =
+                words[i * WORDS_PER_INSTR..(i + 1) * WORDS_PER_INSTR].try_into().unwrap();
+            let ins = decode(&chunk)
+                .map_err(|e| CompileError::artifact(format!("instruction {i}: {e}")))?;
+            instrs.push(ins);
+        }
+        // A self-contained artifact must be self-consistent: the packed
+        // parameters must imply exactly the quant shifts the instruction
+        // words encode (they do when the stream was lowered by the same
+        // params-carrying compiler; they don't if params were bolted on
+        // after an unparameterized lower).
+        if let Some(p) = params.as_ref() {
+            for (gi, ins) in instrs.iter().enumerate() {
+                let expect = crate::compiler::quant_shift_for(&grouped, gi, Some(p))?;
+                if expect != ins.quant_shift {
+                    return Err(CompileError::artifact(format!(
+                        "group {gi}: instruction encodes quant_shift {} but the packed \
+                         parameters imply {expect} — re-lower with the params-carrying \
+                         compiler before packing",
+                        ins.quant_shift
+                    )));
+                }
+            }
+        }
+        Ok(Program {
+            model,
+            strategy,
+            cfg,
+            assigns,
+            params,
+            stream: InstructionStream { instrs, words },
+            grouped,
+        })
+    }
+
+    // ---- inspection -----------------------------------------------------
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Name of the [`crate::compiler::ReuseStrategy`] that chose the
+    /// packed policy.
+    pub fn strategy(&self) -> &str {
+        &self.strategy
+    }
+
+    pub fn cfg(&self) -> &AccelConfig {
+        &self.cfg
+    }
+
+    /// The fused model this program executes (rebuilt from the embedded
+    /// frozen graph on load).
+    pub fn grouped(&self) -> &Arc<GroupedGraph> {
+        &self.grouped
+    }
+
+    /// The packed 11-word instruction stream (decoded + raw words).
+    pub fn stream(&self) -> &InstructionStream {
+        &self.stream
+    }
+
+    /// Per-group placements and packed-header flags.
+    pub fn assigns(&self) -> &[BufAssign] {
+        &self.assigns
+    }
+
+    /// Quantized parameters, when the compile attached them.
+    pub fn params(&self) -> Option<&Params> {
+        self.params.as_ref()
+    }
+
+    /// Expected input tensor shape.
+    pub fn input_shape(&self) -> Shape {
+        self.grouped.graph.input().out_shape
+    }
+
+    /// The per-group reuse policy, read back from the *packed*
+    /// instructions (the artifact's source of truth, not a copy of the
+    /// optimizer output).
+    pub fn policy(&self) -> Vec<ReuseMode> {
+        self.stream.instrs.iter().map(|i| i.reuse).collect()
+    }
+
+    /// Placement view for the timing model. Only the per-group
+    /// assignments are part of the artifact; the occupancy statistics an
+    /// allocator run would also report are not meaningful for a loaded
+    /// program and are zeroed.
+    pub fn alloc_view(&self) -> AllocResult {
+        AllocResult {
+            assigns: self.assigns.clone(),
+            buf_peak: [0; 3],
+            aux_peak: 0,
+            spill_bytes: 0,
+            spill_events: 0,
+        }
+    }
+
+    // ---- serialization --------------------------------------------------
+
+    /// Serialize to the versioned, checksummed container format.
+    /// Deterministic: equal programs produce equal bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = SectionWriter::new();
+        w.section(self.meta_json().to_string_compact().as_bytes());
+        w.section(graph_to_json(&self.grouped.graph).to_string_compact().as_bytes());
+        let mut words_bytes = Vec::with_capacity(self.stream.words.len() * 4);
+        for word in &self.stream.words {
+            words_bytes.extend_from_slice(&word.to_le_bytes());
+        }
+        w.section(&words_bytes);
+        match &self.params {
+            Some(p) => {
+                let mut pb = vec![1u8];
+                pb.extend_from_slice(&params_to_bytes(p));
+                w.section(&pb);
+            }
+            None => w.section(&[0u8]),
+        }
+        format::wrap(&w.finish())
+    }
+
+    /// Parse a container produced by [`Program::to_bytes`], verifying
+    /// the checksum and rebuilding the derived views.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Program> {
+        let payload = format::unwrap(bytes)?;
+        let mut r = SectionReader::new(payload);
+
+        let meta_text = std::str::from_utf8(r.section()?)
+            .map_err(|_| CompileError::artifact("meta section is not UTF-8"))?;
+        let meta = parse(meta_text)
+            .map_err(|e| CompileError::artifact(format!("meta section: {e}")))?;
+        if meta.get("format").and_then(Json::as_str) != Some(PROGRAM_FORMAT) {
+            return Err(CompileError::artifact("meta section is not a program record"));
+        }
+        let text_field = |key: &str| -> Result<String> {
+            meta.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| CompileError::artifact(format!("meta: missing {key:?}")))
+        };
+        let model = text_field("model")?;
+        let strategy = text_field("strategy")?;
+        let cfg = AccelConfig::from_json(
+            meta.get("config")
+                .ok_or_else(|| CompileError::artifact("meta: missing config"))?,
+        )?;
+        let assigns = assigns_from_json(
+            meta.get("assigns")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| CompileError::artifact("meta: missing assigns"))?,
+        )?;
+
+        let graph_text = std::str::from_utf8(r.section()?)
+            .map_err(|_| CompileError::artifact("graph section is not UTF-8"))?;
+        let graph_doc = parse(graph_text)
+            .map_err(|e| CompileError::artifact(format!("graph section: {e}")))?;
+        let graph = graph_from_json(&graph_doc)?;
+
+        let words_bytes = r.section()?;
+        if words_bytes.len() % 4 != 0 {
+            return Err(CompileError::artifact("instruction section is not word-aligned"));
+        }
+        let words: Vec<u32> = words_bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        let params_section = r.section()?;
+        let params = match params_section.first() {
+            Some(0) if params_section.len() == 1 => None,
+            Some(1) => Some(params_from_bytes(&params_section[1..])?),
+            _ => return Err(CompileError::artifact("malformed params section")),
+        };
+        if !r.done() {
+            return Err(CompileError::artifact("trailing bytes after the last section"));
+        }
+
+        validate(&graph)?;
+        let grouped = Arc::new(analyze(&graph));
+        Program::from_parts(model, strategy, cfg, grouped, assigns, words, params)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes()).map_err(|e| CompileError::io(path, e))
+    }
+
+    pub fn load(path: &Path) -> Result<Program> {
+        let bytes = std::fs::read(path).map_err(|e| CompileError::io(path, e))?;
+        Program::from_bytes(&bytes)
+    }
+
+    /// Compact inspection record (mirrors the stage artifacts'
+    /// `summary_json`): O(metadata) — it does not re-serialize the
+    /// artifact.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("stage", Json::str("program")),
+            ("model", Json::str(&self.model)),
+            ("strategy", Json::str(&self.strategy)),
+            ("target", Json::str(&self.cfg.name)),
+            ("instructions", Json::num(self.stream.len() as f64)),
+            ("stream_bytes", Json::num(self.stream.byte_size() as f64)),
+            ("has_params", Json::Bool(self.params.is_some())),
+        ])
+    }
+
+    fn meta_json(&self) -> Json {
+        let assigns: Vec<Json> = self
+            .assigns
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("in", Json::Str(loc_code(&a.in_loc))),
+                    ("out", Json::Str(loc_code(&a.out_loc))),
+                    (
+                        "aux",
+                        a.aux_loc.map(|l| Json::Str(loc_code(&l))).unwrap_or(Json::Null),
+                    ),
+                    ("staged", Json::Bool(a.staged_input)),
+                    ("also_dram", Json::Bool(a.also_dram)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::str(PROGRAM_FORMAT)),
+            ("version", Json::num(format::FORMAT_VERSION as f64)),
+            ("model", Json::str(&self.model)),
+            ("strategy", Json::str(&self.strategy)),
+            ("config", self.cfg.to_json()),
+            ("assigns", Json::Arr(assigns)),
+        ])
+    }
+}
+
+impl crate::compiler::Lowered {
+    /// Consume the lowered stage into a deployable [`Program`]. Pass the
+    /// quantized parameters to pack them into the artifact (what
+    /// [`crate::compiler::Compiler::pack`] does automatically when the
+    /// compiler carries params).
+    pub fn into_program(self, params: Option<Params>) -> Result<Program> {
+        Program::from_parts(
+            self.model,
+            self.strategy.to_string(),
+            self.cfg,
+            self.grouped,
+            self.alloc.assigns,
+            self.stream.words,
+            params,
+        )
+    }
+}
+
+fn loc_code(l: &Loc) -> String {
+    match l {
+        Loc::Buf(b) => format!("b{b}"),
+        Loc::Dram => "dram".to_string(),
+        Loc::Aux => "aux".to_string(),
+    }
+}
+
+fn loc_from_code(s: &str) -> Result<Loc> {
+    match s {
+        "dram" => Ok(Loc::Dram),
+        "aux" => Ok(Loc::Aux),
+        _ => s
+            .strip_prefix('b')
+            .and_then(|d| d.parse::<u8>().ok())
+            .map(Loc::Buf)
+            .ok_or_else(|| CompileError::artifact(format!("bad location code {s:?}"))),
+    }
+}
+
+fn assigns_from_json(arr: &[Json]) -> Result<Vec<BufAssign>> {
+    arr.iter()
+        .map(|a| {
+            let loc = |key: &str| -> Result<Loc> {
+                a.get(key)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| CompileError::artifact(format!("assign: missing {key:?}")))
+                    .and_then(loc_from_code)
+            };
+            let flag = |key: &str| -> Result<bool> {
+                a.get(key)
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| CompileError::artifact(format!("assign: missing {key:?}")))
+            };
+            let aux_loc = match a.get("aux") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| CompileError::artifact("assign: bad aux"))
+                        .and_then(loc_from_code)?,
+                ),
+            };
+            Ok(BufAssign {
+                in_loc: loc("in")?,
+                out_loc: loc("out")?,
+                aux_loc,
+                also_dram: flag("also_dram")?,
+                staged_input: flag("staged")?,
+            })
+        })
+        .collect()
+}
+
+/// Deterministic binary encoding of the quantized parameter store
+/// (groups in sorted-name order; weights/LUTs as raw int8, biases as
+/// little-endian int32).
+fn params_to_bytes(p: &Params) -> Vec<u8> {
+    let mut names: Vec<&String> = p.groups.keys().collect();
+    names.sort();
+    let mut w = SectionWriter::new();
+    w.raw(&(names.len() as u64).to_le_bytes());
+    for name in names {
+        let gp = &p.groups[name];
+        w.section(name.as_bytes());
+        let weights: Vec<u8> = gp.weights.iter().map(|&v| v as u8).collect();
+        w.section(&weights);
+        let mut bias = Vec::with_capacity(gp.bias.len() * 4);
+        for &b in &gp.bias {
+            bias.extend_from_slice(&b.to_le_bytes());
+        }
+        w.section(&bias);
+        w.raw(&gp.shift.to_le_bytes());
+        w.raw(&gp.elt_shift.to_le_bytes());
+        match &gp.lut {
+            None => w.raw(&[0]),
+            Some(lut) => {
+                w.raw(&[1]);
+                let bytes: Vec<u8> = lut.iter().map(|&v| v as u8).collect();
+                w.section(&bytes);
+            }
+        }
+    }
+    w.finish()
+}
+
+fn params_from_bytes(bytes: &[u8]) -> Result<Params> {
+    let mut r = SectionReader::new(bytes);
+    let count = u64::from_le_bytes(r.raw(8)?.try_into().unwrap());
+    let mut groups = HashMap::new();
+    for _ in 0..count {
+        let name = String::from_utf8(r.section()?.to_vec())
+            .map_err(|_| CompileError::artifact("params: group name is not UTF-8"))?;
+        let weights: Vec<i8> = r.section()?.iter().map(|&b| b as i8).collect();
+        let bias_bytes = r.section()?;
+        if bias_bytes.len() % 4 != 0 {
+            return Err(CompileError::artifact(format!("params {name}: bias not i32-aligned")));
+        }
+        let bias: Vec<i32> = bias_bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let shift = i32::from_le_bytes(r.raw(4)?.try_into().unwrap());
+        let elt_shift = i32::from_le_bytes(r.raw(4)?.try_into().unwrap());
+        let lut = match r.raw(1)?[0] {
+            0 => None,
+            1 => Some(r.section()?.iter().map(|&b| b as i8).collect::<Vec<i8>>()),
+            other => {
+                return Err(CompileError::artifact(format!(
+                    "params {name}: bad LUT flag {other}"
+                )))
+            }
+        };
+        groups.insert(name, GroupParams { weights, bias, shift, elt_shift, lut });
+    }
+    if !r.done() {
+        return Err(CompileError::artifact("params: trailing bytes"));
+    }
+    Ok(Params { groups })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::Compiler;
+    use crate::zoo;
+
+    fn tinynet_program(params: bool) -> Program {
+        crate::testutil::pack_program(&zoo::tinynet(), params.then_some(9))
+    }
+
+    #[test]
+    fn pack_save_load_round_trip() {
+        let program = tinynet_program(false);
+        let bytes = program.to_bytes();
+        let loaded = Program::from_bytes(&bytes).unwrap();
+        assert_eq!(loaded.model(), program.model());
+        assert_eq!(loaded.strategy(), program.strategy());
+        assert_eq!(loaded.cfg(), program.cfg());
+        assert_eq!(loaded.stream().words, program.stream().words);
+        assert_eq!(loaded.policy(), program.policy());
+        assert_eq!(loaded.input_shape(), program.input_shape());
+        assert_eq!(loaded.to_bytes(), bytes, "re-save must be byte-identical");
+    }
+
+    #[test]
+    fn params_survive_packing() {
+        let program = tinynet_program(true);
+        let loaded = Program::from_bytes(&program.to_bytes()).unwrap();
+        let (a, b) = (program.params().unwrap(), loaded.params().unwrap());
+        assert_eq!(a.groups.len(), b.groups.len());
+        for (name, gp) in &a.groups {
+            let lp = b.get(name).unwrap_or_else(|| panic!("missing group {name}"));
+            assert_eq!(gp.weights, lp.weights, "{name}");
+            assert_eq!(gp.bias, lp.bias, "{name}");
+            assert_eq!(gp.shift, lp.shift, "{name}");
+            assert_eq!(gp.elt_shift, lp.elt_shift, "{name}");
+            assert_eq!(gp.lut, lp.lut, "{name}");
+        }
+        assert_eq!(loaded.to_bytes(), program.to_bytes());
+    }
+
+    #[test]
+    fn corruption_is_rejected_typed() {
+        let bytes = tinynet_program(false).to_bytes();
+        // flip one payload byte -> checksum failure
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert!(matches!(Program::from_bytes(&bad), Err(CompileError::Artifact(_))));
+        // truncation
+        assert!(matches!(
+            Program::from_bytes(&bytes[..bytes.len() / 2]),
+            Err(CompileError::Artifact(_))
+        ));
+        // not a program at all
+        assert!(matches!(Program::from_bytes(b"junk"), Err(CompileError::Artifact(_))));
+    }
+
+    #[test]
+    fn into_program_equals_pack() {
+        let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+        let analyzed = compiler.analyze(&zoo::tinynet()).unwrap();
+        let lowered = compiler
+            .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+            .unwrap();
+        let packed = compiler.pack(&lowered).unwrap();
+        let consumed = lowered.into_program(None).unwrap();
+        assert_eq!(packed.to_bytes(), consumed.to_bytes());
+    }
+
+    #[test]
+    fn params_inconsistent_with_stream_are_rejected() {
+        let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+        let analyzed = compiler.analyze(&zoo::tinynet()).unwrap();
+        let lowered = compiler
+            .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+            .unwrap();
+        // the stream was lowered without params (quant_shift 0 encoded);
+        // these params imply shift 7 on every weighted group, so packing
+        // them alongside that stream would be a self-contradicting artifact
+        let params = Params::random(&analyzed.grouped, 3);
+        assert!(matches!(
+            lowered.into_program(Some(params)),
+            Err(CompileError::Artifact(_))
+        ));
+    }
+
+    #[test]
+    fn mismatched_parts_are_rejected() {
+        let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+        let analyzed = compiler.analyze(&zoo::tinynet()).unwrap();
+        let lowered = compiler
+            .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+            .unwrap();
+        // wrong model name
+        assert!(Program::from_parts(
+            "NotTinyNet".into(),
+            "cutpoint".into(),
+            AccelConfig::kcu1500_int8(),
+            lowered.grouped.clone(),
+            lowered.alloc.assigns.clone(),
+            lowered.stream.words.clone(),
+            None,
+        )
+        .is_err());
+        // truncated stream
+        assert!(Program::from_parts(
+            lowered.model.clone(),
+            "cutpoint".into(),
+            AccelConfig::kcu1500_int8(),
+            lowered.grouped.clone(),
+            lowered.alloc.assigns.clone(),
+            lowered.stream.words[..11].to_vec(),
+            None,
+        )
+        .is_err());
+    }
+}

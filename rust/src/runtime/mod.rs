@@ -1,5 +1,12 @@
 //! PJRT runtime: load and execute AOT-compiled artifacts.
 //!
+//! **Deprecation path:** direct use of [`Runtime`] as an execution entry
+//! point is superseded by the unified [`crate::engine::ExecutionBackend`]
+//! API ([`crate::engine::PjrtBackend`] is the PJRT implementation); this
+//! module remains the low-level HLO-artifact loader the backend builds
+//! on. New code should run packed [`crate::program::Program`] artifacts
+//! through [`crate::engine`] — see MIGRATION.md §"The run side".
+//!
 //! The real backend wraps the `xla` crate (PJRT C API):
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
 //! `execute`. That crate is not in the offline registry, so the backend

@@ -82,8 +82,9 @@ impl Runtime {
                 // i8 is not a `NativeType` in the crate; build the S8
                 // literal from raw bytes instead.
                 let dims: Vec<usize> = tensor_dims(t).into_iter().map(|d| d as usize).collect();
-                let bytes: &[u8] =
-                    unsafe { std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len()) };
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len())
+                };
                 xla::Literal::create_from_shape_and_untyped_data(
                     xla::ElementType::S8,
                     &dims,

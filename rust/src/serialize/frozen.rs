@@ -178,12 +178,19 @@ pub fn graph_from_json(doc: &Json) -> Result<Graph> {
             .ok_or_else(|| CompileError::parse(format!("node {nname} lacks inputs")))?
             .iter()
             .map(|j| {
-                let s = j.as_str().ok_or_else(|| CompileError::parse(format!("bad input ref in {nname}")))?;
-                ids.get(s).copied().ok_or_else(|| CompileError::parse(format!("unknown input {s:?} in {nname}")))
+                let s = j
+                    .as_str()
+                    .ok_or_else(|| CompileError::parse(format!("bad input ref in {nname}")))?;
+                ids.get(s)
+                    .copied()
+                    .ok_or_else(|| CompileError::parse(format!("unknown input {s:?} in {nname}")))
             })
             .collect::<Result<_>>()?;
         let one = || -> Result<NodeId> {
-            inputs.first().copied().ok_or_else(|| CompileError::parse(format!("{nname}: missing operand")))
+            inputs
+                .first()
+                .copied()
+                .ok_or_else(|| CompileError::parse(format!("{nname}: missing operand")))
         };
         let two = || -> Result<(NodeId, NodeId)> {
             if inputs.len() == 2 {
@@ -208,7 +215,14 @@ pub fn graph_from_json(doc: &Json) -> Result<Graph> {
                 if depthwise {
                     b.dwconv(nname, one()?, get_usize("k")?, get_usize("stride")?, pad)
                 } else {
-                    b.conv(nname, one()?, get_usize("k")?, get_usize("stride")?, get_usize("out_c")?, pad)
+                    b.conv(
+                        nname,
+                        one()?,
+                        get_usize("k")?,
+                        get_usize("stride")?,
+                        get_usize("out_c")?,
+                        pad,
+                    )
                 }
             }
             "fc" => b.fc(nname, one()?, get_usize("out_c")?),
@@ -216,7 +230,9 @@ pub fn graph_from_json(doc: &Json) -> Result<Graph> {
             "bias" => b.bias(nname, one()?),
             "act" => {
                 let a = act_from_str(
-                    nd.get("act").and_then(Json::as_str).ok_or_else(|| CompileError::parse(format!("{nname}: missing act")))?,
+                    nd.get("act")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| CompileError::parse(format!("{nname}: missing act")))?,
                 )?;
                 b.activation(nname, one()?, a)
             }

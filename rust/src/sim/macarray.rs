@@ -109,7 +109,13 @@ mod tests {
         AccelConfig::kcu1500_int8()
     }
 
-    fn single_conv(k: usize, in_c: usize, out_c: usize, hw: usize, depthwise: bool) -> (GroupedGraph, usize) {
+    fn single_conv(
+        k: usize,
+        in_c: usize,
+        out_c: usize,
+        hw: usize,
+        depthwise: bool,
+    ) -> (GroupedGraph, usize) {
         let mut b = GraphBuilder::new("t", Shape::new(hw, hw, in_c));
         let x = b.input_id();
         if depthwise {

@@ -38,7 +38,13 @@ impl TrafficCount {
 }
 
 /// Replay one instruction's memory behaviour.
-fn replay_instr(ins: &Instruction, gg: &GroupedGraph, gi: usize, cfg: &AccelConfig, t: &mut TrafficCount) {
+fn replay_instr(
+    ins: &Instruction,
+    gg: &GroupedGraph,
+    gi: usize,
+    cfg: &AccelConfig,
+    t: &mut TrafficCount,
+) {
     let qa = cfg.qa as u64;
     let gr = &gg.groups[gi];
     let in_bytes = gr.in_shape.bytes(cfg.qa) as u64;

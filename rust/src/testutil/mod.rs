@@ -1,6 +1,33 @@
 //! Test utilities: a miniature property-testing driver (the offline
-//! registry has no `proptest`; see DESIGN.md §9).
+//! registry has no `proptest`; see DESIGN.md §9) plus shared fixture
+//! builders for the program/engine suites.
 
 pub mod prop;
 
-pub use prop::{Rng, forall};
+pub use prop::{forall, random_instruction, Rng};
+
+/// Compile a graph with the default cut-point compiler and pack it into
+/// a [`crate::program::Program`] — the boilerplate shared by the
+/// program/engine test suites. `params_seed` packs deterministic random
+/// parameters (what the reference backend needs).
+///
+/// Panics on any stage failure: this is test fixture code.
+pub fn pack_program(
+    graph: &crate::graph::Graph,
+    params_seed: Option<u64>,
+) -> crate::program::Program {
+    use crate::compiler::Compiler;
+    use crate::config::AccelConfig;
+    use crate::funcsim::Params;
+
+    let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+    let analyzed = compiler.analyze(graph).unwrap();
+    let compiler = match params_seed {
+        Some(seed) => compiler.with_params(Params::random(&analyzed.grouped, seed)),
+        None => compiler,
+    };
+    let lowered = compiler
+        .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+        .unwrap();
+    compiler.pack(&lowered).unwrap()
+}

@@ -43,7 +43,15 @@ fn backbone(b: &mut GraphBuilder, inp: NodeId) -> (NodeId, NodeId, NodeId) {
     (taps[0], taps[1], taps[2])
 }
 
-fn mbconv(b: &mut GraphBuilder, base: &str, x: NodeId, expand: usize, out_c: usize, k: usize, stride: usize) -> NodeId {
+fn mbconv(
+    b: &mut GraphBuilder,
+    base: &str,
+    x: NodeId,
+    expand: usize,
+    out_c: usize,
+    k: usize,
+    stride: usize,
+) -> NodeId {
     let in_c = b.shape(x).c;
     let exp_c = in_c * expand;
     let se_c = (in_c / 4).max(1);

@@ -58,7 +58,8 @@ fn mbconv(b: &mut GraphBuilder, base: &str, x: NodeId, st: &Stage, stride: usize
     let a2 = b.activation(&format!("{base}/se/sigmoid"), r2, Activation::Sigmoid);
     let scaled = b.scale(&format!("{base}/se/scale"), dw, a2);
 
-    let proj = b.conv(&format!("{base}/project"), scaled, 1, 1, st.out_c, crate::graph::PadMode::Same);
+    let proj =
+        b.conv(&format!("{base}/project"), scaled, 1, 1, st.out_c, crate::graph::PadMode::Same);
     let proj_bn = b.batchnorm(&format!("{base}/project/bn"), proj);
 
     if stride == 1 && in_c == st.out_c {

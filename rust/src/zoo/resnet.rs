@@ -41,7 +41,13 @@ fn resnet(depth: usize, input: usize) -> Graph {
 }
 
 /// 1x1 → 3x3 → 1x1(4c) bottleneck with projection shortcut on stage entry.
-fn bottleneck_block(b: &mut GraphBuilder, base: &str, x: NodeId, c: usize, stride: usize) -> NodeId {
+fn bottleneck_block(
+    b: &mut GraphBuilder,
+    base: &str,
+    x: NodeId,
+    c: usize,
+    stride: usize,
+) -> NodeId {
     let in_c = b.shape(x).c;
     let out_c = 4 * c;
     let c1 = b.conv_bn_act(&format!("{base}/a"), x, 1, 1, c, Activation::Relu);

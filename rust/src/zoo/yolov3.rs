@@ -3,13 +3,27 @@
 use crate::graph::{Activation, Graph, GraphBuilder, NodeId, PadMode, Shape};
 
 /// Numbered conv+bn+leaky helper shared by the builder functions below.
-fn cba(b: &mut GraphBuilder, idx: &mut usize, from: NodeId, k: usize, s: usize, c: usize) -> NodeId {
+fn cba(
+    b: &mut GraphBuilder,
+    idx: &mut usize,
+    from: NodeId,
+    k: usize,
+    s: usize,
+    c: usize,
+) -> NodeId {
     *idx += 1;
     b.conv_bn_act(&format!("conv{idx}"), from, k, s, c, Activation::Leaky)
 }
 
 /// Darknet53 residual stage: stride-2 downsample conv + `n` residual blocks.
-fn stage(b: &mut GraphBuilder, idx: &mut usize, res_idx: &mut usize, from: NodeId, c: usize, n: usize) -> NodeId {
+fn stage(
+    b: &mut GraphBuilder,
+    idx: &mut usize,
+    res_idx: &mut usize,
+    from: NodeId,
+    c: usize,
+    n: usize,
+) -> NodeId {
     let mut x = cba(b, idx, from, 3, 2, c);
     for _ in 0..n {
         let c1 = cba(b, idx, x, 1, 1, c / 2);
@@ -22,7 +36,13 @@ fn stage(b: &mut GraphBuilder, idx: &mut usize, res_idx: &mut usize, from: NodeI
 
 /// YOLO head: 5-conv block, then 3x3 + 1x1 detection conv.
 /// Returns `(branch_point, detect_output)`.
-fn head(b: &mut GraphBuilder, idx: &mut usize, from: NodeId, c: usize, tag: &str) -> (NodeId, NodeId) {
+fn head(
+    b: &mut GraphBuilder,
+    idx: &mut usize,
+    from: NodeId,
+    c: usize,
+    tag: &str,
+) -> (NodeId, NodeId) {
     let h1 = cba(b, idx, from, 1, 1, c);
     let h2 = cba(b, idx, h1, 3, 1, 2 * c);
     let h3 = cba(b, idx, h2, 1, 1, c);

@@ -1,0 +1,127 @@
+//! Artifact-level properties: randomized encode/decode round-trips and
+//! the packed `Program` container's save → load → byte-identical re-save
+//! guarantee over the whole model zoo.
+
+use shortcutfusion::compiler::{CompileError, Compiler};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::isa::{decode, encode, WORDS_PER_INSTR};
+use shortcutfusion::program::format::{fnv1a32, unwrap as unwrap_container};
+use shortcutfusion::program::Program;
+use shortcutfusion::testutil::{forall, random_instruction};
+use shortcutfusion::zoo;
+
+#[test]
+fn encode_decode_roundtrip_over_randomized_instructions() {
+    forall("encode∘decode = id over the instruction space", 2000, |rng| {
+        let i = random_instruction(rng);
+        let words = encode(&i);
+        assert_eq!(words.len(), WORDS_PER_INSTR);
+        assert_eq!(decode(&words).unwrap(), i);
+    });
+}
+
+#[test]
+fn decode_never_panics_on_random_words() {
+    // decode must reject or accept — never panic — whatever 11 words it
+    // is handed (a corrupted stream reaches it before any checksum in
+    // unit-level use).
+    forall("decode is total", 2000, |rng| {
+        let mut words = [0u32; WORDS_PER_INSTR];
+        for w in words.iter_mut() {
+            *w = rng.next_u64() as u32;
+        }
+        let _ = decode(&words);
+    });
+}
+
+#[test]
+fn program_save_load_resave_is_byte_identical_for_every_zoo_model() {
+    let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+    for &name in zoo::MODEL_NAMES {
+        let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+        let analyzed = compiler.analyze(&g).unwrap();
+        let lowered = compiler
+            .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+            .unwrap();
+        let program = compiler.pack(&lowered).unwrap();
+
+        let bytes = program.to_bytes();
+        let loaded = Program::from_bytes(&bytes).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(loaded.to_bytes(), bytes, "{name}: re-save is not byte-identical");
+
+        // the loaded program is the same program, not merely equal bytes
+        assert_eq!(loaded.model(), program.model(), "{name}");
+        assert_eq!(loaded.strategy(), "cutpoint", "{name}");
+        assert_eq!(loaded.cfg(), program.cfg(), "{name}");
+        assert_eq!(loaded.stream().words, program.stream().words, "{name}");
+        assert_eq!(loaded.policy(), program.policy(), "{name}");
+        assert_eq!(
+            loaded.grouped().groups.len(),
+            program.grouped().groups.len(),
+            "{name}"
+        );
+    }
+}
+
+#[test]
+fn program_file_round_trip() {
+    let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+    let analyzed = compiler.analyze(&zoo::tinynet()).unwrap();
+    let lowered = compiler
+        .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+        .unwrap();
+    let program = compiler.pack(&lowered).unwrap();
+
+    let dir = std::env::temp_dir().join("sf_program_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tinynet.sfp");
+    program.save(&path).unwrap();
+    let loaded = Program::load(&path).unwrap();
+    assert_eq!(loaded.to_bytes(), program.to_bytes());
+}
+
+#[test]
+fn random_payload_corruption_is_always_detected() {
+    let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+    let analyzed = compiler.analyze(&zoo::tinynet()).unwrap();
+    let lowered = compiler
+        .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+        .unwrap();
+    let bytes = compiler.pack(&lowered).unwrap().to_bytes();
+
+    forall("bit flips never load", 200, |rng| {
+        let mut bad = bytes.clone();
+        let pos = rng.below(bad.len());
+        let bit = 1u8 << rng.below(8);
+        bad[pos] ^= bit;
+        match Program::from_bytes(&bad) {
+            Err(_) => {}
+            Ok(_) => panic!("flip of bit {bit:#x} at byte {pos} loaded successfully"),
+        }
+    });
+}
+
+#[test]
+fn container_checksum_covers_the_whole_payload() {
+    let compiler = Compiler::new(AccelConfig::kcu1500_int8());
+    let analyzed = compiler.analyze(&zoo::tinynet()).unwrap();
+    let lowered = compiler
+        .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+        .unwrap();
+    let bytes = compiler.pack(&lowered).unwrap().to_bytes();
+    let payload = unwrap_container(&bytes).unwrap();
+    // header stores fnv1a32(payload); recompute independently
+    let stored = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    assert_eq!(stored, fnv1a32(payload));
+}
+
+#[test]
+fn cross_config_pack_is_rejected() {
+    let a = Compiler::new(AccelConfig::kcu1500_int8());
+    let b = Compiler::new(AccelConfig::table2_int16());
+    let analyzed = a.analyze(&zoo::tinynet()).unwrap();
+    let lowered = a
+        .lower(&a.allocate(&a.optimize(&analyzed).unwrap()).unwrap())
+        .unwrap();
+    assert!(matches!(b.pack(&lowered), Err(CompileError::StageMismatch(_))));
+}

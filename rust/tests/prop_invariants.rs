@@ -43,7 +43,8 @@ fn random_cnn(rng: &mut Rng) -> Graph {
                 let a2 = b.activation(&format!("{base}/sig"), f2, Activation::Sigmoid);
                 x = b.scale(&format!("{base}/scale"), cv, a2);
             } else {
-                x = b.conv_bn_act(&format!("conv{id}"), x, *rng.choose(&[1usize, 3]), 1, c, Activation::Relu);
+                let k = *rng.choose(&[1usize, 3]);
+                x = b.conv_bn_act(&format!("conv{id}"), x, k, 1, c, Activation::Relu);
             }
         }
         if s + 1 < stages {

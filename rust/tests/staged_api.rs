@@ -115,7 +115,8 @@ fn baseline_strategies_flow_through_the_same_pipeline() {
     let cfg = AccelConfig::kcu1500_int8();
     let g = zoo::resnet50(224);
     for strategy in [
-        Arc::new(FixedReuseStrategy(ReuseMode::Row)) as Arc<dyn shortcutfusion::compiler::ReuseStrategy>,
+        Arc::new(FixedReuseStrategy(ReuseMode::Row))
+            as Arc<dyn shortcutfusion::compiler::ReuseStrategy>,
         Arc::new(FixedReuseStrategy(ReuseMode::Frame)),
         Arc::new(ShortcutMiningStrategy),
         Arc::new(SmartShuttleStrategy::default()),
