@@ -1,0 +1,67 @@
+//! §Perf harness for the design-space explorer: one grid (2 models ×
+//! 3 SRAM budgets × 3 strategies × 2 MAC arrays = 36 points) costed
+//! serially, in parallel, and again on a warm session — the three
+//! regimes that matter for sweep throughput.
+
+use shortcutfusion::bench::{report_timing, time};
+use shortcutfusion::compiler::Session;
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::explorer::SearchSpace;
+
+fn space() -> SearchSpace {
+    SearchSpace::new(AccelConfig::kcu1500_int8())
+        .models(&["resnet18", "yolov2"])
+        .input_sizes(&[64])
+        .sram_budgets(&[1_000_000, 2_000_000, 8_000_000])
+        .mac_arrays(&[(32, 32), (64, 64)])
+        .ablation_strategies()
+}
+
+fn main() {
+    let space = space();
+    let n = space.enumerate().unwrap().points.len();
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    println!("explorer grid: {n} design points");
+
+    // 1. cold serial sweep: a fresh session, one worker
+    let t_serial = time(3, || {
+        space.explore(&Session::new(), 1).unwrap().points.len()
+    });
+    report_timing("explorer sweep serial (1 thread)", &t_serial);
+
+    // 2. cold parallel sweep: a fresh session, all workers
+    let t_par = time(3, || {
+        space.explore(&Session::new(), threads).unwrap().points.len()
+    });
+    report_timing(&format!("explorer sweep parallel ({threads} threads)"), &t_par);
+    println!(
+        "explorer sweep speedup: x{:.2} on {} threads",
+        t_serial.median_ms / t_par.median_ms,
+        threads
+    );
+
+    // 3. warm sweep: every point is a report-cache hit
+    let warm = Session::new();
+    let _ = space.explore(&warm, threads).unwrap();
+    let t_warm = time(5, || space.explore(&warm, threads).unwrap().points.len());
+    report_timing("explorer sweep warm (all cache hits)", &t_warm);
+    let stats = warm.stats();
+    println!(
+        "warm session: {} report hits / {} misses, {} shared analyses",
+        stats.report_hits, stats.report_misses, stats.analysis_hits
+    );
+
+    // 4. post-processing cost: Pareto extraction + recommendation
+    let exploration = space.explore(&warm, threads).unwrap();
+    let t_post = time(20, || {
+        exploration
+            .models()
+            .iter()
+            .map(|m| {
+                let rec = exploration.recommend(m).is_some() as usize;
+                exploration.pareto_front(m).len() + rec
+            })
+            .sum::<usize>()
+    });
+    report_timing("pareto front + recommend (36 points)", &t_post);
+}

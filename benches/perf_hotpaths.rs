@@ -65,7 +65,7 @@ fn main() {
     let cfgs = [cfg.clone(), cfg_small, cfg_large];
     let jobs: Vec<SweepJob> = zoo::MODEL_NAMES
         .iter()
-        .flat_map(|&m| cfgs.iter().map(move |c| SweepJob::zoo_default(m, c)))
+        .flat_map(|&m| cfgs.iter().map(move |c| SweepJob::zoo_default(m, c).unwrap()))
         .collect();
     println!("sweep grid: {} jobs (zoo x {} configs)", jobs.len(), cfgs.len());
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);

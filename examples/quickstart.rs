@@ -37,8 +37,8 @@ fn main() -> shortcutfusion::Result<()> {
         .map_err(|_| CompileError::config("input must be a number"))?
         .unwrap_or_else(|| zoo::default_input(model));
 
-    let graph = zoo::by_name(model, input)
-        .ok_or_else(|| CompileError::UnknownModel(model.to_string()))?;
+    let graph =
+        zoo::by_name(model, input).ok_or_else(|| CompileError::unknown_model(model))?;
     let cfg = AccelConfig::kcu1500_int8();
 
     println!("ShortcutFusion quickstart — {model}@{input} on {}", cfg.name);

@@ -15,7 +15,9 @@ use super::static_alloc::{AllocResult, Loc};
 /// A contiguous DRAM allocation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OffchipArena {
+    /// Byte offset in the accelerator's DRAM space.
     pub offset: u32,
+    /// Allocation size in bytes.
     pub bytes: u32,
 }
 

@@ -21,7 +21,9 @@ pub enum Loc {
 /// Per-group placement decision.
 #[derive(Debug, Clone)]
 pub struct BufAssign {
+    /// Where the main input operand lives.
     pub in_loc: Loc,
+    /// Where the output is written.
     pub out_loc: Loc,
     /// Location of the fused-shortcut operand (for groups with
     /// `shortcut_of`) or the second operand (scale gate, concat second).
@@ -37,6 +39,7 @@ pub struct BufAssign {
 /// Allocation outcome: placements plus buffer occupancy statistics.
 #[derive(Debug, Clone)]
 pub struct AllocResult {
+    /// Per-group placement decisions, in program order.
     pub assigns: Vec<BufAssign>,
     /// Peak bytes resident in each physical buffer — Algorithm 1's
     /// `buff[0..2](L)`.
@@ -45,6 +48,7 @@ pub struct AllocResult {
     pub aux_peak: usize,
     /// Extra DRAM traffic caused by capacity evictions (bytes).
     pub spill_bytes: u64,
+    /// Number of eviction events behind `spill_bytes`.
     pub spill_events: usize,
 }
 

@@ -37,7 +37,9 @@ pub enum GroupKind {
 /// Fused trailing pooling.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PoolKind {
+    /// Max pooling.
     Max,
+    /// Average pooling.
     Avg,
     /// Global average pooling (SE squeeze / classifier head).
     Global,
@@ -46,7 +48,9 @@ pub enum PoolKind {
 /// One accelerator invocation: the main op plus fused pre/post ops.
 #[derive(Debug, Clone)]
 pub struct Group {
+    /// This group's index.
     pub id: GroupId,
+    /// Datapath class of the main op.
     pub kind: GroupKind,
     /// All graph nodes folded into this group, in topological order.
     pub nodes: Vec<NodeId>,
@@ -100,13 +104,16 @@ impl Group {
 /// The analyzer output: the original graph plus its group partition.
 #[derive(Debug, Clone)]
 pub struct GroupedGraph {
+    /// The validated source graph.
     pub graph: Graph,
+    /// The fused accelerator groups, in topological order.
     pub groups: Vec<Group>,
     /// For each graph node, the group that contains it.
     pub node_group: Vec<GroupId>,
 }
 
 impl GroupedGraph {
+    /// The group with the given id.
     pub fn group(&self, id: GroupId) -> &Group {
         &self.groups[id.0]
     }

@@ -9,8 +9,11 @@ use crate::sim::{simulate, simulate_fixed_row_baseline, NetworkTiming};
 
 /// Metrics of a fixed-policy run.
 pub struct FixedResult {
+    /// Cycle-accurate timing under the uniform policy.
     pub timing: NetworkTiming,
+    /// DRAM traffic breakdown.
     pub dram: DramBreakdown,
+    /// SRAM requirement breakdown.
     pub sram: SramBreakdown,
 }
 

@@ -5,18 +5,31 @@
 /// One Table VI column.
 #[derive(Debug, Clone, Copy)]
 pub struct Framework {
+    /// Published framework name.
     pub name: &'static str,
+    /// FPGA platform it reports on.
     pub platform: &'static str,
+    /// Reported clock, MHz.
     pub freq_mhz: f64,
+    /// Input resolution of the reported run.
     pub input: usize,
+    /// Arithmetic precision, bits.
     pub precision_bits: usize,
+    /// Reported ResNet50 latency, ms.
     pub latency_ms: f64,
+    /// Reported LUT usage, thousands.
     pub luts_k: f64,
+    /// Reported DSP usage.
     pub dsps: usize,
+    /// Reported throughput, GOPS.
     pub gops: f64,
+    /// Whether the design switches reuse schemes per layer.
     pub flexible_reuse: bool,
+    /// Whether shortcut data is fused in hardware.
     pub shortcut_fusion_hw: bool,
+    /// Reported on-chip SRAM, MB.
     pub sram_mb: f64,
+    /// Reported DSP efficiency, %.
     pub dsp_efficiency_pct: f64,
 }
 

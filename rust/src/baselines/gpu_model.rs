@@ -19,6 +19,7 @@ use crate::analyzer::{GroupKind, GroupedGraph};
 /// A GPU's published characteristics.
 #[derive(Debug, Clone, Copy)]
 pub struct Gpu {
+    /// Marketing name.
     pub name: &'static str,
     /// FP32 peak TFLOPS.
     pub peak_tflops: f64,
@@ -38,8 +39,10 @@ pub const RTX_2080_TI: Gpu = Gpu {
     launch_us: 55.0,
     board_w: 120.0,
 };
+/// RTX 3090 published characteristics (Fig 18).
 pub const RTX_3090: Gpu =
     Gpu { name: "RTX 3090", peak_tflops: 35.6, mem_gbps: 936.0, launch_us: 50.0, board_w: 160.0 };
+/// Titan Xp published characteristics (Fig 18).
 pub const TITAN_XP: Gpu =
     Gpu { name: "Titan Xp", peak_tflops: 12.15, mem_gbps: 548.0, launch_us: 65.0, board_w: 115.0 };
 /// Keras/TF-2.3 overhead multiplier (Fig 2 vs Fig 18a: "the GPU
@@ -49,8 +52,11 @@ pub const KERAS_OVERHEAD: f64 = 2.2;
 /// Latency/power estimate for one network on one GPU.
 #[derive(Debug, Clone, Copy)]
 pub struct GpuEstimate {
+    /// Estimated batch-1 latency, ms.
     pub latency_ms: f64,
+    /// Estimated board power, W.
     pub power_w: f64,
+    /// Resulting efficiency, GOPS/W.
     pub gops_per_w: f64,
 }
 

@@ -5,8 +5,11 @@
 /// OLAccel on VGG-CONV as reported in Table IV.
 #[derive(Debug, Clone, Copy)]
 pub struct OlAccel {
+    /// Reported arithmetic precision.
     pub precision: &'static str,
+    /// Reported on-chip SRAM, MB.
     pub sram_mb: f64,
+    /// Reported DRAM traffic, MB.
     pub dram_mb: f64,
 }
 

@@ -17,6 +17,7 @@ use crate::graph::OpKind;
 /// Per-network result of the SmartShuttle model.
 #[derive(Debug, Clone, Copy)]
 pub struct SmartShuttleResult {
+    /// Total modeled DRAM traffic, bytes.
     pub dram_bytes: u64,
     /// Layers that chose the psum-oriented scheme.
     pub psum_layers: usize,

@@ -9,10 +9,15 @@ use std::time::Instant;
 /// Result of timing a closure.
 #[derive(Debug, Clone, Copy)]
 pub struct Timing {
+    /// Measured iterations (after one warmup).
     pub iters: usize,
+    /// Median wall-clock per iteration, ms.
     pub median_ms: f64,
+    /// Mean wall-clock per iteration, ms.
     pub mean_ms: f64,
+    /// Fastest iteration, ms.
     pub min_ms: f64,
+    /// Slowest iteration, ms.
     pub max_ms: f64,
 }
 
@@ -52,6 +57,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty table with a title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -60,31 +66,41 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Print to stdout (see [`Table::render`]).
     pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// The aligned table as a string (so CLI commands with `--out FILE`
+    /// can write the same thing they print).
+    pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for r in &self.rows {
             for (i, c) in r.iter().enumerate() {
                 widths[i] = widths[i].max(c.len());
             }
         }
-        println!("\n== {} ==", self.title);
+        let mut out = format!("\n== {} ==\n", self.title);
         let line = |cells: &[String]| {
             let mut s = String::new();
             for (i, c) in cells.iter().enumerate() {
                 s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
             }
-            println!("{}", s.trim_end());
+            format!("{}\n", s.trim_end())
         };
-        line(&self.headers);
-        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        out.push_str(&line(&self.headers));
+        out.push_str(&widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        out.push('\n');
         for r in &self.rows {
-            line(r);
+            out.push_str(&line(r));
         }
+        out
     }
 }
 
@@ -99,10 +115,12 @@ pub fn f2(v: f64) -> String {
     format!("{v:.2}")
 }
 
+/// One-decimal formatting.
 pub fn f1(v: f64) -> String {
     format!("{v:.1}")
 }
 
+/// Integer formatting.
 pub fn i0(v: usize) -> String {
     format!("{v}")
 }

@@ -13,14 +13,26 @@ use std::path::PathBuf;
 #[derive(Debug)]
 pub enum CompileError {
     /// Filesystem failure, with the path that was being accessed.
-    Io { path: PathBuf, source: std::io::Error },
+    Io {
+        /// The path being read or written.
+        path: PathBuf,
+        /// The underlying OS error.
+        source: std::io::Error,
+    },
     /// JSON / frozen-graph / parameter-file syntax or schema violation.
     Parse(String),
     /// Accelerator-config (TOML subset) problem: unknown preset/key, bad
     /// number.
     Config(String),
-    /// Model name not in the zoo (and not loadable from a file).
-    UnknownModel(String),
+    /// Model name not in the zoo (and not loadable from a file). Carries
+    /// the valid names so sweep drivers and the CLI can print them
+    /// instead of silently falling back to a default model or input.
+    UnknownModel {
+        /// The name that failed to resolve.
+        name: String,
+        /// Every name [`crate::zoo::by_name`] accepts.
+        valid: &'static [&'static str],
+    },
     /// The input graph failed structural validation.
     Graph(String),
     /// Quantized parameter store inconsistent with the graph.
@@ -28,8 +40,11 @@ pub enum CompileError {
     /// No reuse policy satisfies the eq-(10) buffer constraint and the
     /// caller asked for strict feasibility.
     Infeasible {
+        /// Model being compiled.
         model: String,
+        /// SRAM bytes the best-effort policy needs.
         sram_required: usize,
+        /// The configured `sram_budget` it exceeded.
         sram_budget: usize,
     },
     /// Stage artifacts passed out of order or with mismatched shapes
@@ -47,30 +62,43 @@ pub enum CompileError {
 }
 
 impl CompileError {
+    /// Shorthand for [`CompileError::Parse`].
     pub fn parse(msg: impl Into<String>) -> Self {
         CompileError::Parse(msg.into())
     }
 
+    /// Shorthand for [`CompileError::Config`].
     pub fn config(msg: impl Into<String>) -> Self {
         CompileError::Config(msg.into())
     }
 
+    /// Shorthand for [`CompileError::Params`].
     pub fn params(msg: impl Into<String>) -> Self {
         CompileError::Params(msg.into())
     }
 
+    /// Shorthand for [`CompileError::StageMismatch`].
     pub fn stage(msg: impl Into<String>) -> Self {
         CompileError::StageMismatch(msg.into())
     }
 
+    /// Shorthand for [`CompileError::Unsupported`].
     pub fn unsupported(msg: impl Into<String>) -> Self {
         CompileError::Unsupported(msg.into())
     }
 
+    /// Shorthand for [`CompileError::Artifact`].
     pub fn artifact(msg: impl Into<String>) -> Self {
         CompileError::Artifact(msg.into())
     }
 
+    /// An [`CompileError::UnknownModel`] carrying the current zoo
+    /// registry, so the caller never has to assemble the valid-name list.
+    pub fn unknown_model(name: impl Into<String>) -> Self {
+        CompileError::UnknownModel { name: name.into(), valid: crate::zoo::KNOWN_NAMES }
+    }
+
+    /// Shorthand for [`CompileError::Io`].
     pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
         CompileError::Io { path: path.into(), source }
     }
@@ -84,8 +112,8 @@ impl fmt::Display for CompileError {
             }
             CompileError::Parse(m) => write!(f, "parse error: {m}"),
             CompileError::Config(m) => write!(f, "config error: {m}"),
-            CompileError::UnknownModel(m) => {
-                write!(f, "unknown model {m:?} — see `shortcutfusion list`")
+            CompileError::UnknownModel { name, valid } => {
+                write!(f, "unknown model {name:?} — valid zoo models: {}", valid.join(", "))
             }
             CompileError::Graph(m) => write!(f, "invalid graph: {m}"),
             CompileError::Params(m) => write!(f, "parameter error: {m}"),
@@ -135,8 +163,11 @@ mod tests {
 
     #[test]
     fn display_is_informative() {
-        let e = CompileError::UnknownModel("alexnet".into());
+        let e = CompileError::unknown_model("alexnet");
         assert!(e.to_string().contains("alexnet"));
+        // the valid zoo names ride along so sweep drivers can print them
+        assert!(e.to_string().contains("resnet18"));
+        assert!(e.to_string().contains("tinynet"));
         let e = CompileError::Infeasible {
             model: "yolov2".into(),
             sram_required: 10,

@@ -41,6 +41,7 @@ mod stages;
 pub mod strategy;
 
 pub use error::CompileError;
+pub(crate) use session::fan_out;
 pub use session::{Session, SessionStats, SweepJob};
 pub use stages::{Allocated, Analyzed, CompileReport, Lowered, Optimized, Simulated};
 pub use strategy::{
@@ -100,10 +101,12 @@ impl Compiler {
         self
     }
 
+    /// The target configuration this compiler produces artifacts for.
     pub fn cfg(&self) -> &AccelConfig {
         &self.cfg
     }
 
+    /// Name of the configured reuse strategy.
     pub fn strategy_name(&self) -> &'static str {
         self.strategy.name()
     }

@@ -31,15 +31,24 @@ use super::Compiler;
 /// One compile job of a sweep.
 #[derive(Debug, Clone)]
 pub struct SweepJob {
+    /// Zoo model name (see [`zoo::by_name`]).
     pub model: String,
+    /// Square input resolution the model is built at.
     pub input: usize,
+    /// Target configuration to compile for.
     pub cfg: AccelConfig,
 }
 
 impl SweepJob {
     /// A zoo model at its paper-default input size.
-    pub fn zoo_default(model: &str, cfg: &AccelConfig) -> SweepJob {
-        SweepJob { model: model.to_string(), input: zoo::default_input(model), cfg: cfg.clone() }
+    ///
+    /// Unknown names are a typed [`CompileError::UnknownModel`] (carrying
+    /// the valid zoo names) — they used to fall back silently to input
+    /// 256 and only fail later, deep inside the sweep.
+    pub fn zoo_default(model: &str, cfg: &AccelConfig) -> Result<SweepJob, CompileError> {
+        let input = zoo::try_default_input(model)
+            .ok_or_else(|| CompileError::unknown_model(model))?;
+        Ok(SweepJob { model: model.to_string(), input, cfg: cfg.clone() })
     }
 }
 
@@ -47,9 +56,13 @@ impl SweepJob {
 /// for reporting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SessionStats {
+    /// Finished-report cache hits.
     pub report_hits: usize,
+    /// Finished-report cache misses (full stage-2–5 compiles).
     pub report_misses: usize,
+    /// Analysis-artifact cache hits.
     pub analysis_hits: usize,
+    /// Analysis-artifact cache misses (fusion analyses actually run).
     pub analysis_misses: usize,
 }
 
@@ -57,18 +70,61 @@ pub struct SessionStats {
 pub struct Session {
     strategy: Arc<dyn ReuseStrategy>,
     analyzed: Mutex<HashMap<(String, usize), Arc<Analyzed>>>,
-    reports: Mutex<HashMap<ReportKey, Arc<CompileReport>>>,
+    /// Each entry keeps its strategy `Arc` alive so the pointer-identity
+    /// component of [`ReportKey`] can never be recycled by a later
+    /// allocation (ABA) while the entry exists.
+    reports: Mutex<HashMap<ReportKey, (Arc<dyn ReuseStrategy>, Arc<CompileReport>)>>,
     report_hits: AtomicUsize,
     report_misses: AtomicUsize,
     analysis_hits: AtomicUsize,
     analysis_misses: AtomicUsize,
 }
 
-/// `(model, input, config fingerprint, strategy name)`. The strategy
-/// component is constant within one `Session` (a session runs exactly one
-/// strategy); it is kept in the key so cache entries stay self-describing
-/// and the invariant survives if sessions ever take per-call strategies.
-type ReportKey = (String, usize, String, &'static str);
+/// `(model, input, config fingerprint, strategy name, strategy
+/// identity)`. The strategy components keep entries from different
+/// strategies apart: [`Session::compile_with`] takes a per-call strategy
+/// (the design-space explorer sweeps several through one session), so
+/// two strategies with the same model/config must never alias each
+/// other's cached reports. The name alone cannot guarantee that —
+/// parameterized strategies (e.g. two `SmartShuttleStrategy` buffer
+/// sizes) share one name — so the `Arc`'s pointer identity rides along:
+/// clones of one strategy hit the same entry, distinct instances never
+/// collide (at worst a logically-equal re-instantiation recomputes).
+type ReportKey = (String, usize, String, &'static str, usize);
+
+/// Thin-pointer identity of a shared strategy instance.
+fn strategy_id(strategy: &Arc<dyn ReuseStrategy>) -> usize {
+    Arc::as_ptr(strategy) as *const u8 as usize
+}
+
+/// Fan `count` independent work items out over `threads` scoped workers
+/// (work-stealing index, one result slot per item); results come back in
+/// item order. Shared by [`Session::run_jobs`] and the design-space
+/// explorer's sweep so the pool machinery lives in one place.
+pub(crate) fn fan_out<T: Send>(
+    count: usize,
+    threads: usize,
+    work: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    assert!(threads > 0, "need at least one worker");
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..count).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(count.max(1)) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= count {
+                    return;
+                }
+                *slots[i].lock().unwrap() = Some(work(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
 
 /// `AccelConfig` carries floats, so it fingerprints through its `Debug`
 /// form (deterministic: derived, field order is fixed).
@@ -101,10 +157,14 @@ impl Session {
         }
     }
 
+    /// Name of the session's default strategy (what [`Session::compile`]
+    /// and the sweep helpers run; [`Session::compile_with`] overrides it
+    /// per call).
     pub fn strategy_name(&self) -> &'static str {
         self.strategy.name()
     }
 
+    /// Snapshot of the cache counters.
     pub fn stats(&self) -> SessionStats {
         SessionStats {
             report_hits: self.report_hits.load(Ordering::Relaxed),
@@ -128,8 +188,8 @@ impl Session {
             return Ok(a.clone());
         }
         self.analysis_misses.fetch_add(1, Ordering::Relaxed);
-        let graph = zoo::by_name(model, input)
-            .ok_or_else(|| CompileError::UnknownModel(model.to_string()))?;
+        let graph =
+            zoo::by_name(model, input).ok_or_else(|| CompileError::unknown_model(model))?;
         // Any config works for stage 1; analysis never reads it.
         let compiler =
             Compiler::with_strategy(AccelConfig::kcu1500_int8(), self.strategy.clone());
@@ -138,27 +198,52 @@ impl Session {
         Ok(analyzed)
     }
 
-    /// Compile one `(model, input, config)` point, memoized.
+    /// Compile one `(model, input, config)` point with the session's
+    /// default strategy, memoized.
     pub fn compile(
         &self,
         model: &str,
         input: usize,
         cfg: &AccelConfig,
     ) -> Result<Arc<CompileReport>, CompileError> {
+        let strategy = self.strategy.clone();
+        self.compile_with(model, input, cfg, &strategy)
+    }
+
+    /// Compile one `(model, input, config)` point under an explicit
+    /// strategy, memoized per `(model, input, config, strategy name +
+    /// instance)` — reuse the same `Arc` clone across calls to hit the
+    /// cache.
+    ///
+    /// This is what lets one session serve mixed-strategy sweeps (the
+    /// [`crate::explorer`] evaluates every [`ReuseStrategy`] through a
+    /// shared session): the analysis cache is strategy-independent and
+    /// stays shared, while finished reports are keyed by the strategy's
+    /// [`ReuseStrategy::name`] *and* the `Arc`'s identity, so `cutpoint`
+    /// and `fixed-row` never alias and neither do two
+    /// differently-parameterized instances sharing a name. Reuse the
+    /// same `Arc` clone across calls to get cache hits.
+    pub fn compile_with(
+        &self,
+        model: &str,
+        input: usize,
+        cfg: &AccelConfig,
+        strategy: &Arc<dyn ReuseStrategy>,
+    ) -> Result<Arc<CompileReport>, CompileError> {
         let key: ReportKey =
-            (model.to_string(), input, cfg_key(cfg), self.strategy.name());
-        if let Some(r) = self.reports.lock().unwrap().get(&key) {
+            (model.to_string(), input, cfg_key(cfg), strategy.name(), strategy_id(strategy));
+        if let Some((_, r)) = self.reports.lock().unwrap().get(&key) {
             self.report_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(r.clone());
         }
         self.report_misses.fetch_add(1, Ordering::Relaxed);
         let analyzed = self.analyzed(model, input)?;
-        let compiler = Compiler::with_strategy(cfg.clone(), self.strategy.clone());
+        let compiler = Compiler::with_strategy(cfg.clone(), strategy.clone());
         let report = Arc::new(compiler.compile_analyzed(&analyzed)?);
         // Two threads may race to the same miss; both compute identical
         // reports and the first insert wins, keeping hits bit-stable.
         let mut cache = self.reports.lock().unwrap();
-        Ok(cache.entry(key).or_insert(report).clone())
+        Ok(cache.entry(key).or_insert((strategy.clone(), report)).1.clone())
     }
 
     /// Compile every job across `threads` scoped workers; results come
@@ -168,30 +253,18 @@ impl Session {
         jobs: &[SweepJob],
         threads: usize,
     ) -> Vec<Result<Arc<CompileReport>, CompileError>> {
-        assert!(threads > 0, "need at least one worker");
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Result<Arc<CompileReport>, CompileError>>>> =
-            jobs.iter().map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..threads.min(jobs.len().max(1)) {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= jobs.len() {
-                        return;
-                    }
-                    let job = &jobs[i];
-                    let result = self.compile(&job.model, job.input, &job.cfg);
-                    *slots[i].lock().unwrap() = Some(result);
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
-            .collect()
+        fan_out(jobs.len(), threads, |i| {
+            let job = &jobs[i];
+            self.compile(&job.model, job.input, &job.cfg)
+        })
     }
 
     /// The full grid `models × configs`, in row-major job order.
+    ///
+    /// Unknown model names keep the per-job error isolation of
+    /// [`Session::run_jobs`]: their grid slots come back as
+    /// [`CompileError::UnknownModel`] entries instead of failing the
+    /// whole sweep.
     pub fn sweep_grid(
         &self,
         models: &[&str],
@@ -200,7 +273,15 @@ impl Session {
     ) -> Vec<Result<Arc<CompileReport>, CompileError>> {
         let jobs: Vec<SweepJob> = models
             .iter()
-            .flat_map(|&m| cfgs.iter().map(move |c| SweepJob::zoo_default(m, c)))
+            .flat_map(|&m| {
+                cfgs.iter().map(move |c| SweepJob {
+                    model: m.to_string(),
+                    // The unknown-model error surfaces from the compile
+                    // itself; any input placeholder works for that.
+                    input: zoo::default_input(m),
+                    cfg: c.clone(),
+                })
+            })
             .collect();
         self.run_jobs(&jobs, threads)
     }
@@ -272,7 +353,64 @@ mod tests {
         ];
         let out = Session::new().run_jobs(&jobs, 2);
         assert!(out[0].is_ok());
-        assert!(matches!(out[1], Err(CompileError::UnknownModel(_))));
+        assert!(matches!(out[1], Err(CompileError::UnknownModel { .. })));
+    }
+
+    #[test]
+    fn zoo_default_rejects_unknown_models_with_the_valid_names() {
+        let cfg = AccelConfig::kcu1500_int8();
+        let job = SweepJob::zoo_default("resnet18", &cfg).unwrap();
+        assert_eq!(job.input, 224);
+        match SweepJob::zoo_default("alexnet", &cfg) {
+            Err(CompileError::UnknownModel { name, valid }) => {
+                assert_eq!(name, "alexnet");
+                assert_eq!(valid, zoo::KNOWN_NAMES);
+            }
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parameterized_strategies_sharing_a_name_do_not_alias() {
+        // Two SmartShuttle instances differ only in buffer size — same
+        // name() — and must still get distinct cache entries.
+        let s = Session::new();
+        let cfg = AccelConfig::kcu1500_int8();
+        let a: Arc<dyn ReuseStrategy> =
+            Arc::new(super::super::SmartShuttleStrategy { buffer_bytes: 100_000 });
+        let b: Arc<dyn ReuseStrategy> =
+            Arc::new(super::super::SmartShuttleStrategy { buffer_bytes: 750_000 });
+        let ra = s.compile_with("vgg16-conv", 64, &cfg, &a).unwrap();
+        let rb = s.compile_with("vgg16-conv", 64, &cfg, &b).unwrap();
+        assert!(!Arc::ptr_eq(&ra, &rb), "same name must not mean same cache slot");
+        assert_eq!(s.stats().report_misses, 2);
+        // the same instance still hits its own entry
+        assert!(Arc::ptr_eq(&ra, &s.compile_with("vgg16-conv", 64, &cfg, &a).unwrap()));
+        assert_eq!(s.stats().report_hits, 1);
+    }
+
+    #[test]
+    fn mixed_strategies_do_not_alias_cache_entries() {
+        // One session, two strategies, same (model, input, config): the
+        // report cache must keep them apart and each must still hit on
+        // its own second compile.
+        let s = Session::new();
+        let cfg = AccelConfig::kcu1500_int8();
+        let cut: Arc<dyn ReuseStrategy> = Arc::new(CutPointStrategy);
+        let row: Arc<dyn ReuseStrategy> =
+            Arc::new(super::super::FixedReuseStrategy(crate::isa::ReuseMode::Row));
+        let a = s.compile_with("resnet18", 64, &cfg, &cut).unwrap();
+        let b = s.compile_with("resnet18", 64, &cfg, &row).unwrap();
+        assert_eq!(a.strategy, "cutpoint");
+        assert_eq!(b.strategy, "fixed-row");
+        assert!(!Arc::ptr_eq(&a, &b), "strategies must not share a cache slot");
+        let a2 = s.compile_with("resnet18", 64, &cfg, &cut).unwrap();
+        let b2 = s.compile_with("resnet18", 64, &cfg, &row).unwrap();
+        assert!(Arc::ptr_eq(&a, &a2));
+        assert!(Arc::ptr_eq(&b, &b2));
+        let st = s.stats();
+        assert_eq!((st.report_hits, st.report_misses), (2, 2));
+        assert_eq!(st.analysis_misses, 1, "analysis stays strategy-independent");
     }
 
     #[test]

@@ -26,15 +26,19 @@ use crate::sim::NetworkTiming;
 /// reorganized into accelerator groups.
 #[derive(Debug, Clone)]
 pub struct Analyzed {
+    /// Model name (the graph's name).
     pub model: String,
+    /// The fused accelerator groups, shared across downstream stages.
     pub grouped: Arc<GroupedGraph>,
 }
 
 impl Analyzed {
+    /// Nodes in the source graph.
     pub fn node_count(&self) -> usize {
         self.grouped.graph.nodes.len()
     }
 
+    /// Fused accelerator groups.
     pub fn group_count(&self) -> usize {
         self.grouped.groups.len()
     }
@@ -55,25 +59,31 @@ impl Analyzed {
 /// produced it.
 #[derive(Debug, Clone)]
 pub struct Optimized {
+    /// Model name.
     pub model: String,
+    /// The fused accelerator groups.
     pub grouped: Arc<GroupedGraph>,
     /// [`super::ReuseStrategy::name`] of the deciding strategy.
     pub strategy: &'static str,
     /// The config this evaluation was computed under; downstream stages
     /// refuse artifacts from a different config (`StageMismatch`).
     pub cfg: crate::config::AccelConfig,
+    /// The chosen policy with its SRAM / DRAM / latency costing.
     pub evaluation: Evaluation,
 }
 
 impl Optimized {
+    /// Groups assigned row reuse.
     pub fn row_groups(&self) -> usize {
         self.evaluation.policy.iter().filter(|m| **m == ReuseMode::Row).count()
     }
 
+    /// Groups assigned frame reuse.
     pub fn frame_groups(&self) -> usize {
         self.evaluation.policy.len() - self.row_groups()
     }
 
+    /// Compact inspection record.
     pub fn summary_json(&self) -> Json {
         Json::obj(vec![
             ("stage", Json::str("optimized")),
@@ -97,16 +107,24 @@ impl Optimized {
 /// (Algorithm 1) plus the off-chip arena layout.
 #[derive(Debug, Clone)]
 pub struct Allocated {
+    /// Model name.
     pub model: String,
+    /// The fused accelerator groups.
     pub grouped: Arc<GroupedGraph>,
+    /// Name of the deciding strategy.
     pub strategy: &'static str,
+    /// The config the chain was computed under.
     pub cfg: crate::config::AccelConfig,
+    /// The chosen policy with its costing.
     pub evaluation: Evaluation,
+    /// On-chip buffer placements (Algorithm 1).
     pub alloc: AllocResult,
+    /// Off-chip arena layout.
     pub dram_layout: OffchipLayout,
 }
 
 impl Allocated {
+    /// Compact inspection record.
     pub fn summary_json(&self) -> Json {
         Json::obj(vec![
             ("stage", Json::str("allocated")),
@@ -121,14 +139,23 @@ impl Allocated {
 /// packed 11-word instruction stream.
 #[derive(Debug, Clone)]
 pub struct Lowered {
+    /// Model name.
     pub model: String,
+    /// The fused accelerator groups.
     pub grouped: Arc<GroupedGraph>,
+    /// Name of the deciding strategy.
     pub strategy: &'static str,
+    /// The config the chain was computed under.
     pub cfg: crate::config::AccelConfig,
+    /// The chosen policy with its costing.
     pub evaluation: Evaluation,
+    /// On-chip buffer placements.
     pub alloc: AllocResult,
+    /// Off-chip arena layout.
     pub dram_layout: OffchipLayout,
+    /// Per-group ISA memory assignments.
     pub assigns: Vec<MemAssign>,
+    /// The packed 11-word instruction stream.
     pub stream: InstructionStream,
 }
 
@@ -139,6 +166,7 @@ impl Lowered {
         self.stream.words.iter().flat_map(|w| w.to_le_bytes()).collect()
     }
 
+    /// Compact inspection record.
     pub fn summary_json(&self) -> Json {
         Json::obj(vec![
             ("stage", Json::str("lowered")),
@@ -152,16 +180,27 @@ impl Lowered {
 /// Stage 5 — simulation: cycle-accurate timing and the power estimate.
 #[derive(Debug, Clone)]
 pub struct Simulated {
+    /// Model name.
     pub model: String,
+    /// The fused accelerator groups.
     pub grouped: Arc<GroupedGraph>,
+    /// Name of the deciding strategy.
     pub strategy: &'static str,
+    /// The config the chain was computed under.
     pub cfg: crate::config::AccelConfig,
+    /// The chosen policy with its costing.
     pub evaluation: Evaluation,
+    /// On-chip buffer placements.
     pub alloc: AllocResult,
+    /// Off-chip arena layout.
     pub dram_layout: OffchipLayout,
+    /// Per-group ISA memory assignments.
     pub assigns: Vec<MemAssign>,
+    /// The packed 11-word instruction stream.
     pub stream: InstructionStream,
+    /// Cycle-accurate timing result.
     pub timing: NetworkTiming,
+    /// Power estimate.
     pub power: PowerEstimate,
 }
 
@@ -190,56 +229,73 @@ impl Simulated {
 /// graph is shared, so cloning a report is cheap).
 #[derive(Debug, Clone)]
 pub struct CompileReport {
+    /// Model name.
     pub model: String,
     /// Which [`super::ReuseStrategy`] chose the policy.
     pub strategy: &'static str,
+    /// The fused accelerator groups.
     pub grouped: Arc<GroupedGraph>,
+    /// The chosen policy with its costing.
     pub evaluation: Evaluation,
+    /// Cycle-accurate timing result.
     pub timing: NetworkTiming,
+    /// Power estimate.
     pub power: PowerEstimate,
+    /// The packed 11-word instruction stream.
     pub stream: InstructionStream,
-    /// Row-reuse / frame-reuse group counts.
+    /// Groups assigned row reuse.
     pub row_groups: usize,
+    /// Groups assigned frame reuse.
     pub frame_groups: usize,
 }
 
 impl CompileReport {
+    /// End-to-end latency, ms.
     pub fn latency_ms(&self) -> f64 {
         self.timing.latency_ms
     }
 
+    /// Frames per second at batch 1.
     pub fn fps(&self) -> f64 {
         1000.0 / self.timing.latency_ms
     }
 
+    /// Average throughput, GOPS.
     pub fn gops(&self) -> f64 {
         self.timing.gops
     }
 
+    /// DSP / MAC efficiency as a percentage of peak.
     pub fn mac_efficiency_pct(&self) -> f64 {
         100.0 * self.timing.mac_efficiency
     }
 
+    /// Off-chip feature-map traffic, MB (eq. 8).
     pub fn offchip_fm_mb(&self) -> f64 {
         self.evaluation.dram.fm_bytes as f64 / 1e6
     }
 
+    /// Total off-chip traffic, MB (eq. 9).
     pub fn offchip_total_mb(&self) -> f64 {
         self.evaluation.dram.total as f64 / 1e6
     }
 
+    /// The everything-once baseline traffic, MB (Tables V/VII `[*]`).
     pub fn baseline_once_mb(&self) -> f64 {
         self.evaluation.dram.baseline_once as f64 / 1e6
     }
 
+    /// Off-chip access reduction vs the baseline, %.
     pub fn reduction_pct(&self) -> f64 {
         self.evaluation.dram.reduction_pct()
     }
 
+    /// Total SRAM requirement, MB (eq. 6).
     pub fn sram_mb(&self) -> f64 {
         self.evaluation.sram.total as f64 / 1e6
     }
 
+    /// BRAM18K blocks (eq. 7).
     pub fn bram18k(&self) -> usize {
         self.evaluation.sram.bram18k
     }

@@ -9,6 +9,11 @@
 //! shortcutfusion run     FILE [--backend B] [--seed N]
 //! shortcutfusion serve-bench FILE [--backend B] [--requests N] [--workers N]
 //!                        [--batch N] [--queue N]
+//! shortcutfusion explore <model> [...] [--sram-budgets N,N] [--mac RxC,...]
+//!                        [--dram-gbps X,...] [--strategies S,...] [--input N]
+//!                        [--max-bram N] [--max-dram-gbps X] [--max-dsp N]
+//!                        [--threads N] [--format text|json|csv] [--out FILE]
+//!                        [--pack-best FILE]
 //! shortcutfusion sweep   <model> [--input N]
 //! shortcutfusion minbuf  [<model> ...]
 //! shortcutfusion export  <model> [--input N] --out FILE
@@ -25,6 +30,7 @@ use crate::config::AccelConfig;
 use crate::engine::{
     backend_by_name, EngineConfig, ExecutionBackend, InferenceEngine, BACKEND_NAMES,
 };
+use crate::explorer::{ExplorePoint, Exploration, SearchSpace};
 use crate::funcsim::{Params, Tensor};
 use crate::optimizer::Optimizer;
 use crate::program::Program;
@@ -51,6 +57,15 @@ COMMANDS:
     serve-bench FILE [--backend B] [--requests N] [--workers N] [--batch N] [--queue N]
                                  serve a packed program through the inference
                                  engine and print the serving stats
+    explore <model> [<model> ...] [--config FILE] [--input N]
+            [--sram-budgets N,N,..] [--mac RxC,..] [--dram-gbps X,..]
+            [--strategies S,..] [--max-bram N] [--max-dram-gbps X] [--max-dsp N]
+            [--threads N] [--format text|json|csv] [--out FILE] [--pack-best FILE]
+                                 design-space sweep: grid x strategies under
+                                 resource constraints, Pareto front + best config
+                                 (defaults: budgets base/4,base/2,base; strategies
+                                 cutpoint,fixed-row,fixed-frame; --pack-best packs
+                                 the first listed model's winner)
     sweep <model> [--input N] [--csv FILE]
                                  cut-point sweep (Fig 16/17 series)
     minbuf [<model> ...]         minimum buffer search (Table III)
@@ -89,6 +104,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "pack" => cmd_pack(&rest),
         "run" => cmd_run(&rest),
         "serve-bench" => cmd_serve_bench(&rest),
+        "explore" => cmd_explore(&rest),
         "sweep" => cmd_sweep(&rest),
         "minbuf" => cmd_minbuf(&rest),
         "export" => cmd_export(&rest),
@@ -106,6 +122,17 @@ pub fn run(args: Vec<String>) -> Result<()> {
 
 fn flag_value(args: &[String], flag: &str) -> Option<String> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Reject an explicit `--input` that a fixed-geometry model's builder
+/// would silently ignore (shared by `compile`/`pack` and `explore`).
+fn check_fixed_input(name: &str, input: usize) -> Result<()> {
+    match zoo::fixed_input(name) {
+        Some(fixed) if input != fixed => Err(CompileError::config(format!(
+            "{name} is fixed-geometry (input {fixed}); --input {input} is not supported"
+        ))),
+        _ => Ok(()),
+    }
 }
 
 fn parse_strategy(args: &[String]) -> Result<Box<dyn crate::compiler::ReuseStrategy>> {
@@ -126,9 +153,13 @@ fn parse_model(args: &[String]) -> Result<(crate::graph::Graph, AccelConfig)> {
             CompileError::config("expected a model name — see `shortcutfusion list`")
         })?;
     let input = match flag_value(args, "--input") {
-        Some(v) => v
-            .parse::<usize>()
-            .map_err(|_| CompileError::config(format!("bad --input {v:?}")))?,
+        Some(v) => {
+            let n = v
+                .parse::<usize>()
+                .map_err(|_| CompileError::config(format!("bad --input {v:?}")))?;
+            check_fixed_input(name, n)?;
+            n
+        }
         None => zoo::default_input(name),
     };
     let cfg = match flag_value(args, "--config") {
@@ -136,7 +167,7 @@ fn parse_model(args: &[String]) -> Result<(crate::graph::Graph, AccelConfig)> {
         None => AccelConfig::kcu1500_int8(),
     };
     let graph =
-        zoo::by_name(name, input).ok_or_else(|| CompileError::UnknownModel(name.clone()))?;
+        zoo::by_name(name, input).ok_or_else(|| CompileError::unknown_model(name.clone()))?;
     Ok((graph, cfg))
 }
 
@@ -331,6 +362,328 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated flag value with `parse` applied per element.
+fn parse_list<T>(
+    args: &[String],
+    flag: &str,
+    parse: impl Fn(&str) -> Result<T>,
+) -> Result<Vec<T>> {
+    match flag_value(args, flag) {
+        None => Ok(Vec::new()),
+        Some(v) => v.split(',').map(|s| parse(s.trim())).collect(),
+    }
+}
+
+fn cmd_explore(args: &[String]) -> Result<()> {
+    let models: Vec<&str> = args
+        .iter()
+        .take_while(|a| !a.starts_with("--"))
+        .map(String::as_str)
+        .collect();
+    if models.is_empty() {
+        return Err(CompileError::config(
+            "expected at least one model — see `shortcutfusion list`",
+        ));
+    }
+    let base = match flag_value(args, "--config") {
+        Some(p) => AccelConfig::from_toml_file(std::path::Path::new(&p))?,
+        None => AccelConfig::kcu1500_int8(),
+    };
+
+    let mut space = SearchSpace::new(base.clone()).models(&models);
+    if let Some(v) = flag_value(args, "--input") {
+        let n = v
+            .parse::<usize>()
+            .map_err(|_| CompileError::config(format!("bad --input {v:?}")))?;
+        // same contract as `compile --input`: a fixed-geometry model
+        // must not silently ignore an explicit size
+        for m in &models {
+            check_fixed_input(m, n)?;
+        }
+        space = space.input_sizes(&[n]);
+    }
+    let budgets = parse_list(args, "--sram-budgets", |s| {
+        s.parse::<usize>()
+            .map_err(|_| CompileError::config(format!("bad --sram-budgets entry {s:?}")))
+    })?;
+    space = if budgets.is_empty() {
+        // default ablation axis: quarter, half and full base budget
+        space.sram_budgets(&[base.sram_budget / 4, base.sram_budget / 2, base.sram_budget])
+    } else {
+        space.sram_budgets(&budgets)
+    };
+    let macs = parse_list(args, "--mac", |s| {
+        s.split_once('x')
+            .and_then(|(r, c)| Some((r.parse::<usize>().ok()?, c.parse::<usize>().ok()?)))
+            .filter(|&(r, c)| r > 0 && c > 0)
+            .ok_or_else(|| {
+                CompileError::config(format!("bad --mac entry {s:?} (want RxC, both >= 1)"))
+            })
+    })?;
+    if !macs.is_empty() {
+        space = space.mac_arrays(&macs);
+    }
+    let gbps = parse_list(args, "--dram-gbps", |s| {
+        s.parse::<f64>()
+            .map_err(|_| CompileError::config(format!("bad --dram-gbps entry {s:?}")))
+    })?;
+    if !gbps.is_empty() {
+        space = space.dram_bandwidths(&gbps);
+    }
+    space = match flag_value(args, "--strategies") {
+        Some(v) => {
+            let names: Vec<&str> = v.split(',').map(str::trim).collect();
+            space.strategy_names(&names)?
+        }
+        None => space.ablation_strategies(),
+    };
+    if let Some(v) = flag_value(args, "--max-bram") {
+        let n = v
+            .parse::<usize>()
+            .map_err(|_| CompileError::config(format!("bad --max-bram {v:?}")))?;
+        space = space.max_bram18k(n);
+    }
+    if let Some(v) = flag_value(args, "--max-dram-gbps") {
+        let x = v
+            .parse::<f64>()
+            .map_err(|_| CompileError::config(format!("bad --max-dram-gbps {v:?}")))?;
+        space = space.max_dram_gbps(x);
+    }
+    if let Some(v) = flag_value(args, "--max-dsp") {
+        let n = v
+            .parse::<usize>()
+            .map_err(|_| CompileError::config(format!("bad --max-dsp {v:?}")))?;
+        space = space.max_dsp(n);
+    }
+    let threads = match flag_value(args, "--threads") {
+        Some(_) => parse_count(args, "--threads", 4)?,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
+    // validate the output format up front: a typo must not cost a sweep
+    let format = flag_value(args, "--format").unwrap_or_else(|| "text".into());
+    if !matches!(format.as_str(), "text" | "json" | "csv") {
+        return Err(CompileError::config(format!(
+            "unknown --format {format:?} — one of text, json, csv"
+        )));
+    }
+
+    let session = Session::new();
+    let exploration = space.explore(&session, threads)?;
+
+    // membership keys for Pareto / recommendation markers
+    let key = |p: &ExplorePoint| {
+        (p.model.clone(), p.input, p.strategy_name().to_string(), p.cfg.name.clone())
+    };
+    let mut pareto_keys = std::collections::BTreeSet::new();
+    let mut best_keys = std::collections::BTreeSet::new();
+    for model in exploration.models() {
+        for p in &exploration.pareto_front(&model).points {
+            pareto_keys.insert(key(p));
+        }
+        if let Some(p) = exploration.recommend(&model) {
+            best_keys.insert(key(p));
+        }
+    }
+
+    let rendered = match format.as_str() {
+        "text" => render_explore_text(&exploration, &pareto_keys, &best_keys, threads, &session),
+        "csv" => render_explore_csv(&exploration, &pareto_keys, &best_keys),
+        _ => render_explore_json(&exploration, &pareto_keys, &best_keys),
+    };
+    match flag_value(args, "--out") {
+        Some(path) => {
+            std::fs::write(&path, rendered).map_err(|e| CompileError::io(&path, e))?;
+            println!("wrote {path}");
+        }
+        None => print!("{rendered}"),
+    }
+
+    if let Some(out) = flag_value(args, "--pack-best") {
+        let model = models[0];
+        if models.len() > 1 {
+            println!(
+                "note: --pack-best packs the winner of the first listed model ({model}); \
+                 other models are only reported"
+            );
+        }
+        let best = exploration.recommend(model).ok_or_else(|| {
+            CompileError::config(format!("{model}: no feasible point to pack"))
+        })?;
+        let program = best.pack()?;
+        program.save(std::path::Path::new(&out))?;
+        println!(
+            "packed best config for {model} [{}] on {} -> {out}",
+            best.strategy_name(),
+            best.cfg.name
+        );
+    }
+    Ok(())
+}
+
+fn render_explore_text(
+    exploration: &Exploration,
+    pareto: &std::collections::BTreeSet<(String, usize, String, String)>,
+    best: &std::collections::BTreeSet<(String, usize, String, String)>,
+    threads: usize,
+    session: &Session,
+) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(
+        &format!(
+            "design-space exploration: {} points, {} pruned, {} failed ({} threads)",
+            exploration.points.len(),
+            exploration.pruned.len(),
+            exploration.failures.len(),
+            threads
+        ),
+        &[
+            "model", "input", "strategy", "Ti-To", "budget MB", "GB/s", "latency ms",
+            "DRAM MB", "SRAM KB", "BRAM", "feasible", "front",
+        ],
+    );
+    for p in &exploration.points {
+        let k = (p.model.clone(), p.input, p.strategy_name().to_string(), p.cfg.name.clone());
+        let marker = if best.contains(&k) {
+            "best"
+        } else if pareto.contains(&k) {
+            "pareto"
+        } else {
+            ""
+        };
+        t.row(&[
+            p.model.clone(),
+            p.input.to_string(),
+            p.strategy_name().to_string(),
+            format!("{}x{}", p.cfg.ti, p.cfg.to),
+            format!("{:.2}", p.cfg.sram_budget as f64 / 1e6),
+            format!("{:.1}", p.cfg.dram_gbps),
+            format!("{:.3}", p.latency_ms),
+            format!("{:.2}", p.dram_mb()),
+            format!("{:.0}", p.sram_kb()),
+            p.bram18k.to_string(),
+            p.feasible.to_string(),
+            marker.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    for pr in &exploration.pruned {
+        out.push_str(&format!(
+            "pruned: {}@{} on {} — {}\n",
+            pr.model, pr.input, pr.cfg_name, pr.reason
+        ));
+    }
+    for f in &exploration.failures {
+        out.push_str(&format!("failed: {} — {}\n", f.point, f.error));
+    }
+    for model in exploration.models() {
+        match exploration.recommend(&model) {
+            Some(p) => out.push_str(&format!(
+                "best {model}: {} on {} — {:.3} ms, {:.2} MB DRAM, {:.0} KB SRAM\n",
+                p.strategy_name(),
+                p.cfg.name,
+                p.latency_ms,
+                p.dram_mb(),
+                p.sram_kb()
+            )),
+            None => out.push_str(&format!("best {model}: no feasible point\n")),
+        }
+    }
+    let stats = session.stats();
+    out.push_str(&format!(
+        "session: {} compiles, {} cache hits, {} shared analyses\n",
+        stats.report_misses, stats.report_hits, stats.analysis_hits
+    ));
+    out
+}
+
+fn render_explore_csv(
+    exploration: &Exploration,
+    pareto: &std::collections::BTreeSet<(String, usize, String, String)>,
+    best: &std::collections::BTreeSet<(String, usize, String, String)>,
+) -> String {
+    let mut out = String::from(
+        "model,input,strategy,ti,to,sram_budget,dram_gbps,latency_ms,dram_bytes,\
+         sram_bytes,bram18k,gops,reduction_pct,feasible,pareto,recommended\n",
+    );
+    for p in &exploration.points {
+        let k = (p.model.clone(), p.input, p.strategy_name().to_string(), p.cfg.name.clone());
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{:.3},{:.6},{},{},{},{:.2},{:.2},{},{},{}\n",
+            p.model,
+            p.input,
+            p.strategy_name(),
+            p.cfg.ti,
+            p.cfg.to,
+            p.cfg.sram_budget,
+            p.cfg.dram_gbps,
+            p.latency_ms,
+            p.dram_bytes,
+            p.sram_bytes,
+            p.bram18k,
+            p.gops,
+            p.reduction_pct,
+            p.feasible,
+            pareto.contains(&k),
+            best.contains(&k)
+        ));
+    }
+    out
+}
+
+fn render_explore_json(
+    exploration: &Exploration,
+    pareto: &std::collections::BTreeSet<(String, usize, String, String)>,
+    best: &std::collections::BTreeSet<(String, usize, String, String)>,
+) -> String {
+    use crate::serialize::Json;
+    let points: Vec<Json> = exploration
+        .points
+        .iter()
+        .map(|p| {
+            let k =
+                (p.model.clone(), p.input, p.strategy_name().to_string(), p.cfg.name.clone());
+            match p.to_json() {
+                Json::Obj(mut m) => {
+                    m.insert("pareto".into(), Json::Bool(pareto.contains(&k)));
+                    m.insert("recommended".into(), Json::Bool(best.contains(&k)));
+                    Json::Obj(m)
+                }
+                other => other,
+            }
+        })
+        .collect();
+    let pruned: Vec<Json> = exploration
+        .pruned
+        .iter()
+        .map(|pr| {
+            Json::obj(vec![
+                ("model", Json::str(&pr.model)),
+                ("input", Json::num(pr.input as f64)),
+                ("config", Json::str(&pr.cfg_name)),
+                ("reason", Json::str(&pr.reason)),
+            ])
+        })
+        .collect();
+    let failures: Vec<Json> = exploration
+        .failures
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("point", Json::str(&f.point)),
+                ("error", Json::str(&f.error.to_string())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("points", Json::Arr(points)),
+        ("pruned", Json::Arr(pruned)),
+        ("failures", Json::Arr(failures)),
+    ]);
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    text
+}
+
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let (graph, cfg) = parse_model(args)?;
     let gg = crate::analyzer::analyze(&graph);
@@ -385,8 +738,8 @@ fn cmd_minbuf(args: &[String]) -> Result<()> {
     );
     for name in models {
         let input = zoo::default_input(name);
-        let graph = zoo::by_name(name, input)
-            .ok_or_else(|| CompileError::UnknownModel(name.to_string()))?;
+        let graph =
+            zoo::by_name(name, input).ok_or_else(|| CompileError::unknown_model(name))?;
         let analyzed = compiler.analyze(&graph)?;
         let e = compiler.optimize(&analyzed)?.evaluation;
         t.row(&[
@@ -499,6 +852,18 @@ mod tests {
     }
 
     #[test]
+    fn fixed_geometry_input_is_rejected_typed() {
+        // tinynet compiles at its canonical size…
+        run(vec!["compile".into(), "tinynet".into()]).unwrap();
+        // …but an explicit non-canonical --input is a config error, not a
+        // silently ignored flag
+        assert!(matches!(
+            run(vec!["compile".into(), "tinynet".into(), "--input".into(), "224".into()]),
+            Err(CompileError::Config(_))
+        ));
+    }
+
+    #[test]
     fn compile_with_baseline_strategy() {
         run(vec![
             "compile".into(),
@@ -558,7 +923,7 @@ mod tests {
     fn bad_model_errors() {
         assert!(matches!(
             run(vec!["compile".into(), "alexnet".into()]),
-            Err(CompileError::UnknownModel(_))
+            Err(CompileError::UnknownModel { .. })
         ));
     }
 
@@ -593,6 +958,77 @@ mod tests {
             "2".into(),
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn explore_runs_all_formats_and_packs_best() {
+        // tinynet keeps the 3-budget × 3-strategy default grid fast; the
+        // CI quickstart step smoke-runs the same command.
+        run(vec!["explore".into(), "tinynet".into(), "--threads".into(), "2".into()]).unwrap();
+
+        let dir = std::env::temp_dir().join("sf_cli_explore_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("points.csv");
+        run(vec![
+            "explore".into(),
+            "tinynet".into(),
+            "--format".into(),
+            "csv".into(),
+            "--out".into(),
+            csv.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert!(text.starts_with("model,input,strategy"));
+        assert_eq!(text.lines().count(), 1 + 9, "3 budgets x 3 strategies");
+        assert!(text.contains("cutpoint"));
+
+        let json = dir.join("points.json");
+        let packed = dir.join("best.sfp");
+        run(vec![
+            "explore".into(),
+            "tinynet".into(),
+            "--format".into(),
+            "json".into(),
+            "--out".into(),
+            json.to_string_lossy().into_owned(),
+            "--pack-best".into(),
+            packed.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        let doc = crate::serialize::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(doc.get("points").and_then(|p| p.as_arr()).unwrap().len(), 9);
+        let best = Program::load(&packed).unwrap();
+        assert_eq!(best.model(), "TinyNet-SE");
+    }
+
+    #[test]
+    fn explore_rejects_bad_input() {
+        assert!(matches!(
+            run(vec!["explore".into(), "alexnet".into()]),
+            Err(CompileError::UnknownModel { .. })
+        ));
+        assert!(matches!(run(vec!["explore".into()]), Err(CompileError::Config(_))));
+        assert!(matches!(
+            run(vec!["explore".into(), "tinynet".into(), "--format".into(), "xml".into()]),
+            Err(CompileError::Config(_))
+        ));
+        assert!(matches!(
+            run(vec!["explore".into(), "tinynet".into(), "--mac".into(), "64".into()]),
+            Err(CompileError::Config(_))
+        ));
+        // hex-looking typo: "0x40" must be a typed error, not a
+        // divide-by-zero panic in a worker thread
+        assert!(matches!(
+            run(vec!["explore".into(), "tinynet".into(), "--mac".into(), "0x40".into()]),
+            Err(CompileError::Config(_))
+        ));
+        // fixed-geometry models reject explicit non-canonical inputs
+        // here too, matching `compile --input`
+        assert!(matches!(
+            run(vec!["explore".into(), "tinynet".into(), "--input".into(), "224".into()]),
+            Err(CompileError::Config(_))
+        ));
     }
 
     #[test]

@@ -9,8 +9,11 @@ use crate::zoo;
 /// One sweep job (legacy shape; [`SweepJob`] is the staged-API form).
 #[derive(Debug, Clone)]
 pub struct Job {
+    /// Zoo model name.
     pub model: String,
+    /// Square input resolution.
     pub input: usize,
+    /// Target configuration.
     pub cfg: AccelConfig,
 }
 

@@ -43,6 +43,7 @@ impl Default for EngineConfig {
 /// A finished request: the backend result plus serving-side timing.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// What the backend produced.
     pub result: RunResult,
     /// Time spent waiting in the submission queue.
     pub wait_ms: f64,
@@ -131,20 +132,30 @@ struct Shared {
 /// Snapshot of an engine's counters (see [`InferenceEngine::stats`]).
 #[derive(Debug, Clone)]
 pub struct EngineStats {
+    /// Name of the serving backend.
     pub backend: &'static str,
+    /// Requests accepted into the queue.
     pub submitted: u64,
+    /// Requests finished successfully.
     pub completed: u64,
+    /// Requests whose backend run errored.
     pub failed: u64,
     /// `try_submit` calls bounced off the full queue.
     pub rejected: u64,
+    /// Requests currently waiting in the queue.
     pub queue_depth: usize,
+    /// Requests currently claimed by workers.
     pub in_flight: usize,
     /// Most requests ever claimed by workers simultaneously — the
     /// observable overlap across backend instances.
     pub peak_in_flight: usize,
+    /// Completions per worker thread.
     pub per_worker: Vec<u64>,
+    /// Batches executed.
     pub batches: u64,
+    /// Largest batch a worker claimed.
     pub max_batch_seen: usize,
+    /// Wall-clock seconds since the workers started.
     pub elapsed_s: f64,
     /// Completed requests per wall-clock second since engine start.
     pub throughput_rps: f64,
@@ -153,6 +164,7 @@ pub struct EngineStats {
     pub p50_ms: f64,
     /// 95th-percentile per-request latency over the same window.
     pub p95_ms: f64,
+    /// Mean queue wait over the same window, ms.
     pub mean_wait_ms: f64,
 }
 
@@ -286,10 +298,12 @@ impl InferenceEngine {
         Ok(PendingRequest { rx })
     }
 
+    /// Requests currently waiting in the submission queue.
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
     }
 
+    /// Snapshot of the serving counters.
     pub fn stats(&self) -> EngineStats {
         snapshot(&self.shared)
     }

@@ -1,0 +1,367 @@
+//! Reuse-aware hardware design-space exploration (§IV as an
+//! *optimization tool*).
+//!
+//! The paper pitches ShortcutFusion as a tool that, *given resource
+//! constraints, picks the reuse configuration maximizing on-chip reuse*
+//! (Tables II/IV). This module automates that search over whole grids of
+//! targets instead of one hand-picked [`AccelConfig`]:
+//!
+//! 1. [`SearchSpace`] describes the grids — on-chip buffer budget,
+//!    MAC-array geometry (`Ti×To`), DRAM bandwidth, input resolution —
+//!    crossed with any set of [`crate::compiler::ReuseStrategy`]s and
+//!    zoo models, under device ceilings ([`Constraints`]).
+//! 2. [`SearchSpace::enumerate`] expands the grids and **prunes**
+//!    candidates that violate a ceiling *before* any cut-point search
+//!    runs, reporting what was skipped and why.
+//! 3. [`SearchSpace::explore`] costs every surviving [`DesignPoint`]
+//!    with the crate's analytical models (Algorithm 1 buffers, eq. 8–9
+//!    DRAM traffic, cycle-accurate timing) through a shared memoizing
+//!    [`Session`] — fusion analysis runs once per model while points
+//!    evaluate in parallel across worker threads.
+//! 4. [`Exploration`] post-processes the sweep: [`ParetoFront`]s over
+//!    `(latency, DRAM bytes, SRAM bytes)` with dominated-point
+//!    elimination, and a per-model recommender whose winner goes
+//!    straight through [`Compiler::pack`](crate::compiler::Compiler::pack)
+//!    into a deployable [`Program`] ([`ExplorePoint::pack`]).
+//!
+//! ```
+//! use shortcutfusion::compiler::Session;
+//! use shortcutfusion::config::AccelConfig;
+//! use shortcutfusion::explorer::SearchSpace;
+//!
+//! let exploration = SearchSpace::new(AccelConfig::kcu1500_int8())
+//!     .model("tinynet")
+//!     .sram_budgets(&[2_000_000, 8_000_000])
+//!     .ablation_strategies() // cutpoint, fixed-row, fixed-frame
+//!     .explore(&Session::new(), 2)
+//!     .unwrap();
+//! let best = exploration.recommend("tinynet").unwrap();
+//! let program = best.pack().unwrap(); // deployable artifact of the winner
+//! assert_eq!(program.model(), "TinyNet-SE");
+//! ```
+//!
+//! The CLI front-end is `shortcutfusion explore` (text/JSON/CSV output);
+//! `benches/explorer.rs` measures serial vs parallel vs warm-cache sweep
+//! throughput, and `rust/tests/explorer.rs` reproduces the paper's
+//! buffer-size ablation (fixed-row/fixed-frame/cutpoint crossover as the
+//! SRAM budget shrinks).
+
+mod pareto;
+mod space;
+
+pub use pareto::{dominates, ParetoFront};
+pub use space::{
+    Constraints, DesignPoint, Enumeration, Pruned, SearchSpace, BRAM18K_BYTES,
+};
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::compiler::{fan_out, CompileError, CompileReport, Compiler, ReuseStrategy, Session};
+use crate::config::AccelConfig;
+use crate::program::Program;
+use crate::serialize::Json;
+use crate::zoo;
+
+/// One costed design point: the candidate plus the metrics the sweep
+/// ranks it by.
+#[derive(Clone)]
+pub struct ExplorePoint {
+    /// Zoo model name this point was compiled for.
+    pub model: String,
+    /// Square input resolution.
+    pub input: usize,
+    /// The derived target configuration.
+    pub cfg: AccelConfig,
+    /// Strategy that decided the reuse policy.
+    pub strategy: Arc<dyn ReuseStrategy>,
+    /// End-to-end latency from the cycle-accurate timing model, ms.
+    pub latency_ms: f64,
+    /// Total DRAM traffic per inference (eq. 9), bytes.
+    pub dram_bytes: u64,
+    /// Total on-chip SRAM requirement (eq. 6), bytes.
+    pub sram_bytes: usize,
+    /// BRAM18K blocks the SRAM requirement maps to (eq. 7).
+    pub bram18k: usize,
+    /// Average throughput in GOPS.
+    pub gops: f64,
+    /// Off-chip access reduction vs the everything-once baseline, %.
+    pub reduction_pct: f64,
+    /// Whether the point satisfies the eq-(10) budget constraints.
+    pub feasible: bool,
+    /// Groups running row reuse under the chosen policy.
+    pub row_groups: usize,
+    /// Groups running frame reuse under the chosen policy.
+    pub frame_groups: usize,
+}
+
+impl fmt::Debug for ExplorePoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ExplorePoint")
+            .field("model", &self.model)
+            .field("input", &self.input)
+            .field("cfg", &self.cfg.name)
+            .field("strategy", &self.strategy.name())
+            .field("latency_ms", &self.latency_ms)
+            .field("dram_bytes", &self.dram_bytes)
+            .field("sram_bytes", &self.sram_bytes)
+            .field("feasible", &self.feasible)
+            .finish()
+    }
+}
+
+impl ExplorePoint {
+    fn from_report(point: &DesignPoint, r: &CompileReport) -> ExplorePoint {
+        ExplorePoint {
+            model: point.model.clone(),
+            input: point.input,
+            cfg: point.cfg.clone(),
+            strategy: point.strategy.clone(),
+            latency_ms: r.timing.latency_ms,
+            dram_bytes: r.evaluation.dram.total,
+            sram_bytes: r.evaluation.sram.total,
+            bram18k: r.evaluation.sram.bram18k,
+            gops: r.timing.gops,
+            reduction_pct: r.reduction_pct(),
+            feasible: r.evaluation.feasible,
+            row_groups: r.row_groups,
+            frame_groups: r.frame_groups,
+        }
+    }
+
+    /// Name of the deciding strategy.
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// SRAM requirement in KB (the Pareto axis the tables use).
+    pub fn sram_kb(&self) -> f64 {
+        self.sram_bytes as f64 / 1e3
+    }
+
+    /// DRAM traffic in MB.
+    pub fn dram_mb(&self) -> f64 {
+        self.dram_bytes as f64 / 1e6
+    }
+
+    /// Re-compile this point and pack it into a deployable [`Program`]
+    /// (stage 6, [`Compiler::pack`]) — the hand-off from *search* to
+    /// *deploy*.
+    pub fn pack(&self) -> Result<Program, CompileError> {
+        let graph = zoo::by_name(&self.model, self.input)
+            .ok_or_else(|| CompileError::unknown_model(self.model.clone()))?;
+        let compiler = Compiler::with_strategy(self.cfg.clone(), self.strategy.clone());
+        let analyzed = compiler.analyze(&graph)?;
+        let lowered =
+            compiler.lower(&compiler.allocate(&compiler.optimize(&analyzed)?)?)?;
+        compiler.pack(&lowered)
+    }
+
+    /// Flat JSON record for machine-readable sweep output.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("input", Json::num(self.input as f64)),
+            ("strategy", Json::str(self.strategy.name())),
+            ("config", Json::str(&self.cfg.name)),
+            ("ti", Json::num(self.cfg.ti as f64)),
+            ("to", Json::num(self.cfg.to as f64)),
+            ("sram_budget", Json::num(self.cfg.sram_budget as f64)),
+            ("dram_gbps", Json::num(self.cfg.dram_gbps)),
+            ("latency_ms", Json::num(self.latency_ms)),
+            ("dram_bytes", Json::num(self.dram_bytes as f64)),
+            ("sram_bytes", Json::num(self.sram_bytes as f64)),
+            ("bram18k", Json::num(self.bram18k as f64)),
+            ("gops", Json::num(self.gops)),
+            ("reduction_pct", Json::num(self.reduction_pct)),
+            ("feasible", Json::Bool(self.feasible)),
+            ("row_groups", Json::num(self.row_groups as f64)),
+            ("frame_groups", Json::num(self.frame_groups as f64)),
+        ])
+    }
+}
+
+/// A point the sweep could not cost, with the failing candidate's
+/// description.
+#[derive(Debug)]
+pub struct ExploreFailure {
+    /// `model@input [strategy] on cfg` of the failing point.
+    pub point: String,
+    /// The typed compile failure.
+    pub error: CompileError,
+}
+
+/// The finished sweep: every costed point plus the pruning/failure
+/// context needed to read it honestly.
+#[derive(Debug)]
+pub struct Exploration {
+    /// Costed points, in enumeration (model-major) order.
+    pub points: Vec<ExplorePoint>,
+    /// Candidates rejected by constraint pruning before costing.
+    pub pruned: Vec<Pruned>,
+    /// Candidates whose compile failed (isolated per point, like
+    /// [`Session::run_jobs`]).
+    pub failures: Vec<ExploreFailure>,
+}
+
+impl Exploration {
+    /// Unique model names in enumeration order.
+    pub fn models(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for p in &self.points {
+            if !seen.contains(&p.model) {
+                seen.push(p.model.clone());
+            }
+        }
+        seen
+    }
+
+    /// Feasible points of one model.
+    fn feasible_of(&self, model: &str) -> Vec<ExplorePoint> {
+        self.points.iter().filter(|p| p.model == model && p.feasible).cloned().collect()
+    }
+
+    /// The Pareto front over `(latency, DRAM bytes, SRAM bytes)` of one
+    /// model's *feasible* points.
+    pub fn pareto_front(&self, model: &str) -> ParetoFront {
+        ParetoFront::of(&self.feasible_of(model))
+    }
+
+    /// The best feasible point of one model: minimum latency, ties broken
+    /// by DRAM traffic, then SRAM footprint (the optimizer's own
+    /// ranking), then by enumeration order — so with the default strategy
+    /// ordering an exact tie goes to the cut-point optimizer, not a
+    /// baseline. `None` when no point of the model satisfies its budget.
+    pub fn recommend(&self, model: &str) -> Option<&ExplorePoint> {
+        self.points
+            .iter()
+            .filter(|p| p.model == model && p.feasible)
+            .fold(None, |best: Option<&ExplorePoint>, p| match best {
+                Some(b)
+                    if (b.latency_ms, b.dram_bytes, b.sram_bytes)
+                        <= (p.latency_ms, p.dram_bytes, p.sram_bytes) =>
+                {
+                    Some(b)
+                }
+                _ => Some(p),
+            })
+    }
+}
+
+impl SearchSpace {
+    /// Enumerate, prune, and cost the space through `session`, fanning
+    /// the points out over `threads` scoped workers.
+    ///
+    /// The session's analysis cache shares one fusion analysis per
+    /// `(model, input)` across every configuration and strategy, and its
+    /// report cache makes re-exploring overlapping spaces (or re-running
+    /// a sweep on a warm session) O(1) per revisited point. Per-point
+    /// compile failures are isolated into [`Exploration::failures`].
+    pub fn explore(
+        &self,
+        session: &Session,
+        threads: usize,
+    ) -> Result<Exploration, CompileError> {
+        if threads == 0 {
+            return Err(CompileError::config("need at least one explore worker thread"));
+        }
+        let Enumeration { points, pruned } = self.enumerate()?;
+        let results: Vec<Result<Arc<CompileReport>, CompileError>> =
+            fan_out(points.len(), threads, |i| {
+                let p = &points[i];
+                session.compile_with(&p.model, p.input, &p.cfg, &p.strategy)
+            });
+        let mut costed = Vec::with_capacity(points.len());
+        let mut failures = Vec::new();
+        for (point, result) in points.iter().zip(results) {
+            match result {
+                Ok(report) => costed.push(ExplorePoint::from_report(point, &report)),
+                Err(error) => failures.push(ExploreFailure {
+                    point: format!(
+                        "{}@{} [{}] on {}",
+                        point.model,
+                        point.input,
+                        point.strategy.name(),
+                        point.cfg.name
+                    ),
+                    error,
+                }),
+            }
+        }
+        Ok(Exploration { points: costed, pruned, failures })
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A point with hand-set objectives, for Pareto unit tests.
+    pub(crate) fn synthetic_point(
+        model: &str,
+        latency_ms: f64,
+        dram_bytes: u64,
+        sram_bytes: usize,
+    ) -> ExplorePoint {
+        ExplorePoint {
+            model: model.to_string(),
+            input: 64,
+            cfg: AccelConfig::kcu1500_int8(),
+            strategy: Arc::new(crate::compiler::CutPointStrategy),
+            latency_ms,
+            dram_bytes,
+            sram_bytes,
+            bram18k: 0,
+            gops: 0.0,
+            reduction_pct: 0.0,
+            feasible: true,
+            row_groups: 0,
+            frame_groups: 0,
+        }
+    }
+
+    #[test]
+    fn explore_shares_analysis_and_isolates_failures() {
+        let session = Session::new();
+        let exploration = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("resnet18")
+            .input_sizes(&[64])
+            .sram_budgets(&[2_000_000, 8_000_000])
+            .strategy_names(&["fixed-row", "fixed-frame"])
+            .unwrap()
+            .explore(&session, 4)
+            .unwrap();
+        assert_eq!(exploration.points.len(), 4);
+        assert!(exploration.failures.is_empty());
+        let stats = session.stats();
+        assert_eq!(stats.analysis_misses, 1, "one fusion analysis for all 4 points");
+        assert_eq!(stats.report_misses, 4);
+        // fixed strategies are budget-independent in cost, so both budget
+        // points of one strategy report identical objectives
+        let rows: Vec<_> =
+            exploration.points.iter().filter(|p| p.strategy_name() == "fixed-row").collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].latency_ms, rows[1].latency_ms);
+        assert_eq!(rows[0].dram_bytes, rows[1].dram_bytes);
+    }
+
+    #[test]
+    fn recommend_prefers_feasible_minimum_latency() {
+        let exploration = Exploration {
+            points: vec![
+                ExplorePoint { feasible: false, ..synthetic_point("m", 0.5, 10, 10) },
+                synthetic_point("m", 2.0, 10, 10),
+                synthetic_point("m", 1.0, 20, 10),
+                synthetic_point("other", 0.1, 1, 1),
+            ],
+            pruned: Vec::new(),
+            failures: Vec::new(),
+        };
+        let best = exploration.recommend("m").unwrap();
+        assert_eq!(best.latency_ms, 1.0, "infeasible 0.5 ms point must lose");
+        assert!(exploration.recommend("missing").is_none());
+        assert_eq!(exploration.models(), vec!["m".to_string(), "other".to_string()]);
+        // the front keeps both feasible trade-offs of model m
+        assert_eq!(exploration.pareto_front("m").len(), 2);
+    }
+}

@@ -1,0 +1,98 @@
+//! Pareto-front extraction over evaluated design points.
+//!
+//! The explorer's objective space is `(latency ms, DRAM bytes, SRAM
+//! bytes)` — the three quantities the paper trades against each other in
+//! Tables II–IV: a point is worth reporting only if no other point is at
+//! least as good on every axis and strictly better on one.
+
+use super::ExplorePoint;
+
+/// `true` when `a` dominates `b`: no worse on latency, DRAM traffic and
+/// SRAM footprint, and strictly better on at least one of them.
+pub fn dominates(a: &ExplorePoint, b: &ExplorePoint) -> bool {
+    let no_worse = a.latency_ms <= b.latency_ms
+        && a.dram_bytes <= b.dram_bytes
+        && a.sram_bytes <= b.sram_bytes;
+    let strictly_better = a.latency_ms < b.latency_ms
+        || a.dram_bytes < b.dram_bytes
+        || a.sram_bytes < b.sram_bytes;
+    no_worse && strictly_better
+}
+
+/// The non-dominated subset of a set of evaluated points, sorted by
+/// latency (ties by DRAM traffic, then SRAM footprint).
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFront {
+    /// The surviving (non-dominated) points.
+    pub points: Vec<ExplorePoint>,
+}
+
+impl ParetoFront {
+    /// Eliminate dominated points. Duplicate objective vectors keep their
+    /// first representative only, so the front never lists the same
+    /// trade-off twice.
+    pub fn of(candidates: &[ExplorePoint]) -> ParetoFront {
+        let mut points: Vec<ExplorePoint> = Vec::new();
+        for c in candidates {
+            if points.iter().any(|p| dominates(p, c) || same_objectives(p, c)) {
+                continue;
+            }
+            points.retain(|p| !dominates(c, p));
+            points.push(c.clone());
+        }
+        points.sort_by(|a, b| {
+            (a.latency_ms, a.dram_bytes, a.sram_bytes)
+                .partial_cmp(&(b.latency_ms, b.dram_bytes, b.sram_bytes))
+                .expect("cost metrics are finite")
+        });
+        ParetoFront { points }
+    }
+
+    /// Number of points on the front.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// `true` when no candidate survived (empty input).
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+fn same_objectives(a: &ExplorePoint, b: &ExplorePoint) -> bool {
+    a.latency_ms == b.latency_ms && a.dram_bytes == b.dram_bytes && a.sram_bytes == b.sram_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::synthetic_point;
+    use super::*;
+
+    #[test]
+    fn dominated_points_are_eliminated() {
+        let fast = synthetic_point("m", 1.0, 100, 50);
+        let worse_everywhere = synthetic_point("m", 2.0, 200, 60);
+        let tradeoff = synthetic_point("m", 2.0, 40, 50); // slower, less DRAM
+        let front =
+            ParetoFront::of(&[worse_everywhere.clone(), fast.clone(), tradeoff.clone()]);
+        assert_eq!(front.len(), 2);
+        assert_eq!(front.points[0].latency_ms, 1.0); // sorted by latency
+        assert_eq!(front.points[1].dram_bytes, 40);
+        assert!(dominates(&fast, &worse_everywhere));
+        assert!(!dominates(&fast, &tradeoff));
+        assert!(!dominates(&tradeoff, &fast));
+    }
+
+    #[test]
+    fn equal_points_do_not_dominate_but_dedupe() {
+        let a = synthetic_point("m", 1.0, 100, 50);
+        let b = synthetic_point("m", 1.0, 100, 50);
+        assert!(!dominates(&a, &b));
+        assert_eq!(ParetoFront::of(&[a, b]).len(), 1);
+    }
+
+    #[test]
+    fn empty_input_gives_empty_front() {
+        assert!(ParetoFront::of(&[]).is_empty());
+    }
+}

@@ -1,0 +1,548 @@
+//! The typed design-space description: axis grids, resource constraints,
+//! and the pruned enumerator that turns them into concrete
+//! [`DesignPoint`]s.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::compiler::strategy::{self, CutPointStrategy, FixedReuseStrategy, ReuseStrategy};
+use crate::compiler::CompileError;
+use crate::config::AccelConfig;
+use crate::isa::ReuseMode;
+use crate::zoo;
+
+/// Resource ceilings checked *before* a point is costed. A candidate
+/// configuration that cannot exist on the target device is pruned by the
+/// enumerator instead of wasting a cut-point search on it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Constraints {
+    /// Device BRAM18K ceiling. Prunes buffer budgets that would need
+    /// more BRAM than this ceiling can back (2 KB of usable data per
+    /// block at 16-bit width), and clamps each surviving config's
+    /// `bram18k_total` so the eq-(10) feasibility check honours the
+    /// ceiling too.
+    pub max_bram18k: Option<usize>,
+    /// Board DRAM bandwidth ceiling in GB/s; faster points are pruned.
+    pub max_dram_gbps: Option<f64>,
+    /// DSP ceiling for the whole design (`dsp_total`: the MAC arrays'
+    /// `Ti×To / mults_per_dsp` plus the base design's datapath
+    /// overhead); configurations needing more are pruned.
+    pub max_dsp: Option<usize>,
+}
+
+/// Usable data bytes one BRAM18K block backs at the 16-bit port width
+/// the accelerator's buffers use (1024 × 16-bit words).
+pub const BRAM18K_BYTES: usize = 2048;
+
+impl Constraints {
+    /// Why `cfg` cannot be realised, or `None` if it satisfies every
+    /// ceiling.
+    pub fn violation(&self, cfg: &AccelConfig) -> Option<String> {
+        if let Some(max) = self.max_bram18k {
+            let need = cfg.sram_budget.div_ceil(BRAM18K_BYTES);
+            if need > max {
+                return Some(format!(
+                    "SRAM budget {} B needs ≥ {need} BRAM18K, ceiling {max}",
+                    cfg.sram_budget
+                ));
+            }
+        }
+        if let Some(max) = self.max_dram_gbps {
+            if cfg.dram_gbps > max {
+                return Some(format!(
+                    "DRAM bandwidth {:.1} GB/s exceeds ceiling {max:.1} GB/s",
+                    cfg.dram_gbps
+                ));
+            }
+        }
+        if let Some(max) = self.max_dsp {
+            if cfg.dsp_total > max {
+                return Some(format!(
+                    "{}×{} MAC array needs {} DSPs ({} MAC + datapath overhead), ceiling {max}",
+                    cfg.ti, cfg.to, cfg.dsp_total, cfg.dsp_mac
+                ));
+            }
+        }
+        None
+    }
+}
+
+/// One concrete candidate of the design space: a model at an input
+/// resolution, a fully derived target configuration, and the reuse
+/// strategy that will pick its policy.
+#[derive(Clone)]
+pub struct DesignPoint {
+    /// Zoo model name.
+    pub model: String,
+    /// Square input resolution.
+    pub input: usize,
+    /// The derived target configuration (axes already applied).
+    pub cfg: AccelConfig,
+    /// Strategy that decides the reuse policy for this point.
+    pub strategy: Arc<dyn ReuseStrategy>,
+}
+
+impl fmt::Debug for DesignPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DesignPoint")
+            .field("model", &self.model)
+            .field("input", &self.input)
+            .field("cfg", &self.cfg.name)
+            .field("strategy", &self.strategy.name())
+            .finish()
+    }
+}
+
+/// A candidate the enumerator rejected before costing, with the ceiling
+/// it violated.
+#[derive(Debug, Clone)]
+pub struct Pruned {
+    /// Zoo model name of the rejected point.
+    pub model: String,
+    /// Representative input resolution (the rejected config is
+    /// input-independent, so one record covers every swept input).
+    pub input: usize,
+    /// Derived name of the rejected configuration.
+    pub cfg_name: String,
+    /// Human-readable constraint violation.
+    pub reason: String,
+}
+
+/// The enumerator's output: the surviving points plus everything it
+/// pruned (so sweep reports can say what was skipped and why — a silent
+/// cap would read as "covered everything").
+#[derive(Debug)]
+pub struct Enumeration {
+    /// Points that satisfy every constraint, in model-major order.
+    pub points: Vec<DesignPoint>,
+    /// Constraint-violating candidates, with reasons.
+    pub pruned: Vec<Pruned>,
+}
+
+/// Builder for a reuse-aware design-space sweep (§IV as an *optimization
+/// tool*): grids over the [`AccelConfig`] axes the paper tunes — on-chip
+/// buffer budget, MAC-array geometry, DRAM bandwidth, input resolution —
+/// crossed with any set of [`ReuseStrategy`]s and models, under device
+/// resource constraints.
+///
+/// Every axis defaults to the base configuration's value, so an empty
+/// builder describes exactly one point per model × strategy.
+///
+/// ```
+/// use shortcutfusion::compiler::Session;
+/// use shortcutfusion::config::AccelConfig;
+/// use shortcutfusion::explorer::SearchSpace;
+///
+/// let space = SearchSpace::new(AccelConfig::kcu1500_int8())
+///     .model("tinynet")
+///     .sram_budgets(&[64_000, 8_000_000])
+///     .strategy_names(&["fixed-row", "fixed-frame"])
+///     .unwrap();
+/// let exploration = space.explore(&Session::new(), 2).unwrap();
+/// assert_eq!(exploration.points.len(), 4);
+/// let best = exploration.recommend("tinynet").unwrap();
+/// assert!(best.feasible);
+/// ```
+#[derive(Clone)]
+pub struct SearchSpace {
+    base: AccelConfig,
+    models: Vec<String>,
+    inputs: Vec<usize>,
+    sram_budgets: Vec<usize>,
+    mac_arrays: Vec<(usize, usize)>,
+    dram_gbps: Vec<f64>,
+    strategies: Vec<Arc<dyn ReuseStrategy>>,
+    constraints: Constraints,
+}
+
+impl fmt::Debug for SearchSpace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SearchSpace")
+            .field("base", &self.base.name)
+            .field("models", &self.models)
+            .field("inputs", &self.inputs)
+            .field("sram_budgets", &self.sram_budgets)
+            .field("mac_arrays", &self.mac_arrays)
+            .field("dram_gbps", &self.dram_gbps)
+            .field("strategies", &self.strategies.iter().map(|s| s.name()).collect::<Vec<_>>())
+            .field("constraints", &self.constraints)
+            .finish()
+    }
+}
+
+impl SearchSpace {
+    /// An empty space anchored at `base`; unset axes inherit its values.
+    pub fn new(base: AccelConfig) -> SearchSpace {
+        SearchSpace {
+            base,
+            models: Vec::new(),
+            inputs: Vec::new(),
+            sram_budgets: Vec::new(),
+            mac_arrays: Vec::new(),
+            dram_gbps: Vec::new(),
+            strategies: Vec::new(),
+            constraints: Constraints::default(),
+        }
+    }
+
+    /// Add one zoo model (name is validated at [`SearchSpace::enumerate`]).
+    pub fn model(mut self, name: &str) -> SearchSpace {
+        self.models.push(name.to_string());
+        self
+    }
+
+    /// Add several zoo models.
+    pub fn models(mut self, names: &[&str]) -> SearchSpace {
+        self.models.extend(names.iter().map(|n| n.to_string()));
+        self
+    }
+
+    /// Sweep the whole paper zoo ([`zoo::MODEL_NAMES`]).
+    pub fn whole_zoo(self) -> SearchSpace {
+        self.models(zoo::MODEL_NAMES)
+    }
+
+    /// Input-resolution axis. Unset, every model uses its paper-default
+    /// input ([`zoo::default_input`]).
+    pub fn input_sizes(mut self, sizes: &[usize]) -> SearchSpace {
+        self.inputs = sizes.to_vec();
+        self
+    }
+
+    /// On-chip buffer budget axis (`sram_budget` bytes, the eq-(10)
+    /// constraint the optimizer searches under).
+    pub fn sram_budgets(mut self, budgets: &[usize]) -> SearchSpace {
+        self.sram_budgets = budgets.to_vec();
+        self
+    }
+
+    /// MAC-array geometry axis as `(Ti, To)` pairs; `dsp_mac` is derived
+    /// as `Ti×To / mults_per_dsp` for each point.
+    pub fn mac_arrays(mut self, dims: &[(usize, usize)]) -> SearchSpace {
+        self.mac_arrays = dims.to_vec();
+        self
+    }
+
+    /// Effective DRAM bandwidth axis in GB/s.
+    pub fn dram_bandwidths(mut self, gbps: &[f64]) -> SearchSpace {
+        self.dram_gbps = gbps.to_vec();
+        self
+    }
+
+    /// Add one reuse strategy (any [`ReuseStrategy`] implementation,
+    /// registry or custom). Unset, the paper's cut-point optimizer runs
+    /// alone.
+    pub fn strategy(mut self, s: Arc<dyn ReuseStrategy>) -> SearchSpace {
+        self.strategies.push(s);
+        self
+    }
+
+    /// Add registry strategies by name ([`strategy::STRATEGY_NAMES`]);
+    /// unknown names are a typed `Config` error.
+    pub fn strategy_names(mut self, names: &[&str]) -> Result<SearchSpace, CompileError> {
+        for &name in names {
+            let s = strategy::by_name(name).ok_or_else(|| {
+                CompileError::config(format!(
+                    "unknown strategy {name:?} — one of {:?}",
+                    strategy::STRATEGY_NAMES
+                ))
+            })?;
+            self.strategies.push(Arc::from(s));
+        }
+        Ok(self)
+    }
+
+    /// The paper's ablation trio: `cutpoint`, `fixed-row`, `fixed-frame`.
+    pub fn ablation_strategies(self) -> SearchSpace {
+        self.strategy(Arc::new(CutPointStrategy))
+            .strategy(Arc::new(FixedReuseStrategy(ReuseMode::Row)))
+            .strategy(Arc::new(FixedReuseStrategy(ReuseMode::Frame)))
+    }
+
+    /// Device BRAM18K ceiling (see [`Constraints::max_bram18k`]).
+    pub fn max_bram18k(mut self, blocks: usize) -> SearchSpace {
+        self.constraints.max_bram18k = Some(blocks);
+        self
+    }
+
+    /// Board DRAM bandwidth ceiling in GB/s.
+    pub fn max_dram_gbps(mut self, gbps: f64) -> SearchSpace {
+        self.constraints.max_dram_gbps = Some(gbps);
+        self
+    }
+
+    /// Whole-design DSP ceiling (see [`Constraints::max_dsp`]).
+    pub fn max_dsp(mut self, dsps: usize) -> SearchSpace {
+        self.constraints.max_dsp = Some(dsps);
+        self
+    }
+
+    /// The configured constraints.
+    pub fn constraints(&self) -> &Constraints {
+        &self.constraints
+    }
+
+    /// Derive the concrete target configuration for one axis combination.
+    fn derive_cfg(
+        &self,
+        (ti, to): (usize, usize),
+        sram_budget: usize,
+        dram_gbps: f64,
+    ) -> AccelConfig {
+        let mut cfg = self.base.clone();
+        if (ti, to) != (self.base.ti, self.base.to) {
+            // Re-derive the MAC-array DSP count only for swept
+            // geometries; the base dimensions keep the preset's declared
+            // dsp_mac/dsp_total, so the un-swept point reproduces the
+            // base config's own compile results exactly.
+            cfg.ti = ti;
+            cfg.to = to;
+            cfg.dsp_mac = (ti * to).div_ceil(cfg.mults_per_dsp.max(1));
+            // keep the non-MAC datapath DSP overhead of the base design
+            cfg.dsp_total = cfg.dsp_mac + self.base.dsp_total.saturating_sub(self.base.dsp_mac);
+        }
+        cfg.dram_gbps = dram_gbps;
+        cfg.sram_budget = sram_budget;
+        if let Some(max) = self.constraints.max_bram18k {
+            cfg.bram18k_total = cfg.bram18k_total.min(max);
+        }
+        // `{}` on f64 prints the shortest round-trip form, so distinct
+        // bandwidths always yield distinct names (the CLI keys its
+        // Pareto/best markers on the name).
+        cfg.name =
+            format!("{}/{}x{}-sram{}-dram{}", self.base.name, ti, to, sram_budget, dram_gbps);
+        cfg
+    }
+
+    /// Expand the grids into concrete points, pruning every candidate
+    /// that violates a [`Constraints`] ceiling *before* it is costed.
+    ///
+    /// Order is model-major (all points of one model are adjacent), which
+    /// keeps the shared analysis cache hot during parallel sweeps.
+    /// Unknown model names fail the enumeration as a typed
+    /// [`CompileError::UnknownModel`].
+    pub fn enumerate(&self) -> Result<Enumeration, CompileError> {
+        if self.models.is_empty() {
+            return Err(CompileError::config("search space has no models"));
+        }
+        let strategies: Vec<Arc<dyn ReuseStrategy>> = if self.strategies.is_empty() {
+            vec![Arc::new(CutPointStrategy)]
+        } else {
+            self.strategies.clone()
+        };
+        let budgets = non_empty(&self.sram_budgets, self.base.sram_budget);
+        let macs = non_empty(&self.mac_arrays, (self.base.ti, self.base.to));
+        let bandwidths = non_empty(&self.dram_gbps, self.base.dram_gbps);
+        // Validate the *effective* axes (base-injected defaults
+        // included, so a degenerate base config is caught too): a zero
+        // MAC dimension or a DRAM bandwidth under one byte per clock
+        // (e.g. 0.1 GB/s at 200 MHz truncates to zero bytes/cycle)
+        // would divide-by-zero deep in the timing simulator — reject
+        // typed instead of panicking in a worker thread.
+        if let Some(&(ti, to)) = macs.iter().find(|(ti, to)| *ti == 0 || *to == 0) {
+            return Err(CompileError::config(format!(
+                "invalid MAC array {ti}x{to}: dimensions must be >= 1"
+            )));
+        }
+        let min_gbps = self.base.freq_mhz * 1e6 / 1e9;
+        if let Some(&g) = bandwidths.iter().find(|&&g| !(g >= min_gbps)) {
+            return Err(CompileError::config(format!(
+                "invalid DRAM bandwidth {g} GB/s: need at least one byte per cycle \
+                 ({min_gbps:.3} GB/s at {} MHz)",
+                self.base.freq_mhz
+            )));
+        }
+
+        let mut points = Vec::new();
+        let mut pruned = Vec::new();
+        for model in &self.models {
+            let default_input = zoo::try_default_input(model)
+                .ok_or_else(|| CompileError::unknown_model(model.clone()))?;
+            // Fixed-geometry models (tinynet) ignore requested sizes, so
+            // points are labeled with the size actually compiled instead
+            // of a resolution the builder silently discarded.
+            let inputs = match zoo::fixed_input(model) {
+                Some(fixed) => vec![fixed],
+                None => non_empty(&self.inputs, default_input),
+            };
+            for &dims in &macs {
+                for &budget in &budgets {
+                    for &gbps in &bandwidths {
+                        // One derivation + constraint check per config: a
+                        // rejected config is recorded once, not once per
+                        // input or strategy (the config is independent of
+                        // both).
+                        let cfg = self.derive_cfg(dims, budget, gbps);
+                        if let Some(reason) = self.constraints.violation(&cfg) {
+                            pruned.push(Pruned {
+                                model: model.clone(),
+                                input: inputs[0],
+                                cfg_name: cfg.name,
+                                reason,
+                            });
+                            continue;
+                        }
+                        for &input in &inputs {
+                            for strategy in &strategies {
+                                points.push(DesignPoint {
+                                    model: model.clone(),
+                                    input,
+                                    cfg: cfg.clone(),
+                                    strategy: strategy.clone(),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Enumeration { points, pruned })
+    }
+}
+
+fn non_empty<T: Clone>(axis: &[T], default: T) -> Vec<T> {
+    if axis.is_empty() {
+        vec![default]
+    } else {
+        axis.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_axes_describe_one_point_per_model_and_strategy() {
+        let e = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .models(&["resnet18", "yolov2"])
+            .ablation_strategies()
+            .enumerate()
+            .unwrap();
+        assert_eq!(e.points.len(), 2 * 3);
+        assert!(e.pruned.is_empty());
+        // model-major order keeps the analysis cache hot
+        assert!(e.points[..3].iter().all(|p| p.model == "resnet18"));
+        // defaults inherited from the base config
+        assert_eq!(e.points[0].input, 224);
+        assert_eq!(e.points[0].cfg.sram_budget, AccelConfig::kcu1500_int8().sram_budget);
+    }
+
+    #[test]
+    fn grids_cross_and_configs_derive() {
+        let e = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("resnet18")
+            .input_sizes(&[64, 96])
+            .sram_budgets(&[1_000_000, 2_000_000])
+            .mac_arrays(&[(32, 32), (64, 64)])
+            .dram_bandwidths(&[8.0])
+            .enumerate()
+            .unwrap();
+        assert_eq!(e.points.len(), 2 * 2 * 2);
+        let small = e
+            .points
+            .iter()
+            .find(|p| p.cfg.ti == 32 && p.cfg.sram_budget == 1_000_000)
+            .unwrap();
+        // dsp_mac tracks the array geometry: 32×32 / 2 mults per DSP
+        assert_eq!(small.cfg.dsp_mac, 512);
+        assert_eq!(small.cfg.dram_gbps, 8.0);
+        assert!(small.cfg.name.contains("32x32"));
+        // distinct derived names -> distinct session cache keys
+        let names: std::collections::BTreeSet<_> =
+            e.points.iter().map(|p| p.cfg.name.clone()).collect();
+        assert_eq!(names.len(), 4, "input axis reuses cfg, other axes rename");
+    }
+
+    #[test]
+    fn constraints_prune_before_costing() {
+        let e = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("resnet18")
+            .sram_budgets(&[1_000_000, 100_000_000])
+            .mac_arrays(&[(64, 64), (256, 256)])
+            .max_bram18k(4320)
+            .max_dsp(4096)
+            .enumerate()
+            .unwrap();
+        // 100 MB of SRAM needs ~48k BRAM18K; 256×256 needs 32k DSPs
+        assert_eq!(e.points.len(), 1);
+        assert_eq!(e.pruned.len(), 3);
+        assert!(e.pruned.iter().any(|p| p.reason.contains("BRAM18K")));
+        assert!(e.pruned.iter().any(|p| p.reason.contains("DSPs")));
+        // the surviving config honours the BRAM ceiling in feasibility
+        assert!(e.points[0].cfg.bram18k_total <= 4320);
+    }
+
+    #[test]
+    fn fixed_geometry_models_ignore_the_input_axis_honestly() {
+        // tinynet always builds at 16×16×8; its points must be labeled
+        // with the size actually compiled, not the requested axis value.
+        let e = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("tinynet")
+            .input_sizes(&[224])
+            .enumerate()
+            .unwrap();
+        assert_eq!(e.points.len(), 1);
+        assert_eq!(e.points[0].input, crate::zoo::TINYNET_INPUT.w);
+    }
+
+    #[test]
+    fn base_mac_dims_keep_the_preset_dsp_counts() {
+        // table2_int16 declares dsp_mac = 2048 at Ti=To=32 (shared
+        // array); the un-swept point must reproduce it, not re-derive
+        // 32*32/1 = 1024.
+        let base = AccelConfig::table2_int16();
+        let e = SearchSpace::new(base.clone()).model("resnet18").enumerate().unwrap();
+        assert_eq!(e.points[0].cfg.dsp_mac, base.dsp_mac);
+        assert_eq!(e.points[0].cfg.dsp_total, base.dsp_total);
+        // a genuinely swept geometry is re-derived
+        let e = SearchSpace::new(base.clone())
+            .model("resnet18")
+            .mac_arrays(&[(16, 16)])
+            .enumerate()
+            .unwrap();
+        assert_eq!(e.points[0].cfg.dsp_mac, 16 * 16 / base.mults_per_dsp);
+    }
+
+    #[test]
+    fn sub_byte_per_cycle_bandwidth_is_a_typed_error() {
+        // 0.1 GB/s at 200 MHz rounds to zero DRAM bytes per cycle, which
+        // the timing model divides by — must be rejected up front.
+        for bad in [0.0, 0.1, -1.0, f64::NAN] {
+            let err = SearchSpace::new(AccelConfig::kcu1500_int8())
+                .model("resnet18")
+                .dram_bandwidths(&[bad])
+                .enumerate()
+                .unwrap_err();
+            assert!(matches!(err, CompileError::Config(_)), "{bad}");
+        }
+        // a degenerate *base* bandwidth is caught even with no explicit
+        // axis (the default axis injects the base value)
+        let mut slow = AccelConfig::kcu1500_int8();
+        slow.dram_gbps = 0.1;
+        let err =
+            SearchSpace::new(slow).model("resnet18").enumerate().unwrap_err();
+        assert!(matches!(err, CompileError::Config(_)));
+    }
+
+    #[test]
+    fn zero_mac_dimension_is_a_typed_error() {
+        let err = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("resnet18")
+            .mac_arrays(&[(0, 64)])
+            .enumerate()
+            .unwrap_err();
+        assert!(matches!(err, CompileError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn unknown_model_fails_enumeration_typed() {
+        let err = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("alexnet")
+            .enumerate()
+            .unwrap_err();
+        assert!(matches!(err, CompileError::UnknownModel { .. }));
+        let err = SearchSpace::new(AccelConfig::kcu1500_int8()).enumerate().unwrap_err();
+        assert!(matches!(err, CompileError::Config(_)));
+    }
+}

@@ -30,11 +30,14 @@ impl std::error::Error for ExecError {}
 
 /// The functional simulator.
 pub struct Executor<'a> {
+    /// The analyzed network to execute.
     pub gg: &'a GroupedGraph,
+    /// Quantized parameters, keyed by group main-node name.
     pub params: &'a Params,
 }
 
 impl<'a> Executor<'a> {
+    /// An executor over one analyzed network and its parameters.
     pub fn new(gg: &'a GroupedGraph, params: &'a Params) -> Self {
         Executor { gg, params }
     }

@@ -39,10 +39,12 @@ pub struct GroupParams {
 /// name* of each group (stable across the rust/python graph builders).
 #[derive(Debug, Clone, Default)]
 pub struct Params {
+    /// Per-group parameters, keyed by main-node name.
     pub groups: HashMap<String, GroupParams>,
 }
 
 impl Params {
+    /// Parameters of the group whose main node has this name.
     pub fn get(&self, name: &str) -> Option<&GroupParams> {
         self.groups.get(name)
     }
@@ -118,6 +120,7 @@ impl Params {
         Ok(Params { groups })
     }
 
+    /// Load from a JSON parameter file (the python export format).
     pub fn from_file(path: &std::path::Path) -> Result<Params> {
         let text =
             std::fs::read_to_string(path).map_err(|e| CompileError::io(path, e))?;

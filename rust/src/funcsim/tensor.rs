@@ -6,20 +6,25 @@ use crate::graph::Shape;
 /// feature-map memory).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Tensor {
+    /// Height × width × channels.
     pub shape: Shape,
+    /// Row-major HWC values.
     pub data: Vec<i8>,
 }
 
 impl Tensor {
+    /// An all-zero tensor.
     pub fn zeros(shape: Shape) -> Self {
         Tensor { shape, data: vec![0; shape.numel()] }
     }
 
+    /// Wrap existing values (length must match the shape).
     pub fn from_vec(shape: Shape, data: Vec<i8>) -> Self {
         assert_eq!(shape.numel(), data.len(), "tensor size mismatch");
         Tensor { shape, data }
     }
 
+    /// Flat index of (y, x, c).
     #[inline]
     pub fn idx(&self, y: usize, x: usize, c: usize) -> usize {
         (y * self.shape.w + x) * self.shape.c + c
@@ -35,11 +40,13 @@ impl Tensor {
         }
     }
 
+    /// Value at (y, x, c); panics outside the bounds.
     #[inline]
     pub fn at(&self, y: usize, x: usize, c: usize) -> i8 {
         self.data[self.idx(y, x, c)]
     }
 
+    /// Store `v` at (y, x, c).
     #[inline]
     pub fn set(&mut self, y: usize, x: usize, c: usize, v: i8) {
         let i = self.idx(y, x, c);

@@ -108,12 +108,14 @@ impl GraphBuilder {
         self.push(name, OpKind::Act(a), vec![from], s)
     }
 
+    /// Max-pooling node.
     pub fn maxpool(&mut self, name: &str, from: NodeId, k: usize, stride: usize) -> NodeId {
         let s = self.shape(from);
         let out = s.conv_same(stride, s.c);
         self.push(name, OpKind::MaxPool { k, stride }, vec![from], out)
     }
 
+    /// Average-pooling node.
     pub fn avgpool(&mut self, name: &str, from: NodeId, k: usize, stride: usize) -> NodeId {
         let s = self.shape(from);
         let out = s.conv_same(stride, s.c);

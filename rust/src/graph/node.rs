@@ -9,9 +9,11 @@ pub struct NodeId(pub usize);
 /// One operator instance in the graph.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// This node's index.
     pub id: NodeId,
     /// Unique name (protobuf node name in the TF front-end).
     pub name: String,
+    /// Operator kind and static attributes.
     pub op: OpKind,
     /// Producers, in operand order. `EltwiseAdd`: `[main, shortcut]`;
     /// `ScaleMul`: `[fmap, gate]`; `Concat`: `[a, b]`.

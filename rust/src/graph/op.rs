@@ -16,11 +16,14 @@ pub enum PadMode {
 /// §III-B) and therefore support a single fixed-point format only.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Activation {
+    /// Identity (no activation).
     Linear,
+    /// Standard ReLU.
     Relu,
     /// Leaky ReLU with slope 1/8 as in the YOLO accelerator line of work
     /// (hardware-friendly shift implementation).
     Leaky,
+    /// ReLU clipped at 6.
     Relu6,
     /// x * sigmoid(x) — EfficientNet/MobileNetV3; 8-bit LUT in hardware.
     Swish,
@@ -52,22 +55,42 @@ pub enum OpKind {
     /// Convolution. `depthwise` selects the per-channel form (groups ==
     /// channels); then `out_c` must equal the input channel count.
     Conv {
+        /// Square kernel size.
         k: usize,
+        /// Spatial stride.
         stride: usize,
+        /// Output channel count.
         out_c: usize,
+        /// Padding convention.
         pad: PadMode,
+        /// Per-channel (depthwise) form when set.
         depthwise: bool,
     },
     /// Fully-connected layer (SE reduce/expand, classifier heads).
-    Fc { out_c: usize },
+    Fc {
+        /// Output feature count.
+        out_c: usize,
+    },
     /// Per-channel affine (folded batch-norm). Fuses into the preceding conv.
     BatchNorm,
     /// Per-element bias add (TF BiasAdd). Fuses into the preceding conv.
     BiasAdd,
     /// Standalone activation node.
     Act(Activation),
-    MaxPool { k: usize, stride: usize },
-    AvgPool { k: usize, stride: usize },
+    /// Max pooling.
+    MaxPool {
+        /// Square window size.
+        k: usize,
+        /// Spatial stride.
+        stride: usize,
+    },
+    /// Average pooling.
+    AvgPool {
+        /// Square window size.
+        k: usize,
+        /// Spatial stride.
+        stride: usize,
+    },
     /// Global average pool → 1×1×C (SE squeeze, classifier pre-FC).
     GlobalAvgPool,
     /// Element-wise addition of two inputs — the *shortcut* layer.
@@ -79,7 +102,10 @@ pub enum OpKind {
     /// Channel concatenation of two inputs (YOLO route layers, FPN).
     Concat,
     /// Nearest-neighbour upsampling by an integer factor.
-    Upsample { factor: usize },
+    Upsample {
+        /// Integer scale factor.
+        factor: usize,
+    },
     /// Detection / output head marker (kept for graph fidelity; no compute).
     Identity,
 }

@@ -5,12 +5,16 @@ use std::fmt;
 /// Shape of a feature-map tensor: height, width, channels (batch = 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Shape {
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
+    /// Channels.
     pub c: usize,
 }
 
 impl Shape {
+    /// A shape from height / width / channels.
     pub const fn new(h: usize, w: usize, c: usize) -> Self {
         Shape { h, w, c }
     }

@@ -6,7 +6,9 @@ use std::fmt;
 /// Validation failure with the offending node index.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ValidateError {
+    /// Index of the offending node.
     pub node: usize,
+    /// What the node violated.
     pub reason: String,
 }
 

@@ -15,21 +15,32 @@ const MAGIC: u32 = 0x5C;
 /// keeps feature-maps in the physical buffers and streams weight blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ReuseMode {
+    /// Row-based weight reuse: whole-layer weights resident on-chip.
     Row,
+    /// Frame-based weight reuse: whole feature frames resident on-chip.
     Frame,
 }
 
 /// Datapath opcode (4 bits).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Opcode {
+    /// Network-input placeholder group.
     Input = 0,
+    /// Normal convolution.
     Conv = 1,
+    /// Depthwise convolution.
     DwConv = 2,
+    /// Fully-connected layer.
     Fc = 3,
+    /// SE excitation channel scale.
     Scale = 4,
+    /// Standalone pooling.
     Pool = 5,
+    /// Standalone element-wise addition.
     Eltwise = 6,
+    /// Channel concatenation (memory redirection).
     Concat = 7,
+    /// Standalone nearest-neighbour upsampling.
     Upsample = 8,
     /// Standalone activation / copy.
     Copy = 9,
@@ -56,19 +67,31 @@ impl Opcode {
 /// A fully-specified group instruction (decoded form).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Instruction {
+    /// Group index in program order (also echoed in word 10).
     pub group: u32,
+    /// Datapath opcode.
     pub opcode: Opcode,
+    /// Output activation.
     pub act: Activation,
+    /// Weight-reuse scheme this group runs under.
     pub reuse: ReuseMode,
-    /// Convolution geometry (1/1/same for non-conv groups).
+    /// Convolution kernel size (1 for non-conv groups).
     pub k: u8,
+    /// Convolution stride (1 for non-conv groups).
     pub stride: u8,
+    /// TensorFlow `Same` padding when set, `Valid` otherwise.
     pub pad_same: bool,
+    /// Input feature-map height.
     pub in_h: u16,
+    /// Input feature-map width.
     pub in_w: u16,
+    /// Input channel count.
     pub in_c: u16,
+    /// Output feature-map height.
     pub out_h: u16,
+    /// Output feature-map width.
     pub out_w: u16,
+    /// Output channel count.
     pub out_c: u16,
     /// Fused trailing pooling.
     pub pool: Option<(PoolKind, u8, u8)>,
@@ -80,16 +103,22 @@ pub struct Instruction {
     pub se_squeeze: bool,
     /// Dynamic fixed-point output shift (§III-B).
     pub quant_shift: i8,
-    /// Buffer selectors (2 bits each; 3 = DRAM) + DRAM byte offsets.
+    /// Input buffer selector (2 bits; 3 = DRAM).
     pub in_sel: u8,
+    /// Output buffer selector (2 bits; 3 = DRAM).
     pub out_sel: u8,
     /// Second-operand selector (shortcut / concat's second input /
     /// SE-scale gate).
     pub aux_sel: u8,
+    /// Input DRAM byte offset (meaningful when `in_sel` = 3).
     pub in_addr: u32,
+    /// Output DRAM byte offset (meaningful when `out_sel` = 3).
     pub out_addr: u32,
+    /// Second-operand DRAM byte offset (meaningful when `aux_sel` = 3).
     pub aux_addr: u32,
+    /// Byte offset of the group's weights in the DRAM weight arena.
     pub weight_addr: u32,
+    /// Weight bytes streamed for this group.
     pub weight_bytes: u32,
 }
 

@@ -9,12 +9,17 @@ use crate::analyzer::{GroupKind, GroupedGraph};
 /// weight arena slice.
 #[derive(Debug, Clone)]
 pub struct MemAssign {
+    /// Weight-reuse scheme the group runs under.
     pub reuse: ReuseMode,
+    /// Where the main input operand lives.
     pub in_loc: MemLoc,
+    /// Where the output is written.
     pub out_loc: MemLoc,
     /// Second operand (shortcut / concat second input / SE gate).
     pub aux_loc: Option<MemLoc>,
+    /// Byte offset of the group's weights in the DRAM weight arena.
     pub weight_addr: u32,
+    /// Weight bytes streamed for this group.
     pub weight_bytes: u32,
     /// Dynamic fixed-point output shift.
     pub quant_shift: i8,
@@ -38,15 +43,19 @@ impl Default for MemAssign {
 /// word stream that would be DMA'd to the accelerator.
 #[derive(Debug, Clone)]
 pub struct InstructionStream {
+    /// Decoded instruction per group, in program order.
     pub instrs: Vec<Instruction>,
+    /// The packed 11-words-per-group stream.
     pub words: Vec<u32>,
 }
 
 impl InstructionStream {
+    /// Number of instructions (= groups).
     pub fn len(&self) -> usize {
         self.instrs.len()
     }
 
+    /// `true` for an empty stream.
     pub fn is_empty(&self) -> bool {
         self.instrs.is_empty()
     }

@@ -71,6 +71,19 @@
 //! concurrent batched requests on top (see the `pack`, `run`, and
 //! `serve-bench` CLI commands and `benches/serving.rs`).
 //!
+//! ## Design-space exploration: `explorer`
+//!
+//! The paper frames §IV as an *optimization tool*: given resource
+//! constraints, pick the configuration maximizing on-chip reuse.
+//! [`explorer::SearchSpace`] automates that search — grids over the
+//! [`config::AccelConfig`] axes (buffer budget, MAC-array geometry,
+//! DRAM bandwidth, input resolution) × every reuse strategy, pruned
+//! against device ceilings before costing, evaluated in parallel through
+//! one memoizing [`compiler::Session`], and reduced to per-model
+//! [`explorer::ParetoFront`]s over (latency, DRAM bytes, SRAM KB) plus a
+//! recommended configuration that packs straight into a deployable
+//! [`program::Program`]. The CLI front-end is `shortcutfusion explore`.
+//!
 //! ## Layout
 //!
 //! | module | role |
@@ -83,6 +96,7 @@
 //! | [`compiler`] | **the staged API**: stages, strategies, session, errors |
 //! | [`program`] | **the deployable artifact**: packed program, binary container |
 //! | [`engine`] | **unified execution**: backends + batch-serving engine |
+//! | [`explorer`] | **design-space search**: pruned config sweeps, Pareto fronts, recommender |
 //! | [`sim`], [`funcsim`], [`power`] | cycle-accurate timing, bit-exact functional sim, power model |
 //! | [`baselines`], [`bench`] | comparison models + offline bench harness |
 //! | [`coordinator`] | CLI and deprecated one-shot wrappers |
@@ -90,6 +104,8 @@
 //!
 //! See `DESIGN.md` for the hardware substitutions (FPGA → cycle-accurate
 //! simulator, GPU → analytical model).
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod graph;
@@ -102,6 +118,7 @@ pub mod alloc;
 pub mod compiler;
 pub mod program;
 pub mod engine;
+pub mod explorer;
 pub mod sim;
 pub mod funcsim;
 pub mod power;

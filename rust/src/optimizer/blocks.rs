@@ -16,14 +16,17 @@ pub struct BasicBlock {
 }
 
 impl BasicBlock {
+    /// The group indices this block spans.
     pub fn groups(&self) -> std::ops::RangeInclusive<usize> {
         self.start..=self.end
     }
 
+    /// Number of groups in the block.
     pub fn len(&self) -> usize {
         self.end - self.start + 1
     }
 
+    /// Always `false`: a block spans at least one group.
     pub fn is_empty(&self) -> bool {
         false
     }

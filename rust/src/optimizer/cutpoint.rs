@@ -14,6 +14,7 @@ use crate::sim::simulate;
 /// One cut position per segment.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CutPolicy {
+    /// Cut position per segment (block index within the segment).
     pub cuts: Vec<usize>,
 }
 
@@ -27,10 +28,16 @@ pub type LatencyFn = fn(&GroupedGraph, &[ReuseMode], &AllocResult, &AccelConfig)
 /// Full evaluation of one candidate policy.
 #[derive(Debug, Clone)]
 pub struct Evaluation {
+    /// The cut positions that produced this policy (empty for uniform
+    /// baseline policies that bypass the cut search).
     pub cuts: CutPolicy,
+    /// Reuse scheme per group.
     pub policy: Vec<ReuseMode>,
+    /// SRAM requirement breakdown (eqs. 1–7).
     pub sram: SramBreakdown,
+    /// DRAM traffic breakdown (eqs. 8–9).
     pub dram: DramBreakdown,
+    /// Simulated end-to-end latency, ms.
     pub latency_ms: f64,
     /// eq. (10): SRAM within budget and BRAM within the device.
     pub feasible: bool,
@@ -41,20 +48,30 @@ pub struct Evaluation {
 pub struct SweepPoint {
     /// Cut position in the swept (first) segment.
     pub cut: usize,
+    /// Total SRAM requirement, MB.
     pub sram_mb: f64,
+    /// BRAM18K blocks.
     pub bram18k: usize,
+    /// Total DRAM traffic, MB.
     pub dram_total_mb: f64,
+    /// Feature-map DRAM traffic, MB.
     pub dram_fm_mb: f64,
+    /// Simulated latency, ms.
     pub latency_ms: f64,
+    /// Whether the point meets the eq-(10) constraints.
     pub feasible: bool,
 }
 
 /// The reuse-aware shortcut optimizer.
 #[derive(Clone)]
 pub struct Optimizer<'a> {
+    /// The analyzed network.
     pub gg: &'a GroupedGraph,
+    /// The target configuration.
     pub cfg: &'a AccelConfig,
+    /// Basic-block partition (Fig. 10).
     pub blocks: Vec<BasicBlock>,
+    /// Monotone segments, one cut-point each (Fig. 11/12).
     pub segs: Vec<Segment>,
     latency: LatencyFn,
 }

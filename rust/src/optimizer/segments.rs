@@ -26,6 +26,7 @@ pub struct Segment {
     pub first_block: usize,
     /// Number of blocks.
     pub len: usize,
+    /// Whether feature maps shrink or grow along the run.
     pub dir: Direction,
 }
 

@@ -25,7 +25,9 @@ pub const SRAM_PJ_PER_BIT: f64 = 0.7;
 /// why eq. 10 constrains DRAM traffic).
 #[derive(Debug, Clone, Copy)]
 pub struct EnergyBreakdown {
+    /// DRAM access energy per inference, millijoules.
     pub dram_mj: f64,
+    /// On-chip SRAM access energy per inference, millijoules.
     pub sram_mj: f64,
     /// DRAM energy / total memory energy.
     pub dram_fraction: f64,
@@ -69,11 +71,15 @@ impl Default for PowerModel {
 /// Power estimate for one run.
 #[derive(Debug, Clone, Copy)]
 pub struct PowerEstimate {
+    /// FPGA-side power (static + MAC + BRAM), watts.
     pub chip_w: f64,
+    /// DRAM interface power, watts.
     pub dram_w: f64,
+    /// Chip + DRAM, watts.
     pub total_w: f64,
     /// Energy per frame in millijoules.
     pub frame_mj: f64,
+    /// Throughput per watt (the Tables V/VII efficiency row).
     pub gops_per_w: f64,
 }
 

@@ -89,10 +89,12 @@ pub struct SectionWriter {
 }
 
 impl SectionWriter {
+    /// An empty payload.
     pub fn new() -> Self {
         SectionWriter { buf: Vec::new() }
     }
 
+    /// Append one length-prefixed section.
     pub fn section(&mut self, bytes: &[u8]) {
         self.buf.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
         self.buf.extend_from_slice(bytes);
@@ -104,6 +106,7 @@ impl SectionWriter {
         self.buf.extend_from_slice(bytes);
     }
 
+    /// The assembled payload.
     pub fn finish(self) -> Vec<u8> {
         self.buf
     }
@@ -117,6 +120,7 @@ pub struct SectionReader<'a> {
 }
 
 impl<'a> SectionReader<'a> {
+    /// A reader positioned at the start of `bytes`.
     pub fn new(bytes: &'a [u8]) -> Self {
         SectionReader { bytes, pos: 0 }
     }

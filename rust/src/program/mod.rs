@@ -156,6 +156,7 @@ impl Program {
 
     // ---- inspection -----------------------------------------------------
 
+    /// Model name recorded at pack time.
     pub fn model(&self) -> &str {
         &self.model
     }
@@ -166,6 +167,7 @@ impl Program {
         &self.strategy
     }
 
+    /// The embedded target configuration.
     pub fn cfg(&self) -> &AccelConfig {
         &self.cfg
     }
@@ -302,10 +304,12 @@ impl Program {
         Program::from_parts(model, strategy, cfg, grouped, assigns, words, params)
     }
 
+    /// Write the binary container to disk.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_bytes()).map_err(|e| CompileError::io(path, e))
     }
 
+    /// Read a binary container from disk.
     pub fn load(path: &Path) -> Result<Program> {
         let bytes = std::fs::read(path).map_err(|e| CompileError::io(path, e))?;
         Program::from_bytes(&bytes)

@@ -19,6 +19,7 @@ use std::path::{Path, PathBuf};
 
 /// A compiled executable with its source path.
 pub struct LoadedModel {
+    /// Source HLO artifact path.
     pub path: PathBuf,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -37,6 +38,7 @@ impl Runtime {
         Ok(Runtime { client, cache: HashMap::new(), models: Vec::new() })
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

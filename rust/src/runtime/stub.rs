@@ -22,6 +22,7 @@ impl Runtime {
         Err(CompileError::unsupported(MSG))
     }
 
+    /// Always `"stub"` in this build.
     pub fn platform(&self) -> String {
         "stub".to_string()
     }
@@ -32,10 +33,12 @@ impl Runtime {
         Err(CompileError::unsupported(MSG))
     }
 
+    /// Unreachable in practice; see [`Runtime::load`].
     pub fn run_i8(&self, _id: usize, _inputs: &[&Tensor]) -> Result<Vec<i8>> {
         Err(CompileError::unsupported(MSG))
     }
 
+    /// Unreachable in practice; see [`Runtime::load`].
     pub fn run_i8_to_i32(&self, _id: usize, _inputs: &[&Tensor]) -> Result<Vec<i32>> {
         Err(CompileError::unsupported(MSG))
     }

@@ -10,23 +10,32 @@ use std::fmt;
 /// A JSON value. Objects use `BTreeMap` for deterministic output ordering.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (all JSON numbers parse as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with deterministically ordered keys.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a string value.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
 
+    /// Build a number value.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
@@ -39,6 +48,7 @@ impl Json {
         }
     }
 
+    /// The value as a string, if it is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -46,6 +56,7 @@ impl Json {
         }
     }
 
+    /// The value as a number, if it is one.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -53,10 +64,12 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if it is one.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
     }
 
+    /// The value as a bool, if it is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -64,6 +77,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice, if it is one.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -169,7 +183,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 

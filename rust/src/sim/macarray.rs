@@ -19,7 +19,9 @@ use crate::graph::OpKind;
 /// Compute-array geometry derived from the configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct MacGeometry {
+    /// Input-channel parallelism.
     pub ti: usize,
+    /// Output-channel parallelism.
     pub to: usize,
     /// Output kernels evaluated concurrently (To × mults_per_dsp shares).
     pub normal_kernels_per_cycle: usize,
@@ -28,6 +30,7 @@ pub struct MacGeometry {
 }
 
 impl MacGeometry {
+    /// Derive the geometry from a target configuration.
     pub fn from_config(cfg: &AccelConfig) -> Self {
         MacGeometry {
             ti: cfg.ti,

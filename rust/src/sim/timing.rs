@@ -9,6 +9,7 @@ use crate::isa::ReuseMode;
 /// Cycle breakdown for one group.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GroupTiming {
+    /// Pure MAC-array compute cycles.
     pub compute_cycles: u64,
     /// Feature-map DRAM stream cycles (reads + writes during compute).
     pub stream_cycles: u64,
@@ -23,8 +24,11 @@ pub struct GroupTiming {
 /// Whole-network timing result.
 #[derive(Debug, Clone)]
 pub struct NetworkTiming {
+    /// Cycle breakdown per group, in program order.
     pub per_group: Vec<GroupTiming>,
+    /// End-to-end cycles for one inference.
     pub total_cycles: u64,
+    /// End-to-end latency at the configured clock, ms.
     pub latency_ms: f64,
     /// Average GOPS (the paper's Tables II/V/VII row).
     pub gops: f64,

@@ -22,16 +22,19 @@ pub struct TrafficCount {
     pub fm_write: u64,
     /// Weight bytes fetched.
     pub weight_read: u64,
-    /// On-chip buffer traffic (for the energy model's SRAM term).
+    /// On-chip buffer bytes read (for the energy model's SRAM term).
     pub buf_read: u64,
+    /// On-chip buffer bytes written.
     pub buf_write: u64,
 }
 
 impl TrafficCount {
+    /// Feature-map bytes crossing the chip boundary (reads + writes).
     pub fn fm_total(&self) -> u64 {
         self.fm_read + self.fm_write
     }
 
+    /// All DRAM bytes: feature maps + weights.
     pub fn dram_total(&self) -> u64 {
         self.fm_total() + self.weight_read
     }

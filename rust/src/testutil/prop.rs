@@ -19,6 +19,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Deterministic generator from a seed.
     pub fn from_seed(seed: u64) -> Self {
         // avoid the all-zero fixed point
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) | 1 }

@@ -41,7 +41,10 @@ pub use unet::unet;
 
 use crate::graph::Graph;
 
-/// All zoo model names, for CLI listings and sweep drivers.
+/// The paper-evaluation zoo: every model the tables/figures sweep, for
+/// CLI listings and sweep drivers. `tinynet` (the hardware-verification
+/// net) resolves through [`by_name`] but is deliberately excluded here so
+/// zoo-wide sweeps stay paper-shaped; [`KNOWN_NAMES`] is the superset.
 pub const MODEL_NAMES: &[&str] = &[
     "vgg16-conv",
     "yolov2",
@@ -59,37 +62,88 @@ pub const MODEL_NAMES: &[&str] = &[
     "unet",
 ];
 
-/// Build a zoo model by name at the given square input size.
-pub fn by_name(name: &str, input: usize) -> Option<Graph> {
-    Some(match name {
-        "vgg16-conv" => vgg16_conv(input),
-        "yolov2" => yolov2(input),
-        "yolov3" => yolov3(input),
-        "resnet18" => resnet18(input),
-        "resnet34" => resnet34(input),
-        "resnet50" => resnet50(input),
-        "resnet101" => resnet101(input),
-        "resnet152" => resnet152(input),
-        "retinanet" => retinanet(input),
-        "efficientnet-b0" => efficientnet_b0(input),
-        "efficientnet-b1" => efficientnet_b1(input),
-        "mobilenetv3-large" => mobilenet_v3_large(input),
-        "efficientdet-d0" => efficientdet_d0(input),
-        "unet" => unet(input),
-        _ => return None,
-    })
+/// `tinynet` is fixed-geometry (its canonical 16×16×8 input is part of
+/// the golden-model contract) and ignores the requested input size.
+fn build_tinynet(_input: usize) -> Graph {
+    tinynet()
+}
+
+/// One table drives the whole registry — names, builders, paper default
+/// inputs and the fixed-geometry property cannot drift apart
+/// ([`KNOWN_NAMES`], [`by_name`], [`try_default_input`] and
+/// [`fixed_input`] all expand from the same rows; the input column is
+/// either `any N` (rebuilds at any resolution, paper default `N`) or
+/// `fixed N` (only buildable at `N`)).
+macro_rules! zoo_registry {
+    ($( $name:literal => ($builder:expr, $kind:ident $default:expr) ),+ $(,)?) => {
+        /// Every name [`by_name`] accepts: [`MODEL_NAMES`] plus
+        /// `tinynet`. This is what
+        /// [`crate::compiler::CompileError::unknown_model`] reports.
+        pub const KNOWN_NAMES: &[&str] = &[$($name),+];
+
+        /// Build a zoo model by name at the given square input size.
+        ///
+        /// `tinynet` is fixed-geometry (its canonical 16×16×8 input is
+        /// part of the golden-model contract) and ignores `input` —
+        /// callers taking user-chosen sizes guard with [`fixed_input`].
+        pub fn by_name(name: &str, input: usize) -> Option<Graph> {
+            let build: fn(usize) -> Graph = match name {
+                $( $name => $builder, )+
+                _ => return None,
+            };
+            Some(build(input))
+        }
+
+        /// Default input size used by the paper for each model
+        /// (Tables III/V), or `None` for names outside the zoo.
+        pub fn try_default_input(name: &str) -> Option<usize> {
+            Some(match name {
+                $( $name => $default, )+
+                _ => return None,
+            })
+        }
+
+        /// The mandatory input size of a fixed-geometry model, or
+        /// `None` for models that rebuild at any resolution. Callers
+        /// that accept a user-chosen input (CLI flags, sweep axes) use
+        /// this to reject or normalize sizes the builder would silently
+        /// ignore.
+        pub fn fixed_input(name: &str) -> Option<usize> {
+            match name {
+                $( $name => zoo_registry!(@fixed $kind $default), )+
+                _ => None,
+            }
+        }
+    };
+    (@fixed any $default:expr) => { None };
+    (@fixed fixed $default:expr) => { Some($default) };
+}
+
+zoo_registry! {
+    "vgg16-conv" => (vgg16_conv, any 224),
+    "yolov2" => (yolov2, any 416),
+    "yolov3" => (yolov3, any 416),
+    "resnet18" => (resnet18, any 224),
+    "resnet34" => (resnet34, any 224),
+    "resnet50" => (resnet50, any 256),
+    "resnet101" => (resnet101, any 256),
+    "resnet152" => (resnet152, any 256),
+    "retinanet" => (retinanet, any 512),
+    "efficientnet-b0" => (efficientnet_b0, any 256),
+    "efficientnet-b1" => (efficientnet_b1, any 256),
+    "mobilenetv3-large" => (mobilenet_v3_large, any 256),
+    "efficientdet-d0" => (efficientdet_d0, any 512),
+    "unet" => (unet, any 256),
+    "tinynet" => (build_tinynet, fixed TINYNET_INPUT.w),
 }
 
 /// Default input size used by the paper for each model (Tables III/V).
+///
+/// Falls back to 256 for unknown names; callers that must reject unknown
+/// models use [`try_default_input`] (sweep construction goes through
+/// `SweepJob::zoo_default`, which surfaces a typed error instead).
 pub fn default_input(name: &str) -> usize {
-    match name {
-        "vgg16-conv" | "resnet18" | "resnet34" => 224,
-        "resnet50" | "resnet101" | "resnet152" => 256,
-        "yolov2" | "yolov3" => 416,
-        "retinanet" | "efficientdet-d0" => 512,
-        "unet" => 256,
-        _ => 256,
-    }
+    try_default_input(name).unwrap_or(256)
 }
 
 #[cfg(test)]
@@ -109,5 +163,29 @@ mod tests {
     #[test]
     fn unknown_model_is_none() {
         assert!(by_name("alexnet", 224).is_none());
+        assert!(try_default_input("alexnet").is_none());
+    }
+
+    #[test]
+    fn known_names_covers_the_registry() {
+        // KNOWN_NAMES is exactly what by_name resolves: the sweep zoo
+        // plus the fixed-geometry verification net.
+        for &name in KNOWN_NAMES {
+            assert!(by_name(name, default_input(name)).is_some(), "{name}");
+            assert!(try_default_input(name).is_some(), "{name}");
+        }
+        // every sweep-zoo model must stay resolvable (a MODEL_NAMES entry
+        // missing from KNOWN_NAMES would break SweepJob::zoo_default)
+        for &name in MODEL_NAMES {
+            assert!(KNOWN_NAMES.contains(&name), "{name} missing from KNOWN_NAMES");
+        }
+        let unique: std::collections::BTreeSet<_> = KNOWN_NAMES.iter().collect();
+        assert_eq!(unique.len(), KNOWN_NAMES.len(), "duplicate KNOWN_NAMES entry");
+        assert_eq!(KNOWN_NAMES.len(), MODEL_NAMES.len() + 1);
+        assert!(KNOWN_NAMES.contains(&"tinynet"));
+        assert!(!MODEL_NAMES.contains(&"tinynet"));
+        assert_eq!(default_input("tinynet"), TINYNET_INPUT.w);
+        assert_eq!(fixed_input("tinynet"), Some(TINYNET_INPUT.w));
+        assert_eq!(fixed_input("resnet18"), None);
     }
 }

@@ -80,18 +80,24 @@ fn basic_block(b: &mut GraphBuilder, base: &str, x: NodeId, c: usize, stride: us
     b.activation(&format!("{base}/relu"), add, Activation::Relu)
 }
 
+/// ResNet-18 (basic blocks) at a square input size.
 pub fn resnet18(input: usize) -> Graph {
     resnet(18, input)
 }
+/// ResNet-34 (basic blocks) at a square input size.
 pub fn resnet34(input: usize) -> Graph {
     resnet(34, input)
 }
+/// ResNet-50 (bottleneck blocks) at a square input size.
 pub fn resnet50(input: usize) -> Graph {
     resnet(50, input)
 }
+/// ResNet-101 (bottleneck blocks) at a square input size.
 pub fn resnet101(input: usize) -> Graph {
     resnet(101, input)
 }
+/// ResNet-152 (bottleneck blocks, Table II workload) at a square input
+/// size.
 pub fn resnet152(input: usize) -> Graph {
     resnet(152, input)
 }

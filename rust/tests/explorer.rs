@@ -1,0 +1,196 @@
+//! Explorer integration tests.
+//!
+//! The centrepiece reproduces the paper's buffer-size ablation (Fig. 16
+//! discussion, Table II): with a generous SRAM budget the frame-reuse
+//! endpoint is feasible and the cut-point optimizer matches or beats both
+//! fixed schemes; as the budget shrinks past the frame endpoint's
+//! requirement the optimizer crosses over to row-heavier mixed policies
+//! while still beating fixed-row; below the minimum-buffer point nothing
+//! fits and the explorer says so. The recommended configuration then
+//! round-trips through `Compiler::pack` into a loadable `Program`.
+
+use std::sync::Arc;
+
+use shortcutfusion::compiler::{
+    FixedReuseStrategy, MinBufferStrategy, ReuseStrategy, Session,
+};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::explorer::SearchSpace;
+use shortcutfusion::isa::ReuseMode;
+use shortcutfusion::program::Program;
+
+/// The ablation isolates the `sram_budget` axis: BRAM is made a
+/// non-constraint so eq-(10) feasibility is decided by the byte budget
+/// alone.
+fn ablation_base() -> AccelConfig {
+    let mut cfg = AccelConfig::kcu1500_int8();
+    cfg.bram18k_total = 1_000_000;
+    cfg
+}
+
+const MODEL: &str = "resnet18";
+const INPUT: usize = 224;
+
+#[test]
+fn buffer_budget_ablation_reproduces_the_crossover() {
+    let base = ablation_base();
+    let session = Session::new();
+
+    // Budget-independent costs of the fixed endpoints and the
+    // minimum-buffer point (the budget only gates feasibility).
+    let row: Arc<dyn ReuseStrategy> = Arc::new(FixedReuseStrategy(ReuseMode::Row));
+    let frame: Arc<dyn ReuseStrategy> = Arc::new(FixedReuseStrategy(ReuseMode::Frame));
+    let minb: Arc<dyn ReuseStrategy> = Arc::new(MinBufferStrategy);
+    let r = session.compile_with(MODEL, INPUT, &base, &row).unwrap();
+    let f = session.compile_with(MODEL, INPUT, &base, &frame).unwrap();
+    let min_need = session
+        .compile_with(MODEL, INPUT, &base, &minb)
+        .unwrap()
+        .evaluation
+        .sram
+        .total;
+    let row_need = r.evaluation.sram.total;
+    let frame_need = f.evaluation.sram.total;
+
+    // Frame reuse buffers whole output frames (eq. 4); row reuse only
+    // needs the largest whole-layer weight preload (eq. 1) plus the
+    // six-row circular buffer — at 224×224 the frame side costs far more
+    // SRAM but keeps the shortcut feature maps on chip.
+    assert!(frame_need > row_need, "frame {frame_need} !> row {row_need}");
+    assert!(
+        f.evaluation.dram.total < r.evaluation.dram.total,
+        "frame must trade SRAM for DRAM traffic"
+    );
+    assert!(min_need <= row_need);
+
+    // Three budgets around the two thresholds.
+    let generous = frame_need + frame_need / 4;
+    let mid = (frame_need + row_need) / 2;
+    let tiny = min_need / 2;
+
+    let exploration = SearchSpace::new(base)
+        .model(MODEL)
+        .input_sizes(&[INPUT])
+        .sram_budgets(&[generous, mid, tiny])
+        .ablation_strategies() // cutpoint, fixed-row, fixed-frame
+        .explore(&session, 4)
+        .unwrap();
+    assert_eq!(exploration.points.len(), 9);
+    assert!(exploration.failures.is_empty());
+    let get = |strategy: &str, budget: usize| {
+        exploration
+            .points
+            .iter()
+            .find(|p| p.strategy_name() == strategy && p.cfg.sram_budget == budget)
+            .unwrap()
+    };
+
+    // Generous budget: both endpoints fit, and they are corners of the
+    // optimizer's cut space, so the cut-point policy matches or beats
+    // both on latency.
+    let cut_gen = get("cutpoint", generous);
+    assert!(get("fixed-row", generous).feasible);
+    assert!(get("fixed-frame", generous).feasible);
+    assert!(cut_gen.feasible);
+    assert!(cut_gen.latency_ms <= get("fixed-row", generous).latency_ms * 1.0001);
+    assert!(cut_gen.latency_ms <= get("fixed-frame", generous).latency_ms * 1.0001);
+
+    // Mid budget — the crossover: the frame endpoint no longer fits, the
+    // row endpoint still does, and the optimizer lands on a mixed policy
+    // that fits the budget and still beats fixed-row.
+    let cut_mid = get("cutpoint", mid);
+    assert!(!get("fixed-frame", mid).feasible, "mid budget must exclude all-frame");
+    assert!(get("fixed-row", mid).feasible);
+    assert!(cut_mid.feasible);
+    assert!(cut_mid.sram_bytes <= mid);
+    assert!(cut_mid.latency_ms <= get("fixed-row", mid).latency_ms * 1.0001);
+    // all-frame is the only zero-row-group policy in the cut space, and
+    // it no longer fits — the winner must have crossed over to row reuse
+    // for at least one block
+    assert!(cut_mid.row_groups > 0, "crossover must introduce row-reuse groups");
+    // shrinking the budget shrinks the feasible cut space, so the
+    // optimized latency can only degrade
+    assert!(cut_gen.latency_ms <= cut_mid.latency_ms * 1.0001);
+
+    // Tiny budget: below the minimum-buffer point even the cut-point
+    // search has no feasible policy; the sweep reports that honestly
+    // instead of silently recommending an unbuildable design.
+    for p in exploration.points.iter().filter(|p| p.cfg.sram_budget == tiny) {
+        assert!(!p.feasible, "{} must be infeasible at {} B", p.strategy_name(), tiny);
+    }
+
+    // The Pareto front never contains a dominated or infeasible point.
+    let front = exploration.pareto_front(MODEL);
+    assert!(!front.is_empty());
+    for p in &front.points {
+        assert!(p.feasible);
+        assert!(!front
+            .points
+            .iter()
+            .any(|q| shortcutfusion::explorer::dominates(q, p)));
+    }
+
+    // The recommendation is the generous-budget cut-point winner (ties
+    // break toward the optimizer), and it round-trips through
+    // Compiler::pack into a loadable, self-contained Program.
+    let rec = exploration.recommend(MODEL).expect("a feasible point exists");
+    assert_eq!(rec.strategy_name(), "cutpoint");
+    assert_eq!(rec.cfg.sram_budget, generous);
+    let program = rec.pack().unwrap();
+    assert_eq!(program.model(), "ResNet18");
+    assert_eq!(program.cfg(), &rec.cfg);
+    let loaded = Program::from_bytes(&program.to_bytes()).unwrap();
+    assert_eq!(loaded.model(), program.model());
+    assert_eq!(loaded.stream().words, program.stream().words);
+    let policy = loaded.policy();
+    assert_eq!(
+        policy.iter().filter(|m| **m == ReuseMode::Row).count(),
+        rec.row_groups,
+        "packed policy must match the explored point"
+    );
+    assert_eq!(policy.len(), rec.row_groups + rec.frame_groups);
+}
+
+#[test]
+fn parallel_mixed_strategy_sweep_keeps_stats_and_results_consistent() {
+    let session = Session::new();
+    let space = SearchSpace::new(AccelConfig::kcu1500_int8())
+        .model(MODEL)
+        .input_sizes(&[64])
+        .sram_budgets(&[2_000_000, 8_000_000])
+        .ablation_strategies();
+
+    let first = space.explore(&session, 4).unwrap();
+    let n = first.points.len();
+    assert_eq!(n, 6);
+    let s1 = session.stats();
+    assert_eq!(s1.report_misses, n, "every point compiles exactly once");
+    assert_eq!(s1.report_hits, 0);
+    assert_eq!(s1.analysis_misses, 1, "one shared fusion analysis");
+    assert_eq!(s1.analysis_hits, n - 1);
+
+    // Re-exploring the same space on the warm session is pure cache.
+    let second = space.explore(&session, 4).unwrap();
+    let s2 = session.stats();
+    assert_eq!(s2.report_misses, n);
+    assert_eq!(s2.report_hits, n);
+    assert_eq!(s2.analysis_hits, s1.analysis_hits, "hits only count real compiles");
+    for (a, b) in first.points.iter().zip(&second.points) {
+        assert_eq!(a.strategy_name(), b.strategy_name());
+        assert_eq!(a.cfg.name, b.cfg.name);
+        assert_eq!(a.latency_ms, b.latency_ms, "cache hits must be bit-identical");
+        assert_eq!(a.dram_bytes, b.dram_bytes);
+        assert_eq!(a.sram_bytes, b.sram_bytes);
+    }
+
+    // Mixed strategies at the same (model, input, config) stayed
+    // distinct points: same budget, different policies/costs recorded.
+    let at_big: Vec<_> =
+        first.points.iter().filter(|p| p.cfg.sram_budget == 8_000_000).collect();
+    assert_eq!(at_big.len(), 3);
+    let row = at_big.iter().find(|p| p.strategy_name() == "fixed-row").unwrap();
+    let frame = at_big.iter().find(|p| p.strategy_name() == "fixed-frame").unwrap();
+    assert_eq!(row.frame_groups, 0);
+    assert_eq!(frame.row_groups, 0);
+    assert_ne!(row.dram_bytes, frame.dram_bytes);
+}

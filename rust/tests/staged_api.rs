@@ -142,7 +142,10 @@ fn baseline_strategies_flow_through_the_same_pipeline() {
 fn unknown_models_and_infeasible_configs_are_typed() {
     let session = Session::new();
     match session.compile("alexnet", 224, &AccelConfig::kcu1500_int8()) {
-        Err(CompileError::UnknownModel(m)) => assert_eq!(m, "alexnet"),
+        Err(CompileError::UnknownModel { name, valid }) => {
+            assert_eq!(name, "alexnet");
+            assert!(valid.contains(&"resnet18"));
+        }
         other => panic!("expected UnknownModel, got {:?}", other.map(|r| r.model.clone())),
     }
     let mut tiny = AccelConfig::kcu1500_int8();
