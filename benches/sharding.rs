@@ -1,0 +1,63 @@
+//! Multi-FPGA sharding sweep: device count × link bandwidth over zoo
+//! models (small inputs keep the cut-point searches fast).
+//!
+//! For every (model, K, link GB/s) cell the partitioner runs its full
+//! split search; the table reports the winning plan's single-image
+//! latency, pipeline interval/throughput, total SRAM, how many splits
+//! were evaluated, and the wall-clock of the search itself (warm rows
+//! reuse nothing across cells — each plan() call is cold).
+//!
+//! Run: `cargo bench --bench sharding`
+
+use std::time::Instant;
+
+use shortcutfusion::bench::Table;
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::shard::{boundaries, LinkModel, Partitioner};
+use shortcutfusion::zoo;
+
+fn main() {
+    let cfg = AccelConfig::kcu1500_int8();
+    let models: &[(&str, usize)] = &[("tinynet", 16), ("resnet18", 64), ("vgg16-conv", 64)];
+    let device_axis = [1usize, 2, 3];
+    let gbps_axis = [4.0f64, 16.0, 64.0];
+
+    let mut t = Table::new(
+        "pipeline sharding: K x link bandwidth (KCU1500-int8 per device)",
+        &[
+            "model", "K", "GB/s", "latency ms", "interval ms", "fps", "SRAM MB", "splits",
+            "search ms",
+        ],
+    );
+    for &(name, input) in models {
+        let graph = zoo::by_name(name, input).expect("zoo model");
+        let cuts = boundaries(&graph).expect("valid graph").len();
+        for &k in &device_axis {
+            if cuts + 1 < k {
+                println!("skip {name} at K={k}: only {cuts} cut-point boundaries");
+                continue;
+            }
+            for &gbps in &gbps_axis {
+                let link = LinkModel::new(gbps, 5.0).expect("link");
+                let partitioner = Partitioner::homogeneous(cfg.clone(), k)
+                    .expect("partitioner")
+                    .with_link(link);
+                let t0 = Instant::now();
+                let plan = partitioner.plan(&graph).expect("plan");
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                t.row(&[
+                    name.to_string(),
+                    k.to_string(),
+                    format!("{gbps:.0}"),
+                    format!("{:.3}", plan.latency_ms),
+                    format!("{:.3}", plan.interval_ms),
+                    format!("{:.1}", plan.throughput_fps()),
+                    format!("{:.3}", plan.total_sram_bytes() as f64 / 1e6),
+                    plan.splits_evaluated.to_string(),
+                    format!("{wall_ms:.1}"),
+                ]);
+            }
+        }
+    }
+    t.print();
+}

@@ -8,12 +8,16 @@
 //!                        [--params FILE | --random-params] --out FILE
 //! shortcutfusion run     FILE [--backend B] [--seed N]
 //! shortcutfusion serve-bench FILE [--backend B] [--requests N] [--workers N]
-//!                        [--batch N] [--queue N]
+//!                        [--batch N] [--queue N] [--json-out FILE]
 //! shortcutfusion explore <model> [...] [--sram-budgets N,N] [--mac RxC,...]
 //!                        [--dram-gbps X,...] [--strategies S,...] [--input N]
 //!                        [--max-bram N] [--max-dram-gbps X] [--max-dsp N]
 //!                        [--threads N] [--format text|json|csv] [--out FILE]
-//!                        [--pack-best FILE]
+//!                        [--json-out FILE] [--pack-best FILE]
+//! shortcutfusion shard   <model> [--input N] [--config FILE] [--devices K]
+//!                        [--link-gbps X] [--link-latency-us X] [--strategy S]
+//!                        [--objective latency|throughput] [--format text|json]
+//!                        [--json-out FILE] [--pack [PREFIX]] [--random-params]
 //! shortcutfusion sweep   <model> [--input N]
 //! shortcutfusion minbuf  [<model> ...]
 //! shortcutfusion export  <model> [--input N] --out FILE
@@ -28,12 +32,14 @@ use crate::bench::Table;
 use crate::compiler::{strategy, CompileError, Compiler, Session};
 use crate::config::AccelConfig;
 use crate::engine::{
-    backend_by_name, EngineConfig, ExecutionBackend, InferenceEngine, BACKEND_NAMES,
+    backend_by_name, EngineConfig, EngineStats, ExecutionBackend, InferenceEngine,
+    BACKEND_NAMES,
 };
 use crate::explorer::{ExplorePoint, Exploration, SearchSpace};
 use crate::funcsim::{Params, Tensor};
 use crate::optimizer::Optimizer;
 use crate::program::Program;
+use crate::shard::{LinkModel, Objective, Partitioner, ShardPlan};
 use crate::serialize::{load_frozen, save_frozen};
 use crate::testutil::Rng;
 use crate::zoo;
@@ -55,17 +61,28 @@ COMMANDS:
     run FILE [--backend B] [--seed N]
                                  execute a packed program once
     serve-bench FILE [--backend B] [--requests N] [--workers N] [--batch N] [--queue N]
+                [--json-out FILE]
                                  serve a packed program through the inference
-                                 engine and print the serving stats
+                                 engine and print the serving stats (--json-out
+                                 additionally writes them as machine-readable JSON)
     explore <model> [<model> ...] [--config FILE] [--input N]
             [--sram-budgets N,N,..] [--mac RxC,..] [--dram-gbps X,..]
             [--strategies S,..] [--max-bram N] [--max-dram-gbps X] [--max-dsp N]
-            [--threads N] [--format text|json|csv] [--out FILE] [--pack-best FILE]
+            [--threads N] [--format text|json|csv] [--out FILE] [--json-out FILE]
+            [--pack-best FILE]
                                  design-space sweep: grid x strategies under
                                  resource constraints, Pareto front + best config
                                  (defaults: budgets base/4,base/2,base; strategies
                                  cutpoint,fixed-row,fixed-frame; --pack-best packs
-                                 the first listed model's winner)
+                                 the first listed model's winner; --json-out writes
+                                 the JSON rendering regardless of --format)
+    shard <model> [--input N] [--config FILE] [--devices K] [--link-gbps X]
+          [--link-latency-us X] [--strategy S] [--objective latency|throughput]
+          [--format text|json] [--json-out FILE] [--pack [PREFIX]] [--random-params]
+                                 partition the model across K pipeline devices at
+                                 cut-point boundaries, print the best split plan,
+                                 and optionally pack one program per shard
+                                 (PREFIX.shard<i>.sfp, default PREFIX = model name)
     sweep <model> [--input N] [--csv FILE]
                                  cut-point sweep (Fig 16/17 series)
     minbuf [<model> ...]         minimum buffer search (Table III)
@@ -105,6 +122,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "run" => cmd_run(&rest),
         "serve-bench" => cmd_serve_bench(&rest),
         "explore" => cmd_explore(&rest),
+        "shard" => cmd_shard(&rest),
         "sweep" => cmd_sweep(&rest),
         "minbuf" => cmd_minbuf(&rest),
         "export" => cmd_export(&rest),
@@ -359,7 +377,188 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
         format!("{:?}", stats.per_worker),
     ]);
     t.print();
+    if let Some(path) = flag_value(args, "--json-out") {
+        // machine-readable stats for CI bench-trajectory files
+        write_json(&path, &engine_stats_json(&stats))?;
+    }
     Ok(())
+}
+
+/// Parse a float flag with a default.
+fn parse_float(args: &[String], flag: &str, default: f64) -> Result<f64> {
+    match flag_value(args, flag) {
+        None => Ok(default),
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| CompileError::config(format!("bad {flag} {v:?} (need a number)"))),
+    }
+}
+
+/// A flag that may appear bare or with a value: `None` when absent,
+/// `Some(None)` when bare, `Some(Some(v))` when a non-flag value follows.
+fn flag_optional_value(args: &[String], flag: &str) -> Option<Option<String>> {
+    args.iter()
+        .position(|a| a == flag)
+        .map(|i| args.get(i + 1).filter(|v| !v.starts_with("--")).cloned())
+}
+
+fn engine_stats_json(stats: &EngineStats) -> crate::serialize::Json {
+    use crate::serialize::Json;
+    Json::obj(vec![
+        ("backend", Json::str(stats.backend)),
+        ("submitted", Json::num(stats.submitted as f64)),
+        ("completed", Json::num(stats.completed as f64)),
+        ("failed", Json::num(stats.failed as f64)),
+        ("rejected", Json::num(stats.rejected as f64)),
+        ("queue_depth", Json::num(stats.queue_depth as f64)),
+        ("in_flight", Json::num(stats.in_flight as f64)),
+        ("peak_in_flight", Json::num(stats.peak_in_flight as f64)),
+        (
+            "per_worker",
+            Json::Arr(stats.per_worker.iter().map(|&n| Json::num(n as f64)).collect()),
+        ),
+        ("batches", Json::num(stats.batches as f64)),
+        ("max_batch_seen", Json::num(stats.max_batch_seen as f64)),
+        ("elapsed_s", Json::num(stats.elapsed_s)),
+        ("throughput_rps", Json::num(stats.throughput_rps)),
+        ("p50_ms", Json::num(stats.p50_ms)),
+        ("p95_ms", Json::num(stats.p95_ms)),
+        ("mean_wait_ms", Json::num(stats.mean_wait_ms)),
+    ])
+}
+
+/// Write a JSON document to `path` with a trailing newline.
+fn write_json(path: &str, doc: &crate::serialize::Json) -> Result<()> {
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    std::fs::write(path, text).map_err(|e| CompileError::io(path, e))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_shard(args: &[String]) -> Result<()> {
+    let (graph, cfg) = parse_model(args)?;
+    let devices = parse_count(args, "--devices", 2)?;
+    let link = LinkModel::new(
+        parse_float(args, "--link-gbps", LinkModel::pcie_gen3().gbps)?,
+        parse_float(args, "--link-latency-us", LinkModel::pcie_gen3().latency_us)?,
+    )?;
+    let objective = match flag_value(args, "--objective").as_deref() {
+        None | Some("latency") => Objective::Latency,
+        Some("throughput") => Objective::Throughput,
+        Some(other) => {
+            return Err(CompileError::config(format!(
+                "unknown --objective {other:?} — one of latency, throughput"
+            )))
+        }
+    };
+    let format = flag_value(args, "--format").unwrap_or_else(|| "text".into());
+    if !matches!(format.as_str(), "text" | "json") {
+        return Err(CompileError::config(format!(
+            "unknown --format {format:?} — one of text, json"
+        )));
+    }
+
+    let plan = Partitioner::homogeneous(cfg, devices)?
+        .with_link(link)
+        .with_strategy(parse_strategy(args)?.into())
+        .with_objective(objective)
+        .plan(&graph)?;
+
+    match format.as_str() {
+        "json" => {
+            let mut text = plan.to_json().to_string_pretty();
+            text.push('\n');
+            print!("{text}");
+        }
+        _ => print!("{}", render_shard_text(&plan)),
+    }
+    if let Some(path) = flag_value(args, "--json-out") {
+        write_json(&path, &plan.to_json())?;
+    }
+
+    if let Some(prefix) = flag_optional_value(args, "--pack") {
+        // bare --pack defaults to the model name as the file prefix
+        let prefix = prefix
+            .or_else(|| args.first().filter(|a| !a.starts_with("--")).cloned())
+            .unwrap_or_else(|| "shardplan".into());
+        let params = args
+            .iter()
+            .any(|a| a == "--random-params")
+            .then(|| Params::random(&crate::analyzer::analyze(&graph), 7));
+        let programs = plan.pack_with_params(params.as_ref())?;
+        for program in &programs {
+            let index = program.boundary().map(|b| b.index).unwrap_or(0);
+            let path = format!("{prefix}.shard{index}.sfp");
+            program.save(std::path::Path::new(&path))?;
+            println!(
+                "packed {} [{}] for {} -> {path}",
+                program.model(),
+                program.strategy(),
+                program.cfg().name
+            );
+        }
+    }
+    Ok(())
+}
+
+fn render_shard_text(plan: &ShardPlan) -> String {
+    let mut t = Table::new(
+        &format!(
+            "shard plan: {} across {} device(s) — objective {}, {} boundaries, {} splits",
+            plan.model,
+            plan.devices(),
+            plan.objective.name(),
+            plan.boundaries,
+            plan.splits_evaluated
+        ),
+        &[
+            "shard", "blocks", "groups", "latency ms", "SRAM MB", "DRAM MB", "feasible",
+            "egress", "link ms",
+        ],
+    );
+    for s in &plan.shards {
+        let egress = s
+            .egress
+            .as_ref()
+            .map(|e| format!("{} {}", e.name, e.shape))
+            .unwrap_or_else(|| "(model output)".into());
+        let link = plan
+            .transfers
+            .get(s.index)
+            .map(|tr| format!("{:.4}", tr.transfer_ms))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            s.index.to_string(),
+            format!("{}..{}", s.first_block, s.last_block),
+            s.groups.to_string(),
+            format!("{:.3}", s.latency_ms),
+            format!("{:.3}", s.sram_bytes as f64 / 1e6),
+            format!("{:.2}", s.dram_bytes as f64 / 1e6),
+            s.feasible.to_string(),
+            egress,
+            link,
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "single-image latency {:.3} ms; pipeline interval {:.3} ms ({:.1} fps); \
+         total SRAM {:.3} MB\n",
+        plan.latency_ms,
+        plan.interval_ms,
+        plan.throughput_fps(),
+        plan.total_sram_bytes() as f64 / 1e6
+    ));
+    out.push_str(&format!(
+        "link: {} GB/s, {} us per transfer; strategy {}\n",
+        plan.link.gbps,
+        plan.link.latency_us,
+        plan.strategy_name()
+    ));
+    if !plan.feasible {
+        out.push_str("WARNING: at least one shard misses its device's SRAM budget\n");
+    }
+    out
 }
 
 /// Parse a comma-separated flag value with `parse` applied per element.
@@ -496,6 +695,13 @@ fn cmd_explore(args: &[String]) -> Result<()> {
             println!("wrote {path}");
         }
         None => print!("{rendered}"),
+    }
+    if let Some(path) = flag_value(args, "--json-out") {
+        // always the JSON rendering, independent of --format/--out, so
+        // CI can emit a human table *and* a machine-readable file
+        let text = render_explore_json(&exploration, &pareto_keys, &best_keys);
+        std::fs::write(&path, text).map_err(|e| CompileError::io(&path, e))?;
+        println!("wrote {path}");
     }
 
     if let Some(out) = flag_value(args, "--pack-best") {
@@ -1029,6 +1235,108 @@ mod tests {
             run(vec!["explore".into(), "tinynet".into(), "--input".into(), "224".into()]),
             Err(CompileError::Config(_))
         ));
+    }
+
+    #[test]
+    fn shard_plans_packs_and_writes_json() {
+        let dir = std::env::temp_dir().join("sf_cli_shard_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("plan.json");
+        let prefix = dir.join("tiny");
+        run(vec![
+            "shard".into(),
+            "tinynet".into(),
+            "--devices".into(),
+            "2".into(),
+            "--json-out".into(),
+            json.to_string_lossy().into_owned(),
+            "--pack".into(),
+            prefix.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        let doc = crate::serialize::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(doc.get("devices").and_then(|d| d.as_usize()), Some(2));
+        assert_eq!(
+            doc.get("shards").and_then(|s| s.as_arr()).map(|s| s.len()),
+            Some(2)
+        );
+        for i in 0..2 {
+            let p = Program::load(&dir.join(format!("tiny.shard{i}.sfp"))).unwrap();
+            let b = p.boundary().expect("sharded artifact carries its boundary");
+            assert_eq!((b.index, b.count), (i, 2));
+        }
+        // json format on stdout + throughput objective also run
+        run(vec![
+            "shard".into(),
+            "tinynet".into(),
+            "--devices".into(),
+            "2".into(),
+            "--format".into(),
+            "json".into(),
+            "--objective".into(),
+            "throughput".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn shard_rejects_bad_flags() {
+        assert!(matches!(
+            run(vec!["shard".into(), "tinynet".into(), "--objective".into(), "power".into()]),
+            Err(CompileError::Config(_))
+        ));
+        assert!(matches!(
+            run(vec!["shard".into(), "tinynet".into(), "--format".into(), "csv".into()]),
+            Err(CompileError::Config(_))
+        ));
+        assert!(matches!(
+            run(vec!["shard".into(), "tinynet".into(), "--link-gbps".into(), "0".into()]),
+            Err(CompileError::Config(_))
+        ));
+        // more devices than boundaries is a typed error, not a panic
+        assert!(matches!(
+            run(vec!["shard".into(), "tinynet".into(), "--devices".into(), "60".into()]),
+            Err(CompileError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn serve_bench_and_explore_write_json_out() {
+        let dir = std::env::temp_dir().join("sf_cli_jsonout_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let program = dir.join("tiny.sfp");
+        run(vec![
+            "pack".into(),
+            "tinynet".into(),
+            "--out".into(),
+            program.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        let stats = dir.join("stats.json");
+        run(vec![
+            "serve-bench".into(),
+            program.to_string_lossy().into_owned(),
+            "--requests".into(),
+            "4".into(),
+            "--json-out".into(),
+            stats.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        let doc = crate::serialize::parse(&std::fs::read_to_string(&stats).unwrap()).unwrap();
+        assert_eq!(doc.get("completed").and_then(|c| c.as_usize()), Some(4));
+        assert!(doc.get("p95_ms").and_then(|p| p.as_f64()).is_some());
+
+        // explore: text on stdout AND machine-readable file
+        let front = dir.join("front.json");
+        run(vec![
+            "explore".into(),
+            "tinynet".into(),
+            "--json-out".into(),
+            front.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        let doc = crate::serialize::parse(&std::fs::read_to_string(&front).unwrap()).unwrap();
+        assert_eq!(doc.get("points").and_then(|p| p.as_arr()).map(|p| p.len()), Some(9));
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! | [`VirtualAccelBackend`] | timing + traffic replay of the *packed* instructions | `model_latency_ms`, `dram_bytes` |
 //! | [`PjrtBackend`] | AOT HLO artifacts via PJRT (needs the `pjrt` feature) | `output` |
 //!
+//! [`ShardedBackend`] composes any of them over a multi-device
+//! [`crate::shard::ShardPlan`]: it chains the K shard programs with
+//! staged hand-off buffers and link-model transfer costs, and is itself
+//! an `ExecutionBackend`, so the engine serves sharded models
+//! transparently.
+//!
 //! ```no_run
 //! use shortcutfusion::compiler::Compiler;
 //! use shortcutfusion::config::AccelConfig;
@@ -40,11 +46,13 @@
 
 mod backends;
 mod serving;
+mod sharded;
 
 pub use backends::{
     backend_by_name, PjrtBackend, ReferenceBackend, VirtualAccelBackend, BACKEND_NAMES,
 };
 pub use serving::{Completion, EngineConfig, EngineStats, InferenceEngine, PendingRequest};
+pub use sharded::ShardedBackend;
 
 use crate::funcsim::Tensor;
 use crate::program::Program;

@@ -1,0 +1,245 @@
+//! Chained execution of a sharded program pipeline.
+
+use std::sync::Arc;
+
+use super::{ExecutionBackend, RunResult};
+use crate::compiler::CompileError;
+use crate::funcsim::Tensor;
+use crate::graph::Shape;
+use crate::program::Program;
+use crate::shard::LinkModel;
+use crate::Result;
+
+/// Executes a [`crate::shard::ShardPlan`]'s programs as one pipeline:
+/// every request runs through all K shards in order, with a staged
+/// hand-off buffer between consecutive stages that enforces the packed
+/// ingress/egress tensor descriptors before the tensor crosses the
+/// (modeled) inter-device link.
+///
+/// The chain is itself an [`ExecutionBackend`], so an
+/// [`crate::engine::InferenceEngine`] serves a sharded model
+/// transparently — construct the engine with the **first shard's
+/// program** (see [`ShardedBackend::front`]) and this backend:
+///
+/// * through [`super::ReferenceBackend`], each stage's output tensor is
+///   carried to the next stage — the chain is bit-identical to running
+///   the unsharded model;
+/// * through [`super::VirtualAccelBackend`], per-stage model latencies
+///   and DRAM bytes are summed and each hand-off adds the link-model
+///   transfer time, reproducing the partitioner's analytical pipeline
+///   cost exactly.
+pub struct ShardedBackend {
+    stages: Vec<Arc<Program>>,
+    backend: Arc<dyn ExecutionBackend>,
+    link: LinkModel,
+}
+
+impl ShardedBackend {
+    /// Build the chain, validating it end to end: programs must be in
+    /// pipeline order, any packed [`crate::program::ShardBoundary`]
+    /// records must match their position and total, and each stage's
+    /// output shape must equal the next stage's input feed.
+    pub fn new(
+        stages: Vec<Arc<Program>>,
+        backend: Arc<dyn ExecutionBackend>,
+        link: LinkModel,
+    ) -> Result<ShardedBackend> {
+        if stages.is_empty() {
+            return Err(CompileError::config("sharded backend needs at least one shard"));
+        }
+        for (i, p) in stages.iter().enumerate() {
+            if let Some(b) = p.boundary() {
+                if b.count != stages.len() || b.index != i {
+                    return Err(CompileError::artifact(format!(
+                        "{}: packed as shard {}/{} but chained at position {}/{}",
+                        p.model(),
+                        b.index + 1,
+                        b.count,
+                        i + 1,
+                        stages.len()
+                    )));
+                }
+            }
+        }
+        for pair in stages.windows(2) {
+            let out = chain_output_shape(&pair[0]);
+            let want = pair[1].input_shape();
+            if out != want {
+                return Err(CompileError::artifact(format!(
+                    "hand-off mismatch: {} emits {} but {} expects {}",
+                    pair[0].model(),
+                    out,
+                    pair[1].model(),
+                    want
+                )));
+            }
+        }
+        Ok(ShardedBackend { stages, backend, link })
+    }
+
+    /// The first shard's program — what an
+    /// [`crate::engine::InferenceEngine`] serving this chain must be
+    /// constructed with.
+    pub fn front(&self) -> &Arc<Program> {
+        &self.stages[0]
+    }
+
+    /// Number of pipeline stages.
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Hand-off size after stage `i`, in bytes at the producing device's
+    /// feature-map precision.
+    fn handoff_bytes(&self, i: usize) -> u64 {
+        let p = &self.stages[i];
+        chain_output_shape(p).bytes(p.cfg().qa) as u64
+    }
+}
+
+/// The tensor a program forwards downstream: its packed egress
+/// descriptor when sharded, otherwise the final node's output.
+fn chain_output_shape(p: &Program) -> Shape {
+    p.boundary()
+        .and_then(|b| b.egress.as_ref())
+        .map(|t| t.shape)
+        .unwrap_or_else(|| {
+            p.grouped().graph.nodes.last().expect("graphs are non-empty").out_shape
+        })
+}
+
+impl ExecutionBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn run(&self, program: &Program, input: &Tensor) -> Result<RunResult> {
+        let front = self.front();
+        // the engine hands back the program it serves — accept exactly
+        // the chain's own first shard (pointer fast path, then content)
+        if !std::ptr::eq(program, front.as_ref())
+            && (program.model() != front.model()
+                || program.stream().words != front.stream().words)
+        {
+            return Err(CompileError::Exec(format!(
+                "sharded backend serves its own chain (first shard {}); got program {}",
+                front.model(),
+                program.model()
+            )));
+        }
+
+        let mut result = self.backend.run(front, input)?;
+        let mut latency = result.model_latency_ms;
+        let mut dram = result.dram_bytes;
+        for i in 1..self.stages.len() {
+            // inter-device transfer of the hand-off tensor
+            let transfer = self.link.transfer_ms(self.handoff_bytes(i - 1));
+            latency = latency.map(|ms| ms + transfer);
+
+            // staged hand-off buffer: the carried tensor must match the
+            // next stage's ingress descriptor; cost-only backends carry
+            // no values, so the buffer stages a zero tensor of the
+            // declared shape instead
+            let stage = &self.stages[i];
+            let carried = match result.output.take() {
+                Some(t) => {
+                    if t.shape != stage.input_shape() {
+                        return Err(CompileError::Exec(format!(
+                            "hand-off into {} carries {} but the ingress descriptor \
+                             declares {}",
+                            stage.model(),
+                            t.shape,
+                            stage.input_shape()
+                        )));
+                    }
+                    t
+                }
+                None => Tensor::zeros(stage.input_shape()),
+            };
+            result = self.backend.run(stage, &carried)?;
+            latency = match (latency, result.model_latency_ms) {
+                (Some(a), Some(b)) => Some(a + b),
+                _ => None,
+            };
+            dram = match (dram, result.dram_bytes) {
+                (Some(a), Some(b)) => Some(a + b),
+                _ => None,
+            };
+        }
+        Ok(RunResult {
+            backend: self.name(),
+            output: result.output,
+            model_latency_ms: latency,
+            dram_bytes: dram,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AccelConfig;
+    use crate::engine::VirtualAccelBackend;
+    use crate::shard::Partitioner;
+    use crate::zoo;
+
+    fn chain(devices: usize) -> ShardedBackend {
+        let plan = Partitioner::homogeneous(AccelConfig::kcu1500_int8(), devices)
+            .unwrap()
+            .plan(&zoo::tinynet())
+            .unwrap();
+        let programs = plan.pack().unwrap().into_iter().map(Arc::new).collect();
+        ShardedBackend::new(programs, Arc::new(VirtualAccelBackend), LinkModel::pcie_gen3())
+            .unwrap()
+    }
+
+    #[test]
+    fn virtual_chain_sums_stage_costs() {
+        let two = chain(2);
+        let input = Tensor::zeros(two.front().input_shape());
+        let front = two.front().clone();
+        let r = two.run(&front, &input).unwrap();
+        assert_eq!(r.backend, "sharded");
+        let lat2 = r.model_latency_ms.unwrap();
+        let dram2 = r.dram_bytes.unwrap();
+
+        let one = chain(1);
+        let r1 = one.run(&one.front().clone(), &Tensor::zeros(one.front().input_shape()))
+            .unwrap();
+        // two devices pay at least one link transfer on top of compute
+        assert!(lat2 > 0.0 && dram2 > 0);
+        assert!(r1.model_latency_ms.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn chain_rejects_foreign_programs_and_bad_order() {
+        let two = chain(2);
+        let other = crate::testutil::pack_program(&zoo::tinynet(), None);
+        let input = Tensor::zeros(two.front().input_shape());
+        assert!(matches!(
+            two.run(&other, &input),
+            Err(CompileError::Exec(_))
+        ));
+
+        // reversing the chain breaks both position and shape validation
+        let plan = Partitioner::homogeneous(AccelConfig::kcu1500_int8(), 2)
+            .unwrap()
+            .plan(&zoo::tinynet())
+            .unwrap();
+        let mut programs: Vec<Arc<Program>> =
+            plan.pack().unwrap().into_iter().map(Arc::new).collect();
+        programs.reverse();
+        assert!(ShardedBackend::new(
+            programs,
+            Arc::new(VirtualAccelBackend),
+            LinkModel::pcie_gen3()
+        )
+        .is_err());
+        assert!(ShardedBackend::new(
+            Vec::new(),
+            Arc::new(VirtualAccelBackend),
+            LinkModel::pcie_gen3()
+        )
+        .is_err());
+    }
+}

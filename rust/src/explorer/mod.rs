@@ -49,7 +49,7 @@
 mod pareto;
 mod space;
 
-pub use pareto::{dominates, ParetoFront};
+pub use pareto::{dominates, dominates_objectives, pareto_indices, ParetoFront};
 pub use space::{
     Constraints, DesignPoint, Enumeration, Pruned, SearchSpace, BRAM18K_BYTES,
 };

@@ -10,13 +10,58 @@ use super::ExplorePoint;
 /// `true` when `a` dominates `b`: no worse on latency, DRAM traffic and
 /// SRAM footprint, and strictly better on at least one of them.
 pub fn dominates(a: &ExplorePoint, b: &ExplorePoint) -> bool {
-    let no_worse = a.latency_ms <= b.latency_ms
-        && a.dram_bytes <= b.dram_bytes
-        && a.sram_bytes <= b.sram_bytes;
-    let strictly_better = a.latency_ms < b.latency_ms
-        || a.dram_bytes < b.dram_bytes
-        || a.sram_bytes < b.sram_bytes;
-    no_worse && strictly_better
+    dominates_objectives(&objectives_of(a), &objectives_of(b))
+}
+
+/// Generic dominance over equal-length objective vectors, every axis
+/// minimized: `a` dominates `b` when it is no worse everywhere and
+/// strictly better somewhere. Exactly-equal vectors never dominate each
+/// other, and non-finite costs never dominate anything.
+pub fn dominates_objectives(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len(), "objective vectors must align");
+    let mut strictly_better = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// Indices of the non-dominated subset of `objectives` (all axes
+/// minimized), in input order.
+///
+/// Survival is **order-independent**: a vector survives iff nothing in
+/// the *whole* input dominates it, so permuting the candidates can never
+/// change which objective vectors make the front. Exactly-equal vectors
+/// (duplicates, or distinct designs tied on every axis) are reported
+/// once, keeping the first occurrence — with the explorer's
+/// deterministic enumeration order that deterministically picks the
+/// representative, instead of letting incremental-insertion order decide
+/// survival.
+pub fn pareto_indices(objectives: &[Vec<f64>]) -> Vec<usize> {
+    let mut keep: Vec<usize> = Vec::new();
+    'candidates: for (i, obj) in objectives.iter().enumerate() {
+        if objectives.iter().any(|other| dominates_objectives(other, obj)) {
+            continue;
+        }
+        for &k in &keep {
+            if objectives[k] == *obj {
+                continue 'candidates; // keep-first dedup of exact ties
+            }
+        }
+        keep.push(i);
+    }
+    keep
+}
+
+fn objectives_of(p: &ExplorePoint) -> Vec<f64> {
+    // u64 DRAM bytes and usize SRAM bytes are far below 2^53, so the
+    // f64 view is exact
+    vec![p.latency_ms, p.dram_bytes as f64, p.sram_bytes as f64]
 }
 
 /// The non-dominated subset of a set of evaluated points, sorted by
@@ -28,18 +73,16 @@ pub struct ParetoFront {
 }
 
 impl ParetoFront {
-    /// Eliminate dominated points. Duplicate objective vectors keep their
-    /// first representative only, so the front never lists the same
-    /// trade-off twice.
+    /// Eliminate dominated points via [`pareto_indices`]: survival is
+    /// order-independent, and duplicate objective vectors keep their
+    /// first (enumeration-order) representative only, so the front never
+    /// lists the same trade-off twice.
     pub fn of(candidates: &[ExplorePoint]) -> ParetoFront {
-        let mut points: Vec<ExplorePoint> = Vec::new();
-        for c in candidates {
-            if points.iter().any(|p| dominates(p, c) || same_objectives(p, c)) {
-                continue;
-            }
-            points.retain(|p| !dominates(c, p));
-            points.push(c.clone());
-        }
+        let objectives: Vec<Vec<f64>> = candidates.iter().map(objectives_of).collect();
+        let mut points: Vec<ExplorePoint> = pareto_indices(&objectives)
+            .into_iter()
+            .map(|i| candidates[i].clone())
+            .collect();
         points.sort_by(|a, b| {
             (a.latency_ms, a.dram_bytes, a.sram_bytes)
                 .partial_cmp(&(b.latency_ms, b.dram_bytes, b.sram_bytes))
@@ -57,10 +100,6 @@ impl ParetoFront {
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }
-}
-
-fn same_objectives(a: &ExplorePoint, b: &ExplorePoint) -> bool {
-    a.latency_ms == b.latency_ms && a.dram_bytes == b.dram_bytes && a.sram_bytes == b.sram_bytes
 }
 
 #[cfg(test)]
@@ -94,5 +133,68 @@ mod tests {
     #[test]
     fn empty_input_gives_empty_front() {
         assert!(ParetoFront::of(&[]).is_empty());
+    }
+
+    #[test]
+    fn survival_is_order_independent_with_duplicates_and_ties() {
+        // regression: insertion order must never decide *survival* —
+        // only which exact-tie representative is reported (keep-first).
+        let a = synthetic_point("m", 1.0, 100, 50);
+        let dup = synthetic_point("m", 1.0, 100, 50); // duplicate of a
+        let tied = synthetic_point("m", 1.0, 100, 50); // tied on all axes
+        let trade = synthetic_point("m", 2.0, 40, 50);
+        let dominated = synthetic_point("m", 3.0, 200, 60);
+        let candidates = [a, dup, tied, trade, dominated];
+
+        // every permutation of the 5 candidates yields the same
+        // surviving objective vectors: (1,100,50) once + (2,40,50)
+        let perms: Vec<Vec<usize>> = vec![
+            vec![0, 1, 2, 3, 4],
+            vec![4, 3, 2, 1, 0],
+            vec![2, 4, 0, 3, 1],
+            vec![3, 0, 4, 1, 2],
+        ];
+        for perm in perms {
+            let shuffled: Vec<_> = perm.iter().map(|&i| candidates[i].clone()).collect();
+            let front = ParetoFront::of(&shuffled);
+            assert_eq!(front.len(), 2, "perm {perm:?}");
+            let objs: Vec<(f64, u64, usize)> = front
+                .points
+                .iter()
+                .map(|p| (p.latency_ms, p.dram_bytes, p.sram_bytes))
+                .collect();
+            assert_eq!(objs, vec![(1.0, 100, 50), (2.0, 40, 50)], "perm {perm:?}");
+        }
+    }
+
+    #[test]
+    fn exact_ties_keep_the_first_representative() {
+        // two distinct designs tied on every axis: the enumeration-order
+        // first one is the reported representative
+        let mut first = synthetic_point("m", 1.0, 100, 50);
+        first.input = 64;
+        let mut second = synthetic_point("m", 1.0, 100, 50);
+        second.input = 96;
+        let front = ParetoFront::of(&[first.clone(), second.clone()]);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front.points[0].input, 64);
+        let front = ParetoFront::of(&[second, first]);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front.points[0].input, 96);
+    }
+
+    #[test]
+    fn generic_objectives_handle_higher_dimensions() {
+        // the 4-axis shard front reuses pareto_indices directly
+        let objs = vec![
+            vec![1.0, 1.0, 10.0, 2.0],
+            vec![1.0, 1.0, 10.0, 2.0], // duplicate -> deduped
+            vec![2.0, 0.5, 10.0, 2.0], // trade-off on axis 1
+            vec![2.0, 1.0, 20.0, 3.0], // dominated by the first
+        ];
+        assert_eq!(pareto_indices(&objs), vec![0, 2]);
+        assert!(dominates_objectives(&objs[0], &objs[3]));
+        assert!(!dominates_objectives(&objs[0], &objs[1]), "equals never dominate");
+        assert!(!dominates_objectives(&objs[0], &objs[2]));
     }
 }

@@ -84,6 +84,24 @@
 //! recommended configuration that packs straight into a deployable
 //! [`program::Program`]. The CLI front-end is `shortcutfusion explore`.
 //!
+//! ## Multi-FPGA pipeline sharding: `shard`
+//!
+//! Models too large for one device's SRAM/DSP budget split across
+//! several: [`shard::Partitioner`] enumerates cut-point-aligned splits
+//! of the segment graph (exactly one live tensor crossing — the places
+//! feature-maps already spill to DRAM), costs each candidate with the
+//! analytical models plus a configurable inter-device
+//! [`shard::LinkModel`], and emits a [`shard::ShardPlan`] whose
+//! [`pack`](shard::ShardPlan::pack) produces one checksummed program per
+//! shard with matching ingress/egress tensor descriptors.
+//! [`engine::ShardedBackend`] chains the shards through any execution
+//! backend so the [`engine::InferenceEngine`] serves sharded models
+//! transparently, and
+//! [`explorer::SearchSpace::explore_sharded`] sweeps device counts ×
+//! heterogeneous per-shard config grids with a Pareto front over
+//! (latency, pipeline interval, total SRAM, device count). The CLI
+//! front-end is `shortcutfusion shard`.
+//!
 //! ## Layout
 //!
 //! | module | role |
@@ -97,6 +115,7 @@
 //! | [`program`] | **the deployable artifact**: packed program, binary container |
 //! | [`engine`] | **unified execution**: backends + batch-serving engine |
 //! | [`explorer`] | **design-space search**: pruned config sweeps, Pareto fronts, recommender |
+//! | [`shard`] | **multi-FPGA pipeline sharding**: cut-point partitioner, link model, shard plans |
 //! | [`sim`], [`funcsim`], [`power`] | cycle-accurate timing, bit-exact functional sim, power model |
 //! | [`baselines`], [`bench`] | comparison models + offline bench harness |
 //! | [`coordinator`] | CLI and deprecated one-shot wrappers |
@@ -119,6 +138,7 @@ pub mod compiler;
 pub mod program;
 pub mod engine;
 pub mod explorer;
+pub mod shard;
 pub mod sim;
 pub mod funcsim;
 pub mod power;

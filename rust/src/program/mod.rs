@@ -54,13 +54,113 @@ use format::{SectionReader, SectionWriter};
 /// Identifies the meta section of the container.
 const PROGRAM_FORMAT: &str = "shortcutfusion-program";
 
+/// A named feature-map tensor at a shard boundary: the producing node's
+/// name in the *unsharded* model and its `H×W×C` shape. Pairs of these
+/// descriptors (egress of shard *i*, ingress of shard *i+1*) are what the
+/// [`crate::engine::ShardedBackend`] validates before handing a tensor
+/// across devices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorDesc {
+    /// Name of the node producing the tensor in the unsharded graph.
+    pub name: String,
+    /// Feature-map shape of the tensor.
+    pub shape: Shape,
+}
+
+impl TensorDesc {
+    /// Transfer size in bytes at `qa` bytes per element.
+    pub fn bytes(&self, qa: usize) -> usize {
+        self.shape.bytes(qa)
+    }
+
+    /// The descriptor's JSON record — shared by the packed artifact's
+    /// shard metadata and `ShardPlan::to_json`.
+    pub(crate) fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("h", Json::num(self.shape.h as f64)),
+            ("w", Json::num(self.shape.w as f64)),
+            ("c", Json::num(self.shape.c as f64)),
+        ])
+    }
+
+    fn from_json(doc: &Json) -> Result<TensorDesc> {
+        let dim = |key: &str| -> Result<usize> {
+            doc.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                CompileError::artifact(format!("tensor descriptor: missing {key:?}"))
+            })
+        };
+        Ok(TensorDesc {
+            name: doc
+                .get("name")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| CompileError::artifact("tensor descriptor: missing name"))?,
+            shape: Shape::new(dim("h")?, dim("w")?, dim("c")?),
+        })
+    }
+}
+
+/// Position of a program within a multi-device pipeline
+/// ([`crate::shard::ShardPlan`]): which shard it is, how many exist, and
+/// the ingress/egress tensor descriptors its neighbours must match.
+/// Attached by [`Program::with_boundary`]; absent on unsharded programs
+/// (a 1-device plan packs exactly the classic artifact).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardBoundary {
+    /// Pipeline position, `0..count`.
+    pub index: usize,
+    /// Total shard count of the plan (at least 2).
+    pub count: usize,
+    /// Tensor this shard receives (`None` exactly for the first shard).
+    pub ingress: Option<TensorDesc>,
+    /// Tensor this shard emits (`None` exactly for the final shard).
+    pub egress: Option<TensorDesc>,
+}
+
+impl ShardBoundary {
+    fn to_json(&self) -> Json {
+        let opt = |t: &Option<TensorDesc>| match t {
+            None => Json::Null,
+            Some(t) => t.to_json(),
+        };
+        Json::obj(vec![
+            ("index", Json::num(self.index as f64)),
+            ("count", Json::num(self.count as f64)),
+            ("ingress", opt(&self.ingress)),
+            ("egress", opt(&self.egress)),
+        ])
+    }
+
+    fn from_json(doc: &Json) -> Result<ShardBoundary> {
+        let uint = |key: &str| -> Result<usize> {
+            doc.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| CompileError::artifact(format!("shard record: missing {key:?}")))
+        };
+        let tensor = |key: &str| -> Result<Option<TensorDesc>> {
+            match doc.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => TensorDesc::from_json(v).map(Some),
+            }
+        };
+        Ok(ShardBoundary {
+            index: uint("index")?,
+            count: uint("count")?,
+            ingress: tensor("ingress")?,
+            egress: tensor("egress")?,
+        })
+    }
+}
+
 /// A packed, deployable program: everything the accelerator-side driver
 /// needs to run one network, plus the derived views the simulation
 /// backends execute against.
 ///
 /// The serialized state is `(model, strategy, config, graph, assigns,
-/// words, params)`; the grouped graph and decoded instruction stream are
-/// rebuilt deterministically at load/pack time and never stored.
+/// words, params, shard boundary)`; the grouped graph and decoded
+/// instruction stream are rebuilt deterministically at load/pack time and
+/// never stored.
 #[derive(Debug, Clone)]
 pub struct Program {
     model: String,
@@ -71,6 +171,9 @@ pub struct Program {
     /// encoded inside the 11 instruction words.
     assigns: Vec<BufAssign>,
     params: Option<Params>,
+    /// Pipeline position + hand-off descriptors when this program is one
+    /// shard of a multi-device plan (`None` for unsharded programs).
+    boundary: Option<ShardBoundary>,
     /// Decoded view of the packed words (validated at construction).
     stream: InstructionStream,
     grouped: Arc<GroupedGraph>,
@@ -149,9 +252,73 @@ impl Program {
             cfg,
             assigns,
             params,
+            boundary: None,
             stream: InstructionStream { instrs, words },
             grouped,
         })
+    }
+
+    /// Stamp this program as one shard of a multi-device pipeline.
+    /// Validates the descriptors against the embedded graph: the ingress
+    /// tensor must match the graph's input feed, the egress tensor must
+    /// name a node of the graph with a matching shape, and exactly the
+    /// first/last shards omit ingress/egress.
+    pub fn with_boundary(mut self, boundary: ShardBoundary) -> Result<Program> {
+        if boundary.count < 2 {
+            return Err(CompileError::artifact(format!(
+                "shard record: count {} — a pipeline has at least 2 shards",
+                boundary.count
+            )));
+        }
+        if boundary.index >= boundary.count {
+            return Err(CompileError::artifact(format!(
+                "shard record: index {} out of range for {} shards",
+                boundary.index, boundary.count
+            )));
+        }
+        if (boundary.index == 0) != boundary.ingress.is_none() {
+            return Err(CompileError::artifact(
+                "shard record: exactly the first shard reads the model input \
+                 (no ingress descriptor)",
+            ));
+        }
+        if (boundary.index + 1 == boundary.count) != boundary.egress.is_none() {
+            return Err(CompileError::artifact(
+                "shard record: exactly the final shard produces the model output \
+                 (no egress descriptor)",
+            ));
+        }
+        if let Some(ingress) = &boundary.ingress {
+            if ingress.shape != self.input_shape() {
+                return Err(CompileError::artifact(format!(
+                    "shard record: ingress {} is {} but the graph input feed is {}",
+                    ingress.name,
+                    ingress.shape,
+                    self.input_shape()
+                )));
+            }
+        }
+        if let Some(egress) = &boundary.egress {
+            match self.grouped.graph.find(&egress.name) {
+                None => {
+                    return Err(CompileError::artifact(format!(
+                        "shard record: egress {:?} is not a node of the shard graph",
+                        egress.name
+                    )))
+                }
+                Some(id) if self.grouped.graph.node(id).out_shape != egress.shape => {
+                    return Err(CompileError::artifact(format!(
+                        "shard record: egress {} is {} but node produces {}",
+                        egress.name,
+                        egress.shape,
+                        self.grouped.graph.node(id).out_shape
+                    )))
+                }
+                Some(_) => {}
+            }
+        }
+        self.boundary = Some(boundary);
+        Ok(self)
     }
 
     // ---- inspection -----------------------------------------------------
@@ -191,6 +358,12 @@ impl Program {
     /// Quantized parameters, when the compile attached them.
     pub fn params(&self) -> Option<&Params> {
         self.params.as_ref()
+    }
+
+    /// Pipeline position + hand-off descriptors, when this program is
+    /// one shard of a multi-device plan.
+    pub fn boundary(&self) -> Option<&ShardBoundary> {
+        self.boundary.as_ref()
     }
 
     /// Expected input tensor shape.
@@ -301,7 +474,12 @@ impl Program {
 
         validate(&graph)?;
         let grouped = Arc::new(analyze(&graph));
-        Program::from_parts(model, strategy, cfg, grouped, assigns, words, params)
+        let program =
+            Program::from_parts(model, strategy, cfg, grouped, assigns, words, params)?;
+        match meta.get("shard") {
+            None | Some(Json::Null) => Ok(program),
+            Some(doc) => program.with_boundary(ShardBoundary::from_json(doc)?),
+        }
     }
 
     /// Write the binary container to disk.
@@ -327,6 +505,13 @@ impl Program {
             ("instructions", Json::num(self.stream.len() as f64)),
             ("stream_bytes", Json::num(self.stream.byte_size() as f64)),
             ("has_params", Json::Bool(self.params.is_some())),
+            (
+                "shard",
+                match &self.boundary {
+                    None => Json::Null,
+                    Some(b) => Json::str(&format!("{}/{}", b.index + 1, b.count)),
+                },
+            ),
         ])
     }
 
@@ -347,14 +532,20 @@ impl Program {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut pairs = vec![
             ("format", Json::str(PROGRAM_FORMAT)),
             ("version", Json::num(format::FORMAT_VERSION as f64)),
             ("model", Json::str(&self.model)),
             ("strategy", Json::str(&self.strategy)),
             ("config", self.cfg.to_json()),
             ("assigns", Json::Arr(assigns)),
-        ])
+        ];
+        if let Some(b) = &self.boundary {
+            // only sharded programs carry the key, so every pre-shard
+            // artifact (and every 1-device plan) keeps its exact bytes
+            pairs.push(("shard", b.to_json()));
+        }
+        Json::obj(pairs)
     }
 }
 

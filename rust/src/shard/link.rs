@@ -1,0 +1,93 @@
+//! Inter-device link cost model.
+
+use crate::compiler::CompileError;
+use crate::serialize::Json;
+use crate::Result;
+
+/// Analytical model of the device-to-device interconnect a shard
+/// hand-off crosses: a fixed per-transfer latency plus a bandwidth term,
+/// mirroring how [`crate::config::AccelConfig::dram_gbps`] models the
+/// DRAM channel.
+///
+/// `transfer_ms(bytes) = latency_us / 1e3 + bytes / (gbps · 1e9) · 1e3`
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Effective link bandwidth in GB/s. `f64::INFINITY` is accepted and
+    /// makes the bandwidth term vanish (useful for bounding experiments).
+    pub gbps: f64,
+    /// Fixed per-transfer latency in microseconds (DMA setup, protocol
+    /// round trip).
+    pub latency_us: f64,
+}
+
+impl LinkModel {
+    /// A link model; `gbps` must be positive (infinity allowed) and
+    /// `latency_us` non-negative and finite.
+    pub fn new(gbps: f64, latency_us: f64) -> Result<LinkModel> {
+        if gbps.is_nan() || gbps <= 0.0 {
+            return Err(CompileError::config(format!(
+                "link bandwidth {gbps} GB/s must be positive"
+            )));
+        }
+        if !latency_us.is_finite() || latency_us < 0.0 {
+            return Err(CompileError::config(format!(
+                "link latency {latency_us} us must be finite and non-negative"
+            )));
+        }
+        Ok(LinkModel { gbps, latency_us })
+    }
+
+    /// A PCIe-Gen3-x16-class board-to-board link: ~12 GB/s effective,
+    /// 5 µs per transfer.
+    pub fn pcie_gen3() -> LinkModel {
+        LinkModel { gbps: 12.0, latency_us: 5.0 }
+    }
+
+    /// Time to move `bytes` across the link, in milliseconds.
+    pub fn transfer_ms(&self, bytes: u64) -> f64 {
+        self.latency_us / 1e3 + bytes as f64 / (self.gbps * 1e9) * 1e3
+    }
+
+    /// Flat JSON record (`gbps`, `latency_us`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("gbps", Json::num(self.gbps)),
+            ("latency_us", Json::num(self.latency_us)),
+        ])
+    }
+}
+
+impl Default for LinkModel {
+    fn default() -> LinkModel {
+        LinkModel::pcie_gen3()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_decomposes() {
+        let link = LinkModel::new(10.0, 5.0).unwrap();
+        // 10 MB at 10 GB/s = 1 ms, plus 5 us setup
+        let ms = link.transfer_ms(10_000_000);
+        assert!((ms - 1.005).abs() < 1e-12, "{ms}");
+        // infinite bandwidth leaves only the setup latency
+        let inf = LinkModel::new(f64::INFINITY, 5.0).unwrap();
+        assert_eq!(inf.transfer_ms(u64::MAX), 0.005);
+        // zero-latency infinite link transfers for free
+        let free = LinkModel::new(f64::INFINITY, 0.0).unwrap();
+        assert_eq!(free.transfer_ms(1 << 40), 0.0);
+    }
+
+    #[test]
+    fn invalid_links_are_typed_errors() {
+        for gbps in [0.0, -1.0, f64::NAN] {
+            assert!(LinkModel::new(gbps, 0.0).is_err(), "{gbps}");
+        }
+        for lat in [-1.0, f64::NAN, f64::INFINITY] {
+            assert!(LinkModel::new(1.0, lat).is_err(), "{lat}");
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Multi-FPGA pipeline sharding: partition one model's segment graph
+//! across several accelerator configurations and serve the shards as a
+//! device pipeline.
+//!
+//! ShortcutFusion sizes on-chip reuse for *one* device under fixed
+//! resource constraints. This subsystem adds the next scaling axis:
+//! models too large for any single device's SRAM/DSP budget are split at
+//! **cut-point-aligned boundaries** — basic-block edges where exactly one
+//! live feature-map crosses, i.e. precisely the places the reuse policy
+//! already spills feature-maps to DRAM — into K contiguous shards, each
+//! compiled for its own [`AccelConfig`] and deployed as its own
+//! checksummed [`crate::program::Program`].
+//!
+//! The moving parts:
+//!
+//! * [`boundaries`] enumerates the legal split positions of a model
+//!   (single crossing tensor, every graph output in the final shard).
+//! * [`Partitioner`] searches every K-way combination of those
+//!   boundaries, costing each shard with the crate's analytical models
+//!   (cut-point search, eq. 8–9 DRAM traffic, cycle-accurate timing) and
+//!   each hand-off with a configurable inter-device [`LinkModel`], under
+//!   either a single-image-latency or a pipelined-throughput
+//!   [`Objective`].
+//! * [`ShardPlan`] is the winning split: per-shard subgraphs, costs and
+//!   ingress/egress [`crate::program::TensorDesc`]s, plus the pipeline
+//!   totals. [`ShardPlan::pack`] drives [`crate::compiler::Compiler::pack`]
+//!   to emit one program per shard; a 1-device plan degenerates *exactly*
+//!   to the unsharded pack (byte-identical artifact, no boundary record).
+//! * [`crate::engine::ShardedBackend`] chains the shard programs through
+//!   any [`crate::engine::ExecutionBackend`] with staged hand-off
+//!   buffers, so [`crate::engine::InferenceEngine`] serves a sharded
+//!   model transparently.
+//! * [`ShardExploration`] (via
+//!   [`SearchSpace::explore_sharded`](crate::explorer::SearchSpace))
+//!   sweeps device counts × heterogeneous per-shard config assignments
+//!   drawn from an explorer grid, with a Pareto front over
+//!   (latency, pipeline interval, total SRAM, device count).
+//!
+//! ```no_run
+//! use shortcutfusion::config::AccelConfig;
+//! use shortcutfusion::shard::{LinkModel, Partitioner};
+//! use shortcutfusion::zoo;
+//!
+//! let plan = Partitioner::homogeneous(AccelConfig::kcu1500_int8(), 2)
+//!     .unwrap()
+//!     .with_link(LinkModel::pcie_gen3())
+//!     .plan(&zoo::resnet50(224))
+//!     .unwrap();
+//! println!(
+//!     "{} devices: {:.3} ms / image, {:.1} fps pipelined",
+//!     plan.devices(),
+//!     plan.latency_ms,
+//!     plan.throughput_fps()
+//! );
+//! for program in plan.pack().unwrap() {
+//!     println!("{}", program.model());
+//! }
+//! ```
+//!
+//! The CLI front-end is `shortcutfusion shard` (text/JSON plan output,
+//! `--pack`); `benches/sharding.rs` sweeps K × link bandwidth over the
+//! zoo, and `rust/tests/sharding.rs` proves the 2-shard reference chain
+//! bit-identical to the unsharded functional simulator.
+
+mod link;
+mod partition;
+mod search;
+
+pub use link::LinkModel;
+pub use partition::{
+    boundaries, Boundary, Partitioner, ShardPlan, ShardSpec, Transfer,
+};
+pub use search::{ShardExploration, ShardFailure, ShardPoint};
+
+pub(crate) use partition::PlanCache;
+
+/// What the split search minimizes (feasibility always ranks first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// Minimize single-image latency: the sum of shard latencies plus
+    /// every inter-device transfer (one image traverses the whole chain).
+    #[default]
+    Latency,
+    /// Maximize pipelined throughput: minimize the initiation interval,
+    /// the slowest pipeline stage — device or link — once every shard
+    /// works on a different in-flight image.
+    Throughput,
+}
+
+impl Objective {
+    /// Stable identifier used by reports and the CLI (`latency`,
+    /// `throughput`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Throughput => "throughput",
+        }
+    }
+}

@@ -1,0 +1,977 @@
+//! Cut-point-aligned partitioning of a model across accelerator devices.
+//!
+//! A split position must satisfy two structural conditions, checked at
+//! basic-block granularity (the unit that shares one reuse decision,
+//! Fig. 10):
+//!
+//! 1. **single crossing tensor** — exactly one node on the producing side
+//!    is read by the consuming side, so the hand-off is one feature-map
+//!    DMA (these are exactly the positions where the reuse policy already
+//!    spills to DRAM);
+//! 2. **outputs stay last** — every graph output (detection heads) lives
+//!    in the final shard, so each earlier shard has the crossing tensor
+//!    as its unique sink and the chain forwards one tensor per hop.
+//!
+//! The [`Partitioner`] enumerates every K-way combination of the legal
+//! boundaries, compiles each candidate shard through the staged
+//! [`Compiler`] (memoized per group-range × config), prices hand-offs
+//! with the [`LinkModel`], and keeps the best split under the configured
+//! [`Objective`].
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use super::{LinkModel, Objective};
+use crate::analyzer::{analyze, GroupedGraph};
+use crate::compiler::{CompileError, Compiler, CutPointStrategy, ReuseStrategy};
+use crate::config::AccelConfig;
+use crate::funcsim::Params;
+use crate::graph::{validate, Graph, Node, NodeId, OpKind};
+use crate::optimizer::{basic_blocks, BasicBlock};
+use crate::program::{Program, ShardBoundary, TensorDesc};
+use crate::serialize::Json;
+use crate::Result;
+
+/// One legal split position: after a basic block whose boundary exactly
+/// one live tensor crosses.
+#[derive(Debug, Clone)]
+pub struct Boundary {
+    /// The split is after this block (index into the model's
+    /// [`basic_blocks`] partition).
+    pub after_block: usize,
+    /// Last group index on the producing side of the split.
+    pub last_group: usize,
+    /// The unique tensor crossing the boundary (named after its producing
+    /// node in the unsharded graph).
+    pub tensor: TensorDesc,
+    /// Node id of the crossing tensor's producer in the source graph.
+    crossing_node: usize,
+}
+
+/// Every legal split position of a model, in program order.
+///
+/// Validates the graph, fuses it, partitions it into basic blocks and
+/// keeps the block boundaries where exactly one tensor crosses and no
+/// graph output is stranded on the producing side.
+pub fn boundaries(graph: &Graph) -> Result<Vec<Boundary>> {
+    validate(graph)?;
+    let gg = analyze(graph);
+    let blocks = basic_blocks(&gg);
+    Ok(find_boundaries(&gg, &blocks))
+}
+
+fn find_boundaries(gg: &GroupedGraph, blocks: &[BasicBlock]) -> Vec<Boundary> {
+    let g = &gg.graph;
+    let mut is_output = vec![true; g.nodes.len()];
+    for node in &g.nodes {
+        for &inp in &node.inputs {
+            is_output[inp.0] = false;
+        }
+    }
+    let mut out = Vec::new();
+    for (bi, block) in blocks.iter().enumerate().take(blocks.len().saturating_sub(1)) {
+        let last_group = block.end;
+        let left = |node: usize| gg.node_group[node].0 <= last_group;
+        // graph outputs (detection heads) must stay in the final shard:
+        // a stranded output would give the producing shard two sinks and
+        // the chain forwards exactly one tensor per hop
+        if (0..g.nodes.len()).any(|n| left(n) && is_output[n]) {
+            continue;
+        }
+        let mut crossing: Option<usize> = None;
+        let mut single = true;
+        'scan: for node in g.nodes.iter().filter(|n| !left(n.id.0)) {
+            for &inp in &node.inputs {
+                if !left(inp.0) {
+                    continue;
+                }
+                match crossing {
+                    None => crossing = Some(inp.0),
+                    Some(c) if c == inp.0 => {}
+                    Some(_) => {
+                        single = false;
+                        break 'scan;
+                    }
+                }
+            }
+        }
+        let Some(c) = crossing else { continue };
+        // a boundary whose hand-off is the raw model input would make
+        // the first shard dead weight — never useful, skip defensively
+        if !single || c == 0 {
+            continue;
+        }
+        out.push(Boundary {
+            after_block: bi,
+            last_group,
+            tensor: TensorDesc {
+                name: g.nodes[c].name.clone(),
+                shape: g.nodes[c].out_shape,
+            },
+            crossing_node: c,
+        });
+    }
+    out
+}
+
+/// Extract the subgraph of groups `gs..=ge`, replacing the previous
+/// boundary's crossing tensor (if any) with a synthetic `Input` feed.
+/// Node names and relative order are preserved, so quantized parameters
+/// keyed by node name apply unchanged.
+fn extract_shard(
+    src: &Graph,
+    gg: &GroupedGraph,
+    name: String,
+    gs: usize,
+    ge: usize,
+    ingress: Option<&Boundary>,
+) -> Result<Graph> {
+    if gs == 0 && ge + 1 == gg.groups.len() && ingress.is_none() {
+        // full range: the shard IS the model — bit-identical clone so a
+        // 1-device plan packs exactly today's artifact
+        return Ok(Graph { name, nodes: src.nodes.clone() });
+    }
+    let member = |node: usize| {
+        let gi = gg.node_group[node].0;
+        gi >= gs && gi <= ge
+    };
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut map: HashMap<usize, NodeId> = HashMap::new();
+    if let Some(b) = ingress {
+        // unique, parameter-free name: `Params` lookups must miss so the
+        // feed encodes the documented identity shift 0
+        let mut feed = format!("{}@ingress", b.tensor.name);
+        while src.find(&feed).is_some() {
+            feed.push('+');
+        }
+        nodes.push(Node {
+            id: NodeId(0),
+            name: feed,
+            op: OpKind::Input,
+            inputs: Vec::new(),
+            in_shapes: Vec::new(),
+            out_shape: b.tensor.shape,
+        });
+        map.insert(b.crossing_node, NodeId(0));
+    }
+    for nd in src.nodes.iter().filter(|n| member(n.id.0)) {
+        let id = NodeId(nodes.len());
+        let inputs: Vec<NodeId> = nd
+            .inputs
+            .iter()
+            .map(|i| {
+                map.get(&i.0).copied().ok_or_else(|| {
+                    CompileError::stage(format!(
+                        "shard extraction: {} reads {:?} from outside the shard — \
+                         boundary is not a single-tensor cut",
+                        nd.name, src.nodes[i.0].name
+                    ))
+                })
+            })
+            .collect::<Result<_>>()?;
+        let in_shapes = inputs.iter().map(|i| nodes[i.0].out_shape).collect();
+        map.insert(nd.id.0, id);
+        nodes.push(Node {
+            id,
+            name: nd.name.clone(),
+            op: nd.op,
+            inputs,
+            in_shapes,
+            out_shape: nd.out_shape,
+        });
+    }
+    let graph = Graph { name, nodes };
+    validate(&graph)?;
+    Ok(graph)
+}
+
+/// Compile metrics of one shard candidate (one group range under one
+/// config) — what the split search combines arithmetically.
+#[derive(Debug, Clone, Copy)]
+struct RangeCost {
+    latency_ms: f64,
+    sram_bytes: usize,
+    dram_bytes: u64,
+    feasible: bool,
+    groups: usize,
+}
+
+/// Memoized shard subgraphs and compile costs, shared across every split
+/// combination of one `plan` call (and, in
+/// [`SearchSpace::explore_sharded`](crate::explorer::SearchSpace), across
+/// heterogeneous config assignments of one model × input).
+///
+/// Keys are group ranges of **one fixed source graph** — never share a
+/// cache across models or input sizes.
+#[derive(Default)]
+pub(crate) struct PlanCache {
+    graphs: Mutex<HashMap<(usize, usize), Arc<Graph>>>,
+    /// Range → (strategy+config fingerprint → cost). Two-level so the
+    /// hot lookup borrows the fingerprint instead of allocating a key
+    /// per split combination.
+    costs: Mutex<HashMap<(usize, usize), HashMap<String, RangeCost>>>,
+}
+
+/// Split-search ceiling: combinations beyond this are a configuration
+/// error (the arithmetic walk would dominate the compile-cost cache).
+const MAX_SPLITS: f64 = 2_000_000.0;
+
+/// Searches cut-point-aligned K-way splits of a model over K device
+/// configurations and an inter-device [`LinkModel`].
+#[derive(Clone)]
+pub struct Partitioner {
+    configs: Vec<AccelConfig>,
+    link: LinkModel,
+    strategy: Arc<dyn ReuseStrategy>,
+    objective: Objective,
+}
+
+impl fmt::Debug for Partitioner {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Partitioner")
+            .field("devices", &self.configs.len())
+            .field("configs", &self.configs.iter().map(|c| c.name.as_str()).collect::<Vec<_>>())
+            .field("link", &self.link)
+            .field("strategy", &self.strategy.name())
+            .field("objective", &self.objective)
+            .finish()
+    }
+}
+
+impl Partitioner {
+    /// K identical devices running `cfg` (the common case: a rack of the
+    /// same board).
+    pub fn homogeneous(cfg: AccelConfig, devices: usize) -> Result<Partitioner> {
+        if devices == 0 {
+            return Err(CompileError::config("need at least one device"));
+        }
+        Partitioner::heterogeneous(vec![cfg; devices])
+    }
+
+    /// One explicit config per pipeline position (heterogeneous
+    /// deployments: big backbone board, small head board). All configs
+    /// must share the feature-map precision `qa` — the hand-off tensor
+    /// crosses devices unconverted.
+    pub fn heterogeneous(configs: Vec<AccelConfig>) -> Result<Partitioner> {
+        if configs.is_empty() {
+            return Err(CompileError::config("need at least one device config"));
+        }
+        if let Some(c) = configs.iter().find(|c| c.qa != configs[0].qa) {
+            return Err(CompileError::config(format!(
+                "device configs disagree on feature-map precision: {} has qa={}, {} has qa={}",
+                configs[0].name, configs[0].qa, c.name, c.qa
+            )));
+        }
+        Ok(Partitioner {
+            configs,
+            link: LinkModel::default(),
+            strategy: Arc::new(CutPointStrategy),
+            objective: Objective::default(),
+        })
+    }
+
+    /// Set the inter-device link model (default:
+    /// [`LinkModel::pcie_gen3`]).
+    pub fn with_link(mut self, link: LinkModel) -> Partitioner {
+        self.link = link;
+        self
+    }
+
+    /// Set the per-shard reuse strategy (default: the paper's cut-point
+    /// optimizer).
+    pub fn with_strategy(mut self, strategy: Arc<dyn ReuseStrategy>) -> Partitioner {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Set the split-search objective (default:
+    /// [`Objective::Latency`]).
+    pub fn with_objective(mut self, objective: Objective) -> Partitioner {
+        self.objective = objective;
+        self
+    }
+
+    /// Number of pipeline devices.
+    pub fn devices(&self) -> usize {
+        self.configs.len()
+    }
+
+    /// The per-device configurations, in pipeline order.
+    pub fn configs(&self) -> &[AccelConfig] {
+        &self.configs
+    }
+
+    /// Search every cut-point-aligned K-way split and return the best
+    /// plan under the configured objective (feasibility ranks first; ties
+    /// break on the secondary objective, then DRAM traffic, then SRAM).
+    pub fn plan(&self, graph: &Graph) -> Result<ShardPlan> {
+        self.plan_cached(graph, &PlanCache::default())
+    }
+
+    /// [`Partitioner::plan`] against an external memo — the sharded
+    /// explorer reuses one cache across config assignments of the same
+    /// model.
+    pub(crate) fn plan_cached(&self, graph: &Graph, cache: &PlanCache) -> Result<ShardPlan> {
+        validate(graph)?;
+        let gg = analyze(graph);
+        let blocks = basic_blocks(&gg);
+        let k = self.configs.len();
+        let bounds = find_boundaries(&gg, &blocks);
+        if bounds.len() < k - 1 {
+            return Err(CompileError::config(format!(
+                "{}: cannot split into {k} shards — only {} cut-point-aligned boundaries",
+                graph.name,
+                bounds.len()
+            )));
+        }
+        let splits = binomial(bounds.len(), k - 1);
+        if splits > MAX_SPLITS {
+            return Err(CompileError::config(format!(
+                "{}: {} candidate splits for {k} devices over {} boundaries exceeds the \
+                 search ceiling ({MAX_SPLITS}) — use fewer devices",
+                graph.name,
+                splits,
+                bounds.len()
+            )));
+        }
+        // Cost-cache identity: strategy name + Arc instance address +
+        // full config Debug form. The cache outlives this call when the
+        // sharded explorer shares it, and the same range costs
+        // differently under another strategy — including another
+        // *instance* of a parameterized strategy sharing a name
+        // (SmartShuttle at two buffer sizes), so the address
+        // disambiguates exactly like the Session report cache. Sound
+        // because every sharer holds its strategy Arc for the cache's
+        // whole lifetime (no address reuse).
+        let strategy_addr = Arc::as_ptr(&self.strategy) as *const () as usize;
+        let fingerprints: Vec<String> = self
+            .configs
+            .iter()
+            .map(|c| format!("{}@{strategy_addr:x}::{c:?}", self.strategy.name()))
+            .collect();
+        let last_group = gg.groups.len() - 1;
+
+        // ---- search every combination of k-1 boundaries ------------------
+        let mut best: Option<SplitScore> = None;
+        let mut evaluated = 0usize;
+        for_each_combination(bounds.len(), k - 1, |combo| -> Result<()> {
+            let mut latency = 0.0f64;
+            let mut interval = 0.0f64;
+            let mut feasible = true;
+            let mut sram = 0usize;
+            let mut dram = 0u64;
+            for (j, cfg) in self.configs.iter().enumerate() {
+                let (gs, ge) = range_of(&bounds, combo, j, k, last_group);
+                let cost = self.range_cost(
+                    graph,
+                    &gg,
+                    cache,
+                    &bounds,
+                    gs,
+                    ge,
+                    combo,
+                    j,
+                    cfg,
+                    &fingerprints[j],
+                )?;
+                latency += cost.latency_ms;
+                interval = interval.max(cost.latency_ms);
+                feasible &= cost.feasible;
+                sram += cost.sram_bytes;
+                dram += cost.dram_bytes;
+                if j + 1 < k {
+                    let bytes = bounds[combo[j]].tensor.bytes(cfg.qa) as u64;
+                    let t = self.link.transfer_ms(bytes);
+                    latency += t;
+                    interval = interval.max(t);
+                }
+            }
+            evaluated += 1;
+            let (primary, secondary) = match self.objective {
+                Objective::Latency => (latency, interval),
+                Objective::Throughput => (interval, latency),
+            };
+            let score =
+                SplitScore { cuts: combo.to_vec(), feasible, primary, secondary, dram, sram };
+            if best.as_ref().is_none_or(|b| score.beats(b)) {
+                best = Some(score);
+            }
+            Ok(())
+        })?;
+        let best = best.expect("the combination walk visits at least one split");
+
+        // ---- materialize the winning split, in chain order ---------------
+        // (latency accumulates shard → transfer → shard …, matching the
+        // ShardedBackend exactly so the cross-check is rounding-free)
+        let mut shards = Vec::with_capacity(k);
+        let mut transfers = Vec::with_capacity(k - 1);
+        let mut latency = 0.0f64;
+        let mut interval = 0.0f64;
+        for (j, cfg) in self.configs.iter().enumerate() {
+            let (gs, ge) = range_of(&bounds, &best.cuts, j, k, last_group);
+            let shard_graph =
+                self.shard_graph(graph, &gg, cache, &bounds, gs, ge, &best.cuts, j)?;
+            let cost = self.range_cost(
+                graph,
+                &gg,
+                cache,
+                &bounds,
+                gs,
+                ge,
+                &best.cuts,
+                j,
+                cfg,
+                &fingerprints[j],
+            )?;
+            latency += cost.latency_ms;
+            interval = interval.max(cost.latency_ms);
+            let ingress = (j > 0).then(|| bounds[best.cuts[j - 1]].tensor.clone());
+            let egress = (j + 1 < k).then(|| bounds[best.cuts[j]].tensor.clone());
+            shards.push(ShardSpec {
+                index: j,
+                cfg: cfg.clone(),
+                graph: shard_graph,
+                first_block: if j == 0 { 0 } else { bounds[best.cuts[j - 1]].after_block + 1 },
+                last_block: if j + 1 < k {
+                    bounds[best.cuts[j]].after_block
+                } else {
+                    blocks.len().saturating_sub(1)
+                },
+                groups: cost.groups,
+                latency_ms: cost.latency_ms,
+                sram_bytes: cost.sram_bytes,
+                dram_bytes: cost.dram_bytes,
+                feasible: cost.feasible,
+                ingress,
+                egress,
+            });
+            if j + 1 < k {
+                let tensor = bounds[best.cuts[j]].tensor.clone();
+                let bytes = tensor.bytes(cfg.qa);
+                let transfer_ms = self.link.transfer_ms(bytes as u64);
+                latency += transfer_ms;
+                interval = interval.max(transfer_ms);
+                transfers.push(Transfer { tensor, bytes, transfer_ms });
+            }
+        }
+        Ok(ShardPlan {
+            model: graph.name.clone(),
+            link: self.link,
+            objective: self.objective,
+            shards,
+            transfers,
+            latency_ms: latency,
+            interval_ms: interval,
+            feasible: best.feasible,
+            boundaries: bounds.len(),
+            splits_evaluated: evaluated,
+            strategy: self.strategy.clone(),
+        })
+    }
+
+    /// The (memoized) extracted subgraph of one group range.
+    #[allow(clippy::too_many_arguments)]
+    fn shard_graph(
+        &self,
+        graph: &Graph,
+        gg: &GroupedGraph,
+        cache: &PlanCache,
+        bounds: &[Boundary],
+        gs: usize,
+        ge: usize,
+        combo: &[usize],
+        j: usize,
+    ) -> Result<Arc<Graph>> {
+        if let Some(g) = cache.graphs.lock().unwrap().get(&(gs, ge)) {
+            return Ok(g.clone());
+        }
+        let ingress = if j == 0 { None } else { Some(&bounds[combo[j - 1]]) };
+        let name = if gs == 0 && ge + 1 == gg.groups.len() {
+            graph.name.clone()
+        } else {
+            format!("{}[g{gs}-{ge}]", graph.name)
+        };
+        let extracted = Arc::new(extract_shard(graph, gg, name, gs, ge, ingress)?);
+        cache.graphs.lock().unwrap().insert((gs, ge), extracted.clone());
+        Ok(extracted)
+    }
+
+    /// The (memoized) compile cost of one group range under one config.
+    #[allow(clippy::too_many_arguments)]
+    fn range_cost(
+        &self,
+        graph: &Graph,
+        gg: &GroupedGraph,
+        cache: &PlanCache,
+        bounds: &[Boundary],
+        gs: usize,
+        ge: usize,
+        combo: &[usize],
+        j: usize,
+        cfg: &AccelConfig,
+        fingerprint: &str,
+    ) -> Result<RangeCost> {
+        if let Some(c) =
+            cache.costs.lock().unwrap().get(&(gs, ge)).and_then(|m| m.get(fingerprint))
+        {
+            return Ok(*c);
+        }
+        let shard_graph = self.shard_graph(graph, gg, cache, bounds, gs, ge, combo, j)?;
+        let compiler = Compiler::with_strategy(cfg.clone(), self.strategy.clone());
+        let report = compiler.compile(&shard_graph)?;
+        let cost = RangeCost {
+            latency_ms: report.timing.latency_ms,
+            sram_bytes: report.evaluation.sram.total,
+            dram_bytes: report.evaluation.dram.total,
+            feasible: report.evaluation.feasible,
+            groups: report.grouped.groups.len(),
+        };
+        cache
+            .costs
+            .lock()
+            .unwrap()
+            .entry((gs, ge))
+            .or_default()
+            .insert(fingerprint.to_string(), cost);
+        Ok(cost)
+    }
+}
+
+/// Group span of shard `j` under the chosen boundary combination.
+fn range_of(
+    bounds: &[Boundary],
+    combo: &[usize],
+    j: usize,
+    k: usize,
+    last_group: usize,
+) -> (usize, usize) {
+    let gs = if j == 0 { 0 } else { bounds[combo[j - 1]].last_group + 1 };
+    let ge = if j + 1 < k { bounds[combo[j]].last_group } else { last_group };
+    (gs, ge)
+}
+
+struct SplitScore {
+    cuts: Vec<usize>,
+    feasible: bool,
+    primary: f64,
+    secondary: f64,
+    dram: u64,
+    sram: usize,
+}
+
+impl SplitScore {
+    fn beats(&self, other: &SplitScore) -> bool {
+        match (self.feasible, other.feasible) {
+            (true, false) => true,
+            (false, true) => false,
+            _ => {
+                (self.primary, self.secondary, self.dram, self.sram)
+                    < (other.primary, other.secondary, other.dram, other.sram)
+            }
+        }
+    }
+}
+
+/// Visit every ascending `k`-combination of `0..n`, in lexicographic
+/// order; `k = 0` visits the empty combination once.
+fn for_each_combination<E>(
+    n: usize,
+    k: usize,
+    mut f: impl FnMut(&[usize]) -> std::result::Result<(), E>,
+) -> std::result::Result<(), E> {
+    if k == 0 {
+        return f(&[]);
+    }
+    if k > n {
+        return Ok(());
+    }
+    let mut idx: Vec<usize> = (0..k).collect();
+    loop {
+        f(&idx)?;
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return Ok(());
+            }
+            i -= 1;
+            if idx[i] != i + n - k {
+                break;
+            }
+        }
+        idx[i] += 1;
+        for x in i + 1..k {
+            idx[x] = idx[x - 1] + 1;
+        }
+    }
+}
+
+fn binomial(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1.0f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+    }
+    acc
+}
+
+/// Quantized parameters restricted to the nodes of one shard graph (the
+/// hand-off feed has a fresh name, so it deliberately matches nothing and
+/// keeps the identity shift).
+fn subset_params(p: &Params, graph: &Graph) -> Params {
+    let names: HashSet<&str> = graph.nodes.iter().map(|n| n.name.as_str()).collect();
+    Params {
+        groups: p
+            .groups
+            .iter()
+            .filter(|(name, _)| names.contains(name.as_str()))
+            .map(|(name, gp)| (name.clone(), gp.clone()))
+            .collect(),
+    }
+}
+
+/// One inter-device hand-off of a [`ShardPlan`].
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    /// The tensor crossing the link.
+    pub tensor: TensorDesc,
+    /// Transfer size in bytes (at the producing device's `qa`).
+    pub bytes: usize,
+    /// Modeled transfer time, ms.
+    pub transfer_ms: f64,
+}
+
+/// One pipeline stage of a [`ShardPlan`]: a contiguous block range
+/// compiled for one device.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// Pipeline position (0-based).
+    pub index: usize,
+    /// The device configuration this shard compiles for.
+    pub cfg: AccelConfig,
+    /// The extracted shard subgraph (shared with the plan's memo).
+    pub graph: Arc<Graph>,
+    /// First basic block of the shard (index into the *unsharded*
+    /// model's block partition).
+    pub first_block: usize,
+    /// Last basic block of the shard (inclusive).
+    pub last_block: usize,
+    /// Accelerator groups in the shard subgraph (its input feed
+    /// included).
+    pub groups: usize,
+    /// Shard latency from the cycle-accurate timing model, ms.
+    pub latency_ms: f64,
+    /// Shard SRAM requirement (eq. 6), bytes.
+    pub sram_bytes: usize,
+    /// Shard DRAM traffic per inference (eq. 9), bytes.
+    pub dram_bytes: u64,
+    /// Whether the shard's policy meets its device's eq-(10) budget.
+    pub feasible: bool,
+    /// Tensor this shard receives (`None` for the first shard, which
+    /// reads the model input).
+    pub ingress: Option<TensorDesc>,
+    /// Tensor this shard emits downstream (`None` for the final shard,
+    /// which produces the model output).
+    pub egress: Option<TensorDesc>,
+}
+
+/// The winning split: per-shard specs, hand-offs and pipeline totals.
+#[derive(Clone)]
+pub struct ShardPlan {
+    /// The unsharded model's name.
+    pub model: String,
+    /// The inter-device link model used for costing.
+    pub link: LinkModel,
+    /// The objective the split was chosen under.
+    pub objective: Objective,
+    /// Pipeline stages, in order. A 1-device plan has exactly one.
+    pub shards: Vec<ShardSpec>,
+    /// Hand-offs between consecutive shards (`shards.len() - 1` entries).
+    pub transfers: Vec<Transfer>,
+    /// Single-image latency: shard latencies plus every transfer, ms.
+    pub latency_ms: f64,
+    /// Pipeline initiation interval: the slowest stage (device or link),
+    /// ms.
+    pub interval_ms: f64,
+    /// Whether every shard meets its device's buffer budget.
+    pub feasible: bool,
+    /// Legal cut-point boundaries the model offered.
+    pub boundaries: usize,
+    /// Split combinations the search evaluated.
+    pub splits_evaluated: usize,
+    strategy: Arc<dyn ReuseStrategy>,
+}
+
+impl fmt::Debug for ShardPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ShardPlan")
+            .field("model", &self.model)
+            .field("devices", &self.shards.len())
+            .field("latency_ms", &self.latency_ms)
+            .field("interval_ms", &self.interval_ms)
+            .field("feasible", &self.feasible)
+            .field("strategy", &self.strategy.name())
+            .finish()
+    }
+}
+
+impl ShardPlan {
+    /// Number of pipeline devices.
+    pub fn devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Steady-state pipelined throughput, frames per second.
+    pub fn throughput_fps(&self) -> f64 {
+        1000.0 / self.interval_ms
+    }
+
+    /// Sum of the shards' SRAM requirements, bytes.
+    pub fn total_sram_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.sram_bytes).sum()
+    }
+
+    /// Sum of the shards' DRAM traffic per inference, bytes.
+    pub fn total_dram_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.dram_bytes).sum()
+    }
+
+    /// Name of the per-shard reuse strategy.
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// Compile and pack every shard into a deployable
+    /// [`Program`] (stage 6 per shard). Multi-device plans stamp each
+    /// artifact with its [`ShardBoundary`] descriptors; a 1-device plan
+    /// produces exactly the unsharded [`Compiler::pack`] artifact.
+    pub fn pack(&self) -> Result<Vec<Program>> {
+        self.pack_with_params(None)
+    }
+
+    /// [`ShardPlan::pack`] with quantized parameters for the *unsharded*
+    /// model: each shard packs the subset its nodes need (what the
+    /// bit-exact [`crate::engine::ReferenceBackend`] chain requires).
+    pub fn pack_with_params(&self, params: Option<&Params>) -> Result<Vec<Program>> {
+        let k = self.shards.len();
+        let mut out = Vec::with_capacity(k);
+        for s in &self.shards {
+            let mut compiler = Compiler::with_strategy(s.cfg.clone(), self.strategy.clone());
+            if let Some(p) = params {
+                compiler = compiler.with_params(subset_params(p, &s.graph));
+            }
+            let analyzed = compiler.analyze(&s.graph)?;
+            let lowered =
+                compiler.lower(&compiler.allocate(&compiler.optimize(&analyzed)?)?)?;
+            let mut program = compiler.pack(&lowered)?;
+            if k > 1 {
+                program = program.with_boundary(ShardBoundary {
+                    index: s.index,
+                    count: k,
+                    ingress: s.ingress.clone(),
+                    egress: s.egress.clone(),
+                })?;
+            }
+            out.push(program);
+        }
+        Ok(out)
+    }
+
+    /// Machine-readable plan record (what `shard --format json` and
+    /// `--json-out` emit).
+    pub fn to_json(&self) -> Json {
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("index", Json::num(s.index as f64)),
+                    ("config", Json::str(&s.cfg.name)),
+                    ("model", Json::str(&s.graph.name)),
+                    ("first_block", Json::num(s.first_block as f64)),
+                    ("last_block", Json::num(s.last_block as f64)),
+                    ("groups", Json::num(s.groups as f64)),
+                    ("latency_ms", Json::num(s.latency_ms)),
+                    ("sram_bytes", Json::num(s.sram_bytes as f64)),
+                    ("dram_bytes", Json::num(s.dram_bytes as f64)),
+                    ("feasible", Json::Bool(s.feasible)),
+                    ("ingress", tensor_json(s.ingress.as_ref())),
+                    ("egress", tensor_json(s.egress.as_ref())),
+                ])
+            })
+            .collect();
+        let transfers: Vec<Json> = self
+            .transfers
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("tensor", tensor_json(Some(&t.tensor))),
+                    ("bytes", Json::num(t.bytes as f64)),
+                    ("transfer_ms", Json::num(t.transfer_ms)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("devices", Json::num(self.shards.len() as f64)),
+            ("objective", Json::str(self.objective.name())),
+            ("strategy", Json::str(self.strategy.name())),
+            ("link", self.link.to_json()),
+            ("latency_ms", Json::num(self.latency_ms)),
+            ("interval_ms", Json::num(self.interval_ms)),
+            ("throughput_fps", Json::num(self.throughput_fps())),
+            ("total_sram_bytes", Json::num(self.total_sram_bytes() as f64)),
+            ("total_dram_bytes", Json::num(self.total_dram_bytes() as f64)),
+            ("feasible", Json::Bool(self.feasible)),
+            ("boundaries", Json::num(self.boundaries as f64)),
+            ("splits_evaluated", Json::num(self.splits_evaluated as f64)),
+            ("shards", Json::Arr(shards)),
+            ("transfers", Json::Arr(transfers)),
+        ])
+    }
+}
+
+fn tensor_json(t: Option<&TensorDesc>) -> Json {
+    // one serialization for descriptors, shared with the packed artifact
+    t.map(TensorDesc::to_json).unwrap_or(Json::Null)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn tinynet_boundaries_are_single_tensor_cuts() {
+        let g = zoo::tinynet();
+        let bounds = boundaries(&g).unwrap();
+        assert!(bounds.len() >= 3, "{bounds:?}");
+        // strictly increasing positions, all naming real nodes
+        for pair in bounds.windows(2) {
+            assert!(pair[0].after_block < pair[1].after_block);
+        }
+        for b in &bounds {
+            let node = g.find(&b.tensor.name).expect("crossing node exists");
+            assert_eq!(g.node(node).out_shape, b.tensor.shape);
+        }
+        // the residual-block exits are among the cuts
+        assert!(bounds.iter().any(|b| b.tensor.name == "res1/relu"));
+        assert!(bounds.iter().any(|b| b.tensor.name == "mb1/add"));
+        // the down/up branch is NOT a legal cut (two tensors cross)
+        assert!(bounds.iter().all(|b| b.tensor.name != "up"));
+    }
+
+    #[test]
+    fn detector_boundaries_keep_heads_in_the_final_shard() {
+        let g = zoo::yolov3(256);
+        let outputs = g.outputs();
+        assert!(outputs.len() > 1, "yolov3 is multi-output");
+        let bounds = boundaries(&g).unwrap();
+        assert!(!bounds.is_empty(), "backbone offers cuts");
+        let gg = analyze(&g);
+        for b in &bounds {
+            for &o in &outputs {
+                assert!(
+                    gg.node_group[o.0].0 > b.last_group,
+                    "boundary {b:?} strands head {:?} on the producing side",
+                    g.node(o).name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn two_shard_plan_decomposes_latency() {
+        let g = zoo::tinynet();
+        let link = LinkModel::new(1.0, 100.0).unwrap();
+        let p = Partitioner::homogeneous(AccelConfig::kcu1500_int8(), 2)
+            .unwrap()
+            .with_link(link)
+            .plan(&g)
+            .unwrap();
+        assert_eq!(p.devices(), 2);
+        assert_eq!(p.transfers.len(), 1);
+        let parts: f64 = p.shards.iter().map(|s| s.latency_ms).sum::<f64>()
+            + p.transfers.iter().map(|t| t.transfer_ms).sum::<f64>();
+        assert!((p.latency_ms - parts).abs() < 1e-12, "{} vs {parts}", p.latency_ms);
+        let widest = p
+            .shards
+            .iter()
+            .map(|s| s.latency_ms)
+            .chain(p.transfers.iter().map(|t| t.transfer_ms))
+            .fold(0.0f64, f64::max);
+        assert_eq!(p.interval_ms, widest);
+        // shard graphs chain: shard 1's egress is shard 2's ingress
+        assert_eq!(p.shards[0].egress, p.shards[1].ingress);
+        assert!(p.shards[0].ingress.is_none());
+        assert!(p.shards[1].egress.is_none());
+        // each shard graph validates and shard 2 starts at the hand-off
+        let in_shape = p.shards[1].graph.input().out_shape;
+        assert_eq!(in_shape, p.shards[0].egress.as_ref().unwrap().shape);
+    }
+
+    #[test]
+    fn single_device_plan_is_the_whole_model() {
+        let g = zoo::tinynet();
+        let p = Partitioner::homogeneous(AccelConfig::kcu1500_int8(), 1)
+            .unwrap()
+            .plan(&g)
+            .unwrap();
+        assert_eq!(p.devices(), 1);
+        assert!(p.transfers.is_empty());
+        assert_eq!(p.shards[0].graph.name, "TinyNet-SE");
+        assert_eq!(p.shards[0].graph.nodes.len(), g.nodes.len());
+        assert_eq!(p.latency_ms, p.interval_ms);
+        assert_eq!(p.splits_evaluated, 1);
+    }
+
+    #[test]
+    fn impossible_splits_and_bad_configs_are_typed_errors() {
+        let g = zoo::tinynet();
+        let err = Partitioner::homogeneous(AccelConfig::kcu1500_int8(), 64)
+            .unwrap()
+            .plan(&g)
+            .unwrap_err();
+        assert!(matches!(err, CompileError::Config(_)), "{err}");
+        assert!(Partitioner::homogeneous(AccelConfig::kcu1500_int8(), 0).is_err());
+        assert!(Partitioner::heterogeneous(Vec::new()).is_err());
+        // mixed feature-map precisions cannot hand off unconverted
+        let mixed =
+            vec![AccelConfig::kcu1500_int8(), AccelConfig::table2_int16()];
+        assert!(Partitioner::heterogeneous(mixed).is_err());
+    }
+
+    #[test]
+    fn combination_walk_is_exhaustive_and_ordered() {
+        let mut seen = Vec::new();
+        for_each_combination(4, 2, |c| -> std::result::Result<(), ()> {
+            seen.push(c.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(
+            seen,
+            vec![
+                vec![0, 1],
+                vec![0, 2],
+                vec![0, 3],
+                vec![1, 2],
+                vec![1, 3],
+                vec![2, 3]
+            ]
+        );
+        let mut empty = 0;
+        for_each_combination(5, 0, |c| -> std::result::Result<(), ()> {
+            assert!(c.is_empty());
+            empty += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(empty, 1);
+        assert_eq!(binomial(50, 3), 19600.0);
+        assert_eq!(binomial(3, 5), 0.0);
+    }
+}

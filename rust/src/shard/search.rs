@@ -1,0 +1,397 @@
+//! Sharded design-space exploration on top of
+//! [`SearchSpace`](crate::explorer::SearchSpace).
+//!
+//! The single-device explorer answers *which config should this model
+//! run on*; [`SearchSpace::explore_sharded`] answers *how many devices,
+//! and which config at each pipeline position*: it crosses the space's
+//! constraint-pruned config grid with a device-count axis, assigns
+//! configs to pipeline positions (heterogeneously up to a bounded
+//! assignment count, homogeneously beyond it — never silently), runs the
+//! [`Partitioner`] split search per assignment, and reduces the results
+//! to a Pareto front over `(latency, pipeline interval, total SRAM,
+//! device count)`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::{LinkModel, Objective, Partitioner, PlanCache, ShardPlan};
+use crate::compiler::{fan_out, CompileError, ReuseStrategy};
+use crate::config::AccelConfig;
+use crate::explorer::{pareto_indices, SearchSpace};
+use crate::serialize::Json;
+use crate::zoo;
+use crate::Result;
+
+/// Heterogeneous-assignment ceiling per model × device count: beyond
+/// `|configs|^K` assignments, the sweep falls back to homogeneous
+/// assignments only and reports what it skipped.
+const ASSIGNMENT_CAP: usize = 512;
+
+/// One costed sharding candidate: a device count, a per-position config
+/// assignment, and the best split the [`Partitioner`] found for it.
+#[derive(Debug, Clone)]
+pub struct ShardPoint {
+    /// Zoo model name.
+    pub model: String,
+    /// Square input resolution the point was compiled at.
+    pub input: usize,
+    /// Pipeline devices.
+    pub devices: usize,
+    /// The winning split for this assignment.
+    pub plan: ShardPlan,
+}
+
+impl ShardPoint {
+    /// Config names, in pipeline order.
+    pub fn cfg_names(&self) -> Vec<&str> {
+        self.plan.shards.iter().map(|s| s.cfg.name.as_str()).collect()
+    }
+
+    /// Flat JSON record for machine-readable sweep output.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("input", Json::num(self.input as f64)),
+            ("devices", Json::num(self.devices as f64)),
+            (
+                "configs",
+                Json::Arr(self.cfg_names().iter().map(|n| Json::str(n)).collect()),
+            ),
+            ("strategy", Json::str(self.plan.strategy_name())),
+            ("latency_ms", Json::num(self.plan.latency_ms)),
+            ("interval_ms", Json::num(self.plan.interval_ms)),
+            ("throughput_fps", Json::num(self.plan.throughput_fps())),
+            ("total_sram_bytes", Json::num(self.plan.total_sram_bytes() as f64)),
+            ("total_dram_bytes", Json::num(self.plan.total_dram_bytes() as f64)),
+            ("feasible", Json::Bool(self.plan.feasible)),
+        ])
+    }
+
+    fn objectives(&self) -> Vec<f64> {
+        vec![
+            self.plan.latency_ms,
+            self.plan.interval_ms,
+            self.plan.total_sram_bytes() as f64,
+            self.devices as f64,
+        ]
+    }
+}
+
+/// A sharding candidate the sweep could not cost.
+#[derive(Debug)]
+pub struct ShardFailure {
+    /// `model@input xK [configs]` of the failing assignment.
+    pub point: String,
+    /// The typed failure.
+    pub error: CompileError,
+}
+
+/// The finished sharded sweep.
+#[derive(Debug)]
+pub struct ShardExploration {
+    /// Costed points, in enumeration order (model-major, then device
+    /// count, then assignment).
+    pub points: Vec<ShardPoint>,
+    /// Assignments whose plan failed (isolated per point).
+    pub failures: Vec<ShardFailure>,
+    /// Heterogeneous assignments dropped by the per-point cap (the sweep
+    /// kept the homogeneous ones) — reported, never silent.
+    pub skipped_assignments: usize,
+}
+
+impl ShardExploration {
+    /// Unique model names in enumeration order.
+    pub fn models(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for p in &self.points {
+            if !seen.contains(&p.model) {
+                seen.push(p.model.clone());
+            }
+        }
+        seen
+    }
+
+    /// The Pareto front of one model's *feasible* points over
+    /// `(latency, pipeline interval, total SRAM, device count)` — all
+    /// minimized; fewer devices dominate at equal cost.
+    pub fn pareto_front(&self, model: &str) -> Vec<&ShardPoint> {
+        let feasible: Vec<&ShardPoint> = self
+            .points
+            .iter()
+            .filter(|p| p.model == model && p.plan.feasible)
+            .collect();
+        let objectives: Vec<Vec<f64>> = feasible.iter().map(|p| p.objectives()).collect();
+        pareto_indices(&objectives).into_iter().map(|i| feasible[i]).collect()
+    }
+
+    /// The best feasible point of one model under `objective`
+    /// (latency → single-image latency; throughput → pipeline interval),
+    /// ties broken by the other metric, then total SRAM, then device
+    /// count. `None` when nothing feasible was costed.
+    pub fn recommend(&self, model: &str, objective: Objective) -> Option<&ShardPoint> {
+        let key = |p: &ShardPoint| {
+            let (a, b) = match objective {
+                Objective::Latency => (p.plan.latency_ms, p.plan.interval_ms),
+                Objective::Throughput => (p.plan.interval_ms, p.plan.latency_ms),
+            };
+            (a, b, p.plan.total_sram_bytes() as f64, p.devices as f64)
+        };
+        self.points
+            .iter()
+            .filter(|p| p.model == model && p.plan.feasible)
+            .fold(None, |best: Option<&ShardPoint>, p| match best {
+                Some(b) if key(b) <= key(p) => Some(b),
+                _ => Some(p),
+            })
+    }
+}
+
+struct Assignment {
+    model: String,
+    input: usize,
+    configs: Vec<AccelConfig>,
+    strategy: Arc<dyn ReuseStrategy>,
+}
+
+impl SearchSpace {
+    /// Sharded exploration: cross this space's constraint-pruned config
+    /// grid with a `devices` axis and the space's reuse-strategy set
+    /// (every shard of one candidate uses one strategy; default
+    /// cut-point, matching [`SearchSpace::enumerate`]), assign configs
+    /// to pipeline positions (all heterogeneous assignments while
+    /// `|configs|^K` stays within a bounded budget, homogeneous ones
+    /// beyond it — the drop count is reported in
+    /// [`ShardExploration::skipped_assignments`]), and run the
+    /// [`Partitioner`] split search for every assignment across
+    /// `threads` workers. Shard subgraph compiles are memoized per model
+    /// across assignments, so overlapping assignments only pay
+    /// arithmetic.
+    ///
+    /// The split search per assignment minimizes `objective`; the
+    /// returned exploration still carries both latency and interval for
+    /// every point, so the 4-axis Pareto front is objective-independent.
+    pub fn explore_sharded(
+        &self,
+        devices: &[usize],
+        link: &LinkModel,
+        objective: Objective,
+        threads: usize,
+    ) -> Result<ShardExploration> {
+        if threads == 0 {
+            return Err(CompileError::config("need at least one explore worker thread"));
+        }
+        if devices.is_empty() || devices.contains(&0) {
+            return Err(CompileError::config(
+                "device-count axis must be non-empty with every entry >= 1",
+            ));
+        }
+        let enumeration = self.enumerate()?;
+
+        // distinct configs and strategies per (model, input), in
+        // enumeration order (the space's strategy set applies per shard,
+        // so it crosses the assignment axis rather than the positions)
+        let mut order: Vec<(String, usize)> = Vec::new();
+        let mut grids: HashMap<(String, usize), Vec<AccelConfig>> = HashMap::new();
+        let mut strategies: HashMap<(String, usize), Vec<Arc<dyn ReuseStrategy>>> =
+            HashMap::new();
+        for p in &enumeration.points {
+            let key = (p.model.clone(), p.input);
+            let cfgs = grids.entry(key.clone()).or_insert_with(|| {
+                order.push(key.clone());
+                Vec::new()
+            });
+            if cfgs.iter().all(|c| c.name != p.cfg.name) {
+                cfgs.push(p.cfg.clone());
+            }
+            // dedup by Arc identity, not name: parameterized strategies
+            // (SmartShuttle at two buffer sizes) share a name but are
+            // distinct candidates; enumerate() clones one Arc per
+            // configured strategy, so identity is exact here
+            let strats = strategies.entry(key).or_default();
+            if strats.iter().all(|s| !Arc::ptr_eq(s, &p.strategy)) {
+                strats.push(p.strategy.clone());
+            }
+        }
+
+        let mut assignments: Vec<Assignment> = Vec::new();
+        let mut skipped = 0usize;
+        for key in &order {
+            let cfgs = &grids[key];
+            for strategy in &strategies[key] {
+                for &k in devices {
+                    let total = cfgs.len().checked_pow(k as u32);
+                    if total.is_some_and(|t| t <= ASSIGNMENT_CAP) {
+                        for_each_assignment(cfgs, k, |configs| {
+                            assignments.push(Assignment {
+                                model: key.0.clone(),
+                                input: key.1,
+                                configs,
+                                strategy: strategy.clone(),
+                            });
+                        });
+                    } else {
+                        // keep the homogeneous diagonal, report the rest
+                        for cfg in cfgs {
+                            assignments.push(Assignment {
+                                model: key.0.clone(),
+                                input: key.1,
+                                configs: vec![cfg.clone(); k],
+                                strategy: strategy.clone(),
+                            });
+                        }
+                        skipped = skipped
+                            .saturating_add(total.map_or(usize::MAX, |t| t - cfgs.len()));
+                    }
+                }
+            }
+        }
+
+        // one graph + one memo per (model, input): every assignment of a
+        // model reuses the same extracted subgraphs and range costs
+        let mut graphs: HashMap<(String, usize), Arc<crate::graph::Graph>> = HashMap::new();
+        let mut caches: HashMap<(String, usize), Arc<PlanCache>> = HashMap::new();
+        for key in &order {
+            let graph = zoo::by_name(&key.0, key.1)
+                .ok_or_else(|| CompileError::unknown_model(key.0.clone()))?;
+            graphs.insert(key.clone(), Arc::new(graph));
+            caches.insert(key.clone(), Arc::new(PlanCache::default()));
+        }
+
+        let results: Vec<Result<ShardPlan>> = fan_out(assignments.len(), threads, |i| {
+            let a = &assignments[i];
+            let key = (a.model.clone(), a.input);
+            let partitioner = Partitioner::heterogeneous(a.configs.clone())?
+                .with_link(*link)
+                .with_strategy(a.strategy.clone())
+                .with_objective(objective);
+            partitioner.plan_cached(&graphs[&key], &caches[&key])
+        });
+
+        let mut points = Vec::with_capacity(assignments.len());
+        let mut failures = Vec::new();
+        for (a, r) in assignments.iter().zip(results) {
+            match r {
+                Ok(plan) => points.push(ShardPoint {
+                    model: a.model.clone(),
+                    input: a.input,
+                    devices: a.configs.len(),
+                    plan,
+                }),
+                Err(error) => failures.push(ShardFailure {
+                    point: format!(
+                        "{}@{} x{} [{}] ({})",
+                        a.model,
+                        a.input,
+                        a.configs.len(),
+                        a.configs.iter().map(|c| c.name.as_str()).collect::<Vec<_>>().join(", "),
+                        a.strategy.name()
+                    ),
+                    error,
+                }),
+            }
+        }
+        Ok(ShardExploration { points, failures, skipped_assignments: skipped })
+    }
+}
+
+/// Visit every length-`k` assignment of `cfgs` to pipeline positions
+/// (odometer over `|cfgs|^k`).
+fn for_each_assignment(cfgs: &[AccelConfig], k: usize, mut f: impl FnMut(Vec<AccelConfig>)) {
+    let mut digits = vec![0usize; k];
+    loop {
+        f(digits.iter().map(|&d| cfgs[d].clone()).collect());
+        let mut i = 0;
+        loop {
+            if i == k {
+                return;
+            }
+            digits[i] += 1;
+            if digits[i] < cfgs.len() {
+                break;
+            }
+            digits[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharded_exploration_sweeps_devices_and_assignments() {
+        let space = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("tinynet")
+            .sram_budgets(&[2_000_000, 8_000_000]);
+        let link = LinkModel::pcie_gen3();
+        let e = space
+            .explore_sharded(&[1, 2], &link, Objective::Latency, 2)
+            .unwrap();
+        // 2 configs: K=1 -> 2 assignments, K=2 -> 4 assignments
+        assert_eq!(e.points.len() + e.failures.len(), 6);
+        assert!(e.failures.is_empty(), "{:?}", e.failures);
+        assert_eq!(e.skipped_assignments, 0);
+        assert!(e.points.iter().any(|p| p.devices == 2));
+        // heterogeneous assignments made it in
+        assert!(e
+            .points
+            .iter()
+            .any(|p| p.devices == 2 && p.cfg_names()[0] != p.cfg_names()[1]));
+        let front = e.pareto_front("tinynet");
+        assert!(!front.is_empty());
+        // a 1-device point at equal-or-better cost dominates; the front
+        // never lists a point beaten on all four axes
+        for p in &front {
+            assert!(p.plan.feasible);
+        }
+        let best = e.recommend("tinynet", Objective::Latency).unwrap();
+        assert!(front
+            .iter()
+            .any(|p| p.plan.latency_ms <= best.plan.latency_ms));
+        assert!(e.recommend("missing", Objective::Latency).is_none());
+    }
+
+    #[test]
+    fn sharded_exploration_honours_the_space_strategy_set() {
+        // a space restricted to one baseline must never cost a shard
+        // under the default cut-point optimizer
+        let space = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("tinynet")
+            .strategy_names(&["fixed-frame"])
+            .unwrap();
+        let e = space
+            .explore_sharded(&[2], &LinkModel::pcie_gen3(), Objective::Latency, 2)
+            .unwrap();
+        assert!(!e.points.is_empty());
+        for p in &e.points {
+            assert_eq!(p.plan.strategy_name(), "fixed-frame");
+        }
+    }
+
+    #[test]
+    fn sharded_exploration_rejects_bad_axes() {
+        let space = SearchSpace::new(AccelConfig::kcu1500_int8()).model("tinynet");
+        let link = LinkModel::pcie_gen3();
+        assert!(space
+            .explore_sharded(&[], &link, Objective::Latency, 2)
+            .is_err());
+        assert!(space
+            .explore_sharded(&[0], &link, Objective::Latency, 2)
+            .is_err());
+        assert!(space
+            .explore_sharded(&[1], &link, Objective::Latency, 0)
+            .is_err());
+    }
+
+    #[test]
+    fn assignment_odometer_counts() {
+        let cfgs = vec![AccelConfig::kcu1500_int8(), AccelConfig::table2_int16()];
+        let mut n = 0;
+        for_each_assignment(&cfgs, 3, |a| {
+            assert_eq!(a.len(), 3);
+            n += 1;
+        });
+        assert_eq!(n, 8);
+    }
+}

@@ -4,9 +4,11 @@
 
 use shortcutfusion::compiler::{CompileError, Compiler};
 use shortcutfusion::config::AccelConfig;
+use shortcutfusion::graph::Shape;
 use shortcutfusion::isa::{decode, encode, WORDS_PER_INSTR};
 use shortcutfusion::program::format::{fnv1a32, unwrap as unwrap_container};
-use shortcutfusion::program::Program;
+use shortcutfusion::program::{Program, ShardBoundary, TensorDesc};
+use shortcutfusion::shard::Partitioner;
 use shortcutfusion::testutil::{forall, random_instruction};
 use shortcutfusion::zoo;
 
@@ -113,6 +115,111 @@ fn container_checksum_covers_the_whole_payload() {
     // header stores fnv1a32(payload); recompute independently
     let stored = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
     assert_eq!(stored, fnv1a32(payload));
+}
+
+/// Shard programs: every boundary-stamped artifact must round-trip
+/// save → load → re-save byte-identically with its descriptors intact.
+#[test]
+fn shard_boundary_descriptors_survive_the_round_trip_byte_identically() {
+    let plan = Partitioner::homogeneous(AccelConfig::kcu1500_int8(), 2)
+        .unwrap()
+        .plan(&zoo::tinynet())
+        .unwrap();
+    let programs = plan.pack().unwrap();
+    assert_eq!(programs.len(), 2);
+    for (i, p) in programs.iter().enumerate() {
+        let b = p.boundary().expect("sharded artifact carries its boundary");
+        assert_eq!((b.index, b.count), (i, 2));
+        assert_eq!(b.ingress.is_none(), i == 0);
+        assert_eq!(b.egress.is_none(), i == 1);
+
+        let bytes = p.to_bytes();
+        let loaded = Program::from_bytes(&bytes).unwrap_or_else(|e| panic!("shard {i}: {e}"));
+        assert_eq!(loaded.to_bytes(), bytes, "shard {i}: re-save is not byte-identical");
+        assert_eq!(loaded.boundary(), p.boundary(), "shard {i}: descriptors changed");
+        assert_eq!(loaded.input_shape(), p.input_shape(), "shard {i}");
+    }
+    // consecutive descriptors agree: shard 0's egress is the tensor
+    // shard 1's graph ingests
+    let egress = programs[0].boundary().unwrap().egress.clone().unwrap();
+    let ingress = programs[1].boundary().unwrap().ingress.clone().unwrap();
+    assert_eq!(egress, ingress);
+    assert_eq!(ingress.shape, programs[1].input_shape());
+}
+
+/// Bit flips anywhere in a sharded artifact — header included — must be
+/// rejected, exactly like the unsharded container property above.
+#[test]
+fn corrupt_sharded_artifacts_are_rejected() {
+    let plan = Partitioner::homogeneous(AccelConfig::kcu1500_int8(), 2)
+        .unwrap()
+        .plan(&zoo::tinynet())
+        .unwrap();
+    let bytes = plan.pack().unwrap()[0].to_bytes();
+    forall("sharded bit flips never load", 200, |rng| {
+        let mut bad = bytes.clone();
+        let pos = rng.below(bad.len());
+        bad[pos] ^= 1u8 << rng.below(8);
+        assert!(
+            Program::from_bytes(&bad).is_err(),
+            "flip at byte {pos} loaded successfully"
+        );
+    });
+    // truncated header
+    assert!(Program::from_bytes(&bytes[..12]).is_err());
+}
+
+/// Self-inconsistent boundary records are rejected at stamp time.
+#[test]
+fn inconsistent_shard_boundaries_are_rejected() {
+    let program = shortcutfusion::testutil::pack_program(&zoo::tinynet(), None);
+    let desc = |shape: Shape| TensorDesc { name: "stem/relu".into(), shape };
+    let input = program.input_shape();
+    // a pipeline needs >= 2 shards
+    assert!(program
+        .clone()
+        .with_boundary(ShardBoundary { index: 0, count: 1, ingress: None, egress: None })
+        .is_err());
+    // index out of range
+    assert!(program
+        .clone()
+        .with_boundary(ShardBoundary {
+            index: 2,
+            count: 2,
+            ingress: Some(desc(input)),
+            egress: None,
+        })
+        .is_err());
+    // first shard must not declare an ingress
+    assert!(program
+        .clone()
+        .with_boundary(ShardBoundary {
+            index: 0,
+            count: 2,
+            ingress: Some(desc(input)),
+            egress: Some(desc(input)),
+        })
+        .is_err());
+    // ingress shape must match the graph's input feed
+    assert!(program
+        .clone()
+        .with_boundary(ShardBoundary {
+            index: 1,
+            count: 2,
+            ingress: Some(desc(Shape::new(1, 1, 1))),
+            egress: None,
+        })
+        .is_err());
+    // egress must name a node of the shard graph
+    assert!(program
+        .clone()
+        .with_boundary(ShardBoundary {
+            index: 0,
+            count: 2,
+            ingress: None,
+            egress: Some(TensorDesc { name: "no-such-node".into(), shape: input }),
+        })
+        .is_err());
 }
 
 #[test]

@@ -1,0 +1,237 @@
+//! Multi-FPGA sharding acceptance tests.
+//!
+//! The load-bearing properties of `shard::Partitioner` +
+//! `engine::ShardedBackend`:
+//! (a) a 2-shard ReferenceBackend chain is **bit-identical** to the
+//!     unsharded functional simulator on multiple zoo models;
+//! (b) the sharded virtual-timing chain equals the partitioner's
+//!     analytical pipeline model within rounding;
+//! (c) as link bandwidth grows, the best split's latency is monotone
+//!     non-increasing and converges to the pure sum of shard latencies,
+//!     and a 1-device plan degenerates byte-identically to
+//!     `Compiler::pack`.
+
+use std::sync::Arc;
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::compiler::Compiler;
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::engine::{
+    EngineConfig, ExecutionBackend, InferenceEngine, ReferenceBackend, ShardedBackend,
+    VirtualAccelBackend,
+};
+use shortcutfusion::funcsim::{Params, Tensor};
+use shortcutfusion::graph::Graph;
+use shortcutfusion::shard::{boundaries, LinkModel, Partitioner, ShardPlan};
+use shortcutfusion::testutil::Rng;
+use shortcutfusion::zoo;
+
+fn cfg() -> AccelConfig {
+    AccelConfig::kcu1500_int8()
+}
+
+fn plan_k(graph: &Graph, devices: usize, link: LinkModel) -> ShardPlan {
+    Partitioner::homogeneous(cfg(), devices)
+        .unwrap()
+        .with_link(link)
+        .plan(graph)
+        .unwrap_or_else(|e| panic!("{}: {e}", graph.name))
+}
+
+fn random_input(shape: shortcutfusion::graph::Shape, seed: u64) -> Tensor {
+    let mut rng = Rng::from_seed(seed);
+    Tensor::from_vec(shape, rng.i8_vec(shape.numel()))
+}
+
+/// (a) bit-identical 2-shard reference chain, on two zoo models.
+#[test]
+fn two_shard_reference_chain_is_bit_identical_to_unsharded_funcsim() {
+    for graph in [zoo::tinynet(), zoo::resnet18(64)] {
+        let gg = analyze(&graph);
+        let params = Params::random(&gg, 11);
+
+        // unsharded ground truth through the same backend API
+        let compiler = Compiler::new(cfg()).with_params(params.clone());
+        let analyzed = compiler.analyze(&graph).unwrap();
+        let lowered = compiler
+            .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+            .unwrap();
+        let full = compiler.pack(&lowered).unwrap();
+        let input = random_input(full.input_shape(), 3);
+        let want = ReferenceBackend.run(&full, &input).unwrap().output.unwrap();
+
+        // 2-shard chain over the same parameters
+        let plan = plan_k(&graph, 2, LinkModel::pcie_gen3());
+        let programs: Vec<Arc<_>> = plan
+            .pack_with_params(Some(&params))
+            .unwrap()
+            .into_iter()
+            .map(Arc::new)
+            .collect();
+        assert_eq!(programs.len(), 2, "{}", graph.name);
+        let chain =
+            ShardedBackend::new(programs, Arc::new(ReferenceBackend), LinkModel::pcie_gen3())
+                .unwrap();
+        let front = chain.front().clone();
+        let got = chain.run(&front, &input).unwrap().output.unwrap();
+
+        assert_eq!(got.shape, want.shape, "{}", graph.name);
+        assert_eq!(got.data, want.data, "{}: sharded chain diverged", graph.name);
+    }
+}
+
+/// (b) the virtual-timing chain reproduces the analytical pipeline model.
+#[test]
+fn sharded_virtual_timing_matches_the_analytical_pipeline_model() {
+    for (graph, devices) in [(zoo::tinynet(), 2), (zoo::resnet18(64), 3)] {
+        let link = LinkModel::new(4.0, 10.0).unwrap();
+        let plan = plan_k(&graph, devices, link);
+        let programs: Vec<Arc<_>> =
+            plan.pack().unwrap().into_iter().map(Arc::new).collect();
+        let chain =
+            ShardedBackend::new(programs, Arc::new(VirtualAccelBackend), link).unwrap();
+        let front = chain.front().clone();
+        let input = Tensor::zeros(front.input_shape());
+        let r = chain.run(&front, &input).unwrap();
+
+        let got = r.model_latency_ms.unwrap();
+        let tol = 1e-9 * plan.latency_ms.max(1.0);
+        assert!(
+            (got - plan.latency_ms).abs() <= tol,
+            "{} x{devices}: chain {got} ms vs plan {} ms",
+            graph.name,
+            plan.latency_ms
+        );
+        // instruction-replay traffic equals the analytical eq-8/9 total,
+        // summed across shards
+        assert_eq!(r.dram_bytes.unwrap(), plan.total_dram_bytes(), "{}", graph.name);
+    }
+}
+
+/// The engine serves a sharded model transparently through the chain.
+#[test]
+fn inference_engine_serves_a_sharded_model() {
+    let plan = plan_k(&zoo::tinynet(), 2, LinkModel::pcie_gen3());
+    let programs: Vec<Arc<_>> = plan.pack().unwrap().into_iter().map(Arc::new).collect();
+    let chain = ShardedBackend::new(
+        programs,
+        Arc::new(VirtualAccelBackend),
+        LinkModel::pcie_gen3(),
+    )
+    .unwrap();
+    let front = chain.front().clone();
+    let engine = InferenceEngine::new(
+        front.clone(),
+        Arc::new(chain),
+        EngineConfig { workers: 2, queue_capacity: 16, max_batch: 4 },
+    );
+    let pending: Vec<_> = (0..8)
+        .map(|_| engine.submit(Tensor::zeros(front.input_shape())).unwrap())
+        .collect();
+    for p in pending {
+        let done = p.wait().unwrap();
+        assert_eq!(done.result.backend, "sharded");
+        assert!((done.result.model_latency_ms.unwrap() - plan.latency_ms).abs() < 1e-9);
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed, 8);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.backend, "sharded");
+}
+
+/// (c) part 1: a 1-device plan degenerates exactly to `Compiler::pack`.
+#[test]
+fn one_device_plan_packs_byte_identically_to_the_unsharded_compiler() {
+    for graph in [zoo::tinynet(), zoo::resnet18(64)] {
+        let plan = plan_k(&graph, 1, LinkModel::pcie_gen3());
+        let programs = plan.pack().unwrap();
+        assert_eq!(programs.len(), 1);
+        assert!(programs[0].boundary().is_none(), "{}", graph.name);
+
+        let compiler = Compiler::new(cfg());
+        let analyzed = compiler.analyze(&graph).unwrap();
+        let lowered = compiler
+            .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+            .unwrap();
+        let direct = compiler.pack(&lowered).unwrap();
+        assert_eq!(
+            programs[0].to_bytes(),
+            direct.to_bytes(),
+            "{}: K=1 plan must be byte-identical to today's pack",
+            graph.name
+        );
+    }
+}
+
+/// (c) part 2: best-split latency is monotone in link bandwidth and
+/// converges to the transfer-free sum of shard latencies.
+#[test]
+fn best_split_latency_lower_bounds_as_link_bandwidth_grows() {
+    let graph = zoo::resnet18(64);
+    let ladder = [2.0, 8.0, 64.0, 1e6];
+    let mut last = f64::INFINITY;
+    for gbps in ladder {
+        let plan = plan_k(&graph, 2, LinkModel::new(gbps, 0.0).unwrap());
+        assert!(
+            plan.latency_ms <= last + 1e-12,
+            "best-split latency must not grow with bandwidth ({gbps} GB/s: {} vs {last})",
+            plan.latency_ms
+        );
+        last = plan.latency_ms;
+    }
+    // at (numerically) infinite bandwidth and zero setup latency the
+    // transfers vanish: latency is exactly the sum of the two shard
+    // latencies, lower-bounded by the slower shard
+    let free = plan_k(&graph, 2, LinkModel::new(f64::INFINITY, 0.0).unwrap());
+    let sum: f64 = free.shards.iter().map(|s| s.latency_ms).sum();
+    assert!((free.latency_ms - sum).abs() <= 1e-9 * sum, "{} vs {sum}", free.latency_ms);
+    let slower = free.shards.iter().map(|s| s.latency_ms).fold(0.0f64, f64::max);
+    assert!(free.latency_ms >= slower);
+    assert_eq!(free.interval_ms, slower, "free links make the slower shard the bottleneck");
+    assert!(free.latency_ms <= last + 1e-12, "infinite link is the limit of the ladder");
+}
+
+/// Boundary discovery: single-tensor cuts only, heads in the last shard.
+#[test]
+fn boundary_discovery_is_structurally_sound() {
+    // classifiers offer many cuts; every descriptor names a real node
+    let g = zoo::resnet18(64);
+    let bounds = boundaries(&g).unwrap();
+    assert!(bounds.len() >= 4, "{}", bounds.len());
+    for b in &bounds {
+        let node = g.find(&b.tensor.name).expect("crossing node exists");
+        assert_eq!(g.node(node).out_shape, b.tensor.shape);
+    }
+    // a multi-output detector still offers backbone cuts
+    assert!(!boundaries(&zoo::yolov3(256)).unwrap().is_empty());
+}
+
+/// Heterogeneous deployments: configs apply in pipeline order, and plan
+/// feasibility is exactly the conjunction of per-shard feasibility, each
+/// shard judged against its *own* device's budget.
+#[test]
+fn heterogeneous_configs_apply_in_pipeline_order() {
+    let graph = zoo::resnet18(64);
+    let mut big = cfg();
+    big.name = "big-board".into();
+    let mut small = cfg();
+    small.name = "small-board".into();
+    small.sram_budget = big.sram_budget / 4;
+    let plan = Partitioner::heterogeneous(vec![big, small])
+        .unwrap()
+        .plan(&graph)
+        .unwrap();
+    assert_eq!(plan.devices(), 2);
+    assert_eq!(plan.shards[0].cfg.name, "big-board");
+    assert_eq!(plan.shards[1].cfg.name, "small-board");
+    assert_eq!(plan.feasible, plan.shards.iter().all(|s| s.feasible));
+    for s in &plan.shards {
+        if s.feasible {
+            assert!(s.sram_bytes <= s.cfg.sram_budget, "shard {}", s.index);
+        }
+    }
+    // packed artifacts embed their own device's config
+    let programs = plan.pack().unwrap();
+    assert_eq!(programs[0].cfg().name, "big-board");
+    assert_eq!(programs[1].cfg().name, "small-board");
+}
