@@ -1,0 +1,243 @@
+//! Buffer-pool sweep: pool size × replacement policy × access pattern.
+//!
+//! Drives `pool::BufferPool` directly with a synthetic model zoo (64
+//! segments of 4 MB) so the sweep isolates pool behaviour from compile
+//! and backend cost. For every combination it reports the hit rate,
+//! eviction count, total modeled cold-load time, and the *measured*
+//! wall-clock cost of the three pin classes — hit, miss without
+//! eviction, miss with eviction — which are distinct by construction
+//! (a hit is a recency touch, a miss pays insert + modeled DRAM fill,
+//! an evicting miss additionally runs the policy's victim search).
+//!
+//! The `mixed-scan` pattern (a hot pair touched twice per round, then a
+//! scan longer than the pool) demonstrates the policy crossover: the
+//! scan-resistant segmented LRU keeps the hot set while plain LRU loses
+//! it to every scan. The bench asserts at least one measured crossover.
+//!
+//! Run: `cargo bench --bench pool [-- --json-out FILE]`.
+
+use std::time::Instant;
+
+use shortcutfusion::bench::Table;
+use shortcutfusion::pool::{policy_by_name, BufferPool, PoolConfig, SegmentId, POLICY_NAMES};
+use shortcutfusion::serialize::Json;
+use shortcutfusion::testutil::Rng;
+
+const SEGMENT_MB: u64 = 4;
+const SEGMENTS: u64 = 64;
+const ACCESSES: usize = 4096;
+
+fn trace(pattern: &str) -> Vec<u64> {
+    let mut rng = Rng::from_seed(0xB00C);
+    match pattern {
+        // a cyclic walk over the whole zoo — the classic loop that
+        // thrashes every recency-based policy when it exceeds the pool
+        "scan" => (0..ACCESSES).map(|i| i as u64 % SEGMENTS).collect(),
+        // 1/8 of the zoo takes 80 % of the traffic
+        "hot-set" => {
+            let hot = SEGMENTS / 8;
+            (0..ACCESSES)
+                .map(|_| {
+                    if rng.unit() < 0.8 {
+                        rng.next_u64() % hot
+                    } else {
+                        hot + rng.next_u64() % (SEGMENTS - hot)
+                    }
+                })
+                .collect()
+        }
+        // log-uniform ranks: a zipf-like popularity tail
+        "zipf" => (0..ACCESSES)
+            .map(|_| (((SEGMENTS as f64).powf(rng.unit()) as u64) - 1).min(SEGMENTS - 1))
+            .collect(),
+        // a hot pair touched twice per round, then a scan of fresh
+        // segments longer than the pool: scan-resistance pays off here
+        "mixed-scan" => {
+            let mut t = Vec::new();
+            let mut fresh = 1_000u64;
+            for _ in 0..64 {
+                t.extend([0u64, 1, 0, 1]);
+                for _ in 0..40 {
+                    t.push(fresh);
+                    fresh += 1;
+                }
+            }
+            t
+        }
+        other => unreachable!("unknown pattern {other}"),
+    }
+}
+
+struct Row {
+    pool_mb: u64,
+    policy: &'static str,
+    pattern: &'static str,
+    accesses: usize,
+    hit_rate: f64,
+    evictions: u64,
+    cold_total_ms: f64,
+    hit_ns: f64,
+    miss_ns: f64,
+    evict_ns: f64,
+}
+
+fn run_one(pool_mb: u64, policy: &'static str, pattern: &'static str, trace: &[u64]) -> Row {
+    let pool = BufferPool::new(
+        PoolConfig::new(pool_mb * 1_000_000),
+        policy_by_name(policy).expect("policy"),
+    )
+    .expect("pool");
+    let bytes = SEGMENT_MB * 1_000_000;
+    // (total ns, count) per pin class
+    let (mut hit, mut miss, mut evict) = ((0.0, 0u64), (0.0, 0u64), (0.0, 0u64));
+    for &seg in trace {
+        let full = pool.capacity_bytes() - pool.used_bytes() < bytes;
+        let t0 = Instant::now();
+        let guard = pool.pin(SegmentId(seg), bytes, "bench");
+        let was_hit = guard.hit();
+        drop(guard);
+        let ns = t0.elapsed().as_nanos() as f64;
+        let class = if was_hit {
+            &mut hit
+        } else if full {
+            &mut evict
+        } else {
+            &mut miss
+        };
+        class.0 += ns;
+        class.1 += 1;
+    }
+    let stats = pool.stats();
+    let mean = |(total, n): (f64, u64)| if n == 0 { 0.0 } else { total / n as f64 };
+    Row {
+        pool_mb,
+        policy,
+        pattern,
+        accesses: trace.len(),
+        hit_rate: stats.hit_rate(),
+        evictions: stats.evictions,
+        cold_total_ms: stats.cold_load_total_ms,
+        hit_ns: mean(hit),
+        miss_ns: mean(miss),
+        evict_ns: mean(evict),
+    }
+}
+
+fn main() {
+    let json_out = std::env::args()
+        .collect::<Vec<_>>()
+        .windows(2)
+        .find(|w| w[0] == "--json-out")
+        .map(|w| w[1].clone());
+
+    let patterns = ["scan", "hot-set", "zipf", "mixed-scan"];
+    let traces: Vec<Vec<u64>> = patterns.iter().map(|p| trace(p)).collect();
+
+    let mut rows = Vec::new();
+    for &pool_mb in &[32u64, 128] {
+        for &policy in POLICY_NAMES {
+            for (&pattern, trace) in patterns.iter().zip(&traces) {
+                rows.push(run_one(pool_mb, policy, pattern, trace));
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "buffer pool: {SEGMENTS} segments x {SEGMENT_MB} MB, \
+             pool size x policy x access pattern"
+        ),
+        &[
+            "pool MB", "policy", "pattern", "hit %", "evictions", "cold ms",
+            "hit ns", "miss ns", "evict ns",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.pool_mb.to_string(),
+            r.policy.into(),
+            r.pattern.into(),
+            format!("{:.1}", r.hit_rate * 100.0),
+            r.evictions.to_string(),
+            format!("{:.1}", r.cold_total_ms),
+            format!("{:.0}", r.hit_ns),
+            format!("{:.0}", r.miss_ns),
+            format!("{:.0}", r.evict_ns),
+        ]);
+    }
+    t.print();
+
+    // measured crossovers: (pool, pattern) combinations where the
+    // scan-resistant policy strictly beats plain LRU
+    let crossovers: Vec<&Row> = rows
+        .iter()
+        .filter(|r| r.policy == "slru")
+        .filter(|s| {
+            rows.iter().any(|l| {
+                l.policy == "lru"
+                    && l.pool_mb == s.pool_mb
+                    && l.pattern == s.pattern
+                    && s.hit_rate > l.hit_rate
+            })
+        })
+        .collect();
+    for c in &crossovers {
+        println!(
+            "crossover: slru {:.1} % beats lru on {} @ {} MB",
+            c.hit_rate * 100.0,
+            c.pattern,
+            c.pool_mb
+        );
+    }
+    assert!(
+        !crossovers.is_empty(),
+        "expected >= 1 policy crossover (slru > lru on a scan-heavy pattern)"
+    );
+
+    if let Some(path) = json_out {
+        let doc = Json::obj(vec![
+            ("segment_mb", Json::num(SEGMENT_MB as f64)),
+            ("segments", Json::num(SEGMENTS as f64)),
+            (
+                "rows",
+                Json::Arr(
+                    rows.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("pool_mb", Json::num(r.pool_mb as f64)),
+                                ("policy", Json::str(r.policy)),
+                                ("pattern", Json::str(r.pattern)),
+                                ("accesses", Json::num(r.accesses as f64)),
+                                ("hit_rate", Json::num(r.hit_rate)),
+                                ("evictions", Json::num(r.evictions as f64)),
+                                ("cold_total_ms", Json::num(r.cold_total_ms)),
+                                ("hit_ns", Json::num(r.hit_ns)),
+                                ("miss_ns", Json::num(r.miss_ns)),
+                                ("evict_ns", Json::num(r.evict_ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "crossovers",
+                Json::Arr(
+                    crossovers
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("pool_mb", Json::num(c.pool_mb as f64)),
+                                ("pattern", Json::str(c.pattern)),
+                                ("slru_hit_rate", Json::num(c.hit_rate)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let mut text = doc.to_string_pretty();
+        text.push('\n');
+        std::fs::write(&path, text).expect("write --json-out");
+        println!("wrote {path}");
+    }
+}

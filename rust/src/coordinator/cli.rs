@@ -9,6 +9,12 @@
 //! shortcutfusion run     FILE [--backend B] [--seed N]
 //! shortcutfusion serve-bench FILE [--backend B] [--requests N] [--workers N]
 //!                        [--batch N] [--queue N] [--json-out FILE]
+//! shortcutfusion serve-zoo <model> [<model> ...] [--input N] [--config FILE]
+//!                        [--backend B] [--pool-mb X] [--policy P] [--quota-mb X]
+//!                        [--link-gbps X] [--link-latency-us X] [--rounds N]
+//!                        [--requests N] [--workers N] [--batch N]
+//!                        [--random-params] [--verify] [--json-out FILE]
+//!                        [--expect-evictions]
 //! shortcutfusion explore <model> [...] [--sram-budgets N,N] [--mac RxC,...]
 //!                        [--dram-gbps X,...] [--strategies S,...] [--input N]
 //!                        [--max-bram N] [--max-dram-gbps X] [--max-dsp N]
@@ -33,11 +39,12 @@ use crate::compiler::{strategy, CompileError, Compiler, Session};
 use crate::config::AccelConfig;
 use crate::engine::{
     backend_by_name, EngineConfig, EngineStats, ExecutionBackend, InferenceEngine,
-    BACKEND_NAMES,
+    ReferenceBackend, BACKEND_NAMES,
 };
 use crate::explorer::{ExplorePoint, Exploration, SearchSpace};
 use crate::funcsim::{Params, Tensor};
 use crate::optimizer::Optimizer;
+use crate::pool::{policy_by_name, BufferPool, PoolConfig, PooledBackend, POLICY_NAMES};
 use crate::program::Program;
 use crate::shard::{LinkModel, Objective, Partitioner, ShardPlan};
 use crate::serialize::{load_frozen, save_frozen};
@@ -65,6 +72,18 @@ COMMANDS:
                                  serve a packed program through the inference
                                  engine and print the serving stats (--json-out
                                  additionally writes them as machine-readable JSON)
+    serve-zoo <model> [<model> ...] [--input N] [--config FILE] [--backend B]
+              [--pool-mb X] [--policy P] [--quota-mb X] [--link-gbps X]
+              [--link-latency-us X] [--rounds N] [--requests N] [--workers N]
+              [--batch N] [--random-params] [--verify] [--json-out FILE]
+              [--expect-evictions]
+                                 serve several models through one multi-tenant
+                                 device-DRAM buffer pool, one engine + tenant per
+                                 model (default pool: half the combined weight
+                                 footprint, so paging is visible; --verify checks
+                                 pooled reference outputs bit-identical to
+                                 unpooled runs; --expect-evictions exits nonzero
+                                 unless the pool evicted and no request failed)
     explore <model> [<model> ...] [--config FILE] [--input N]
             [--sram-budgets N,N,..] [--mac RxC,..] [--dram-gbps X,..]
             [--strategies S,..] [--max-bram N] [--max-dram-gbps X] [--max-dsp N]
@@ -102,6 +121,9 @@ BACKENDS (for --backend):
     reference (bit-exact funcsim; the program must carry parameters),
     pjrt (stub: packed programs do not embed HLO artifacts yet — always
           reports Unsupported; see MIGRATION.md)
+
+POLICIES (for serve-zoo --policy):
+    slru (default: scan-resistant segmented LRU), lru, clock
 ";
 
 /// CLI entry point.
@@ -121,6 +143,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "pack" => cmd_pack(&rest),
         "run" => cmd_run(&rest),
         "serve-bench" => cmd_serve_bench(&rest),
+        "serve-zoo" => cmd_serve_zoo(&rest),
         "explore" => cmd_explore(&rest),
         "shard" => cmd_shard(&rest),
         "sweep" => cmd_sweep(&rest),
@@ -163,6 +186,21 @@ fn parse_strategy(args: &[String]) -> Result<Box<dyn crate::compiler::ReuseStrat
     })
 }
 
+/// Resolve `--input` for `name` (default: the model's default input),
+/// rejecting explicit values a fixed-geometry builder would ignore.
+fn model_input(args: &[String], name: &str) -> Result<usize> {
+    match flag_value(args, "--input") {
+        Some(v) => {
+            let n = v
+                .parse::<usize>()
+                .map_err(|_| CompileError::config(format!("bad --input {v:?}")))?;
+            check_fixed_input(name, n)?;
+            Ok(n)
+        }
+        None => Ok(zoo::default_input(name)),
+    }
+}
+
 fn parse_model(args: &[String]) -> Result<(crate::graph::Graph, AccelConfig)> {
     let name = args
         .first()
@@ -170,16 +208,7 @@ fn parse_model(args: &[String]) -> Result<(crate::graph::Graph, AccelConfig)> {
         .ok_or_else(|| {
             CompileError::config("expected a model name — see `shortcutfusion list`")
         })?;
-    let input = match flag_value(args, "--input") {
-        Some(v) => {
-            let n = v
-                .parse::<usize>()
-                .map_err(|_| CompileError::config(format!("bad --input {v:?}")))?;
-            check_fixed_input(name, n)?;
-            n
-        }
-        None => zoo::default_input(name),
-    };
+    let input = model_input(args, name)?;
     let cfg = match flag_value(args, "--config") {
         Some(p) => AccelConfig::from_toml_file(std::path::Path::new(&p))?,
         None => AccelConfig::kcu1500_int8(),
@@ -384,6 +413,215 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse an optional `--flag MB` value into bytes.
+fn parse_mb_bytes(args: &[String], flag: &str) -> Result<Option<u64>> {
+    match flag_value(args, flag) {
+        None => Ok(None),
+        Some(v) => match v.parse::<f64>() {
+            Ok(mb) if mb > 0.0 => Ok(Some((mb * 1e6) as u64)),
+            _ => Err(CompileError::config(format!(
+                "bad {flag} {v:?} (need a positive number of megabytes)"
+            ))),
+        },
+    }
+}
+
+/// Compile, pack, and serve several zoo models through one shared
+/// device-DRAM buffer pool — one engine and one pool tenant per model.
+fn cmd_serve_zoo(args: &[String]) -> Result<()> {
+    let models: Vec<String> =
+        args.iter().take_while(|a| !a.starts_with("--")).cloned().collect();
+    if models.is_empty() {
+        return Err(CompileError::config(
+            "expected at least one model — see `shortcutfusion list`",
+        ));
+    }
+    let cfg = match flag_value(args, "--config") {
+        Some(p) => AccelConfig::from_toml_file(std::path::Path::new(&p))?,
+        None => AccelConfig::kcu1500_int8(),
+    };
+    let backend = parse_backend(args)?;
+    let verify = args.iter().any(|a| a == "--verify");
+    if verify && backend.name() != "reference" {
+        return Err(CompileError::config(
+            "--verify compares bit-exact outputs and needs --backend reference",
+        ));
+    }
+    // the reference backend computes, so it needs packed parameters
+    let with_params =
+        args.iter().any(|a| a == "--random-params") || backend.name() == "reference";
+    let policy_name = flag_value(args, "--policy").unwrap_or_else(|| "slru".into());
+    let policy = policy_by_name(&policy_name).ok_or_else(|| {
+        CompileError::config(format!(
+            "unknown policy {policy_name:?} — one of {POLICY_NAMES:?}"
+        ))
+    })?;
+    let link = LinkModel::new(
+        parse_float(args, "--link-gbps", LinkModel::pcie_gen3().gbps)?,
+        parse_float(args, "--link-latency-us", LinkModel::pcie_gen3().latency_us)?,
+    )?;
+    let explicit_pool = parse_mb_bytes(args, "--pool-mb")?;
+    let quota = parse_mb_bytes(args, "--quota-mb")?;
+
+    let mut programs: Vec<Arc<Program>> = Vec::with_capacity(models.len());
+    for name in &models {
+        let input = model_input(args, name)?;
+        let graph = zoo::by_name(name, input)
+            .ok_or_else(|| CompileError::unknown_model(name.clone()))?;
+        let mut compiler = Compiler::new(cfg.clone());
+        let analyzed = compiler.analyze(&graph)?;
+        if with_params {
+            compiler = compiler.with_params(Params::random(&analyzed.grouped, 7));
+        }
+        let lowered =
+            compiler.lower(&compiler.allocate(&compiler.optimize(&analyzed)?)?)?;
+        programs.push(Arc::new(compiler.pack(&lowered)?));
+    }
+
+    let combined: u64 = programs.iter().map(|p| p.resident_bytes()).sum();
+    // default pool: half the combined footprint — large enough to serve,
+    // small enough that cross-model paging is visible
+    let pool_bytes = explicit_pool.unwrap_or((combined / 2).max(1));
+    let mut pool_cfg = PoolConfig::new(pool_bytes).with_link(link);
+    if let Some(quota) = quota {
+        pool_cfg = pool_cfg.with_tenant_quota(quota);
+    }
+    let pool = Arc::new(BufferPool::new(pool_cfg, policy)?);
+
+    let rounds = parse_count(args, "--rounds", 3)?;
+    let requests = parse_count(args, "--requests", 4)?;
+    let workers = parse_count(args, "--workers", 2)?;
+    let max_batch = parse_count(args, "--batch", 2)?;
+    let engines: Vec<InferenceEngine> = programs
+        .iter()
+        .map(|p| {
+            InferenceEngine::new(
+                p.clone(),
+                Arc::new(PooledBackend::new(backend.clone(), pool.clone(), p.model())),
+                EngineConfig {
+                    workers,
+                    queue_capacity: workers * max_batch * 2,
+                    max_batch,
+                },
+            )
+        })
+        .collect();
+
+    // round-robin the tenants: each round every model serves `requests`
+    // inputs, so with pool < combined footprint the pool must page
+    let mut verified = 0u64;
+    for round in 0..rounds as u64 {
+        for (mi, engine) in engines.iter().enumerate() {
+            let mut pending = Vec::with_capacity(requests);
+            for r in 0..requests as u64 {
+                let seed = round * 7919 + mi as u64 * 131 + r + 1;
+                pending.push((seed, engine.submit(program_input(&programs[mi], seed))?));
+            }
+            for (seed, p) in pending {
+                let done = p.wait()?;
+                if verify {
+                    let input = program_input(&programs[mi], seed);
+                    let expect = ReferenceBackend.run(&programs[mi], &input)?;
+                    if done.result.output != expect.output {
+                        return Err(CompileError::Exec(format!(
+                            "{}: pooled output diverged from the unpooled reference",
+                            programs[mi].model()
+                        )));
+                    }
+                    verified += 1;
+                }
+            }
+        }
+    }
+    let per_model: Vec<EngineStats> =
+        engines.into_iter().map(|e| e.shutdown()).collect();
+    let stats = pool.stats();
+
+    let mut t = Table::new(
+        &format!(
+            "serve-zoo: {} models via {} ({} pool, {:.1} of {:.1} MB combined)",
+            models.len(),
+            backend.name(),
+            stats.policy,
+            pool_bytes as f64 / 1e6,
+            combined as f64 / 1e6,
+        ),
+        &["model", "weights MB", "completed", "failed", "p50 ms", "p95 ms"],
+    );
+    for (p, s) in programs.iter().zip(&per_model) {
+        t.row(&[
+            p.model().to_string(),
+            format!("{:.1}", p.resident_bytes() as f64 / 1e6),
+            s.completed.to_string(),
+            s.failed.to_string(),
+            format!("{:.3}", s.p50_ms),
+            format!("{:.3}", s.p95_ms),
+        ]);
+    }
+    t.print();
+    let mut pt = Table::new("pool", &["metric", "value"]);
+    pt.row(&["hits / misses".into(), format!("{} / {}", stats.hits, stats.misses)]);
+    pt.row(&["hit rate".into(), format!("{:.1} %", stats.hit_rate() * 100.0)]);
+    pt.row(&["evictions".into(), stats.evictions.to_string()]);
+    pt.row(&["bypasses / overcommits".into(),
+        format!("{} / {}", stats.bypasses, stats.overcommits)]);
+    pt.row(&["quota overruns".into(), stats.quota_overruns.to_string()]);
+    pt.row(&["peak used".into(),
+        format!("{:.1} MB", stats.peak_used_bytes as f64 / 1e6)]);
+    pt.row(&["cold load p50 / p95".into(),
+        format!("{:.3} / {:.3} ms", stats.cold_load_p50_ms, stats.cold_load_p95_ms)]);
+    pt.print();
+    if verify {
+        println!("verified {verified} outputs bit-identical to the unpooled reference");
+    }
+
+    if let Some(path) = flag_value(args, "--json-out") {
+        use crate::serialize::Json;
+        let doc = Json::obj(vec![
+            ("pool", stats.to_json()),
+            ("combined_weight_bytes", Json::num(combined as f64)),
+            ("verified", Json::num(verified as f64)),
+            (
+                "models",
+                Json::Arr(
+                    programs
+                        .iter()
+                        .zip(&per_model)
+                        .map(|(p, s)| {
+                            Json::obj(vec![
+                                ("model", Json::str(p.model())),
+                                (
+                                    "weight_bytes",
+                                    Json::num(p.resident_bytes() as f64),
+                                ),
+                                ("engine", engine_stats_json(s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        write_json(&path, &doc)?;
+    }
+
+    if args.iter().any(|a| a == "--expect-evictions") {
+        let failed: u64 = per_model.iter().map(|s| s.failed).sum();
+        if failed > 0 {
+            return Err(CompileError::Exec(format!(
+                "--expect-evictions: {failed} requests failed"
+            )));
+        }
+        if stats.evictions == 0 {
+            return Err(CompileError::Exec(
+                "--expect-evictions: the pool never evicted (pool too large \
+                 for the workload?)"
+                    .into(),
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Parse a float flag with a default.
 fn parse_float(args: &[String], flag: &str, default: f64) -> Result<f64> {
     match flag_value(args, flag) {
@@ -424,6 +662,10 @@ fn engine_stats_json(stats: &EngineStats) -> crate::serialize::Json {
         ("p50_ms", Json::num(stats.p50_ms)),
         ("p95_ms", Json::num(stats.p95_ms)),
         ("mean_wait_ms", Json::num(stats.mean_wait_ms)),
+        (
+            "pool",
+            stats.pool.as_ref().map(|p| p.to_json()).unwrap_or(Json::Null),
+        ),
     ])
 }
 
@@ -1164,6 +1406,90 @@ mod tests {
             "2".into(),
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn serve_zoo_pages_a_small_pool_and_writes_json() {
+        // size the pool between the largest single footprint and the
+        // combined one: either model fits alone, both together do not,
+        // so every tenant switch must evict
+        let a = crate::testutil::pack_program(&zoo::by_name("resnet18", 32).unwrap(), None);
+        let b = crate::testutil::pack_program(&zoo::by_name("resnet34", 32).unwrap(), None);
+        let (am, bm) = (a.resident_bytes() as f64 / 1e6, b.resident_bytes() as f64 / 1e6);
+        let pool_mb = (am.max(bm) + am + bm) / 2.0;
+        let dir = std::env::temp_dir().join("sf_cli_zoo_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = dir.join("zoo.json");
+        run(vec![
+            "serve-zoo".into(),
+            "resnet18".into(),
+            "resnet34".into(),
+            "--input".into(),
+            "32".into(),
+            "--pool-mb".into(),
+            format!("{pool_mb}"),
+            "--rounds".into(),
+            "2".into(),
+            "--requests".into(),
+            "2".into(),
+            "--expect-evictions".into(),
+            "--json-out".into(),
+            json.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        let doc = crate::serialize::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        let pool = doc.get("pool").unwrap();
+        assert!(pool.get("evictions").and_then(|e| e.as_usize()).unwrap() > 0);
+        assert_eq!(pool.get("policy").and_then(|p| p.as_str()), Some("slru"));
+        let models = doc.get("models").and_then(|m| m.as_arr()).unwrap();
+        assert_eq!(models.len(), 2);
+        for m in models {
+            let engine = m.get("engine").unwrap();
+            assert_eq!(engine.get("failed").and_then(|f| f.as_usize()), Some(0));
+            assert_eq!(engine.get("completed").and_then(|c| c.as_usize()), Some(4));
+        }
+    }
+
+    #[test]
+    fn serve_zoo_verify_is_bit_identical_even_when_bypassing() {
+        // one model + the half-footprint default pool: the segment is
+        // larger than the whole pool, so every request takes the bypass
+        // path — outputs must still match the unpooled reference
+        run(vec![
+            "serve-zoo".into(),
+            "tinynet".into(),
+            "--backend".into(),
+            "reference".into(),
+            "--verify".into(),
+            "--rounds".into(),
+            "2".into(),
+            "--requests".into(),
+            "2".into(),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn serve_zoo_rejects_bad_flags() {
+        assert!(matches!(run(vec!["serve-zoo".into()]), Err(CompileError::Config(_))));
+        assert!(matches!(
+            run(vec!["serve-zoo".into(), "tinynet".into(), "--policy".into(), "mru".into()]),
+            Err(CompileError::Config(_))
+        ));
+        // --verify needs bit-exact outputs, i.e. the reference backend
+        assert!(matches!(
+            run(vec!["serve-zoo".into(), "tinynet".into(), "--verify".into()]),
+            Err(CompileError::Config(_))
+        ));
+        assert!(matches!(
+            run(vec![
+                "serve-zoo".into(),
+                "tinynet".into(),
+                "--pool-mb".into(),
+                "-3".into()
+            ]),
+            Err(CompileError::Config(_))
+        ));
     }
 
     #[test]

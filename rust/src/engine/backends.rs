@@ -37,6 +37,7 @@ impl ExecutionBackend for ReferenceBackend {
             output: Some(output),
             model_latency_ms: None,
             dram_bytes: None,
+            cold_load_ms: None,
         })
     }
 }
@@ -74,6 +75,7 @@ impl ExecutionBackend for VirtualAccelBackend {
             output: None,
             model_latency_ms: Some(timing.latency_ms),
             dram_bytes: Some(traffic.dram_total()),
+            cold_load_ms: None,
         })
     }
 }

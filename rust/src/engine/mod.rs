@@ -19,7 +19,9 @@
 //! [`crate::shard::ShardPlan`]: it chains the K shard programs with
 //! staged hand-off buffers and link-model transfer costs, and is itself
 //! an `ExecutionBackend`, so the engine serves sharded models
-//! transparently.
+//! transparently. [`crate::pool::PooledBackend`] wraps any of them (the
+//! sharded chain included) to page program weights through a
+//! multi-tenant device-DRAM [`crate::pool::BufferPool`].
 //!
 //! ```no_run
 //! use shortcutfusion::compiler::Compiler;
@@ -74,6 +76,10 @@ pub struct RunResult {
     /// Bytes crossing the chip boundary for this request (instruction
     /// traffic replay), when the backend models the memory system.
     pub dram_bytes: Option<u64>,
+    /// Modeled milliseconds spent paging the program's weight segment
+    /// into device DRAM before execution (0 on a pool hit), when the
+    /// request went through a [`crate::pool::PooledBackend`].
+    pub cold_load_ms: Option<f64>,
 }
 
 /// Anything that can execute a packed [`Program`] on one input.
@@ -94,5 +100,14 @@ pub trait ExecutionBackend: Send + Sync {
     /// errors rather than dropping their requests.
     fn run_batch(&self, program: &Program, inputs: &[Tensor]) -> Vec<Result<RunResult>> {
         inputs.iter().map(|t| self.run(program, t)).collect()
+    }
+
+    /// Buffer-pool counters, when this backend (or a backend it wraps)
+    /// serves through a [`crate::pool::BufferPool`]. The default — no
+    /// pool — is `None`; [`crate::pool::PooledBackend`] reports its
+    /// pool's stats and [`ShardedBackend`] forwards to the backend it
+    /// chains.
+    fn pool_stats(&self) -> Option<crate::pool::PoolStats> {
+        None
     }
 }

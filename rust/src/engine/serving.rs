@@ -166,6 +166,10 @@ pub struct EngineStats {
     pub p95_ms: f64,
     /// Mean queue wait over the same window, ms.
     pub mean_wait_ms: f64,
+    /// Buffer-pool counters (hit/miss/eviction, cold-start latency
+    /// percentiles) when the serving backend pages weights through a
+    /// [`crate::pool::BufferPool`]; `None` for unpooled backends.
+    pub pool: Option<crate::pool::PoolStats>,
 }
 
 /// Serves concurrent inference requests against one packed program.
@@ -440,6 +444,7 @@ fn snapshot(shared: &Shared) -> EngineStats {
         p50_ms: percentile(&lat, 0.50),
         p95_ms: percentile(&lat, 0.95),
         mean_wait_ms: if s.completed > 0 { s.wait_ms_total / s.completed as f64 } else { 0.0 },
+        pool: shared.backend.pool_stats(),
     }
 }
 

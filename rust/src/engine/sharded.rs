@@ -131,6 +131,7 @@ impl ExecutionBackend for ShardedBackend {
         let mut result = self.backend.run(front, input)?;
         let mut latency = result.model_latency_ms;
         let mut dram = result.dram_bytes;
+        let mut cold = result.cold_load_ms;
         for i in 1..self.stages.len() {
             // inter-device transfer of the hand-off tensor
             let transfer = self.link.transfer_ms(self.handoff_bytes(i - 1));
@@ -165,13 +166,24 @@ impl ExecutionBackend for ShardedBackend {
                 (Some(a), Some(b)) => Some(a + b),
                 _ => None,
             };
+            // each stage pins its own weight segment when the chained
+            // backend is pooled; the pipeline's cold cost is their sum
+            cold = match (cold, result.cold_load_ms) {
+                (Some(a), Some(b)) => Some(a + b),
+                _ => None,
+            };
         }
         Ok(RunResult {
             backend: self.name(),
             output: result.output,
             model_latency_ms: latency,
             dram_bytes: dram,
+            cold_load_ms: cold,
         })
+    }
+
+    fn pool_stats(&self) -> Option<crate::pool::PoolStats> {
+        self.backend.pool_stats()
     }
 }
 

@@ -102,6 +102,20 @@
 //! (latency, pipeline interval, total SRAM, device count). The CLI
 //! front-end is `shortcutfusion shard`.
 //!
+//! ## Multi-tenant model-zoo serving: `pool`
+//!
+//! The paper's reuse-aware allocation of on-chip SRAM has a serving-time
+//! sibling one level up: device DRAM cannot hold every packed program a
+//! multi-tenant zoo deployment wants resident. [`pool::BufferPool`]
+//! pages program weight segments in and out of a modeled DRAM budget
+//! with `pin`/`unpin` refcounting, dirty-free eviction under a pluggable
+//! [`pool::ReplacementPolicy`] (LRU, clock, scan-resistant segmented
+//! LRU), per-tenant admission quotas, and a link-model cold-load cost
+//! per miss. [`pool::PooledBackend`] slots the pool beneath the engine
+//! by wrapping any execution backend (sharded chains included); the CLI
+//! front-end is `shortcutfusion serve-zoo` and the policy × pool-size ×
+//! access-pattern sweep lives in `benches/pool.rs`.
+//!
 //! ## Layout
 //!
 //! | module | role |
@@ -116,6 +130,7 @@
 //! | [`engine`] | **unified execution**: backends + batch-serving engine |
 //! | [`explorer`] | **design-space search**: pruned config sweeps, Pareto fronts, recommender |
 //! | [`shard`] | **multi-FPGA pipeline sharding**: cut-point partitioner, link model, shard plans |
+//! | [`pool`] | **multi-tenant serving**: device-DRAM buffer pool, eviction policies, pooled backend |
 //! | [`sim`], [`funcsim`], [`power`] | cycle-accurate timing, bit-exact functional sim, power model |
 //! | [`baselines`], [`bench`] | comparison models + offline bench harness |
 //! | [`coordinator`] | CLI and deprecated one-shot wrappers |
@@ -139,6 +154,7 @@ pub mod program;
 pub mod engine;
 pub mod explorer;
 pub mod shard;
+pub mod pool;
 pub mod sim;
 pub mod funcsim;
 pub mod power;

@@ -1,0 +1,149 @@
+//! [`PooledBackend`]: the pool's integration point with the engine.
+
+use std::sync::Arc;
+
+use crate::engine::{ExecutionBackend, RunResult};
+use crate::funcsim::Tensor;
+use crate::program::Program;
+use crate::Result;
+
+use super::{BufferPool, PoolStats, SegmentId};
+
+/// An [`ExecutionBackend`] decorator that pages each served program's
+/// weight segment through a shared [`BufferPool`] before delegating to
+/// the wrapped backend (reference, virtual-accel, sharded — anything).
+///
+/// One `PooledBackend` represents one *tenant*: construct one per tenant
+/// over the same `Arc<BufferPool>` and the pool arbitrates capacity (and
+/// quotas) between them. The segment stays pinned for the duration of
+/// each request — a pinned segment is never evicted — and the modeled
+/// DRAM-fill cost of a miss is reported in
+/// [`RunResult::cold_load_ms`] (0 on a hit). A batch pins its program
+/// once: the first result in the batch carries the cold cost, the rest
+/// ran against the already-resident segment.
+pub struct PooledBackend {
+    inner: Arc<dyn ExecutionBackend>,
+    pool: Arc<BufferPool>,
+    tenant: String,
+}
+
+impl PooledBackend {
+    /// Wrap `inner` so its programs page through `pool`, attributed to
+    /// `tenant` for quota accounting.
+    pub fn new(
+        inner: Arc<dyn ExecutionBackend>,
+        pool: Arc<BufferPool>,
+        tenant: impl Into<String>,
+    ) -> PooledBackend {
+        PooledBackend { inner, pool, tenant: tenant.into() }
+    }
+
+    /// The shared pool this tenant serves through.
+    pub fn pool(&self) -> &Arc<BufferPool> {
+        &self.pool
+    }
+
+    /// The tenant name used for quota accounting.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// The segment identity the pool tracks for `program`.
+    pub fn segment_of(program: &Program) -> SegmentId {
+        SegmentId(program.fingerprint())
+    }
+}
+
+impl ExecutionBackend for PooledBackend {
+    fn name(&self) -> &'static str {
+        "pooled"
+    }
+
+    fn run(&self, program: &Program, input: &Tensor) -> Result<RunResult> {
+        let guard =
+            self.pool.pin(Self::segment_of(program), program.resident_bytes(), &self.tenant);
+        let mut r = self.inner.run(program, input)?;
+        r.cold_load_ms = Some(guard.cold_load_ms() + r.cold_load_ms.unwrap_or(0.0));
+        Ok(r)
+    }
+
+    fn run_batch(&self, program: &Program, inputs: &[Tensor]) -> Vec<Result<RunResult>> {
+        let guard =
+            self.pool.pin(Self::segment_of(program), program.resident_bytes(), &self.tenant);
+        let mut cold = guard.cold_load_ms();
+        self.inner
+            .run_batch(program, inputs)
+            .into_iter()
+            .map(|res| {
+                res.map(|mut r| {
+                    // the batch shares one pin: only its first completed
+                    // request pays the fill, the rest hit the residency
+                    r.cold_load_ms = Some(cold + r.cold_load_ms.unwrap_or(0.0));
+                    cold = 0.0;
+                    r
+                })
+            })
+            .collect()
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.pool.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{policy_by_name, PoolConfig};
+    use super::*;
+    use crate::engine::{ReferenceBackend, VirtualAccelBackend};
+    use crate::zoo;
+
+    fn pooled(capacity: u64, inner: Arc<dyn ExecutionBackend>) -> PooledBackend {
+        let pool = Arc::new(
+            BufferPool::new(PoolConfig::new(capacity), policy_by_name("lru").unwrap()).unwrap(),
+        );
+        PooledBackend::new(inner, pool, "test")
+    }
+
+    #[test]
+    fn first_run_is_cold_then_hits_are_free() {
+        let program = crate::testutil::pack_program(&zoo::tinynet(), Some(7));
+        let input = Tensor::zeros(program.input_shape());
+        let b = pooled(program.resident_bytes() * 2, Arc::new(ReferenceBackend));
+        let first = b.run(&program, &input).unwrap();
+        assert!(first.cold_load_ms.unwrap() > 0.0, "miss must pay the DRAM fill");
+        let second = b.run(&program, &input).unwrap();
+        assert_eq!(second.cold_load_ms, Some(0.0), "resident hit must be free");
+        // pooling is transparent to what the inner backend computes
+        assert_eq!(first.output, second.output);
+        let s = b.pool_stats().unwrap();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn batches_share_one_pin() {
+        let program = crate::testutil::pack_program(&zoo::tinynet(), None);
+        let inputs = vec![Tensor::zeros(program.input_shape()); 3];
+        let b = pooled(program.resident_bytes() * 2, Arc::new(VirtualAccelBackend));
+        let results = b.run_batch(&program, &inputs);
+        let colds: Vec<f64> =
+            results.iter().map(|r| r.as_ref().unwrap().cold_load_ms.unwrap()).collect();
+        assert!(colds[0] > 0.0);
+        assert_eq!(&colds[1..], &[0.0, 0.0], "only the batch head pays the fill");
+        let s = b.pool_stats().unwrap();
+        assert_eq!((s.hits, s.misses), (0, 1), "one pin for the whole batch");
+    }
+
+    #[test]
+    fn inner_errors_pass_through_and_release_the_pin() {
+        // no packed params: the reference backend fails typed
+        let program = crate::testutil::pack_program(&zoo::tinynet(), None);
+        let input = Tensor::zeros(program.input_shape());
+        let b = pooled(program.resident_bytes() * 2, Arc::new(ReferenceBackend));
+        assert!(b.run(&program, &input).is_err());
+        // the failed request's pin was still released (evictable again)
+        let s = b.pool_stats().unwrap();
+        assert_eq!(s.misses, 1);
+        assert!(b.pool().contains(PooledBackend::segment_of(&program)));
+    }
+}

@@ -1,0 +1,572 @@
+//! The buffer pool: refcounted residency over a modeled DRAM budget.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::compiler::CompileError;
+use crate::serialize::Json;
+use crate::shard::LinkModel;
+use crate::Result;
+
+use super::{ReplacementPolicy, SegmentId};
+
+/// Cold-load latency samples kept for percentile reporting (ring buffer,
+/// same window the serving engine uses for request latencies).
+const COLD_WINDOW: usize = 4096;
+
+/// Sizing and cost model of a [`BufferPool`].
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Modeled device-DRAM bytes available for weight segments.
+    pub capacity_bytes: u64,
+    /// Channel filling DRAM on a miss: a cold pin of `b` bytes costs
+    /// `link.transfer_ms(b)` of modeled latency.
+    pub link: LinkModel,
+    /// Per-tenant admission quota in bytes. A tenant past its quota
+    /// evicts its *own* unpinned segments before taking pool capacity
+    /// from others; `None` disables quota enforcement.
+    pub tenant_quota_bytes: Option<u64>,
+}
+
+impl PoolConfig {
+    /// A pool of `capacity_bytes` filled over the default PCIe-class
+    /// link, with quotas disabled.
+    pub fn new(capacity_bytes: u64) -> PoolConfig {
+        PoolConfig { capacity_bytes, link: LinkModel::default(), tenant_quota_bytes: None }
+    }
+
+    /// Replace the DRAM-fill link model.
+    pub fn with_link(mut self, link: LinkModel) -> PoolConfig {
+        self.link = link;
+        self
+    }
+
+    /// Enable a per-tenant admission quota.
+    pub fn with_tenant_quota(mut self, bytes: u64) -> PoolConfig {
+        self.tenant_quota_bytes = Some(bytes);
+        self
+    }
+}
+
+/// One resident segment's bookkeeping.
+struct Resident {
+    bytes: u64,
+    pins: u32,
+    tenant: String,
+}
+
+/// Mutable pool state behind the lock.
+struct Inner {
+    resident: HashMap<SegmentId, Resident>,
+    policy: Box<dyn ReplacementPolicy>,
+    used_bytes: u64,
+    tenant_bytes: HashMap<String, u64>,
+    // counters
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    bypasses: u64,
+    overcommits: u64,
+    quota_overruns: u64,
+    peak_used_bytes: u64,
+    cold_ms: Vec<f64>,
+    cold_next: usize,
+    cold_total_ms: f64,
+}
+
+impl Inner {
+    /// Evict one unpinned segment chosen by the policy among those
+    /// matching `tenant` (or any tenant when `None`). Returns false when
+    /// no such segment exists. Split-borrows so the policy's candidate
+    /// filter can read the residency map while the policy is `&mut`.
+    fn evict_one(&mut self, tenant: Option<&str>) -> bool {
+        let Inner { resident, policy, .. } = self;
+        let victim = policy.victim(&|s| {
+            resident.get(&s).is_some_and(|r| {
+                r.pins == 0 && tenant.is_none_or(|t| r.tenant == t)
+            })
+        });
+        let Some(victim) = victim else { return false };
+        let r = self.resident.remove(&victim).expect("victim must be resident");
+        self.policy.remove(victim);
+        self.used_bytes -= r.bytes;
+        if let Some(t) = self.tenant_bytes.get_mut(&r.tenant) {
+            *t = t.saturating_sub(r.bytes);
+        }
+        self.evictions += 1;
+        true
+    }
+
+    /// Drop unpinned segments until the pool is back under `capacity`
+    /// (or only pinned segments remain).
+    fn trim(&mut self, capacity: u64) {
+        while self.used_bytes > capacity {
+            if !self.evict_one(None) {
+                break;
+            }
+        }
+    }
+
+    fn record_cold(&mut self, ms: f64) {
+        self.cold_total_ms += ms;
+        if self.cold_ms.len() < COLD_WINDOW {
+            self.cold_ms.push(ms);
+        } else {
+            self.cold_ms[self.cold_next] = ms;
+            self.cold_next = (self.cold_next + 1) % COLD_WINDOW;
+        }
+    }
+}
+
+/// Refcounted residency manager for packed-program weight segments over
+/// a modeled device-DRAM budget. See the [module docs](super) for the
+/// design; thread-safe (`pin` from any number of serving workers).
+///
+/// `pin` is infallible by design: a request never waits for capacity.
+/// When eviction cannot make room (everything resident is pinned) the
+/// segment is admitted as a transient over-commit and the pool trims
+/// itself back under budget as pins release.
+pub struct BufferPool {
+    inner: Mutex<Inner>,
+    capacity_bytes: u64,
+    link: LinkModel,
+    tenant_quota_bytes: Option<u64>,
+    policy_name: &'static str,
+}
+
+impl BufferPool {
+    /// A pool with the given budget and replacement policy. The capacity
+    /// must be positive.
+    pub fn new(cfg: PoolConfig, policy: Box<dyn ReplacementPolicy>) -> Result<BufferPool> {
+        if cfg.capacity_bytes == 0 {
+            return Err(CompileError::config("pool capacity must be positive"));
+        }
+        if let Some(q) = cfg.tenant_quota_bytes {
+            if q == 0 {
+                return Err(CompileError::config("tenant quota must be positive"));
+            }
+        }
+        Ok(BufferPool {
+            capacity_bytes: cfg.capacity_bytes,
+            link: cfg.link,
+            tenant_quota_bytes: cfg.tenant_quota_bytes,
+            policy_name: policy.name(),
+            inner: Mutex::new(Inner {
+                resident: HashMap::new(),
+                policy,
+                used_bytes: 0,
+                tenant_bytes: HashMap::new(),
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                bypasses: 0,
+                overcommits: 0,
+                quota_overruns: 0,
+                peak_used_bytes: 0,
+                cold_ms: Vec::new(),
+                cold_next: 0,
+                cold_total_ms: 0.0,
+            }),
+        })
+    }
+
+    /// Pin `seg` (a segment of `bytes` weight payload, requested by
+    /// `tenant`) for the duration of the returned guard. A resident
+    /// segment is a free hit; a miss pays the modeled DRAM-fill cost and
+    /// may evict unpinned segments to make room. Segments larger than
+    /// the whole pool bypass residency entirely.
+    pub fn pin(&self, seg: SegmentId, bytes: u64, tenant: &str) -> PinGuard<'_> {
+        let mut inner = self.lock();
+        if bytes > self.capacity_bytes {
+            // bypass: stream straight through, never resident
+            inner.misses += 1;
+            inner.bypasses += 1;
+            let cold = self.link.transfer_ms(bytes);
+            inner.record_cold(cold);
+            return PinGuard { pool: self, seg, hit: false, bypass: true, cold_load_ms: cold };
+        }
+        if let Some(r) = inner.resident.get_mut(&seg) {
+            r.pins += 1;
+            inner.policy.touch(seg);
+            inner.hits += 1;
+            return PinGuard { pool: self, seg, hit: true, bypass: false, cold_load_ms: 0.0 };
+        }
+        inner.misses += 1;
+        // quota: a tenant over budget makes room out of its own residency
+        if let Some(quota) = self.tenant_quota_bytes {
+            let over = |inner: &Inner| {
+                inner.tenant_bytes.get(tenant).copied().unwrap_or(0) + bytes > quota
+            };
+            while over(&inner) {
+                if !inner.evict_one(Some(tenant)) {
+                    // everything of this tenant's is pinned (or gone):
+                    // admit over quota rather than stall the request
+                    inner.quota_overruns += 1;
+                    break;
+                }
+            }
+        }
+        // capacity: evict by policy order; over-commit if all pinned
+        while inner.used_bytes + bytes > self.capacity_bytes {
+            if !inner.evict_one(None) {
+                inner.overcommits += 1;
+                break;
+            }
+        }
+        inner
+            .resident
+            .insert(seg, Resident { bytes, pins: 1, tenant: tenant.to_string() });
+        inner.policy.insert(seg);
+        inner.used_bytes += bytes;
+        *inner.tenant_bytes.entry(tenant.to_string()).or_insert(0) += bytes;
+        inner.peak_used_bytes = inner.peak_used_bytes.max(inner.used_bytes);
+        let cold = self.link.transfer_ms(bytes);
+        inner.record_cold(cold);
+        PinGuard { pool: self, seg, hit: false, bypass: false, cold_load_ms: cold }
+    }
+
+    /// Guard-drop path: release one pin and trim any over-commit that
+    /// this release made collectable.
+    fn release(&self, seg: SegmentId) {
+        let mut inner = self.lock();
+        if let Some(r) = inner.resident.get_mut(&seg) {
+            debug_assert!(r.pins > 0, "unpin of an unpinned segment");
+            r.pins = r.pins.saturating_sub(1);
+        }
+        if inner.used_bytes > self.capacity_bytes {
+            inner.trim(self.capacity_bytes);
+        }
+    }
+
+    /// Point-in-time counters and residency snapshot.
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.lock();
+        let mut sorted = inner.cold_ms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        PoolStats {
+            policy: self.policy_name,
+            capacity_bytes: self.capacity_bytes,
+            used_bytes: inner.used_bytes,
+            peak_used_bytes: inner.peak_used_bytes,
+            resident_segments: inner.resident.len(),
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            bypasses: inner.bypasses,
+            overcommits: inner.overcommits,
+            quota_overruns: inner.quota_overruns,
+            cold_load_p50_ms: percentile(&sorted, 50.0),
+            cold_load_p95_ms: percentile(&sorted, 95.0),
+            cold_load_total_ms: inner.cold_total_ms,
+        }
+    }
+
+    /// Whether `seg` is currently resident (tests and diagnostics).
+    pub fn contains(&self, seg: SegmentId) -> bool {
+        self.lock().resident.contains_key(&seg)
+    }
+
+    /// Currently resident bytes.
+    pub fn used_bytes(&self) -> u64 {
+        self.lock().used_bytes
+    }
+
+    /// The pool's byte budget.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Name of the replacement policy this pool was built with.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy_name
+    }
+
+    /// The DRAM-fill link model misses are charged against.
+    pub fn link(&self) -> LinkModel {
+        self.link
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // a panic while holding the lock leaves only counters possibly
+        // stale; keep serving rather than poisoning every later request
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// RAII pin: the segment stays resident (never evicted) until the guard
+/// drops. Produced by [`BufferPool::pin`].
+pub struct PinGuard<'a> {
+    pool: &'a BufferPool,
+    seg: SegmentId,
+    hit: bool,
+    bypass: bool,
+    cold_load_ms: f64,
+}
+
+impl PinGuard<'_> {
+    /// The pinned segment.
+    pub fn segment(&self) -> SegmentId {
+        self.seg
+    }
+
+    /// Whether the pin found the segment already resident.
+    pub fn hit(&self) -> bool {
+        self.hit
+    }
+
+    /// Whether the segment bypassed the pool (larger than its capacity).
+    pub fn bypassed(&self) -> bool {
+        self.bypass
+    }
+
+    /// Modeled milliseconds spent filling DRAM for this pin (0 on a hit).
+    pub fn cold_load_ms(&self) -> f64 {
+        self.cold_load_ms
+    }
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        if !self.bypass {
+            self.pool.release(self.seg);
+        }
+    }
+}
+
+/// Counter snapshot of a [`BufferPool`], embedded in
+/// [`crate::engine::EngineStats`] when the serving backend is pooled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolStats {
+    /// Replacement policy name.
+    pub policy: &'static str,
+    /// Byte budget.
+    pub capacity_bytes: u64,
+    /// Bytes resident right now.
+    pub used_bytes: u64,
+    /// High-water residency (can exceed capacity during over-commit).
+    pub peak_used_bytes: u64,
+    /// Segments resident right now.
+    pub resident_segments: usize,
+    /// Pins that found the segment resident.
+    pub hits: u64,
+    /// Pins that paid a cold load (bypasses included).
+    pub misses: u64,
+    /// Segments dropped to make room.
+    pub evictions: u64,
+    /// Misses too large for the pool, streamed through unbuffered.
+    pub bypasses: u64,
+    /// Admissions past capacity because every resident segment was
+    /// pinned (trimmed back as pins release).
+    pub overcommits: u64,
+    /// Admissions past a tenant's quota because none of its segments
+    /// were evictable.
+    pub quota_overruns: u64,
+    /// Median modeled cold-load latency, over a sliding window of the
+    /// most recent misses (same window size as the serving engine's
+    /// latency percentiles).
+    pub cold_load_p50_ms: f64,
+    /// 95th-percentile modeled cold-load latency.
+    pub cold_load_p95_ms: f64,
+    /// Total modeled milliseconds spent filling DRAM.
+    pub cold_load_total_ms: f64,
+}
+
+impl PoolStats {
+    /// Fraction of pins served without a cold load.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Flat JSON record (CLI `--json-out` and bench snapshots).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str(self.policy)),
+            ("capacity_bytes", Json::num(self.capacity_bytes as f64)),
+            ("used_bytes", Json::num(self.used_bytes as f64)),
+            ("peak_used_bytes", Json::num(self.peak_used_bytes as f64)),
+            ("resident_segments", Json::num(self.resident_segments as f64)),
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("hit_rate", Json::num(self.hit_rate())),
+            ("evictions", Json::num(self.evictions as f64)),
+            ("bypasses", Json::num(self.bypasses as f64)),
+            ("overcommits", Json::num(self.overcommits as f64)),
+            ("quota_overruns", Json::num(self.quota_overruns as f64)),
+            ("cold_load_p50_ms", Json::num(self.cold_load_p50_ms)),
+            ("cold_load_p95_ms", Json::num(self.cold_load_p95_ms)),
+            ("cold_load_total_ms", Json::num(self.cold_load_total_ms)),
+        ])
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample (0.0 when
+/// empty) — same convention as the serving engine's latency percentiles.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::policy_by_name;
+    use super::*;
+
+    fn pool(capacity: u64, policy: &str) -> BufferPool {
+        // infinite-bandwidth link: cold cost is the 5 us setup only,
+        // keeping the latency arithmetic in tests exact
+        let cfg = PoolConfig::new(capacity)
+            .with_link(LinkModel::new(f64::INFINITY, 5.0).unwrap());
+        BufferPool::new(cfg, policy_by_name(policy).unwrap()).unwrap()
+    }
+
+    fn id(n: u64) -> SegmentId {
+        SegmentId(n)
+    }
+
+    #[test]
+    fn hits_are_free_and_misses_pay_the_link() {
+        let p = pool(100, "lru");
+        let g = p.pin(id(1), 60, "t");
+        assert!(!g.hit());
+        assert_eq!(g.cold_load_ms(), 0.005);
+        drop(g);
+        let g = p.pin(id(1), 60, "t");
+        assert!(g.hit());
+        assert_eq!(g.cold_load_ms(), 0.0);
+        drop(g);
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(s.used_bytes, 60);
+        assert_eq!(s.resident_segments, 1);
+    }
+
+    #[test]
+    fn pinned_segments_are_never_evicted() {
+        let p = pool(100, "lru");
+        let hold = p.pin(id(1), 60, "t");
+        // needs 60 more: id(1) is the only candidate but it is pinned,
+        // so the pool over-commits instead of evicting it
+        let g2 = p.pin(id(2), 60, "t");
+        assert!(p.contains(id(1)), "pinned segment evicted");
+        assert_eq!(p.used_bytes(), 120);
+        let s = p.stats();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.overcommits, 1);
+        assert_eq!(s.peak_used_bytes, 120);
+        // releasing the over-committed state trims back under budget
+        drop(g2);
+        drop(hold);
+        assert!(p.used_bytes() <= 100, "trim did not restore the budget");
+        assert_eq!(p.stats().evictions, 1);
+    }
+
+    #[test]
+    fn eviction_follows_policy_order() {
+        let p = pool(100, "lru");
+        drop(p.pin(id(1), 40, "t"));
+        drop(p.pin(id(2), 40, "t"));
+        drop(p.pin(id(1), 40, "t")); // 1 is now MRU
+        drop(p.pin(id(3), 40, "t")); // must evict 2, the LRU
+        assert!(p.contains(id(1)));
+        assert!(!p.contains(id(2)));
+        assert!(p.contains(id(3)));
+        assert_eq!(p.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_segments_bypass_the_pool() {
+        let p = pool(100, "clock");
+        drop(p.pin(id(1), 80, "t"));
+        let g = p.pin(id(9), 1000, "t");
+        assert!(g.bypassed());
+        assert!(!g.hit());
+        assert!(g.cold_load_ms() > 0.0);
+        drop(g);
+        // the resident segment was untouched and the giant never admitted
+        assert!(p.contains(id(1)));
+        assert!(!p.contains(id(9)));
+        let s = p.stats();
+        assert_eq!(s.bypasses, 1);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.used_bytes, 80);
+    }
+
+    #[test]
+    fn tenant_quota_evicts_own_segments_first() {
+        let cfg = PoolConfig::new(200)
+            .with_link(LinkModel::new(f64::INFINITY, 0.0).unwrap())
+            .with_tenant_quota(80);
+        let p = BufferPool::new(cfg, policy_by_name("lru").unwrap()).unwrap();
+        drop(p.pin(id(1), 40, "alice")); // alice's oldest
+        drop(p.pin(id(2), 40, "alice"));
+        drop(p.pin(id(3), 40, "bob"));
+        // alice asks for 40 more: pool has room (120/200) but alice is at
+        // her 80-byte quota — her own LRU (1) must go, not bob's segment
+        drop(p.pin(id(4), 40, "alice"));
+        assert!(!p.contains(id(1)), "quota must evict the owner's LRU");
+        assert!(p.contains(id(2)));
+        assert!(p.contains(id(3)), "quota eviction stole from another tenant");
+        assert!(p.contains(id(4)));
+        assert_eq!(p.stats().quota_overruns, 0);
+        // all of alice's residency pinned -> over-quota admission, counted
+        let _g2 = p.pin(id(2), 40, "alice");
+        let _g4 = p.pin(id(4), 40, "alice");
+        let g5 = p.pin(id(5), 40, "alice");
+        assert!(!g5.bypassed());
+        assert_eq!(p.stats().quota_overruns, 1);
+    }
+
+    #[test]
+    fn refcounts_balance_under_threads() {
+        let p = std::sync::Arc::new(pool(120, "slru"));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        let seg = id((t + i) % 6);
+                        let g = p.pin(seg, 40, "t");
+                        assert!(p.contains(seg) || g.bypassed());
+                        drop(g);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // every pin released: nothing left pinned, pool within budget
+        let s = p.stats();
+        assert_eq!(s.hits + s.misses, 800);
+        assert!(s.used_bytes <= 120, "over-commit survived all releases");
+        let inner = p.lock();
+        assert!(inner.resident.values().all(|r| r.pins == 0), "leaked pin");
+    }
+
+    #[test]
+    fn zero_capacity_and_zero_quota_are_rejected() {
+        assert!(BufferPool::new(PoolConfig::new(0), policy_by_name("lru").unwrap()).is_err());
+        let cfg = PoolConfig::new(10).with_tenant_quota(0);
+        assert!(BufferPool::new(cfg, policy_by_name("lru").unwrap()).is_err());
+    }
+
+    #[test]
+    fn stats_json_is_flat_and_complete() {
+        let p = pool(100, "lru");
+        drop(p.pin(id(1), 60, "t"));
+        drop(p.pin(id(1), 60, "t"));
+        let doc = p.stats().to_json();
+        assert_eq!(doc.get("policy").and_then(Json::as_str), Some("lru"));
+        assert_eq!(doc.get("hits").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(doc.get("hit_rate").and_then(Json::as_f64), Some(0.5));
+        assert!(doc.get("cold_load_p50_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}

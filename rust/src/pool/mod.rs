@@ -1,0 +1,71 @@
+//! Multi-tenant device-DRAM buffer pool for packed-program weights.
+//!
+//! ShortcutFusion's compile-time story is reuse-aware *static* allocation
+//! of on-chip SRAM; the serving stack meets the same capacity problem one
+//! level up. A multi-tenant deployment wants to serve a whole model zoo,
+//! but device DRAM cannot hold every packed [`crate::program::Program`]'s
+//! weights at once. This subsystem pages weight *segments* (one per
+//! program: quantized weights + instruction stream) in and out of a
+//! modeled DRAM budget on demand:
+//!
+//! * [`BufferPool`] — `pin`/`unpin` with reference counting over a byte
+//!   budget. Weights are read-only, so eviction is *dirty-free*: dropping
+//!   a segment never writes anything back. A pinned segment is never
+//!   evicted; a request for a non-resident segment pays a modeled
+//!   cold-load cost (DRAM-fill bytes over a [`crate::shard::LinkModel`]
+//!   channel, the same idiom shard hand-offs use).
+//! * [`ReplacementPolicy`] — pluggable eviction ordering
+//!   ([`LruPolicy`], [`ClockPolicy`], scan-resistant
+//!   [`SegmentedLruPolicy`]), chosen by name via [`policy_by_name`].
+//! * Per-tenant admission quotas — a hot tenant past its byte quota
+//!   evicts its *own* unpinned segments first, so it cannot thrash other
+//!   tenants out of the pool.
+//! * [`PooledBackend`] — integrates the pool beneath
+//!   [`crate::engine::InferenceEngine`] by wrapping any
+//!   [`crate::engine::ExecutionBackend`] (sharded included): each request
+//!   pins its program's segment around execution and reports the cold
+//!   cost in [`crate::engine::RunResult::cold_load_ms`].
+//!
+//! The pool never blocks and never fails a request: when every resident
+//! segment is pinned and capacity is exhausted, it admits the new segment
+//! as a *transient over-commit* (counted in [`PoolStats`]) rather than
+//! deadlocking the serving workers — trimmed back under budget as soon as
+//! pins release. Segments larger than the whole pool bypass it entirely
+//! (always a miss, never resident).
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use shortcutfusion::engine::{ExecutionBackend, ReferenceBackend};
+//! use shortcutfusion::pool::{policy_by_name, BufferPool, PoolConfig, PooledBackend};
+//!
+//! let pool = Arc::new(
+//!     BufferPool::new(PoolConfig::new(24 << 20), policy_by_name("slru").unwrap()).unwrap(),
+//! );
+//! // one PooledBackend per tenant, all sharing the pool
+//! let alice = PooledBackend::new(Arc::new(ReferenceBackend), pool.clone(), "alice");
+//! let bob = PooledBackend::new(Arc::new(ReferenceBackend), pool.clone(), "bob");
+//! # let _ = (alice, bob);
+//! println!("{}", pool.stats().to_json().to_string_pretty());
+//! ```
+
+mod backend;
+mod buffer;
+mod policy;
+
+pub use backend::PooledBackend;
+pub use buffer::{BufferPool, PinGuard, PoolConfig, PoolStats};
+pub use policy::{
+    policy_by_name, ClockPolicy, LruPolicy, ReplacementPolicy, SegmentedLruPolicy, POLICY_NAMES,
+};
+
+/// Identity of one pageable weight segment: the owning program's
+/// [`crate::program::Program::fingerprint`]. Two handles to byte-identical
+/// artifacts share a segment; re-pinning a resident id is a pool hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SegmentId(pub u64);
+
+impl std::fmt::Display for SegmentId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}

@@ -371,6 +371,52 @@ impl Program {
         self.grouped.graph.input().out_shape
     }
 
+    /// Cheap 64-bit identity for segment-level caching
+    /// ([`crate::pool::SegmentId`]): FNV-1a over the pack-time metadata
+    /// (model, strategy, target name, precisions, params presence, shard
+    /// position) and the packed instruction words. Deliberately does
+    /// *not* hash the weight payload — the stream already pins the exact
+    /// lowering, and hashing megabytes of weights per request would
+    /// dominate a pool hit.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = fnv1a64(FNV64_OFFSET, self.model.as_bytes());
+        h = fnv1a64(h, &[0]);
+        h = fnv1a64(h, self.strategy.as_bytes());
+        h = fnv1a64(h, &[0]);
+        h = fnv1a64(h, self.cfg.name.as_bytes());
+        h = fnv1a64(h, &[0]);
+        h = fnv1a64(h, &[self.cfg.qa as u8, self.cfg.qw as u8, self.params.is_some() as u8]);
+        match &self.boundary {
+            None => h = fnv1a64(h, &[0]),
+            Some(b) => {
+                h = fnv1a64(h, &[1]);
+                h = fnv1a64(h, &(b.index as u64).to_le_bytes());
+                h = fnv1a64(h, &(b.count as u64).to_le_bytes());
+            }
+        }
+        for w in &self.stream.words {
+            h = fnv1a64(h, &w.to_le_bytes());
+        }
+        h
+    }
+
+    /// Device-DRAM bytes this program's paged weight segment occupies:
+    /// the parameter payload (exact packed sizes when params are present,
+    /// otherwise the analytical weight footprint at the target's `Q_W`)
+    /// plus the instruction stream shipped alongside it.
+    pub fn resident_bytes(&self) -> u64 {
+        let payload = match &self.params {
+            Some(p) => p
+                .groups
+                .values()
+                .map(|g| (g.weights.len() + 4 * g.bias.len()) as u64
+                    + g.lut.as_ref().map_or(0, |l| l.len() as u64))
+                .sum(),
+            None => self.grouped.graph.total_weight_bytes(self.cfg.qw as u64),
+        };
+        payload + self.stream.byte_size() as u64
+    }
+
     /// The per-group reuse policy, read back from the *packed*
     /// instructions (the artifact's source of truth, not a copy of the
     /// optimizer output).
@@ -567,6 +613,19 @@ impl crate::compiler::Lowered {
     }
 }
 
+/// FNV-1a 64-bit offset basis (the 64-bit sibling of
+/// [`format::fnv1a32`]'s constants).
+const FNV64_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a 64-bit hash.
+fn fnv1a64(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 fn loc_code(l: &Loc) -> String {
     match l {
         Loc::Buf(b) => format!("b{b}"),
@@ -726,6 +785,45 @@ mod tests {
             assert_eq!(gp.lut, lp.lut, "{name}");
         }
         assert_eq!(loaded.to_bytes(), program.to_bytes());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_across_round_trips_and_distinguishes_programs() {
+        let plain = tinynet_program(false);
+        let with_params = tinynet_program(true);
+        let loaded = Program::from_bytes(&plain.to_bytes()).unwrap();
+        assert_eq!(plain.fingerprint(), loaded.fingerprint(), "load changed the identity");
+        assert_ne!(
+            plain.fingerprint(),
+            with_params.fingerprint(),
+            "params presence must change the segment identity"
+        );
+        let other = crate::testutil::pack_program(&zoo::resnet18(64), None);
+        assert_ne!(plain.fingerprint(), other.fingerprint());
+    }
+
+    #[test]
+    fn resident_bytes_covers_weights_and_stream() {
+        let plain = tinynet_program(false);
+        let analytical = plain.grouped().graph.total_weight_bytes(plain.cfg().qw as u64);
+        assert_eq!(
+            plain.resident_bytes(),
+            analytical + plain.stream().byte_size() as u64
+        );
+        let with_params = tinynet_program(true);
+        let payload: u64 = with_params
+            .params()
+            .unwrap()
+            .groups
+            .values()
+            .map(|g| (g.weights.len() + 4 * g.bias.len()) as u64
+                + g.lut.as_ref().map_or(0, |l| l.len() as u64))
+            .sum();
+        assert_eq!(
+            with_params.resident_bytes(),
+            payload + with_params.stream().byte_size() as u64
+        );
+        assert!(with_params.resident_bytes() > 0);
     }
 
     #[test]

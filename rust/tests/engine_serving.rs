@@ -103,6 +103,7 @@ impl ExecutionBackend for GateBackend {
             output: None,
             model_latency_ms: Some(1.0),
             dram_bytes: None,
+            cold_load_ms: None,
         })
     }
 }
