@@ -113,7 +113,12 @@ impl fmt::Display for CompileError {
             CompileError::Parse(m) => write!(f, "parse error: {m}"),
             CompileError::Config(m) => write!(f, "config error: {m}"),
             CompileError::UnknownModel { name, valid } => {
-                write!(f, "unknown model {name:?} — valid zoo models: {}", valid.join(", "))
+                write!(
+                    f,
+                    "unknown model {name:?} — valid zoo models: {}; or pass a path to \
+                     an imported model (.onnx) or frozen graph (.json)",
+                    valid.join(", ")
+                )
             }
             CompileError::Graph(m) => write!(f, "invalid graph: {m}"),
             CompileError::Params(m) => write!(f, "parameter error: {m}"),

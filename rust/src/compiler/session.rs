@@ -188,8 +188,10 @@ impl Session {
             return Ok(a.clone());
         }
         self.analysis_misses.fetch_add(1, Ordering::Relaxed);
-        let graph =
-            zoo::by_name(model, input).ok_or_else(|| CompileError::unknown_model(model))?;
+        // zoo name, imported .onnx model, or frozen .json graph — the
+        // same resolution the CLI front-end uses (parameters, if any,
+        // are not part of analysis and are dropped here)
+        let graph = crate::import::resolve(model, input)?.0;
         // Any config works for stage 1; analysis never reads it.
         let compiler =
             Compiler::with_strategy(AccelConfig::kcu1500_int8(), self.strategy.clone());

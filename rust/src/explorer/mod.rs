@@ -61,7 +61,6 @@ use crate::compiler::{fan_out, CompileError, CompileReport, Compiler, ReuseStrat
 use crate::config::AccelConfig;
 use crate::program::Program;
 use crate::serialize::Json;
-use crate::zoo;
 
 /// One costed design point: the candidate plus the metrics the sweep
 /// ranks it by.
@@ -148,10 +147,14 @@ impl ExplorePoint {
     /// (stage 6, [`Compiler::pack`]) — the hand-off from *search* to
     /// *deploy*.
     pub fn pack(&self) -> Result<Program, CompileError> {
-        let graph = zoo::by_name(&self.model, self.input)
-            .ok_or_else(|| CompileError::unknown_model(self.model.clone()))?;
-        let compiler = Compiler::with_strategy(self.cfg.clone(), self.strategy.clone());
+        // zoo name, imported .onnx, or frozen .json — same resolution
+        // the CLI uses; imported parameters ride into the artifact
+        let (graph, params) = crate::import::resolve(&self.model, self.input)?;
+        let mut compiler = Compiler::with_strategy(self.cfg.clone(), self.strategy.clone());
         let analyzed = compiler.analyze(&graph)?;
+        if let Some(p) = params {
+            compiler = compiler.with_params(p);
+        }
         let lowered =
             compiler.lower(&compiler.allocate(&compiler.optimize(&analyzed)?)?)?;
         compiler.pack(&lowered)

@@ -356,14 +356,18 @@ impl SearchSpace {
         let mut points = Vec::new();
         let mut pruned = Vec::new();
         for model in &self.models {
-            let default_input = zoo::try_default_input(model)
-                .ok_or_else(|| CompileError::unknown_model(model.clone()))?;
             // Fixed-geometry models (tinynet) ignore requested sizes, so
             // points are labeled with the size actually compiled instead
-            // of a resolution the builder silently discarded.
-            let inputs = match zoo::fixed_input(model) {
+            // of a resolution the builder silently discarded. Model files
+            // (.onnx / frozen .json) carry their own geometry and are
+            // treated the same way.
+            let fixed = match zoo::try_default_input(model) {
+                Some(_) => zoo::fixed_input(model),
+                None => Some(crate::import::resolve(model, 0)?.0.input().out_shape.h),
+            };
+            let inputs = match fixed {
                 Some(fixed) => vec![fixed],
-                None => non_empty(&self.inputs, default_input),
+                None => non_empty(&self.inputs, zoo::default_input(model)),
             };
             for &dims in &macs {
                 for &budget in &budgets {

@@ -140,14 +140,14 @@ impl Params {
                 .iter()
                 .map(|&n| gg.graph.node(n).weight_count())
                 .sum();
-            if wcount == 0 && gr.shortcut_of.is_none() && !gr.act.needs_lut() {
+            if wcount == 0 && gr.shortcut_of.is_none() && !gr.act.lut_evaluated() {
                 continue;
             }
             // small weights keep accumulators informative but bounded
             let weights: Vec<i8> = (0..wcount).map(|_| (rng.below(15) as i8) - 7).collect();
             let out_c = gr.out_shape.c;
             let bias: Vec<i32> = (0..out_c).map(|_| (rng.below(64) as i32) - 32).collect();
-            let lut = if gr.act.needs_lut() {
+            let lut = if gr.act.lut_evaluated() {
                 Some((0..256).map(|i| ((i as i64 * 7 + seed as i64) % 255 - 127) as i8).collect())
             } else {
                 None

@@ -40,6 +40,22 @@ impl Activation {
     pub fn needs_lut(&self) -> bool {
         matches!(self, Activation::Swish | Activation::Sigmoid)
     }
+
+    /// True when the functional simulator evaluates this activation
+    /// through a 256-entry LUT in [`crate::funcsim::Params`] — a
+    /// superset of [`Activation::needs_lut`]: the hard (shift-friendly)
+    /// variants share the LUT datapath in the simulator even though the
+    /// hardware computes them in dynamic fixed-point.
+    pub fn lut_evaluated(&self) -> bool {
+        matches!(
+            self,
+            Activation::Relu6
+                | Activation::Swish
+                | Activation::Sigmoid
+                | Activation::HardSwish
+                | Activation::HardSigmoid
+        )
+    }
 }
 
 /// Operator kind with static attributes.

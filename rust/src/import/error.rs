@@ -1,0 +1,181 @@
+//! Typed import failures.
+//!
+//! Everything the ONNX front end can reject is expressed here — the
+//! reader and the lowering pass never panic on untrusted bytes (the
+//! corruption tests in `rust/tests/import_roundtrip.rs` fuzz truncations
+//! and bad tags against this contract).
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Every way an ONNX import (or export) can fail.
+#[derive(Debug)]
+pub enum ImportError {
+    /// Malformed protobuf wire data (truncated varint, over-long length,
+    /// unsupported wire type). `offset` is the absolute byte position in
+    /// the model file where decoding stopped.
+    Wire {
+        /// Absolute byte offset of the failure in the input buffer.
+        offset: usize,
+        /// What went wrong at that offset.
+        detail: String,
+    },
+    /// The wire data decoded, but the message violates the ONNX schema
+    /// subset this front end understands (missing graph, tensor without
+    /// a name, attribute with no value, …).
+    Schema(String),
+    /// A node uses an operator (or an attribute combination) outside the
+    /// accelerator's op set.
+    UnsupportedOp {
+        /// The ONNX `op_type` that failed to lower.
+        op_type: String,
+        /// Name of the offending node (or its first output).
+        node: String,
+        /// Why this instance could not be lowered.
+        detail: String,
+    },
+    /// Shape inference disagreed with the model: an initializer whose
+    /// element count contradicts its `dims`, a declared `value_info`
+    /// that contradicts the computed shape, or operand shapes an op
+    /// cannot accept.
+    ShapeMismatch {
+        /// Name of the node or tensor with the inconsistent shape.
+        node: String,
+        /// The disagreement.
+        detail: String,
+    },
+    /// Whole-model inconsistency: no single graph input, duplicate
+    /// tensor names, a dangling edge, or a lowered graph that failed
+    /// [`crate::graph::validate`].
+    Model(String),
+    /// Filesystem failure, with the path being accessed.
+    Io {
+        /// The path being read or written.
+        path: PathBuf,
+        /// The underlying OS error.
+        source: std::io::Error,
+    },
+}
+
+impl ImportError {
+    /// Shorthand for [`ImportError::Wire`].
+    pub fn wire(offset: usize, detail: impl Into<String>) -> Self {
+        ImportError::Wire { offset, detail: detail.into() }
+    }
+
+    /// Shorthand for [`ImportError::Schema`].
+    pub fn schema(detail: impl Into<String>) -> Self {
+        ImportError::Schema(detail.into())
+    }
+
+    /// Shorthand for [`ImportError::UnsupportedOp`].
+    pub fn unsupported(
+        op_type: impl Into<String>,
+        node: impl Into<String>,
+        detail: impl Into<String>,
+    ) -> Self {
+        ImportError::UnsupportedOp {
+            op_type: op_type.into(),
+            node: node.into(),
+            detail: detail.into(),
+        }
+    }
+
+    /// Shorthand for [`ImportError::ShapeMismatch`].
+    pub fn shape(node: impl Into<String>, detail: impl Into<String>) -> Self {
+        ImportError::ShapeMismatch { node: node.into(), detail: detail.into() }
+    }
+
+    /// Shorthand for [`ImportError::Model`].
+    pub fn model(detail: impl Into<String>) -> Self {
+        ImportError::Model(detail.into())
+    }
+
+    /// Shorthand for [`ImportError::Io`].
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        ImportError::Io { path: path.into(), source }
+    }
+}
+
+impl fmt::Display for ImportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ImportError::Wire { offset, detail } => {
+                write!(f, "bad wire data at byte {offset}: {detail}")
+            }
+            ImportError::Schema(m) => write!(f, "onnx schema error: {m}"),
+            ImportError::UnsupportedOp { op_type, node, detail } => {
+                write!(f, "unsupported op {op_type:?} at node {node:?}: {detail}")
+            }
+            ImportError::ShapeMismatch { node, detail } => {
+                write!(f, "shape mismatch at {node:?}: {detail}")
+            }
+            ImportError::Model(m) => write!(f, "inconsistent model: {m}"),
+            ImportError::Io { path, source } => write!(f, "{}: {source}", path.display()),
+        }
+    }
+}
+
+impl std::error::Error for ImportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ImportError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<ImportError> for crate::compiler::CompileError {
+    fn from(e: ImportError) -> Self {
+        use crate::compiler::CompileError;
+        match e {
+            ImportError::Wire { .. } | ImportError::Schema(_) => {
+                CompileError::Parse(e.to_string())
+            }
+            ImportError::UnsupportedOp { .. } => CompileError::Unsupported(e.to_string()),
+            ImportError::ShapeMismatch { .. } | ImportError::Model(_) => {
+                CompileError::Graph(e.to_string())
+            }
+            ImportError::Io { path, source } => CompileError::Io { path, source },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::CompileError;
+
+    #[test]
+    fn display_carries_context() {
+        let e = ImportError::wire(42, "truncated varint");
+        assert!(e.to_string().contains("42"));
+        assert!(e.to_string().contains("truncated varint"));
+        let e = ImportError::unsupported("Softmax", "probs", "not in the accelerator op set");
+        assert!(e.to_string().contains("Softmax"));
+        assert!(e.to_string().contains("probs"));
+    }
+
+    #[test]
+    fn maps_into_compile_error_classes() {
+        assert!(matches!(
+            CompileError::from(ImportError::wire(0, "x")),
+            CompileError::Parse(_)
+        ));
+        assert!(matches!(
+            CompileError::from(ImportError::unsupported("Softmax", "n", "d")),
+            CompileError::Unsupported(_)
+        ));
+        assert!(matches!(
+            CompileError::from(ImportError::shape("n", "d")),
+            CompileError::Graph(_)
+        ));
+        assert!(matches!(
+            CompileError::from(ImportError::io(
+                "/nope",
+                std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+            )),
+            CompileError::Io { .. }
+        ));
+    }
+}

@@ -1,0 +1,558 @@
+//! ONNX exporter: `graph::Graph` (+ optional quantized `Params`) → ONNX.
+//!
+//! The inverse of [`super::lower`], used for hermetic round-trip
+//! fixtures (every zoo model exports to ONNX and re-imports bit-
+//! identically, so the importer is tested against real topologies
+//! without committing binary blobs) and for handing compiled models to
+//! external ONNX tooling.
+//!
+//! Faithfulness contract:
+//! * one ONNX node per graph node, same names, same order (a `Swish`
+//!   node becomes the canonical `Sigmoid("{n}.sig") → Mul("{n}")` pair
+//!   that the importer re-fuses);
+//! * quantized parameters ride along *exactly*: weights as `INT8`
+//!   initializers in ONNX layout (OIHW / `[C,1,k,k]` depthwise / IO
+//!   Gemm), biases as `INT32`, and the accelerator-specific scalars as
+//!   custom node attributes `sf_shift` / `sf_elt_shift` / `sf_lut` on
+//!   each group's main node. `INT8` weight tensors signal the importer
+//!   to take the exact (pre-quantized) path, making the round trip
+//!   bit-identical under the functional simulator.
+
+use super::error::ImportError;
+use super::proto::{
+    data_type, AttrValue, Attribute, GraphProto, ModelProto, NodeProto, TensorProto,
+    ValueInfo,
+};
+use crate::analyzer::analyze;
+use crate::funcsim::{GroupParams, Params};
+use crate::graph::{validate, Activation, Graph, Node, OpKind, PadMode, Shape};
+use std::collections::{HashMap, HashSet};
+
+/// Alpha of the hardware leaky-ReLU (negative slope 1/8, a shift).
+pub const LEAKY_ALPHA: f32 = 0.125;
+
+/// Alpha/beta of ONNX `HardSigmoid` matching `relu6(x+3)/6`.
+pub const HARD_SIGMOID_ALPHA: f32 = 1.0 / 6.0;
+
+fn a_int(name: &str, v: i64) -> Attribute {
+    Attribute { name: name.into(), value: AttrValue::Int(v) }
+}
+
+fn a_ints(name: &str, vs: Vec<i64>) -> Attribute {
+    Attribute { name: name.into(), value: AttrValue::Ints(vs) }
+}
+
+fn a_float(name: &str, v: f32) -> Attribute {
+    Attribute { name: name.into(), value: AttrValue::Float(v) }
+}
+
+fn a_str(name: &str, v: &str) -> Attribute {
+    Attribute { name: name.into(), value: AttrValue::Str(v.into()) }
+}
+
+fn a_tensor(name: &str, t: TensorProto) -> Attribute {
+    Attribute { name: name.into(), value: AttrValue::Tensor(t) }
+}
+
+/// `[1, C, H, W]` value-info dims for a feature-map shape.
+fn nchw(s: Shape) -> Vec<i64> {
+    vec![1, s.c as i64, s.h as i64, s.w as i64]
+}
+
+/// Permute repo conv weights (HWIO `[kh][kw][cin][cout]`) into ONNX
+/// OIHW `[cout][cin][kh][kw]`. Pure index shuffle — bit-exact.
+fn hwio_to_oihw(w: &[i8], k: usize, cin: usize, cout: usize) -> Vec<i8> {
+    let mut out = vec![0i8; w.len()];
+    for y in 0..k {
+        for x in 0..k {
+            for i in 0..cin {
+                let src_base = ((y * k + x) * cin + i) * cout;
+                for o in 0..cout {
+                    out[((o * cin + i) * k + y) * k + x] = w[src_base + o];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Permute repo depthwise weights (`[ky][kx][c]`) into ONNX
+/// `[C][1][kh][kw]`.
+fn hwc_to_c1hw(w: &[i8], k: usize, c: usize) -> Vec<i8> {
+    let mut out = vec![0i8; w.len()];
+    for y in 0..k {
+        for x in 0..k {
+            for ch in 0..c {
+                out[(ch * k + y) * k + x] = w[(y * k + x) * c + ch];
+            }
+        }
+    }
+    out
+}
+
+struct Exporter<'a> {
+    g: &'a Graph,
+    /// Params of each group keyed by the group's *main* node id.
+    main_params: HashMap<usize, &'a GroupParams>,
+    /// Group params visible from any node in the group (weight lookup).
+    node_params: HashMap<usize, &'a GroupParams>,
+    nodes: Vec<NodeProto>,
+    initializers: Vec<TensorProto>,
+    value_infos: Vec<ValueInfo>,
+    names: HashSet<String>,
+}
+
+impl<'a> Exporter<'a> {
+    fn claim(&mut self, name: &str) -> Result<(), ImportError> {
+        if !self.names.insert(name.to_string()) {
+            return Err(ImportError::model(format!(
+                "exported tensor name {name:?} collides (node names and derived \
+                 initializer names must be unique)"
+            )));
+        }
+        Ok(())
+    }
+
+    fn init(&mut self, t: TensorProto) -> Result<(), ImportError> {
+        self.claim(&t.name)?;
+        self.initializers.push(t);
+        Ok(())
+    }
+
+    fn in_name(&self, n: &Node, operand: usize) -> String {
+        self.g.node(n.inputs[operand]).name.clone()
+    }
+
+    fn emit(&mut self, op_type: &str, n: &Node, inputs: Vec<String>, attrs: Vec<Attribute>) {
+        self.nodes.push(NodeProto {
+            name: n.name.clone(),
+            op_type: op_type.into(),
+            input: inputs,
+            output: vec![n.name.clone()],
+            attribute: attrs,
+        });
+        self.value_infos.push(ValueInfo::concrete(
+            &n.name,
+            data_type::INT8,
+            &nchw(n.out_shape),
+        ));
+    }
+
+    /// The `sf_*` carrier attributes of a group-main node.
+    fn sf_attrs(&self, n: &Node) -> Vec<Attribute> {
+        let Some(gp) = self.main_params.get(&n.id.0) else {
+            return Vec::new();
+        };
+        let mut out = vec![a_int("sf_shift", gp.shift as i64)];
+        if gp.elt_shift != 0 {
+            out.push(a_int("sf_elt_shift", gp.elt_shift as i64));
+        }
+        if let Some(lut) = &gp.lut {
+            out.push(a_tensor(
+                "sf_lut",
+                TensorProto::i8s(format!("{}.lut", n.name), vec![256], lut.clone()),
+            ));
+        }
+        out
+    }
+
+    fn export_conv(&mut self, n: &Node) -> Result<(), ImportError> {
+        let OpKind::Conv { k, stride, out_c, pad, depthwise } = n.op else {
+            unreachable!()
+        };
+        let cin = n.in_c();
+        let wcount = n.weight_count() as usize;
+        let (weights, bias) = match self.node_params.get(&n.id.0) {
+            Some(gp) if gp.weights.len() == wcount => {
+                let w = if depthwise {
+                    hwc_to_c1hw(&gp.weights, k, cin)
+                } else {
+                    hwio_to_oihw(&gp.weights, k, cin, out_c)
+                };
+                let mut b = gp.bias.clone();
+                b.resize(out_c, 0);
+                (w, b)
+            }
+            Some(gp) => {
+                return Err(ImportError::model(format!(
+                    "group {:?} carries {} weights, node geometry needs {wcount}",
+                    n.name,
+                    gp.weights.len()
+                )))
+            }
+            None => (vec![0i8; wcount], vec![0i32; out_c]),
+        };
+        let wdims = if depthwise {
+            vec![cin as i64, 1, k as i64, k as i64]
+        } else {
+            vec![out_c as i64, cin as i64, k as i64, k as i64]
+        };
+        let wname = format!("{}.w", n.name);
+        let bname = format!("{}.b", n.name);
+        self.init(TensorProto::i8s(&wname, wdims, weights))?;
+        self.init(TensorProto::i32s(&bname, vec![out_c as i64], bias))?;
+        let mut attrs = vec![
+            a_ints("kernel_shape", vec![k as i64, k as i64]),
+            a_ints("strides", vec![stride as i64, stride as i64]),
+            a_ints("dilations", vec![1, 1]),
+            a_int("group", if depthwise { cin as i64 } else { 1 }),
+            a_str(
+                "auto_pad",
+                match pad {
+                    PadMode::Same => "SAME_UPPER",
+                    PadMode::Valid => "VALID",
+                },
+            ),
+        ];
+        attrs.extend(self.sf_attrs(n));
+        self.emit("Conv", n, vec![self.in_name(n, 0), wname, bname], attrs);
+        Ok(())
+    }
+
+    fn export_fc(&mut self, n: &Node) -> Result<(), ImportError> {
+        let OpKind::Fc { out_c } = n.op else { unreachable!() };
+        let cin = n.in_c();
+        let wcount = cin * out_c;
+        let (weights, bias) = match self.node_params.get(&n.id.0) {
+            Some(gp) if gp.weights.len() == wcount => {
+                let mut b = gp.bias.clone();
+                b.resize(out_c, 0);
+                (gp.weights.clone(), b)
+            }
+            Some(gp) => {
+                return Err(ImportError::model(format!(
+                    "group {:?} carries {} weights, fc geometry needs {wcount}",
+                    n.name,
+                    gp.weights.len()
+                )))
+            }
+            None => (vec![0i8; wcount], vec![0i32; out_c]),
+        };
+        let wname = format!("{}.w", n.name);
+        let bname = format!("{}.b", n.name);
+        // transB=0: B is [cin][cout] — exactly the repo's IO layout
+        self.init(TensorProto::i8s(&wname, vec![cin as i64, out_c as i64], weights))?;
+        self.init(TensorProto::i32s(&bname, vec![out_c as i64], bias))?;
+        let attrs = self.sf_attrs(n);
+        self.emit("Gemm", n, vec![self.in_name(n, 0), wname, bname], attrs);
+        Ok(())
+    }
+
+    fn export_act(&mut self, n: &Node, act: Activation) -> Result<(), ImportError> {
+        let x = self.in_name(n, 0);
+        match act {
+            Activation::Linear => {
+                // marker so Act(Linear) survives the Identity round trip
+                let mut attrs = vec![a_int("sf_linear_act", 1)];
+                attrs.extend(self.sf_attrs(n));
+                self.emit("Identity", n, vec![x], attrs);
+            }
+            Activation::Relu => {
+                let attrs = self.sf_attrs(n);
+                self.emit("Relu", n, vec![x], attrs);
+            }
+            Activation::Leaky => {
+                let mut attrs = vec![a_float("alpha", LEAKY_ALPHA)];
+                attrs.extend(self.sf_attrs(n));
+                self.emit("LeakyRelu", n, vec![x], attrs);
+            }
+            Activation::Relu6 => {
+                let min_name = format!("{}.min", n.name);
+                let max_name = format!("{}.max", n.name);
+                self.init(TensorProto::f32s(&min_name, vec![], vec![0.0]))?;
+                self.init(TensorProto::f32s(&max_name, vec![], vec![6.0]))?;
+                let attrs = self.sf_attrs(n);
+                self.emit("Clip", n, vec![x, min_name, max_name], attrs);
+            }
+            Activation::Sigmoid => {
+                let attrs = self.sf_attrs(n);
+                self.emit("Sigmoid", n, vec![x], attrs);
+            }
+            Activation::Swish => {
+                // canonical SiLU decomposition the importer re-fuses
+                let sig = format!("{}.sig", n.name);
+                self.claim(&sig)?;
+                self.nodes.push(NodeProto {
+                    name: sig.clone(),
+                    op_type: "Sigmoid".into(),
+                    input: vec![x.clone()],
+                    output: vec![sig.clone()],
+                    attribute: vec![],
+                });
+                self.value_infos.push(ValueInfo::concrete(
+                    &sig,
+                    data_type::INT8,
+                    &nchw(n.out_shape),
+                ));
+                let attrs = self.sf_attrs(n);
+                self.emit("Mul", n, vec![x, sig], attrs);
+            }
+            Activation::HardSwish => {
+                let attrs = self.sf_attrs(n);
+                self.emit("HardSwish", n, vec![x], attrs);
+            }
+            Activation::HardSigmoid => {
+                let mut attrs =
+                    vec![a_float("alpha", HARD_SIGMOID_ALPHA), a_float("beta", 0.5)];
+                attrs.extend(self.sf_attrs(n));
+                self.emit("HardSigmoid", n, vec![x], attrs);
+            }
+        }
+        Ok(())
+    }
+
+    fn export_node(&mut self, n: &Node) -> Result<(), ImportError> {
+        self.claim(&n.name)?;
+        match n.op {
+            OpKind::Input => unreachable!("input handled by caller"),
+            OpKind::Conv { .. } => self.export_conv(n)?,
+            OpKind::Fc { .. } => self.export_fc(n)?,
+            OpKind::Act(a) => self.export_act(n, a)?,
+            OpKind::BatchNorm => {
+                // identity statistics: the real scale/shift already live
+                // in the quantized conv weights (exact-path contract)
+                let c = n.out_shape.c as i64;
+                let names: Vec<String> = ["scale", "bn_b", "mean", "var"]
+                    .iter()
+                    .map(|s| format!("{}.{s}", n.name))
+                    .collect();
+                let vals = [1.0f32, 0.0, 0.0, 1.0];
+                for (name, v) in names.iter().zip(vals) {
+                    self.init(TensorProto::f32s(name, vec![c], vec![v; c as usize]))?;
+                }
+                let mut attrs = vec![a_float("epsilon", 0.0)];
+                attrs.extend(self.sf_attrs(n));
+                let mut inputs = vec![self.in_name(n, 0)];
+                inputs.extend(names);
+                self.emit("BatchNormalization", n, inputs, attrs);
+            }
+            OpKind::BiasAdd => {
+                // per-channel zeros: real bias is folded into the group's
+                // INT32 bias initializer; the importer re-folds additively
+                let c = n.out_shape.c;
+                let bname = format!("{}.b", n.name);
+                self.init(TensorProto::i32s(
+                    &bname,
+                    vec![c as i64, 1, 1],
+                    vec![0i32; c],
+                ))?;
+                let attrs = self.sf_attrs(n);
+                self.emit("Add", n, vec![self.in_name(n, 0), bname], attrs);
+            }
+            OpKind::MaxPool { k, stride } | OpKind::AvgPool { k, stride } => {
+                let op = if matches!(n.op, OpKind::MaxPool { .. }) {
+                    "MaxPool"
+                } else {
+                    "AveragePool"
+                };
+                let mut attrs = vec![
+                    a_ints("kernel_shape", vec![k as i64, k as i64]),
+                    a_ints("strides", vec![stride as i64, stride as i64]),
+                    a_str("auto_pad", "SAME_UPPER"),
+                ];
+                if op == "AveragePool" {
+                    // the datapath divides by k² with zero-padded taps
+                    attrs.push(a_int("count_include_pad", 1));
+                }
+                attrs.extend(self.sf_attrs(n));
+                self.emit(op, n, vec![self.in_name(n, 0)], attrs);
+            }
+            OpKind::GlobalAvgPool => {
+                let attrs = self.sf_attrs(n);
+                self.emit("GlobalAveragePool", n, vec![self.in_name(n, 0)], attrs);
+            }
+            OpKind::EltwiseAdd => {
+                let attrs = self.sf_attrs(n);
+                self.emit("Add", n, vec![self.in_name(n, 0), self.in_name(n, 1)], attrs);
+            }
+            OpKind::ScaleMul => {
+                let attrs = self.sf_attrs(n);
+                self.emit("Mul", n, vec![self.in_name(n, 0), self.in_name(n, 1)], attrs);
+            }
+            OpKind::Concat => {
+                let mut attrs = vec![a_int("axis", 1)];
+                attrs.extend(self.sf_attrs(n));
+                self.emit(
+                    "Concat",
+                    n,
+                    vec![self.in_name(n, 0), self.in_name(n, 1)],
+                    attrs,
+                );
+            }
+            OpKind::Upsample { factor } => {
+                let sname = format!("{}.scales", n.name);
+                self.init(TensorProto::f32s(
+                    &sname,
+                    vec![4],
+                    vec![1.0, 1.0, factor as f32, factor as f32],
+                ))?;
+                let mut attrs = vec![
+                    a_str("mode", "nearest"),
+                    a_str("nearest_mode", "floor"),
+                    a_str("coordinate_transformation_mode", "asymmetric"),
+                ];
+                attrs.extend(self.sf_attrs(n));
+                // input 1 (roi) is the omitted optional input
+                self.emit(
+                    "Resize",
+                    n,
+                    vec![self.in_name(n, 0), String::new(), sname],
+                    attrs,
+                );
+            }
+            OpKind::Identity => {
+                let attrs = self.sf_attrs(n);
+                self.emit("Identity", n, vec![self.in_name(n, 0)], attrs);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Export a validated graph (and optionally its quantized parameters)
+/// into an ONNX [`ModelProto`].
+pub fn export_graph(g: &Graph, params: Option<&Params>) -> Result<ModelProto, ImportError> {
+    validate(g).map_err(|e| ImportError::model(e.to_string()))?;
+    let gg = analyze(g);
+    let mut main_params: HashMap<usize, &GroupParams> = HashMap::new();
+    let mut node_params: HashMap<usize, &GroupParams> = HashMap::new();
+    if let Some(p) = params {
+        for gr in &gg.groups {
+            if let Some(gp) = p.get(&g.node(gr.main).name) {
+                main_params.insert(gr.main.0, gp);
+                for &nid in &gr.nodes {
+                    node_params.insert(nid.0, gp);
+                }
+            }
+        }
+    }
+    let mut ex = Exporter {
+        g,
+        main_params,
+        node_params,
+        nodes: Vec::new(),
+        initializers: Vec::new(),
+        value_infos: Vec::new(),
+        names: HashSet::new(),
+    };
+    let input = g.input();
+    ex.claim(&input.name)?;
+    for n in &g.nodes {
+        if matches!(n.op, OpKind::Input) {
+            continue;
+        }
+        ex.export_node(n)?;
+    }
+    let outputs: Vec<ValueInfo> = g
+        .outputs()
+        .into_iter()
+        .map(|id| {
+            let n = g.node(id);
+            ValueInfo::concrete(&n.name, data_type::INT8, &nchw(n.out_shape))
+        })
+        .collect();
+    // graph outputs are not also listed as value_info
+    let out_names: HashSet<&str> = outputs.iter().map(|v| v.name.as_str()).collect();
+    let value_info = ex
+        .value_infos
+        .into_iter()
+        .filter(|v| !out_names.contains(v.name.as_str()))
+        .collect();
+    Ok(ModelProto {
+        ir_version: 8,
+        producer_name: "shortcutfusion".into(),
+        producer_version: env!("CARGO_PKG_VERSION").into(),
+        // HardSwish needs opset >= 14
+        opset_version: 14,
+        graph: Some(GraphProto {
+            name: g.name.clone(),
+            node: ex.nodes,
+            initializer: ex.initializers,
+            input: vec![ValueInfo::concrete(
+                &input.name,
+                data_type::INT8,
+                &nchw(input.out_shape),
+            )],
+            output: outputs,
+            value_info,
+        }),
+    })
+}
+
+/// Export straight to `.onnx` bytes.
+pub fn export_bytes(g: &Graph, params: Option<&Params>) -> Result<Vec<u8>, ImportError> {
+    Ok(super::proto::encode_model(&export_graph(g, params)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::funcsim::Params;
+
+    #[test]
+    fn weight_permutations_invert() {
+        let (k, cin, cout) = (3, 2, 4);
+        let w: Vec<i8> = (0..(k * k * cin * cout) as i32).map(|v| (v % 100) as i8).collect();
+        let oihw = hwio_to_oihw(&w, k, cin, cout);
+        // invert by hand: hwio[((y*k+x)*cin+i)*cout+o] == oihw[((o*cin+i)*k+y)*k+x]
+        for y in 0..k {
+            for x in 0..k {
+                for i in 0..cin {
+                    for o in 0..cout {
+                        assert_eq!(
+                            w[((y * k + x) * cin + i) * cout + o],
+                            oihw[((o * cin + i) * k + y) * k + x]
+                        );
+                    }
+                }
+            }
+        }
+        let dw: Vec<i8> = (0..(k * k * cin) as i32).map(|v| v as i8).collect();
+        let c1hw = hwc_to_c1hw(&dw, k, cin);
+        for y in 0..k {
+            for x in 0..k {
+                for c in 0..cin {
+                    assert_eq!(dw[(y * k + x) * cin + c], c1hw[(c * k + y) * k + x]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tinynet_exports_with_and_without_params() {
+        let g = crate::zoo::tinynet();
+        let m = export_graph(&g, None).unwrap();
+        let graph = m.graph.as_ref().unwrap();
+        // one ONNX node per non-input graph node, plus one .sig per Swish
+        let swishes = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Act(Activation::Swish)))
+            .count();
+        assert_eq!(graph.node.len(), g.nodes.len() - 1 + swishes);
+        assert_eq!(graph.input.len(), 1);
+        assert!(!graph.output.is_empty());
+
+        let gg = analyze(&g);
+        let p = Params::random(&gg, 7);
+        let m2 = export_graph(&g, Some(&p)).unwrap();
+        // params surface as sf_shift attrs on main nodes
+        let with_shift = m2
+            .graph
+            .unwrap()
+            .node
+            .iter()
+            .filter(|n| n.attr("sf_shift").is_some())
+            .count();
+        assert_eq!(with_shift, p.groups.len());
+    }
+
+    #[test]
+    fn exported_bytes_decode() {
+        let g = crate::zoo::tinynet();
+        let bytes = export_bytes(&g, None).unwrap();
+        let m = super::super::proto::decode_model(&bytes).unwrap();
+        assert_eq!(m.opset_version, 14);
+        assert_eq!(m.producer_name, "shortcutfusion");
+    }
+}

@@ -1,0 +1,1700 @@
+//! Lowering: decoded ONNX → `graph::Graph` + `funcsim::Params`.
+//!
+//! The inverse of [`super::export`]. Maps the ONNX opset subset in the
+//! ARCHITECTURE.md lowering table onto `graph::OpKind`, cross-checking
+//! every computed shape against the model's declared `value_info`, and
+//! assembles the quantized parameter store:
+//!
+//! * `INT8` weight initializers take the **exact** path — values are
+//!   permuted (OIHW→HWIO, `[C,1,k,k]`→HWC, Gemm `transB` handled) but
+//!   never re-quantized, so a model produced by [`super::export`]
+//!   round-trips bit-identically under the functional simulator;
+//! * `FLOAT` weight initializers take the **quantize** path — standalone
+//!   `BatchNormalization` folds into the preceding conv
+//!   (`w·γ/√(σ²+ε)`), then symmetric per-tensor max-abs quantization to
+//!   int8 (structural fidelity: the graph and datapath are faithful, the
+//!   fixed-point calibration is a placeholder for a real calibration
+//!   pass);
+//! * the accelerator scalars ride on custom attributes (`sf_shift`,
+//!   `sf_elt_shift`, `sf_lut`) of each fused group's main node;
+//! * activations the simulator evaluates through the 256-entry LUT get
+//!   a synthesized table when the model carries none.
+//!
+//! Everything that cannot lower returns a typed [`ImportError`] — this
+//! module never panics on untrusted models.
+
+use super::error::ImportError;
+use super::proto::{
+    data_type, decode_model, AttrValue, GraphProto, NodeProto, TensorData, TensorProto,
+    ValueInfo,
+};
+use crate::analyzer::{analyze, GroupedGraph};
+use crate::funcsim::{GroupParams, Params};
+use crate::graph::{
+    validate, Activation, Graph, Node, NodeId, OpKind, PadMode, Shape,
+};
+use std::collections::{HashMap, HashSet};
+
+/// The result of a successful import: a validated graph plus the
+/// parameter store feeding [`crate::funcsim`] and the program packer.
+#[derive(Debug, Clone)]
+pub struct Imported {
+    /// The lowered, validated compute graph.
+    pub graph: Graph,
+    /// Quantized parameters for every weight-carrying / LUT group.
+    pub params: Params,
+}
+
+/// Sideband quantization attributes read off a node (`sf_*`).
+#[derive(Debug, Clone, Default)]
+struct SfAttrs {
+    shift: Option<i32>,
+    elt_shift: Option<i32>,
+    lut: Option<Vec<i8>>,
+}
+
+/// Weight payload recorded for a Conv/Gemm node, keyed by node name.
+enum WeightSpec {
+    /// Pre-quantized int8 weights in repo layout + int32 bias.
+    Exact { weights: Vec<i8>, bias: Vec<i32> },
+    /// Float weights in repo layout + float bias — quantized after BN
+    /// folding in [`assemble_params`].
+    Float { weights: Vec<f32>, bias: Vec<f32> },
+}
+
+/// A standalone `Add`-with-constant folded into the group bias.
+enum BiasSpec {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+/// BatchNormalization statistics folded into the producer's weights.
+struct BnFold {
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+    mean: Vec<f32>,
+    var: Vec<f32>,
+    eps: f32,
+}
+
+/// Permute ONNX OIHW conv weights into repo HWIO. Bit-exact shuffle.
+fn oihw_to_hwio<T: Copy + Default>(w: &[T], k: usize, cin: usize, cout: usize) -> Vec<T> {
+    let mut out = vec![T::default(); w.len()];
+    for o in 0..cout {
+        for i in 0..cin {
+            for y in 0..k {
+                for x in 0..k {
+                    out[((y * k + x) * cin + i) * cout + o] = w[((o * cin + i) * k + y) * k + x];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Permute ONNX `[C,1,kh,kw]` depthwise weights into repo `[ky][kx][c]`.
+fn c1hw_to_hwc<T: Copy + Default>(w: &[T], k: usize, c: usize) -> Vec<T> {
+    let mut out = vec![T::default(); w.len()];
+    for ch in 0..c {
+        for y in 0..k {
+            for x in 0..k {
+                out[(y * k + x) * c + ch] = w[(ch * k + y) * k + x];
+            }
+        }
+    }
+    out
+}
+
+fn dim_usize(name: &str, d: i64) -> Result<usize, ImportError> {
+    usize::try_from(d)
+        .ok()
+        .filter(|&v| v > 0)
+        .ok_or_else(|| ImportError::shape(name, format!("dimension {d} must be positive")))
+}
+
+/// `[1,C,H,W]` / `[C,H,W]` / `[1,C]` / `[C]` declared dims → repo shape.
+fn shape_from_dims(name: &str, dims: &[Option<i64>]) -> Result<Shape, ImportError> {
+    let concrete = |i: usize| -> Result<usize, ImportError> {
+        match dims[i] {
+            Some(d) => dim_usize(name, d),
+            None => Err(ImportError::shape(
+                name,
+                format!("dimension {i} is symbolic; the input shape must be concrete"),
+            )),
+        }
+    };
+    let batch_ok = |d: Option<i64>| d.is_none() || d == Some(1);
+    match dims.len() {
+        4 => {
+            if !batch_ok(dims[0]) {
+                return Err(ImportError::unsupported(
+                    "Input",
+                    name,
+                    "batch size must be 1 (the accelerator optimizes single-image latency)",
+                ));
+            }
+            Ok(Shape::new(concrete(2)?, concrete(3)?, concrete(1)?))
+        }
+        3 => Ok(Shape::new(concrete(1)?, concrete(2)?, concrete(0)?)),
+        2 => {
+            if !batch_ok(dims[0]) {
+                return Err(ImportError::unsupported("Input", name, "batch size must be 1"));
+            }
+            Ok(Shape::vec(concrete(1)?))
+        }
+        1 => Ok(Shape::vec(concrete(0)?)),
+        r => Err(ImportError::shape(name, format!("rank-{r} tensors are not feature maps"))),
+    }
+}
+
+/// Scalar float from a 0-d / 1-element initializer (Clip bounds).
+fn scalar_f32(t: &TensorProto) -> Option<f32> {
+    match &t.data {
+        TensorData::F32(v) if v.len() == 1 => Some(v[0]),
+        _ => None,
+    }
+}
+
+/// Synthesize the 256-entry activation LUT for imported float models
+/// that carry no `sf_lut`. Input index is the int8 pre-activation in
+/// Q3.4 (x = v / 16), output is the int8 post-activation in the same
+/// format — matching how the functional simulator indexes the table.
+fn synth_lut(act: Activation) -> Vec<i8> {
+    let f = |x: f32| -> f32 {
+        match act {
+            Activation::Relu6 => x.clamp(0.0, 6.0),
+            Activation::Swish => x / (1.0 + (-x).exp()),
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::HardSwish => x * (x + 3.0).clamp(0.0, 6.0) / 6.0,
+            Activation::HardSigmoid => ((x + 3.0) / 6.0).clamp(0.0, 1.0),
+            // non-LUT activations never reach here
+            _ => x,
+        }
+    };
+    (0..256u16)
+        .map(|i| {
+            let v = (i as u8) as i8;
+            (f(v as f32 / 16.0) * 16.0).round().clamp(-128.0, 127.0) as i8
+        })
+        .collect()
+}
+
+/// The lowering state machine: one pass over the ONNX node list.
+struct Lowerer {
+    nodes: Vec<Node>,
+    /// Claimed graph-node / alias names (repo graphs use one namespace).
+    names: HashSet<String>,
+    /// Tensor name → producing node (aliases point at the producer).
+    tensors: HashMap<String, NodeId>,
+    /// Initializers (plus `Constant` node outputs) by name.
+    inits: HashMap<String, TensorProto>,
+    /// Declared intermediate/output dims for shape cross-checking.
+    vinfo: HashMap<String, Vec<Option<i64>>>,
+    /// Conv/Gemm weight payloads keyed by graph-node name.
+    weight_specs: HashMap<String, WeightSpec>,
+    /// `sf_*` attributes keyed by graph-node name.
+    sf: HashMap<String, SfAttrs>,
+    /// BatchNormalization statistics keyed by graph-node name.
+    bn: HashMap<String, BnFold>,
+    /// Constant-add bias folds keyed by graph-node name.
+    bias_adds: HashMap<String, BiasSpec>,
+}
+
+impl Lowerer {
+    fn new() -> Self {
+        Lowerer {
+            nodes: Vec::new(),
+            names: HashSet::new(),
+            tensors: HashMap::new(),
+            inits: HashMap::new(),
+            vinfo: HashMap::new(),
+            weight_specs: HashMap::new(),
+            sf: HashMap::new(),
+            bn: HashMap::new(),
+            bias_adds: HashMap::new(),
+        }
+    }
+
+    /// First output tensor name — the graph-node name.
+    fn out_name(&self, n: &NodeProto) -> Result<String, ImportError> {
+        n.output
+            .first()
+            .filter(|s| !s.is_empty())
+            .cloned()
+            .ok_or_else(|| {
+                ImportError::schema(format!(
+                    "node {:?} ({}) has no output tensor",
+                    n.display_name(),
+                    n.op_type
+                ))
+            })
+    }
+
+    /// The `idx`-th input tensor name (empty string = absent optional).
+    fn operand<'b>(&self, n: &'b NodeProto, idx: usize) -> Result<&'b str, ImportError> {
+        n.input
+            .get(idx)
+            .map(String::as_str)
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| {
+                ImportError::schema(format!(
+                    "node {:?} ({}) is missing input {idx}",
+                    n.display_name(),
+                    n.op_type
+                ))
+            })
+    }
+
+    /// Feature-map operand: must resolve to a lowered node.
+    fn src(&self, n: &NodeProto, idx: usize) -> Result<NodeId, ImportError> {
+        let t = self.operand(n, idx)?;
+        if let Some(&id) = self.tensors.get(t) {
+            return Ok(id);
+        }
+        if self.inits.contains_key(t) {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                n.display_name(),
+                format!("input {t:?} is a constant where a feature map is required"),
+            ));
+        }
+        Err(ImportError::model(format!(
+            "node {:?} ({}) reads unknown tensor {t:?}",
+            n.display_name(),
+            n.op_type
+        )))
+    }
+
+    /// Constant operand: must resolve to an initializer.
+    fn init_of(&self, n: &NodeProto, idx: usize) -> Result<&TensorProto, ImportError> {
+        let t = self.operand(n, idx)?;
+        self.inits.get(t).ok_or_else(|| {
+            ImportError::unsupported(
+                &n.op_type,
+                n.display_name(),
+                format!("input {t:?} must be a constant initializer"),
+            )
+        })
+    }
+
+    fn shape_of(&self, id: NodeId) -> Shape {
+        self.nodes[id.0].out_shape
+    }
+
+    /// Cross-check a computed shape against declared `value_info`.
+    fn check_vinfo(&self, name: &str, got: Shape) -> Result<(), ImportError> {
+        let Some(dims) = self.vinfo.get(name) else { return Ok(()) };
+        let dim_ok = |d: Option<i64>, v: usize| d.is_none() || d == Some(v as i64);
+        let ok = match dims.len() {
+            4 => {
+                dim_ok(dims[0], 1)
+                    && dim_ok(dims[1], got.c)
+                    && dim_ok(dims[2], got.h)
+                    && dim_ok(dims[3], got.w)
+            }
+            3 => dim_ok(dims[0], got.c) && dim_ok(dims[1], got.h) && dim_ok(dims[2], got.w),
+            2 => got.h == 1 && got.w == 1 && dim_ok(dims[0], 1) && dim_ok(dims[1], got.c),
+            1 => got.h == 1 && got.w == 1 && dim_ok(dims[0], got.c),
+            _ => false,
+        };
+        if ok {
+            Ok(())
+        } else {
+            Err(ImportError::shape(
+                name,
+                format!("declared value_info {dims:?} contradicts computed shape {got}"),
+            ))
+        }
+    }
+
+    fn claim(&mut self, name: &str) -> Result<(), ImportError> {
+        if !self.names.insert(name.to_string()) {
+            return Err(ImportError::model(format!("duplicate tensor name {name:?}")));
+        }
+        Ok(())
+    }
+
+    fn push(
+        &mut self,
+        name: String,
+        op: OpKind,
+        inputs: Vec<NodeId>,
+        out_shape: Shape,
+    ) -> Result<NodeId, ImportError> {
+        self.claim(&name)?;
+        self.check_vinfo(&name, out_shape)?;
+        let in_shapes = inputs.iter().map(|&i| self.shape_of(i)).collect();
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(Node { id, name: name.clone(), op, inputs, in_shapes, out_shape });
+        self.tensors.insert(name, id);
+        Ok(id)
+    }
+
+    /// Harvest `sf_shift` / `sf_elt_shift` / `sf_lut` off an ONNX node.
+    fn take_sf(&mut self, n: &NodeProto, gname: &str) -> Result<(), ImportError> {
+        let mut sf = SfAttrs::default();
+        let mut any = false;
+        if let Some(AttrValue::Int(v)) = n.attr("sf_shift") {
+            sf.shift = Some(*v as i32);
+            any = true;
+        }
+        if let Some(AttrValue::Int(v)) = n.attr("sf_elt_shift") {
+            sf.elt_shift = Some(*v as i32);
+            any = true;
+        }
+        if let Some(AttrValue::Tensor(t)) = n.attr("sf_lut") {
+            let TensorData::I8(v) = &t.data else {
+                return Err(ImportError::schema(format!(
+                    "node {gname:?}: sf_lut must be an INT8 tensor"
+                )));
+            };
+            if v.len() != 256 {
+                return Err(ImportError::schema(format!(
+                    "node {gname:?}: sf_lut must have 256 entries, got {}",
+                    v.len()
+                )));
+            }
+            sf.lut = Some(v.clone());
+            any = true;
+        }
+        if any {
+            self.sf.insert(gname.to_string(), sf);
+        }
+        Ok(())
+    }
+
+    /// Conv / pooling padding → `PadMode`, TF-convention check.
+    fn infer_pad(
+        &self,
+        name: &str,
+        n: &NodeProto,
+        xs: Shape,
+        k: usize,
+        s: usize,
+    ) -> Result<PadMode, ImportError> {
+        match n.attr_str("auto_pad", "NOTSET") {
+            "SAME_UPPER" | "SAME_LOWER" => Ok(PadMode::Same),
+            "VALID" => {
+                if xs.h < k || xs.w < k {
+                    return Err(ImportError::shape(
+                        name,
+                        format!("VALID {k}x{k} kernel does not fit {xs}"),
+                    ));
+                }
+                Ok(PadMode::Valid)
+            }
+            "NOTSET" | "" => {
+                let pads = n.attr_ints("pads");
+                let p: [usize; 4] = if pads.is_empty() {
+                    [0; 4]
+                } else if pads.len() == 4 {
+                    let mut out = [0usize; 4];
+                    for (slot, &v) in out.iter_mut().zip(pads) {
+                        *slot = usize::try_from(v).map_err(|_| {
+                            ImportError::schema(format!("node {name:?}: negative pad {v}"))
+                        })?;
+                    }
+                    out
+                } else {
+                    return Err(ImportError::schema(format!(
+                        "node {name:?}: pads must have 4 entries, got {}",
+                        pads.len()
+                    )));
+                };
+                if p == [0; 4] {
+                    // unpadded 1x1 is SAME and VALID at once; prefer SAME
+                    // (identical output: ceil(in/s) == floor((in-1)/s)+1)
+                    if k == 1 {
+                        return Ok(PadMode::Same);
+                    }
+                    if xs.h < k || xs.w < k {
+                        return Err(ImportError::shape(
+                            name,
+                            format!("unpadded {k}x{k} kernel does not fit {xs}"),
+                        ));
+                    }
+                    return Ok(PadMode::Valid);
+                }
+                // explicit pads must reproduce TF SAME semantics
+                for (dim, p0, p1) in [(xs.h, p[0], p[2]), (xs.w, p[1], p[3])] {
+                    let same_out = dim.div_ceil(s);
+                    let needed = ((same_out - 1) * s + k).saturating_sub(dim);
+                    if p0 + p1 != needed || p0.abs_diff(p1) > 1 {
+                        return Err(ImportError::shape(
+                            name,
+                            format!(
+                                "explicit pads {p:?} are neither VALID nor TF-SAME for \
+                                 {dim} elements, k={k}, stride={s}"
+                            ),
+                        ));
+                    }
+                }
+                Ok(PadMode::Same)
+            }
+            other => Err(ImportError::unsupported(
+                &n.op_type,
+                name,
+                format!("auto_pad {other:?}"),
+            )),
+        }
+    }
+
+    /// `kernel_shape` / `strides` attributes → square `(k, s)`.
+    fn kernel_stride(
+        &self,
+        name: &str,
+        n: &NodeProto,
+        default_k: Option<usize>,
+    ) -> Result<(usize, usize), ImportError> {
+        let ks = n.attr_ints("kernel_shape");
+        let k = if ks.is_empty() {
+            default_k.ok_or_else(|| {
+                ImportError::schema(format!("node {name:?}: kernel_shape is required"))
+            })?
+        } else if ks.len() == 2 && ks[0] == ks[1] && ks[0] > 0 {
+            ks[0] as usize
+        } else {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                name,
+                format!("only square kernels are supported, got {ks:?}"),
+            ));
+        };
+        let ss = n.attr_ints("strides");
+        let s = if ss.is_empty() {
+            1
+        } else if ss.len() == 2 && ss[0] == ss[1] && ss[0] > 0 {
+            ss[0] as usize
+        } else {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                name,
+                format!("only uniform strides are supported, got {ss:?}"),
+            ));
+        };
+        Ok((k, s))
+    }
+
+    fn lower_conv(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let x = self.src(n, 0)?;
+        let xs = self.shape_of(x);
+        let w = self.init_of(n, 1)?.clone();
+        let bias_t = if n.input.len() > 2 && !n.input[2].is_empty() {
+            Some(self.init_of(n, 2)?.clone())
+        } else {
+            None
+        };
+        if n.attr_ints("dilations").iter().any(|&d| d != 1) {
+            return Err(ImportError::unsupported(&n.op_type, &name, "dilated convolution"));
+        }
+        if w.dims.len() != 4 {
+            return Err(ImportError::shape(
+                &name,
+                format!("conv weights must be rank 4, got dims {:?}", w.dims),
+            ));
+        }
+        let m = dim_usize(&name, w.dims[0])?;
+        let cg = dim_usize(&name, w.dims[1])?;
+        let kh = dim_usize(&name, w.dims[2])?;
+        let kw = dim_usize(&name, w.dims[3])?;
+        if kh != kw {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!("non-square {kh}x{kw} kernel"),
+            ));
+        }
+        let (k, s) = self.kernel_stride(&name, n, Some(kh))?;
+        if k != kh {
+            return Err(ImportError::shape(
+                &name,
+                format!("kernel_shape {k} contradicts weight dims {:?}", w.dims),
+            ));
+        }
+        let cin = xs.c;
+        let group = n.attr_int("group", 1);
+        let depthwise = if group == 1 {
+            false
+        } else if group == cin as i64 && cg == 1 && m == cin {
+            true
+        } else {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!(
+                    "group={group} with weight dims {:?}: only group=1 and depthwise \
+                     (group == channels) convolutions are supported",
+                    w.dims
+                ),
+            ));
+        };
+        if !depthwise && cg != cin {
+            return Err(ImportError::shape(
+                &name,
+                format!("weights expect {cg} input channels, feature map has {cin}"),
+            ));
+        }
+        let out_c = m;
+        let pad = self.infer_pad(&name, n, xs, k, s)?;
+        let out_shape = match pad {
+            PadMode::Same => xs.conv_same(s, out_c),
+            PadMode::Valid => xs.conv_valid(k, s, out_c),
+        };
+        let spec = match &w.data {
+            TensorData::I8(v) => {
+                let weights = if depthwise {
+                    c1hw_to_hwc(v, k, cin)
+                } else {
+                    oihw_to_hwio(v, k, cin, out_c)
+                };
+                WeightSpec::Exact { weights, bias: bias_i32(&name, bias_t.as_ref(), out_c)? }
+            }
+            TensorData::F32(v) => {
+                let weights = if depthwise {
+                    c1hw_to_hwc(v, k, cin)
+                } else {
+                    oihw_to_hwio(v, k, cin, out_c)
+                };
+                WeightSpec::Float { weights, bias: bias_f32(&name, bias_t.as_ref(), out_c)? }
+            }
+            _ => {
+                return Err(ImportError::unsupported(
+                    &n.op_type,
+                    &name,
+                    format!("weight data_type {} (INT8 or FLOAT expected)", w.data_type),
+                ))
+            }
+        };
+        self.weight_specs.insert(name.clone(), spec);
+        self.take_sf(n, &name)?;
+        self.push(name, OpKind::Conv { k, stride: s, out_c, pad, depthwise }, vec![x], out_shape)?;
+        Ok(())
+    }
+
+    fn lower_gemm(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let x = self.src(n, 0)?;
+        let xs = self.shape_of(x);
+        if xs.h != 1 || xs.w != 1 {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!("Gemm input must be a 1x1xC vector, got {xs}"),
+            ));
+        }
+        if (n.attr_float("alpha", 1.0) - 1.0).abs() > 1e-6
+            || (n.attr_float("beta", 1.0) - 1.0).abs() > 1e-6
+            || n.attr_int("transA", 0) != 0
+        {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                "only alpha=1, beta=1, transA=0 Gemm is supported",
+            ));
+        }
+        let trans_b = n.attr_int("transB", 0) != 0;
+        let w = self.init_of(n, 1)?.clone();
+        if w.dims.len() != 2 {
+            return Err(ImportError::shape(
+                &name,
+                format!("Gemm weights must be rank 2, got dims {:?}", w.dims),
+            ));
+        }
+        let (cin, out_c) = if trans_b {
+            (dim_usize(&name, w.dims[1])?, dim_usize(&name, w.dims[0])?)
+        } else {
+            (dim_usize(&name, w.dims[0])?, dim_usize(&name, w.dims[1])?)
+        };
+        if cin != xs.c {
+            return Err(ImportError::shape(
+                &name,
+                format!("Gemm weights expect {cin} inputs, vector has {}", xs.c),
+            ));
+        }
+        // repo FC layout is IO ([cin][cout]) == transB=0 verbatim
+        fn io_layout<T: Copy + Default>(v: &[T], cin: usize, cout: usize, tb: bool) -> Vec<T> {
+            if !tb {
+                return v.to_vec();
+            }
+            let mut out = vec![T::default(); v.len()];
+            for i in 0..cin {
+                for o in 0..cout {
+                    out[i * cout + o] = v[o * cin + i];
+                }
+            }
+            out
+        }
+        let bias_t = if n.input.len() > 2 && !n.input[2].is_empty() {
+            Some(self.init_of(n, 2)?.clone())
+        } else {
+            None
+        };
+        let spec = match &w.data {
+            TensorData::I8(v) => WeightSpec::Exact {
+                weights: io_layout(v, cin, out_c, trans_b),
+                bias: bias_i32(&name, bias_t.as_ref(), out_c)?,
+            },
+            TensorData::F32(v) => WeightSpec::Float {
+                weights: io_layout(v, cin, out_c, trans_b),
+                bias: bias_f32(&name, bias_t.as_ref(), out_c)?,
+            },
+            _ => {
+                return Err(ImportError::unsupported(
+                    &n.op_type,
+                    &name,
+                    format!("weight data_type {} (INT8 or FLOAT expected)", w.data_type),
+                ))
+            }
+        };
+        self.weight_specs.insert(name.clone(), spec);
+        self.take_sf(n, &name)?;
+        self.push(name, OpKind::Fc { out_c }, vec![x], Shape::vec(out_c))?;
+        Ok(())
+    }
+
+    fn lower_batchnorm(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let x = self.src(n, 0)?;
+        let xs = self.shape_of(x);
+        let mut stats = Vec::with_capacity(4);
+        for idx in 1..=4 {
+            let t = self.init_of(n, idx)?;
+            let TensorData::F32(v) = &t.data else {
+                return Err(ImportError::unsupported(
+                    &n.op_type,
+                    &name,
+                    format!("BN statistic {:?} must be FLOAT", t.name),
+                ));
+            };
+            if v.len() != xs.c {
+                return Err(ImportError::shape(
+                    &name,
+                    format!("BN statistic {:?} has {} values for {} channels", t.name, v.len(), xs.c),
+                ));
+            }
+            stats.push(v.clone());
+        }
+        let var = stats.pop().unwrap();
+        let mean = stats.pop().unwrap();
+        let beta = stats.pop().unwrap();
+        let gamma = stats.pop().unwrap();
+        self.bn.insert(
+            name.clone(),
+            BnFold { gamma, beta, mean, var, eps: n.attr_float("epsilon", 1e-5) },
+        );
+        self.take_sf(n, &name)?;
+        self.push(name, OpKind::BatchNorm, vec![x], xs)?;
+        Ok(())
+    }
+
+    fn lower_act(&mut self, n: &NodeProto, a: Activation) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let x = self.src(n, 0)?;
+        let xs = self.shape_of(x);
+        self.take_sf(n, &name)?;
+        self.push(name, OpKind::Act(a), vec![x], xs)?;
+        Ok(())
+    }
+
+    fn lower_clip(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let (min, max) = if n.input.len() > 1 {
+            let min = if n.input.len() > 1 && !n.input[1].is_empty() {
+                scalar_f32(self.init_of(n, 1)?)
+            } else {
+                Some(f32::NEG_INFINITY)
+            };
+            let max = if n.input.len() > 2 && !n.input[2].is_empty() {
+                scalar_f32(self.init_of(n, 2)?)
+            } else {
+                Some(f32::INFINITY)
+            };
+            (min, max)
+        } else {
+            (Some(n.attr_float("min", f32::NEG_INFINITY)), Some(n.attr_float("max", f32::INFINITY)))
+        };
+        match (min, max) {
+            (Some(lo), Some(hi)) if lo == 0.0 && hi == 6.0 => self.lower_act(n, Activation::Relu6),
+            _ => Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!("only Clip(0, 6) = ReLU6 is supported, got ({min:?}, {max:?})"),
+            )),
+        }
+    }
+
+    fn lower_identity(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        if n.attr_int("sf_linear_act", 0) == 1 {
+            return self.lower_act(n, Activation::Linear);
+        }
+        let name = self.out_name(n)?;
+        let x = self.src(n, 0)?;
+        let xs = self.shape_of(x);
+        self.take_sf(n, &name)?;
+        self.push(name, OpKind::Identity, vec![x], xs)?;
+        Ok(())
+    }
+
+    fn lower_add(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        if n.input.len() != 2 {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!("{}-operand addition", n.input.len()),
+            ));
+        }
+        let a = self.operand(n, 0)?.to_string();
+        let b = self.operand(n, 1)?.to_string();
+        match (self.inits.contains_key(&a), self.inits.contains_key(&b)) {
+            (true, true) => Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                "addition of two constants (fold them offline)",
+            )),
+            (false, false) => {
+                let x = self.src(n, 0)?;
+                let y = self.src(n, 1)?;
+                let (sx, sy) = (self.shape_of(x), self.shape_of(y));
+                if sx != sy {
+                    return Err(ImportError::shape(
+                        &name,
+                        format!("shortcut operands disagree: {sx} vs {sy}"),
+                    ));
+                }
+                self.take_sf(n, &name)?;
+                self.push(name, OpKind::EltwiseAdd, vec![x, y], sx)?;
+                Ok(())
+            }
+            (a_const, _) => {
+                let (xname, tname) = if a_const { (&b, &a) } else { (&a, &b) };
+                let x = *self.tensors.get(xname.as_str()).ok_or_else(|| {
+                    ImportError::model(format!("node {name:?} reads unknown tensor {xname:?}"))
+                })?;
+                let xs = self.shape_of(x);
+                let t = self.inits.get(tname.as_str()).unwrap();
+                if t.data.len() != xs.c {
+                    return Err(ImportError::shape(
+                        &name,
+                        format!(
+                            "bias constant {tname:?} has {} values for {} channels",
+                            t.data.len(),
+                            xs.c
+                        ),
+                    ));
+                }
+                let spec = match &t.data {
+                    TensorData::I32(v) => BiasSpec::I32(v.clone()),
+                    TensorData::I8(v) => BiasSpec::I32(v.iter().map(|&x| x as i32).collect()),
+                    TensorData::I64(v) => {
+                        let mut out = Vec::with_capacity(v.len());
+                        for &x in v {
+                            out.push(i32::try_from(x).map_err(|_| {
+                                ImportError::schema(format!(
+                                    "bias constant {tname:?}: {x} out of i32 range"
+                                ))
+                            })?);
+                        }
+                        BiasSpec::I32(out)
+                    }
+                    TensorData::F32(v) => BiasSpec::F32(v.clone()),
+                    TensorData::Empty => {
+                        return Err(ImportError::schema(format!(
+                            "bias constant {tname:?} has no payload"
+                        )))
+                    }
+                };
+                self.bias_adds.insert(name.clone(), spec);
+                self.take_sf(n, &name)?;
+                self.push(name, OpKind::BiasAdd, vec![x], xs)?;
+                Ok(())
+            }
+        }
+    }
+
+    fn lower_mul(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        if n.input.len() != 2 {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!("{}-operand multiplication", n.input.len()),
+            ));
+        }
+        for idx in 0..2 {
+            let t = self.operand(n, idx)?;
+            if self.inits.contains_key(t) {
+                return Err(ImportError::unsupported(
+                    &n.op_type,
+                    &name,
+                    format!("multiplication by constant {t:?} (fold it into the weights)"),
+                ));
+            }
+        }
+        let x0 = self.src(n, 0)?;
+        let x1 = self.src(n, 1)?;
+        let (s0, s1) = (self.shape_of(x0), self.shape_of(x1));
+        // the gate is the 1x1xC operand (SE excitation)
+        let (fmap, gate, out) = if s1.h == 1 && s1.w == 1 && s1.c == s0.c {
+            (x0, x1, s0)
+        } else if s0.h == 1 && s0.w == 1 && s0.c == s1.c {
+            (x1, x0, s1)
+        } else {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!(
+                    "element-wise multiply of {s0} by {s1}: only channel gating \
+                     (one operand 1x1xC) is supported"
+                ),
+            ));
+        };
+        self.take_sf(n, &name)?;
+        self.push(name, OpKind::ScaleMul, vec![fmap, gate], out)?;
+        Ok(())
+    }
+
+    fn lower_pool(&mut self, n: &NodeProto, max: bool) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let x = self.src(n, 0)?;
+        let xs = self.shape_of(x);
+        let (k, s) = self.kernel_stride(&name, n, None)?;
+        // the datapath implements TF-SAME pooling only: out = ceil(in/s).
+        // verify the ONNX attributes produce exactly that.
+        let mut padded = false;
+        match n.attr_str("auto_pad", "NOTSET") {
+            "SAME_UPPER" | "SAME_LOWER" => {
+                for dim in [xs.h, xs.w] {
+                    padded |= (dim.div_ceil(s) - 1) * s + k > dim;
+                }
+            }
+            "VALID" => {
+                for dim in [xs.h, xs.w] {
+                    if dim < k {
+                        return Err(ImportError::shape(
+                            &name,
+                            format!("VALID {k}x{k} window does not fit {xs}"),
+                        ));
+                    }
+                    if (dim - k) / s + 1 != dim.div_ceil(s) {
+                        return Err(ImportError::shape(
+                            &name,
+                            format!(
+                                "pooling must satisfy out == ceil(in/stride); VALID gives \
+                                 {} for {dim} elements, k={k}, stride={s}",
+                                (dim - k) / s + 1
+                            ),
+                        ));
+                    }
+                }
+            }
+            "NOTSET" | "" => {
+                let pads = n.attr_ints("pads");
+                let p: [usize; 4] = if pads.is_empty() {
+                    [0; 4]
+                } else if pads.len() == 4 {
+                    let mut out = [0usize; 4];
+                    for (slot, &v) in out.iter_mut().zip(pads) {
+                        *slot = usize::try_from(v).map_err(|_| {
+                            ImportError::schema(format!("node {name:?}: negative pad {v}"))
+                        })?;
+                    }
+                    out
+                } else {
+                    return Err(ImportError::schema(format!(
+                        "node {name:?}: pads must have 4 entries, got {}",
+                        pads.len()
+                    )));
+                };
+                padded = p.iter().any(|&v| v > 0);
+                let ceil_mode = n.attr_int("ceil_mode", 0) != 0;
+                for (dim, p0, p1) in [(xs.h, p[0], p[2]), (xs.w, p[1], p[3])] {
+                    let span = dim + p0 + p1;
+                    if span < k {
+                        return Err(ImportError::shape(
+                            &name,
+                            format!("{k}x{k} window does not fit {dim}+{p0}+{p1} elements"),
+                        ));
+                    }
+                    let out = if ceil_mode {
+                        (span - k).div_ceil(s) + 1
+                    } else {
+                        (span - k) / s + 1
+                    };
+                    if out != dim.div_ceil(s) {
+                        return Err(ImportError::shape(
+                            &name,
+                            format!(
+                                "pooling must satisfy out == ceil(in/stride); pads {p:?} \
+                                 give {out} for {dim} elements, k={k}, stride={s}"
+                            ),
+                        ));
+                    }
+                }
+            }
+            other => {
+                return Err(ImportError::unsupported(
+                    &n.op_type,
+                    &name,
+                    format!("auto_pad {other:?}"),
+                ))
+            }
+        }
+        if !max && padded && n.attr_int("count_include_pad", 0) == 0 {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                "padded AveragePool with count_include_pad=0: the datapath divides by \
+                 k² including the zero-padded taps",
+            ));
+        }
+        let out_shape = xs.conv_same(s, xs.c);
+        let op = if max { OpKind::MaxPool { k, stride: s } } else { OpKind::AvgPool { k, stride: s } };
+        self.take_sf(n, &name)?;
+        self.push(name, op, vec![x], out_shape)?;
+        Ok(())
+    }
+
+    fn lower_gap(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let x = self.src(n, 0)?;
+        let xs = self.shape_of(x);
+        self.take_sf(n, &name)?;
+        self.push(name, OpKind::GlobalAvgPool, vec![x], Shape::vec(xs.c))?;
+        Ok(())
+    }
+
+    fn lower_reduce_mean(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let mut axes: Vec<i64> = n.attr_ints("axes").to_vec();
+        if axes.is_empty() && n.input.len() > 1 && !n.input[1].is_empty() {
+            if let TensorData::I64(v) = &self.init_of(n, 1)?.data {
+                axes = v.clone();
+            }
+        }
+        let mut norm: Vec<i64> = axes.iter().map(|&a| if a < 0 { a + 4 } else { a }).collect();
+        norm.sort_unstable();
+        if norm != [2, 3] {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!("only spatial ReduceMean (axes [2,3]) lowers to GlobalAvgPool, got {axes:?}"),
+            ));
+        }
+        self.lower_gap(n)
+    }
+
+    fn lower_concat(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let axis = n.attr_int("axis", 1);
+        if axis != 1 && axis != -3 {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!("only channel concatenation (axis 1) is supported, got axis {axis}"),
+            ));
+        }
+        if n.input.len() < 2 {
+            return Err(ImportError::schema(format!(
+                "node {name:?}: Concat needs at least 2 inputs"
+            )));
+        }
+        let mut cur = self.src(n, 0)?;
+        for j in 1..n.input.len() {
+            let nxt = self.src(n, j)?;
+            let (sa, sb) = (self.shape_of(cur), self.shape_of(nxt));
+            if sa.h != sb.h || sa.w != sb.w {
+                return Err(ImportError::shape(
+                    &name,
+                    format!("concat operands disagree spatially: {sa} vs {sb}"),
+                ));
+            }
+            let out = Shape::new(sa.h, sa.w, sa.c + sb.c);
+            // n-ary concats lower to a binary chain
+            let node_name =
+                if j + 1 == n.input.len() { name.clone() } else { format!("{name}.cat{j}") };
+            cur = self.push(node_name, OpKind::Concat, vec![cur, nxt], out)?;
+        }
+        self.take_sf(n, &name)?;
+        Ok(())
+    }
+
+    fn lower_resize(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let x = self.src(n, 0)?;
+        let xs = self.shape_of(x);
+        let mode = n.attr_str("mode", "nearest");
+        if mode != "nearest" {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!("only nearest-neighbour resize is supported, got mode {mode:?}"),
+            ));
+        }
+        // factor from the scales input (Resize: input 2; Upsample: input
+        // 1), the sizes input (Resize: input 3), or a scales attribute
+        // (legacy Upsample-7).
+        let mut factor: Option<f32> = None;
+        let scales_idx = if n.op_type == "Upsample" { 1 } else { 2 };
+        if n.input.len() > scales_idx && !n.input[scales_idx].is_empty() {
+            if let TensorData::F32(v) = &self.init_of(n, scales_idx)?.data {
+                if v.len() == 4 && v[0] == 1.0 && v[1] == 1.0 && v[2] == v[3] {
+                    factor = Some(v[2]);
+                }
+            }
+        } else if n.input.len() > 3 && !n.input[3].is_empty() {
+            if let TensorData::I64(v) = &self.init_of(n, 3)?.data {
+                if v.len() == 4
+                    && v[2] > 0
+                    && v[3] > 0
+                    && v[2] as usize % xs.h == 0
+                    && v[3] as usize % xs.w == 0
+                    && v[2] as usize / xs.h == v[3] as usize / xs.w
+                {
+                    factor = Some((v[2] as usize / xs.h) as f32);
+                }
+            }
+        } else if let Some(AttrValue::Floats(v)) = n.attr("scales") {
+            if v.len() == 4 && v[0] == 1.0 && v[1] == 1.0 && v[2] == v[3] {
+                factor = Some(v[2]);
+            }
+        }
+        let Some(f) = factor else {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                "resize must scale H and W by the same integer factor (batch and \
+                 channel scales = 1)",
+            ));
+        };
+        if f < 1.0 || (f - f.round()).abs() > 1e-6 {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!("non-integer upsample factor {f}"),
+            ));
+        }
+        let factor = f.round() as usize;
+        self.take_sf(n, &name)?;
+        self.push(name, OpKind::Upsample { factor }, vec![x], xs.upsample(factor))?;
+        Ok(())
+    }
+
+    /// Flatten / Reshape / Squeeze / Unsqueeze on an already-flat
+    /// (1×1×C) map is a pure rename: alias the tensor, emit no node.
+    fn lower_alias(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let x = self.src(n, 0)?;
+        let xs = self.shape_of(x);
+        if xs.h != 1 || xs.w != 1 {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                format!(
+                    "{} of a {xs} map: only 1x1xC (already-flat) inputs are supported",
+                    n.op_type
+                ),
+            ));
+        }
+        if n.op_type == "Reshape" && n.input.len() > 1 && !n.input[1].is_empty() {
+            if let TensorData::I64(v) = &self.init_of(n, 1)?.data {
+                let mut fixed: usize = 1;
+                let mut wildcard = false;
+                for &d in v {
+                    match d {
+                        -1 => wildcard = true,
+                        d if d > 0 => fixed = fixed.saturating_mul(d as usize),
+                        _ => {
+                            return Err(ImportError::unsupported(
+                                &n.op_type,
+                                &name,
+                                format!("reshape target dim {d}"),
+                            ))
+                        }
+                    }
+                }
+                let ok = if wildcard { fixed != 0 && xs.c % fixed == 0 } else { fixed == xs.c };
+                if !ok {
+                    return Err(ImportError::shape(
+                        &name,
+                        format!("reshape target {v:?} does not hold {} elements", xs.c),
+                    ));
+                }
+            }
+        }
+        self.claim(&name)?;
+        self.check_vinfo(&name, xs)?;
+        self.tensors.insert(name, x);
+        Ok(())
+    }
+
+    /// `Constant` nodes become initializers.
+    fn lower_constant(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        let name = self.out_name(n)?;
+        let Some(AttrValue::Tensor(t)) = n.attr("value") else {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                &name,
+                "only tensor-valued Constant nodes are supported",
+            ));
+        };
+        let mut t = t.clone();
+        t.name = name.clone();
+        self.inits.insert(name, t);
+        Ok(())
+    }
+
+    fn lower(&mut self, n: &NodeProto) -> Result<(), ImportError> {
+        if n.op_type != "Constant" && n.output.len() != 1 {
+            return Err(ImportError::unsupported(
+                &n.op_type,
+                n.display_name(),
+                format!("{}-output nodes are not supported", n.output.len()),
+            ));
+        }
+        match n.op_type.as_str() {
+            "Conv" => self.lower_conv(n),
+            "Gemm" => self.lower_gemm(n),
+            "BatchNormalization" => self.lower_batchnorm(n),
+            "Relu" => self.lower_act(n, Activation::Relu),
+            "LeakyRelu" => self.lower_act(n, Activation::Leaky),
+            "Clip" => self.lower_clip(n),
+            "Sigmoid" => self.lower_act(n, Activation::Sigmoid),
+            "HardSwish" => self.lower_act(n, Activation::HardSwish),
+            "HardSigmoid" => self.lower_act(n, Activation::HardSigmoid),
+            "Identity" => self.lower_identity(n),
+            "Add" | "Sum" => self.lower_add(n),
+            "Mul" => self.lower_mul(n),
+            "MaxPool" => self.lower_pool(n, true),
+            "AveragePool" => self.lower_pool(n, false),
+            "GlobalAveragePool" => self.lower_gap(n),
+            "ReduceMean" => self.lower_reduce_mean(n),
+            "Concat" => self.lower_concat(n),
+            "Resize" | "Upsample" => self.lower_resize(n),
+            "Flatten" | "Reshape" | "Squeeze" | "Unsqueeze" => self.lower_alias(n),
+            "Constant" => self.lower_constant(n),
+            _ => Err(ImportError::unsupported(
+                &n.op_type,
+                n.display_name(),
+                "not in the accelerator op set (see the lowering table in \
+                 docs/ARCHITECTURE.md)",
+            )),
+        }
+    }
+}
+
+fn bias_i32(
+    name: &str,
+    t: Option<&TensorProto>,
+    out_c: usize,
+) -> Result<Vec<i32>, ImportError> {
+    let Some(t) = t else { return Ok(vec![0; out_c]) };
+    let v: Vec<i32> = match &t.data {
+        TensorData::I32(v) => v.clone(),
+        TensorData::I8(v) => v.iter().map(|&x| x as i32).collect(),
+        TensorData::I64(v) => {
+            let mut out = Vec::with_capacity(v.len());
+            for &x in v {
+                out.push(i32::try_from(x).map_err(|_| {
+                    ImportError::schema(format!("bias {:?}: {x} out of i32 range", t.name))
+                })?);
+            }
+            out
+        }
+        TensorData::F32(v) => v.iter().map(|&x| x.round() as i32).collect(),
+        TensorData::Empty => vec![0; out_c],
+    };
+    if v.len() != out_c {
+        return Err(ImportError::shape(
+            name,
+            format!("bias {:?} has {} values for {out_c} output channels", t.name, v.len()),
+        ));
+    }
+    Ok(v)
+}
+
+fn bias_f32(
+    name: &str,
+    t: Option<&TensorProto>,
+    out_c: usize,
+) -> Result<Vec<f32>, ImportError> {
+    let Some(t) = t else { return Ok(vec![0.0; out_c]) };
+    let v: Vec<f32> = match &t.data {
+        TensorData::F32(v) => v.clone(),
+        TensorData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+        TensorData::I8(v) => v.iter().map(|&x| x as f32).collect(),
+        TensorData::I64(v) => v.iter().map(|&x| x as f32).collect(),
+        TensorData::Empty => vec![0.0; out_c],
+    };
+    if v.len() != out_c {
+        return Err(ImportError::shape(
+            name,
+            format!("bias {:?} has {} values for {out_c} output channels", t.name, v.len()),
+        ));
+    }
+    Ok(v)
+}
+
+/// Fold the recorded side tables into per-group [`GroupParams`].
+fn assemble_params(gg: &GroupedGraph, lw: &Lowerer) -> Result<Params, ImportError> {
+    let mut groups = HashMap::new();
+    for gr in &gg.groups {
+        let mut shift: Option<i32> = None;
+        let mut elt: Option<i32> = None;
+        let mut lut: Option<Vec<i8>> = None;
+        let mut wspec: Option<(&str, &WeightSpec)> = None;
+        let mut folds: Vec<&BnFold> = Vec::new();
+        let mut adds: Vec<&BiasSpec> = Vec::new();
+        for &nid in &gr.nodes {
+            let nm = gg.graph.node(nid).name.as_str();
+            if let Some(s) = lw.sf.get(nm) {
+                shift = shift.or(s.shift);
+                elt = elt.or(s.elt_shift);
+                if lut.is_none() {
+                    lut = s.lut.clone();
+                }
+            }
+            if let Some(ws) = lw.weight_specs.get(nm) {
+                if let Some((prev, _)) = wspec {
+                    return Err(ImportError::model(format!(
+                        "nodes {prev:?} and {nm:?} both carry weights inside one fused group"
+                    )));
+                }
+                wspec = Some((nm, ws));
+            }
+            if let Some(f) = lw.bn.get(nm) {
+                folds.push(f);
+            }
+            if let Some(a) = lw.bias_adds.get(nm) {
+                adds.push(a);
+            }
+        }
+        let add_into_i32 = |b: &mut Vec<i32>, adds: &[&BiasSpec], who: &str| {
+            for a in adds {
+                let vals: Vec<i32> = match a {
+                    BiasSpec::I32(v) => v.clone(),
+                    BiasSpec::F32(v) => v.iter().map(|&x| x.round() as i32).collect(),
+                };
+                if vals.len() != b.len() {
+                    return Err(ImportError::model(format!(
+                        "group {who:?}: bias-add length {} vs {} output channels",
+                        vals.len(),
+                        b.len()
+                    )));
+                }
+                for (dst, v) in b.iter_mut().zip(vals) {
+                    *dst = dst.wrapping_add(v);
+                }
+            }
+            Ok(())
+        };
+        let (weights, bias) = match wspec {
+            // exact path: the model was produced by our exporter (or a
+            // compatible quantizer) — BN nodes carry identity statistics
+            // by contract, so only explicit bias-adds fold in
+            Some((nm, WeightSpec::Exact { weights, bias })) => {
+                let mut b = bias.clone();
+                add_into_i32(&mut b, &adds, nm)?;
+                (weights.clone(), b)
+            }
+            Some((nm, WeightSpec::Float { weights, bias })) => {
+                let mut w = weights.clone();
+                let mut b = bias.clone();
+                let cout = b.len();
+                for f in &folds {
+                    if f.gamma.len() != cout {
+                        return Err(ImportError::model(format!(
+                            "group {nm:?}: BN folds {} channels into {cout} outputs",
+                            f.gamma.len()
+                        )));
+                    }
+                    // channel is the innermost axis in HWIO, HWC and IO
+                    for (idx, wv) in w.iter_mut().enumerate() {
+                        let o = idx % cout;
+                        *wv *= f.gamma[o] / (f.var[o] + f.eps).sqrt();
+                    }
+                    for o in 0..cout {
+                        let fac = f.gamma[o] / (f.var[o] + f.eps).sqrt();
+                        b[o] = (b[o] - f.mean[o]) * fac + f.beta[o];
+                    }
+                }
+                for a in &adds {
+                    let vals: Vec<f32> = match a {
+                        BiasSpec::I32(v) => v.iter().map(|&x| x as f32).collect(),
+                        BiasSpec::F32(v) => v.clone(),
+                    };
+                    if vals.len() != cout {
+                        return Err(ImportError::model(format!(
+                            "group {nm:?}: bias-add length {} vs {cout} output channels",
+                            vals.len()
+                        )));
+                    }
+                    for (dst, v) in b.iter_mut().zip(vals) {
+                        *dst += v;
+                    }
+                }
+                // symmetric per-tensor max-abs quantization; activations
+                // are Q3.4, so the bias lands in the accumulator domain
+                // at scale·16 (structural placeholder for calibration)
+                let maxabs = w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let scale = if maxabs > 0.0 { 127.0 / maxabs } else { 1.0 };
+                let wi: Vec<i8> =
+                    w.iter().map(|v| (v * scale).round().clamp(-127.0, 127.0) as i8).collect();
+                let bi: Vec<i32> = b
+                    .iter()
+                    .map(|v| (v * scale * 16.0).round().clamp(i32::MIN as f32, i32::MAX as f32)
+                        as i32)
+                    .collect();
+                (wi, bi)
+            }
+            None => (Vec::new(), Vec::new()),
+        };
+        if lut.is_none() && gr.act.lut_evaluated() {
+            lut = Some(synth_lut(gr.act));
+        }
+        if wspec.is_none() && shift.is_none() && elt.is_none() && lut.is_none() {
+            continue;
+        }
+        let name = gg.graph.node(gr.main).name.clone();
+        groups.insert(
+            name,
+            GroupParams {
+                weights,
+                bias,
+                shift: shift.unwrap_or(7),
+                elt_shift: elt.unwrap_or(0),
+                lut,
+            },
+        );
+    }
+    Ok(Params { groups })
+}
+
+/// Import a `.onnx` byte buffer into a validated graph + parameters.
+pub fn import_model(bytes: &[u8]) -> Result<Imported, ImportError> {
+    let m = decode_model(bytes)?;
+    let gp: GraphProto = m.graph.expect("decode_model guarantees a graph");
+    let GraphProto { name, node: pnodes, initializer, input, output, value_info } = gp;
+    let mut lw = Lowerer::new();
+    for t in initializer {
+        lw.inits.insert(t.name.clone(), t);
+    }
+    for v in value_info.iter().chain(output.iter()) {
+        if !v.dims.is_empty() {
+            lw.vinfo.insert(v.name.clone(), v.dims.clone());
+        }
+    }
+    // the single data input (initializers may be re-listed as inputs)
+    let data_inputs: Vec<&ValueInfo> =
+        input.iter().filter(|v| !lw.inits.contains_key(&v.name)).collect();
+    let [vi] = data_inputs.as_slice() else {
+        return Err(ImportError::model(format!(
+            "expected exactly 1 data input, found {} ({:?})",
+            data_inputs.len(),
+            data_inputs.iter().map(|v| v.name.as_str()).collect::<Vec<_>>()
+        )));
+    };
+    if vi.name.is_empty() {
+        return Err(ImportError::schema("graph input has no name"));
+    }
+    let in_shape = shape_from_dims(&vi.name, &vi.dims)?;
+    lw.push(vi.name.clone(), OpKind::Input, Vec::new(), in_shape)?;
+    // tensor use counts + declared outputs gate the Swish re-fusion
+    let mut uses: HashMap<&str, usize> = HashMap::new();
+    for n in &pnodes {
+        for i in &n.input {
+            if !i.is_empty() {
+                *uses.entry(i.as_str()).or_insert(0) += 1;
+            }
+        }
+    }
+    let out_names: HashSet<&str> = output.iter().map(|v| v.name.as_str()).collect();
+    let mut i = 0;
+    while i < pnodes.len() {
+        let n = &pnodes[i];
+        // Sigmoid(x) immediately followed by Mul(x, sigmoid) — and the
+        // sigmoid used nowhere else — is the SiLU/Swish decomposition
+        if n.op_type == "Sigmoid" && n.input.len() == 1 && n.output.len() == 1 {
+            let sig_out = n.output[0].as_str();
+            if let Some(mul) = pnodes.get(i + 1) {
+                let fuses = mul.op_type == "Mul"
+                    && mul.input.len() == 2
+                    && mul.output.len() == 1
+                    && mul.input.iter().any(|t| t == sig_out)
+                    && mul.input.iter().any(|t| t == &n.input[0])
+                    && n.input[0] != sig_out
+                    && uses.get(sig_out).copied().unwrap_or(0) == 1
+                    && !out_names.contains(sig_out)
+                    && lw.tensors.contains_key(n.input[0].as_str());
+                if fuses {
+                    let name = lw.out_name(mul)?;
+                    let x = lw.tensors[n.input[0].as_str()];
+                    let xs = lw.shape_of(x);
+                    lw.take_sf(mul, &name)?;
+                    lw.push(name, OpKind::Act(Activation::Swish), vec![x], xs)?;
+                    i += 2;
+                    continue;
+                }
+            }
+        }
+        lw.lower(n)?;
+        i += 1;
+    }
+    for o in &output {
+        if !lw.tensors.contains_key(&o.name) {
+            return Err(ImportError::model(format!(
+                "declared graph output {:?} was never produced",
+                o.name
+            )));
+        }
+    }
+    let graph = Graph {
+        name: if name.is_empty() { "imported".into() } else { name },
+        nodes: std::mem::take(&mut lw.nodes),
+    };
+    validate(&graph).map_err(|e| ImportError::model(e.to_string()))?;
+    let gg = analyze(&graph);
+    let params = assemble_params(&gg, &lw)?;
+    Ok(Imported { graph, params })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::import::export::export_bytes;
+    use crate::import::proto::{encode_model, Attribute, ModelProto};
+
+    fn attr_ints(name: &str, v: Vec<i64>) -> Attribute {
+        Attribute { name: name.into(), value: AttrValue::Ints(v) }
+    }
+
+    fn attr_str(name: &str, v: &str) -> Attribute {
+        Attribute { name: name.into(), value: AttrValue::Str(v.into()) }
+    }
+
+    fn conv_node(name: &str, x: &str, extra: Vec<Attribute>) -> NodeProto {
+        let mut attribute = vec![attr_ints("kernel_shape", vec![3, 3])];
+        attribute.extend(extra);
+        NodeProto {
+            name: name.into(),
+            op_type: "Conv".into(),
+            input: vec![x.into(), format!("{name}.w"), format!("{name}.b")],
+            output: vec![name.into()],
+            attribute,
+        }
+    }
+
+    fn model_with(nodes: Vec<NodeProto>, inits: Vec<TensorProto>, out: &str) -> ModelProto {
+        ModelProto {
+            ir_version: 8,
+            producer_name: "test".into(),
+            producer_version: "0".into(),
+            opset_version: 14,
+            graph: Some(GraphProto {
+                name: "t".into(),
+                node: nodes,
+                initializer: inits,
+                input: vec![ValueInfo::concrete("input", data_type::INT8, &[1, 2, 8, 8])],
+                output: vec![ValueInfo {
+                    name: out.into(),
+                    elem_type: data_type::INT8,
+                    dims: vec![],
+                }],
+                value_info: vec![],
+            }),
+        }
+    }
+
+    fn conv_inits(name: &str, cin: usize, cout: usize) -> Vec<TensorProto> {
+        vec![
+            TensorProto::i8s(
+                format!("{name}.w"),
+                vec![cout as i64, cin as i64, 3, 3],
+                (0..9 * cin * cout).map(|v| (v % 11) as i8 - 5).collect(),
+            ),
+            TensorProto::i32s(
+                format!("{name}.b"),
+                vec![cout as i64],
+                (0..cout as i32).collect(),
+            ),
+        ]
+    }
+
+    #[test]
+    fn pad_inference_rules() {
+        let lw = Lowerer::new();
+        let xs = Shape::new(9, 9, 2);
+        let n = |attrs: Vec<Attribute>| NodeProto {
+            op_type: "Conv".into(),
+            output: vec!["c".into()],
+            attribute: attrs,
+            ..Default::default()
+        };
+        // auto_pad strings
+        assert_eq!(
+            lw.infer_pad("c", &n(vec![attr_str("auto_pad", "SAME_UPPER")]), xs, 3, 1).unwrap(),
+            PadMode::Same
+        );
+        assert_eq!(
+            lw.infer_pad("c", &n(vec![attr_str("auto_pad", "VALID")]), xs, 3, 1).unwrap(),
+            PadMode::Valid
+        );
+        // zero pads: 1x1 → Same, 3x3 → Valid
+        assert_eq!(lw.infer_pad("c", &n(vec![]), xs, 1, 1).unwrap(), PadMode::Same);
+        assert_eq!(lw.infer_pad("c", &n(vec![]), xs, 3, 1).unwrap(), PadMode::Valid);
+        // TF-SAME explicit pads: k=3 s=1 → 1,1,1,1
+        assert_eq!(
+            lw.infer_pad("c", &n(vec![attr_ints("pads", vec![1, 1, 1, 1])]), xs, 3, 1).unwrap(),
+            PadMode::Same
+        );
+        // k=3 s=2 on 9 elements: same_out=5, needed = 4*2+3-9 = 2 → (0,1)+(1,?) ...
+        // symmetric [1,1,1,1] has p0+p1=2=needed per dim → Same
+        assert_eq!(
+            lw.infer_pad("c", &n(vec![attr_ints("pads", vec![1, 1, 1, 1])]), xs, 3, 2).unwrap(),
+            PadMode::Same
+        );
+        // lopsided pads that change the output → ShapeMismatch
+        let e = lw
+            .infer_pad("c", &n(vec![attr_ints("pads", vec![2, 2, 2, 2])]), xs, 3, 1)
+            .unwrap_err();
+        assert!(matches!(e, ImportError::ShapeMismatch { .. }), "{e}");
+        // VALID kernel larger than the map → ShapeMismatch, not a panic
+        let e = lw
+            .infer_pad("c", &n(vec![attr_str("auto_pad", "VALID")]), Shape::new(2, 2, 1), 3, 1)
+            .unwrap_err();
+        assert!(matches!(e, ImportError::ShapeMismatch { .. }), "{e}");
+    }
+
+    #[test]
+    fn imports_a_hand_written_conv_model() {
+        let nodes = vec![conv_node("c1", "input", vec![attr_str("auto_pad", "SAME_UPPER")])];
+        let m = model_with(nodes, conv_inits("c1", 2, 4), "c1");
+        let imp = import_model(&encode_model(&m)).unwrap();
+        assert_eq!(imp.graph.nodes.len(), 2);
+        let c1 = imp.graph.node(imp.graph.find("c1").unwrap());
+        assert!(matches!(c1.op, OpKind::Conv { k: 3, stride: 1, out_c: 4, .. }));
+        assert_eq!(c1.out_shape, Shape::new(8, 8, 4));
+        // exact path: bias carried verbatim, default shift 7
+        let gp = imp.params.get("c1").unwrap();
+        assert_eq!(gp.bias, vec![0, 1, 2, 3]);
+        assert_eq!(gp.shift, 7);
+        assert_eq!(gp.weights.len(), 9 * 2 * 4);
+    }
+
+    #[test]
+    fn bias_add_folds_into_the_group_bias() {
+        let mut nodes =
+            vec![conv_node("c1", "input", vec![attr_str("auto_pad", "SAME_UPPER")])];
+        nodes.push(NodeProto {
+            name: "badd".into(),
+            op_type: "Add".into(),
+            input: vec!["c1".into(), "badd.t".into()],
+            output: vec!["badd".into()],
+            attribute: vec![],
+        });
+        let mut inits = conv_inits("c1", 2, 4);
+        inits.push(TensorProto::i32s("badd.t", vec![4, 1, 1], vec![10, 20, 30, 40]));
+        let m = model_with(nodes, inits, "badd");
+        let imp = import_model(&encode_model(&m)).unwrap();
+        // the BiasAdd fuses into the conv group; bias = conv.b + constant
+        let gp = imp.params.get("c1").unwrap();
+        assert_eq!(gp.bias, vec![10, 21, 32, 43]);
+    }
+
+    #[test]
+    fn swish_pair_refuses_into_one_node() {
+        let g = {
+            use crate::graph::GraphBuilder;
+            let mut b = GraphBuilder::new("sw", Shape::new(8, 8, 3));
+            let c = b.conv("c1", b.input_id(), 3, 1, 8, PadMode::Same);
+            let _a = b.activation("silu", c, Activation::Swish);
+            b.finish()
+        };
+        let bytes = export_bytes(&g, None).unwrap();
+        let imp = import_model(&bytes).unwrap();
+        assert_eq!(imp.graph.nodes.len(), g.nodes.len());
+        let silu = imp.graph.node(imp.graph.find("silu").unwrap());
+        assert!(matches!(silu.op, OpKind::Act(Activation::Swish)));
+        assert!(imp.graph.find("silu.sig").is_none());
+        // a LUT is synthesized even without sf_lut
+        assert_eq!(imp.params.get("c1").unwrap().lut.as_ref().unwrap().len(), 256);
+    }
+
+    #[test]
+    fn softmax_is_a_typed_unsupported_error() {
+        let mut nodes =
+            vec![conv_node("c1", "input", vec![attr_str("auto_pad", "SAME_UPPER")])];
+        nodes.push(NodeProto {
+            name: "probs".into(),
+            op_type: "Softmax".into(),
+            input: vec!["c1".into()],
+            output: vec!["probs".into()],
+            attribute: vec![],
+        });
+        let m = model_with(nodes, conv_inits("c1", 2, 4), "probs");
+        let e = import_model(&encode_model(&m)).unwrap_err();
+        let ImportError::UnsupportedOp { op_type, node, .. } = e else {
+            panic!("expected UnsupportedOp, got {e}");
+        };
+        assert_eq!(op_type, "Softmax");
+        assert_eq!(node, "probs");
+    }
+
+    #[test]
+    fn synth_lut_is_bounded_and_plausible() {
+        for act in [
+            Activation::Relu6,
+            Activation::Swish,
+            Activation::Sigmoid,
+            Activation::HardSwish,
+            Activation::HardSigmoid,
+        ] {
+            let lut = synth_lut(act);
+            assert_eq!(lut.len(), 256);
+        }
+        let relu6 = synth_lut(Activation::Relu6);
+        // index 127 = +7.94 in Q3.4 → clamps to 6.0 → 96
+        assert_eq!(relu6[127], 96);
+        // index 255 = -1/16 → negative → 0
+        assert_eq!(relu6[255], 0);
+        let sig = synth_lut(Activation::Sigmoid);
+        // sigmoid(0) = 0.5 → 8 in Q3.4
+        assert_eq!(sig[0], 8);
+    }
+
+    #[test]
+    fn weight_permutations_match_the_exporter() {
+        let (k, cin, cout) = (3usize, 2usize, 4usize);
+        let hwio: Vec<i8> = (0..(k * k * cin * cout) as i32).map(|v| (v % 100) as i8).collect();
+        let oihw = {
+            // the exporter-side permutation, inlined
+            let mut out = vec![0i8; hwio.len()];
+            for y in 0..k {
+                for x in 0..k {
+                    for i in 0..cin {
+                        for o in 0..cout {
+                            out[((o * cin + i) * k + y) * k + x] =
+                                hwio[((y * k + x) * cin + i) * cout + o];
+                        }
+                    }
+                }
+            }
+            out
+        };
+        assert_eq!(oihw_to_hwio(&oihw, k, cin, cout), hwio);
+        let hwc: Vec<i8> = (0..(k * k * cin) as i32).map(|v| v as i8).collect();
+        let c1hw = {
+            let mut out = vec![0i8; hwc.len()];
+            for y in 0..k {
+                for x in 0..k {
+                    for c in 0..cin {
+                        out[(c * k + y) * k + x] = hwc[(y * k + x) * cin + c];
+                    }
+                }
+            }
+            out
+        };
+        assert_eq!(c1hw_to_hwc(&c1hw, k, cin), hwc);
+    }
+}

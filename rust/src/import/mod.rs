@@ -1,0 +1,99 @@
+//! ONNX front end: dependency-free model import and export.
+//!
+//! The paper's toolchain starts "From TensorFlow" — a real frozen graph
+//! is parsed, analyzed and lowered onto the accelerator. This module is
+//! that front door for ONNX, built from nothing but `std`:
+//!
+//! * [`wire`] — a minimal protobuf wire-format reader/writer (varints +
+//!   length-delimited fields, the subset ONNX actually uses);
+//! * [`proto`] — the `ModelProto`/`GraphProto`/`NodeProto`/`TensorProto`
+//!   message subset, decoded by hand with absolute-offset errors;
+//! * [`lower`] — the lowering pass ONNX op → [`crate::graph::OpKind`]
+//!   with `value_info` shape cross-checking and parameter assembly
+//!   (exact INT8 path and a quantizing FLOAT path with BN folding);
+//! * [`export`] — the inverse, `graph::Graph` → ONNX, carrying the
+//!   quantized parameters on `sf_*` attributes so every zoo model
+//!   round-trips export→import→funcsim **bit-identically** (the
+//!   hermetic fixture strategy: no binary blobs in the repo);
+//! * [`error`] — the typed [`ImportError`] taxonomy; nothing in this
+//!   module panics on untrusted bytes.
+
+pub mod error;
+pub mod wire;
+pub mod proto;
+pub mod export;
+pub mod lower;
+
+pub use error::ImportError;
+pub use export::{export_bytes, export_graph};
+pub use lower::{import_model, Imported};
+
+use crate::compiler::CompileError;
+use crate::funcsim::Params;
+use crate::graph::Graph;
+use std::path::Path;
+
+/// Import a `.onnx` file from disk.
+pub fn import_file(path: impl AsRef<Path>) -> crate::Result<Imported> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).map_err(|e| ImportError::io(path, e))?;
+    Ok(import_model(&bytes)?)
+}
+
+/// Export a graph (and optionally its parameters) to a `.onnx` file.
+pub fn export_file(
+    g: &Graph,
+    params: Option<&Params>,
+    path: impl AsRef<Path>,
+) -> crate::Result<()> {
+    let path = path.as_ref();
+    let bytes = export_bytes(g, params)?;
+    std::fs::write(path, bytes).map_err(|e| CompileError::io(path, e))
+}
+
+/// Resolve a CLI model argument: a zoo name, a `.onnx` model, or a
+/// frozen-graph `.json` file.
+///
+/// Zoo names build at the requested square `input` resolution; file
+/// paths carry their own input geometry, so `input` is ignored for
+/// them. `.onnx` files also carry parameters ([`Imported::params`]);
+/// the other two forms return `None` and callers fall back to the
+/// seeded-random parameter convention.
+pub fn resolve(name_or_path: &str, input: usize) -> crate::Result<(Graph, Option<Params>)> {
+    if let Some(g) = crate::zoo::by_name(name_or_path, input) {
+        return Ok((g, None));
+    }
+    let path = Path::new(name_or_path);
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("onnx") => {
+            let imp = import_file(path)?;
+            Ok((imp.graph, Some(imp.params)))
+        }
+        Some("json") => Ok((crate::serialize::load_frozen(path)?, None)),
+        _ => Err(CompileError::unknown_model(name_or_path)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_prefers_zoo_names() {
+        let (g, p) = resolve("tinynet", 16).unwrap();
+        assert_eq!(g.name, "TinyNet-SE");
+        assert!(p.is_none());
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_names_with_the_typed_error() {
+        let e = resolve("not-a-model", 32).unwrap_err();
+        assert!(matches!(e, CompileError::UnknownModel { .. }), "{e}");
+    }
+
+    #[test]
+    fn resolve_surfaces_io_errors_for_missing_files() {
+        let e = resolve("/nonexistent/model.onnx", 32).unwrap_err();
+        assert!(matches!(e, CompileError::Io { .. }), "{e}");
+    }
+}

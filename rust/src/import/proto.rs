@@ -1,0 +1,799 @@
+//! The ONNX protobuf message subset.
+//!
+//! Plain structs mirroring the handful of `onnx.proto3` messages the
+//! front end needs (`ModelProto`, `GraphProto`, `NodeProto`,
+//! `AttributeProto`, `TensorProto`, `ValueInfoProto`), decoded from and
+//! encoded to the wire format by hand. Field numbers follow the ONNX
+//! schema; unknown fields are skipped on read so models produced by
+//! richer exporters still parse.
+
+use super::error::ImportError;
+use super::wire::{Reader, WireType, Writer};
+
+/// ONNX `TensorProto.DataType` codes this front end understands.
+pub mod data_type {
+    /// IEEE-754 float32.
+    pub const FLOAT: i64 = 1;
+    /// Signed 8-bit integer (the accelerator's activation/weight type).
+    pub const INT8: i64 = 3;
+    /// Signed 32-bit integer (bias accumulator type).
+    pub const INT32: i64 = 6;
+    /// Signed 64-bit integer (shape/index data).
+    pub const INT64: i64 = 7;
+}
+
+/// Decoded tensor payload, canonicalized from whichever of `raw_data` /
+/// `float_data` / `int32_data` / `int64_data` the producer used.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    /// No payload (shape-only tensors, zero-element initializers).
+    Empty,
+    /// float32 values.
+    F32(Vec<f32>),
+    /// int8 values.
+    I8(Vec<i8>),
+    /// int32 values.
+    I32(Vec<i32>),
+    /// int64 values.
+    I64(Vec<i64>),
+}
+
+impl TensorData {
+    /// Number of scalar elements.
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::Empty => 0,
+            TensorData::F32(v) => v.len(),
+            TensorData::I8(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::I64(v) => v.len(),
+        }
+    }
+
+    /// True when no elements are present.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// ONNX `TensorProto`: a named, typed, shaped constant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorProto {
+    /// Tensor name (initializers are referenced by it).
+    pub name: String,
+    /// Dimensions, outermost first.
+    pub dims: Vec<i64>,
+    /// One of the [`data_type`] codes.
+    pub data_type: i64,
+    /// The canonicalized payload.
+    pub data: TensorData,
+}
+
+impl TensorProto {
+    /// An int8 tensor (exporter weights).
+    pub fn i8s(name: impl Into<String>, dims: Vec<i64>, data: Vec<i8>) -> Self {
+        TensorProto {
+            name: name.into(),
+            dims,
+            data_type: data_type::INT8,
+            data: TensorData::I8(data),
+        }
+    }
+
+    /// An int32 tensor (exporter biases).
+    pub fn i32s(name: impl Into<String>, dims: Vec<i64>, data: Vec<i32>) -> Self {
+        TensorProto {
+            name: name.into(),
+            dims,
+            data_type: data_type::INT32,
+            data: TensorData::I32(data),
+        }
+    }
+
+    /// A float32 tensor (BN stats, Resize scales, Clip bounds).
+    pub fn f32s(name: impl Into<String>, dims: Vec<i64>, data: Vec<f32>) -> Self {
+        TensorProto {
+            name: name.into(),
+            dims,
+            data_type: data_type::FLOAT,
+            data: TensorData::F32(data),
+        }
+    }
+
+    /// Element count implied by `dims` (empty dims = scalar = 1).
+    pub fn numel(&self) -> Result<usize, ImportError> {
+        let mut n: usize = 1;
+        for &d in &self.dims {
+            if d < 0 {
+                return Err(ImportError::shape(
+                    &self.name,
+                    format!("negative dimension {d}"),
+                ));
+            }
+            n = n.saturating_mul(d as usize);
+        }
+        Ok(n)
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<TensorProto, ImportError> {
+        let mut name = String::new();
+        let mut dims = Vec::new();
+        let mut dt: i64 = 0;
+        let mut raw: Option<Vec<u8>> = None;
+        let mut f32s: Vec<f32> = Vec::new();
+        let mut i32s: Vec<i64> = Vec::new();
+        let mut i64s: Vec<i64> = Vec::new();
+        while !r.at_end() {
+            let (field, wt) = r.tag()?;
+            match field {
+                1 => r.int64s(wt, &mut dims)?,
+                2 => dt = r.varint()? as i64,
+                4 => r.floats(wt, &mut f32s)?,
+                5 => r.int64s(wt, &mut i32s)?,
+                7 => r.int64s(wt, &mut i64s)?,
+                8 => name = r.string()?,
+                9 => raw = Some(r.bytes()?.to_vec()),
+                _ => r.skip(wt)?,
+            }
+        }
+        let data = if let Some(raw) = raw {
+            decode_raw(&name, dt, &raw)?
+        } else if !f32s.is_empty() {
+            TensorData::F32(f32s)
+        } else if !i32s.is_empty() {
+            // int32_data also carries int8/uint8 payloads per the spec
+            TensorData::I32(i32s.into_iter().map(|v| v as i32).collect())
+        } else if !i64s.is_empty() {
+            TensorData::I64(i64s)
+        } else {
+            TensorData::Empty
+        };
+        // int32_data-carried int8 canonicalizes to I8 so consumers see
+        // one representation per data_type
+        let data = match data {
+            TensorData::I32(v) if dt == data_type::INT8 => {
+                let mut i8s = Vec::with_capacity(v.len());
+                for x in v {
+                    let b = i8::try_from(x).map_err(|_| {
+                        ImportError::schema(format!(
+                            "tensor {name:?}: int8 value {x} out of range"
+                        ))
+                    })?;
+                    i8s.push(b);
+                }
+                TensorData::I8(i8s)
+            }
+            other => other,
+        };
+        let t = TensorProto { name, dims, data_type: dt, data };
+        if !t.data.is_empty() && t.data.len() != t.numel()? {
+            return Err(ImportError::shape(
+                &t.name,
+                format!(
+                    "initializer has {} elements but dims {:?} imply {}",
+                    t.data.len(),
+                    t.dims,
+                    t.numel()?
+                ),
+            ));
+        }
+        Ok(t)
+    }
+
+    fn encode(&self) -> Writer {
+        let mut w = Writer::new();
+        if !self.dims.is_empty() {
+            w.packed_int64s(1, &self.dims);
+        }
+        w.int(2, self.data_type);
+        w.string(8, &self.name);
+        // always emit raw_data: fixed-width little-endian, the densest
+        // and least ambiguous of the encodings
+        let mut raw = Vec::new();
+        match &self.data {
+            TensorData::Empty => {}
+            TensorData::F32(v) => {
+                for x in v {
+                    raw.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            TensorData::I8(v) => raw.extend(v.iter().map(|&x| x as u8)),
+            TensorData::I32(v) => {
+                for x in v {
+                    raw.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I64(v) => {
+                for x in v {
+                    raw.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        if !raw.is_empty() {
+            w.bytes(9, &raw);
+        }
+        w
+    }
+}
+
+fn decode_raw(name: &str, dt: i64, raw: &[u8]) -> Result<TensorData, ImportError> {
+    let bad = |detail: String| ImportError::schema(format!("tensor {name:?}: {detail}"));
+    Ok(match dt {
+        d if d == data_type::INT8 => {
+            TensorData::I8(raw.iter().map(|&b| b as i8).collect())
+        }
+        d if d == data_type::FLOAT => {
+            if raw.len() % 4 != 0 {
+                return Err(bad(format!("raw float data length {} not /4", raw.len())));
+            }
+            TensorData::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        d if d == data_type::INT32 => {
+            if raw.len() % 4 != 0 {
+                return Err(bad(format!("raw int32 data length {} not /4", raw.len())));
+            }
+            TensorData::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )
+        }
+        d if d == data_type::INT64 => {
+            if raw.len() % 8 != 0 {
+                return Err(bad(format!("raw int64 data length {} not /8", raw.len())));
+            }
+            TensorData::I64(
+                raw.chunks_exact(8)
+                    .map(|c| {
+                        i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                    })
+                    .collect(),
+            )
+        }
+        other => return Err(bad(format!("unsupported data_type {other}"))),
+    })
+}
+
+/// Decoded ONNX attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    /// `i`: a single int64.
+    Int(i64),
+    /// `f`: a single float.
+    Float(f32),
+    /// `s`: a byte string.
+    Str(String),
+    /// `t`: a tensor.
+    Tensor(TensorProto),
+    /// `ints`: repeated int64.
+    Ints(Vec<i64>),
+    /// `floats`: repeated float.
+    Floats(Vec<f32>),
+}
+
+/// ONNX `AttributeProto`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attribute {
+    /// Attribute name.
+    pub name: String,
+    /// The decoded value.
+    pub value: AttrValue,
+}
+
+impl Attribute {
+    fn decode(r: &mut Reader<'_>) -> Result<Attribute, ImportError> {
+        let mut name = String::new();
+        let mut f: Option<f32> = None;
+        let mut i: Option<i64> = None;
+        let mut s: Option<String> = None;
+        let mut t: Option<TensorProto> = None;
+        let mut floats: Vec<f32> = Vec::new();
+        let mut ints: Vec<i64> = Vec::new();
+        let mut ty: i64 = 0;
+        while !r.at_end() {
+            let (field, wt) = r.tag()?;
+            match field {
+                1 => name = r.string()?,
+                2 => f = Some(f32::from_bits(r.fixed32()?)),
+                3 => i = Some(r.varint()? as i64),
+                4 => s = Some(r.string()?),
+                5 => t = Some(TensorProto::decode(&mut r.msg()?)?),
+                7 => r.floats(wt, &mut floats)?,
+                8 => r.int64s(wt, &mut ints)?,
+                20 => ty = r.varint()? as i64,
+                _ => r.skip(wt)?,
+            }
+        }
+        // prefer the declared type; fall back to whichever field is set
+        // (required `type` is occasionally missing in the wild)
+        let value = match ty {
+            1 => AttrValue::Float(f.unwrap_or(0.0)),
+            2 => AttrValue::Int(i.unwrap_or(0)),
+            3 => AttrValue::Str(s.unwrap_or_default()),
+            4 => AttrValue::Tensor(t.ok_or_else(|| {
+                ImportError::schema(format!("attribute {name:?}: TENSOR type without tensor"))
+            })?),
+            6 => AttrValue::Floats(floats),
+            7 => AttrValue::Ints(ints),
+            0 => {
+                if let Some(v) = i {
+                    AttrValue::Int(v)
+                } else if let Some(v) = f {
+                    AttrValue::Float(v)
+                } else if let Some(v) = s {
+                    AttrValue::Str(v)
+                } else if let Some(v) = t {
+                    AttrValue::Tensor(v)
+                } else if !ints.is_empty() {
+                    AttrValue::Ints(ints)
+                } else if !floats.is_empty() {
+                    AttrValue::Floats(floats)
+                } else {
+                    return Err(ImportError::schema(format!(
+                        "attribute {name:?} has no value"
+                    )));
+                }
+            }
+            other => {
+                return Err(ImportError::schema(format!(
+                    "attribute {name:?}: unsupported attribute type {other}"
+                )))
+            }
+        };
+        Ok(Attribute { name, value })
+    }
+
+    fn encode(&self) -> Writer {
+        let mut w = Writer::new();
+        w.string(1, &self.name);
+        match &self.value {
+            AttrValue::Float(v) => {
+                w.float(2, *v);
+                w.int(20, 1);
+            }
+            AttrValue::Int(v) => {
+                w.int(3, *v);
+                w.int(20, 2);
+            }
+            AttrValue::Str(v) => {
+                w.string(4, v);
+                w.int(20, 3);
+            }
+            AttrValue::Tensor(t) => {
+                w.message(5, t.encode());
+                w.int(20, 4);
+            }
+            AttrValue::Floats(vs) => {
+                for v in vs {
+                    w.float(7, *v);
+                }
+                w.int(20, 6);
+            }
+            AttrValue::Ints(vs) => {
+                w.packed_int64s(8, vs);
+                w.int(20, 7);
+            }
+        }
+        w
+    }
+}
+
+/// ONNX `NodeProto`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NodeProto {
+    /// Node name (may be empty; the first output then names it).
+    pub name: String,
+    /// Operator type, e.g. `"Conv"`.
+    pub op_type: String,
+    /// Input tensor names (empty string = omitted optional input).
+    pub input: Vec<String>,
+    /// Output tensor names.
+    pub output: Vec<String>,
+    /// Attributes.
+    pub attribute: Vec<Attribute>,
+}
+
+impl NodeProto {
+    /// The attribute with this name, if present.
+    pub fn attr(&self, name: &str) -> Option<&AttrValue> {
+        self.attribute.iter().find(|a| a.name == name).map(|a| &a.value)
+    }
+
+    /// An int attribute, or `default` when absent.
+    pub fn attr_int(&self, name: &str, default: i64) -> i64 {
+        match self.attr(name) {
+            Some(AttrValue::Int(v)) => *v,
+            _ => default,
+        }
+    }
+
+    /// An ints attribute as a slice (empty when absent).
+    pub fn attr_ints(&self, name: &str) -> &[i64] {
+        match self.attr(name) {
+            Some(AttrValue::Ints(v)) => v,
+            _ => &[],
+        }
+    }
+
+    /// A float attribute, or `default` when absent.
+    pub fn attr_float(&self, name: &str, default: f32) -> f32 {
+        match self.attr(name) {
+            Some(AttrValue::Float(v)) => *v,
+            _ => default,
+        }
+    }
+
+    /// A string attribute, or `default` when absent.
+    pub fn attr_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        match self.attr(name) {
+            Some(AttrValue::Str(v)) => v,
+            _ => default,
+        }
+    }
+
+    /// The display name: `name` when set, else the first output.
+    pub fn display_name(&self) -> &str {
+        if !self.name.is_empty() {
+            &self.name
+        } else {
+            self.output.first().map(String::as_str).unwrap_or("<unnamed>")
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<NodeProto, ImportError> {
+        let mut n = NodeProto::default();
+        while !r.at_end() {
+            let (field, wt) = r.tag()?;
+            match field {
+                1 => n.input.push(r.string()?),
+                2 => n.output.push(r.string()?),
+                3 => n.name = r.string()?,
+                4 => n.op_type = r.string()?,
+                5 => n.attribute.push(Attribute::decode(&mut r.msg()?)?),
+                _ => r.skip(wt)?,
+            }
+        }
+        Ok(n)
+    }
+
+    fn encode(&self) -> Writer {
+        let mut w = Writer::new();
+        for i in &self.input {
+            w.string(1, i);
+        }
+        for o in &self.output {
+            w.string(2, o);
+        }
+        if !self.name.is_empty() {
+            w.string(3, &self.name);
+        }
+        w.string(4, &self.op_type);
+        for a in &self.attribute {
+            w.message(5, a.encode());
+        }
+        w
+    }
+}
+
+/// ONNX `ValueInfoProto`, flattened to what shape checking needs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ValueInfo {
+    /// Tensor name.
+    pub name: String,
+    /// Element type code (0 when undeclared).
+    pub elem_type: i64,
+    /// Dimensions; `None` for symbolic (`dim_param`) entries.
+    pub dims: Vec<Option<i64>>,
+}
+
+impl ValueInfo {
+    /// A value-info with all-concrete dims and the given element type.
+    pub fn concrete(name: impl Into<String>, elem_type: i64, dims: &[i64]) -> Self {
+        ValueInfo {
+            name: name.into(),
+            elem_type,
+            dims: dims.iter().map(|&d| Some(d)).collect(),
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<ValueInfo, ImportError> {
+        let mut v = ValueInfo::default();
+        while !r.at_end() {
+            let (field, wt) = r.tag()?;
+            match field {
+                1 => v.name = r.string()?,
+                2 => {
+                    // TypeProto
+                    let mut ty = r.msg()?;
+                    while !ty.at_end() {
+                        let (f2, wt2) = ty.tag()?;
+                        if f2 == 1 {
+                            // TypeProto.Tensor
+                            let mut tt = ty.msg()?;
+                            while !tt.at_end() {
+                                let (f3, wt3) = tt.tag()?;
+                                match f3 {
+                                    1 => v.elem_type = tt.varint()? as i64,
+                                    2 => {
+                                        // TensorShapeProto
+                                        let mut sh = tt.msg()?;
+                                        while !sh.at_end() {
+                                            let (f4, wt4) = sh.tag()?;
+                                            if f4 == 1 {
+                                                // Dimension
+                                                let mut dim = sh.msg()?;
+                                                let mut val: Option<i64> = None;
+                                                while !dim.at_end() {
+                                                    let (f5, wt5) = dim.tag()?;
+                                                    match f5 {
+                                                        1 => {
+                                                            val =
+                                                                Some(dim.varint()? as i64)
+                                                        }
+                                                        _ => dim.skip(wt5)?,
+                                                    }
+                                                }
+                                                v.dims.push(val);
+                                            } else {
+                                                sh.skip(wt4)?;
+                                            }
+                                        }
+                                    }
+                                    _ => tt.skip(wt3)?,
+                                }
+                            }
+                        } else {
+                            ty.skip(wt2)?;
+                        }
+                    }
+                }
+                _ => r.skip(wt)?,
+            }
+        }
+        Ok(v)
+    }
+
+    fn encode(&self) -> Writer {
+        let mut shape = Writer::new();
+        for d in &self.dims {
+            let mut dim = Writer::new();
+            if let Some(v) = d {
+                dim.int(1, *v);
+            } else {
+                dim.string(2, "N");
+            }
+            shape.message(1, dim);
+        }
+        let mut tensor_type = Writer::new();
+        tensor_type.int(1, self.elem_type);
+        tensor_type.message(2, shape);
+        let mut ty = Writer::new();
+        ty.message(1, tensor_type);
+        let mut w = Writer::new();
+        w.string(1, &self.name);
+        w.message(2, ty);
+        w
+    }
+}
+
+/// ONNX `GraphProto`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GraphProto {
+    /// Graph name.
+    pub name: String,
+    /// Nodes in (required) topological order.
+    pub node: Vec<NodeProto>,
+    /// Constant tensors.
+    pub initializer: Vec<TensorProto>,
+    /// Declared graph inputs (initializers may be re-listed here).
+    pub input: Vec<ValueInfo>,
+    /// Declared graph outputs.
+    pub output: Vec<ValueInfo>,
+    /// Optional intermediate-tensor shape declarations.
+    pub value_info: Vec<ValueInfo>,
+}
+
+impl GraphProto {
+    fn decode(r: &mut Reader<'_>) -> Result<GraphProto, ImportError> {
+        let mut g = GraphProto::default();
+        while !r.at_end() {
+            let (field, wt) = r.tag()?;
+            match field {
+                1 => g.node.push(NodeProto::decode(&mut r.msg()?)?),
+                2 => g.name = r.string()?,
+                5 => g.initializer.push(TensorProto::decode(&mut r.msg()?)?),
+                11 => g.input.push(ValueInfo::decode(&mut r.msg()?)?),
+                12 => g.output.push(ValueInfo::decode(&mut r.msg()?)?),
+                13 => g.value_info.push(ValueInfo::decode(&mut r.msg()?)?),
+                _ => r.skip(wt)?,
+            }
+        }
+        Ok(g)
+    }
+
+    fn encode(&self) -> Writer {
+        let mut w = Writer::new();
+        for n in &self.node {
+            w.message(1, n.encode());
+        }
+        w.string(2, &self.name);
+        for t in &self.initializer {
+            w.message(5, t.encode());
+        }
+        for v in &self.input {
+            w.message(11, v.encode());
+        }
+        for v in &self.output {
+            w.message(12, v.encode());
+        }
+        for v in &self.value_info {
+            w.message(13, v.encode());
+        }
+        w
+    }
+}
+
+/// ONNX `ModelProto` (the file-level envelope).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ModelProto {
+    /// ONNX IR version.
+    pub ir_version: i64,
+    /// Producer tool name.
+    pub producer_name: String,
+    /// Producer tool version.
+    pub producer_version: String,
+    /// Declared default-domain opset version.
+    pub opset_version: i64,
+    /// The graph.
+    pub graph: Option<GraphProto>,
+}
+
+/// Decode a whole `.onnx` byte buffer into a [`ModelProto`].
+///
+/// A model without a graph is rejected — every other unknown field is
+/// skipped, so files from richer exporters still decode.
+pub fn decode_model(bytes: &[u8]) -> Result<ModelProto, ImportError> {
+    let mut m = ModelProto::default();
+    let mut r = Reader::new(bytes);
+    while !r.at_end() {
+        let (field, wt) = r.tag()?;
+        match field {
+            1 => m.ir_version = r.varint()? as i64,
+            2 => m.producer_name = r.string()?,
+            3 => m.producer_version = r.string()?,
+            7 => m.graph = Some(GraphProto::decode(&mut r.msg()?)?),
+            8 => {
+                // OperatorSetIdProto { domain = 1, version = 2 }
+                let mut op = r.msg()?;
+                let mut domain = String::new();
+                let mut version = 0i64;
+                while !op.at_end() {
+                    let (f2, wt2) = op.tag()?;
+                    match f2 {
+                        1 => domain = op.string()?,
+                        2 => version = op.varint()? as i64,
+                        _ => op.skip(wt2)?,
+                    }
+                }
+                if domain.is_empty() || domain == "ai.onnx" {
+                    m.opset_version = version;
+                }
+            }
+            _ => r.skip(wt)?,
+        }
+    }
+    if m.graph.is_none() {
+        return Err(ImportError::schema("model has no graph"));
+    }
+    Ok(m)
+}
+
+/// Encode a [`ModelProto`] to `.onnx` bytes.
+pub fn encode_model(m: &ModelProto) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.int(1, m.ir_version);
+    w.string(2, &m.producer_name);
+    w.string(3, &m.producer_version);
+    if let Some(g) = &m.graph {
+        w.message(7, g.encode());
+    }
+    let mut opset = Writer::new();
+    opset.string(1, "");
+    opset.int(2, m.opset_version);
+    w.message(8, opset);
+    w.into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_model() -> ModelProto {
+        ModelProto {
+            ir_version: 8,
+            producer_name: "shortcutfusion".into(),
+            producer_version: "0.7.0".into(),
+            opset_version: 14,
+            graph: Some(GraphProto {
+                name: "demo".into(),
+                node: vec![NodeProto {
+                    name: "c1".into(),
+                    op_type: "Conv".into(),
+                    input: vec!["x".into(), "c1.w".into()],
+                    output: vec!["c1".into()],
+                    attribute: vec![
+                        Attribute {
+                            name: "kernel_shape".into(),
+                            value: AttrValue::Ints(vec![3, 3]),
+                        },
+                        Attribute {
+                            name: "auto_pad".into(),
+                            value: AttrValue::Str("SAME_UPPER".into()),
+                        },
+                        Attribute { name: "sf_shift".into(), value: AttrValue::Int(7) },
+                        Attribute {
+                            name: "alpha".into(),
+                            value: AttrValue::Float(0.125),
+                        },
+                    ],
+                }],
+                initializer: vec![TensorProto::i8s(
+                    "c1.w",
+                    vec![2, 1, 3, 3],
+                    (0..18).map(|v| v as i8 - 9).collect(),
+                )],
+                input: vec![ValueInfo::concrete("x", data_type::INT8, &[1, 1, 8, 8])],
+                output: vec![ValueInfo::concrete("c1", data_type::INT8, &[1, 2, 8, 8])],
+                value_info: vec![],
+            }),
+        }
+    }
+
+    #[test]
+    fn model_round_trips_through_the_wire() {
+        let m = demo_model();
+        let bytes = encode_model(&m);
+        let m2 = decode_model(&bytes).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn missing_graph_is_schema_error() {
+        let mut w = Writer::new();
+        w.int(1, 8);
+        let e = decode_model(&w.into_bytes()).unwrap_err();
+        assert!(matches!(e, ImportError::Schema(_)), "{e}");
+    }
+
+    #[test]
+    fn initializer_dims_must_match_payload() {
+        let mut m = demo_model();
+        m.graph.as_mut().unwrap().initializer[0].dims = vec![2, 1, 3, 4]; // 24 != 18
+        let bytes = encode_model(&m);
+        let e = decode_model(&bytes).unwrap_err();
+        assert!(matches!(e, ImportError::ShapeMismatch { .. }), "{e}");
+    }
+
+    #[test]
+    fn truncations_never_panic() {
+        let bytes = encode_model(&demo_model());
+        for cut in 0..bytes.len() {
+            let _ = decode_model(&bytes[..cut]); // must return, not panic
+        }
+    }
+
+    #[test]
+    fn attr_accessors() {
+        let m = demo_model();
+        let n = &m.graph.as_ref().unwrap().node[0];
+        assert_eq!(n.attr_ints("kernel_shape"), &[3, 3]);
+        assert_eq!(n.attr_str("auto_pad", "NOTSET"), "SAME_UPPER");
+        assert_eq!(n.attr_int("sf_shift", 0), 7);
+        assert_eq!(n.attr_int("group", 1), 1);
+        assert!((n.attr_float("alpha", 0.0) - 0.125).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,382 @@
+//! Minimal protobuf wire-format reader/writer.
+//!
+//! ONNX models only use a handful of the protobuf wire types: varint
+//! (field numbers, int64/enum values), length-delimited (strings, bytes,
+//! nested messages, packed repeated scalars), and the two fixed-width
+//! forms (float / double). This module implements exactly that subset,
+//! with no code generation and no dependencies: [`Reader`] walks a byte
+//! slice and reports malformed data as [`ImportError::Wire`] carrying
+//! the *absolute* byte offset (nested readers remember their base), and
+//! [`Writer`] emits the same subset for the exporter.
+
+use super::error::ImportError;
+
+/// Protobuf wire types (the 3-bit tag suffix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireType {
+    /// Wire type 0: base-128 varint.
+    Varint,
+    /// Wire type 1: little-endian 64-bit.
+    Fixed64,
+    /// Wire type 2: length-delimited (bytes, strings, messages, packed).
+    Len,
+    /// Wire type 5: little-endian 32-bit.
+    Fixed32,
+}
+
+/// Streaming reader over one protobuf message body.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Absolute offset of `buf[0]` in the original model file, so nested
+    /// message readers report errors at file positions, not local ones.
+    base: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Reader over a whole buffer (base offset 0).
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0, base: 0 }
+    }
+
+    /// True when the message body is fully consumed.
+    pub fn at_end(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    /// Absolute byte offset of the read cursor.
+    pub fn offset(&self) -> usize {
+        self.base + self.pos
+    }
+
+    fn err(&self, detail: impl Into<String>) -> ImportError {
+        ImportError::wire(self.offset(), detail)
+    }
+
+    /// Decode one base-128 varint.
+    pub fn varint(&mut self) -> Result<u64, ImportError> {
+        let start = self.offset();
+        let mut out: u64 = 0;
+        for i in 0..10 {
+            let Some(&b) = self.buf.get(self.pos) else {
+                return Err(ImportError::wire(start, "truncated varint"));
+            };
+            self.pos += 1;
+            // the 10th byte of a u64 varint may only carry the top bit
+            if i == 9 && b > 1 {
+                return Err(ImportError::wire(start, "varint overflows 64 bits"));
+            }
+            out |= u64::from(b & 0x7f) << (7 * i);
+            if b & 0x80 == 0 {
+                return Ok(out);
+            }
+        }
+        Err(ImportError::wire(start, "varint longer than 10 bytes"))
+    }
+
+    /// Decode a field tag into `(field_number, wire_type)`.
+    ///
+    /// Rejects field number 0 and the wire types protobuf has deprecated
+    /// or never assigned (groups 3/4, codes 6/7) — ONNX uses neither.
+    pub fn tag(&mut self) -> Result<(u32, WireType), ImportError> {
+        let start = self.offset();
+        let key = self.varint()?;
+        let field = (key >> 3) as u32;
+        if field == 0 {
+            return Err(ImportError::wire(start, "field number 0"));
+        }
+        let wt = match key & 7 {
+            0 => WireType::Varint,
+            1 => WireType::Fixed64,
+            2 => WireType::Len,
+            5 => WireType::Fixed32,
+            w => {
+                return Err(ImportError::wire(
+                    start,
+                    format!("unsupported wire type {w} (field {field})"),
+                ))
+            }
+        };
+        Ok((field, wt))
+    }
+
+    /// Read a length-delimited payload.
+    pub fn bytes(&mut self) -> Result<&'a [u8], ImportError> {
+        let start = self.offset();
+        let len = self.varint()? as usize;
+        if len > self.buf.len() - self.pos {
+            return Err(ImportError::wire(
+                start,
+                format!("length {len} exceeds remaining {} bytes", self.buf.len() - self.pos),
+            ));
+        }
+        let out = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(out)
+    }
+
+    /// Read a length-delimited payload as UTF-8 (lossy for robustness —
+    /// names in the wild occasionally carry stray bytes).
+    pub fn string(&mut self) -> Result<String, ImportError> {
+        Ok(String::from_utf8_lossy(self.bytes()?).into_owned())
+    }
+
+    /// Read a nested message: a length-delimited payload wrapped in a
+    /// [`Reader`] that keeps reporting absolute offsets.
+    pub fn msg(&mut self) -> Result<Reader<'a>, ImportError> {
+        let abs = self.base + self.pos;
+        let len_start = self.pos;
+        let body = self.bytes()?;
+        // base of the nested body = where the payload starts
+        let header = self.pos - len_start - body.len();
+        Ok(Reader { buf: body, pos: 0, base: abs + header })
+    }
+
+    /// Read a little-endian 32-bit word.
+    pub fn fixed32(&mut self) -> Result<u32, ImportError> {
+        if self.buf.len() - self.pos < 4 {
+            return Err(self.err("truncated fixed32"));
+        }
+        let b = &self.buf[self.pos..self.pos + 4];
+        self.pos += 4;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian 64-bit word.
+    pub fn fixed64(&mut self) -> Result<u64, ImportError> {
+        if self.buf.len() - self.pos < 8 {
+            return Err(self.err("truncated fixed64"));
+        }
+        let b = &self.buf[self.pos..self.pos + 8];
+        self.pos += 8;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Skip one field value of the given wire type.
+    pub fn skip(&mut self, wt: WireType) -> Result<(), ImportError> {
+        match wt {
+            WireType::Varint => {
+                self.varint()?;
+            }
+            WireType::Fixed64 => {
+                self.fixed64()?;
+            }
+            WireType::Len => {
+                self.bytes()?;
+            }
+            WireType::Fixed32 => {
+                self.fixed32()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode a repeated-int64 field value: either one varint (unpacked)
+    /// or a packed length-delimited run, appended to `out`.
+    pub fn int64s(&mut self, wt: WireType, out: &mut Vec<i64>) -> Result<(), ImportError> {
+        match wt {
+            WireType::Varint => out.push(self.varint()? as i64),
+            WireType::Len => {
+                let mut inner = self.msg()?;
+                while !inner.at_end() {
+                    out.push(inner.varint()? as i64);
+                }
+            }
+            _ => return Err(self.err("repeated int64 field with fixed-width wire type")),
+        }
+        Ok(())
+    }
+
+    /// Decode a repeated-float field value (unpacked fixed32 or packed),
+    /// appended to `out`.
+    pub fn floats(&mut self, wt: WireType, out: &mut Vec<f32>) -> Result<(), ImportError> {
+        match wt {
+            WireType::Fixed32 => out.push(f32::from_bits(self.fixed32()?)),
+            WireType::Len => {
+                let mut inner = self.msg()?;
+                while !inner.at_end() {
+                    out.push(f32::from_bits(inner.fixed32()?));
+                }
+            }
+            _ => return Err(self.err("repeated float field with varint wire type")),
+        }
+        Ok(())
+    }
+}
+
+/// Append-only protobuf writer (the exporter's byte sink).
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// An empty writer.
+    pub fn new() -> Self {
+        Writer::default()
+    }
+
+    /// The bytes written so far.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Emit a raw varint.
+    pub fn varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(b);
+                break;
+            }
+            self.buf.push(b | 0x80);
+        }
+    }
+
+    fn tag(&mut self, field: u32, wire: u64) {
+        self.varint((u64::from(field) << 3) | wire);
+    }
+
+    /// Emit an int64/int32/enum field (standard two's-complement varint).
+    pub fn int(&mut self, field: u32, v: i64) {
+        self.tag(field, 0);
+        self.varint(v as u64);
+    }
+
+    /// Emit a length-delimited bytes field.
+    pub fn bytes(&mut self, field: u32, v: &[u8]) {
+        self.tag(field, 2);
+        self.varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Emit a string field.
+    pub fn string(&mut self, field: u32, v: &str) {
+        self.bytes(field, v.as_bytes());
+    }
+
+    /// Emit a nested message field from another writer's bytes.
+    pub fn message(&mut self, field: u32, inner: Writer) {
+        self.bytes(field, &inner.buf);
+    }
+
+    /// Emit a 32-bit float field (wire type 5).
+    pub fn float(&mut self, field: u32, v: f32) {
+        self.tag(field, 5);
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// Emit a packed repeated-int64 field.
+    pub fn packed_int64s(&mut self, field: u32, vs: &[i64]) {
+        let mut inner = Writer::new();
+        for &v in vs {
+            inner.varint(v as u64);
+        }
+        self.bytes(field, &inner.buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_varint(v: u64) {
+        let mut w = Writer::new();
+        w.varint(v);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.varint().unwrap(), v);
+        assert!(r.at_end());
+    }
+
+    #[test]
+    fn varint_round_trips() {
+        for v in [0u64, 1, 127, 128, 300, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            round_trip_varint(v);
+        }
+        // negative int64s encode as 10-byte varints
+        let mut w = Writer::new();
+        w.int(3, -1);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let (field, wt) = r.tag().unwrap();
+        assert_eq!((field, wt), (3, WireType::Varint));
+        assert_eq!(r.varint().unwrap() as i64, -1);
+    }
+
+    #[test]
+    fn truncated_varint_is_typed_error() {
+        let mut r = Reader::new(&[0x80]);
+        let e = r.varint().unwrap_err();
+        assert!(matches!(e, ImportError::Wire { offset: 0, .. }), "{e}");
+    }
+
+    #[test]
+    fn bad_tags_are_rejected() {
+        // field number 0
+        let mut r = Reader::new(&[0x00]);
+        assert!(r.tag().is_err());
+        // wire type 3 (group start)
+        let mut r = Reader::new(&[0x0b]);
+        assert!(r.tag().is_err());
+    }
+
+    #[test]
+    fn overlong_length_is_rejected() {
+        // tag field1/len, length 100, only 1 byte of payload
+        let mut r = Reader::new(&[0x0a, 100, 0]);
+        let (_, wt) = r.tag().unwrap();
+        assert_eq!(wt, WireType::Len);
+        assert!(r.bytes().is_err());
+    }
+
+    #[test]
+    fn nested_offsets_are_absolute() {
+        // outer: field 1 = message [ field 2 = truncated varint ]
+        let mut inner = Writer::new();
+        inner.tag(2, 0);
+        let mut inner_bytes = inner.into_bytes();
+        inner_bytes.push(0x80); // truncated varint payload
+        let mut w = Writer::new();
+        w.bytes(1, &inner_bytes);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let _ = r.tag().unwrap();
+        let mut m = r.msg().unwrap();
+        let _ = m.tag().unwrap();
+        let e = m.varint().unwrap_err();
+        // the truncated byte sits at offset 3 of the file (2 header + 1 tag)
+        assert!(matches!(e, ImportError::Wire { offset: 3, .. }), "{e:?}");
+    }
+
+    #[test]
+    fn packed_and_unpacked_int64s() {
+        let mut w = Writer::new();
+        w.packed_int64s(1, &[1, 300, 7]);
+        w.int(1, 9); // unpacked form of the same field
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let mut vs = Vec::new();
+        while !r.at_end() {
+            let (f, wt) = r.tag().unwrap();
+            assert_eq!(f, 1);
+            r.int64s(wt, &mut vs).unwrap();
+        }
+        assert_eq!(vs, vec![1, 300, 7, 9]);
+    }
+
+    #[test]
+    fn floats_round_trip() {
+        let mut w = Writer::new();
+        w.float(2, 0.125);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        let (_, wt) = r.tag().unwrap();
+        let mut vs = Vec::new();
+        r.floats(wt, &mut vs).unwrap();
+        assert_eq!(vs, vec![0.125]);
+    }
+}

@@ -121,6 +121,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`graph`], [`serialize`], [`zoo`] | frozen-graph model + JSON interchange + paper model zoo |
+//! | [`import`] | **ONNX front end**: dependency-free wire reader, lowering pass, inverse exporter |
 //! | [`analyzer`] | fusion into accelerator groups (Fig. 5a) |
 //! | [`optimizer`] | reuse-aware cut-point search (§IV, Algorithm 1, eq. 1–10) |
 //! | [`alloc`] | static 3-buffer + off-chip arena allocation (Fig. 13) |
@@ -145,6 +146,7 @@ pub mod config;
 pub mod graph;
 pub mod serialize;
 pub mod zoo;
+pub mod import;
 pub mod analyzer;
 pub mod isa;
 pub mod optimizer;

@@ -1,0 +1,249 @@
+//! ONNX front-end round-trip tests.
+//!
+//! The fixture strategy is hermetic: every `.onnx` byte string is
+//! produced in-process by the exporter (`import::export_bytes`), so the
+//! repo carries no binary blobs and the importer is tested against
+//! exactly the opset the compiler can represent:
+//!
+//! * every zoo model round-trips export→import **structurally**
+//!   (node-for-node names, ops, wiring, shapes) and **bit-identically**
+//!   through the functional simulator (every intermediate tensor, not
+//!   just the final output);
+//! * corrupted buffers (truncation, bad tags, inconsistent initializer
+//!   shapes, unsupported ops) are typed [`ImportError`]s, never panics;
+//! * an imported model packs into a [`Program`] the [`InferenceEngine`]
+//!   serves over both the plain `ReferenceBackend` and a `PooledBackend`,
+//!   bit-identical to the hand-built graph (the acceptance path).
+
+use std::sync::Arc;
+
+use shortcutfusion::analyzer::analyze;
+use shortcutfusion::compiler::{CompileError, Compiler};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::engine::{
+    EngineConfig, ExecutionBackend, InferenceEngine, ReferenceBackend,
+};
+use shortcutfusion::funcsim::{Executor, Params, Tensor};
+use shortcutfusion::graph::Graph;
+use shortcutfusion::import::{export_bytes, import_model, ImportError};
+use shortcutfusion::pool::{policy_by_name, BufferPool, PoolConfig, PooledBackend};
+use shortcutfusion::program::Program;
+use shortcutfusion::testutil::Rng;
+use shortcutfusion::zoo;
+
+/// Small build resolution per model: large enough for every stride /
+/// upsample chain to stay consistent (powers of two), small enough that
+/// debug-mode funcsim stays fast. `tinynet` ignores it (fixed geometry).
+fn test_input(name: &str) -> usize {
+    match name {
+        "retinanet" | "efficientdet-d0" => 64,
+        _ => 32,
+    }
+}
+
+fn assert_same_structure(name: &str, built: &Graph, imported: &Graph) {
+    assert_eq!(imported.name, built.name, "{name}: graph name");
+    assert_eq!(imported.nodes.len(), built.nodes.len(), "{name}: node count");
+    for (a, b) in built.nodes.iter().zip(&imported.nodes) {
+        assert_eq!(b.name, a.name, "{name}: node order/name");
+        assert_eq!(b.op, a.op, "{name}: op of {}", a.name);
+        assert_eq!(b.inputs, a.inputs, "{name}: wiring of {}", a.name);
+        assert_eq!(b.out_shape, a.out_shape, "{name}: shape of {}", a.name);
+    }
+}
+
+#[test]
+fn every_zoo_model_round_trips_structurally() {
+    for &name in zoo::KNOWN_NAMES {
+        let g = zoo::by_name(name, test_input(name)).unwrap();
+        let bytes = export_bytes(&g, None).unwrap_or_else(|e| panic!("{name}: export: {e}"));
+        let imp = import_model(&bytes).unwrap_or_else(|e| panic!("{name}: import: {e}"));
+        assert_same_structure(name, &g, &imp.graph);
+        // a paramless export still carries zero-filled weight tensors
+        // (valid ONNX needs them) — none may come back non-zero
+        for (gname, gp) in &imp.params.groups {
+            assert!(
+                gp.weights.iter().all(|&w| w == 0),
+                "{name}: {gname} invented weights"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_zoo_model_round_trips_bit_identically_through_funcsim() {
+    for &name in zoo::KNOWN_NAMES {
+        let g = zoo::by_name(name, test_input(name)).unwrap();
+        let gg = analyze(&g);
+        let params = Params::random(&gg, 7);
+        let bytes =
+            export_bytes(&g, Some(&params)).unwrap_or_else(|e| panic!("{name}: export: {e}"));
+        let imp = import_model(&bytes).unwrap_or_else(|e| panic!("{name}: import: {e}"));
+        assert_same_structure(name, &g, &imp.graph);
+        let igg = analyze(&imp.graph);
+
+        let shape = g.input().out_shape;
+        let mut rng = Rng::from_seed(5);
+        let input = Tensor::from_vec(shape, rng.i8_vec(shape.numel()));
+        let want = Executor::new(&gg, &params).run(&input).unwrap();
+        let got = Executor::new(&igg, &imp.params)
+            .run(&input)
+            .unwrap_or_else(|e| panic!("{name}: imported exec: {e}"));
+        // per-node values: every intermediate tensor must match, not
+        // just the network output
+        assert_eq!(want.len(), got.len(), "{name}");
+        for (i, (w, g2)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w, g2, "{name}: tensor of node {} diverged", gg.graph.nodes[i].name);
+        }
+    }
+}
+
+#[test]
+fn truncated_and_corrupted_buffers_are_typed_errors_never_panics() {
+    // a varint that promises more bytes than the buffer has
+    let e = import_model(&[0x08, 0xFF]).unwrap_err();
+    assert!(matches!(e, ImportError::Wire { .. }), "{e}");
+    // field number 0 is reserved
+    let e = import_model(&[0x00, 0x01]).unwrap_err();
+    assert!(matches!(e, ImportError::Wire { .. }), "{e}");
+    // wire type 3 (group) is not used by ONNX and is rejected
+    let e = import_model(&[0x0B]).unwrap_err();
+    assert!(matches!(e, ImportError::Wire { .. }), "{e}");
+    // a length-delimited field running past the end of the buffer
+    let e = import_model(&[0x3A, 0x7F, 0x01]).unwrap_err();
+    assert!(matches!(e, ImportError::Wire { .. }), "{e}");
+    // an empty buffer decodes to a ModelProto with no graph: Schema
+    let e = import_model(&[]).unwrap_err();
+    assert!(matches!(e, ImportError::Schema(_)), "{e}");
+
+    // every prefix of a real model must fail cleanly (or, for a few
+    // lucky cut points, decode) — never panic
+    let g = zoo::by_name("tinynet", 16).unwrap();
+    let params = Params::random(&analyze(&g), 7);
+    let bytes = export_bytes(&g, Some(&params)).unwrap();
+    for len in 0..bytes.len() {
+        let _ = import_model(&bytes[..len]);
+    }
+}
+
+#[test]
+fn inconsistent_initializer_shapes_are_shape_mismatch() {
+    use shortcutfusion::import::proto::{encode_model, GraphProto, ModelProto, TensorProto};
+
+    // hand-assemble a model whose initializer claims dims [2,2] but
+    // carries 3 values
+    let model = ModelProto {
+        ir_version: 8,
+        opset_version: 14,
+        graph: Some(GraphProto {
+            name: "bad".into(),
+            initializer: vec![TensorProto::f32s("w", vec![2, 2], vec![1.0, 2.0, 3.0])],
+            ..GraphProto::default()
+        }),
+        ..ModelProto::default()
+    };
+    let e = import_model(&encode_model(&model)).unwrap_err();
+    assert!(matches!(e, ImportError::ShapeMismatch { .. }), "{e}");
+}
+
+#[test]
+fn unsupported_ops_are_typed_with_the_node_name() {
+    use shortcutfusion::import::proto::{decode_model, encode_model};
+
+    // exporting a real graph, then renaming one op to something the
+    // lowering table does not cover, must produce UnsupportedOp
+    let g = zoo::by_name("tinynet", 16).unwrap();
+    let bytes = export_bytes(&g, None).unwrap();
+    let mut model = decode_model(&bytes).unwrap();
+    let graph = model.graph.as_mut().unwrap();
+    let node = graph.node.iter_mut().find(|n| n.op_type == "Conv").unwrap();
+    node.op_type = "ConvTranspose".into();
+    match import_model(&encode_model(&model)).unwrap_err() {
+        ImportError::UnsupportedOp { op_type, .. } => assert_eq!(op_type, "ConvTranspose"),
+        other => panic!("expected UnsupportedOp, got {other}"),
+    }
+}
+
+/// The acceptance path: an imported model packs into a `Program` that the
+/// `InferenceEngine` serves — bit-identical to the hand-built graph —
+/// over the plain reference backend and again through a `PooledBackend`.
+#[test]
+fn imported_model_packs_and_serves_bit_identically_including_pooled() {
+    let g = zoo::by_name("tinynet", 16).unwrap();
+    let params = Params::random(&analyze(&g), 7);
+    let bytes = export_bytes(&g, Some(&params)).unwrap();
+    let imp = import_model(&bytes).unwrap();
+
+    let pack = |graph: &Graph, params: Params| -> Arc<Program> {
+        let mut compiler = Compiler::new(AccelConfig::kcu1500_int8());
+        let analyzed = compiler.analyze(graph).unwrap();
+        compiler = compiler.with_params(params);
+        let lowered = compiler
+            .lower(&compiler.allocate(&compiler.optimize(&analyzed).unwrap()).unwrap())
+            .unwrap();
+        // round-trip through bytes so the loaded-artifact path is covered
+        Arc::new(Program::from_bytes(&compiler.pack(&lowered).unwrap().to_bytes()).unwrap())
+    };
+    let built = pack(&g, params);
+    let imported = pack(&imp.graph, imp.params);
+    assert_eq!(imported.model(), built.model());
+    assert_eq!(imported.input_shape(), built.input_shape());
+
+    let shape = built.input_shape();
+    let mut rng = Rng::from_seed(9);
+    let inputs: Vec<Tensor> =
+        (0..4).map(|_| Tensor::from_vec(shape, rng.i8_vec(shape.numel()))).collect();
+    let expect: Vec<_> = inputs
+        .iter()
+        .map(|i| ReferenceBackend.run(&built, i).unwrap().output.unwrap())
+        .collect();
+
+    // plain reference backend through the engine
+    let engine = InferenceEngine::new(
+        imported.clone(),
+        Arc::new(ReferenceBackend),
+        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2 },
+    );
+    let pending: Vec<_> = inputs.iter().map(|i| engine.submit(i.clone()).unwrap()).collect();
+    for (p, want) in pending.into_iter().zip(&expect) {
+        let done = p.wait().unwrap();
+        assert_eq!(done.result.output.as_ref(), Some(want));
+    }
+    engine.shutdown();
+
+    // again through a buffer pool large enough to hold the weights
+    let pool = Arc::new(
+        BufferPool::new(
+            PoolConfig::new(imported.resident_bytes().max(1) * 2),
+            policy_by_name("lru").unwrap(),
+        )
+        .unwrap(),
+    );
+    let pooled = Arc::new(PooledBackend::new(
+        Arc::new(ReferenceBackend),
+        pool,
+        imported.model(),
+    ));
+    let engine = InferenceEngine::new(
+        imported,
+        pooled,
+        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2 },
+    );
+    let pending: Vec<_> = inputs.iter().map(|i| engine.submit(i.clone()).unwrap()).collect();
+    for (p, want) in pending.into_iter().zip(&expect) {
+        let done = p.wait().unwrap();
+        assert_eq!(done.result.output.as_ref(), Some(want));
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn import_errors_convert_into_the_compile_error_taxonomy() {
+    let wire: CompileError = ImportError::wire(3, "boom").into();
+    assert!(matches!(wire, CompileError::Parse(_)));
+    let unsup: CompileError =
+        ImportError::unsupported("Softmax", "probs", "not in the datapath").into();
+    assert!(matches!(unsup, CompileError::Unsupported(_)));
+    let shape: CompileError = ImportError::shape("c1", "bad dims").into();
+    assert!(matches!(shape, CompileError::Graph(_)));
+}
