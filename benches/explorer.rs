@@ -1,5 +1,5 @@
 //! §Perf harness for the design-space explorer: one grid (2 models ×
-//! 3 SRAM budgets × 3 strategies × 2 MAC arrays = 36 points) costed
+//! 3 SRAM budgets × 4 strategies × 2 MAC arrays = 48 points) costed
 //! serially, in parallel, and again on a warm session — the three
 //! regimes that matter for sweep throughput.
 
@@ -63,5 +63,5 @@ fn main() {
             })
             .sum::<usize>()
     });
-    report_timing("pareto front + recommend (36 points)", &t_post);
+    report_timing("pareto front + recommend (48 points)", &t_post);
 }

@@ -46,7 +46,7 @@ pub use session::{Session, SessionStats, SweepJob};
 pub use stages::{Allocated, Analyzed, CompileReport, Lowered, Optimized, Simulated};
 pub use strategy::{
     CutPointStrategy, FixedReuseStrategy, MinBufferStrategy, ReuseStrategy,
-    ShortcutMiningStrategy, SmartShuttleStrategy,
+    ShortcutMiningStrategy, SmartShuttleStrategy, TileStreamingStrategy,
 };
 
 use std::sync::Arc;
@@ -57,7 +57,7 @@ use crate::funcsim::Params;
 use crate::graph::{validate, Graph};
 use crate::isa::{lower, MemAssign};
 use crate::power::{estimate as power_estimate, PowerModel};
-use crate::sim::simulate;
+use crate::sim::simulate_with_tiles;
 
 use stages::to_memloc;
 pub(crate) use stages::quant_shift_for;
@@ -165,7 +165,13 @@ impl Compiler {
         self.check_cfg("Optimized", &optimized.cfg)?;
         let gg = &optimized.grouped;
         let policy = &optimized.evaluation.policy;
-        let alloc = crate::alloc::allocate(gg, policy, &self.cfg);
+        let mut alloc = crate::alloc::allocate(gg, policy, &self.cfg);
+        // The tile overlay pins region interiors on-chip *before* the
+        // off-chip arena is laid out, so fused tensors never get DRAM
+        // extents either.
+        if let Some(plan) = &optimized.evaluation.tiles {
+            crate::tile::apply_overlay(&mut alloc.assigns, gg, plan);
+        }
         let dram_layout = crate::alloc::layout(gg, policy, &alloc, &self.cfg);
         Ok(Allocated {
             model: optimized.model.clone(),
@@ -190,8 +196,10 @@ impl Compiler {
             )));
         }
         let params = self.params.as_deref();
+        let tiles = allocated.evaluation.tiles.as_ref();
         let mut assigns: Vec<MemAssign> = Vec::with_capacity(gg.groups.len());
         for (gi, gr) in gg.groups.iter().enumerate() {
+            let region = tiles.and_then(|p| p.region_of(gi));
             assigns.push(MemAssign {
                 reuse: allocated.evaluation.policy[gi],
                 in_loc: to_memloc(&allocated.alloc.assigns[gi].in_loc, &allocated.dram_layout, gi),
@@ -207,6 +215,9 @@ impl Compiler {
                 weight_addr: allocated.dram_layout.weights[gi].offset,
                 weight_bytes: gr.weight_bytes(&gg.graph, self.cfg.qw as u64) as u32,
                 quant_shift: quant_shift_for(gg, gi, params)?,
+                tile_rows: region.map(|r| r.tile_rows.min(255) as u8).unwrap_or(0),
+                tile_first: region.is_some_and(|r| r.first == gi),
+                tile_weight_stream: region.is_some_and(|r| r.streamed_weights[gi - r.first]),
             });
         }
         let stream = lower(gg, &assigns);
@@ -227,7 +238,13 @@ impl Compiler {
     pub fn simulate(&self, lowered: &Lowered) -> Result<Simulated, CompileError> {
         self.check_cfg("Lowered", &lowered.cfg)?;
         let gg = &lowered.grouped;
-        let timing = simulate(gg, &lowered.evaluation.policy, &lowered.alloc, &self.cfg);
+        let timing = simulate_with_tiles(
+            gg,
+            &lowered.evaluation.policy,
+            &lowered.alloc,
+            &self.cfg,
+            lowered.evaluation.tiles.as_ref(),
+        );
         let power = power_estimate(
             &PowerModel::default(),
             &self.cfg,

@@ -15,8 +15,8 @@ use crate::baselines::shortcut_mining::{
 use crate::baselines::smartshuttle::{smartshuttle_dram, smartshuttle_weight_traffic};
 use crate::config::AccelConfig;
 use crate::isa::ReuseMode;
-use crate::optimizer::{dram_access, sram_size, CutPolicy, Evaluation, Optimizer};
-use crate::sim::simulate;
+use crate::optimizer::{dram_access, sram_size, sram_size_tiled, CutPolicy, Evaluation, Optimizer};
+use crate::sim::{simulate, simulate_with_tiles};
 
 use super::error::CompileError;
 
@@ -56,6 +56,7 @@ pub fn evaluate_policy(gg: &GroupedGraph, cfg: &AccelConfig, policy: Vec<ReuseMo
         dram,
         latency_ms,
         feasible,
+        tiles: None,
     }
 }
 
@@ -168,8 +169,109 @@ impl ReuseStrategy for SmartShuttleStrategy {
     }
 }
 
-/// Resolve a strategy by its CLI / config name.
+/// Depth-first fused-tile streaming ([`crate::tile`]): partition fused
+/// group chains into halo-padded spatial tiles, keep every interior
+/// tensor (shortcut included) on chip across the chain, and spill only
+/// region boundaries to DRAM. Cuts feature-map traffic precisely where
+/// whole-fmap cut-point reuse spills — large inputs under small SRAM
+/// budgets.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TileStreamingStrategy {
+    /// Fixed tile height in output rows. `None` sweeps
+    /// [`crate::tile::TILE_SIZES`] and keeps the best candidate.
+    pub tile_rows: Option<usize>,
+}
+
+/// `Optimizer`'s candidate ordering, restated for the tile sweep:
+/// feasibility first, then (latency, DRAM, SRAM) lexicographically.
+fn tile_better(a: &Evaluation, b: &Evaluation) -> bool {
+    match (a.feasible, b.feasible) {
+        (true, false) => true,
+        (false, true) => false,
+        _ => {
+            (a.latency_ms, a.dram.total, a.sram.total)
+                < (b.latency_ms, b.dram.total, b.sram.total)
+        }
+    }
+}
+
+/// Cost one tile plan: all-row base policy, the tile overlay keeping
+/// region interiors on chip, eq. 1–7 with the tile working set, eq. 8–9
+/// plus halo re-reads and per-tile weight restreams.
+fn evaluate_tiled(
+    gg: &GroupedGraph,
+    cfg: &AccelConfig,
+    plan: crate::tile::TilePlan,
+) -> Evaluation {
+    let policy = vec![ReuseMode::Row; gg.groups.len()];
+    let mut alloc = allocate(gg, &policy, cfg);
+    crate::tile::apply_overlay(&mut alloc.assigns, gg, &plan);
+    let sram = sram_size_tiled(gg, &policy, &alloc, cfg, &plan);
+    let mut dram = dram_access(gg, &policy, &alloc, cfg);
+    let over = crate::tile::overheads(gg, cfg, &plan);
+    dram.fm_bytes += over.halo_fm_extra;
+    dram.weight_bytes += over.weight_extra;
+    dram.total += over.halo_fm_extra + over.weight_extra;
+    let latency_ms = simulate_with_tiles(gg, &policy, &alloc, cfg, Some(&plan)).latency_ms;
+    let feasible = sram.total <= cfg.sram_budget && sram.bram18k <= cfg.bram18k_total;
+    Evaluation {
+        cuts: CutPolicy { cuts: Vec::new() },
+        policy,
+        sram,
+        dram,
+        latency_ms,
+        feasible,
+        tiles: Some(plan),
+    }
+}
+
+impl ReuseStrategy for TileStreamingStrategy {
+    /// `"tile"` for the auto sweep; canonical fixed heights get their own
+    /// name (`"tile-8"`, …) so sweep reports and Pareto fronts can tell
+    /// the axis points apart. Non-canonical heights share `"tile-fixed"`.
+    fn name(&self) -> &'static str {
+        match self.tile_rows {
+            None => "tile",
+            Some(4) => "tile-4",
+            Some(8) => "tile-8",
+            Some(16) => "tile-16",
+            Some(32) => "tile-32",
+            Some(64) => "tile-64",
+            Some(_) => "tile-fixed",
+        }
+    }
+
+    fn decide(&self, gg: &GroupedGraph, cfg: &AccelConfig) -> Result<Evaluation, CompileError> {
+        let candidates: &[usize] = match self.tile_rows {
+            Some(ref t) => std::slice::from_ref(t),
+            None => crate::tile::TILE_SIZES,
+        };
+        let mut best: Option<Evaluation> = None;
+        for &t in candidates {
+            let plan = crate::tile::plan(gg, cfg, t);
+            if plan.is_empty() {
+                continue;
+            }
+            let e = evaluate_tiled(gg, cfg, plan);
+            if best.as_ref().is_none_or(|b| tile_better(&e, b)) {
+                best = Some(e);
+            }
+        }
+        // Nothing tileable (tiny frames, concat-heavy graphs): degrade to
+        // the plain all-row streaming policy the overlay builds on.
+        Ok(best.unwrap_or_else(|| evaluate_policy(gg, cfg, vec![ReuseMode::Row; gg.groups.len()])))
+    }
+}
+
+/// Resolve a strategy by its CLI / config name. Besides the registry
+/// names, `tile-<rows>` resolves to a fixed-height
+/// [`TileStreamingStrategy`] (e.g. `tile-8`).
 pub fn by_name(name: &str) -> Option<Box<dyn ReuseStrategy>> {
+    if let Some(t) = name.strip_prefix("tile-").and_then(|s| s.parse::<usize>().ok()) {
+        if t > 0 {
+            return Some(Box::new(TileStreamingStrategy { tile_rows: Some(t) }));
+        }
+    }
     Some(match name {
         "cutpoint" => Box::new(CutPointStrategy),
         "min-buffer" => Box::new(MinBufferStrategy),
@@ -177,6 +279,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn ReuseStrategy>> {
         "fixed-frame" => Box::new(FixedReuseStrategy(ReuseMode::Frame)),
         "shortcut-mining" => Box::new(ShortcutMiningStrategy),
         "smartshuttle" => Box::new(SmartShuttleStrategy::default()),
+        "tile" => Box::new(TileStreamingStrategy::default()),
         _ => return None,
     })
 }
@@ -189,6 +292,7 @@ pub const STRATEGY_NAMES: &[&str] = &[
     "fixed-frame",
     "shortcut-mining",
     "smartshuttle",
+    "tile",
 ];
 
 #[cfg(test)]

@@ -98,7 +98,7 @@ COMMANDS:
                                  design-space sweep: grid x strategies under
                                  resource constraints, Pareto front + best config
                                  (defaults: budgets base/4,base/2,base; strategies
-                                 cutpoint,fixed-row,fixed-frame; --pack-best packs
+                                 cutpoint,fixed-row,fixed-frame,tile; --pack-best packs
                                  the first listed model's winner; --json-out writes
                                  the JSON rendering regardless of --format)
     shard <model> [--input N] [--config FILE] [--devices K] [--link-gbps X]
@@ -132,7 +132,8 @@ COMMANDS:
 
 STRATEGIES (for --strategy):
     cutpoint (default), min-buffer, fixed-row, fixed-frame,
-    shortcut-mining, smartshuttle
+    shortcut-mining, smartshuttle, tile (depth-first fused-tile
+    streaming; tile-<rows> pins the tile height, e.g. tile-8)
 
 BACKENDS (for --backend):
     virtual (default: timing + DRAM traffic of the virtual accelerator),
@@ -1489,6 +1490,16 @@ mod tests {
             "fixed-frame".into(),
         ])
         .unwrap();
+        // the tile family resolves both as the auto sweep and pinned
+        run(vec![
+            "compile".into(),
+            "resnet18".into(),
+            "--input".into(),
+            "64".into(),
+            "--strategy".into(),
+            "tile-8".into(),
+        ])
+        .unwrap();
         let err = run(vec![
             "compile".into(),
             "resnet18".into(),
@@ -1723,7 +1734,7 @@ mod tests {
 
     #[test]
     fn explore_runs_all_formats_and_packs_best() {
-        // tinynet keeps the 3-budget × 3-strategy default grid fast; the
+        // tinynet keeps the 3-budget × 4-strategy default grid fast; the
         // CI quickstart step smoke-runs the same command.
         run(vec!["explore".into(), "tinynet".into(), "--threads".into(), "2".into()]).unwrap();
 
@@ -1741,7 +1752,7 @@ mod tests {
         .unwrap();
         let text = std::fs::read_to_string(&csv).unwrap();
         assert!(text.starts_with("model,input,strategy"));
-        assert_eq!(text.lines().count(), 1 + 9, "3 budgets x 3 strategies");
+        assert_eq!(text.lines().count(), 1 + 12, "3 budgets x 4 strategies");
         assert!(text.contains("cutpoint"));
 
         let json = dir.join("points.json");
@@ -1758,7 +1769,7 @@ mod tests {
         ])
         .unwrap();
         let doc = crate::serialize::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
-        assert_eq!(doc.get("points").and_then(|p| p.as_arr()).unwrap().len(), 9);
+        assert_eq!(doc.get("points").and_then(|p| p.as_arr()).unwrap().len(), 12);
         let best = Program::load(&packed).unwrap();
         assert_eq!(best.model(), "TinyNet-SE");
     }
@@ -1891,7 +1902,7 @@ mod tests {
         ])
         .unwrap();
         let doc = crate::serialize::parse(&std::fs::read_to_string(&front).unwrap()).unwrap();
-        assert_eq!(doc.get("points").and_then(|p| p.as_arr()).map(|p| p.len()), Some(9));
+        assert_eq!(doc.get("points").and_then(|p| p.as_arr()).map(|p| p.len()), Some(12));
     }
 
     #[test]

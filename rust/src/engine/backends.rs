@@ -63,10 +63,13 @@ impl ExecutionBackend for VirtualAccelBackend {
             )));
         }
         // Policy and flags come from the artifact itself: the reuse bit of
-        // every decoded instruction and the packed-header assignment flags.
+        // every decoded instruction, the packed-header assignment flags,
+        // and the tile schedule recovered from the tile fields.
         let policy = program.policy();
         let alloc = program.alloc_view();
-        let timing = sim::simulate(gg, &policy, &alloc, program.cfg());
+        let plan = crate::tile::TilePlan::from_stream(program.stream());
+        let tiles = (!plan.is_empty()).then_some(&plan);
+        let timing = sim::simulate_with_tiles(gg, &policy, &alloc, program.cfg(), tiles);
         let staged: Vec<bool> = program.assigns().iter().map(|a| a.staged_input).collect();
         let also: Vec<bool> = program.assigns().iter().map(|a| a.also_dram).collect();
         let traffic = sim::replay(gg, program.stream(), &staged, &also, program.cfg());

@@ -32,7 +32,7 @@
 //! let exploration = SearchSpace::new(AccelConfig::kcu1500_int8())
 //!     .model("tinynet")
 //!     .sram_budgets(&[2_000_000, 8_000_000])
-//!     .ablation_strategies() // cutpoint, fixed-row, fixed-frame
+//!     .ablation_strategies() // cutpoint, fixed-row, fixed-frame, tile
 //!     .explore(&Session::new(), 2)
 //!     .unwrap();
 //! let best = exploration.recommend("tinynet").unwrap();

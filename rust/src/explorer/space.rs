@@ -5,7 +5,9 @@
 use std::fmt;
 use std::sync::Arc;
 
-use crate::compiler::strategy::{self, CutPointStrategy, FixedReuseStrategy, ReuseStrategy};
+use crate::compiler::strategy::{
+    self, CutPointStrategy, FixedReuseStrategy, ReuseStrategy, TileStreamingStrategy,
+};
 use crate::compiler::CompileError;
 use crate::config::AccelConfig;
 use crate::isa::ReuseMode;
@@ -252,11 +254,30 @@ impl SearchSpace {
         Ok(self)
     }
 
-    /// The paper's ablation trio: `cutpoint`, `fixed-row`, `fixed-frame`.
+    /// The default sweep grid: the paper's ablation trio (`cutpoint`,
+    /// `fixed-row`, `fixed-frame`) plus the auto-sweeping depth-first
+    /// `tile` streamer, so constrained-SRAM corners where every
+    /// whole-frame strategy spills still surface a viable point.
     pub fn ablation_strategies(self) -> SearchSpace {
         self.strategy(Arc::new(CutPointStrategy))
             .strategy(Arc::new(FixedReuseStrategy(ReuseMode::Row)))
             .strategy(Arc::new(FixedReuseStrategy(ReuseMode::Frame)))
+            .strategy(Arc::new(TileStreamingStrategy::default()))
+    }
+
+    /// Depth-first tile-streaming axis ([`crate::tile`]): one
+    /// [`TileStreamingStrategy`] per fixed tile height, so each height
+    /// lands as its own sweep point (and can earn its own spot on the
+    /// Pareto front). An empty slice adds the single auto-sweeping
+    /// strategy, which picks the best height per point itself.
+    pub fn tile_sizes(mut self, sizes: &[usize]) -> SearchSpace {
+        if sizes.is_empty() {
+            self.strategies.push(Arc::new(TileStreamingStrategy::default()));
+        }
+        for &t in sizes {
+            self.strategies.push(Arc::new(TileStreamingStrategy { tile_rows: Some(t) }));
+        }
+        self
     }
 
     /// Device BRAM18K ceiling (see [`Constraints::max_bram18k`]).
@@ -423,10 +444,10 @@ mod tests {
             .ablation_strategies()
             .enumerate()
             .unwrap();
-        assert_eq!(e.points.len(), 2 * 3);
+        assert_eq!(e.points.len(), 2 * 4);
         assert!(e.pruned.is_empty());
         // model-major order keeps the analysis cache hot
-        assert!(e.points[..3].iter().all(|p| p.model == "resnet18"));
+        assert!(e.points[..4].iter().all(|p| p.model == "resnet18"));
         // defaults inherited from the base config
         assert_eq!(e.points[0].input, 224);
         assert_eq!(e.points[0].cfg.sram_budget, AccelConfig::kcu1500_int8().sram_budget);
@@ -456,6 +477,25 @@ mod tests {
         let names: std::collections::BTreeSet<_> =
             e.points.iter().map(|p| p.cfg.name.clone()).collect();
         assert_eq!(names.len(), 4, "input axis reuses cfg, other axes rename");
+    }
+
+    #[test]
+    fn tile_axis_adds_one_strategy_per_height() {
+        let e = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("resnet18")
+            .tile_sizes(&[8, 32])
+            .enumerate()
+            .unwrap();
+        assert_eq!(e.points.len(), 2);
+        let names: Vec<_> = e.points.iter().map(|p| p.strategy.name()).collect();
+        assert!(names.contains(&"tile-8") && names.contains(&"tile-32"), "{names:?}");
+        let auto = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("resnet18")
+            .tile_sizes(&[])
+            .enumerate()
+            .unwrap();
+        assert_eq!(auto.points.len(), 1);
+        assert_eq!(auto.points[0].strategy.name(), "tile");
     }
 
     #[test]

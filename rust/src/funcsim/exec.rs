@@ -12,7 +12,7 @@ use super::ops;
 use super::params::Params;
 use super::tensor::Tensor;
 use crate::analyzer::GroupedGraph;
-use crate::graph::{Activation, NodeId, OpKind};
+use crate::graph::{Activation, Node, NodeId, OpKind};
 use crate::isa::InstructionStream;
 use std::fmt;
 
@@ -44,7 +44,7 @@ impl<'a> Executor<'a> {
 
     /// Parameters of the group containing `node`, looked up by the
     /// group's main-node name.
-    fn group_params(&self, node: NodeId) -> Option<&super::params::GroupParams> {
+    pub(crate) fn group_params(&self, node: NodeId) -> Option<&super::params::GroupParams> {
         let gid = self.gg.node_group[node.0];
         let main = self.gg.groups[gid.0].main;
         self.params.get(&self.gg.graph.node(main).name)
@@ -62,63 +62,74 @@ impl<'a> Executor<'a> {
         }
         let mut values: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
         for (ni, node) in g.nodes.iter().enumerate() {
-            let val = |id: NodeId| -> Result<&Tensor, ExecError> {
-                values[id.0]
-                    .as_ref()
-                    .ok_or_else(|| ExecError(format!("value of node {} missing", id.0)))
-            };
-            let out = match node.op {
-                OpKind::Input => input.clone(),
-                OpKind::Conv { k, stride, depthwise, .. } => {
-                    let gp = self
-                        .group_params(node.id)
-                        .ok_or_else(|| ExecError(format!("no params for {}", node.name)))?;
-                    let x = val(node.inputs[0])?;
-                    if depthwise {
-                        ops::dwconv2d(x, node.out_shape, k, stride, &gp.weights, &gp.bias, gp.shift)
-                    } else {
-                        ops::conv2d(x, node.out_shape, k, stride, &gp.weights, &gp.bias, gp.shift)
-                    }
-                }
-                OpKind::Fc { out_c } => {
-                    let gp = self
-                        .group_params(node.id)
-                        .ok_or_else(|| ExecError(format!("no params for {}", node.name)))?;
-                    ops::fc(val(node.inputs[0])?, out_c, &gp.weights, &gp.bias, gp.shift)
-                }
-                // Batch-norm / bias are folded into the conv's int32 bias
-                // and requant shift at quantization time.
-                OpKind::BatchNorm | OpKind::BiasAdd | OpKind::Identity => {
-                    val(node.inputs[0])?.clone()
-                }
-                OpKind::Act(a) => {
-                    let mut t = val(node.inputs[0])?.clone();
-                    self.apply_act(&mut t, a, node.id)?;
-                    t
-                }
-                OpKind::MaxPool { k, stride } => ops::maxpool(val(node.inputs[0])?, k, stride),
-                OpKind::AvgPool { k, stride } => ops::avgpool(val(node.inputs[0])?, k, stride),
-                OpKind::GlobalAvgPool => ops::global_avgpool(val(node.inputs[0])?),
-                OpKind::EltwiseAdd => {
-                    let shift = self.group_params(node.id).map(|p| p.elt_shift).unwrap_or(0);
-                    ops::eltwise_add(val(node.inputs[0])?, val(node.inputs[1])?, shift)
-                }
-                OpKind::ScaleMul => {
-                    let shift = self.group_params(node.id).map(|p| p.shift).unwrap_or(7);
-                    ops::scale_mul(val(node.inputs[0])?, val(node.inputs[1])?, shift)
-                }
-                OpKind::Concat => ops::concat(val(node.inputs[0])?, val(node.inputs[1])?),
-                OpKind::Upsample { factor } => ops::upsample(val(node.inputs[0])?, factor),
-            };
-            if out.shape != node.out_shape {
-                return Err(ExecError(format!(
-                    "node {} produced {} expected {}",
-                    node.name, out.shape, node.out_shape
-                )));
-            }
+            let out = self.compute_node(node, &values, input)?;
             values[ni] = Some(out);
         }
         Ok(values.into_iter().map(Option::unwrap).collect())
+    }
+
+    /// Compute one node's full output from already-computed `values`
+    /// (indexed by node id). Shared by the whole-frame walk above and
+    /// the per-tile walk in [`crate::tile::exec`].
+    pub(crate) fn compute_node(
+        &self,
+        node: &Node,
+        values: &[Option<Tensor>],
+        input: &Tensor,
+    ) -> Result<Tensor, ExecError> {
+        let val = |id: NodeId| -> Result<&Tensor, ExecError> {
+            values[id.0]
+                .as_ref()
+                .ok_or_else(|| ExecError(format!("value of node {} missing", id.0)))
+        };
+        let out = match node.op {
+            OpKind::Input => input.clone(),
+            OpKind::Conv { k, stride, depthwise, .. } => {
+                let gp = self
+                    .group_params(node.id)
+                    .ok_or_else(|| ExecError(format!("no params for {}", node.name)))?;
+                let x = val(node.inputs[0])?;
+                if depthwise {
+                    ops::dwconv2d(x, node.out_shape, k, stride, &gp.weights, &gp.bias, gp.shift)
+                } else {
+                    ops::conv2d(x, node.out_shape, k, stride, &gp.weights, &gp.bias, gp.shift)
+                }
+            }
+            OpKind::Fc { out_c } => {
+                let gp = self
+                    .group_params(node.id)
+                    .ok_or_else(|| ExecError(format!("no params for {}", node.name)))?;
+                ops::fc(val(node.inputs[0])?, out_c, &gp.weights, &gp.bias, gp.shift)
+            }
+            // Batch-norm / bias are folded into the conv's int32 bias
+            // and requant shift at quantization time.
+            OpKind::BatchNorm | OpKind::BiasAdd | OpKind::Identity => val(node.inputs[0])?.clone(),
+            OpKind::Act(a) => {
+                let mut t = val(node.inputs[0])?.clone();
+                self.apply_act(&mut t, a, node.id)?;
+                t
+            }
+            OpKind::MaxPool { k, stride } => ops::maxpool(val(node.inputs[0])?, k, stride),
+            OpKind::AvgPool { k, stride } => ops::avgpool(val(node.inputs[0])?, k, stride),
+            OpKind::GlobalAvgPool => ops::global_avgpool(val(node.inputs[0])?),
+            OpKind::EltwiseAdd => {
+                let shift = self.group_params(node.id).map(|p| p.elt_shift).unwrap_or(0);
+                ops::eltwise_add(val(node.inputs[0])?, val(node.inputs[1])?, shift)
+            }
+            OpKind::ScaleMul => {
+                let shift = self.group_params(node.id).map(|p| p.shift).unwrap_or(7);
+                ops::scale_mul(val(node.inputs[0])?, val(node.inputs[1])?, shift)
+            }
+            OpKind::Concat => ops::concat(val(node.inputs[0])?, val(node.inputs[1])?),
+            OpKind::Upsample { factor } => ops::upsample(val(node.inputs[0])?, factor),
+        };
+        if out.shape != node.out_shape {
+            return Err(ExecError(format!(
+                "node {} produced {} expected {}",
+                node.name, out.shape, node.out_shape
+            )));
+        }
+        Ok(out)
     }
 
     fn apply_act(&self, t: &mut Tensor, a: Activation, node: NodeId) -> Result<(), ExecError> {

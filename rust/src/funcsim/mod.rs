@@ -22,7 +22,7 @@
 
 mod tensor;
 mod params;
-mod ops;
+pub(crate) mod ops;
 mod exec;
 
 pub use exec::{execute, ExecError, Executor};

@@ -4,8 +4,9 @@ use super::tensor::Tensor;
 use super::{clamp_i8, round_shift};
 use crate::graph::Shape;
 
-/// TF-style SAME padding offsets for kernel `k`, stride `s`.
-fn same_pad(in_dim: usize, out_dim: usize, k: usize, s: usize) -> isize {
+/// TF-style SAME padding offsets for kernel `k`, stride `s` (derived
+/// from the in/out extents, so VALID shapes yield zero padding).
+pub(crate) fn same_pad(in_dim: usize, out_dim: usize, k: usize, s: usize) -> isize {
     let total = ((out_dim - 1) * s + k).saturating_sub(in_dim);
     (total / 2) as isize
 }
@@ -25,17 +26,38 @@ pub fn conv2d(
     bias: &[i32],
     shift: i32,
 ) -> Tensor {
-    let (in_c, out_c) = (input.shape.c, out_shape.c);
-    assert_eq!(weights.len(), k * k * in_c * out_c, "conv weight count");
-    let pad_y = same_pad(input.shape.h, out_shape.h, k, stride);
-    let pad_x = same_pad(input.shape.w, out_shape.w, k, stride);
-    let (in_h, in_w) = (input.shape.h as isize, input.shape.w as isize);
     let mut out = Tensor::zeros(out_shape);
+    conv2d_rows(input, &mut out, k, stride, weights, bias, shift, 0, out_shape.h - 1);
+    out
+}
+
+/// Row-windowed [`conv2d`]: compute output rows `y0..=y1` into a
+/// preallocated tensor. Same inner loops as the full op — the tiled
+/// executor's bit-identity to the whole-frame reference rests on the
+/// per-output-pixel independence of this arithmetic.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv2d_rows(
+    input: &Tensor,
+    out: &mut Tensor,
+    k: usize,
+    stride: usize,
+    weights: &[i8],
+    bias: &[i32],
+    shift: i32,
+    y0: usize,
+    y1: usize,
+) {
+    let (in_c, out_c) = (input.shape.c, out.shape.c);
+    assert_eq!(weights.len(), k * k * in_c * out_c, "conv weight count");
+    let pad_y = same_pad(input.shape.h, out.shape.h, k, stride);
+    let pad_x = same_pad(input.shape.w, out.shape.w, k, stride);
+    let (in_h, in_w) = (input.shape.h as isize, input.shape.w as isize);
+    let out_shape = out.shape;
     // i32 accumulators: twice the SIMD width of i64 and exactly the jnp
     // int32 accumulation of the golden model (wrapping on overflow,
     // like `jnp.dot(..., preferred_element_type=int32)`).
     let mut acc: Vec<i32> = vec![0; out_c];
-    for oy in 0..out_shape.h {
+    for oy in y0..=y1 {
         for ox in 0..out_shape.w {
             for (oc, a) in acc.iter_mut().enumerate() {
                 *a = *bias.get(oc).unwrap_or(&0);
@@ -71,7 +93,6 @@ pub fn conv2d(
             }
         }
     }
-    out
 }
 
 /// Depthwise convolution: weights HWC (`[ky][kx][c]`).
@@ -84,15 +105,33 @@ pub fn dwconv2d(
     bias: &[i32],
     shift: i32,
 ) -> Tensor {
-    let c = input.shape.c;
-    assert_eq!(out_shape.c, c, "depthwise preserves channels");
-    assert_eq!(weights.len(), k * k * c, "dwconv weight count");
-    let pad_y = same_pad(input.shape.h, out_shape.h, k, stride);
-    let pad_x = same_pad(input.shape.w, out_shape.w, k, stride);
-    let (in_h, in_w) = (input.shape.h as isize, input.shape.w as isize);
     let mut out = Tensor::zeros(out_shape);
+    dwconv2d_rows(input, &mut out, k, stride, weights, bias, shift, 0, out_shape.h - 1);
+    out
+}
+
+/// Row-windowed [`dwconv2d`] (see [`conv2d_rows`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dwconv2d_rows(
+    input: &Tensor,
+    out: &mut Tensor,
+    k: usize,
+    stride: usize,
+    weights: &[i8],
+    bias: &[i32],
+    shift: i32,
+    y0: usize,
+    y1: usize,
+) {
+    let c = input.shape.c;
+    assert_eq!(out.shape.c, c, "depthwise preserves channels");
+    assert_eq!(weights.len(), k * k * c, "dwconv weight count");
+    let pad_y = same_pad(input.shape.h, out.shape.h, k, stride);
+    let pad_x = same_pad(input.shape.w, out.shape.w, k, stride);
+    let (in_h, in_w) = (input.shape.h as isize, input.shape.w as isize);
+    let out_shape = out.shape;
     let mut acc: Vec<i64> = vec![0; c];
-    for oy in 0..out_shape.h {
+    for oy in y0..=y1 {
         for ox in 0..out_shape.w {
             for (ch, a) in acc.iter_mut().enumerate() {
                 *a = *bias.get(ch).unwrap_or(&0) as i64;
@@ -123,7 +162,6 @@ pub fn dwconv2d(
             }
         }
     }
-    out
 }
 
 /// Fully connected over a 1×1×C vector: weights IO (`[cin][cout]`).
@@ -159,21 +197,48 @@ pub fn scale_mul(input: &Tensor, gate: &Tensor, shift: i32) -> Tensor {
 
 /// Element-wise shortcut addition of same-scale operands.
 pub fn eltwise_add(a: &Tensor, b: &Tensor, shift: i32) -> Tensor {
-    assert_eq!(a.shape, b.shape, "eltwise shape mismatch");
     let mut out = Tensor::zeros(a.shape);
-    for i in 0..a.data.len() {
+    eltwise_add_rows(a, b, &mut out, shift, 0, a.shape.h - 1);
+    out
+}
+
+/// Row-windowed [`eltwise_add`] into a preallocated tensor.
+pub(crate) fn eltwise_add_rows(
+    a: &Tensor,
+    b: &Tensor,
+    out: &mut Tensor,
+    shift: i32,
+    y0: usize,
+    y1: usize,
+) {
+    assert_eq!(a.shape, b.shape, "eltwise shape mismatch");
+    let row = a.shape.w * a.shape.c;
+    for i in y0 * row..(y1 + 1) * row {
         out.data[i] = clamp_i8(round_shift(a.data[i] as i64 + b.data[i] as i64, shift));
     }
-    out
 }
 
 /// Max pooling (SAME output size semantics; windows clipped at borders).
 pub fn maxpool(input: &Tensor, k: usize, stride: usize) -> Tensor {
     let out_shape = input.shape.conv_same(stride, input.shape.c);
+    let mut out = Tensor::zeros(out_shape);
+    maxpool_rows(input, &mut out, k, stride, 0, out_shape.h - 1);
+    out
+}
+
+/// Row-windowed [`maxpool`] into a preallocated tensor.
+pub(crate) fn maxpool_rows(
+    input: &Tensor,
+    out: &mut Tensor,
+    k: usize,
+    stride: usize,
+    y0: usize,
+    y1: usize,
+) {
+    let out_shape = out.shape;
     let pad_y = same_pad(input.shape.h, out_shape.h, k, stride);
     let pad_x = same_pad(input.shape.w, out_shape.w, k, stride);
-    let mut out = Tensor::zeros(out_shape);
-    for oy in 0..out_shape.h {
+    for oy in y0..=y1 {
         for ox in 0..out_shape.w {
             for c in 0..input.shape.c {
                 let mut m = i8::MIN;
@@ -194,18 +259,31 @@ pub fn maxpool(input: &Tensor, k: usize, stride: usize) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Average pooling with rounded integer division over the *full* window
 /// (hardware divides by k², zero-padding contributes zeros).
 pub fn avgpool(input: &Tensor, k: usize, stride: usize) -> Tensor {
     let out_shape = input.shape.conv_same(stride, input.shape.c);
+    let mut out = Tensor::zeros(out_shape);
+    avgpool_rows(input, &mut out, k, stride, 0, out_shape.h - 1);
+    out
+}
+
+/// Row-windowed [`avgpool`] into a preallocated tensor.
+pub(crate) fn avgpool_rows(
+    input: &Tensor,
+    out: &mut Tensor,
+    k: usize,
+    stride: usize,
+    y0: usize,
+    y1: usize,
+) {
+    let out_shape = out.shape;
     let pad_y = same_pad(input.shape.h, out_shape.h, k, stride);
     let pad_x = same_pad(input.shape.w, out_shape.w, k, stride);
     let n = (k * k) as i64;
-    let mut out = Tensor::zeros(out_shape);
-    for oy in 0..out_shape.h {
+    for oy in y0..=y1 {
         for ox in 0..out_shape.w {
             for c in 0..input.shape.c {
                 let mut acc: i64 = 0;
@@ -220,7 +298,6 @@ pub fn avgpool(input: &Tensor, k: usize, stride: usize) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Global average pooling to 1×1×C with rounded division.
@@ -253,14 +330,20 @@ fn div_round(a: i64, n: i64) -> i64 {
 pub fn upsample(input: &Tensor, factor: usize) -> Tensor {
     let out_shape = input.shape.upsample(factor);
     let mut out = Tensor::zeros(out_shape);
-    for y in 0..out_shape.h {
+    upsample_rows(input, &mut out, factor, 0, out_shape.h - 1);
+    out
+}
+
+/// Row-windowed [`upsample`] into a preallocated tensor.
+pub(crate) fn upsample_rows(input: &Tensor, out: &mut Tensor, factor: usize, y0: usize, y1: usize) {
+    let out_shape = out.shape;
+    for y in y0..=y1 {
         for x in 0..out_shape.w {
             for c in 0..input.shape.c {
                 out.set(y, x, c, input.at(y / factor, x / factor, c));
             }
         }
     }
-    out
 }
 
 /// Channel concatenation.
@@ -283,7 +366,14 @@ pub fn concat(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// ReLU on int8.
 pub fn relu(t: &mut Tensor) {
-    for v in t.data.iter_mut() {
+    let last = t.shape.h - 1;
+    relu_rows(t, 0, last);
+}
+
+/// Row-windowed [`relu`].
+pub(crate) fn relu_rows(t: &mut Tensor, y0: usize, y1: usize) {
+    let row = t.shape.w * t.shape.c;
+    for v in t.data[y0 * row..(y1 + 1) * row].iter_mut() {
         *v = (*v).max(0);
     }
 }
@@ -291,7 +381,14 @@ pub fn relu(t: &mut Tensor) {
 /// Hardware leaky-ReLU: negative values are arithmetically shifted right
 /// by 3 (slope 1/8).
 pub fn leaky(t: &mut Tensor) {
-    for v in t.data.iter_mut() {
+    let last = t.shape.h - 1;
+    leaky_rows(t, 0, last);
+}
+
+/// Row-windowed [`leaky`].
+pub(crate) fn leaky_rows(t: &mut Tensor, y0: usize, y1: usize) {
+    let row = t.shape.w * t.shape.c;
+    for v in t.data[y0 * row..(y1 + 1) * row].iter_mut() {
         if *v < 0 {
             *v >>= 3;
         }
@@ -300,8 +397,15 @@ pub fn leaky(t: &mut Tensor) {
 
 /// LUT activation: index by the unsigned reinterpretation of the int8.
 pub fn lut_act(t: &mut Tensor, lut: &[i8]) {
+    let last = t.shape.h - 1;
+    lut_rows(t, lut, 0, last);
+}
+
+/// Row-windowed [`lut_act`].
+pub(crate) fn lut_rows(t: &mut Tensor, lut: &[i8], y0: usize, y1: usize) {
     debug_assert_eq!(lut.len(), 256);
-    for v in t.data.iter_mut() {
+    let row = t.shape.w * t.shape.c;
+    for v in t.data[y0 * row..(y1 + 1) * row].iter_mut() {
         *v = lut[*v as u8 as usize];
     }
 }

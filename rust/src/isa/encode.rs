@@ -120,6 +120,14 @@ pub struct Instruction {
     pub weight_addr: u32,
     /// Weight bytes streamed for this group.
     pub weight_bytes: u32,
+    /// Depth-first tile height (output rows of the fused region's last
+    /// group per tile iteration); 0 = whole-frame execution.
+    pub tile_rows: u8,
+    /// First instruction of a fused tile region (opens the tile loop).
+    pub tile_first: bool,
+    /// Weights re-streamed from DRAM once per tile instead of held
+    /// resident for the whole frame.
+    pub tile_weight_stream: bool,
 }
 
 impl Default for Instruction {
@@ -151,6 +159,9 @@ impl Default for Instruction {
             aux_addr: 0,
             weight_addr: 0,
             weight_bytes: 0,
+            tile_rows: 0,
+            tile_first: false,
+            tile_weight_stream: false,
         }
     }
 }
@@ -195,7 +206,8 @@ fn pool_code(p: Option<(PoolKind, u8, u8)>) -> (u32, u32, u32) {
 ///
 /// ```text
 /// w0  opcode[3:0] act[7:4] reuse[8] pad[9] elt[10] se[11]
-///     pool_kind[13:12] k[19:16] stride[23:20] upsample[27:24]
+///     pool_kind[13:12] tile_first[14] tile_wstream[15]
+///     k[19:16] stride[23:20] upsample[27:24]
 /// w1  in_h[31:16] in_w[15:0]
 /// w2  in_c[31:16] out_c[15:0]
 /// w3  out_h[31:16] out_w[15:0]
@@ -203,8 +215,11 @@ fn pool_code(p: Option<(PoolKind, u8, u8)>) -> (u32, u32, u32) {
 ///     aux_sel[21:20] quant_shift[31:24]
 /// w5  in_addr    w6 out_addr   w7 aux_addr
 /// w8  weight_addr  w9 weight_bytes
-/// w10 group[23:0] magic[31:24]
+/// w10 group[15:0] tile_rows[23:16] magic[31:24]
 /// ```
+///
+/// Untiled programs carry zeros in every tile field, so their word
+/// streams are byte-identical to the pre-tile wire format.
 pub fn encode(i: &Instruction) -> [u32; WORDS_PER_INSTR] {
     let (pk, pool_k, pool_s) = pool_code(i.pool);
     let w0 = (i.opcode as u32)
@@ -214,6 +229,8 @@ pub fn encode(i: &Instruction) -> [u32; WORDS_PER_INSTR] {
         | ((i.fused_eltwise as u32) << 10)
         | ((i.se_squeeze as u32) << 11)
         | (pk << 12)
+        | ((i.tile_first as u32) << 14)
+        | ((i.tile_weight_stream as u32) << 15)
         | ((i.k as u32 & 0xF) << 16)
         | ((i.stride as u32 & 0xF) << 20)
         | ((i.upsample as u32 & 0xF) << 24);
@@ -234,7 +251,7 @@ pub fn encode(i: &Instruction) -> [u32; WORDS_PER_INSTR] {
         i.aux_addr,
         i.weight_addr,
         i.weight_bytes,
-        (i.group & 0x00FF_FFFF) | (MAGIC << 24),
+        (i.group & 0xFFFF) | ((i.tile_rows as u32) << 16) | (MAGIC << 24),
     ]
 }
 
@@ -264,7 +281,7 @@ pub fn decode(w: &[u32; WORDS_PER_INSTR]) -> Result<Instruction, DecodeError> {
         _ => Some((PoolKind::Global, 0, 0)),
     };
     Ok(Instruction {
-        group: w[10] & 0x00FF_FFFF,
+        group: w[10] & 0xFFFF,
         opcode,
         act,
         reuse: if (w[0] >> 8) & 1 == 1 { ReuseMode::Frame } else { ReuseMode::Row },
@@ -290,6 +307,9 @@ pub fn decode(w: &[u32; WORDS_PER_INSTR]) -> Result<Instruction, DecodeError> {
         aux_addr: w[7],
         weight_addr: w[8],
         weight_bytes: w[9],
+        tile_rows: ((w[10] >> 16) & 0xFF) as u8,
+        tile_first: (w[0] >> 14) & 1 == 1,
+        tile_weight_stream: (w[0] >> 15) & 1 == 1,
     })
 }
 
@@ -333,5 +353,27 @@ mod tests {
         let mut i = Instruction::default();
         i.quant_shift = -5;
         assert_eq!(decode(&encode(&i)).unwrap().quant_shift, -5);
+    }
+
+    #[test]
+    fn tile_fields_round_trip() {
+        let mut i = Instruction::default();
+        i.tile_rows = 16;
+        i.tile_first = true;
+        i.tile_weight_stream = true;
+        let j = decode(&encode(&i)).unwrap();
+        assert_eq!(j.tile_rows, 16);
+        assert!(j.tile_first);
+        assert!(j.tile_weight_stream);
+    }
+
+    #[test]
+    fn untiled_words_are_bit_identical_to_pre_tile_format() {
+        // All tile fields zero: w0 bits 14/15 and w10[23:16] stay clear,
+        // so untiled programs re-encode byte-identically to the format
+        // before tile streaming existed.
+        let w = encode(&Instruction::default());
+        assert_eq!(w[0] & (0b11 << 14), 0);
+        assert_eq!((w[10] >> 16) & 0xFF, 0);
     }
 }

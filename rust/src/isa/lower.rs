@@ -23,6 +23,13 @@ pub struct MemAssign {
     pub weight_bytes: u32,
     /// Dynamic fixed-point output shift.
     pub quant_shift: i8,
+    /// Depth-first tile height of the group's fused region (0 = whole
+    /// frame; see [`crate::tile`]).
+    pub tile_rows: u8,
+    /// First group of a fused tile region.
+    pub tile_first: bool,
+    /// Weights re-streamed from DRAM once per tile.
+    pub tile_weight_stream: bool,
 }
 
 impl Default for MemAssign {
@@ -35,6 +42,9 @@ impl Default for MemAssign {
             weight_addr: 0,
             weight_bytes: 0,
             quant_shift: 0,
+            tile_rows: 0,
+            tile_first: false,
+            tile_weight_stream: false,
         }
     }
 }
@@ -115,6 +125,9 @@ pub fn lower(gg: &GroupedGraph, assigns: &[MemAssign]) -> InstructionStream {
             aux_addr: asg.aux_loc.and_then(|l| l.dram_addr()).unwrap_or(0),
             weight_addr: asg.weight_addr,
             weight_bytes: asg.weight_bytes,
+            tile_rows: asg.tile_rows,
+            tile_first: asg.tile_first,
+            tile_weight_stream: asg.tile_weight_stream,
         };
         words.extend_from_slice(&encode(&instr));
         instrs.push(instr);

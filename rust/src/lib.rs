@@ -125,6 +125,7 @@
 //! | [`analyzer`] | fusion into accelerator groups (Fig. 5a) |
 //! | [`optimizer`] | reuse-aware cut-point search (§IV, Algorithm 1, eq. 1–10) |
 //! | [`alloc`] | static 3-buffer + off-chip arena allocation (Fig. 13) |
+//! | [`tile`] | **depth-first fused-tile streaming**: region planner, halo math, tiled funcsim |
 //! | [`isa`] | 11-word instruction encode/decode + lowering (Fig. 5b) |
 //! | [`compiler`] | **the staged API**: stages, strategies, session, errors |
 //! | [`program`] | **the deployable artifact**: packed program, binary container |
@@ -151,6 +152,7 @@ pub mod analyzer;
 pub mod isa;
 pub mod optimizer;
 pub mod alloc;
+pub mod tile;
 pub mod compiler;
 pub mod program;
 pub mod engine;

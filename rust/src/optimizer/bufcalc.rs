@@ -22,6 +22,9 @@ pub struct SramBreakdown {
     pub write_buff: usize,
     /// SE / FC vector SRAM (Fig. 13c).
     pub aux: usize,
+    /// Depth-first tile working set ([`crate::tile::tile_buff`]); 0 for
+    /// whole-frame policies.
+    pub tile_buff: usize,
     /// eq. (6): total raw SRAM bytes.
     pub total: usize,
     /// eq. (7): BRAM18K blocks.
@@ -36,6 +39,33 @@ pub fn sram_size(
     alloc: &AllocResult,
     cfg: &AccelConfig,
 ) -> SramBreakdown {
+    sram_size_impl(gg, policy, alloc, cfg, None)
+}
+
+/// eq. (1)–(7) extended for a depth-first tile plan: groups inside a
+/// tiled region drop out of the eq-(1) whole-layer weight-preload max
+/// (their weights are accounted in the region's working set — resident
+/// or chunk-streamed), and the plan's largest [`crate::tile::tile_buff`]
+/// working set joins the eq-(6)/(7) totals. The eq-(3) row buffer and
+/// eq-(5) write buffer keep their all-group maxima, a conservative
+/// over-estimate for tiled groups.
+pub fn sram_size_tiled(
+    gg: &GroupedGraph,
+    policy: &[ReuseMode],
+    alloc: &AllocResult,
+    cfg: &AccelConfig,
+    plan: &crate::tile::TilePlan,
+) -> SramBreakdown {
+    sram_size_impl(gg, policy, alloc, cfg, Some(plan))
+}
+
+fn sram_size_impl(
+    gg: &GroupedGraph,
+    policy: &[ReuseMode],
+    alloc: &AllocResult,
+    cfg: &AccelConfig,
+    plan: Option<&crate::tile::TilePlan>,
+) -> SramBreakdown {
     let qa = cfg.qa;
     let qs = cfg.qs;
     let to = cfg.to;
@@ -45,11 +75,14 @@ pub fn sram_size(
     let mut buff = alloc.buf_peak;
 
     // eq. (1): in row-reuse mode the entire layer weights are preloaded.
+    // Tiled-region groups are excluded — their weights live in the tile
+    // working set instead (resident sum or streamed chunk).
     let weight_buff = gg
         .groups
         .iter()
         .enumerate()
         .filter(|(gi, _)| policy[*gi] == ReuseMode::Row)
+        .filter(|(gi, _)| plan.is_none_or(|p| p.region_of(*gi).is_none()))
         .map(|(_, gr)| gr.weight_bytes(&gg.graph, cfg.qw as u64) as usize)
         .max()
         .unwrap_or(0);
@@ -102,9 +135,10 @@ pub fn sram_size(
         .unwrap_or(0);
     let write_buff = write_row.max(write_frame_final);
 
-    // eq. (6)
+    // eq. (6), extended with the depth-first tile working set
     let aux = alloc.aux_peak;
-    let total = row_buff + out_buff + write_buff + buff[0] + buff[1] + buff[2] + aux;
+    let tile_buff = plan.map(|p| crate::tile::tile_buff(gg, cfg, p)).unwrap_or(0);
+    let total = row_buff + out_buff + write_buff + buff[0] + buff[1] + buff[2] + aux + tile_buff;
 
     // eq. (7): BRAM18K per buffer with To banks of 18-bit-wide ports
     // (16 data bits): depth_per_bank = bytes / (banks × 2).
@@ -123,10 +157,21 @@ pub fn sram_size(
         + bram(out_buff, 4)
         + bram(write_buff, 2)
         + bram(aux.max(1), 2)
+        + bram(tile_buff, 2)
         // swish/sigmoid LUTs: two per 18 Kb BRAM, To of each (§III-B).
         + to;
 
-    SramBreakdown { buff, weight_buff, row_buff, out_buff, write_buff, aux, total, bram18k }
+    SramBreakdown {
+        buff,
+        weight_buff,
+        row_buff,
+        out_buff,
+        write_buff,
+        aux,
+        tile_buff,
+        total,
+        bram18k,
+    }
 }
 
 fn is_conv_like(gg: &GroupedGraph, gr: &crate::analyzer::Group) -> bool {
@@ -183,9 +228,40 @@ mod tests {
             let s = eval("resnet50", mode);
             assert_eq!(
                 s.total,
-                s.row_buff + s.out_buff + s.write_buff + s.buff[0] + s.buff[1] + s.buff[2] + s.aux
+                s.row_buff
+                    + s.out_buff
+                    + s.write_buff
+                    + s.buff[0]
+                    + s.buff[1]
+                    + s.buff[2]
+                    + s.aux
+                    + s.tile_buff
             );
+            assert_eq!(s.tile_buff, 0, "whole-frame policies carry no tile working set");
         }
+    }
+
+    #[test]
+    fn tiled_sram_swaps_weight_preload_for_tile_working_set() {
+        let gg = analyze(&zoo::vgg16_conv(224));
+        let mut cfg = AccelConfig::kcu1500_int8();
+        cfg.sram_budget = 1_000_000;
+        let policy = vec![ReuseMode::Row; gg.groups.len()];
+        let alloc = allocate(&gg, &policy, &cfg);
+        let plain = sram_size(&gg, &policy, &alloc, &cfg);
+        let plan = crate::tile::plan(&gg, &cfg, 8);
+        assert!(!plan.is_empty());
+        let tiled = sram_size_tiled(&gg, &policy, &alloc, &cfg, &plan);
+        assert_eq!(tiled.tile_buff, crate::tile::tile_buff(&gg, &cfg, &plan));
+        assert!(tiled.tile_buff > 0);
+        // Tiled regions leave the eq-(1) preload max; under a 1 MB budget
+        // that max (2.36 MB conv5 weights untiled) must shrink.
+        assert!(
+            tiled.weight_buff < plain.weight_buff,
+            "tiled {} !< plain {}",
+            tiled.weight_buff,
+            plain.weight_buff
+        );
     }
 
     #[test]

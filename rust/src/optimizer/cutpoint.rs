@@ -41,6 +41,10 @@ pub struct Evaluation {
     pub latency_ms: f64,
     /// eq. (10): SRAM within budget and BRAM within the device.
     pub feasible: bool,
+    /// Depth-first tile plan ([`crate::tile`]); `None` for whole-frame
+    /// strategies. When set, the SRAM/DRAM breakdowns include the plan's
+    /// tile-buffer and halo/weight-restream terms.
+    pub tiles: Option<crate::tile::TilePlan>,
 }
 
 /// One point of a Fig-16/17-style sweep.
@@ -148,6 +152,7 @@ impl<'a> Optimizer<'a> {
             dram,
             latency_ms,
             feasible,
+            tiles: None,
         }
     }
 

@@ -22,7 +22,7 @@ pub mod dram;
 pub mod cutpoint;
 
 pub use blocks::{basic_blocks, BasicBlock};
-pub use bufcalc::{sram_size, SramBreakdown};
+pub use bufcalc::{sram_size, sram_size_tiled, SramBreakdown};
 pub use cutpoint::{CutPolicy, Evaluation, LatencyFn, Optimizer, SweepPoint};
 pub use dram::{dram_access, DramBreakdown};
 pub use segments::{segments, Direction, Segment};

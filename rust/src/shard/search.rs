@@ -370,6 +370,22 @@ mod tests {
     }
 
     #[test]
+    fn sharded_exploration_carries_tile_strategies() {
+        // a tile axis on the space must reach every shard candidate —
+        // sharded sweeps never silently fall back to cut-point only
+        let space = SearchSpace::new(AccelConfig::kcu1500_int8())
+            .model("tinynet")
+            .tile_sizes(&[8]);
+        let e = space
+            .explore_sharded(&[2], &LinkModel::pcie_gen3(), Objective::Latency, 2)
+            .unwrap();
+        assert!(!e.points.is_empty());
+        for p in &e.points {
+            assert_eq!(p.plan.strategy_name(), "tile-8");
+        }
+    }
+
+    #[test]
     fn sharded_exploration_rejects_bad_axes() {
         let space = SearchSpace::new(AccelConfig::kcu1500_int8()).model("tinynet");
         let link = LinkModel::pcie_gen3();

@@ -14,5 +14,5 @@ mod timing;
 mod traffic;
 
 pub use macarray::{compute_cycles, dw_taps_per_unit, MacGeometry};
-pub use timing::{simulate, simulate_fixed_row_baseline, GroupTiming, NetworkTiming};
+pub use timing::{simulate, simulate_fixed_row_baseline, simulate_with_tiles, GroupTiming, NetworkTiming};
 pub use traffic::{replay, TrafficCount};

@@ -57,7 +57,42 @@ pub fn simulate(
     alloc: &AllocResult,
     cfg: &AccelConfig,
 ) -> NetworkTiming {
+    simulate_with_tiles(gg, policy, alloc, cfg, None)
+}
+
+/// [`simulate`] extended for depth-first tile streaming. With
+/// `plan: None` (or an empty plan) this is *exactly* the whole-frame
+/// model above. Groups inside a tiled region instead:
+/// * scale compute by the halo overcompute
+///   (`rows_out_total / out_h`, from [`crate::tile::region_profile`]);
+/// * stream the region-first input with its re-read halo rows and
+///   out-of-region shortcut tiles with theirs (interior operands are
+///   on-chip after [`crate::tile::apply_overlay`] and stream nothing);
+/// * stream weights once per tile when the plan marks them streamed
+///   (`n_tiles × W`), overlapped with compute like frame-reuse — so
+///   they drop out of the row-reuse preload look-ahead;
+/// * skip the row-buffer warm-up fill (tiles prime their own slabs).
+pub fn simulate_with_tiles(
+    gg: &GroupedGraph,
+    policy: &[ReuseMode],
+    alloc: &AllocResult,
+    cfg: &AccelConfig,
+    plan: Option<&crate::tile::TilePlan>,
+) -> NetworkTiming {
     assert_eq!(policy.len(), gg.groups.len());
+    // group index -> (region index, index within the region)
+    let mut tile_of: Vec<Option<(usize, usize)>> = vec![None; gg.groups.len()];
+    let mut profiles = Vec::new();
+    let mut regions: Vec<&crate::tile::TileRegion> = Vec::new();
+    if let Some(plan) = plan {
+        for (ri, region) in plan.regions.iter().enumerate() {
+            profiles.push(crate::tile::region_profile(gg, region));
+            regions.push(region);
+            for g in region.first..=region.last {
+                tile_of[g] = Some((ri, g - region.first));
+            }
+        }
+    }
     let bpc = cfg.dram_bytes_per_cycle();
     let qa = cfg.qa;
     let mut per_group = Vec::with_capacity(gg.groups.len());
@@ -77,7 +112,13 @@ pub fn simulate(
             continue;
         }
         let a = &alloc.assigns[gi];
-        let compute = compute_cycles(gg, gr, cfg);
+        let tiled = tile_of[gi].map(|(ri, idx)| (regions[ri], &profiles[ri], idx));
+        let mut compute = compute_cycles(gg, gr, cfg);
+        if let Some((_, p, idx)) = tiled {
+            // halo overcompute: tiles overlap, so interior rows recompute
+            let out_h = gr.out_shape.h.max(1) as u64;
+            compute = (compute * p.rows_out_total[idx]).div_ceil(out_h);
+        }
 
         // ---- feature-map DRAM streaming --------------------------------
         let mut stream_bytes: u64 = 0;
@@ -98,15 +139,37 @@ pub fn simulate(
         if a.also_dram {
             stream_bytes += gr.out_shape.bytes(qa) as u64;
         }
+        if let Some((region, p, idx)) = tiled {
+            // re-read halos on the two operands that still cross DRAM
+            if gi == region.first && (a.in_loc == Loc::Dram || a.staged_input) {
+                let in_row = (gr.in_shape.w * gr.in_shape.c * qa) as u64;
+                stream_bytes +=
+                    (p.rows_in_total * in_row).saturating_sub(gr.in_shape.bytes(qa) as u64);
+            }
+            if p.rows_aux_total[idx] > 0 {
+                if let Some(src) = gr.shortcut_of.or_else(|| gr.inputs.get(1).copied()) {
+                    let so = gg.groups[src.0].out_shape;
+                    let row = (so.w * so.c * qa) as u64;
+                    stream_bytes +=
+                        (p.rows_aux_total[idx] * row).saturating_sub(so.bytes(qa) as u64);
+                }
+            }
+        }
         let stream = (stream_bytes as f64 / bpc).ceil() as u64;
 
         // ---- weights ----------------------------------------------------
-        let weight_bytes = gr.weight_bytes(&gg.graph, cfg.qw as u64);
+        let mut weight_bytes = gr.weight_bytes(&gg.graph, cfg.qw as u64);
+        if let Some((region, p, idx)) = tiled {
+            if region.streamed_weights[idx] {
+                weight_bytes *= p.n_tiles as u64;
+            }
+        }
         let weight_cycles = (weight_bytes as f64 / bpc).ceil() as u64;
 
         // ---- pipeline fill ----------------------------------------------
         let (k, _s, _dw) = gr.conv_geometry(&gg.graph);
-        let fill = if policy[gi] == ReuseMode::Row
+        let fill = if tiled.is_none()
+            && policy[gi] == ReuseMode::Row
             && (a.in_loc == Loc::Dram)
             && matches!(gr.kind, GroupKind::Conv | GroupKind::DwConv)
         {
@@ -116,17 +179,25 @@ pub fn simulate(
             0
         };
 
-        let latency = match policy[gi] {
-            ReuseMode::Frame => {
-                // weights stream during compute (double weight-block buffer)
-                compute.max(stream).max(weight_cycles) + fill
-            }
-            ReuseMode::Row => {
-                // whole-layer preload overlapped with the previous group
-                let body = compute.max(stream);
-                let stall = pending_preload; // set by the previous group
-                pending_preload = 0;
-                body + stall + fill
+        let latency = if tiled.is_some() {
+            // tile loop: weights (resident preload or per-tile chunks)
+            // overlap compute like frame-reuse; consume any stray stall
+            let stall = pending_preload;
+            pending_preload = 0;
+            compute.max(stream).max(weight_cycles) + stall
+        } else {
+            match policy[gi] {
+                ReuseMode::Frame => {
+                    // weights stream during compute (double weight-block buffer)
+                    compute.max(stream).max(weight_cycles) + fill
+                }
+                ReuseMode::Row => {
+                    // whole-layer preload overlapped with the previous group
+                    let body = compute.max(stream);
+                    let stall = pending_preload; // set by the previous group
+                    pending_preload = 0;
+                    body + stall + fill
+                }
             }
         };
 
@@ -139,9 +210,10 @@ pub fn simulate(
             // `latency` bookkeeping below).
         }
         // Look ahead: if the next group is row-reuse, its preload overlaps
-        // this group's latency.
+        // this group's latency. Tiled groups opt out — their weights are
+        // charged inside the tile loop above.
         if let Some(next) = gg.groups.get(gi + 1) {
-            if policy[gi + 1] == ReuseMode::Row {
+            if policy[gi + 1] == ReuseMode::Row && tile_of[gi + 1].is_none() {
                 let next_w = next.weight_bytes(&gg.graph, cfg.qw as u64);
                 let next_cycles = (next_w as f64 / bpc).ceil() as u64;
                 pending_preload = next_cycles.saturating_sub(latency);
@@ -286,6 +358,44 @@ mod tests {
         // Table V: YOLOv3@416 → 57.57 ms.
         let t = run("yolov3", 416, ReuseMode::Frame);
         assert!((30.0..90.0).contains(&t.latency_ms), "latency {}", t.latency_ms);
+    }
+
+    #[test]
+    fn with_tiles_none_is_exactly_simulate() {
+        let cfg = AccelConfig::kcu1500_int8();
+        for &name in zoo::MODEL_NAMES {
+            let gg = analyze(&zoo::by_name(name, zoo::default_input(name)).unwrap());
+            for mode in [ReuseMode::Row, ReuseMode::Frame] {
+                let policy = vec![mode; gg.groups.len()];
+                let alloc = allocate(&gg, &policy, &cfg);
+                let a = simulate(&gg, &policy, &alloc, &cfg);
+                let b = simulate_with_tiles(&gg, &policy, &alloc, &cfg, None);
+                assert_eq!(a.total_cycles, b.total_cycles, "{name} {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_timing_is_finite_and_drops_interior_streaming() {
+        let gg = analyze(&zoo::vgg16_conv(224));
+        let mut cfg = AccelConfig::kcu1500_int8();
+        cfg.sram_budget = 1_000_000;
+        let plan = crate::tile::plan(&gg, &cfg, 8);
+        assert!(!plan.is_empty());
+        let policy = vec![ReuseMode::Row; gg.groups.len()];
+        let mut alloc = allocate(&gg, &policy, &cfg);
+        crate::tile::apply_overlay(&mut alloc.assigns, &gg, &plan);
+        let t = simulate_with_tiles(&gg, &policy, &alloc, &cfg, Some(&plan));
+        assert!(t.latency_ms.is_finite() && t.latency_ms > 0.0);
+        // interior region groups stream no feature maps from DRAM
+        for r in &plan.regions {
+            for g in r.first + 1..r.last {
+                let gr = &gg.groups[g];
+                if gr.shortcut_of.is_none() && gr.inputs.len() < 2 {
+                    assert_eq!(t.per_group[g].stream_cycles, 0, "group {g} streams");
+                }
+            }
+        }
     }
 
     #[test]

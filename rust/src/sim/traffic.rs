@@ -106,6 +106,13 @@ fn replay_instr(
 /// not encoded in the 11 instruction words (the hardware performs the
 /// staging DMA as part of the group prologue; the flags travel in the
 /// packed header in a real deployment).
+///
+/// Tile streaming is recovered from the stream itself
+/// ([`crate::tile::TilePlan::from_stream`]): per-instruction placements
+/// already count the base traffic, so the replay adds exactly the
+/// [`crate::tile::overheads`] terms — halo re-reads on `fm_read`,
+/// per-tile weight re-streams on `weight_read` — the same terms the
+/// analytical model folds into eq. (8)/(9).
 pub fn replay(
     gg: &GroupedGraph,
     stream: &InstructionStream,
@@ -133,6 +140,12 @@ pub fn replay(
         if gr.kind == GroupKind::Input {
             continue;
         }
+    }
+    let plan = crate::tile::TilePlan::from_stream(stream);
+    if !plan.is_empty() {
+        let o = crate::tile::overheads(gg, cfg, &plan);
+        t.fm_read += o.halo_fm_extra;
+        t.weight_read += o.weight_extra;
     }
     t
 }
@@ -215,6 +228,7 @@ mod tests {
                 weight_addr: 0,
                 weight_bytes: gr.weight_bytes(&gg.graph, cfg.qw as u64) as u32,
                 quant_shift: 0,
+                ..Default::default()
             })
             .collect();
         let stream = crate::isa::lower(&gg, &assigns);

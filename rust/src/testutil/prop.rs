@@ -103,7 +103,8 @@ pub fn random_instruction(rng: &mut Rng) -> crate::isa::Instruction {
         Opcode::Copy,
     ];
     Instruction {
-        group: rng.below(1 << 24) as u32,
+        // 16-bit group field: w10[23:16] now carries the tile height.
+        group: rng.below(1 << 16) as u32,
         opcode: *rng.choose(&ops),
         act: *rng.choose(&acts),
         reuse: if rng.coin() { ReuseMode::Frame } else { ReuseMode::Row },
@@ -134,6 +135,9 @@ pub fn random_instruction(rng: &mut Rng) -> crate::isa::Instruction {
         aux_addr: rng.next_u64() as u32,
         weight_addr: rng.next_u64() as u32,
         weight_bytes: rng.next_u64() as u32,
+        tile_rows: rng.below(256) as u8,
+        tile_first: rng.coin(),
+        tile_weight_stream: rng.coin(),
     }
 }
 

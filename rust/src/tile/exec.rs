@@ -1,0 +1,298 @@
+//! Tiled functional execution, bit-identical to the whole-frame
+//! reference.
+//!
+//! [`run_tiled`] executes an analyzed network under a [`TilePlan`]:
+//! groups outside every region run through the ordinary
+//! [`Executor::compute_node`] walk, and each region runs tile-by-tile —
+//! per output tile of the region's last group, a backward
+//! need-propagation derives the halo-padded row range every region node
+//! must produce, then a forward walk computes exactly those rows with
+//! the row-windowed op variants in [`crate::funcsim::ops`]. Those
+//! variants share the whole-frame ops' inner loops verbatim, and every
+//! output pixel of the datapath depends only on its own input window,
+//! so recomputed halo rows are idempotent and the result is
+//! bit-identical — the cross-check the integration tests pin for every
+//! zoo model.
+//!
+//! Completeness contract: tensors of *region-last* groups and of all
+//! non-region nodes are fully computed. Region-*interior* tensors are
+//! only guaranteed on rows some tile needed — e.g. a stride-2 1×1
+//! convolution never reads odd input rows, so its producer's unused
+//! rows stay zero. Nothing downstream may read region-interior tensors,
+//! which the planner guarantees by keeping interior consumers inside
+//! the region.
+
+use super::{merge, window, TilePlan, TileRegion};
+use crate::analyzer::GroupedGraph;
+use crate::funcsim::ops;
+use crate::funcsim::{ExecError, Executor, Params, Tensor};
+use crate::graph::{Activation, Node, NodeId, OpKind};
+
+/// Execute `gg` on `input` under `plan`; returns one value per graph
+/// node, exactly like [`Executor::run`] (see the module docs for the
+/// region-interior completeness contract).
+pub fn run_tiled(
+    gg: &GroupedGraph,
+    params: &Params,
+    input: &Tensor,
+    plan: &TilePlan,
+) -> Result<Vec<Tensor>, ExecError> {
+    let g = &gg.graph;
+    if input.shape != g.input().out_shape {
+        return Err(ExecError(format!(
+            "input shape {} != graph input {}",
+            input.shape,
+            g.input().out_shape
+        )));
+    }
+    let exec = Executor::new(gg, params);
+    let mut values: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    let mut gi = 0;
+    while gi < gg.groups.len() {
+        if let Some(region) = plan.region_of(gi) {
+            run_region(&exec, region, &mut values, input)?;
+            gi = region.last + 1;
+        } else {
+            for &nid in &gg.groups[gi].nodes {
+                let node = g.node(nid);
+                let out = exec.compute_node(node, &values, input)?;
+                values[nid.0] = Some(out);
+            }
+            gi += 1;
+        }
+    }
+    Ok(values.into_iter().map(Option::unwrap).collect())
+}
+
+/// Run one region tile-by-tile, filling `values` for all its nodes.
+fn run_region(
+    exec: &Executor<'_>,
+    region: &TileRegion,
+    values: &mut [Option<Tensor>],
+    input: &Tensor,
+) -> Result<(), ExecError> {
+    let gg = exec.gg;
+    let mut region_nodes: Vec<NodeId> = Vec::new();
+    for g in region.first..=region.last {
+        region_nodes.extend(gg.groups[g].nodes.iter().copied());
+    }
+    let mut in_region = vec![false; gg.graph.nodes.len()];
+    for &nid in &region_nodes {
+        in_region[nid.0] = true;
+        values[nid.0] = Some(Tensor::zeros(gg.graph.node(nid).out_shape));
+    }
+    let out_node = *gg.groups[region.last].nodes.last().unwrap();
+    let out_h = gg.graph.node(out_node).out_shape.h;
+    let t = region.tile_rows.clamp(1, out_h);
+    let mut t0 = 0;
+    while t0 < out_h {
+        let t1 = (t0 + t).min(out_h) - 1;
+        // Backward: the output rows each region node must produce so
+        // that out_node can produce rows [t0, t1] this tile.
+        let mut need: Vec<Option<(usize, usize)>> = vec![None; gg.graph.nodes.len()];
+        need[out_node.0] = Some((t0, t1));
+        for &nid in region_nodes.iter().rev() {
+            let Some((a, b)) = need[nid.0] else { continue };
+            let node = gg.graph.node(nid);
+            for (pi, &inp) in node.inputs.iter().enumerate() {
+                if in_region[inp.0] {
+                    let (ia, ib) = node_input_rows(node, pi, a, b);
+                    merge(&mut need[inp.0], ia, ib);
+                }
+            }
+        }
+        // Forward: compute exactly the needed rows of each node.
+        for &nid in &region_nodes {
+            let Some((a, b)) = need[nid.0] else { continue };
+            compute_node_rows(exec, gg.graph.node(nid), values, input, a, b)?;
+        }
+        t0 = t1 + 1;
+    }
+    Ok(())
+}
+
+/// Rows `[lo, hi]` of input operand `pi` that `node` reads to produce
+/// its output rows `[a, b]`.
+fn node_input_rows(node: &Node, pi: usize, a: usize, b: usize) -> (usize, usize) {
+    let in_h = node.in_shapes[pi].h;
+    match node.op {
+        OpKind::Conv { k, stride, .. } => window(in_h, node.out_shape.h, k, stride, a, b),
+        OpKind::MaxPool { k, stride } | OpKind::AvgPool { k, stride } => {
+            window(in_h, node.out_shape.h, k, stride, a, b)
+        }
+        OpKind::Upsample { factor } => {
+            let f = factor.max(1);
+            ((a / f).min(in_h - 1), (b / f).min(in_h - 1))
+        }
+        // Pointwise in rows: eltwise (both operands), act, BN, bias, id.
+        _ => (a.min(in_h - 1), b.min(in_h - 1)),
+    }
+}
+
+fn get<'v>(values: &'v [Option<Tensor>], id: NodeId) -> Result<&'v Tensor, ExecError> {
+    values[id.0]
+        .as_ref()
+        .ok_or_else(|| ExecError(format!("value of node {} missing", id.0)))
+}
+
+/// Compute output rows `[y0, y1]` of one region node into its
+/// preallocated tensor, with the same arithmetic as
+/// [`Executor::compute_node`].
+fn compute_node_rows(
+    exec: &Executor<'_>,
+    node: &Node,
+    values: &mut [Option<Tensor>],
+    _input: &Tensor,
+    y0: usize,
+    y1: usize,
+) -> Result<(), ExecError> {
+    // Take the output tensor so reading sibling values can't alias it.
+    let mut out = values[node.id.0]
+        .take()
+        .ok_or_else(|| ExecError(format!("tile output of node {} missing", node.id.0)))?;
+    match node.op {
+        OpKind::Conv { k, stride, depthwise, .. } => {
+            let gp = exec
+                .group_params(node.id)
+                .ok_or_else(|| ExecError(format!("no params for {}", node.name)))?;
+            let x = get(values, node.inputs[0])?;
+            if depthwise {
+                ops::dwconv2d_rows(x, &mut out, k, stride, &gp.weights, &gp.bias, gp.shift, y0, y1);
+            } else {
+                ops::conv2d_rows(x, &mut out, k, stride, &gp.weights, &gp.bias, gp.shift, y0, y1);
+            }
+        }
+        OpKind::BatchNorm | OpKind::BiasAdd | OpKind::Identity => {
+            copy_rows(get(values, node.inputs[0])?, &mut out, y0, y1);
+        }
+        OpKind::Act(a) => {
+            copy_rows(get(values, node.inputs[0])?, &mut out, y0, y1);
+            apply_act_rows(exec, &mut out, a, node.id, y0, y1)?;
+        }
+        OpKind::MaxPool { k, stride } => {
+            ops::maxpool_rows(get(values, node.inputs[0])?, &mut out, k, stride, y0, y1);
+        }
+        OpKind::AvgPool { k, stride } => {
+            ops::avgpool_rows(get(values, node.inputs[0])?, &mut out, k, stride, y0, y1);
+        }
+        OpKind::EltwiseAdd => {
+            let shift = exec.group_params(node.id).map(|p| p.elt_shift).unwrap_or(0);
+            let a = get(values, node.inputs[0])?;
+            let b = get(values, node.inputs[1])?;
+            ops::eltwise_add_rows(a, b, &mut out, shift, y0, y1);
+        }
+        OpKind::Upsample { factor } => {
+            ops::upsample_rows(get(values, node.inputs[0])?, &mut out, factor, y0, y1);
+        }
+        other => {
+            return Err(ExecError(format!("op {other:?} cannot execute tiled")));
+        }
+    }
+    values[node.id.0] = Some(out);
+    Ok(())
+}
+
+/// Copy rows `[y0, y1]` from `src` into `dst` (same shape).
+fn copy_rows(src: &Tensor, dst: &mut Tensor, y0: usize, y1: usize) {
+    let row = dst.shape.w * dst.shape.c;
+    dst.data[y0 * row..(y1 + 1) * row].copy_from_slice(&src.data[y0 * row..(y1 + 1) * row]);
+}
+
+/// Row-windowed activation, LUTs included (mirrors the reference
+/// executor's activation dispatch).
+fn apply_act_rows(
+    exec: &Executor<'_>,
+    t: &mut Tensor,
+    a: Activation,
+    node: NodeId,
+    y0: usize,
+    y1: usize,
+) -> Result<(), ExecError> {
+    match a {
+        Activation::Linear => {}
+        Activation::Relu => ops::relu_rows(t, y0, y1),
+        Activation::Leaky => ops::leaky_rows(t, y0, y1),
+        Activation::Relu6
+        | Activation::Swish
+        | Activation::Sigmoid
+        | Activation::HardSwish
+        | Activation::HardSigmoid => {
+            let lut = exec
+                .group_params(node)
+                .and_then(|p| p.lut.as_ref())
+                .ok_or_else(|| {
+                    ExecError(format!("activation {a:?} at node {} requires a LUT", node.0))
+                })?;
+            ops::lut_rows(t, lut, y0, y1);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::config::AccelConfig;
+    use crate::graph::Shape;
+    use crate::testutil::Rng;
+    use crate::tile;
+    use crate::zoo;
+
+    /// Compare run_tiled against the whole-frame reference on the
+    /// tensors the completeness contract covers: non-region nodes and
+    /// region-last group outputs (which include the network outputs).
+    fn assert_tiled_matches(name: &str, input_px: usize, tile_rows: usize) {
+        let gg = analyze(&zoo::by_name(name, input_px).unwrap());
+        let cfg = AccelConfig::kcu1500_int8();
+        let plan = tile::plan(&gg, &cfg, tile_rows);
+        assert!(!plan.is_empty(), "{name}: expected at least one region");
+        let params = Params::random(&gg, 11);
+        let mut rng = Rng::from_seed(12);
+        let n = input_px * input_px * 3;
+        let input = Tensor::from_vec(Shape::new(input_px, input_px, 3), rng.i8_vec(n));
+        let reference = Executor::new(&gg, &params).run(&input).unwrap();
+        let tiled = run_tiled(&gg, &params, &input, &plan).unwrap();
+        for (ni, node) in gg.graph.nodes.iter().enumerate() {
+            let gid = gg.node_group[ni];
+            let covered = match plan.region_of(gid.0) {
+                None => true,
+                Some(r) => gid.0 == r.last && *gg.groups[gid.0].nodes.last().unwrap() == node.id,
+            };
+            if covered {
+                assert_eq!(
+                    reference[ni].data, tiled[ni].data,
+                    "{name}: node {} ({}) diverges under {tile_rows}-row tiles",
+                    ni, node.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resnet18_bit_identical_under_tiling() {
+        assert_tiled_matches("resnet18", 64, 4);
+    }
+
+    #[test]
+    fn yolov2_bit_identical_under_tiling() {
+        assert_tiled_matches("yolov2", 64, 8);
+    }
+
+    #[test]
+    fn odd_tile_heights_are_bit_identical() {
+        // 5 does not divide 64 — exercises the ragged last tile.
+        assert_tiled_matches("resnet18", 64, 5);
+    }
+
+    #[test]
+    fn empty_plan_matches_reference_everywhere() {
+        let gg = analyze(&zoo::by_name("tinynet", 32).unwrap());
+        let params = Params::random(&gg, 3);
+        let mut rng = Rng::from_seed(4);
+        let input = Tensor::from_vec(Shape::new(32, 32, 3), rng.i8_vec(32 * 32 * 3));
+        let reference = Executor::new(&gg, &params).run(&input).unwrap();
+        let tiled = run_tiled(&gg, &params, &input, &TilePlan::default()).unwrap();
+        assert_eq!(reference, tiled);
+    }
+}

@@ -1,0 +1,735 @@
+//! Depth-first fused-tile streaming (the `tile` reuse-strategy family).
+//!
+//! Every other strategy in this repo schedules *whole feature-maps* per
+//! group: a group reads its entire input, computes its entire output,
+//! and only then does the next group start. Under a small SRAM budget
+//! with large inputs even the paper's cut-point reuse spills, and the
+//! Pareto front collapses onto row-streaming fallbacks. Block
+//! Convolution (arXiv 2105.08937) and Petrica et al.'s memory-efficient
+//! CNN dataflows (arXiv 2011.07317) show the escape hatch this module
+//! implements: partition a chain of fused groups *depth-first* into
+//! spatial tiles and stream one halo-padded tile through the whole
+//! chain before touching DRAM again.
+//!
+//! ```text
+//!            DRAM ──rows──▶ conv₁ ─▶ conv₂ ─▶ ⊕ ─▶ … ─▶ convₙ ──rows──▶ DRAM
+//!                            │ tile slab │     ▲ shortcut tile
+//!                            └── SRAM ───┘     │  (Buf 2, resident
+//!                               ping-pong ─────┘   across the join)
+//! ```
+//!
+//! A [`TileRegion`] is a maximal run of chained, tileable groups. Per
+//! output tile of the region's last group the executor walks the chain
+//! once; interior outputs live in two ping-pong SRAM slabs, shortcut
+//! tiles stay resident in the third buffer across the residual join,
+//! and only the region's first input and last output cross the DRAM
+//! boundary. The price is the *halo*: a `k×k` convolution needs `k-1`
+//! extra input rows per tile, so upstream tiles overlap and overlapping
+//! rows are re-read (region input) or re-computed (interior groups) —
+//! [`region_profile`] quantifies both, [`overheads`] turns them into
+//! the eq. (8)/(9) DRAM extension, and [`region_tile_buff`] into the
+//! eq. (1)–(7) SRAM extension.
+//!
+//! Weights of a region group are either held resident in SRAM for the
+//! whole frame or re-streamed once per tile through a small
+//! double-buffered chunk; the planner only streams when the re-read
+//! cost `(n_tiles − 1) · W` is cheaper than the feature-map round trip
+//! the fusion saves, and otherwise ends the region.
+//!
+//! The compile-side entry points are [`plan`] (build a [`TilePlan`] for
+//! a tile height), [`apply_overlay`] (rewrite the static allocator's
+//! per-group [`BufAssign`]s so interior tensors stay on-chip), and
+//! [`TilePlan::from_stream`] (rebuild the plan from a packed
+//! instruction stream, used by the virtual backend's traffic replay).
+//! Tiled functional execution, bit-identical to the untiled reference,
+//! lives in [`exec`].
+
+pub mod exec;
+
+use crate::alloc::{BufAssign, Loc};
+use crate::analyzer::{Group, GroupId, GroupKind, GroupedGraph, PoolKind};
+use crate::config::AccelConfig;
+use crate::funcsim::ops::same_pad;
+use crate::isa::InstructionStream;
+
+/// Candidate tile heights swept when no explicit size is requested
+/// (bounded by the 8-bit `tile_rows` instruction field).
+pub const TILE_SIZES: &[usize] = &[4, 8, 16, 32, 64];
+
+/// One depth-first fused region: groups `first..=last` execute
+/// tile-by-tile, with interior feature-maps never reaching DRAM.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileRegion {
+    /// First group of the region (its input streams from DRAM).
+    pub first: usize,
+    /// Last group, inclusive (its output streams to DRAM).
+    pub last: usize,
+    /// Output rows of `last` computed per tile iteration.
+    pub tile_rows: usize,
+    /// Per region group (`first..=last`): weights re-streamed from DRAM
+    /// once per tile instead of held resident in SRAM.
+    pub streamed_weights: Vec<bool>,
+}
+
+impl TileRegion {
+    /// Number of groups in the region.
+    pub fn len(&self) -> usize {
+        self.last - self.first + 1
+    }
+
+    /// Always false — a region holds at least two groups by
+    /// construction.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Does the region contain group index `g`?
+    pub fn contains(&self, g: usize) -> bool {
+        (self.first..=self.last).contains(&g)
+    }
+}
+
+/// A whole network's tiling decision: zero or more disjoint regions in
+/// program order. An empty plan means untiled execution — every
+/// consumer of a plan treats that case as exactly the pre-tile
+/// behaviour.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Disjoint fused regions, ascending by group index.
+    pub regions: Vec<TileRegion>,
+}
+
+impl TilePlan {
+    /// True when no region formed (untiled execution).
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    /// The region containing group `g`, if any.
+    pub fn region_of(&self, g: usize) -> Option<&TileRegion> {
+        self.regions.iter().find(|r| r.contains(g))
+    }
+
+    /// Rebuild the plan from a lowered instruction stream's tile fields
+    /// (a region is a run of `tile_rows > 0` instructions opened by
+    /// `tile_first`). This is how [`crate::engine::VirtualAccelBackend`]
+    /// recovers the schedule from a packed [`crate::program::Program`]
+    /// without any side-channel metadata.
+    pub fn from_stream(stream: &InstructionStream) -> TilePlan {
+        let instrs = &stream.instrs;
+        let mut regions = Vec::new();
+        let mut i = 0;
+        while i < instrs.len() {
+            if instrs[i].tile_rows == 0 || !instrs[i].tile_first {
+                i += 1;
+                continue;
+            }
+            let first = i;
+            let mut streamed = vec![instrs[i].tile_weight_stream];
+            let mut last = i;
+            while last + 1 < instrs.len()
+                && instrs[last + 1].tile_rows == instrs[first].tile_rows
+                && !instrs[last + 1].tile_first
+            {
+                last += 1;
+                streamed.push(instrs[last].tile_weight_stream);
+            }
+            regions.push(TileRegion {
+                first,
+                last,
+                tile_rows: instrs[first].tile_rows as usize,
+                streamed_weights: streamed,
+            });
+            i = last + 1;
+        }
+        TilePlan { regions }
+    }
+}
+
+/// Per-region row accounting at a concrete tile height, produced by
+/// [`region_profile`]. All halo/overcompute modelling — DRAM, SRAM and
+/// timing — derives from this one struct so the analytical model and
+/// the instruction-stream replay can never disagree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegionProfile {
+    /// Tile iterations over the region (`ceil(out_h(last) / tile_rows)`).
+    pub n_tiles: usize,
+    /// Total rows of the region-first group's *input* read across all
+    /// tiles (≥ `in_h`; the excess is the re-read halo).
+    pub rows_in_total: u64,
+    /// Per region group: total *output* rows computed across all tiles
+    /// (≥ `out_h`; the excess is halo overcompute).
+    pub rows_out_total: Vec<u64>,
+    /// Per region group: largest single-tile output row count — sizes
+    /// the group's SRAM tile slab.
+    pub rows_out_max: Vec<usize>,
+    /// Per region group: total rows of an *out-of-region* DRAM shortcut
+    /// operand read across all tiles (0 when the aux source is inside
+    /// the region or absent).
+    pub rows_aux_total: Vec<u64>,
+}
+
+/// Extra DRAM traffic a [`TilePlan`] adds on top of the placement-based
+/// eq. (8)/(9) accounting: halo re-reads of region inputs and
+/// out-of-region shortcut operands, and per-tile weight re-streaming.
+/// Added identically by the analytical model
+/// ([`crate::compiler::TileStreamingStrategy`]) and the traffic replay
+/// ([`crate::sim::replay`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Overheads {
+    /// Feature-map bytes re-read because consecutive tiles overlap.
+    pub halo_fm_extra: u64,
+    /// Weight bytes re-read by per-tile streaming
+    /// (`(n_tiles − 1) · W` per streamed group).
+    pub weight_extra: u64,
+}
+
+/// The second (shortcut / element-wise) operand's producing group, if
+/// any — mirrors the static allocator's aux-operand resolution.
+pub(crate) fn aux_source(gr: &Group) -> Option<GroupId> {
+    if let Some(s) = gr.shortcut_of {
+        Some(s)
+    } else if matches!(gr.kind, GroupKind::Scale | GroupKind::Concat | GroupKind::Eltwise) {
+        gr.inputs.get(1).copied()
+    } else {
+        None
+    }
+}
+
+/// Input rows `[lo, hi]` a windowed op needs to produce output rows
+/// `[a, b]`, under TF SAME padding.
+pub(crate) fn window(
+    in_h: usize,
+    out_h: usize,
+    k: usize,
+    s: usize,
+    a: usize,
+    b: usize,
+) -> (usize, usize) {
+    let pad = same_pad(in_h, out_h, k, s);
+    let lo = (a * s) as isize - pad;
+    let hi = (b * s + k - 1) as isize - pad;
+    let lo = lo.max(0) as usize;
+    let hi = (hi.max(0) as usize).min(in_h - 1);
+    (lo.min(hi), hi)
+}
+
+/// Map a group's output rows `[a, b]` back to the rows of its *main
+/// input* it must read, composing the fused pool window behind a conv
+/// when present.
+pub(crate) fn group_input_rows(gg: &GroupedGraph, gr: &Group, a: usize, b: usize) -> (usize, usize) {
+    match gr.kind {
+        GroupKind::Conv | GroupKind::DwConv => {
+            let (k, s, _) = gr.conv_geometry(&gg.graph);
+            // A fused trailing pool sits between the conv output and the
+            // group output: first map group-output rows to conv-output
+            // rows, then through the conv window.
+            let (ca, cb, conv_h) = match gr.pool {
+                Some((pk, pk_k, pk_s)) if pk != PoolKind::Global => {
+                    let conv_h = gg.graph.node(gr.main).out_shape.h;
+                    let (pa, pb) = window(conv_h, gr.out_shape.h, pk_k, pk_s, a, b);
+                    (pa, pb, conv_h)
+                }
+                _ => (a, b, gr.out_shape.h),
+            };
+            window(gr.in_shape.h, conv_h, k, s, ca, cb)
+        }
+        GroupKind::Pool => match gr.pool {
+            Some((pk, k, s)) if pk != PoolKind::Global => {
+                window(gr.in_shape.h, gr.out_shape.h, k, s, a, b)
+            }
+            _ => (a, b),
+        },
+        GroupKind::Upsample => {
+            let f = gr.upsample.unwrap_or(1).max(1);
+            (a / f, b / f)
+        }
+        // Element-wise / activation groups are pointwise in rows.
+        _ => (a, b),
+    }
+}
+
+/// Can this group participate in a depth-first tiled region?
+fn tileable(gg: &GroupedGraph, gr: &Group) -> bool {
+    if gr.se_squeeze || gr.in_shape.h * gr.in_shape.w <= 1 || gr.out_shape.h * gr.out_shape.w <= 1 {
+        return false;
+    }
+    match gr.kind {
+        GroupKind::Conv | GroupKind::DwConv => {
+            gr.upsample.is_none()
+                && !matches!(gr.pool, Some((PoolKind::Global, _, _)))
+                // pool + shortcut in one group leaves the join's spatial
+                // position ambiguous — keep those whole-frame
+                && !(gr.pool.is_some() && gr.shortcut_of.is_some())
+        }
+        GroupKind::Pool => {
+            matches!(gr.pool, Some((PoolKind::Max | PoolKind::Avg, _, _))) && gr.upsample.is_none()
+        }
+        GroupKind::Eltwise | GroupKind::Act => gr.pool.is_none() && gr.upsample.is_none(),
+        GroupKind::Upsample => gr.pool.is_none() && gr.upsample.is_some(),
+        _ => false,
+    }
+}
+
+/// Group-level consumer map including shortcut edges (a shortcut read
+/// pins its producer exactly like a data edge).
+fn consumer_map(gg: &GroupedGraph) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); gg.groups.len()];
+    for gr in &gg.groups {
+        for &i in &gr.inputs {
+            out[i.0].push(gr.id.0);
+        }
+        if let Some(s) = gr.shortcut_of {
+            out[s.0].push(gr.id.0);
+        }
+    }
+    out
+}
+
+/// Row accounting for one region: walk every tile's backward
+/// need-propagation at group granularity and total the rows each group
+/// reads/computes.
+pub fn region_profile(gg: &GroupedGraph, region: &TileRegion) -> RegionProfile {
+    let len = region.len();
+    let out_h = gg.groups[region.last].out_shape.h;
+    let t = region.tile_rows.clamp(1, out_h);
+    let mut p = RegionProfile {
+        n_tiles: 0,
+        rows_in_total: 0,
+        rows_out_total: vec![0; len],
+        rows_out_max: vec![0; len],
+        rows_aux_total: vec![0; len],
+    };
+    let mut t0 = 0;
+    while t0 < out_h {
+        let t1 = (t0 + t).min(out_h) - 1;
+        p.n_tiles += 1;
+        // Backward need-propagation: rows of each group's *output*
+        // needed to produce rows [t0, t1] of the region's last group.
+        let mut need: Vec<Option<(usize, usize)>> = vec![None; len];
+        need[len - 1] = Some((t0, t1));
+        for gi in (0..len).rev() {
+            let Some((a, b)) = need[gi] else { continue };
+            let g = region.first + gi;
+            let gr = &gg.groups[g];
+            if gi > 0 {
+                let (ia, ib) = group_input_rows(gg, gr, a, b);
+                merge(&mut need[gi - 1], ia, ib);
+            }
+            if let Some(src) = aux_source(gr) {
+                if src.0 >= region.first && src.0 < g {
+                    // shortcut operand rows == output rows (pointwise join)
+                    merge(&mut need[src.0 - region.first], a, b);
+                }
+            }
+        }
+        for gi in 0..len {
+            let Some((a, b)) = need[gi] else { continue };
+            let rows = b - a + 1;
+            p.rows_out_total[gi] += rows as u64;
+            p.rows_out_max[gi] = p.rows_out_max[gi].max(rows);
+            let gr = &gg.groups[region.first + gi];
+            if let Some(src) = aux_source(gr) {
+                if src.0 < region.first {
+                    p.rows_aux_total[gi] += rows as u64;
+                }
+            }
+        }
+        if let Some((a, b)) = need[0] {
+            let (ia, ib) = group_input_rows(gg, &gg.groups[region.first], a, b);
+            p.rows_in_total += (ib - ia + 1) as u64;
+        }
+        t0 = t1 + 1;
+    }
+    p
+}
+
+/// Merge interval `[a, b]` into an optional interval accumulator.
+fn merge(acc: &mut Option<(usize, usize)>, a: usize, b: usize) {
+    *acc = match *acc {
+        None => Some((a, b)),
+        Some((x, y)) => Some((x.min(a), y.max(b))),
+    };
+}
+
+/// SRAM bytes one region's tile working set occupies: resident weights,
+/// the streamed-weight chunk double-buffer, two ping-pong activation
+/// slabs, and shortcut tiles held resident across their joins. This is
+/// the `tile_buff` term [`crate::optimizer::sram_size_tiled`] adds to
+/// equations (1)–(7).
+pub fn region_tile_buff(gg: &GroupedGraph, cfg: &AccelConfig, region: &TileRegion) -> usize {
+    let p = region_profile(gg, region);
+    let len = region.len();
+    let mut is_aux_src = vec![false; len];
+    for gi in 0..len {
+        if let Some(src) = aux_source(&gg.groups[region.first + gi]) {
+            if src.0 >= region.first && src.0 < region.first + gi {
+                is_aux_src[src.0 - region.first] = true;
+            }
+        }
+    }
+    let mut resident_weights = 0usize;
+    let mut stream_chunk = 0usize;
+    let mut slab_max = 0usize;
+    let mut resident_slabs = 0usize;
+    for gi in 0..len {
+        let gr = &gg.groups[region.first + gi];
+        let wb = gr.weight_bytes(&gg.graph, cfg.qw as u64) as usize;
+        if region.streamed_weights[gi] {
+            let (k, _, _) = gr.conv_geometry(&gg.graph);
+            // double-buffered Ti×To weight chunk, capped at 2× the layer
+            stream_chunk = stream_chunk.max((2 * k * k * cfg.ti * cfg.to * cfg.qw).min(2 * wb));
+        } else {
+            resident_weights += wb;
+        }
+        let slab = p.rows_out_max[gi] * gr.out_shape.w * gr.out_shape.c * cfg.qa;
+        if is_aux_src[gi] {
+            resident_slabs += slab;
+        } else {
+            slab_max = slab_max.max(slab);
+        }
+    }
+    resident_weights + stream_chunk + 2 * slab_max + resident_slabs
+}
+
+/// Largest per-region tile working set of the plan (the whole-network
+/// `tile_buff`); 0 for an empty plan.
+pub fn tile_buff(gg: &GroupedGraph, cfg: &AccelConfig, plan: &TilePlan) -> usize {
+    plan.regions.iter().map(|r| region_tile_buff(gg, cfg, r)).max().unwrap_or(0)
+}
+
+/// DRAM overheads of the plan (see [`Overheads`]).
+pub fn overheads(gg: &GroupedGraph, cfg: &AccelConfig, plan: &TilePlan) -> Overheads {
+    let qa = cfg.qa as u64;
+    let mut o = Overheads::default();
+    for region in &plan.regions {
+        let p = region_profile(gg, region);
+        let first = &gg.groups[region.first];
+        let in_row = (first.in_shape.w * first.in_shape.c) as u64 * qa;
+        o.halo_fm_extra +=
+            (p.rows_in_total * in_row).saturating_sub(first.in_shape.bytes(cfg.qa) as u64);
+        for gi in 0..region.len() {
+            let gr = &gg.groups[region.first + gi];
+            if p.rows_aux_total[gi] > 0 {
+                let row = (gr.out_shape.w * gr.out_shape.c) as u64 * qa;
+                o.halo_fm_extra +=
+                    (p.rows_aux_total[gi] * row).saturating_sub(gr.out_shape.bytes(cfg.qa) as u64);
+            }
+            if region.streamed_weights[gi] && p.n_tiles > 1 {
+                o.weight_extra += (p.n_tiles as u64 - 1) * gr.weight_bytes(&gg.graph, cfg.qw as u64);
+            }
+        }
+    }
+    o
+}
+
+/// Rewrite an all-Row allocation so each region's interior tensors live
+/// on-chip: interior outputs ping-pong between Buf 0/1 (shortcut
+/// sources park in Buf 2 until their join), interior inputs read the
+/// producer's slab, and only the region's first input / last output
+/// keep their DRAM placement. Applied between `alloc::allocate` and
+/// `alloc::layout`, so the off-chip arena also shrinks.
+pub fn apply_overlay(assigns: &mut [BufAssign], gg: &GroupedGraph, plan: &TilePlan) {
+    for region in &plan.regions {
+        let len = region.len();
+        let mut is_aux_src = vec![false; len];
+        for gi in 0..len {
+            if let Some(src) = aux_source(&gg.groups[region.first + gi]) {
+                if src.0 >= region.first && src.0 < region.first + gi {
+                    is_aux_src[src.0 - region.first] = true;
+                }
+            }
+        }
+        for g in region.first..=region.last {
+            let gi = g - region.first;
+            if g < region.last {
+                assigns[g].out_loc =
+                    if is_aux_src[gi] { Loc::Buf(2) } else { Loc::Buf((gi % 2) as u8) };
+                assigns[g].also_dram = false;
+            }
+            if g > region.first {
+                assigns[g].in_loc = assigns[g - 1].out_loc;
+            }
+            if let Some(src) = aux_source(&gg.groups[g]) {
+                if src.0 >= region.first && src.0 < g {
+                    assigns[g].aux_loc = Some(assigns[src.0].out_loc);
+                }
+            }
+            assigns[g].staged_input = false;
+        }
+    }
+}
+
+/// Build a [`TilePlan`] for one tile height: grow maximal chained runs
+/// of tileable groups, then shrink each run until (a) its tile working
+/// set fits `cfg.sram_budget`, (b) no interior output escapes the
+/// region, and (c) every streamed-weight group's re-read cost is below
+/// the feature-map traffic its fusion saves. Runs that end up with
+/// fewer than two convolution members are dropped (no traffic to save).
+pub fn plan(gg: &GroupedGraph, cfg: &AccelConfig, tile_rows: usize) -> TilePlan {
+    let t = tile_rows.clamp(1, 255);
+    let n = gg.groups.len();
+    let consumers = consumer_map(gg);
+    let mut regions = Vec::new();
+    let mut g = 0;
+    while g < n {
+        if !tileable(gg, &gg.groups[g]) {
+            g += 1;
+            continue;
+        }
+        let first = g;
+        let mut end = g;
+        while end + 1 < n
+            && tileable(gg, &gg.groups[end + 1])
+            && gg.groups[end + 1].inputs.first().copied() == Some(GroupId(end))
+        {
+            end += 1;
+        }
+        match carve_region(gg, cfg, &consumers, first, end, t) {
+            Some(region) => {
+                g = region.last + 1;
+                regions.push(region);
+            }
+            None => g = first + 1,
+        }
+    }
+    TilePlan { regions }
+}
+
+/// Candidate region with the greedy weight-residency split: weights stay
+/// resident until half the SRAM budget is spoken for, later groups
+/// stream per tile.
+fn probe(gg: &GroupedGraph, cfg: &AccelConfig, first: usize, last: usize, t: usize) -> TileRegion {
+    let mut streamed = Vec::with_capacity(last - first + 1);
+    let mut resident = 0usize;
+    for g in first..=last {
+        let wb = gg.groups[g].weight_bytes(&gg.graph, cfg.qw as u64) as usize;
+        if wb > 0 && resident + wb <= cfg.sram_budget / 2 {
+            resident += wb;
+            streamed.push(false);
+        } else {
+            streamed.push(wb > 0);
+        }
+    }
+    TileRegion { first, last, tile_rows: t, streamed_weights: streamed }
+}
+
+enum Trim {
+    Ok(TileRegion),
+    Shrink(usize),
+}
+
+fn step_trim(
+    gg: &GroupedGraph,
+    cfg: &AccelConfig,
+    consumers: &[Vec<usize>],
+    first: usize,
+    last: usize,
+    t: usize,
+) -> Trim {
+    let region = probe(gg, cfg, first, last, t);
+    // (a) the tile working set must fit the budget
+    if region_tile_buff(gg, cfg, &region) > cfg.sram_budget {
+        return Trim::Shrink(last - 1);
+    }
+    // (b) interior outputs never materialize in DRAM, so any interior
+    // group with a consumer beyond the region must become a region end
+    if let Some(bad) = (first..last).find(|&x| consumers[x].iter().any(|&c| c > last)) {
+        return Trim::Shrink(bad);
+    }
+    // (c) weight streaming must pay for itself
+    let p = region_profile(gg, &region);
+    if p.n_tiles > 1 {
+        for gi in 0..region.len() {
+            if !region.streamed_weights[gi] {
+                continue;
+            }
+            let gr = &gg.groups[region.first + gi];
+            let extra = (p.n_tiles as u64 - 1) * gr.weight_bytes(&gg.graph, cfg.qw as u64);
+            let fm = (gr.in_shape.bytes(cfg.qa) + gr.out_shape.bytes(cfg.qa)) as u64;
+            if extra >= fm {
+                // Truncate just before the group whose weights cannot
+                // stream profitably; carve_region drops the region if
+                // nothing is left.
+                return Trim::Shrink((region.first + gi).saturating_sub(1));
+            }
+        }
+    }
+    Trim::Ok(region)
+}
+
+fn carve_region(
+    gg: &GroupedGraph,
+    cfg: &AccelConfig,
+    consumers: &[Vec<usize>],
+    first: usize,
+    mut last: usize,
+    t: usize,
+) -> Option<TileRegion> {
+    loop {
+        if last <= first {
+            return None;
+        }
+        match step_trim(gg, cfg, consumers, first, last, t) {
+            Trim::Ok(region) => {
+                let convs = (region.first..=region.last)
+                    .filter(|&x| matches!(gg.groups[x].kind, GroupKind::Conv | GroupKind::DwConv))
+                    .count();
+                return if convs >= 2 { Some(region) } else { None };
+            }
+            Trim::Shrink(l) => {
+                if l >= last {
+                    return None; // no progress — give up on this run
+                }
+                last = l;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::analyze;
+    use crate::isa::ReuseMode;
+    use crate::zoo;
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::kcu1500_int8()
+    }
+
+    #[test]
+    fn resnet18_forms_fused_regions() {
+        let gg = analyze(&zoo::resnet18(224));
+        let p = plan(&gg, &cfg(), 8);
+        assert!(!p.is_empty(), "resnet18 must form at least one region");
+        for r in &p.regions {
+            assert!(r.len() >= 2);
+            assert_eq!(r.streamed_weights.len(), r.len());
+        }
+    }
+
+    #[test]
+    fn regions_are_disjoint_and_chained() {
+        for model in ["resnet18", "vgg16-conv", "yolov3"] {
+            let gg = analyze(&zoo::by_name(model, 224).unwrap());
+            let p = plan(&gg, &cfg(), 16);
+            let mut prev_end: Option<usize> = None;
+            for r in &p.regions {
+                if let Some(e) = prev_end {
+                    assert!(r.first > e, "{model}: overlapping regions");
+                }
+                prev_end = Some(r.last);
+                for g in r.first + 1..=r.last {
+                    assert_eq!(
+                        gg.groups[g].inputs.first().copied(),
+                        Some(GroupId(g - 1)),
+                        "{model}: region group {g} breaks the chain"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interior_consumers_stay_inside_regions() {
+        let gg = analyze(&zoo::yolov3(416));
+        let p = plan(&gg, &cfg(), 16);
+        let consumers = consumer_map(&gg);
+        assert!(!p.is_empty());
+        for r in &p.regions {
+            for g in r.first..r.last {
+                for &c in &consumers[g] {
+                    assert!(c <= r.last, "interior output of group {g} escapes to {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_tile_plan_has_zero_overheads() {
+        let gg = analyze(&zoo::resnet18(224));
+        let mut p = plan(&gg, &cfg(), 8);
+        assert!(!p.is_empty());
+        // Force every region to one tile covering the full frame.
+        for r in &mut p.regions {
+            r.tile_rows = 255;
+        }
+        let o = overheads(&gg, &cfg(), &p);
+        assert_eq!(o.halo_fm_extra, 0, "full-frame tile re-reads nothing");
+        assert_eq!(o.weight_extra, 0, "single tile streams weights once");
+    }
+
+    #[test]
+    fn halo_shrinks_monotonically_toward_full_frame() {
+        // Fixed regions, growing tile height: the re-read halo must
+        // shrink to zero as the tile approaches the whole feature-map
+        // (the tile cost model degenerates to the whole-frame model).
+        let gg = analyze(&zoo::vgg16_conv(224));
+        let base = plan(&gg, &cfg(), 4);
+        assert!(!base.is_empty());
+        let mut prev = u64::MAX;
+        for t in [4usize, 8, 16, 32, 64, 255] {
+            let mut p = base.clone();
+            for r in &mut p.regions {
+                r.tile_rows = t;
+            }
+            let o = overheads(&gg, &cfg(), &p);
+            assert!(o.halo_fm_extra <= prev, "halo grew from {prev} at tile {t}");
+            prev = o.halo_fm_extra;
+        }
+        assert_eq!(prev, 0, "255-row tiles cover every zoo frame at 224px");
+    }
+
+    #[test]
+    fn overlay_keeps_interior_tensors_on_chip() {
+        let gg = analyze(&zoo::resnet18(224));
+        let c = cfg();
+        let p = plan(&gg, &c, 8);
+        assert!(!p.is_empty());
+        let policy = vec![ReuseMode::Row; gg.groups.len()];
+        let mut alloc = crate::alloc::allocate(&gg, &policy, &c);
+        apply_overlay(&mut alloc.assigns, &gg, &p);
+        for r in &p.regions {
+            assert_eq!(alloc.assigns[r.first].in_loc, Loc::Dram, "region input streams from DRAM");
+            assert_eq!(alloc.assigns[r.last].out_loc, Loc::Dram, "region output streams to DRAM");
+            for g in r.first..r.last {
+                assert!(
+                    matches!(alloc.assigns[g].out_loc, Loc::Buf(_)),
+                    "interior output of {g} must stay on-chip"
+                );
+                assert_eq!(alloc.assigns[g + 1].in_loc, alloc.assigns[g].out_loc);
+            }
+        }
+    }
+
+    #[test]
+    fn budget_bounds_the_tile_working_set() {
+        let mut small = cfg();
+        small.sram_budget = 1_000_000;
+        let gg = analyze(&zoo::vgg16_conv(224));
+        let p = plan(&gg, &small, 8);
+        assert!(!p.is_empty(), "vgg16 must still tile under 1 MB");
+        for r in &p.regions {
+            assert!(
+                region_tile_buff(&gg, &small, r) <= small.sram_budget,
+                "region [{}..={}] overflows the budget",
+                r.first,
+                r.last
+            );
+        }
+    }
+
+    #[test]
+    fn window_math_matches_same_padding() {
+        // 3×3 stride-1 SAME on 8 rows: out row 0 needs in rows 0..=1,
+        // out rows 3..=4 need 2..=5, the last row needs 6..=7.
+        assert_eq!(window(8, 8, 3, 1, 0, 0), (0, 1));
+        assert_eq!(window(8, 8, 3, 1, 3, 4), (2, 5));
+        assert_eq!(window(8, 8, 3, 1, 7, 7), (6, 7));
+        // stride-2: out rows 0..=1 need in rows 0..=3 (pad trims row -1)
+        assert_eq!(window(8, 4, 3, 2, 0, 1), (0, 3));
+        // pointwise stride-2 downsample (1×1 s2) skips odd rows
+        assert_eq!(window(8, 4, 1, 2, 1, 2), (2, 4));
+    }
+}

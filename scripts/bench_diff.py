@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_*.json snapshots and fail on regressions.
+
+Usage:
+    bench_diff.py BASELINE CURRENT [--threshold 0.10] [--ignore REGEX]
+
+Walks both JSON documents, collects every numeric leaf under a dotted
+path (list indices become path segments), and compares the values that
+exist on both sides.  A leaf whose relative change exceeds the
+threshold is a regression; a baseline leaf missing from the current
+snapshot is one too (a silently dropped metric is how trajectories rot).
+Leaves whose path matches --ignore are skipped — use it for wall-clock
+metrics (p50/p95, throughput) that are noise on shared CI runners,
+while the modeled numbers (DRAM bytes, SRAM bytes, analytical latency)
+stay strict.
+
+Only the standard library is used: the repo builds with no crates.io or
+PyPI access, and this script honours the same constraint.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+
+def leaves(node, prefix=""):
+    """Yield (dotted_path, value) for every numeric leaf under node."""
+    if isinstance(node, bool):
+        return
+    if isinstance(node, (int, float)):
+        yield prefix, float(node)
+    elif isinstance(node, dict):
+        for key in sorted(node):
+            yield from leaves(node[key], f"{prefix}.{key}" if prefix else str(key))
+    elif isinstance(node, list):
+        for i, item in enumerate(node):
+            yield from leaves(item, f"{prefix}[{i}]")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max allowed relative change per metric (default 0.10)")
+    ap.add_argument("--ignore", default=None,
+                    help="regex of metric paths to skip (noisy wall-clock stats)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = dict(leaves(json.load(f)))
+    with open(args.current) as f:
+        cur = dict(leaves(json.load(f)))
+
+    skip = re.compile(args.ignore) if args.ignore else None
+    regressions = []
+    checked = 0
+    for path, old in sorted(base.items()):
+        if skip and skip.search(path):
+            continue
+        if path not in cur:
+            regressions.append(f"{path}: present in baseline, missing now")
+            continue
+        checked += 1
+        new = cur[path]
+        if old == new:
+            continue
+        rel = abs(new - old) / max(abs(old), 1e-12)
+        if rel > args.threshold:
+            regressions.append(
+                f"{path}: {old:g} -> {new:g} ({rel:+.1%} > {args.threshold:.0%})")
+
+    for line in regressions:
+        print(f"REGRESSION {line}")
+    print(f"bench_diff: {checked} metrics compared against {args.baseline}, "
+          f"{len(regressions)} regression(s)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
