@@ -1,11 +1,14 @@
 //! Batched serving throughput of the `InferenceEngine`.
 //!
 //! Packs ResNet18@64 once, then serves waves of requests through the
-//! virtual-accelerator backend while sweeping the worker count and batch
-//! size. Reported numbers: wall-clock request throughput of the serving
-//! stack itself, plus the timing model's per-request latency percentiles
-//! (which are worker-independent — the hardware model prices a single
-//! accelerator instance per worker).
+//! virtual-accelerator backend while sweeping the worker count, batch
+//! size and batch-formation policy (continuous joins vs the pre-0.9
+//! fixed window), with a bursty-arrival pattern so continuous batching
+//! has gaps to span. Reported numbers: wall-clock request throughput of
+//! the serving stack itself, the timing model's per-request latency
+//! percentiles (which are worker-independent — the hardware model prices
+//! a single accelerator instance per worker), and the scheduler's
+//! mid-batch join count.
 //!
 //! Run: `cargo bench --bench serving` (or `cargo run --release --bin ...`
 //! style via the harness-free bench target).
@@ -16,7 +19,9 @@ use std::time::Instant;
 use shortcutfusion::bench::Table;
 use shortcutfusion::compiler::Compiler;
 use shortcutfusion::config::AccelConfig;
-use shortcutfusion::engine::{EngineConfig, InferenceEngine, VirtualAccelBackend};
+use shortcutfusion::engine::{
+    BatchPolicy, EngineConfig, InferenceEngine, VirtualAccelBackend,
+};
 use shortcutfusion::funcsim::Tensor;
 use shortcutfusion::program::Program;
 use shortcutfusion::testutil::Rng;
@@ -45,8 +50,13 @@ fn main() {
     }
 
     let mut t = Table::new(
-        &format!("serving {} ({} requests, virtual accelerator)", program.model(), requests),
+        &format!(
+            "serving {} ({} requests in bursts of 8, virtual accelerator)",
+            program.model(),
+            requests
+        ),
         &[
+            "policy",
             "workers",
             "batch",
             "wall ms",
@@ -55,37 +65,53 @@ fn main() {
             "p95 ms",
             "peak in-flight",
             "batches",
+            "joins",
         ],
     );
 
-    for &workers in &[1usize, 2, 4] {
-        for &batch in &[1usize, 4, 8] {
-            let engine = InferenceEngine::new(
-                program.clone(),
-                Arc::new(VirtualAccelBackend),
-                EngineConfig { workers, queue_capacity: 32, max_batch: batch },
-            );
-            let t0 = Instant::now();
-            let pending: Vec<_> = inputs
-                .iter()
-                .map(|i| engine.submit(i.clone()).expect("submit"))
-                .collect();
-            for p in pending {
-                p.wait().expect("wait");
+    for &policy in &[BatchPolicy::Continuous, BatchPolicy::Window] {
+        for &workers in &[1usize, 2, 4] {
+            for &batch in &[1usize, 4, 8] {
+                let engine = InferenceEngine::new(
+                    program.clone(),
+                    Arc::new(VirtualAccelBackend),
+                    EngineConfig {
+                        workers,
+                        queue_capacity: 32,
+                        max_batch: batch,
+                        policy,
+                        deadline_ms: None,
+                    },
+                );
+                let t0 = Instant::now();
+                let mut pending = Vec::with_capacity(requests);
+                for (i, input) in inputs.iter().enumerate() {
+                    // bursty arrivals: 8 back to back, then a breather —
+                    // the traffic shape where mid-batch joins matter
+                    if i > 0 && i % 8 == 0 {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                    pending.push(engine.submit(input.clone()).expect("submit"));
+                }
+                for p in pending {
+                    p.wait().expect("wait");
+                }
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let stats = engine.shutdown();
+                assert_eq!(stats.completed, requests as u64);
+                t.row(&[
+                    stats.policy.to_string(),
+                    workers.to_string(),
+                    batch.to_string(),
+                    format!("{wall_ms:.2}"),
+                    format!("{:.0}", requests as f64 / (wall_ms / 1e3)),
+                    format!("{:.3}", stats.p50_ms),
+                    format!("{:.3}", stats.p95_ms),
+                    stats.peak_in_flight.to_string(),
+                    stats.batches.to_string(),
+                    stats.joined.to_string(),
+                ]);
             }
-            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-            let stats = engine.shutdown();
-            assert_eq!(stats.completed, requests as u64);
-            t.row(&[
-                workers.to_string(),
-                batch.to_string(),
-                format!("{wall_ms:.2}"),
-                format!("{:.0}", requests as f64 / (wall_ms / 1e3)),
-                format!("{:.3}", stats.p50_ms),
-                format!("{:.3}", stats.p95_ms),
-                stats.peak_in_flight.to_string(),
-                stats.batches.to_string(),
-            ]);
         }
     }
     t.print();

@@ -153,7 +153,7 @@ fn serve_demo() -> shortcutfusion::Result<()> {
     let engine = InferenceEngine::new(
         program.clone(),
         Arc::new(VirtualAccelBackend),
-        EngineConfig { workers: 2, queue_capacity: 16, max_batch: 4 },
+        EngineConfig { workers: 2, queue_capacity: 16, max_batch: 4, ..EngineConfig::default() },
     );
     let pending: Vec<_> = (0..16)
         .map(|i| {

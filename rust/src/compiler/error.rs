@@ -59,6 +59,26 @@ pub enum CompileError {
     /// Functionality compiled out of this build (e.g. the PJRT runtime
     /// without the `pjrt` feature).
     Unsupported(String),
+    /// Serving backpressure: the engine's admission controller turned
+    /// the request away instead of silently blocking. Carries the
+    /// observed load and a retry-after hint so callers can shed or
+    /// reschedule (see [`crate::engine::Rejection`]).
+    Rejected {
+        /// Queue depth plus backend-reported pending load at rejection.
+        depth: usize,
+        /// Earliest absolute deadline among queued requests, on the
+        /// engine's clock (`None` when no queued request carries one).
+        deadline_ms: Option<f64>,
+    },
+    /// A serving request's deadline passed before it finished: it was
+    /// dropped unexecuted (queued or at dispatch). Counted in
+    /// [`crate::engine::EngineStats::deadline_misses`].
+    DeadlineMiss {
+        /// The request's absolute deadline on the engine's clock.
+        deadline_ms: f64,
+        /// The clock reading when the miss was detected.
+        now_ms: f64,
+    },
 }
 
 impl CompileError {
@@ -131,6 +151,19 @@ impl fmt::Display for CompileError {
             CompileError::Exec(m) => write!(f, "execution error: {m}"),
             CompileError::Artifact(m) => write!(f, "program artifact error: {m}"),
             CompileError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            CompileError::Rejected { depth, deadline_ms } => {
+                write!(f, "backpressure: request rejected at queue depth {depth}")?;
+                if let Some(d) = deadline_ms {
+                    write!(f, " (earliest queued deadline {d:.3} ms)")?;
+                }
+                Ok(())
+            }
+            CompileError::DeadlineMiss { deadline_ms, now_ms } => write!(
+                f,
+                "deadline miss: request expired {:.3} ms past its {deadline_ms:.3} ms \
+                 deadline before execution",
+                now_ms - deadline_ms
+            ),
         }
     }
 }

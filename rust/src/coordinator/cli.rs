@@ -8,11 +8,14 @@
 //!                        [--params FILE | --random-params] --out FILE
 //! shortcutfusion run     FILE [--backend B] [--seed N]
 //! shortcutfusion serve-bench FILE [--backend B] [--requests N] [--workers N]
-//!                        [--batch N] [--queue N] [--json-out FILE]
+//!                        [--batch N] [--queue N] [--batch-policy continuous|window]
+//!                        [--deadline-ms X] [--max-deadline-misses N] [--burst N]
+//!                        [--burst-gap-ms X] [--json-out FILE]
 //! shortcutfusion serve-zoo <model> [<model> ...] [--input N] [--config FILE]
 //!                        [--backend B] [--pool-mb X] [--policy P] [--quota-mb X]
 //!                        [--link-gbps X] [--link-latency-us X] [--rounds N]
 //!                        [--requests N] [--workers N] [--batch N]
+//!                        [--batch-policy continuous|window] [--deadline-ms X]
 //!                        [--random-params] [--verify] [--json-out FILE]
 //!                        [--expect-evictions]
 //! shortcutfusion explore <model> [...] [--sram-budgets N,N] [--mac RxC,...]
@@ -44,8 +47,8 @@ use crate::bench::Table;
 use crate::compiler::{strategy, CompileError, Compiler, Session};
 use crate::config::AccelConfig;
 use crate::engine::{
-    backend_by_name, EngineConfig, EngineStats, ExecutionBackend, InferenceEngine,
-    ReferenceBackend, BACKEND_NAMES,
+    backend_by_name, BatchPolicy, EngineConfig, EngineStats, ExecutionBackend,
+    InferenceEngine, ReferenceBackend, BACKEND_NAMES,
 };
 use crate::explorer::{ExplorePoint, Exploration, SearchSpace};
 use crate::funcsim::{Params, Tensor};
@@ -74,14 +77,22 @@ COMMANDS:
     run FILE [--backend B] [--seed N]
                                  execute a packed program once
     serve-bench FILE [--backend B] [--requests N] [--workers N] [--batch N] [--queue N]
+                [--batch-policy continuous|window] [--deadline-ms X]
+                [--max-deadline-misses N] [--burst N] [--burst-gap-ms X]
                 [--json-out FILE]
                                  serve a packed program through the inference
-                                 engine and print the serving stats (--json-out
-                                 additionally writes them as machine-readable JSON)
+                                 engine and print the serving stats (--burst
+                                 submits in bursts of N separated by
+                                 --burst-gap-ms; --deadline-ms sets a per-request
+                                 SLO; --max-deadline-misses exits nonzero when
+                                 the engine missed more deadlines than allowed;
+                                 --json-out additionally writes the stats as
+                                 machine-readable JSON)
     serve-zoo <model> [<model> ...] [--input N] [--config FILE] [--backend B]
               [--pool-mb X] [--policy P] [--quota-mb X] [--link-gbps X]
               [--link-latency-us X] [--rounds N] [--requests N] [--workers N]
-              [--batch N] [--random-params] [--verify] [--json-out FILE]
+              [--batch N] [--batch-policy continuous|window] [--deadline-ms X]
+              [--random-params] [--verify] [--json-out FILE]
               [--expect-evictions]
                                  serve several models through one multi-tenant
                                  device-DRAM buffer pool, one engine + tenant per
@@ -429,29 +440,52 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     let workers = parse_count(args, "--workers", 2)?;
     let max_batch = parse_count(args, "--batch", 4)?;
     let queue_capacity = parse_count(args, "--queue", workers * max_batch * 2)?;
+    let policy = parse_batch_policy(args)?;
+    let deadline_ms = flag_value(args, "--deadline-ms")
+        .map(|v| match v.parse::<f64>() {
+            Ok(d) if d > 0.0 => Ok(d),
+            _ => Err(CompileError::config(format!(
+                "bad --deadline-ms {v:?} (need a positive number of milliseconds)"
+            ))),
+        })
+        .transpose()?;
+    // bursty arrivals: submit `burst` back to back, then pause, so the
+    // continuous scheduler's mid-batch joins actually have gaps to span
+    let burst = parse_count(args, "--burst", 0)?;
+    let burst_gap_ms = parse_float(args, "--burst-gap-ms", 2.0)?;
 
     let engine = InferenceEngine::new(
         program.clone(),
         backend,
-        EngineConfig { workers, queue_capacity, max_batch },
+        EngineConfig { workers, queue_capacity, max_batch, policy, deadline_ms },
     );
     let mut pending = Vec::with_capacity(requests);
     for i in 0..requests {
+        if burst > 0 && i > 0 && i % burst == 0 && burst_gap_ms > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(burst_gap_ms / 1e3));
+        }
         pending.push(engine.submit(program_input(&program, i as u64))?);
     }
     for p in pending {
-        p.wait()?;
+        match p.wait() {
+            Ok(_) => {}
+            // a missed deadline is a counted outcome here, not an abort —
+            // the --max-deadline-misses gate decides the exit status
+            Err(CompileError::DeadlineMiss { .. }) => {}
+            Err(e) => return Err(e),
+        }
     }
     let stats = engine.shutdown();
 
     let mut t = Table::new(
         &format!(
-            "serving {} via {} ({} workers, batch {}, queue {})",
+            "serving {} via {} ({} workers, batch {}, queue {}, {} batching)",
             program.model(),
             stats.backend,
             workers,
             max_batch,
-            queue_capacity
+            queue_capacity,
+            stats.policy,
         ),
         &["metric", "value"],
     );
@@ -462,6 +496,9 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     t.row(&["mean queue wait".into(), format!("{:.3} ms", stats.mean_wait_ms)]);
     t.row(&["peak in-flight".into(), stats.peak_in_flight.to_string()]);
     t.row(&["batches".into(), format!("{} (largest {})", stats.batches, stats.max_batch_seen)]);
+    t.row(&["mid-batch joins".into(), stats.joined.to_string()]);
+    t.row(&["rejected / deadline misses".into(),
+        format!("{} / {}", stats.rejected, stats.deadline_misses)]);
     t.row(&[
         "per-worker completions".into(),
         format!("{:?}", stats.per_worker),
@@ -471,7 +508,30 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
         // machine-readable stats for CI bench-trajectory files
         write_json(&path, &engine_stats_json(&stats))?;
     }
+    if let Some(limit) = flag_value(args, "--max-deadline-misses") {
+        let limit: u64 = limit.parse().map_err(|_| {
+            CompileError::config(format!("bad --max-deadline-misses {limit:?} (need a count)"))
+        })?;
+        if stats.deadline_misses > limit {
+            return Err(CompileError::Exec(format!(
+                "--max-deadline-misses: {} deadline misses exceed the allowed {limit}",
+                stats.deadline_misses
+            )));
+        }
+    }
     Ok(())
+}
+
+/// Parse the `--batch-policy` flag (default: continuous).
+fn parse_batch_policy(args: &[String]) -> Result<BatchPolicy> {
+    match flag_value(args, "--batch-policy") {
+        None => Ok(BatchPolicy::Continuous),
+        Some(v) => BatchPolicy::by_name(&v).ok_or_else(|| {
+            CompileError::config(format!(
+                "unknown --batch-policy {v:?} — one of continuous, window"
+            ))
+        }),
+    }
 }
 
 /// Parse an optional `--flag MB` value into bytes.
@@ -556,6 +616,15 @@ fn cmd_serve_zoo(args: &[String]) -> Result<()> {
     let requests = parse_count(args, "--requests", 4)?;
     let workers = parse_count(args, "--workers", 2)?;
     let max_batch = parse_count(args, "--batch", 2)?;
+    let batch_policy = parse_batch_policy(args)?;
+    let deadline_ms = flag_value(args, "--deadline-ms")
+        .map(|v| match v.parse::<f64>() {
+            Ok(d) if d > 0.0 => Ok(d),
+            _ => Err(CompileError::config(format!(
+                "bad --deadline-ms {v:?} (need a positive number of milliseconds)"
+            ))),
+        })
+        .transpose()?;
     let engines: Vec<InferenceEngine> = programs
         .iter()
         .map(|p| {
@@ -566,6 +635,8 @@ fn cmd_serve_zoo(args: &[String]) -> Result<()> {
                     workers,
                     queue_capacity: workers * max_batch * 2,
                     max_batch,
+                    policy: batch_policy,
+                    deadline_ms,
                 },
             )
         })
@@ -708,10 +779,13 @@ fn engine_stats_json(stats: &EngineStats) -> crate::serialize::Json {
     use crate::serialize::Json;
     Json::obj(vec![
         ("backend", Json::str(stats.backend)),
+        ("policy", Json::str(stats.policy)),
         ("submitted", Json::num(stats.submitted as f64)),
         ("completed", Json::num(stats.completed as f64)),
         ("failed", Json::num(stats.failed as f64)),
         ("rejected", Json::num(stats.rejected as f64)),
+        ("deadline_misses", Json::num(stats.deadline_misses as f64)),
+        ("joined", Json::num(stats.joined as f64)),
         ("queue_depth", Json::num(stats.queue_depth as f64)),
         ("in_flight", Json::num(stats.in_flight as f64)),
         ("peak_in_flight", Json::num(stats.peak_in_flight as f64)),

@@ -1,0 +1,128 @@
+//! Serving time source: one [`Clock`] trait with a monotonic wall-clock
+//! implementation and a deterministic, manually-advanced [`VirtualClock`]
+//! for scheduler tests.
+//!
+//! Every timestamp the serving stack takes — enqueue times, queue-wait
+//! accounting, per-request deadlines — goes through the engine's clock,
+//! so swapping in a [`VirtualClock`] makes batch formation, deadline
+//! expiry and backpressure onset unit-testable without sleeps or flaky
+//! wall-clock timing: the test *sets* the time and observes exactly what
+//! the scheduler does at that instant.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A monotonic millisecond time source for the serving stack.
+///
+/// The epoch is arbitrary (per-clock); only differences between two
+/// `now_ms` readings of the *same* clock are meaningful. Implementations
+/// must be monotonic: a later call never returns a smaller value.
+pub trait Clock: Send + Sync {
+    /// Milliseconds since this clock's epoch.
+    fn now_ms(&self) -> f64;
+}
+
+/// Wall-clock [`Clock`]: milliseconds since the clock was created,
+/// measured with [`std::time::Instant`]. The default for
+/// [`crate::engine::InferenceEngine`].
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl RealClock {
+    /// A real-time clock whose epoch is "now".
+    pub fn new() -> RealClock {
+        RealClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        RealClock::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Deterministic test [`Clock`]: time stands still until the test
+/// advances it.
+///
+/// ```
+/// use shortcutfusion::engine::{Clock, VirtualClock};
+/// let clock = VirtualClock::new();
+/// assert_eq!(clock.now_ms(), 0.0);
+/// clock.advance_ms(5.0);
+/// assert_eq!(clock.now_ms(), 5.0);
+/// ```
+pub struct VirtualClock {
+    ms: Mutex<f64>,
+}
+
+impl VirtualClock {
+    /// A virtual clock starting at 0 ms.
+    pub fn new() -> VirtualClock {
+        VirtualClock { ms: Mutex::new(0.0) }
+    }
+
+    /// Move time forward by `ms` (negative or non-finite steps are
+    /// ignored — the clock stays monotonic no matter what a test does).
+    pub fn advance_ms(&self, ms: f64) {
+        if ms.is_finite() && ms > 0.0 {
+            *self.ms.lock().unwrap() += ms;
+        }
+    }
+
+    /// Jump to an absolute time, clamped to never run backwards.
+    pub fn set_ms(&self, ms: f64) {
+        let mut now = self.ms.lock().unwrap();
+        if ms.is_finite() && ms > *now {
+            *now = ms;
+        }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ms(&self) -> f64 {
+        *self.ms.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_is_monotonic() {
+        let c = RealClock::new();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn virtual_clock_only_moves_when_told() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance_ms(2.5);
+        assert_eq!(c.now_ms(), 2.5);
+        c.set_ms(10.0);
+        assert_eq!(c.now_ms(), 10.0);
+        // monotonicity guards: backwards jumps and garbage are ignored
+        c.set_ms(4.0);
+        c.advance_ms(-3.0);
+        c.advance_ms(f64::NAN);
+        assert_eq!(c.now_ms(), 10.0);
+    }
+}

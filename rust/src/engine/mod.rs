@@ -42,18 +42,32 @@
 //! ```
 //!
 //! [`InferenceEngine`] serves concurrent requests against one program:
-//! bounded submission queue, per-program request batching, worker threads
-//! per backend instance, and [`EngineStats`] (throughput, p50/p95 latency
-//! from the timing model, queue depth).
+//! an event-driven continuous-batching core (arrivals join a worker's
+//! in-flight batch at execution boundaries — [`BatchPolicy::Continuous`];
+//! the pre-0.9 fixed window survives as [`BatchPolicy::Window`]),
+//! queue-depth-aware admission with typed backpressure, per-request
+//! deadlines, and [`EngineStats`] (throughput, p50/p95 latency from the
+//! timing model, queue depth, deadline misses). All scheduling decisions
+//! live in the deterministic [`Scheduler`] state machine, timestamped by
+//! a [`Clock`] — the wall-clock [`RealClock`] in production, the
+//! manually-advanced [`VirtualClock`] in tests.
 
 mod backends;
+mod clock;
+mod scheduler;
 mod serving;
 mod sharded;
 
 pub use backends::{
     backend_by_name, PjrtBackend, ReferenceBackend, VirtualAccelBackend, BACKEND_NAMES,
 };
-pub use serving::{Completion, EngineConfig, EngineStats, InferenceEngine, PendingRequest};
+pub use clock::{Clock, RealClock, VirtualClock};
+pub use scheduler::{
+    BatchPolicy, Rejection, SchedCounters, Scheduler, SchedulerConfig, Ticket,
+};
+pub use serving::{
+    Completion, EngineConfig, EngineStats, InferenceEngine, PendingRequest, SubmitOptions,
+};
 pub use sharded::ShardedBackend;
 
 use crate::funcsim::Tensor;
@@ -62,8 +76,9 @@ use crate::Result;
 
 /// One inference outcome. Which fields are populated depends on what the
 /// backend models: the reference simulator produces real tensors, the
-/// virtual accelerator produces hardware cost numbers.
-#[derive(Debug, Clone)]
+/// virtual accelerator produces hardware cost numbers. `PartialEq` so
+/// tests can pin windowed-vs-continuous serving equivalence bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunResult {
     /// [`ExecutionBackend::name`] of the producing backend.
     pub backend: &'static str,
@@ -109,5 +124,15 @@ pub trait ExecutionBackend: Send + Sync {
     /// chains.
     fn pool_stats(&self) -> Option<crate::pool::PoolStats> {
         None
+    }
+
+    /// Pending work this backend already holds beyond the engine's own
+    /// queue — the engine's admission controller adds it to the queue
+    /// depth on the non-blocking submit path, so load the queue cannot
+    /// see (e.g. cold weight loads in flight inside a
+    /// [`crate::pool::PooledBackend`]) still produces backpressure. The
+    /// default — a backend with no hidden queue — is 0.
+    fn queue_depth_hint(&self) -> usize {
+        0
     }
 }

@@ -1,0 +1,517 @@
+//! The continuous-batching scheduler core: a deterministic, clock-free
+//! state machine behind the [`crate::engine::InferenceEngine`].
+//!
+//! The scheduler owns every serving *decision* — admission control,
+//! batch formation, mid-batch joins, per-request deadlines, per-client
+//! ordering — but no time source, no threads and no tensors: every entry
+//! point takes the current time as an argument and returns what happened.
+//! The threaded engine drives it under one mutex with a real
+//! [`super::Clock`]; tests drive it directly with virtual timestamps, so
+//! batch formation, deadline expiry and backpressure onset are exact,
+//! repeatable assertions instead of sleep-and-hope timing.
+//!
+//! ## Dispatch model
+//!
+//! A worker *claims* a fresh batch when idle ([`Scheduler::claim`]) and —
+//! under [`BatchPolicy::Continuous`] — *joins* waiting requests into its
+//! still-open batch at every execution boundary ([`Scheduler::join`]):
+//! the group/shard boundary at which the modeled accelerator can accept
+//! new work without draining the pipeline. Under [`BatchPolicy::Window`]
+//! the batch is closed at claim time (the pre-0.9 fixed-window
+//! behaviour) and `join` never admits anything.
+//!
+//! ## Ordering guarantee
+//!
+//! Responses are never reordered within a client: a queued ticket is
+//! only dispatchable to a worker when its client has no request in
+//! flight on a *different* worker, and within one worker's batch tickets
+//! execute in admission order. Untagged submissions get a fresh client
+//! id each, so independent requests spread freely across workers.
+//!
+//! ## Conservation
+//!
+//! At every point in virtual time the counters satisfy
+//!
+//! ```text
+//! submitted == completed + failed + expired + queued + in_flight
+//! ```
+//!
+//! with `rejected` counted separately (a rejected request never entered
+//! the queue). `rust/tests/prop_invariants.rs` asserts this identity at
+//! every step of random arrival/boundary/expiry interleavings.
+
+use std::collections::VecDeque;
+
+/// How a worker's batch relates to requests that arrive while it runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Fixed batch windows (the pre-0.9 engine): a batch is closed when
+    /// claimed and executes to completion; arrivals during execution
+    /// wait for the next window.
+    Window,
+    /// Event-driven continuous batching: arrivals join a worker's
+    /// in-flight batch at the next execution boundary instead of
+    /// waiting for the window to drain.
+    Continuous,
+}
+
+impl BatchPolicy {
+    /// Stable name (`"window"` / `"continuous"`), as accepted by the
+    /// CLI's `--batch-policy` flag.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchPolicy::Window => "window",
+            BatchPolicy::Continuous => "continuous",
+        }
+    }
+
+    /// Parse a policy name (the inverse of [`BatchPolicy::name`]).
+    pub fn by_name(name: &str) -> Option<BatchPolicy> {
+        match name {
+            "window" => Some(BatchPolicy::Window),
+            "continuous" => Some(BatchPolicy::Continuous),
+            _ => None,
+        }
+    }
+}
+
+/// Scheduling knobs of a [`Scheduler`] (the serving-relevant subset of
+/// [`crate::engine::EngineConfig`]). Zero sizes are clamped to 1.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Batch formation policy.
+    pub policy: BatchPolicy,
+    /// Most requests one worker holds in an open batch.
+    pub max_batch: usize,
+    /// Admission bound: [`Scheduler::submit`] rejects when the queue
+    /// depth (plus the caller's reported extra load) reaches this.
+    pub queue_capacity: usize,
+    /// Default *relative* deadline applied at submission when the
+    /// request carries none; `None` disables deadlines by default.
+    pub deadline_ms: Option<f64>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            policy: BatchPolicy::Continuous,
+            max_batch: 8,
+            queue_capacity: 64,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// One scheduled request as the scheduler sees it (no payload — the
+/// engine keeps tensors and reply channels keyed by [`Ticket::id`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ticket {
+    /// Unique id assigned at submission.
+    pub id: u64,
+    /// Client the request belongs to (ordering domain).
+    pub client: u64,
+    /// Submission timestamp, on the driving clock.
+    pub enqueued_ms: f64,
+    /// Absolute deadline on the driving clock, when one applies.
+    pub deadline_ms: Option<f64>,
+}
+
+/// Typed backpressure: the admission controller turned a request away.
+/// Embedded in [`crate::compiler::CompileError::Rejected`] by the
+/// engine's submission paths.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rejection {
+    /// Observed load at rejection time: queued requests plus the
+    /// backend's reported extra load.
+    pub depth: usize,
+    /// Earliest absolute deadline among the queued requests — a
+    /// retry-after hint (`None` when nothing queued carries one).
+    pub deadline_ms: Option<f64>,
+}
+
+/// Monotonic counters of a [`Scheduler`] (all-time, not a window).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedCounters {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Requests turned away by admission control.
+    pub rejected: u64,
+    /// Requests whose execution finished (deadline met or missed).
+    pub completed: u64,
+    /// Requests whose execution errored.
+    pub failed: u64,
+    /// Requests dropped before execution because their deadline passed
+    /// (in the queue, or at dispatch inside an open batch).
+    pub expired: u64,
+    /// Requests that completed *after* their deadline.
+    pub late: u64,
+    /// Requests admitted into an already-running batch at an execution
+    /// boundary (continuous batching's defining event; always 0 under
+    /// [`BatchPolicy::Window`]).
+    pub joined: u64,
+    /// Batches formed by [`Scheduler::claim`].
+    pub batches: u64,
+    /// Largest open batch ever held by one worker (claimed + joined).
+    pub max_batch_seen: usize,
+    /// Most requests ever in flight across all workers at once.
+    pub peak_in_flight: usize,
+}
+
+impl SchedCounters {
+    /// Deadline misses: requests dropped unexecuted past their deadline
+    /// plus requests completed late.
+    pub fn deadline_misses(&self) -> u64 {
+        self.expired + self.late
+    }
+}
+
+/// An in-flight ticket inside a worker's open batch.
+#[derive(Debug, Clone)]
+struct InFlight {
+    id: u64,
+    client: u64,
+    deadline_ms: Option<f64>,
+}
+
+/// Deterministic continuous-batching core. See the [module docs](self)
+/// for the dispatch model, ordering guarantee and conservation law.
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: BatchPolicy,
+    max_batch: usize,
+    queue_capacity: usize,
+    default_deadline_ms: Option<f64>,
+    queue: VecDeque<Ticket>,
+    /// Per-worker open batch (claim order == execution order).
+    open: Vec<Vec<InFlight>>,
+    counters: SchedCounters,
+    next_id: u64,
+}
+
+impl Scheduler {
+    /// A scheduler for `workers` executors (at least 1).
+    pub fn new(cfg: SchedulerConfig, workers: usize) -> Scheduler {
+        Scheduler {
+            policy: cfg.policy,
+            max_batch: cfg.max_batch.max(1),
+            queue_capacity: cfg.queue_capacity.max(1),
+            default_deadline_ms: cfg.deadline_ms,
+            queue: VecDeque::new(),
+            open: vec![Vec::new(); workers.max(1)],
+            counters: SchedCounters::default(),
+            next_id: 0,
+        }
+    }
+
+    /// The batch formation policy this scheduler runs.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Admit one request for `client` at `now_ms`, or reject it when the
+    /// queue depth plus `extra_load` (backend-reported pending work, e.g.
+    /// buffer-pool cold fills) has reached the configured capacity.
+    /// `deadline_ms` is an absolute override; `None` applies the
+    /// configured default relative deadline.
+    pub fn submit(
+        &mut self,
+        client: u64,
+        now_ms: f64,
+        deadline_ms: Option<f64>,
+        extra_load: usize,
+    ) -> Result<Ticket, Rejection> {
+        let depth = self.queue.len() + extra_load;
+        if depth >= self.queue_capacity {
+            self.counters.rejected += 1;
+            return Err(Rejection { depth, deadline_ms: self.earliest_queued_deadline() });
+        }
+        self.next_id += 1;
+        let ticket = Ticket {
+            id: self.next_id,
+            client,
+            enqueued_ms: now_ms,
+            deadline_ms: deadline_ms.or(self.default_deadline_ms.map(|d| now_ms + d)),
+        };
+        self.counters.submitted += 1;
+        self.queue.push_back(ticket.clone());
+        Ok(ticket)
+    }
+
+    /// Form a fresh batch for an idle `worker`: up to `max_batch`
+    /// dispatchable tickets in queue order. Returns empty when the
+    /// worker still holds an open batch or nothing is dispatchable.
+    /// Call [`Scheduler::expire`] first so overdue tickets are reported,
+    /// not claimed.
+    pub fn claim(&mut self, worker: usize, _now_ms: f64) -> Vec<Ticket> {
+        if !self.open[worker].is_empty() {
+            return Vec::new();
+        }
+        let taken = self.take_dispatchable(worker, self.max_batch);
+        if !taken.is_empty() {
+            self.counters.batches += 1;
+            self.note_open(worker);
+        }
+        taken
+    }
+
+    /// Admit waiting tickets into `worker`'s open batch at an execution
+    /// boundary, up to `max_batch` open. The continuous-batching event:
+    /// under [`BatchPolicy::Window`] (or with no open batch) this never
+    /// admits anything — the window stays closed.
+    pub fn join(&mut self, worker: usize, _now_ms: f64) -> Vec<Ticket> {
+        if self.policy != BatchPolicy::Continuous || self.open[worker].is_empty() {
+            return Vec::new();
+        }
+        let room = self.max_batch.saturating_sub(self.open[worker].len());
+        let taken = self.take_dispatchable(worker, room);
+        if !taken.is_empty() {
+            self.counters.joined += taken.len() as u64;
+            self.note_open(worker);
+        }
+        taken
+    }
+
+    /// Record that `worker` finished executing ticket `id`. Returns
+    /// `true` when the completion missed its deadline (counted in
+    /// [`SchedCounters::late`]).
+    pub fn complete(&mut self, worker: usize, id: u64, now_ms: f64) -> bool {
+        let deadline = self.remove_in_flight(worker, id);
+        self.counters.completed += 1;
+        let late = deadline.is_some_and(|d| now_ms > d);
+        if late {
+            self.counters.late += 1;
+        }
+        late
+    }
+
+    /// Record that `worker`'s execution of ticket `id` errored.
+    pub fn fail(&mut self, worker: usize, id: u64) {
+        self.remove_in_flight(worker, id);
+        self.counters.failed += 1;
+    }
+
+    /// Drop ticket `id` from `worker`'s open batch unexecuted because
+    /// its deadline passed before dispatch (counted in
+    /// [`SchedCounters::expired`]).
+    pub fn abandon(&mut self, worker: usize, id: u64) {
+        self.remove_in_flight(worker, id);
+        self.counters.expired += 1;
+    }
+
+    /// Remove every queued ticket whose deadline lies strictly before
+    /// `now_ms` and return them (counted in [`SchedCounters::expired`]).
+    /// The caller answers their waiters with a typed deadline error.
+    pub fn expire(&mut self, now_ms: f64) -> Vec<Ticket> {
+        let mut expired = Vec::new();
+        self.queue.retain(|t| {
+            let overdue = t.deadline_ms.is_some_and(|d| d < now_ms);
+            if overdue {
+                expired.push(t.clone());
+            }
+            !overdue
+        });
+        self.counters.expired += expired.len() as u64;
+        expired
+    }
+
+    /// Requests waiting in the queue.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests claimed into open batches across all workers.
+    pub fn in_flight(&self) -> usize {
+        self.open.iter().map(Vec::len).sum()
+    }
+
+    /// Size of `worker`'s open batch.
+    pub fn open_batch(&self, worker: usize) -> usize {
+        self.open[worker].len()
+    }
+
+    /// Snapshot of the monotonic counters.
+    pub fn counters(&self) -> SchedCounters {
+        self.counters.clone()
+    }
+
+    /// Earliest absolute deadline among queued tickets.
+    fn earliest_queued_deadline(&self) -> Option<f64> {
+        self.queue
+            .iter()
+            .filter_map(|t| t.deadline_ms)
+            .min_by(|a, b| a.partial_cmp(b).expect("deadlines are finite"))
+    }
+
+    /// Pop up to `limit` dispatchable tickets for `worker`, preserving
+    /// queue order. A ticket is dispatchable when its client has no
+    /// request in flight on a *different* worker (per-client ordering).
+    fn take_dispatchable(&mut self, worker: usize, limit: usize) -> Vec<Ticket> {
+        let mut taken = Vec::new();
+        let mut i = 0;
+        while taken.len() < limit && i < self.queue.len() {
+            let client = self.queue[i].client;
+            if self.client_busy_elsewhere(client, worker) {
+                i += 1;
+                continue;
+            }
+            let t = self.queue.remove(i).expect("index checked");
+            self.open[worker].push(InFlight {
+                id: t.id,
+                client: t.client,
+                deadline_ms: t.deadline_ms,
+            });
+            taken.push(t);
+        }
+        taken
+    }
+
+    /// Whether `client` has an in-flight request on a worker other than
+    /// `worker` (tickets behind it must wait to preserve ordering).
+    fn client_busy_elsewhere(&self, client: u64, worker: usize) -> bool {
+        self.open
+            .iter()
+            .enumerate()
+            .any(|(w, b)| w != worker && b.iter().any(|f| f.client == client))
+    }
+
+    /// Update high-water marks after `worker`'s batch changed.
+    fn note_open(&mut self, worker: usize) {
+        self.counters.max_batch_seen = self.counters.max_batch_seen.max(self.open[worker].len());
+        self.counters.peak_in_flight = self.counters.peak_in_flight.max(self.in_flight());
+    }
+
+    /// Remove one in-flight ticket, returning its deadline.
+    fn remove_in_flight(&mut self, worker: usize, id: u64) -> Option<f64> {
+        let batch = &mut self.open[worker];
+        let pos = batch
+            .iter()
+            .position(|f| f.id == id)
+            .expect("completion of a ticket the worker does not hold");
+        batch.remove(pos).deadline_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(policy: BatchPolicy, max_batch: usize, capacity: usize) -> Scheduler {
+        Scheduler::new(
+            SchedulerConfig {
+                policy,
+                max_batch,
+                queue_capacity: capacity,
+                deadline_ms: None,
+            },
+            2,
+        )
+    }
+
+    #[test]
+    fn window_claims_but_never_joins() {
+        let mut s = sched(BatchPolicy::Window, 4, 16);
+        for c in 0..3 {
+            s.submit(c, 0.0, None, 0).unwrap();
+        }
+        let batch = s.claim(0, 0.0);
+        assert_eq!(batch.len(), 3);
+        s.submit(9, 1.0, None, 0).unwrap();
+        assert!(s.join(0, 1.0).is_empty(), "window must not admit mid-batch");
+        assert_eq!(s.counters().joined, 0);
+    }
+
+    #[test]
+    fn continuous_joins_up_to_the_batch_bound() {
+        let mut s = sched(BatchPolicy::Continuous, 3, 16);
+        s.submit(1, 0.0, None, 0).unwrap();
+        assert_eq!(s.claim(0, 0.0).len(), 1);
+        for c in [2, 3, 4] {
+            s.submit(c, 1.0, None, 0).unwrap();
+        }
+        let joined = s.join(0, 1.0);
+        assert_eq!(joined.len(), 2, "room for max_batch - 1 open");
+        assert_eq!(s.counters().joined, 2);
+        assert_eq!(s.queued(), 1);
+        assert_eq!(s.counters().max_batch_seen, 3);
+    }
+
+    #[test]
+    fn admission_rejects_at_depth_with_a_deadline_hint() {
+        let mut s = sched(BatchPolicy::Continuous, 2, 2);
+        s.submit(1, 0.0, Some(9.0), 0).unwrap();
+        s.submit(2, 0.0, Some(7.0), 0).unwrap();
+        let err = s.submit(3, 0.0, None, 0).unwrap_err();
+        assert_eq!(err.depth, 2);
+        assert_eq!(err.deadline_ms, Some(7.0), "hint is the earliest queued deadline");
+        assert_eq!(s.counters().rejected, 1);
+        // backend-reported load tightens admission before the queue fills
+        let mut s = sched(BatchPolicy::Continuous, 2, 2);
+        let err = s.submit(1, 0.0, None, 5).unwrap_err();
+        assert_eq!(err.depth, 5);
+    }
+
+    #[test]
+    fn expiry_and_late_completions_both_count_as_misses() {
+        let mut s = sched(BatchPolicy::Continuous, 2, 8);
+        s.submit(1, 0.0, Some(5.0), 0).unwrap();
+        let t2 = s.submit(2, 0.0, Some(50.0), 0).unwrap();
+        let expired = s.expire(10.0);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].client, 1);
+        let batch = s.claim(0, 10.0);
+        assert_eq!(batch.len(), 1);
+        assert!(s.complete(0, t2.id, 60.0), "finished past the deadline");
+        let c = s.counters();
+        assert_eq!((c.expired, c.late, c.deadline_misses()), (1, 1, 2));
+    }
+
+    #[test]
+    fn per_client_order_holds_across_workers() {
+        let mut s = sched(BatchPolicy::Continuous, 1, 16);
+        let a1 = s.submit(7, 0.0, None, 0).unwrap();
+        s.submit(7, 0.0, None, 0).unwrap();
+        let b1 = s.submit(8, 0.0, None, 0).unwrap();
+        assert_eq!(s.claim(0, 0.0)[0].id, a1.id);
+        // worker 1 must skip client 7's second request (in flight on
+        // worker 0) and dispatch client 8 instead
+        let w1 = s.claim(1, 0.0);
+        assert_eq!(w1.len(), 1);
+        assert_eq!(w1[0].id, b1.id);
+        // once a1 completes, 7's second request becomes dispatchable
+        s.complete(0, a1.id, 1.0);
+        assert_eq!(s.claim(0, 1.0)[0].client, 7);
+    }
+
+    #[test]
+    fn conservation_holds_through_a_mixed_run() {
+        let mut s = sched(BatchPolicy::Continuous, 2, 3);
+        let check = |s: &Scheduler| {
+            let c = s.counters();
+            assert_eq!(
+                c.submitted,
+                c.completed
+                    + c.failed
+                    + c.expired
+                    + s.queued() as u64
+                    + s.in_flight() as u64
+            );
+        };
+        let t1 = s.submit(1, 0.0, None, 0).unwrap();
+        let t2 = s.submit(2, 0.0, Some(4.0), 0).unwrap();
+        s.submit(3, 0.0, None, 0).unwrap();
+        assert!(s.submit(4, 0.0, None, 0).is_err());
+        check(&s);
+        let b = s.claim(0, 1.0);
+        assert_eq!(b.len(), 2);
+        check(&s);
+        s.complete(0, t1.id, 2.0);
+        s.fail(0, t2.id);
+        check(&s);
+        s.expire(100.0);
+        let b = s.claim(1, 100.0);
+        assert_eq!(b.len(), 1);
+        s.abandon(1, b[0].id);
+        check(&s);
+        assert_eq!(s.queued() + s.in_flight(), 0);
+    }
+}

@@ -1,28 +1,40 @@
-//! Batch-serving inference engine.
+//! Event-driven batch-serving inference engine.
 //!
 //! One [`InferenceEngine`] serves one packed [`Program`] through one
-//! [`ExecutionBackend`]: requests enter a *bounded* submission queue,
-//! worker threads claim batches of up to `max_batch` requests (the
-//! per-program batching — every claimed batch shares the already-resident
-//! program, mirroring how the accelerator driver reuses the shipped
-//! instruction/parameter payload across inputs), and each completion is
-//! delivered back through a per-request channel. [`EngineStats`] reports
-//! throughput, p50/p95 latency from the timing model, queue depth and the
-//! observed cross-worker overlap.
+//! [`ExecutionBackend`]. All scheduling decisions — admission control,
+//! batch formation, mid-batch joins, deadlines, per-client ordering —
+//! live in the deterministic [`super::Scheduler`] core; this module is
+//! the threaded shell around it: worker threads execute what the
+//! scheduler dispatches, timestamps come from the engine's [`Clock`]
+//! (wall clock in production, [`super::VirtualClock`] in tests), and
+//! each completion is delivered back through a per-request channel.
+//!
+//! Under [`BatchPolicy::Continuous`] (the default) a request arriving
+//! while a worker's batch is executing *joins that batch* at the next
+//! execution boundary instead of waiting for the window to drain;
+//! [`BatchPolicy::Window`] keeps the pre-0.9 fixed-window behaviour.
+//! Admission is queue-depth-aware: [`InferenceEngine::try_submit`]
+//! rejects with a typed [`CompileError::Rejected`] (depth + retry-after
+//! hint) when the queue — plus the backend's reported pending load, see
+//! [`ExecutionBackend::queue_depth_hint`] — is at capacity, and
+//! per-request deadlines surface as typed
+//! [`CompileError::DeadlineMiss`] errors and
+//! [`EngineStats::deadline_misses`].
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::{ExecutionBackend, RunResult};
+use super::scheduler::{BatchPolicy, Scheduler, SchedulerConfig, Ticket};
+use super::{Clock, ExecutionBackend, RealClock, RunResult};
 use crate::compiler::CompileError;
 use crate::funcsim::Tensor;
 use crate::program::Program;
 use crate::Result;
 
-/// Serving knobs. Zero values are clamped to 1.
+/// Serving knobs. Zero sizes are clamped to 1.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Worker threads (backend instances executing concurrently).
@@ -30,14 +42,45 @@ pub struct EngineConfig {
     /// Bound of the submission queue: [`InferenceEngine::submit`] blocks
     /// and [`InferenceEngine::try_submit`] rejects beyond it.
     pub queue_capacity: usize,
-    /// Most requests one worker claims per queue visit.
+    /// Most requests one worker holds in an open batch.
     pub max_batch: usize,
+    /// Batch formation policy: [`BatchPolicy::Continuous`] (default)
+    /// admits arrivals into in-flight batches at execution boundaries;
+    /// [`BatchPolicy::Window`] is the pre-0.9 fixed-window path.
+    pub policy: BatchPolicy,
+    /// Default *relative* deadline applied to every submission that
+    /// does not carry its own (see [`SubmitOptions::deadline_ms`]);
+    /// `None` disables deadlines by default.
+    pub deadline_ms: Option<f64>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { workers: 2, queue_capacity: 64, max_batch: 8 }
+        EngineConfig {
+            workers: 2,
+            queue_capacity: 64,
+            max_batch: 8,
+            policy: BatchPolicy::Continuous,
+            deadline_ms: None,
+        }
     }
+}
+
+/// Per-request submission options (see
+/// [`InferenceEngine::submit_opts`]). The default is an untagged
+/// request with the engine's default deadline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Ordering domain: responses are never reordered within a client.
+    /// `None` (default) assigns a fresh client per request, so untagged
+    /// requests spread freely across workers.
+    pub client: Option<u64>,
+    /// Relative deadline in milliseconds from submission; overrides the
+    /// engine's [`EngineConfig::deadline_ms`] default. A request past
+    /// its deadline is dropped unexecuted with a typed
+    /// [`CompileError::DeadlineMiss`], and late completions are counted
+    /// in [`EngineStats::deadline_misses`].
+    pub deadline_ms: Option<f64>,
 }
 
 /// A finished request: the backend result plus serving-side timing.
@@ -45,13 +88,17 @@ impl Default for EngineConfig {
 pub struct Completion {
     /// What the backend produced.
     pub result: RunResult,
-    /// Time spent waiting in the submission queue.
+    /// Time spent waiting for dispatch (submission to batch admission),
+    /// on the engine's clock.
     pub wait_ms: f64,
     /// Wall-clock share of the batch execution attributed to this
     /// request.
     pub wall_ms: f64,
     /// Which worker ran it.
     pub worker: usize,
+    /// The request finished after its deadline (counted in
+    /// [`EngineStats::deadline_misses`]; the result is still valid).
+    pub deadline_missed: bool,
 }
 
 /// Handle returned by `submit`; resolves to the completion.
@@ -71,24 +118,15 @@ impl PendingRequest {
     }
 }
 
-struct Job {
-    input: Tensor,
-    tx: mpsc::Sender<Result<Completion>>,
-    enqueued: Instant,
-}
-
 /// Latency samples kept for the percentile estimates: a sliding window
 /// of the most recent completions, so a long-lived engine's stats stay
 /// O(1) per request instead of growing one f64 per request forever.
 const LATENCY_WINDOW: usize = 4096;
 
+/// Measured-sample side of the stats (the counters live in the
+/// scheduler): latency ring, wait accounting, per-worker tallies.
 #[derive(Default)]
 struct StatsInner {
-    submitted: u64,
-    completed: u64,
-    failed: u64,
-    rejected: u64,
-    peak_in_flight: usize,
     per_worker: Vec<u64>,
     /// Per-request service latency: the timing model's prediction when
     /// the backend reports one, otherwise the measured wall share.
@@ -97,8 +135,6 @@ struct StatsInner {
     /// Next overwrite index once the latency ring is full.
     lat_next: usize,
     wait_ms_total: f64,
-    batches: u64,
-    max_batch_seen: usize,
 }
 
 impl StatsInner {
@@ -113,17 +149,34 @@ impl StatsInner {
     }
 }
 
+/// A queued request's payload, keyed by ticket id (the scheduler only
+/// tracks the scheduling-relevant fields).
+struct Payload {
+    input: Tensor,
+    tx: mpsc::Sender<Result<Completion>>,
+}
+
+/// Scheduler plus payload store — everything behind the state mutex.
+struct State {
+    sched: Scheduler,
+    jobs: HashMap<u64, Payload>,
+}
+
 struct Shared {
     program: Arc<Program>,
     backend: Arc<dyn ExecutionBackend>,
-    queue: Mutex<VecDeque<Job>>,
+    clock: Arc<dyn Clock>,
+    state: Mutex<State>,
     not_empty: Condvar,
     not_full: Condvar,
+    // lock order is always state -> stats
     stats: Mutex<StatsInner>,
-    in_flight: AtomicUsize,
     shutdown: AtomicBool,
     capacity: usize,
-    max_batch: usize,
+    policy: BatchPolicy,
+    /// Fresh client ids for untagged submissions — the high bit keeps
+    /// them out of any caller-chosen client namespace.
+    next_client: AtomicU64,
     /// Stamped at construction and re-stamped when the workers start, so
     /// a paused engine's queue-filling time never deflates throughput.
     started: Mutex<Instant>,
@@ -134,14 +187,24 @@ struct Shared {
 pub struct EngineStats {
     /// Name of the serving backend.
     pub backend: &'static str,
+    /// Batch formation policy name (`"continuous"` / `"window"`).
+    pub policy: &'static str,
     /// Requests accepted into the queue.
     pub submitted: u64,
     /// Requests finished successfully.
     pub completed: u64,
     /// Requests whose backend run errored.
     pub failed: u64,
-    /// `try_submit` calls bounced off the full queue.
+    /// `try_submit` calls bounced by admission control.
     pub rejected: u64,
+    /// Requests whose deadline was missed: dropped unexecuted past the
+    /// deadline (queued or at dispatch) plus completions that finished
+    /// late.
+    pub deadline_misses: u64,
+    /// Requests admitted into an already-running batch at an execution
+    /// boundary (continuous batching's defining event; always 0 under
+    /// [`BatchPolicy::Window`]).
+    pub joined: u64,
     /// Requests currently waiting in the queue.
     pub queue_depth: usize,
     /// Requests currently claimed by workers.
@@ -151,9 +214,10 @@ pub struct EngineStats {
     pub peak_in_flight: usize,
     /// Completions per worker thread.
     pub per_worker: Vec<u64>,
-    /// Batches executed.
+    /// Batches formed (mid-batch joins extend a batch, they do not
+    /// start one).
     pub batches: u64,
-    /// Largest batch a worker claimed.
+    /// Largest open batch one worker ever held (claimed + joined).
     pub max_batch_seen: usize,
     /// Wall-clock seconds since the workers started.
     pub elapsed_s: f64,
@@ -164,7 +228,7 @@ pub struct EngineStats {
     pub p50_ms: f64,
     /// 95th-percentile per-request latency over the same window.
     pub p95_ms: f64,
-    /// Mean queue wait over the same window, ms.
+    /// Mean dispatch wait over the same window, ms.
     pub mean_wait_ms: f64,
     /// Buffer-pool counters (hit/miss/eviction, cold-start latency
     /// percentiles) when the serving backend pages weights through a
@@ -198,7 +262,7 @@ pub struct InferenceEngine {
 }
 
 impl InferenceEngine {
-    /// Create the engine and start its workers.
+    /// Create the engine on the wall clock and start its workers.
     pub fn new(
         program: Arc<Program>,
         backend: Arc<dyn ExecutionBackend>,
@@ -218,21 +282,55 @@ impl InferenceEngine {
         backend: Arc<dyn ExecutionBackend>,
         cfg: EngineConfig,
     ) -> InferenceEngine {
+        InferenceEngine::new_paused_with_clock(program, backend, cfg, Arc::new(RealClock::new()))
+    }
+
+    /// [`InferenceEngine::new`] with an explicit time source — pass a
+    /// [`super::VirtualClock`] to make dispatch waits and deadline
+    /// expiry deterministic in tests.
+    pub fn with_clock(
+        program: Arc<Program>,
+        backend: Arc<dyn ExecutionBackend>,
+        cfg: EngineConfig,
+        clock: Arc<dyn Clock>,
+    ) -> InferenceEngine {
+        let mut engine = InferenceEngine::new_paused_with_clock(program, backend, cfg, clock);
+        engine.start();
+        engine
+    }
+
+    /// [`InferenceEngine::new_paused`] with an explicit time source.
+    pub fn new_paused_with_clock(
+        program: Arc<Program>,
+        backend: Arc<dyn ExecutionBackend>,
+        cfg: EngineConfig,
+        clock: Arc<dyn Clock>,
+    ) -> InferenceEngine {
         let worker_count = cfg.workers.max(1);
+        let sched = Scheduler::new(
+            SchedulerConfig {
+                policy: cfg.policy,
+                max_batch: cfg.max_batch,
+                queue_capacity: cfg.queue_capacity,
+                deadline_ms: cfg.deadline_ms,
+            },
+            worker_count,
+        );
         let shared = Arc::new(Shared {
             program,
             backend,
-            queue: Mutex::new(VecDeque::new()),
+            clock,
+            state: Mutex::new(State { sched, jobs: HashMap::new() }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             stats: Mutex::new(StatsInner {
                 per_worker: vec![0; worker_count],
                 ..StatsInner::default()
             }),
-            in_flight: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             capacity: cfg.queue_capacity.max(1),
-            max_batch: cfg.max_batch.max(1),
+            policy: cfg.policy,
+            next_client: AtomicU64::new(1 << 63),
             started: Mutex::new(Instant::now()),
         });
         InferenceEngine { shared, workers: Vec::new(), worker_count }
@@ -252,51 +350,77 @@ impl InferenceEngine {
         self.workers = handles;
     }
 
-    /// Enqueue one request, blocking while the queue is at capacity.
+    /// Enqueue one untagged request, blocking while the queue is at
+    /// capacity (the flow-control path; [`InferenceEngine::try_submit`]
+    /// is the load-shedding one).
     pub fn submit(&self, input: Tensor) -> Result<PendingRequest> {
+        self.submit_opts(input, SubmitOptions::default())
+    }
+
+    /// [`InferenceEngine::submit`] with per-request options (client tag
+    /// for ordering, deadline override). Blocks while the queue is at
+    /// capacity; the backend's [`ExecutionBackend::queue_depth_hint`]
+    /// only tightens the non-blocking path.
+    pub fn submit_opts(&self, input: Tensor, opts: SubmitOptions) -> Result<PendingRequest> {
         let (tx, rx) = mpsc::channel();
-        let job = Job { input, tx, enqueued: Instant::now() };
         {
-            let mut q = self.shared.queue.lock().unwrap();
-            while q.len() >= self.shared.capacity {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.sched.queued() >= self.shared.capacity {
                 if self.shared.shutdown.load(Ordering::SeqCst) {
                     return Err(CompileError::Exec("engine is shut down".into()));
                 }
-                q = self.shared.not_full.wait(q).unwrap();
+                st = self.shared.not_full.wait(st).unwrap();
             }
             if self.shared.shutdown.load(Ordering::SeqCst) {
                 return Err(CompileError::Exec("engine is shut down".into()));
             }
-            // count before the job becomes claimable, so a snapshot can
-            // never observe completed > submitted (lock order is always
-            // queue -> stats, matching the workers)
-            self.shared.stats.lock().unwrap().submitted += 1;
-            q.push_back(job);
+            let now = self.shared.clock.now_ms();
+            deliver_expired(&mut st, now);
+            let ticket = st
+                .sched
+                .submit(self.client_of(opts), now, opts.deadline_ms.map(|d| now + d), 0)
+                .expect("capacity was checked under the same lock");
+            st.jobs.insert(ticket.id, Payload { input, tx });
         }
         self.shared.not_empty.notify_one();
         Ok(PendingRequest { rx })
     }
 
-    /// Enqueue without blocking; a full queue is a typed rejection
-    /// (counted in [`EngineStats::rejected`]).
+    /// Enqueue an untagged request without blocking; admission control
+    /// turns it away with a typed [`CompileError::Rejected`] (counted
+    /// in [`EngineStats::rejected`]) when the queue plus the backend's
+    /// reported pending load is at capacity.
     pub fn try_submit(&self, input: Tensor) -> Result<PendingRequest> {
+        self.try_submit_opts(input, SubmitOptions::default())
+    }
+
+    /// [`InferenceEngine::try_submit`] with per-request options.
+    pub fn try_submit_opts(&self, input: Tensor, opts: SubmitOptions) -> Result<PendingRequest> {
         let (tx, rx) = mpsc::channel();
-        let job = Job { input, tx, enqueued: Instant::now() };
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut st = self.shared.state.lock().unwrap();
             if self.shared.shutdown.load(Ordering::SeqCst) {
                 return Err(CompileError::Exec("engine is shut down".into()));
             }
-            if q.len() >= self.shared.capacity {
-                drop(q);
-                self.shared.stats.lock().unwrap().rejected += 1;
-                return Err(CompileError::Exec(format!(
-                    "submission queue full ({} requests)",
-                    self.shared.capacity
-                )));
+            let now = self.shared.clock.now_ms();
+            deliver_expired(&mut st, now);
+            let extra = self.shared.backend.queue_depth_hint();
+            match st.sched.submit(
+                self.client_of(opts),
+                now,
+                opts.deadline_ms.map(|d| now + d),
+                extra,
+            ) {
+                Ok(ticket) => {
+                    st.jobs.insert(ticket.id, Payload { input, tx });
+                }
+                Err(rej) => {
+                    return Err(CompileError::Rejected {
+                        depth: rej.depth,
+                        deadline_ms: rej.deadline_ms,
+                    })
+                }
             }
-            self.shared.stats.lock().unwrap().submitted += 1;
-            q.push_back(job);
         }
         self.shared.not_empty.notify_one();
         Ok(PendingRequest { rx })
@@ -304,11 +428,18 @@ impl InferenceEngine {
 
     /// Requests currently waiting in the submission queue.
     pub fn queue_depth(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        self.shared.state.lock().unwrap().sched.queued()
     }
 
-    /// Snapshot of the serving counters.
+    /// Snapshot of the serving counters. Expires overdue queued
+    /// requests first, so deadline misses are visible without waiting
+    /// for a worker to touch the queue.
     pub fn stats(&self) -> EngineStats {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            let now = self.shared.clock.now_ms();
+            deliver_expired(&mut st, now);
+        }
         snapshot(&self.shared)
     }
 
@@ -316,6 +447,12 @@ impl InferenceEngine {
     pub fn shutdown(mut self) -> EngineStats {
         self.stop();
         snapshot(&self.shared)
+    }
+
+    /// Client id for a submission: the caller's tag, or a fresh one.
+    fn client_of(&self, opts: SubmitOptions) -> u64 {
+        opts.client
+            .unwrap_or_else(|| self.shared.next_client.fetch_add(1, Ordering::Relaxed))
     }
 
     fn stop(&mut self) {
@@ -337,80 +474,183 @@ impl Drop for InferenceEngine {
     }
 }
 
+/// Expire overdue queued tickets and answer their waiters with the
+/// typed deadline error. Called under the state lock on every queue
+/// touch (submit, claim, join, stats).
+fn deliver_expired(st: &mut State, now_ms: f64) {
+    for t in st.sched.expire(now_ms) {
+        if let Some(p) = st.jobs.remove(&t.id) {
+            let _ = p.tx.send(Err(CompileError::DeadlineMiss {
+                deadline_ms: t.deadline_ms.expect("expired tickets carry deadlines"),
+                now_ms,
+            }));
+        }
+    }
+}
+
+/// One dispatched request on its way through a worker: the scheduler
+/// ticket, the admission timestamp (claim or join time), and the
+/// payload.
+struct Dispatched {
+    ticket: Ticket,
+    admitted_ms: f64,
+    input: Tensor,
+    tx: mpsc::Sender<Result<Completion>>,
+}
+
 fn worker_loop(shared: Arc<Shared>, wid: usize) {
     loop {
         // ---- claim a batch (or exit once drained + shut down) -----------
-        let (batch, claimed_at) = {
-            let mut q = shared.queue.lock().unwrap();
+        let batch: VecDeque<Dispatched> = {
+            let mut st = shared.state.lock().unwrap();
             loop {
-                if !q.is_empty() {
-                    break;
+                let now = shared.clock.now_ms();
+                deliver_expired(&mut st, now);
+                let claimed = st.sched.claim(wid, now);
+                if !claimed.is_empty() {
+                    break claimed
+                        .into_iter()
+                        .map(|t| attach_payload(&mut st, t, now))
+                        .collect();
                 }
                 if shared.shutdown.load(Ordering::SeqCst) {
+                    // wake any peer still parked here so the exit cascades
+                    shared.not_empty.notify_all();
                     return;
                 }
-                q = shared.not_empty.wait(q).unwrap();
+                st = shared.not_empty.wait(st).unwrap();
             }
-            let n = q.len().min(shared.max_batch);
-            let batch: Vec<Job> = q.drain(..n).collect();
-            shared.in_flight.fetch_add(batch.len(), Ordering::SeqCst);
-            shared.not_full.notify_all();
-            (batch, Instant::now())
         };
-        let now_in_flight = shared.in_flight.load(Ordering::SeqCst);
-        {
-            let mut s = shared.stats.lock().unwrap();
-            s.peak_in_flight = s.peak_in_flight.max(now_in_flight);
-            s.batches += 1;
-            s.max_batch_seen = s.max_batch_seen.max(batch.len());
-        }
+        shared.not_full.notify_all();
 
-        // ---- execute -----------------------------------------------------
-        // move the tensors out of the jobs rather than cloning them: the
-        // input copy would otherwise dominate the virtual backend's cost
-        let mut inputs = Vec::with_capacity(batch.len());
-        let mut replies = Vec::with_capacity(batch.len());
-        for job in batch {
-            inputs.push(job.input);
-            replies.push((job.tx, job.enqueued));
-        }
-        let t0 = Instant::now();
-        let mut results = shared.backend.run_batch(&shared.program, &inputs).into_iter();
-        let wall_each = t0.elapsed().as_secs_f64() * 1e3 / inputs.len() as f64;
-
-        // ---- complete ----------------------------------------------------
-        // walk the replies (not a zip) so a misbehaving run_batch override
-        // that returns too few results still answers every waiter and
-        // keeps the in-flight counter balanced
-        for (tx, enqueued) in replies {
-            shared.in_flight.fetch_sub(1, Ordering::SeqCst);
-            let res = results.next().unwrap_or_else(|| {
-                Err(CompileError::Exec(
-                    "backend returned fewer results than batch inputs".into(),
-                ))
-            });
-            let wait_ms = claimed_at.saturating_duration_since(enqueued).as_secs_f64() * 1e3;
-            let outcome = match res {
-                Ok(result) => {
-                    let service_ms = result.model_latency_ms.unwrap_or(wall_each);
-                    {
-                        let mut s = shared.stats.lock().unwrap();
-                        s.completed += 1;
-                        s.per_worker[wid] += 1;
-                        s.record_latency(service_ms);
-                        s.wait_ms_total += wait_ms;
-                    }
-                    Ok(Completion { result, wait_ms, wall_ms: wall_each, worker: wid })
-                }
-                Err(e) => {
-                    shared.stats.lock().unwrap().failed += 1;
-                    Err(e)
-                }
-            };
-            // receiver may have been dropped — not the engine's problem
-            let _ = tx.send(outcome);
+        match shared.policy {
+            BatchPolicy::Window => run_window(&shared, wid, batch),
+            BatchPolicy::Continuous => run_continuous(&shared, wid, batch),
         }
     }
+}
+
+/// Move a claimed/joined ticket's payload out of the store.
+fn attach_payload(st: &mut State, ticket: Ticket, admitted_ms: f64) -> Dispatched {
+    let p = st.jobs.remove(&ticket.id).expect("dispatched tickets have payloads");
+    Dispatched { ticket, admitted_ms, input: p.input, tx: p.tx }
+}
+
+/// The pre-0.9 window path: the whole claimed batch executes as one
+/// `run_batch` call and closes; arrivals wait for the next window.
+fn run_window(shared: &Shared, wid: usize, batch: VecDeque<Dispatched>) {
+    // move the tensors out of the jobs rather than cloning them: the
+    // input copy would otherwise dominate the virtual backend's cost
+    let mut inputs = Vec::with_capacity(batch.len());
+    let mut replies = Vec::with_capacity(batch.len());
+    for d in batch {
+        inputs.push(d.input);
+        replies.push((d.ticket, d.admitted_ms, d.tx));
+    }
+    let t0 = Instant::now();
+    let mut results = shared.backend.run_batch(&shared.program, &inputs).into_iter();
+    let wall_each = t0.elapsed().as_secs_f64() * 1e3 / inputs.len() as f64;
+
+    // walk the replies (not a zip) so a misbehaving run_batch override
+    // that returns too few results still answers every waiter and
+    // keeps the scheduler's in-flight accounting balanced
+    for (ticket, admitted_ms, tx) in replies {
+        let res = results.next().unwrap_or_else(|| {
+            Err(CompileError::Exec(
+                "backend returned fewer results than batch inputs".into(),
+            ))
+        });
+        let wait_ms = (admitted_ms - ticket.enqueued_ms).max(0.0);
+        finish_one(shared, wid, &ticket, tx, res, wait_ms, wall_each);
+    }
+}
+
+/// The continuous path: requests execute one boundary at a time, and
+/// after every boundary the worker pulls newly arrived requests into
+/// its still-open batch.
+fn run_continuous(shared: &Shared, wid: usize, mut batch: VecDeque<Dispatched>) {
+    while let Some(d) = batch.pop_front() {
+        let now = shared.clock.now_ms();
+        if d.ticket.deadline_ms.is_some_and(|dl| dl < now) {
+            // overdue before dispatch: don't burn device time on it
+            shared.state.lock().unwrap().sched.abandon(wid, d.ticket.id);
+            let _ = d.tx.send(Err(CompileError::DeadlineMiss {
+                deadline_ms: d.ticket.deadline_ms.expect("checked above"),
+                now_ms: now,
+            }));
+        } else {
+            let t0 = Instant::now();
+            let res = shared.backend.run(&shared.program, &d.input);
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let wait_ms = (d.admitted_ms - d.ticket.enqueued_ms).max(0.0);
+            finish_one(shared, wid, &d.ticket, d.tx, res, wait_ms, wall_ms);
+        }
+
+        // ---- execution boundary: extend the open batch -----------------
+        let joined_any = {
+            let mut st = shared.state.lock().unwrap();
+            let now = shared.clock.now_ms();
+            deliver_expired(&mut st, now);
+            let joined = st.sched.join(wid, now);
+            let any = !joined.is_empty();
+            for t in joined {
+                let d = attach_payload(&mut st, t, now);
+                batch.push_back(d);
+            }
+            any
+        };
+        if joined_any {
+            // joins freed queue slots — wake blocked submitters
+            shared.not_full.notify_all();
+        }
+    }
+}
+
+/// Record one finished execution (success or backend error) and answer
+/// the waiter.
+fn finish_one(
+    shared: &Shared,
+    wid: usize,
+    ticket: &Ticket,
+    tx: mpsc::Sender<Result<Completion>>,
+    res: Result<RunResult>,
+    wait_ms: f64,
+    wall_ms: f64,
+) {
+    let now = shared.clock.now_ms();
+    let outcome = match res {
+        Ok(result) => {
+            let late = {
+                let mut st = shared.state.lock().unwrap();
+                let late = st.sched.complete(wid, ticket.id, now);
+                // waiters parked on non-dispatchable work (per-client
+                // ordering) or on the shutdown drain need a recheck
+                if st.sched.queued() > 0 || shared.shutdown.load(Ordering::SeqCst) {
+                    shared.not_empty.notify_all();
+                }
+                late
+            };
+            let service_ms = result.model_latency_ms.unwrap_or(wall_ms);
+            {
+                let mut s = shared.stats.lock().unwrap();
+                s.per_worker[wid] += 1;
+                s.record_latency(service_ms);
+                s.wait_ms_total += wait_ms;
+            }
+            Ok(Completion { result, wait_ms, wall_ms, worker: wid, deadline_missed: late })
+        }
+        Err(e) => {
+            let mut st = shared.state.lock().unwrap();
+            st.sched.fail(wid, ticket.id);
+            if st.sched.queued() > 0 || shared.shutdown.load(Ordering::SeqCst) {
+                shared.not_empty.notify_all();
+            }
+            drop(st);
+            Err(e)
+        }
+    };
+    // receiver may have been dropped — not the engine's problem
+    let _ = tx.send(outcome);
 }
 
 fn percentile(sorted: &[f64], q: f64) -> f64 {
@@ -422,28 +662,39 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 fn snapshot(shared: &Shared) -> EngineStats {
-    let queue_depth = shared.queue.lock().unwrap().len();
+    // lock order is always state -> stats
+    let (c, queue_depth, in_flight) = {
+        let st = shared.state.lock().unwrap();
+        (st.sched.counters(), st.sched.queued(), st.sched.in_flight())
+    };
     let s = shared.stats.lock().unwrap();
     let mut lat = s.latencies_ms.clone();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let elapsed_s = shared.started.lock().unwrap().elapsed().as_secs_f64();
     EngineStats {
         backend: shared.backend.name(),
-        submitted: s.submitted,
-        completed: s.completed,
-        failed: s.failed,
-        rejected: s.rejected,
+        policy: shared.policy.name(),
+        submitted: c.submitted,
+        completed: c.completed,
+        failed: c.failed,
+        rejected: c.rejected,
+        deadline_misses: c.deadline_misses(),
+        joined: c.joined,
         queue_depth,
-        in_flight: shared.in_flight.load(Ordering::SeqCst),
-        peak_in_flight: s.peak_in_flight,
+        in_flight,
+        peak_in_flight: c.peak_in_flight,
         per_worker: s.per_worker.clone(),
-        batches: s.batches,
-        max_batch_seen: s.max_batch_seen,
+        batches: c.batches,
+        max_batch_seen: c.max_batch_seen,
         elapsed_s,
-        throughput_rps: if elapsed_s > 0.0 { s.completed as f64 / elapsed_s } else { 0.0 },
+        throughput_rps: if elapsed_s > 0.0 { c.completed as f64 / elapsed_s } else { 0.0 },
         p50_ms: percentile(&lat, 0.50),
         p95_ms: percentile(&lat, 0.95),
-        mean_wait_ms: if s.completed > 0 { s.wait_ms_total / s.completed as f64 } else { 0.0 },
+        mean_wait_ms: if c.completed > 0 {
+            s.wait_ms_total / c.completed as f64
+        } else {
+            0.0
+        },
         pool: shared.backend.pool_stats(),
     }
 }
@@ -451,7 +702,7 @@ fn snapshot(shared: &Shared) -> EngineStats {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::VirtualAccelBackend;
+    use crate::engine::{VirtualAccelBackend, VirtualClock};
     use crate::zoo;
 
     fn tinynet_program() -> Arc<Program> {
@@ -464,7 +715,12 @@ mod tests {
         let engine = InferenceEngine::new(
             program.clone(),
             Arc::new(VirtualAccelBackend),
-            EngineConfig { workers: 3, queue_capacity: 8, max_batch: 2 },
+            EngineConfig {
+                workers: 3,
+                queue_capacity: 8,
+                max_batch: 2,
+                ..EngineConfig::default()
+            },
         );
         let shape = program.input_shape();
         let pending: Vec<PendingRequest> =
@@ -472,12 +728,15 @@ mod tests {
         for p in pending {
             let done = p.wait().unwrap();
             assert!(done.result.model_latency_ms.unwrap() > 0.0);
+            assert!(!done.deadline_missed, "no deadlines were configured");
         }
         let stats = engine.shutdown();
         assert_eq!(stats.completed, 12);
         assert_eq!(stats.submitted, 12);
         assert_eq!(stats.failed, 0);
+        assert_eq!(stats.deadline_misses, 0);
         assert_eq!(stats.queue_depth, 0);
+        assert_eq!(stats.policy, "continuous");
         assert!(stats.p50_ms > 0.0);
         assert!(stats.p95_ms >= stats.p50_ms);
         assert!(stats.throughput_rps > 0.0);
@@ -485,18 +744,29 @@ mod tests {
     }
 
     #[test]
-    fn bounded_queue_rejects_when_full() {
+    fn bounded_queue_rejects_when_full_with_typed_backpressure() {
         let program = tinynet_program();
         // paused: nothing drains the queue while we fill it
         let engine = InferenceEngine::new_paused(
             program.clone(),
             Arc::new(VirtualAccelBackend),
-            EngineConfig { workers: 1, queue_capacity: 2, max_batch: 1 },
+            EngineConfig {
+                workers: 1,
+                queue_capacity: 2,
+                max_batch: 1,
+                ..EngineConfig::default()
+            },
         );
         let shape = program.input_shape();
         let a = engine.try_submit(Tensor::zeros(shape)).unwrap();
         let b = engine.try_submit(Tensor::zeros(shape)).unwrap();
-        assert!(engine.try_submit(Tensor::zeros(shape)).is_err());
+        match engine.try_submit(Tensor::zeros(shape)) {
+            Err(CompileError::Rejected { depth, deadline_ms }) => {
+                assert_eq!(depth, 2);
+                assert_eq!(deadline_ms, None, "no queued request carries a deadline");
+            }
+            other => panic!("expected typed backpressure, got {other:?}"),
+        }
         assert_eq!(engine.stats().rejected, 1);
         assert_eq!(engine.queue_depth(), 2);
         let mut engine = engine;
@@ -514,7 +784,12 @@ mod tests {
         let engine = InferenceEngine::new_paused(
             program.clone(),
             Arc::new(VirtualAccelBackend),
-            EngineConfig { workers: 2, queue_capacity: 16, max_batch: 4 },
+            EngineConfig {
+                workers: 2,
+                queue_capacity: 16,
+                max_batch: 4,
+                ..EngineConfig::default()
+            },
         );
         let shape = program.input_shape();
         let pending: Vec<PendingRequest> =
@@ -525,6 +800,51 @@ mod tests {
         assert_eq!(stats.completed, 6);
         for p in pending {
             assert!(p.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn window_policy_still_serves() {
+        let program = tinynet_program();
+        let engine = InferenceEngine::new(
+            program.clone(),
+            Arc::new(VirtualAccelBackend),
+            EngineConfig { policy: BatchPolicy::Window, ..EngineConfig::default() },
+        );
+        let shape = program.input_shape();
+        let pending: Vec<PendingRequest> =
+            (0..8).map(|_| engine.submit(Tensor::zeros(shape)).unwrap()).collect();
+        for p in pending {
+            p.wait().unwrap();
+        }
+        let stats = engine.shutdown();
+        assert_eq!(stats.completed, 8);
+        assert_eq!(stats.policy, "window");
+        assert_eq!(stats.joined, 0, "the window never admits mid-batch");
+    }
+
+    #[test]
+    fn virtual_clock_expires_queued_deadlines_without_sleeping() {
+        let program = tinynet_program();
+        let clock = Arc::new(VirtualClock::new());
+        // paused: the request can only expire, never execute
+        let engine = InferenceEngine::new_paused_with_clock(
+            program.clone(),
+            Arc::new(VirtualAccelBackend),
+            EngineConfig { deadline_ms: Some(5.0), ..EngineConfig::default() },
+            clock.clone(),
+        );
+        let p = engine.submit(Tensor::zeros(program.input_shape())).unwrap();
+        clock.advance_ms(10.0);
+        let stats = engine.stats(); // stats() sweeps the queue
+        assert_eq!(stats.deadline_misses, 1);
+        assert_eq!(stats.queue_depth, 0);
+        match p.wait() {
+            Err(CompileError::DeadlineMiss { deadline_ms, now_ms }) => {
+                assert_eq!(deadline_ms, 5.0);
+                assert_eq!(now_ms, 10.0);
+            }
+            other => panic!("expected a deadline miss, got {other:?}"),
         }
     }
 

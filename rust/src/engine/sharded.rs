@@ -185,6 +185,12 @@ impl ExecutionBackend for ShardedBackend {
     fn pool_stats(&self) -> Option<crate::pool::PoolStats> {
         self.backend.pool_stats()
     }
+
+    fn queue_depth_hint(&self) -> usize {
+        // the chain adds no queue of its own — hidden load lives in the
+        // backend it chains (e.g. a pool's cold fills in flight)
+        self.backend.queue_depth_hint()
+    }
 }
 
 #[cfg(test)]

@@ -89,6 +89,12 @@ impl ExecutionBackend for PooledBackend {
     fn pool_stats(&self) -> Option<PoolStats> {
         Some(self.pool.stats())
     }
+
+    fn queue_depth_hint(&self) -> usize {
+        // cold fills in flight are device-side work the engine's queue
+        // cannot see: report them so admission tightens under cold bursts
+        self.pool.pending_cold_loads()
+    }
 }
 
 #[cfg(test)]

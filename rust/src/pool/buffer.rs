@@ -69,6 +69,10 @@ struct Inner {
     overcommits: u64,
     quota_overruns: u64,
     peak_used_bytes: u64,
+    /// Miss pins (bypasses included) whose guards are still alive: the
+    /// pool's "cold fills in flight", reported to the serving engine's
+    /// admission controller as hidden backend load.
+    active_cold_pins: usize,
     cold_ms: Vec<f64>,
     cold_next: usize,
     cold_total_ms: f64,
@@ -163,6 +167,7 @@ impl BufferPool {
                 overcommits: 0,
                 quota_overruns: 0,
                 peak_used_bytes: 0,
+                active_cold_pins: 0,
                 cold_ms: Vec::new(),
                 cold_next: 0,
                 cold_total_ms: 0.0,
@@ -181,6 +186,7 @@ impl BufferPool {
             // bypass: stream straight through, never resident
             inner.misses += 1;
             inner.bypasses += 1;
+            inner.active_cold_pins += 1;
             let cold = self.link.transfer_ms(bytes);
             inner.record_cold(cold);
             return PinGuard { pool: self, seg, hit: false, bypass: true, cold_load_ms: cold };
@@ -220,15 +226,24 @@ impl BufferPool {
         inner.used_bytes += bytes;
         *inner.tenant_bytes.entry(tenant.to_string()).or_insert(0) += bytes;
         inner.peak_used_bytes = inner.peak_used_bytes.max(inner.used_bytes);
+        inner.active_cold_pins += 1;
         let cold = self.link.transfer_ms(bytes);
         inner.record_cold(cold);
         PinGuard { pool: self, seg, hit: false, bypass: false, cold_load_ms: cold }
     }
 
     /// Guard-drop path: release one pin and trim any over-commit that
-    /// this release made collectable.
-    fn release(&self, seg: SegmentId) {
+    /// this release made collectable. `cold` pins (misses, bypasses
+    /// included) also retire their in-flight cold-fill accounting;
+    /// `bypass` pins were never resident, so only that accounting drops.
+    fn release(&self, seg: SegmentId, bypass: bool, cold: bool) {
         let mut inner = self.lock();
+        if cold {
+            inner.active_cold_pins = inner.active_cold_pins.saturating_sub(1);
+        }
+        if bypass {
+            return;
+        }
         if let Some(r) = inner.resident.get_mut(&seg) {
             debug_assert!(r.pins > 0, "unpin of an unpinned segment");
             r.pins = r.pins.saturating_sub(1);
@@ -255,6 +270,7 @@ impl BufferPool {
             bypasses: inner.bypasses,
             overcommits: inner.overcommits,
             quota_overruns: inner.quota_overruns,
+            pending_cold_loads: inner.active_cold_pins,
             cold_load_p50_ms: percentile(&sorted, 50.0),
             cold_load_p95_ms: percentile(&sorted, 95.0),
             cold_load_total_ms: inner.cold_total_ms,
@@ -264,6 +280,16 @@ impl BufferPool {
     /// Whether `seg` is currently resident (tests and diagnostics).
     pub fn contains(&self, seg: SegmentId) -> bool {
         self.lock().resident.contains_key(&seg)
+    }
+
+    /// Miss pins (bypasses included) whose guards are still alive — the
+    /// modeled cold DRAM fills currently in flight. The serving engine's
+    /// admission controller adds this to its queue depth via
+    /// [`crate::engine::ExecutionBackend::queue_depth_hint`], so a burst
+    /// of cold tenants produces backpressure before the queue itself
+    /// fills.
+    pub fn pending_cold_loads(&self) -> usize {
+        self.lock().active_cold_pins
     }
 
     /// Currently resident bytes.
@@ -327,9 +353,7 @@ impl PinGuard<'_> {
 
 impl Drop for PinGuard<'_> {
     fn drop(&mut self) {
-        if !self.bypass {
-            self.pool.release(self.seg);
-        }
+        self.pool.release(self.seg, self.bypass, !self.hit);
     }
 }
 
@@ -361,6 +385,9 @@ pub struct PoolStats {
     /// Admissions past a tenant's quota because none of its segments
     /// were evictable.
     pub quota_overruns: u64,
+    /// Miss pins still held at snapshot time — modeled cold DRAM fills
+    /// in flight (see [`BufferPool::pending_cold_loads`]).
+    pub pending_cold_loads: usize,
     /// Median modeled cold-load latency, over a sliding window of the
     /// most recent misses (same window size as the serving engine's
     /// latency percentiles).
@@ -397,6 +424,7 @@ impl PoolStats {
             ("bypasses", Json::num(self.bypasses as f64)),
             ("overcommits", Json::num(self.overcommits as f64)),
             ("quota_overruns", Json::num(self.quota_overruns as f64)),
+            ("pending_cold_loads", Json::num(self.pending_cold_loads as f64)),
             ("cold_load_p50_ms", Json::num(self.cold_load_p50_ms)),
             ("cold_load_p95_ms", Json::num(self.cold_load_p95_ms)),
             ("cold_load_total_ms", Json::num(self.cold_load_total_ms)),
@@ -549,6 +577,24 @@ mod tests {
         assert!(s.used_bytes <= 120, "over-commit survived all releases");
         let inner = p.lock();
         assert!(inner.resident.values().all(|r| r.pins == 0), "leaked pin");
+    }
+
+    #[test]
+    fn pending_cold_loads_track_live_miss_pins() {
+        let p = pool(100, "lru");
+        assert_eq!(p.pending_cold_loads(), 0);
+        let cold = p.pin(id(1), 60, "t");
+        assert_eq!(p.pending_cold_loads(), 1, "a held miss pin is a cold fill in flight");
+        let hit = p.pin(id(1), 60, "t");
+        assert_eq!(p.pending_cold_loads(), 1, "hits never count as cold load");
+        let bypass = p.pin(id(9), 1000, "t");
+        assert_eq!(p.pending_cold_loads(), 2, "bypasses are cold fills too");
+        assert_eq!(p.stats().pending_cold_loads, 2);
+        drop(hit);
+        drop(bypass);
+        drop(cold);
+        assert_eq!(p.pending_cold_loads(), 0, "released pins retire their fills");
+        assert_eq!(p.stats().pending_cold_loads, 0);
     }
 
     #[test]

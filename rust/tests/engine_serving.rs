@@ -119,7 +119,7 @@ fn engine_overlaps_four_requests_across_two_workers() {
     let mut engine = InferenceEngine::new_paused(
         program,
         Arc::new(GateBackend { gate: Barrier::new(2) }),
-        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2 },
+        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2, ..EngineConfig::default() },
     );
     // queue all four requests before any worker exists, so each of the
     // two workers deterministically claims a batch of two
@@ -152,7 +152,7 @@ fn engine_serves_a_real_backend_under_concurrency() {
     let engine = InferenceEngine::new(
         program.clone(),
         Arc::new(VirtualAccelBackend),
-        EngineConfig { workers: 4, queue_capacity: 16, max_batch: 4 },
+        EngineConfig { workers: 4, queue_capacity: 16, max_batch: 4, ..EngineConfig::default() },
     );
     let pending: Vec<_> =
         (0..32).map(|_| engine.submit(Tensor::zeros(shape)).unwrap()).collect();
@@ -181,7 +181,7 @@ fn reference_backend_failures_are_reported_per_request() {
     let engine = InferenceEngine::new(
         program,
         Arc::new(ReferenceBackend),
-        EngineConfig { workers: 1, queue_capacity: 4, max_batch: 2 },
+        EngineConfig { workers: 1, queue_capacity: 4, max_batch: 2, ..EngineConfig::default() },
     );
     let p = engine.submit(Tensor::zeros(shape)).unwrap();
     assert!(p.wait().is_err());

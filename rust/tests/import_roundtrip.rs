@@ -202,7 +202,7 @@ fn imported_model_packs_and_serves_bit_identically_including_pooled() {
     let engine = InferenceEngine::new(
         imported.clone(),
         Arc::new(ReferenceBackend),
-        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2 },
+        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2, ..EngineConfig::default() },
     );
     let pending: Vec<_> = inputs.iter().map(|i| engine.submit(i.clone()).unwrap()).collect();
     for (p, want) in pending.into_iter().zip(&expect) {
@@ -227,7 +227,7 @@ fn imported_model_packs_and_serves_bit_identically_including_pooled() {
     let engine = InferenceEngine::new(
         imported,
         pooled,
-        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2 },
+        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2, ..EngineConfig::default() },
     );
     let pending: Vec<_> = inputs.iter().map(|i| engine.submit(i.clone()).unwrap()).collect();
     for (p, want) in pending.into_iter().zip(&expect) {

@@ -87,7 +87,12 @@ fn paging_under_pressure_is_bit_identical_to_unpooled_reference() {
                     pool.clone(),
                     format!("tenant{i}"),
                 )),
-                EngineConfig { workers: 1, queue_capacity: 4, max_batch: 1 },
+                EngineConfig {
+                    workers: 1,
+                    queue_capacity: 4,
+                    max_batch: 1,
+                    ..EngineConfig::default()
+                },
             )
         })
         .collect();
@@ -137,7 +142,7 @@ fn pinned_program_is_never_evicted_by_serving_pressure() {
     let engine = InferenceEngine::new(
         b.clone(),
         Arc::new(PooledBackend::new(Arc::new(VirtualAccelBackend), pool.clone(), "tenant-b")),
-        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2 },
+        EngineConfig { workers: 2, queue_capacity: 8, max_batch: 2, ..EngineConfig::default() },
     );
     let pending: Vec<_> = (0..8)
         .map(|_| engine.submit(Tensor::zeros(b.input_shape())).unwrap())
@@ -176,7 +181,12 @@ fn refcounts_balance_under_concurrent_serving() {
                     pool.clone(),
                     format!("tenant{i}"),
                 )),
-                EngineConfig { workers: 2, queue_capacity: 16, max_batch: 4 },
+                EngineConfig {
+                    workers: 2,
+                    queue_capacity: 16,
+                    max_batch: 4,
+                    ..EngineConfig::default()
+                },
             )
         })
         .collect();

@@ -1,10 +1,13 @@
 //! Property-based invariants over randomized graphs and policies
 //! (in-repo `testutil::prop` driver — proptest is unavailable offline).
 
+use std::collections::{HashMap, VecDeque};
+
 use shortcutfusion::alloc::{allocate, Loc};
 use shortcutfusion::analyzer::{analyze, GroupKind};
 use shortcutfusion::config::AccelConfig;
 use shortcutfusion::graph::{validate, Activation, Graph, GraphBuilder, PadMode, Shape};
+use shortcutfusion::engine::{BatchPolicy, Scheduler, SchedulerConfig, Ticket};
 use shortcutfusion::isa::ReuseMode;
 use shortcutfusion::optimizer::{basic_blocks, dram_access, segments, Optimizer};
 use shortcutfusion::sim::simulate;
@@ -222,6 +225,121 @@ fn blocks_and_segments_tile_for_random_graphs() {
         let segs = segments(&gg, &blocks);
         let total: usize = segs.iter().map(|s| s.len).sum();
         assert_eq!(total, blocks.len());
+    });
+}
+
+#[test]
+fn scheduler_conserves_requests_and_preserves_client_order() {
+    // Random op sequences against the bare batch scheduler in virtual
+    // time, mirroring what the threaded engine does: claim/join form
+    // batches, workers execute their open batch strictly FIFO, and
+    // queued tickets can expire when the clock advances. Two invariants
+    // hold at *every* step:
+    //   conservation  submitted == completed + failed + expired
+    //                              + queued + in_flight
+    //   client order  a client's executed tickets finish in submission
+    //                 order (ticket ids are globally monotonic), even
+    //                 across workers — cross-worker dispatch of a busy
+    //                 client is blocked, same-worker joins queue behind.
+    forall("scheduler conservation + per-client FIFO", 40, |rng| {
+        let workers = rng.range(1, 3);
+        let policy =
+            if rng.coin() { BatchPolicy::Continuous } else { BatchPolicy::Window };
+        let mut sched = Scheduler::new(
+            SchedulerConfig {
+                policy,
+                max_batch: rng.range(1, 4),
+                queue_capacity: rng.range(4, 12),
+                deadline_ms: None,
+            },
+            workers,
+        );
+        // mirror of each worker's open batch in dispatch (FIFO) order
+        let mut open: Vec<VecDeque<Ticket>> = vec![VecDeque::new(); workers];
+        // client -> id of their last executed-or-abandoned ticket
+        let mut last_done: HashMap<u64, u64> = HashMap::new();
+        let mut finish = |t: &Ticket, last: &mut HashMap<u64, u64>| {
+            if let Some(prev) = last.insert(t.client, t.id) {
+                assert!(
+                    prev < t.id,
+                    "client {} finished ticket {} after {}",
+                    t.client,
+                    t.id,
+                    prev
+                );
+            }
+        };
+        let mut now = 0.0f64;
+        for _ in 0..60 {
+            match rng.range(0, 5) {
+                0 | 1 => {
+                    // bias toward submission so queues actually build up
+                    let client = rng.range(1, 4) as u64;
+                    let deadline =
+                        if rng.coin() { Some(now + rng.range(1, 20) as f64) } else { None };
+                    let _ = sched.submit(client, now, deadline, 0);
+                }
+                2 => {
+                    let w = rng.range(0, workers - 1);
+                    open[w].extend(sched.claim(w, now));
+                    open[w].extend(sched.join(w, now));
+                }
+                3 => {
+                    // execute the front of a worker's open batch (FIFO,
+                    // exactly like the engine's worker loop)
+                    let w = rng.range(0, workers - 1);
+                    if let Some(t) = open[w].pop_front() {
+                        if rng.coin() {
+                            let _ = sched.complete(w, t.id, now);
+                        } else {
+                            sched.fail(w, t.id);
+                        }
+                        finish(&t, &mut last_done);
+                    }
+                }
+                4 => {
+                    // overdue at dispatch: abandon the front unexecuted
+                    let w = rng.range(0, workers - 1);
+                    if let Some(t) = open[w].pop_front() {
+                        sched.abandon(w, t.id);
+                        finish(&t, &mut last_done);
+                    }
+                }
+                _ => {
+                    now += rng.range(0, 5) as f64;
+                    // expired tickets leave the queue; their waiters get
+                    // a typed error in the engine — nothing to mirror
+                    let _ = sched.expire(now);
+                }
+            }
+            let c = sched.counters();
+            assert_eq!(
+                c.submitted,
+                c.completed
+                    + c.failed
+                    + c.expired
+                    + sched.queued() as u64
+                    + sched.in_flight() as u64,
+                "conservation broken after an op (policy {policy:?})"
+            );
+        }
+        // drain: every accepted request must reach a terminal state
+        let mut guard = 0;
+        while sched.queued() + sched.in_flight() > 0 {
+            guard += 1;
+            assert!(guard < 10_000, "drain did not converge");
+            for w in 0..workers {
+                open[w].extend(sched.claim(w, now));
+                open[w].extend(sched.join(w, now));
+                if let Some(t) = open[w].pop_front() {
+                    let _ = sched.complete(w, t.id, now);
+                    finish(&t, &mut last_done);
+                }
+            }
+        }
+        let c = sched.counters();
+        assert_eq!(c.submitted, c.completed + c.failed + c.expired);
+        assert_eq!(c.deadline_misses(), c.expired + c.late);
     });
 }
 

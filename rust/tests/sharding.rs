@@ -123,7 +123,7 @@ fn inference_engine_serves_a_sharded_model() {
     let engine = InferenceEngine::new(
         front.clone(),
         Arc::new(chain),
-        EngineConfig { workers: 2, queue_capacity: 16, max_batch: 4 },
+        EngineConfig { workers: 2, queue_capacity: 16, max_batch: 4, ..EngineConfig::default() },
     );
     let pending: Vec<_> = (0..8)
         .map(|_| engine.submit(Tensor::zeros(front.input_shape())).unwrap())
