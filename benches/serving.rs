@@ -10,8 +10,12 @@
 //! a single accelerator instance per worker), and the scheduler's
 //! mid-batch join count.
 //!
-//! Run: `cargo bench --bench serving` (or `cargo run --release --bin ...`
-//! style via the harness-free bench target).
+//! Run: `cargo bench --bench serving [-- --json-out FILE]` (or
+//! `cargo run --release --bin ...` style via the harness-free bench
+//! target). `--json-out` writes one row per (policy, workers, batch)
+//! cell — including deadline misses and the engine's always-on
+//! queue-wait / batch-size histograms — so `scripts/bench_diff.py` can
+//! compare continuous against window batching across trajectory points.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -20,10 +24,11 @@ use shortcutfusion::bench::Table;
 use shortcutfusion::compiler::Compiler;
 use shortcutfusion::config::AccelConfig;
 use shortcutfusion::engine::{
-    BatchPolicy, EngineConfig, InferenceEngine, VirtualAccelBackend,
+    BatchPolicy, EngineConfig, EngineStats, InferenceEngine, VirtualAccelBackend,
 };
 use shortcutfusion::funcsim::Tensor;
 use shortcutfusion::program::Program;
+use shortcutfusion::serialize::Json;
 use shortcutfusion::testutil::Rng;
 use shortcutfusion::zoo;
 
@@ -36,7 +41,31 @@ fn pack_model() -> Arc<Program> {
     Arc::new(compiler.pack(&lowered).expect("pack"))
 }
 
+/// One measured sweep cell, JSON-ready.
+fn row_json(policy: &str, workers: usize, batch: usize, wall_ms: f64, stats: &EngineStats) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(policy)),
+        ("workers", Json::num(workers as f64)),
+        ("batch", Json::num(batch as f64)),
+        ("wall_ms", Json::num(wall_ms)),
+        ("completed", Json::num(stats.completed as f64)),
+        ("deadline_misses", Json::num(stats.deadline_misses as f64)),
+        ("joined", Json::num(stats.joined as f64)),
+        ("batches", Json::num(stats.batches as f64)),
+        ("p50_ms", Json::num(stats.p50_ms)),
+        ("p95_ms", Json::num(stats.p95_ms)),
+        ("mean_wait_ms", Json::num(stats.mean_wait_ms)),
+        ("queue_wait_ms_hist", stats.queue_wait_ms_hist.to_json()),
+        ("batch_size_hist", stats.batch_size_hist.to_json()),
+    ])
+}
+
 fn main() {
+    let json_out = std::env::args()
+        .collect::<Vec<_>>()
+        .windows(2)
+        .find(|w| w[0] == "--json-out")
+        .map(|w| w[1].clone());
     let program = pack_model();
     // exercise the on-disk path too: serve what was loaded, not what was packed
     let program = Arc::new(Program::from_bytes(&program.to_bytes()).expect("load"));
@@ -69,6 +98,7 @@ fn main() {
         ],
     );
 
+    let mut rows = Vec::new();
     for &policy in &[BatchPolicy::Continuous, BatchPolicy::Window] {
         for &workers in &[1usize, 2, 4] {
             for &batch in &[1usize, 4, 8] {
@@ -111,8 +141,21 @@ fn main() {
                     stats.batches.to_string(),
                     stats.joined.to_string(),
                 ]);
+                rows.push(row_json(stats.policy, workers, batch, wall_ms, &stats));
             }
         }
     }
     t.print();
+
+    if let Some(path) = json_out {
+        let doc = Json::obj(vec![
+            ("model", Json::str(program.model())),
+            ("requests", Json::num(requests as f64)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let mut text = doc.to_string_pretty();
+        text.push('\n');
+        std::fs::write(&path, text).expect("write --json-out");
+        println!("wrote {path}");
+    }
 }

@@ -48,6 +48,10 @@ pub struct AllocResult {
     pub aux_peak: usize,
     /// Extra DRAM traffic caused by capacity evictions (bytes).
     pub spill_bytes: u64,
+    /// The writeback portion of `spill_bytes` (one store per eviction);
+    /// the remainder is re-read traffic. Lets the attribution model
+    /// charge spill stores as `ofm` and spill re-reads as `ifm`.
+    pub spill_write_bytes: u64,
     /// Number of eviction events behind `spill_bytes`.
     pub spill_events: usize,
 }
@@ -74,6 +78,7 @@ pub fn allocate(gg: &GroupedGraph, policy: &[ReuseMode], cfg: &AccelConfig) -> A
     let mut aux_peak = 0usize;
     let mut aux_now = 0usize;
     let mut spill_bytes = 0u64;
+    let mut spill_write_bytes = 0u64;
     let mut spill_events = 0usize;
 
     // Buffer occupancy: which producer's tensor sits in each buffer.
@@ -145,6 +150,7 @@ pub fn allocate(gg: &GroupedGraph, policy: &[ReuseMode], cfg: &AccelConfig) -> A
                     pinned,
                     gi,
                     &mut spill_bytes,
+                    &mut spill_write_bytes,
                     &mut spill_events,
                 );
                 if let Some(t) = live[src.0].as_mut() {
@@ -201,6 +207,7 @@ pub fn allocate(gg: &GroupedGraph, policy: &[ReuseMode], cfg: &AccelConfig) -> A
                 pinned,
                 gi,
                 &mut spill_bytes,
+                &mut spill_write_bytes,
                 &mut spill_events,
             );
             buf_owner[b as usize] = Some(gi);
@@ -219,7 +226,7 @@ pub fn allocate(gg: &GroupedGraph, policy: &[ReuseMode], cfg: &AccelConfig) -> A
         assigns.push(BufAssign { in_loc, out_loc, aux_loc, also_dram, staged_input });
     }
 
-    AllocResult { assigns, buf_peak, aux_peak, spill_bytes, spill_events }
+    AllocResult { assigns, buf_peak, aux_peak, spill_bytes, spill_write_bytes, spill_events }
 }
 
 fn pinned_bufs(locs: &[Option<Loc>]) -> [bool; 3] {
@@ -265,6 +272,7 @@ fn take_buffer(
     pinned: [bool; 3],
     _for_group: usize,
     spill_bytes: &mut u64,
+    spill_write_bytes: &mut u64,
     spill_events: &mut usize,
 ) -> u8 {
     for b in 0..3u8 {
@@ -286,6 +294,7 @@ fn take_buffer(
     if let Some(t) = live[owner].as_mut() {
         // write back + one read per remaining use
         *spill_bytes += (t.bytes * (1 + t.pending_uses.len())) as u64;
+        *spill_write_bytes += t.bytes as u64;
         *spill_events += 1;
         t.loc = Loc::Dram;
     }

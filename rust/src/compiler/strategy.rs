@@ -129,6 +129,12 @@ impl ReuseStrategy for ShortcutMiningStrategy {
         e.dram.weight_bytes = weights;
         e.dram.spill_bytes = 0;
         e.dram.total = fm + weights;
+        // Reconcile the class attribution with [8]'s model: shortcut
+        // operands are mined on chip (class zeroed), the remaining fm
+        // ratio from the structural walk is rescaled onto [8]'s fm total.
+        e.dram.classes.shortcut = 0;
+        e.dram.classes = e.dram.classes.rescale_fm(fm);
+        e.dram.classes.weights = weights;
         Ok(e)
     }
 }
@@ -165,6 +171,10 @@ impl ReuseStrategy for SmartShuttleStrategy {
         e.dram.weight_bytes = weights;
         e.dram.spill_bytes = 0;
         e.dram.total = r.dram_bytes;
+        // Reconcile the classes with [12]'s totals: keep the structural
+        // class ratios, rescale their sum onto the published fm bytes.
+        e.dram.classes = e.dram.classes.rescale_fm(e.dram.fm_bytes);
+        e.dram.classes.weights = weights;
         Ok(e)
     }
 }
@@ -212,6 +222,10 @@ fn evaluate_tiled(
     dram.fm_bytes += over.halo_fm_extra;
     dram.weight_bytes += over.weight_extra;
     dram.total += over.halo_fm_extra + over.weight_extra;
+    // tile overheads by class: halo overreads are input traffic, weight
+    // restreams are parameter traffic
+    dram.classes.ifm += over.halo_fm_extra;
+    dram.classes.weights += over.weight_extra;
     let latency_ms = simulate_with_tiles(gg, &policy, &alloc, cfg, Some(&plan)).latency_ms;
     let feasible = sram.total <= cfg.sram_budget && sram.bram18k <= cfg.bram18k_total;
     Evaluation {

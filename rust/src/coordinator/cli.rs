@@ -6,18 +6,18 @@
 //! shortcutfusion compile <model> [--input N] [--config FILE] [--strategy S]
 //! shortcutfusion pack    <model> [--input N] [--config FILE] [--strategy S]
 //!                        [--params FILE | --random-params] --out FILE
-//! shortcutfusion run     FILE [--backend B] [--seed N]
+//! shortcutfusion run     FILE [--backend B] [--seed N] [--trace-out FILE]
 //! shortcutfusion serve-bench FILE [--backend B] [--requests N] [--workers N]
 //!                        [--batch N] [--queue N] [--batch-policy continuous|window]
 //!                        [--deadline-ms X] [--max-deadline-misses N] [--burst N]
-//!                        [--burst-gap-ms X] [--json-out FILE]
+//!                        [--burst-gap-ms X] [--json-out FILE] [--trace-out FILE]
 //! shortcutfusion serve-zoo <model> [<model> ...] [--input N] [--config FILE]
 //!                        [--backend B] [--pool-mb X] [--policy P] [--quota-mb X]
 //!                        [--link-gbps X] [--link-latency-us X] [--rounds N]
 //!                        [--requests N] [--workers N] [--batch N]
 //!                        [--batch-policy continuous|window] [--deadline-ms X]
 //!                        [--random-params] [--verify] [--json-out FILE]
-//!                        [--expect-evictions]
+//!                        [--expect-evictions] [--trace-out FILE]
 //! shortcutfusion explore <model> [...] [--sram-budgets N,N] [--mac RxC,...]
 //!                        [--dram-gbps X,...] [--strategies S,...] [--input N]
 //!                        [--max-bram N] [--max-dram-gbps X] [--max-dsp N]
@@ -47,8 +47,8 @@ use crate::bench::Table;
 use crate::compiler::{strategy, CompileError, Compiler, Session};
 use crate::config::AccelConfig;
 use crate::engine::{
-    backend_by_name, BatchPolicy, EngineConfig, EngineStats, ExecutionBackend,
-    InferenceEngine, ReferenceBackend, BACKEND_NAMES,
+    backend_by_name, BatchPolicy, Clock, EngineConfig, EngineStats, ExecutionBackend,
+    InferenceEngine, RealClock, ReferenceBackend, BACKEND_NAMES,
 };
 use crate::explorer::{ExplorePoint, Exploration, SearchSpace};
 use crate::funcsim::{Params, Tensor};
@@ -57,6 +57,7 @@ use crate::pool::{policy_by_name, BufferPool, PoolConfig, PooledBackend, POLICY_
 use crate::program::Program;
 use crate::shard::{LinkModel, Objective, Partitioner, ShardPlan};
 use crate::serialize::{load_frozen, save_frozen};
+use crate::telemetry::{TraceEvent, TraceRecorder, TraceSink};
 use crate::testutil::Rng;
 use crate::zoo;
 use crate::Result;
@@ -74,12 +75,14 @@ COMMANDS:
     pack <model> [--input N] [--config FILE] [--strategy S]
          [--params FILE | --random-params] --out FILE
                                  compile and pack a deployable program artifact
-    run FILE [--backend B] [--seed N]
-                                 execute a packed program once
+    run FILE [--backend B] [--seed N] [--trace-out FILE]
+                                 execute a packed program once (--trace-out
+                                 writes the run's span as Chrome trace-event
+                                 JSON, loadable in chrome://tracing / Perfetto)
     serve-bench FILE [--backend B] [--requests N] [--workers N] [--batch N] [--queue N]
                 [--batch-policy continuous|window] [--deadline-ms X]
                 [--max-deadline-misses N] [--burst N] [--burst-gap-ms X]
-                [--json-out FILE]
+                [--json-out FILE] [--trace-out FILE]
                                  serve a packed program through the inference
                                  engine and print the serving stats (--burst
                                  submits in bursts of N separated by
@@ -87,20 +90,24 @@ COMMANDS:
                                  SLO; --max-deadline-misses exits nonzero when
                                  the engine missed more deadlines than allowed;
                                  --json-out additionally writes the stats as
-                                 machine-readable JSON)
+                                 machine-readable JSON; --trace-out writes the
+                                 request-lifecycle trace as Chrome trace-event
+                                 JSON)
     serve-zoo <model> [<model> ...] [--input N] [--config FILE] [--backend B]
               [--pool-mb X] [--policy P] [--quota-mb X] [--link-gbps X]
               [--link-latency-us X] [--rounds N] [--requests N] [--workers N]
               [--batch N] [--batch-policy continuous|window] [--deadline-ms X]
               [--random-params] [--verify] [--json-out FILE]
-              [--expect-evictions]
+              [--expect-evictions] [--trace-out FILE]
                                  serve several models through one multi-tenant
                                  device-DRAM buffer pool, one engine + tenant per
                                  model (default pool: half the combined weight
                                  footprint, so paging is visible; --verify checks
                                  pooled reference outputs bit-identical to
                                  unpooled runs; --expect-evictions exits nonzero
-                                 unless the pool evicted and no request failed)
+                                 unless the pool evicted and no request failed;
+                                 --trace-out merges request + pool events from
+                                 every tenant into one Chrome trace-event file)
     explore <model> [<model> ...] [--config FILE] [--input N]
             [--sram-budgets N,N,..] [--mac RxC,..] [--dram-gbps X,..]
             [--strategies S,..] [--max-bram N] [--max-dram-gbps X] [--max-dsp N]
@@ -294,6 +301,16 @@ fn cmd_compile(args: &[String]) -> Result<()> {
         r.baseline_once_mb(),
         r.reduction_pct()
     );
+    let c = &r.evaluation.dram.classes;
+    println!(
+        "DRAM by class: weights {:.2} MB, ifm {:.2} MB, ofm {:.2} MB, shortcut {:.2} MB \
+         ({:.1} % of feature-map traffic)",
+        c.weights as f64 / 1e6,
+        c.ifm as f64 / 1e6,
+        c.ofm as f64 / 1e6,
+        c.shortcut as f64 / 1e6,
+        c.shortcut_share() * 100.0
+    );
     println!(
         "power: {:.1} W (chip {:.1} + DRAM {:.1}) -> {:.1} GOPS/W",
         r.power.total_w, r.power.chip_w, r.power.dram_w, r.power.gops_per_w
@@ -415,7 +432,10 @@ fn cmd_run(args: &[String]) -> Result<()> {
         program.input_shape(),
     );
     let input = program_input(&program, seed);
+    let clock = RealClock::new();
+    let t0 = clock.now_ms();
     let r = backend.run(&program, &input)?;
+    let wall_ms = clock.now_ms() - t0;
     if let Some(out) = &r.output {
         let preview: Vec<i8> = out.data.iter().copied().take(8).collect();
         println!("output: shape {}, first values {preview:?}", out.shape);
@@ -425,6 +445,27 @@ fn cmd_run(args: &[String]) -> Result<()> {
     }
     if let Some(bytes) = r.dram_bytes {
         println!("DRAM traffic: {:.2} MB per inference", bytes as f64 / 1e6);
+    }
+    if let Some(c) = &r.traffic_classes {
+        println!(
+            "DRAM by class: weights {:.2} MB, ifm {:.2} MB, ofm {:.2} MB, shortcut {:.2} MB \
+             ({:.1} % of feature-map traffic)",
+            c.weights as f64 / 1e6,
+            c.ifm as f64 / 1e6,
+            c.ofm as f64 / 1e6,
+            c.shortcut as f64 / 1e6,
+            c.shortcut_share() * 100.0
+        );
+    }
+    if let Some(path) = flag_value(args, "--trace-out") {
+        // a single run has no engine lifecycle: export the one run span,
+        // with modeled latency when the backend reports one
+        let rec = TraceRecorder::new();
+        rec.record(
+            TraceEvent::span("request", "run", t0, r.model_latency_ms.unwrap_or(wall_ms), 1)
+                .arg("dram_bytes", r.dram_bytes.unwrap_or(0) as f64),
+        );
+        write_trace(&path, &rec)?;
     }
     Ok(())
 }
@@ -454,11 +495,16 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     let burst = parse_count(args, "--burst", 0)?;
     let burst_gap_ms = parse_float(args, "--burst-gap-ms", 2.0)?;
 
-    let engine = InferenceEngine::new(
+    let trace = flag_value(args, "--trace-out").map(|p| (p, Arc::new(TraceRecorder::new())));
+    let mut engine = InferenceEngine::new_paused(
         program.clone(),
         backend,
         EngineConfig { workers, queue_capacity, max_batch, policy, deadline_ms },
     );
+    if let Some((_, rec)) = &trace {
+        engine = engine.with_trace(rec.clone());
+    }
+    engine.start();
     let mut pending = Vec::with_capacity(requests);
     for i in 0..requests {
         if burst > 0 && i > 0 && i % burst == 0 && burst_gap_ms > 0.0 {
@@ -507,6 +553,9 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     if let Some(path) = flag_value(args, "--json-out") {
         // machine-readable stats for CI bench-trajectory files
         write_json(&path, &engine_stats_json(&stats))?;
+    }
+    if let Some((path, rec)) = &trace {
+        write_trace(path, rec)?;
     }
     if let Some(limit) = flag_value(args, "--max-deadline-misses") {
         let limit: u64 = limit.parse().map_err(|_| {
@@ -612,6 +661,14 @@ fn cmd_serve_zoo(args: &[String]) -> Result<()> {
     }
     let pool = Arc::new(BufferPool::new(pool_cfg, policy)?);
 
+    // one recorder + one clock shared by every tenant engine and the
+    // pool, so request and pool events interleave on one timeline
+    let trace = flag_value(args, "--trace-out").map(|p| (p, Arc::new(TraceRecorder::new())));
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    if let Some((_, rec)) = &trace {
+        pool.set_trace(clock.clone(), rec.clone());
+    }
+
     let rounds = parse_count(args, "--rounds", 3)?;
     let requests = parse_count(args, "--requests", 4)?;
     let workers = parse_count(args, "--workers", 2)?;
@@ -628,7 +685,7 @@ fn cmd_serve_zoo(args: &[String]) -> Result<()> {
     let engines: Vec<InferenceEngine> = programs
         .iter()
         .map(|p| {
-            InferenceEngine::new(
+            let mut e = InferenceEngine::new_paused_with_clock(
                 p.clone(),
                 Arc::new(PooledBackend::new(backend.clone(), pool.clone(), p.model())),
                 EngineConfig {
@@ -638,7 +695,13 @@ fn cmd_serve_zoo(args: &[String]) -> Result<()> {
                     policy: batch_policy,
                     deadline_ms,
                 },
-            )
+                clock.clone(),
+            );
+            if let Some((_, rec)) = &trace {
+                e = e.with_trace(rec.clone());
+            }
+            e.start();
+            e
         })
         .collect();
 
@@ -738,6 +801,9 @@ fn cmd_serve_zoo(args: &[String]) -> Result<()> {
         ]);
         write_json(&path, &doc)?;
     }
+    if let Some((path, rec)) = &trace {
+        write_trace(path, rec)?;
+    }
 
     if args.iter().any(|a| a == "--expect-evictions") {
         let failed: u64 = per_model.iter().map(|s| s.failed).sum();
@@ -804,6 +870,9 @@ fn engine_stats_json(stats: &EngineStats) -> crate::serialize::Json {
             "pool",
             stats.pool.as_ref().map(|p| p.to_json()).unwrap_or(Json::Null),
         ),
+        ("queue_wait_ms_hist", stats.queue_wait_ms_hist.to_json()),
+        ("batch_size_hist", stats.batch_size_hist.to_json()),
+        ("cold_load_ms_hist", stats.cold_load_ms_hist.to_json()),
     ])
 }
 
@@ -812,6 +881,14 @@ fn write_json(path: &str, doc: &crate::serialize::Json) -> Result<()> {
     let mut text = doc.to_string_pretty();
     text.push('\n');
     std::fs::write(path, text).map_err(|e| CompileError::io(path, e))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Write a recorder's Chrome trace-event JSON to `path` (load it in
+/// chrome://tracing or Perfetto).
+fn write_trace(path: &str, rec: &TraceRecorder) -> Result<()> {
+    std::fs::write(path, rec.export_chrome()).map_err(|e| CompileError::io(path, e))?;
     println!("wrote {path}");
     Ok(())
 }
@@ -1126,7 +1203,7 @@ fn render_explore_text(
         ),
         &[
             "model", "input", "strategy", "Ti-To", "budget MB", "GB/s", "latency ms",
-            "DRAM MB", "SRAM KB", "BRAM", "feasible", "front",
+            "DRAM MB", "sc %", "SRAM KB", "BRAM", "feasible", "front",
         ],
     );
     for p in &exploration.points {
@@ -1147,6 +1224,7 @@ fn render_explore_text(
             format!("{:.1}", p.cfg.dram_gbps),
             format!("{:.3}", p.latency_ms),
             format!("{:.2}", p.dram_mb()),
+            format!("{:.1}", p.classes.shortcut_share() * 100.0),
             format!("{:.0}", p.sram_kb()),
             p.bram18k.to_string(),
             p.feasible.to_string(),
@@ -1191,12 +1269,13 @@ fn render_explore_csv(
 ) -> String {
     let mut out = String::from(
         "model,input,strategy,ti,to,sram_budget,dram_gbps,latency_ms,dram_bytes,\
+         weight_bytes,ifm_bytes,ofm_bytes,shortcut_bytes,\
          sram_bytes,bram18k,gops,reduction_pct,feasible,pareto,recommended\n",
     );
     for p in &exploration.points {
         let k = (p.model.clone(), p.input, p.strategy_name().to_string(), p.cfg.name.clone());
         out.push_str(&format!(
-            "{},{},{},{},{},{},{:.3},{:.6},{},{},{},{:.2},{:.2},{},{},{}\n",
+            "{},{},{},{},{},{},{:.3},{:.6},{},{},{},{},{},{},{},{:.2},{:.2},{},{},{}\n",
             p.model,
             p.input,
             p.strategy_name(),
@@ -1206,6 +1285,10 @@ fn render_explore_csv(
             p.cfg.dram_gbps,
             p.latency_ms,
             p.dram_bytes,
+            p.classes.weights,
+            p.classes.ifm,
+            p.classes.ofm,
+            p.classes.shortcut,
             p.sram_bytes,
             p.bram18k,
             p.gops,

@@ -38,6 +38,7 @@ impl ExecutionBackend for ReferenceBackend {
             model_latency_ms: None,
             dram_bytes: None,
             cold_load_ms: None,
+            traffic_classes: None,
         })
     }
 }
@@ -79,6 +80,7 @@ impl ExecutionBackend for VirtualAccelBackend {
             model_latency_ms: Some(timing.latency_ms),
             dram_bytes: Some(traffic.dram_total()),
             cold_load_ms: None,
+            traffic_classes: Some(traffic.classes),
         })
     }
 }

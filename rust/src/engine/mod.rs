@@ -95,6 +95,11 @@ pub struct RunResult {
     /// into device DRAM before execution (0 on a pool hit), when the
     /// request went through a [`crate::pool::PooledBackend`].
     pub cold_load_ms: Option<f64>,
+    /// Per-tensor-class breakdown of `dram_bytes`
+    /// (`{weights, ifm, ofm, shortcut}`), when the backend replays
+    /// traffic. `classes.total() == dram_bytes` for the virtual
+    /// accelerator; sharded chains sum the per-shard classes.
+    pub traffic_classes: Option<crate::telemetry::ClassBytes>,
 }
 
 /// Anything that can execute a packed [`Program`] on one input.

@@ -20,6 +20,15 @@
 //! per-request deadlines surface as typed
 //! [`CompileError::DeadlineMiss`] errors and
 //! [`EngineStats::deadline_misses`].
+//!
+//! The engine is observable: always-on atomic histograms (queue wait,
+//! batch size, cold-load time — snapshotted into [`EngineStats`]) and an
+//! optional [`crate::telemetry::TraceSink`] attached via
+//! [`InferenceEngine::with_trace`] that records every request's
+//! lifecycle on the engine's clock. The default sink is
+//! [`crate::telemetry::NullSink`]; its `enabled()` check gates event
+//! construction, so the submit/complete path never allocates for
+//! telemetry unless a recorder is attached.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -32,6 +41,9 @@ use super::{Clock, ExecutionBackend, RealClock, RunResult};
 use crate::compiler::CompileError;
 use crate::funcsim::Tensor;
 use crate::program::Program;
+use crate::telemetry::{
+    Histogram, HistogramSnapshot, NullSink, TraceEvent, TraceSink, BATCH_BOUNDS, MS_BOUNDS,
+};
 use crate::Result;
 
 /// Serving knobs. Zero sizes are clamped to 1.
@@ -180,6 +192,16 @@ struct Shared {
     /// Stamped at construction and re-stamped when the workers start, so
     /// a paused engine's queue-filling time never deflates throughput.
     started: Mutex<Instant>,
+    /// Request-lifecycle trace sink ([`NullSink`] unless attached via
+    /// [`InferenceEngine::with_trace`]); `enabled()` is checked before
+    /// any event is even built, so the default costs one virtual call.
+    trace: Arc<dyn TraceSink>,
+    /// Always-on distributions (atomic; the record path never
+    /// allocates): dispatch wait, claimed batch size, pool cold-load
+    /// time. Snapshotted into [`EngineStats`].
+    hist_queue_wait: Histogram,
+    hist_batch_size: Histogram,
+    hist_cold_load: Histogram,
 }
 
 /// Snapshot of an engine's counters (see [`InferenceEngine::stats`]).
@@ -234,6 +256,16 @@ pub struct EngineStats {
     /// percentiles) when the serving backend pages weights through a
     /// [`crate::pool::BufferPool`]; `None` for unpooled backends.
     pub pool: Option<crate::pool::PoolStats>,
+    /// Dispatch-wait distribution over completed requests
+    /// ([`crate::telemetry::MS_BOUNDS`] buckets; always on).
+    pub queue_wait_ms_hist: HistogramSnapshot,
+    /// Claimed-batch-size distribution, one sample per batch formed
+    /// ([`crate::telemetry::BATCH_BOUNDS`] buckets).
+    pub batch_size_hist: HistogramSnapshot,
+    /// Pool cold-load-time distribution; samples land only when the
+    /// backend reports [`RunResult::cold_load_ms`]
+    /// ([`crate::telemetry::MS_BOUNDS`] buckets).
+    pub cold_load_ms_hist: HistogramSnapshot,
 }
 
 /// Serves concurrent inference requests against one packed program.
@@ -332,8 +364,31 @@ impl InferenceEngine {
             policy: cfg.policy,
             next_client: AtomicU64::new(1 << 63),
             started: Mutex::new(Instant::now()),
+            trace: Arc::new(NullSink),
+            hist_queue_wait: Histogram::new(MS_BOUNDS),
+            hist_batch_size: Histogram::new(BATCH_BOUNDS),
+            hist_cold_load: Histogram::new(MS_BOUNDS),
         });
         InferenceEngine { shared, workers: Vec::new(), worker_count }
+    }
+
+    /// Attach a trace sink recording the request lifecycle — `submit`,
+    /// `reject`, `claim`, `join`, `run`, `complete`, `fail`, `expire`
+    /// instants/spans under category `"request"`, with the ticket id as
+    /// the trace thread id. Every timestamp comes from the engine's
+    /// [`Clock`], so a [`super::VirtualClock`] makes the exported trace
+    /// byte-deterministic. Build the engine paused
+    /// ([`InferenceEngine::new_paused`] /
+    /// [`InferenceEngine::new_paused_with_clock`]), attach, then
+    /// [`InferenceEngine::start`].
+    ///
+    /// # Panics
+    /// Panics if the workers are already running.
+    pub fn with_trace(mut self, trace: Arc<dyn TraceSink>) -> InferenceEngine {
+        Arc::get_mut(&mut self.shared)
+            .expect("attach the trace sink before starting the workers")
+            .trace = trace;
+        self
     }
 
     /// Spawn the worker threads (no-op if already running).
@@ -375,11 +430,16 @@ impl InferenceEngine {
                 return Err(CompileError::Exec("engine is shut down".into()));
             }
             let now = self.shared.clock.now_ms();
-            deliver_expired(&mut st, now);
+            deliver_expired(&self.shared, &mut st, now);
             let ticket = st
                 .sched
                 .submit(self.client_of(opts), now, opts.deadline_ms.map(|d| now + d), 0)
                 .expect("capacity was checked under the same lock");
+            if self.shared.trace.enabled() {
+                self.shared
+                    .trace
+                    .record(TraceEvent::instant("request", "submit", now, ticket.id));
+            }
             st.jobs.insert(ticket.id, Payload { input, tx });
         }
         self.shared.not_empty.notify_one();
@@ -403,7 +463,7 @@ impl InferenceEngine {
                 return Err(CompileError::Exec("engine is shut down".into()));
             }
             let now = self.shared.clock.now_ms();
-            deliver_expired(&mut st, now);
+            deliver_expired(&self.shared, &mut st, now);
             let extra = self.shared.backend.queue_depth_hint();
             match st.sched.submit(
                 self.client_of(opts),
@@ -412,9 +472,20 @@ impl InferenceEngine {
                 extra,
             ) {
                 Ok(ticket) => {
+                    if self.shared.trace.enabled() {
+                        self.shared
+                            .trace
+                            .record(TraceEvent::instant("request", "submit", now, ticket.id));
+                    }
                     st.jobs.insert(ticket.id, Payload { input, tx });
                 }
                 Err(rej) => {
+                    if self.shared.trace.enabled() {
+                        self.shared.trace.record(
+                            TraceEvent::instant("request", "reject", now, 0)
+                                .arg("depth", rej.depth as f64),
+                        );
+                    }
                     return Err(CompileError::Rejected {
                         depth: rej.depth,
                         deadline_ms: rej.deadline_ms,
@@ -438,7 +509,7 @@ impl InferenceEngine {
         {
             let mut st = self.shared.state.lock().unwrap();
             let now = self.shared.clock.now_ms();
-            deliver_expired(&mut st, now);
+            deliver_expired(&self.shared, &mut st, now);
         }
         snapshot(&self.shared)
     }
@@ -477,13 +548,17 @@ impl Drop for InferenceEngine {
 /// Expire overdue queued tickets and answer their waiters with the
 /// typed deadline error. Called under the state lock on every queue
 /// touch (submit, claim, join, stats).
-fn deliver_expired(st: &mut State, now_ms: f64) {
+fn deliver_expired(shared: &Shared, st: &mut State, now_ms: f64) {
     for t in st.sched.expire(now_ms) {
         if let Some(p) = st.jobs.remove(&t.id) {
-            let _ = p.tx.send(Err(CompileError::DeadlineMiss {
-                deadline_ms: t.deadline_ms.expect("expired tickets carry deadlines"),
-                now_ms,
-            }));
+            let deadline_ms = t.deadline_ms.expect("expired tickets carry deadlines");
+            if shared.trace.enabled() {
+                shared.trace.record(
+                    TraceEvent::instant("request", "expire", now_ms, t.id)
+                        .arg("deadline_ms", deadline_ms),
+                );
+            }
+            let _ = p.tx.send(Err(CompileError::DeadlineMiss { deadline_ms, now_ms }));
         }
     }
 }
@@ -505,7 +580,7 @@ fn worker_loop(shared: Arc<Shared>, wid: usize) {
             let mut st = shared.state.lock().unwrap();
             loop {
                 let now = shared.clock.now_ms();
-                deliver_expired(&mut st, now);
+                deliver_expired(&shared, &mut st, now);
                 let claimed = st.sched.claim(wid, now);
                 if !claimed.is_empty() {
                     break claimed
@@ -522,6 +597,15 @@ fn worker_loop(shared: Arc<Shared>, wid: usize) {
             }
         };
         shared.not_full.notify_all();
+        shared.hist_batch_size.record(batch.len() as f64);
+        if shared.trace.enabled() {
+            for d in &batch {
+                shared.trace.record(
+                    TraceEvent::instant("request", "claim", d.admitted_ms, d.ticket.id)
+                        .arg("worker", wid as f64),
+                );
+            }
+        }
 
         match shared.policy {
             BatchPolicy::Window => run_window(&shared, wid, batch),
@@ -547,9 +631,19 @@ fn run_window(shared: &Shared, wid: usize, batch: VecDeque<Dispatched>) {
         inputs.push(d.input);
         replies.push((d.ticket, d.admitted_ms, d.tx));
     }
+    let ts0 = shared.clock.now_ms();
     let t0 = Instant::now();
     let mut results = shared.backend.run_batch(&shared.program, &inputs).into_iter();
-    let wall_each = t0.elapsed().as_secs_f64() * 1e3 / inputs.len() as f64;
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+    let wall_each = wall / inputs.len() as f64;
+    if shared.trace.enabled() {
+        // one span for the whole window (the window path executes the
+        // batch as a unit); its duration is measured wall time
+        shared.trace.record(
+            TraceEvent::span("request", "run", ts0, wall, wid as u64)
+                .arg("batch", inputs.len() as f64),
+        );
+    }
 
     // walk the replies (not a zip) so a misbehaving run_batch override
     // that returns too few results still answers every waiter and
@@ -574,14 +668,30 @@ fn run_continuous(shared: &Shared, wid: usize, mut batch: VecDeque<Dispatched>) 
         if d.ticket.deadline_ms.is_some_and(|dl| dl < now) {
             // overdue before dispatch: don't burn device time on it
             shared.state.lock().unwrap().sched.abandon(wid, d.ticket.id);
-            let _ = d.tx.send(Err(CompileError::DeadlineMiss {
-                deadline_ms: d.ticket.deadline_ms.expect("checked above"),
-                now_ms: now,
-            }));
+            let deadline_ms = d.ticket.deadline_ms.expect("checked above");
+            if shared.trace.enabled() {
+                shared.trace.record(
+                    TraceEvent::instant("request", "expire", now, d.ticket.id)
+                        .arg("deadline_ms", deadline_ms),
+                );
+            }
+            let _ = d.tx.send(Err(CompileError::DeadlineMiss { deadline_ms, now_ms: now }));
         } else {
+            let ts0 = shared.clock.now_ms();
             let t0 = Instant::now();
             let res = shared.backend.run(&shared.program, &d.input);
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            if shared.trace.enabled() {
+                // span duration is the model's latency when the backend
+                // reports one (deterministic under a virtual clock),
+                // else measured wall time
+                let service =
+                    res.as_ref().ok().and_then(|r| r.model_latency_ms).unwrap_or(wall_ms);
+                shared.trace.record(
+                    TraceEvent::span("request", "run", ts0, service, d.ticket.id)
+                        .arg("worker", wid as f64),
+                );
+            }
             let wait_ms = (d.admitted_ms - d.ticket.enqueued_ms).max(0.0);
             finish_one(shared, wid, &d.ticket, d.tx, res, wait_ms, wall_ms);
         }
@@ -590,11 +700,17 @@ fn run_continuous(shared: &Shared, wid: usize, mut batch: VecDeque<Dispatched>) 
         let joined_any = {
             let mut st = shared.state.lock().unwrap();
             let now = shared.clock.now_ms();
-            deliver_expired(&mut st, now);
+            deliver_expired(shared, &mut st, now);
             let joined = st.sched.join(wid, now);
             let any = !joined.is_empty();
             for t in joined {
                 let d = attach_payload(&mut st, t, now);
+                if shared.trace.enabled() {
+                    shared.trace.record(
+                        TraceEvent::instant("request", "join", now, d.ticket.id)
+                            .arg("worker", wid as f64),
+                    );
+                }
                 batch.push_back(d);
             }
             any
@@ -631,11 +747,22 @@ fn finish_one(
                 late
             };
             let service_ms = result.model_latency_ms.unwrap_or(wall_ms);
+            shared.hist_queue_wait.record(wait_ms);
+            if let Some(cold) = result.cold_load_ms {
+                shared.hist_cold_load.record(cold);
+            }
             {
                 let mut s = shared.stats.lock().unwrap();
                 s.per_worker[wid] += 1;
                 s.record_latency(service_ms);
                 s.wait_ms_total += wait_ms;
+            }
+            if shared.trace.enabled() {
+                shared.trace.record(
+                    TraceEvent::instant("request", "complete", now, ticket.id)
+                        .arg("worker", wid as f64)
+                        .arg("wait_ms", wait_ms),
+                );
             }
             Ok(Completion { result, wait_ms, wall_ms, worker: wid, deadline_missed: late })
         }
@@ -646,6 +773,12 @@ fn finish_one(
                 shared.not_empty.notify_all();
             }
             drop(st);
+            if shared.trace.enabled() {
+                shared.trace.record(
+                    TraceEvent::instant("request", "fail", now, ticket.id)
+                        .arg("worker", wid as f64),
+                );
+            }
             Err(e)
         }
     };
@@ -696,6 +829,9 @@ fn snapshot(shared: &Shared) -> EngineStats {
             0.0
         },
         pool: shared.backend.pool_stats(),
+        queue_wait_ms_hist: shared.hist_queue_wait.snapshot(),
+        batch_size_hist: shared.hist_batch_size.snapshot(),
+        cold_load_ms_hist: shared.hist_cold_load.snapshot(),
     }
 }
 
@@ -741,6 +877,43 @@ mod tests {
         assert!(stats.p95_ms >= stats.p50_ms);
         assert!(stats.throughput_rps > 0.0);
         assert_eq!(stats.per_worker.iter().sum::<u64>(), 12);
+        // always-on histograms: one wait sample per completion, at
+        // least one batch formed, no pooled backend -> no cold loads
+        assert_eq!(stats.queue_wait_ms_hist.count, 12);
+        assert!(stats.batch_size_hist.count >= 1);
+        assert_eq!(stats.cold_load_ms_hist.count, 0);
+    }
+
+    #[test]
+    fn trace_records_request_lifecycle() {
+        use crate::telemetry::TraceRecorder;
+        let program = tinynet_program();
+        let clock = Arc::new(VirtualClock::new());
+        let rec = Arc::new(TraceRecorder::new());
+        let mut engine = InferenceEngine::new_paused_with_clock(
+            program.clone(),
+            Arc::new(VirtualAccelBackend),
+            EngineConfig { workers: 1, ..EngineConfig::default() },
+            clock.clone(),
+        )
+        .with_trace(rec.clone());
+        let shape = program.input_shape();
+        let pending: Vec<PendingRequest> =
+            (0..3).map(|_| engine.submit(Tensor::zeros(shape)).unwrap()).collect();
+        engine.start();
+        for p in pending {
+            p.wait().unwrap();
+        }
+        engine.shutdown();
+        let evs = rec.events();
+        for name in ["submit", "claim", "run", "complete"] {
+            assert_eq!(
+                evs.iter().filter(|e| e.name == name).count(),
+                3,
+                "expected one `{name}` event per request"
+            );
+        }
+        assert!(evs.iter().all(|e| e.cat == "request"));
     }
 
     #[test]

@@ -2,12 +2,13 @@
 
 use std::sync::Arc;
 
-use super::{ExecutionBackend, RunResult};
+use super::{Clock, ExecutionBackend, RealClock, RunResult};
 use crate::compiler::CompileError;
 use crate::funcsim::Tensor;
 use crate::graph::Shape;
 use crate::program::Program;
 use crate::shard::LinkModel;
+use crate::telemetry::{NullSink, TraceEvent, TraceSink};
 use crate::Result;
 
 /// Executes a [`crate::shard::ShardPlan`]'s programs as one pipeline:
@@ -32,6 +33,8 @@ pub struct ShardedBackend {
     stages: Vec<Arc<Program>>,
     backend: Arc<dyn ExecutionBackend>,
     link: LinkModel,
+    clock: Arc<dyn Clock>,
+    trace: Arc<dyn TraceSink>,
 }
 
 impl ShardedBackend {
@@ -74,7 +77,28 @@ impl ShardedBackend {
                 )));
             }
         }
-        Ok(ShardedBackend { stages, backend, link })
+        Ok(ShardedBackend {
+            stages,
+            backend,
+            link,
+            clock: Arc::new(RealClock::new()),
+            trace: Arc::new(NullSink),
+        })
+    }
+
+    /// Attach a trace sink (and the clock its timestamps come from).
+    /// Each request then records one `shard/stage` span per stage — the
+    /// span duration is the *modeled* stage latency — and one
+    /// `shard/handoff` instant per link crossing, annotated with the
+    /// hand-off bytes and transfer milliseconds.
+    pub fn with_trace(
+        mut self,
+        clock: Arc<dyn Clock>,
+        trace: Arc<dyn TraceSink>,
+    ) -> ShardedBackend {
+        self.clock = clock;
+        self.trace = trace;
+        self
     }
 
     /// The first shard's program — what an
@@ -129,13 +153,33 @@ impl ExecutionBackend for ShardedBackend {
         }
 
         let mut result = self.backend.run(front, input)?;
+        if self.trace.enabled() {
+            self.trace.record(
+                TraceEvent::span(
+                    "shard",
+                    "stage",
+                    self.clock.now_ms(),
+                    result.model_latency_ms.unwrap_or(0.0),
+                    0,
+                )
+                .arg("dram_bytes", result.dram_bytes.unwrap_or(0) as f64),
+            );
+        }
         let mut latency = result.model_latency_ms;
         let mut dram = result.dram_bytes;
         let mut cold = result.cold_load_ms;
+        let mut classes = result.traffic_classes;
         for i in 1..self.stages.len() {
             // inter-device transfer of the hand-off tensor
             let transfer = self.link.transfer_ms(self.handoff_bytes(i - 1));
             latency = latency.map(|ms| ms + transfer);
+            if self.trace.enabled() {
+                self.trace.record(
+                    TraceEvent::instant("shard", "handoff", self.clock.now_ms(), i as u64)
+                        .arg("bytes", self.handoff_bytes(i - 1) as f64)
+                        .arg("transfer_ms", transfer),
+                );
+            }
 
             // staged hand-off buffer: the carried tensor must match the
             // next stage's ingress descriptor; cost-only backends carry
@@ -158,6 +202,18 @@ impl ExecutionBackend for ShardedBackend {
                 None => Tensor::zeros(stage.input_shape()),
             };
             result = self.backend.run(stage, &carried)?;
+            if self.trace.enabled() {
+                self.trace.record(
+                    TraceEvent::span(
+                        "shard",
+                        "stage",
+                        self.clock.now_ms(),
+                        result.model_latency_ms.unwrap_or(0.0),
+                        i as u64,
+                    )
+                    .arg("dram_bytes", result.dram_bytes.unwrap_or(0) as f64),
+                );
+            }
             latency = match (latency, result.model_latency_ms) {
                 (Some(a), Some(b)) => Some(a + b),
                 _ => None,
@@ -172,6 +228,13 @@ impl ExecutionBackend for ShardedBackend {
                 (Some(a), Some(b)) => Some(a + b),
                 _ => None,
             };
+            classes = match (classes, result.traffic_classes) {
+                (Some(mut a), Some(b)) => {
+                    a.accumulate(b);
+                    Some(a)
+                }
+                _ => None,
+            };
         }
         Ok(RunResult {
             backend: self.name(),
@@ -179,6 +242,7 @@ impl ExecutionBackend for ShardedBackend {
             model_latency_ms: latency,
             dram_bytes: dram,
             cold_load_ms: cold,
+            traffic_classes: classes,
         })
     }
 
@@ -220,6 +284,8 @@ mod tests {
         assert_eq!(r.backend, "sharded");
         let lat2 = r.model_latency_ms.unwrap();
         let dram2 = r.dram_bytes.unwrap();
+        // the summed per-class attribution must conserve the summed total
+        assert_eq!(r.traffic_classes.unwrap().total(), dram2);
 
         let one = chain(1);
         let r1 = one.run(&one.front().clone(), &Tensor::zeros(one.front().input_shape()))
@@ -227,6 +293,21 @@ mod tests {
         // two devices pay at least one link transfer on top of compute
         assert!(lat2 > 0.0 && dram2 > 0);
         assert!(r1.model_latency_ms.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn chain_traces_stages_and_handoffs() {
+        use crate::engine::VirtualClock;
+        use crate::telemetry::TraceRecorder;
+        let rec = Arc::new(TraceRecorder::new());
+        let two = chain(2).with_trace(Arc::new(VirtualClock::new()), rec.clone());
+        let input = Tensor::zeros(two.front().input_shape());
+        let front = two.front().clone();
+        two.run(&front, &input).unwrap();
+        let evs = rec.events();
+        assert_eq!(evs.iter().filter(|e| e.name == "stage").count(), 2);
+        assert_eq!(evs.iter().filter(|e| e.name == "handoff").count(), 1);
+        assert!(evs.iter().all(|e| e.cat == "shard"));
     }
 
     #[test]

@@ -61,6 +61,7 @@ use crate::compiler::{fan_out, CompileError, CompileReport, Compiler, ReuseStrat
 use crate::config::AccelConfig;
 use crate::program::Program;
 use crate::serialize::Json;
+use crate::telemetry::ClassBytes;
 
 /// One costed design point: the candidate plus the metrics the sweep
 /// ranks it by.
@@ -78,6 +79,9 @@ pub struct ExplorePoint {
     pub latency_ms: f64,
     /// Total DRAM traffic per inference (eq. 9), bytes.
     pub dram_bytes: u64,
+    /// Per-tensor-class attribution of `dram_bytes`
+    /// (`classes.total() == dram_bytes`).
+    pub classes: ClassBytes,
     /// Total on-chip SRAM requirement (eq. 6), bytes.
     pub sram_bytes: usize,
     /// BRAM18K blocks the SRAM requirement maps to (eq. 7).
@@ -118,6 +122,7 @@ impl ExplorePoint {
             strategy: point.strategy.clone(),
             latency_ms: r.timing.latency_ms,
             dram_bytes: r.evaluation.dram.total,
+            classes: r.evaluation.dram.classes,
             sram_bytes: r.evaluation.sram.total,
             bram18k: r.evaluation.sram.bram18k,
             gops: r.timing.gops,
@@ -173,6 +178,7 @@ impl ExplorePoint {
             ("dram_gbps", Json::num(self.cfg.dram_gbps)),
             ("latency_ms", Json::num(self.latency_ms)),
             ("dram_bytes", Json::num(self.dram_bytes as f64)),
+            ("dram_classes", self.classes.to_json()),
             ("sram_bytes", Json::num(self.sram_bytes as f64)),
             ("bram18k", Json::num(self.bram18k as f64)),
             ("gops", Json::num(self.gops)),
@@ -313,6 +319,7 @@ pub(crate) mod tests {
             strategy: Arc::new(crate::compiler::CutPointStrategy),
             latency_ms,
             dram_bytes,
+            classes: ClassBytes::default(),
             sram_bytes,
             bram18k: 0,
             gops: 0.0,

@@ -71,6 +71,21 @@
 //! concurrent batched requests on top (see the `pack`, `run`, and
 //! `serve-bench` CLI commands and `benches/serving.rs`).
 //!
+//! ## Telemetry: `telemetry`
+//!
+//! The stack is observable end to end through [`telemetry`]: a
+//! [`telemetry::TraceSink`] trait with a lock-sharded
+//! [`telemetry::TraceRecorder`] exporting Chrome trace-event JSON
+//! (`--trace-out` on `run`/`serve-bench`/`serve-zoo`), always-on atomic
+//! [`telemetry::Counter`]s / fixed-bucket [`telemetry::Histogram`]s
+//! snapshotted into [`engine::EngineStats`], and
+//! [`telemetry::ClassBytes`] — the `{weights, ifm, ofm, shortcut}`
+//! per-tensor-class DRAM attribution threaded through the analytical
+//! model (eq. 8/9) and the instruction replay, which turns the paper's
+//! headline shortcut-traffic share into a regression-gated observable.
+//! Every trace timestamp comes from [`engine::Clock`], so traces are
+//! byte-deterministic under [`engine::VirtualClock`].
+//!
 //! ## Design-space exploration: `explorer`
 //!
 //! The paper frames §IV as an *optimization tool*: given resource
@@ -133,6 +148,7 @@
 //! | [`explorer`] | **design-space search**: pruned config sweeps, Pareto fronts, recommender |
 //! | [`shard`] | **multi-FPGA pipeline sharding**: cut-point partitioner, link model, shard plans |
 //! | [`pool`] | **multi-tenant serving**: device-DRAM buffer pool, eviction policies, pooled backend |
+//! | [`telemetry`] | **observability**: trace sinks + Chrome export, atomic metrics, per-class DRAM attribution |
 //! | [`sim`], [`funcsim`], [`power`] | cycle-accurate timing, bit-exact functional sim, power model |
 //! | [`baselines`], [`bench`] | comparison models + offline bench harness |
 //! | [`coordinator`] | CLI and deprecated one-shot wrappers |
@@ -159,6 +175,7 @@ pub mod engine;
 pub mod explorer;
 pub mod shard;
 pub mod pool;
+pub mod telemetry;
 pub mod sim;
 pub mod funcsim;
 pub mod power;

@@ -16,6 +16,7 @@ use crate::alloc::{AllocResult, Loc};
 use crate::analyzer::{GroupKind, GroupedGraph};
 use crate::config::AccelConfig;
 use crate::isa::ReuseMode;
+use crate::telemetry::ClassBytes;
 
 /// Itemized DRAM traffic for one policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,6 +32,10 @@ pub struct DramBreakdown {
     /// The paper's `[*]` baseline: weights/inputs/outputs all accessed
     /// from DRAM exactly once.
     pub baseline_once: u64,
+    /// Per-tensor-class attribution of `total`. Invariants:
+    /// `classes.total() == total` and `classes.fm_total() == fm_bytes`
+    /// (spill stores land in `ofm`, spill re-reads in `ifm`).
+    pub classes: ClassBytes,
 }
 
 impl DramBreakdown {
@@ -50,6 +55,7 @@ pub fn dram_access(
     assert_eq!(policy.len(), gg.groups.len());
     let qa = cfg.qa;
     let mut fm: u64 = 0;
+    let mut classes = ClassBytes::default();
 
     for (gi, gr) in gg.groups.iter().enumerate() {
         if gr.kind == GroupKind::Input {
@@ -65,6 +71,7 @@ pub fn dram_access(
             let in_bytes = gr.in_shape.bytes(qa) as u64;
             if a.in_loc == Loc::Dram || a.staged_input {
                 fm += in_bytes;
+                classes.ifm += in_bytes;
             }
             // second operand (fused shortcut / scale gate / eltwise)
             if let Some(Loc::Dram) = a.aux_loc {
@@ -72,7 +79,15 @@ pub fn dram_access(
                     .shortcut_of
                     .or_else(|| gr.inputs.get(1).copied())
                     .expect("aux operand exists");
-                fm += gg.groups[src.0].out_shape.bytes(qa) as u64;
+                let aux_bytes = gg.groups[src.0].out_shape.bytes(qa) as u64;
+                fm += aux_bytes;
+                // a residual shortcut read is the paper's headline class;
+                // a plain eltwise/gate second operand is ordinary input
+                if gr.shortcut_of.is_some() {
+                    classes.shortcut += aux_bytes;
+                } else {
+                    classes.ifm += aux_bytes;
+                }
             }
         }
 
@@ -80,15 +95,21 @@ pub fn dram_access(
         let out_bytes = gr.out_shape.bytes(qa) as u64;
         if gr.kind != GroupKind::Concat && a.out_loc == Loc::Dram {
             fm += out_bytes;
+            classes.ofm += out_bytes;
         }
         if a.also_dram {
             fm += out_bytes;
+            classes.ofm += out_bytes;
         }
     }
 
     let weight_bytes = gg.graph.total_weight_bytes(cfg.qw as u64);
     let spill = alloc.spill_bytes;
     let total = fm + weight_bytes + spill;
+    // spill traffic: one writeback (ofm) per eviction, the rest re-reads
+    classes.weights = weight_bytes;
+    classes.ofm += alloc.spill_write_bytes;
+    classes.ifm += spill - alloc.spill_write_bytes;
 
     DramBreakdown {
         fm_bytes: fm + spill,
@@ -96,6 +117,7 @@ pub fn dram_access(
         spill_bytes: spill,
         total,
         baseline_once: baseline_once(gg, cfg),
+        classes,
     }
 }
 
@@ -210,6 +232,34 @@ mod tests {
         let d = eval("yolov3", 416, ReuseMode::Frame);
         let input = 416 * 416 * 3;
         assert!(d.fm_bytes > input as u64 * 2, "routes must add traffic");
+    }
+
+    #[test]
+    fn classes_partition_totals_for_every_model() {
+        // The attribution must conserve eq. (8)/(9) exactly: no byte
+        // unclassified, no byte double-counted.
+        for &name in zoo::MODEL_NAMES {
+            for mode in [ReuseMode::Row, ReuseMode::Frame] {
+                let d = eval(name, zoo::default_input(name), mode);
+                assert_eq!(d.classes.total(), d.total, "{name} {mode:?}: total");
+                assert_eq!(d.classes.fm_total(), d.fm_bytes, "{name} {mode:?}: fm");
+                assert_eq!(d.classes.weights, d.weight_bytes, "{name} {mode:?}: weights");
+            }
+        }
+    }
+
+    #[test]
+    fn row_policy_shortcut_share_is_large_on_resnets() {
+        // All-row streaming reads every residual shortcut from DRAM —
+        // the ~40 % feature-map share the paper's §I cites.
+        for name in ["resnet18", "resnet34", "resnet50"] {
+            let d = eval(name, zoo::default_input(name), ReuseMode::Row);
+            assert!(
+                d.classes.shortcut_share() > 0.10,
+                "{name}: shortcut share {:.3} unexpectedly small",
+                d.classes.shortcut_share()
+            );
+        }
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! The buffer pool: refcounted residency over a modeled DRAM budget.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::compiler::CompileError;
+use crate::engine::{Clock, RealClock};
 use crate::serialize::Json;
 use crate::shard::LinkModel;
+use crate::telemetry::{NullSink, TraceEvent, TraceSink};
 use crate::Result;
 
 use super::{ReplacementPolicy, SegmentId};
@@ -76,6 +78,11 @@ struct Inner {
     cold_ms: Vec<f64>,
     cold_next: usize,
     cold_total_ms: f64,
+    /// Trace sink + its time source ([`NullSink`] until
+    /// [`BufferPool::set_trace`]); kept inside the lock the pin path
+    /// already holds, so attaching a sink costs nothing extra.
+    clock: Arc<dyn Clock>,
+    trace: Arc<dyn TraceSink>,
 }
 
 impl Inner {
@@ -98,6 +105,12 @@ impl Inner {
             *t = t.saturating_sub(r.bytes);
         }
         self.evictions += 1;
+        if self.trace.enabled() {
+            self.trace.record(
+                TraceEvent::instant("pool", "evict", self.clock.now_ms(), victim.0)
+                    .arg("bytes", r.bytes as f64),
+            );
+        }
         true
     }
 
@@ -171,8 +184,22 @@ impl BufferPool {
                 cold_ms: Vec::new(),
                 cold_next: 0,
                 cold_total_ms: 0.0,
+                clock: Arc::new(RealClock::new()),
+                trace: Arc::new(NullSink),
             }),
         })
+    }
+
+    /// Attach a trace sink (and the clock its timestamps come from):
+    /// every pin then records a `pool/hit` instant or a `pool/cold_load`
+    /// span whose duration is the modeled DRAM-fill time (annotated with
+    /// the segment bytes and whether it bypassed residency), and every
+    /// eviction a `pool/evict` instant with the victim's bytes. The
+    /// trace thread id is the segment id.
+    pub fn set_trace(&self, clock: Arc<dyn Clock>, trace: Arc<dyn TraceSink>) {
+        let mut inner = self.lock();
+        inner.clock = clock;
+        inner.trace = trace;
     }
 
     /// Pin `seg` (a segment of `bytes` weight payload, requested by
@@ -189,12 +216,25 @@ impl BufferPool {
             inner.active_cold_pins += 1;
             let cold = self.link.transfer_ms(bytes);
             inner.record_cold(cold);
+            if inner.trace.enabled() {
+                inner.trace.record(
+                    TraceEvent::span("pool", "cold_load", inner.clock.now_ms(), cold, seg.0)
+                        .arg("bytes", bytes as f64)
+                        .arg("bypass", 1.0),
+                );
+            }
             return PinGuard { pool: self, seg, hit: false, bypass: true, cold_load_ms: cold };
         }
         if let Some(r) = inner.resident.get_mut(&seg) {
             r.pins += 1;
             inner.policy.touch(seg);
             inner.hits += 1;
+            if inner.trace.enabled() {
+                inner.trace.record(
+                    TraceEvent::instant("pool", "hit", inner.clock.now_ms(), seg.0)
+                        .arg("bytes", bytes as f64),
+                );
+            }
             return PinGuard { pool: self, seg, hit: true, bypass: false, cold_load_ms: 0.0 };
         }
         inner.misses += 1;
@@ -229,6 +269,13 @@ impl BufferPool {
         inner.active_cold_pins += 1;
         let cold = self.link.transfer_ms(bytes);
         inner.record_cold(cold);
+        if inner.trace.enabled() {
+            inner.trace.record(
+                TraceEvent::span("pool", "cold_load", inner.clock.now_ms(), cold, seg.0)
+                    .arg("bytes", bytes as f64)
+                    .arg("bypass", 0.0),
+            );
+        }
         PinGuard { pool: self, seg, hit: false, bypass: false, cold_load_ms: cold }
     }
 
@@ -602,6 +649,30 @@ mod tests {
         assert!(BufferPool::new(PoolConfig::new(0), policy_by_name("lru").unwrap()).is_err());
         let cfg = PoolConfig::new(10).with_tenant_quota(0);
         assert!(BufferPool::new(cfg, policy_by_name("lru").unwrap()).is_err());
+    }
+
+    #[test]
+    fn trace_records_pool_lifecycle() {
+        use crate::engine::VirtualClock;
+        use crate::telemetry::TraceRecorder;
+        let p = pool(100, "lru");
+        let rec = std::sync::Arc::new(TraceRecorder::new());
+        p.set_trace(std::sync::Arc::new(VirtualClock::new()), rec.clone());
+        drop(p.pin(id(1), 60, "t")); // cold load
+        drop(p.pin(id(1), 60, "t")); // hit
+        drop(p.pin(id(2), 60, "t")); // cold load + evicts 1
+        drop(p.pin(id(9), 1000, "t")); // bypass cold load
+        let evs = rec.events();
+        assert_eq!(evs.iter().filter(|e| e.name == "cold_load").count(), 3);
+        assert_eq!(evs.iter().filter(|e| e.name == "hit").count(), 1);
+        assert_eq!(evs.iter().filter(|e| e.name == "evict").count(), 1);
+        assert!(evs.iter().all(|e| e.cat == "pool"));
+        let bypassed: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.name == "cold_load")
+            .map(|e| e.args.iter().find(|(k, _)| *k == "bypass").unwrap().1)
+            .collect();
+        assert_eq!(bypassed.iter().filter(|&&b| b == 1.0).count(), 1);
     }
 
     #[test]

@@ -169,6 +169,7 @@ mod tests {
             weight_read: 8_000_000,
             buf_read: 500_000_000,
             buf_write: 500_000_000,
+            ..Default::default()
         };
         let e = memory_energy(&t);
         assert!(e.dram_fraction > 0.4, "dram fraction {}", e.dram_fraction);

@@ -434,6 +434,7 @@ impl Program {
             buf_peak: [0; 3],
             aux_peak: 0,
             spill_bytes: 0,
+            spill_write_bytes: 0,
             spill_events: 0,
         }
     }

@@ -12,6 +12,7 @@
 use crate::analyzer::{GroupKind, GroupedGraph};
 use crate::config::AccelConfig;
 use crate::isa::{Instruction, InstructionStream, Opcode};
+use crate::telemetry::ClassBytes;
 
 /// Byte counters from a replay.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -26,6 +27,12 @@ pub struct TrafficCount {
     pub buf_read: u64,
     /// On-chip buffer bytes written.
     pub buf_write: u64,
+    /// Per-tensor-class attribution of the DRAM counters, recovered from
+    /// the packed ISA fields alone. Invariants:
+    /// `classes.ifm + classes.shortcut == fm_read`,
+    /// `classes.ofm == fm_write`, `classes.weights == weight_read`, so
+    /// `classes.total() == dram_total()`.
+    pub classes: ClassBytes,
 }
 
 impl TrafficCount {
@@ -63,12 +70,14 @@ fn replay_instr(
 
     // weights stream exactly once per instruction
     t.weight_read += ins.weight_bytes as u64;
+    t.classes.weights += ins.weight_bytes as u64;
 
     // main operand
     let vector_in = gr.in_shape.h * gr.in_shape.w == 1;
     if !vector_in {
         if ins.in_sel == 3 {
             t.fm_read += in_bytes;
+            t.classes.ifm += in_bytes;
         } else {
             t.buf_read += in_bytes;
         }
@@ -82,6 +91,13 @@ fn replay_instr(
             if !aux_vec {
                 if ins.aux_sel == 3 {
                     t.fm_read += aux_bytes;
+                    // same classification rule as the analytical model:
+                    // a residual shortcut read vs. a plain second input
+                    if gr.shortcut_of.is_some() {
+                        t.classes.shortcut += aux_bytes;
+                    } else {
+                        t.classes.ifm += aux_bytes;
+                    }
                 } else {
                     t.buf_read += aux_bytes;
                 }
@@ -93,6 +109,7 @@ fn replay_instr(
     if !vector_out {
         if ins.out_sel == 3 {
             t.fm_write += out_bytes;
+            t.classes.ofm += out_bytes;
         } else {
             t.buf_write += out_bytes;
         }
@@ -128,6 +145,7 @@ pub fn replay(
         if staged_inputs[gi] {
             // the staging DMA: one DRAM read of the input into a buffer
             t.fm_read += gr.in_shape.bytes(cfg.qa) as u64;
+            t.classes.ifm += gr.in_shape.bytes(cfg.qa) as u64;
             // the streamed buffer read was already counted as buf_read;
             // undo the double-counted DRAM read if in_sel was on-chip
             if ins.in_sel != 3 {
@@ -136,6 +154,7 @@ pub fn replay(
         }
         if also_dram[gi] {
             t.fm_write += gr.out_shape.bytes(cfg.qa) as u64;
+            t.classes.ofm += gr.out_shape.bytes(cfg.qa) as u64;
         }
         if gr.kind == GroupKind::Input {
             continue;
@@ -145,7 +164,9 @@ pub fn replay(
     if !plan.is_empty() {
         let o = crate::tile::overheads(gg, cfg, &plan);
         t.fm_read += o.halo_fm_extra;
+        t.classes.ifm += o.halo_fm_extra;
         t.weight_read += o.weight_extra;
+        t.classes.weights += o.weight_extra;
     }
     t
 }
@@ -182,6 +203,25 @@ mod tests {
                 analytical.fm_bytes
             );
             assert_eq!(replayed.weight_read, analytical.weight_bytes, "{name}: weights");
+        }
+    }
+
+    #[test]
+    fn replay_classes_partition_dram_counters() {
+        // The class attribution recovered from packed ISA fields must
+        // partition the flat replay counters for every zoo program.
+        let cfg = crate::config::AccelConfig::kcu1500_int8();
+        for &name in zoo::MODEL_NAMES {
+            let g = zoo::by_name(name, zoo::default_input(name)).unwrap();
+            let r = Compiler::new(cfg.clone()).compile(&g).unwrap();
+            let alloc = allocate(&r.grouped, &r.evaluation.policy, &cfg);
+            let staged: Vec<bool> = alloc.assigns.iter().map(|a| a.staged_input).collect();
+            let also: Vec<bool> = alloc.assigns.iter().map(|a| a.also_dram).collect();
+            let t = replay(&r.grouped, &r.stream, &staged, &also, &cfg);
+            assert_eq!(t.classes.ifm + t.classes.shortcut, t.fm_read, "{name}: reads");
+            assert_eq!(t.classes.ofm, t.fm_write, "{name}: writes");
+            assert_eq!(t.classes.weights, t.weight_read, "{name}: weights");
+            assert_eq!(t.classes.total(), t.dram_total(), "{name}: total");
         }
     }
 

@@ -1,0 +1,319 @@
+//! Always-on metrics: atomic [`Counter`]s and fixed-bucket
+//! [`Histogram`]s behind a named [`MetricsRegistry`].
+//!
+//! The hot path is allocation-free by construction: a counter bump is
+//! one `fetch_add`, a histogram record is a linear scan over a fixed
+//! bounds slice plus two `fetch_add`s (bucket + sum). Registration (the
+//! only allocating operation) happens once at engine construction;
+//! `rust/tests/metrics_overhead.rs` pins the zero-allocation property
+//! with a counting global allocator.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::serialize::Json;
+
+/// Default millisecond bucket bounds (upper edges) shared by the
+/// latency-flavoured histograms: queue wait and cold-load time.
+pub const MS_BOUNDS: &[f64] = &[
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0,
+    2500.0, 5000.0, 10000.0,
+];
+
+/// Default batch-size bucket bounds (upper edges).
+pub const BATCH_BOUNDS: &[f64] = &[1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0];
+
+/// Fixed-point scale for the histogram running sum: values are
+/// accumulated as `round(value * SUM_SCALE)` in a `u64`, keeping the
+/// hot path integer-only and the snapshot sum deterministic.
+const SUM_SCALE: f64 = 1e3;
+
+/// A monotonically increasing atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// A counter at zero.
+    pub fn new() -> Counter {
+        Counter { value: AtomicU64::new(0) }
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket histogram over `f64` samples.
+///
+/// `bounds` are the inclusive upper edges of the first `bounds.len()`
+/// buckets; one extra overflow bucket catches everything above the last
+/// bound. Negative samples clamp into the first bucket.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_scaled: AtomicU64,
+}
+
+impl Histogram {
+    /// A histogram over `bounds` (must be non-empty and strictly
+    /// increasing — checked once here, never on the record path).
+    pub fn new(bounds: &'static [f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        let buckets: Vec<AtomicU64> =
+            (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds,
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum_scaled: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Allocation-free: a bounded linear scan plus
+    /// three relaxed `fetch_add`s.
+    pub fn record(&self, value: f64) {
+        let mut idx = self.bounds.len(); // overflow bucket
+        for (i, b) in self.bounds.iter().enumerate() {
+            if value <= *b {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let scaled = if value > 0.0 { (value * SUM_SCALE).round() as u64 } else { 0 };
+        self.sum_scaled.fetch_add(scaled, Ordering::Relaxed);
+    }
+
+    /// Number of samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// An owned point-in-time copy (the only allocating reader).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: self.bounds.to_vec(),
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum_scaled.load(Ordering::Relaxed) as f64 / SUM_SCALE,
+        }
+    }
+}
+
+/// An owned snapshot of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Upper bucket edges (same as the histogram's bounds).
+    pub bounds: Vec<f64>,
+    /// Per-bucket sample counts; `counts.len() == bounds.len() + 1`
+    /// (the last entry is the overflow bucket).
+    pub counts: Vec<u64>,
+    /// Total samples.
+    pub count: u64,
+    /// Sum of samples (fixed-point accumulated, so deterministic).
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// An all-zero snapshot over `bounds` (what an engine reports before
+    /// any sample lands).
+    pub fn empty(bounds: &[f64]) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Mean sample value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Upper-edge quantile estimate: the bound of the first bucket whose
+    /// cumulative count reaches `q * count`. Returns the last bound for
+    /// overflow samples and 0 when empty. `q` is clamped into `[0, 1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return self.bounds.get(i).copied().unwrap_or(*self.bounds.last().unwrap());
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+
+    /// JSON form: `{bounds, counts, count, sum}` — everything a later
+    /// session needs to merge or re-quantile.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bounds", Json::Arr(self.bounds.iter().map(|b| Json::Num(*b)).collect())),
+            (
+                "counts",
+                Json::Arr(self.counts.iter().map(|c| Json::num(*c as f64)).collect()),
+            ),
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+        ])
+    }
+}
+
+/// A named registry of counters and histograms.
+///
+/// `counter`/`histogram` get-or-create: callers register once at
+/// construction, keep the returned [`Arc`], and touch only atomics
+/// afterwards. Names are `&'static str` so lookups never allocate keys.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<&'static str, Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<&'static str, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// The counter named `name`, created at zero on first use.
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        self.counters.lock().unwrap().entry(name).or_insert_with(|| Arc::new(Counter::new())).clone()
+    }
+
+    /// The histogram named `name`, created over `bounds` on first use.
+    /// Later calls return the existing histogram regardless of `bounds`.
+    pub fn histogram(&self, name: &'static str, bounds: &'static [f64]) -> Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name)
+            .or_insert_with(|| Arc::new(Histogram::new(bounds)))
+            .clone()
+    }
+
+    /// Snapshot every metric as one JSON object:
+    /// `{counters: {name: value}, histograms: {name: snapshot}}`.
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), Json::num(v.get() as f64)))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.snapshot().to_json()))
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let h = Histogram::new(&[1.0, 10.0]);
+        h.record(0.5); // bucket 0
+        h.record(-3.0); // clamps into bucket 0
+        h.record(1.0); // inclusive upper edge -> bucket 0
+        h.record(5.0); // bucket 1
+        h.record(1e9); // overflow
+        let s = h.snapshot();
+        assert_eq!(s.counts, vec![3, 1, 1]);
+        assert_eq!(s.count, 5);
+    }
+
+    #[test]
+    fn snapshot_mean_and_quantile() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 1.5, 3.0] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert!((s.mean() - 1.625).abs() < 1e-9);
+        assert_eq!(s.quantile(0.5), 2.0); // 2nd of 4 samples sits in (1,2]
+        assert_eq!(s.quantile(1.0), 4.0);
+        assert_eq!(HistogramSnapshot::empty(&[1.0]).quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn sum_is_fixed_point_deterministic() {
+        let h = Histogram::new(&[10.0]);
+        for _ in 0..3 {
+            h.record(0.1);
+        }
+        // 3 * round(0.1 * 1000) / 1000 exactly, no float-order drift
+        assert_eq!(h.snapshot().sum, 0.3);
+    }
+
+    #[test]
+    fn registry_get_or_create() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("requests");
+        let b = reg.counter("requests");
+        a.inc();
+        assert_eq!(b.get(), 1);
+        let h = reg.histogram("wait_ms", MS_BOUNDS);
+        h.record(1.0);
+        let j = reg.to_json();
+        assert_eq!(j.get("counters").unwrap().get("requests").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            j.get("histograms").unwrap().get("wait_ms").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn unsorted_bounds_rejected() {
+        let _ = Histogram::new(&[2.0, 1.0]);
+    }
+}

@@ -1,0 +1,164 @@
+//! End-to-end telemetry: request spans, always-on metrics, and
+//! per-tensor-class DRAM traffic attribution.
+//!
+//! Zero-dependency (std-only, matching the import subsystem's house
+//! style) and deliberately small:
+//!
+//! - [`trace`] — a [`TraceSink`] trait with a lock-sharded in-memory
+//!   [`TraceRecorder`] and a Chrome trace-event JSON exporter. Every
+//!   timestamp is passed in by the caller (the engine reads its
+//!   [`crate::engine::Clock`]), so traces are byte-deterministic under
+//!   [`crate::engine::VirtualClock`].
+//! - [`metrics`] — named [`Counter`]s and fixed-bucket [`Histogram`]s
+//!   built on atomics: recording is a linear bucket scan plus
+//!   `fetch_add`, with no per-event allocation, so the registry stays
+//!   always-on in the serving hot path.
+//! - [`ClassBytes`] — the `{weights, ifm, ofm, shortcut}` DRAM byte
+//!   attribution carried by the analytical model (eq. 8/9) and the
+//!   instruction-replay simulator, making the paper's headline
+//!   shortcut-traffic share a first-class observable.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    Counter, Histogram, HistogramSnapshot, MetricsRegistry, BATCH_BOUNDS, MS_BOUNDS,
+};
+pub use trace::{NullSink, TraceEvent, TracePhase, TraceRecorder, TraceSink};
+
+use crate::serialize::Json;
+
+/// Per-tensor-class DRAM byte attribution.
+///
+/// The four classes partition every off-chip byte the cost model (or the
+/// replay simulator) charges:
+///
+/// - `weights` — kernel/bias parameter reads (eq. 8's weight term),
+/// - `ifm` — input-feature-map reads, including spill re-reads and tile
+///   halo overreads,
+/// - `ofm` — output-feature-map writes, including spill writebacks,
+/// - `shortcut` — reads of a residual shortcut operand at its consuming
+///   eltwise join (the traffic class ShortcutFusion exists to eliminate).
+///
+/// Invariant maintained by every producer:
+/// `total() == DramBreakdown::total` for the same evaluation, and
+/// `fm_total() == DramBreakdown::fm_bytes`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClassBytes {
+    /// Parameter (kernel + bias) read bytes.
+    pub weights: u64,
+    /// Input-feature-map read bytes (incl. spill re-reads, tile halos).
+    pub ifm: u64,
+    /// Output-feature-map write bytes (incl. spill writebacks).
+    pub ofm: u64,
+    /// Residual-shortcut read bytes at eltwise joins.
+    pub shortcut: u64,
+}
+
+impl ClassBytes {
+    /// Sum over all four classes.
+    pub fn total(&self) -> u64 {
+        self.weights + self.ifm + self.ofm + self.shortcut
+    }
+
+    /// Feature-map portion: everything except weights.
+    pub fn fm_total(&self) -> u64 {
+        self.ifm + self.ofm + self.shortcut
+    }
+
+    /// Shortcut share of feature-map traffic in `[0, 1]`
+    /// (0 when there is no feature-map traffic at all).
+    pub fn shortcut_share(&self) -> f64 {
+        let fm = self.fm_total();
+        if fm == 0 {
+            0.0
+        } else {
+            self.shortcut as f64 / fm as f64
+        }
+    }
+
+    /// Element-wise accumulate (used by sharded chains and replay).
+    pub fn accumulate(&mut self, other: ClassBytes) {
+        self.weights += other.weights;
+        self.ifm += other.ifm;
+        self.ofm += other.ofm;
+        self.shortcut += other.shortcut;
+    }
+
+    /// Proportionally rescale the feature-map classes so that
+    /// `fm_total()` becomes exactly `new_fm`, leaving `weights`
+    /// untouched. Integer rounding remainders are absorbed by `ifm`, so
+    /// the result conserves `new_fm` exactly.
+    ///
+    /// Used by strategies whose published cost models overwrite the
+    /// aggregate feature-map total (shortcut-mining, SmartShuttle): the
+    /// class *ratios* from the structural walk survive, the *sum*
+    /// matches the external model.
+    pub fn rescale_fm(&self, new_fm: u64) -> ClassBytes {
+        let old = self.fm_total();
+        if old == 0 {
+            // no structural ratio to preserve: charge everything as ifm
+            return ClassBytes { weights: self.weights, ifm: new_fm, ofm: 0, shortcut: 0 };
+        }
+        let ofm = (self.ofm as u128 * new_fm as u128 / old as u128) as u64;
+        let shortcut = (self.shortcut as u128 * new_fm as u128 / old as u128) as u64;
+        ClassBytes { weights: self.weights, ifm: new_fm - ofm - shortcut, ofm, shortcut }
+    }
+
+    /// JSON object with one key per class plus the invariant totals.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("weights", Json::num(self.weights as f64)),
+            ("ifm", Json::num(self.ifm as f64)),
+            ("ofm", Json::num(self.ofm as f64)),
+            ("shortcut", Json::num(self.shortcut as f64)),
+            ("total", Json::num(self.total() as f64)),
+            ("shortcut_share", Json::Num(self.shortcut_share())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_partition() {
+        let c = ClassBytes { weights: 10, ifm: 3, ofm: 2, shortcut: 5 };
+        assert_eq!(c.total(), 20);
+        assert_eq!(c.fm_total(), 10);
+        assert!((c.shortcut_share() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rescale_conserves_exactly() {
+        let c = ClassBytes { weights: 7, ifm: 333, ofm: 334, shortcut: 333 };
+        for new_fm in [0u64, 1, 999, 1000, 1001, 123_456_789] {
+            let r = c.rescale_fm(new_fm);
+            assert_eq!(r.fm_total(), new_fm, "fm_total must hit the target exactly");
+            assert_eq!(r.weights, 7, "weights untouched");
+        }
+    }
+
+    #[test]
+    fn rescale_from_empty_goes_to_ifm() {
+        let c = ClassBytes { weights: 5, ..ClassBytes::default() };
+        let r = c.rescale_fm(100);
+        assert_eq!(r, ClassBytes { weights: 5, ifm: 100, ofm: 0, shortcut: 0 });
+    }
+
+    #[test]
+    fn accumulate_sums_classwise() {
+        let mut a = ClassBytes { weights: 1, ifm: 2, ofm: 3, shortcut: 4 };
+        a.accumulate(ClassBytes { weights: 10, ifm: 20, ofm: 30, shortcut: 40 });
+        assert_eq!(a, ClassBytes { weights: 11, ifm: 22, ofm: 33, shortcut: 44 });
+    }
+
+    #[test]
+    fn json_carries_share() {
+        let c = ClassBytes { weights: 0, ifm: 1, ofm: 1, shortcut: 2 };
+        let j = c.to_json();
+        assert_eq!(j.get("total").unwrap().as_usize(), Some(4));
+        assert!((j.get("shortcut_share").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+    }
+}

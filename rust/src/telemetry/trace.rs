@@ -1,0 +1,261 @@
+//! Span/event tracing: the [`TraceSink`] trait, a lock-sharded in-memory
+//! [`TraceRecorder`], and a Chrome trace-event JSON exporter.
+//!
+//! Design contract (the determinism contract, see ARCHITECTURE.md):
+//! the sink never reads a clock — every timestamp is passed in by the
+//! instrumented code, which draws it from [`crate::engine::Clock`]. Under
+//! [`crate::engine::VirtualClock`] the recorded stream, and therefore the
+//! exported JSON, is byte-deterministic: the exporter sorts events by
+//! `(ts, cat, name, tid, dur)` so thread interleaving cannot reorder the
+//! output, and [`crate::serialize::Json`] objects serialize with sorted
+//! keys.
+
+use std::sync::Mutex;
+
+use crate::serialize::Json;
+
+/// How an event spans time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TracePhase {
+    /// A complete span with a duration (Chrome phase `"X"`).
+    Complete,
+    /// A zero-duration point event (Chrome phase `"i"`).
+    Instant,
+}
+
+/// One recorded event.
+///
+/// `name` and `cat` are `&'static str` so constructing an event on the
+/// serving path allocates only for `args` (and the common lifecycle
+/// events pass an empty or small fixed-capacity vector).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Event category (`"request"`, `"pool"`, `"shard"`).
+    pub cat: &'static str,
+    /// Event name within the category (`"run"`, `"queued"`, …).
+    pub name: &'static str,
+    /// Span or instant.
+    pub phase: TracePhase,
+    /// Start timestamp in clock milliseconds.
+    pub ts_ms: f64,
+    /// Span duration in milliseconds (0 for instants).
+    pub dur_ms: f64,
+    /// Logical lane: worker id, request ticket, or shard stage index.
+    pub tid: u64,
+    /// Small set of numeric annotations (batch size, bytes, …).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+impl TraceEvent {
+    /// A zero-duration instant event with no annotations.
+    pub fn instant(cat: &'static str, name: &'static str, ts_ms: f64, tid: u64) -> TraceEvent {
+        TraceEvent { cat, name, phase: TracePhase::Instant, ts_ms, dur_ms: 0.0, tid, args: Vec::new() }
+    }
+
+    /// A complete span covering `[ts_ms, ts_ms + dur_ms]`.
+    pub fn span(
+        cat: &'static str,
+        name: &'static str,
+        ts_ms: f64,
+        dur_ms: f64,
+        tid: u64,
+    ) -> TraceEvent {
+        TraceEvent { cat, name, phase: TracePhase::Complete, ts_ms, dur_ms, tid, args: Vec::new() }
+    }
+
+    /// Attach a numeric annotation (builder style).
+    pub fn arg(mut self, key: &'static str, value: f64) -> TraceEvent {
+        self.args.push((key, value));
+        self
+    }
+}
+
+/// Where instrumented code sends events.
+///
+/// The default sink is [`NullSink`]; instrumentation checks
+/// [`TraceSink::enabled`] before building an event so the disabled path
+/// costs one virtual call and no allocation.
+pub trait TraceSink: Send + Sync {
+    /// Record one event.
+    fn record(&self, event: TraceEvent);
+
+    /// Whether events are being kept. Callers skip event construction
+    /// (and the clock read for durations) when this is `false`.
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// A sink that drops everything — the always-on default.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn record(&self, _event: TraceEvent) {}
+
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// Number of independently locked event buffers. Events shard by `tid`,
+/// so concurrent workers rarely contend on the same mutex.
+const SHARDS: usize = 8;
+
+/// Lock-sharded in-memory recorder behind `--trace-out`.
+pub struct TraceRecorder {
+    shards: [Mutex<Vec<TraceEvent>>; SHARDS],
+}
+
+impl TraceRecorder {
+    /// An empty recorder.
+    pub fn new() -> TraceRecorder {
+        TraceRecorder { shards: std::array::from_fn(|_| Mutex::new(Vec::new())) }
+    }
+
+    /// All events recorded so far, in the canonical deterministic order
+    /// `(ts, cat, name, tid, dur)`.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<TraceEvent> = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.lock().unwrap().iter().cloned());
+        }
+        all.sort_by(|a, b| {
+            a.ts_ms
+                .total_cmp(&b.ts_ms)
+                .then_with(|| a.cat.cmp(b.cat))
+                .then_with(|| a.name.cmp(b.name))
+                .then_with(|| a.tid.cmp(&b.tid))
+                .then_with(|| a.dur_ms.total_cmp(&b.dur_ms))
+        });
+        all
+    }
+
+    /// Number of events recorded so far.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The trace as a Chrome trace-event JSON document
+    /// (`chrome://tracing` / Perfetto "JSON" format): an object with a
+    /// `traceEvents` array whose `ts`/`dur` are microseconds.
+    pub fn to_chrome_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events()
+            .into_iter()
+            .map(|e| {
+                let mut pairs = vec![
+                    ("name", Json::str(e.name)),
+                    ("cat", Json::str(e.cat)),
+                    ("ph", Json::str(match e.phase {
+                        TracePhase::Complete => "X",
+                        TracePhase::Instant => "i",
+                    })),
+                    ("ts", Json::Num(e.ts_ms * 1e3)),
+                    ("pid", Json::num(0.0)),
+                    ("tid", Json::num(e.tid as f64)),
+                ];
+                match e.phase {
+                    TracePhase::Complete => pairs.push(("dur", Json::Num(e.dur_ms * 1e3))),
+                    // instant scope: thread (the tid lane)
+                    TracePhase::Instant => pairs.push(("s", Json::str("t"))),
+                }
+                if !e.args.is_empty() {
+                    pairs.push((
+                        "args",
+                        Json::Obj(
+                            e.args.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect(),
+                        ),
+                    ));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("displayTimeUnit", Json::str("ms")),
+            ("traceEvents", Json::Arr(events)),
+        ])
+    }
+
+    /// The Chrome trace serialized with a trailing newline, ready for
+    /// `--trace-out FILE`.
+    pub fn export_chrome(&self) -> String {
+        let mut text = self.to_chrome_json().to_string_pretty();
+        text.push('\n');
+        text
+    }
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::new()
+    }
+}
+
+impl TraceSink for TraceRecorder {
+    fn record(&self, event: TraceEvent) {
+        let shard = (event.tid as usize) % SHARDS;
+        self.shards[shard].lock().unwrap().push(event);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_is_disabled() {
+        assert!(!NullSink.enabled());
+        NullSink.record(TraceEvent::instant("request", "submit", 0.0, 1));
+    }
+
+    #[test]
+    fn recorder_orders_canonically() {
+        let rec = TraceRecorder::new();
+        // recorded out of order, across shards
+        rec.record(TraceEvent::span("request", "run", 2.0, 1.0, 9));
+        rec.record(TraceEvent::instant("request", "submit", 1.0, 3));
+        rec.record(TraceEvent::instant("pool", "hit", 1.0, 3));
+        let evs = rec.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!((evs[0].cat, evs[0].name), ("pool", "hit"));
+        assert_eq!((evs[1].cat, evs[1].name), ("request", "submit"));
+        assert_eq!((evs[2].cat, evs[2].name), ("request", "run"));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let rec = TraceRecorder::new();
+        rec.record(TraceEvent::span("request", "run", 1.5, 0.5, 2).arg("batch", 4.0));
+        rec.record(TraceEvent::instant("request", "submit", 1.0, 2));
+        let doc = rec.to_chrome_json();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        // µs conversion and phase tagging
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(evs[0].get("ts").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(evs[1].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[1].get("dur").unwrap().as_f64(), Some(500.0));
+        assert_eq!(
+            evs[1].get("args").unwrap().get("batch").unwrap().as_f64(),
+            Some(4.0)
+        );
+    }
+
+    #[test]
+    fn export_is_deterministic_for_same_events() {
+        let make = || {
+            let rec = TraceRecorder::new();
+            rec.record(TraceEvent::span("request", "run", 2.0, 1.0, 1));
+            rec.record(TraceEvent::instant("request", "submit", 0.0, 1));
+            rec.record(TraceEvent::instant("request", "claim", 1.0, 0));
+            rec.export_chrome()
+        };
+        assert_eq!(make(), make());
+    }
+}

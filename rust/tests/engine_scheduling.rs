@@ -67,6 +67,7 @@ impl ExecutionBackend for StepBackend {
             model_latency_ms: Some(1.0),
             dram_bytes: None,
             cold_load_ms: None,
+            traffic_classes: None,
         })
     }
 }
@@ -272,6 +273,7 @@ impl ExecutionBackend for BusyBackend {
             model_latency_ms: Some(1.0),
             dram_bytes: None,
             cold_load_ms: None,
+            traffic_classes: None,
         })
     }
 

@@ -104,6 +104,7 @@ impl ExecutionBackend for GateBackend {
             model_latency_ms: Some(1.0),
             dram_bytes: None,
             cold_load_ms: None,
+            traffic_classes: None,
         })
     }
 }

@@ -1,0 +1,79 @@
+//! Allocation-freedom of the always-on telemetry hot path.
+//!
+//! The serving engine records queue-wait, batch-size and cold-load
+//! samples on **every** request with metrics that cannot be switched
+//! off, and consults the trace sink's `enabled()` gate before building
+//! any event. That is only acceptable if the per-event cost is a few
+//! atomic adds: this suite installs a counting global allocator and
+//! asserts that recording into [`Counter`] / [`Histogram`] and hitting
+//! the disabled [`NullSink`] gate allocate **zero** bytes.
+//!
+//! (Test binaries get their own process, so the global allocator here
+//! cannot interfere with the rest of the suite.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use shortcutfusion::telemetry::{Counter, Histogram, NullSink, TraceSink, MS_BOUNDS};
+
+/// System allocator wrapper that counts allocation calls.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocation calls observed while running `f`.
+fn allocations_during(f: impl FnOnce()) -> u64 {
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    f();
+    ALLOCATIONS.load(Ordering::SeqCst) - before
+}
+
+// One test function on purpose: concurrent tests in the same binary
+// would allocate on other threads mid-measurement and fail spuriously.
+#[test]
+fn record_path_never_allocates() {
+    // construction allocates (bucket vectors) — done before measuring
+    let counter = Counter::new();
+    let hist = Histogram::new(MS_BOUNDS);
+    let sink = NullSink;
+
+    let n = allocations_during(|| {
+        for i in 0..10_000u64 {
+            counter.inc();
+            counter.add(3);
+            // samples spanning the first bucket, every edge, and overflow
+            hist.record(i as f64 * 0.01);
+            // the engine's hot-path gate for a detached trace sink
+            assert!(!sink.enabled());
+        }
+    });
+    assert_eq!(n, 0, "metrics record path must be allocation-free, saw {n} allocations");
+    assert_eq!(counter.get(), 40_000);
+
+    // snapshots are allowed to allocate (they clone the bucket counts) —
+    // the contract is only about the record path, which must stay
+    // allocation-free afterwards too
+    let snap = hist.snapshot();
+    assert_eq!(snap.count, 10_000);
+    let n = allocations_during(|| hist.record(2.0));
+    assert_eq!(n, 0, "recording after a snapshot must stay allocation-free");
+}

@@ -1,0 +1,137 @@
+//! End-to-end telemetry integration tests.
+//!
+//! Pins the external guarantees of [`shortcutfusion::telemetry`]:
+//!
+//! * the Chrome trace-event export of a served workload is
+//!   **byte-deterministic** under a [`VirtualClock`] — every timestamp
+//!   is drawn from the engine's injected clock, the recorder sorts
+//!   before serialising, and run-span durations come from the timing
+//!   model, so two identical runs export identical bytes;
+//! * per-tensor-class DRAM attribution **conserves the eq-(8)/(9)
+//!   totals** for every zoo model under every registered reuse
+//!   strategy — no byte unclassified, no byte double-counted;
+//! * the paper's headline number is regression-gated: the shortcut
+//!   class is a large share of feature-map traffic under row-streaming
+//!   baselines on residual networks, and the cut-point optimizer and
+//!   the depth-first tile streamer both shrink it.
+
+use std::sync::Arc;
+
+use shortcutfusion::compiler::{strategy, ReuseStrategy, Session};
+use shortcutfusion::config::AccelConfig;
+use shortcutfusion::engine::{
+    EngineConfig, InferenceEngine, VirtualAccelBackend, VirtualClock,
+};
+use shortcutfusion::funcsim::Tensor;
+use shortcutfusion::telemetry::TraceRecorder;
+use shortcutfusion::testutil::pack_program;
+use shortcutfusion::zoo;
+
+fn registry(name: &str) -> Arc<dyn ReuseStrategy> {
+    Arc::from(strategy::by_name(name).unwrap())
+}
+
+/// Serve three requests through a paused engine on a virtual clock and
+/// return the exported Chrome trace.
+fn serve_and_export() -> String {
+    let program = Arc::new(pack_program(&zoo::tinynet(), None));
+    let shape = program.input_shape();
+    let clock = Arc::new(VirtualClock::new());
+    let rec = Arc::new(TraceRecorder::new());
+    let mut engine = InferenceEngine::new_paused_with_clock(
+        program,
+        Arc::new(VirtualAccelBackend),
+        EngineConfig { workers: 1, queue_capacity: 8, max_batch: 4, ..EngineConfig::default() },
+        clock.clone(),
+    )
+    .with_trace(rec.clone());
+    // all submits land at controlled virtual times before any worker
+    // exists, so claim order and every timestamp are reproducible
+    let mut pending = Vec::new();
+    for _ in 0..3 {
+        clock.advance_ms(5.0);
+        pending.push(engine.submit(Tensor::zeros(shape)).unwrap());
+    }
+    engine.start();
+    for p in pending {
+        p.wait().unwrap();
+    }
+    engine.shutdown();
+    rec.export_chrome()
+}
+
+#[test]
+fn trace_export_is_byte_deterministic_under_virtual_clock() {
+    let a = serve_and_export();
+    let b = serve_and_export();
+    assert_eq!(a, b, "two identical virtual-clock runs must export identical bytes");
+    // structural sanity of the export itself
+    assert!(a.starts_with('{') && a.ends_with('\n'));
+    assert!(a.contains("\"displayTimeUnit\""));
+    assert!(a.contains("\"traceEvents\""));
+    for name in ["submit", "claim", "run", "complete"] {
+        assert_eq!(
+            a.matches(&format!("\"name\": \"{name}\"")).count(),
+            3,
+            "expected one {name:?} event per request"
+        );
+    }
+}
+
+#[test]
+fn attribution_conserves_totals_for_every_model_and_strategy() {
+    let session = Session::new();
+    let cfg = AccelConfig::kcu1500_int8();
+    for &model in zoo::MODEL_NAMES {
+        for &name in strategy::STRATEGY_NAMES {
+            let r = session.compile_with(model, 64, &cfg, &registry(name)).unwrap();
+            let d = &r.evaluation.dram;
+            assert_eq!(
+                d.classes.total(),
+                d.total,
+                "{model} [{name}]: class attribution must conserve the eq-9 total"
+            );
+            assert_eq!(
+                d.classes.fm_total(),
+                d.fm_bytes,
+                "{model} [{name}]: feature-map classes must conserve fm_bytes"
+            );
+            assert_eq!(
+                d.classes.weights, d.weight_bytes,
+                "{model} [{name}]: weight class must equal the eq-8 weight term"
+            );
+        }
+    }
+}
+
+#[test]
+fn shortcut_share_is_large_under_row_baseline_and_drops_under_cutpoint_and_tile() {
+    let session = Session::new();
+    // BRAM made a non-constraint so feasibility is decided by the byte
+    // budget alone — the same corner the tile acceptance test pins
+    let mut cfg = AccelConfig::kcu1500_int8();
+    cfg.sram_budget = 3_000_000;
+    cfg.bram18k_total = 1_000_000;
+    for model in ["resnet18", "resnet34"] {
+        let share = |name: &str| {
+            let r = session.compile_with(model, 224, &cfg, &registry(name)).unwrap();
+            r.evaluation.dram.classes.shortcut_share()
+        };
+        let row = share("fixed-row");
+        assert!(
+            row > 0.10,
+            "{model}: row-streaming shortcut share {row:.3} should be the paper's \
+             large baseline fraction"
+        );
+        let cut = share("cutpoint");
+        assert!(
+            cut < row,
+            "{model}: cut-point reuse must shrink the shortcut share ({cut:.3} !< {row:.3})"
+        );
+        let tile = share("tile");
+        assert!(
+            tile < row,
+            "{model}: tile streaming must shrink the shortcut share ({tile:.3} !< {row:.3})"
+        );
+    }
+}

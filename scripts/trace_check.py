@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file exported by --trace-out.
+
+Usage:
+    trace_check.py TRACE.json [--min-events N]
+
+Checks the structural contract chrome://tracing / Perfetto rely on:
+
+* the document is an object with ``displayTimeUnit`` and a non-empty
+  ``traceEvents`` list;
+* every event carries ``name``, ``cat``, ``ph``, ``ts``, ``pid`` and
+  ``tid``, with ``ph`` one of ``X`` (complete span, requires a
+  non-negative ``dur``) or ``i`` (instant, requires scope ``s``);
+* timestamps are non-negative and non-decreasing in file order — the
+  exporter sorts before serialising, so an out-of-order event means the
+  export path broke.
+
+Only the standard library is used: the repo builds with no crates.io or
+PyPI access, and this script honours the same constraint.
+"""
+
+import argparse
+import json
+import sys
+
+SPAN, INSTANT = "X", "i"
+
+
+def fail(msg):
+    print(f"trace_check: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(doc, min_events):
+    if not isinstance(doc, dict):
+        fail("top level must be a JSON object")
+    if "displayTimeUnit" not in doc:
+        fail("missing displayTimeUnit")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("traceEvents must be a list")
+    if len(events) < min_events:
+        fail(f"expected >= {min_events} events, found {len(events)}")
+
+    last_ts = None
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            fail(f"{where}: event must be an object")
+        for key in ("name", "cat", "ph", "ts", "pid", "tid"):
+            if key not in ev:
+                fail(f"{where}: missing {key!r}")
+        ph = ev["ph"]
+        if ph not in (SPAN, INSTANT):
+            fail(f"{where}: unknown phase {ph!r} (expected {SPAN!r} or {INSTANT!r})")
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(f"{where}: bad ts {ts!r}")
+        if last_ts is not None and ts < last_ts:
+            fail(f"{where}: ts {ts} goes backwards (previous {last_ts})")
+        last_ts = ts
+        if ph == SPAN:
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(f"{where}: span needs a non-negative dur, got {dur!r}")
+        else:
+            if ev.get("s") != "t":
+                fail(f"{where}: instant needs thread scope s='t', got {ev.get('s')!r}")
+    return len(events)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--min-events", type=int, default=1,
+                    help="minimum number of events the trace must hold")
+    args = ap.parse_args()
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{args.trace}: {e}")
+    n = check(doc, args.min_events)
+    cats = sorted({ev["cat"] for ev in doc["traceEvents"]})
+    print(f"trace_check: OK — {n} events across categories {cats}")
+
+
+if __name__ == "__main__":
+    main()
